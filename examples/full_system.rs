@@ -1,0 +1,137 @@
+//! END-TO-END system driver (DESIGN.md: the required full-workload run).
+//!
+//! Loads the real trained artifacts, programs both models into the
+//! 4-bits/cell EFLASH with program-verify, runs the complete test sets
+//! through the NMCU simulator (before and after the 125 C bake), runs
+//! the SW baseline through the AOT HLO graphs via PJRT (the L2 JAX model
+//! embedding the L1 Pallas kernel), cross-checks bit-exactness, and
+//! prints Table 1 plus throughput/latency/energy.
+//!
+//!     make artifacts && cargo run --release --example full_system
+
+use nvmcu::artifacts;
+use nvmcu::config::ChipConfig;
+use nvmcu::coordinator::{experiments, Chip};
+use nvmcu::metrics;
+
+use nvmcu::runtime::Runtime;
+use nvmcu::util::bench::Table;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let dir = artifacts::artifacts_dir();
+    let cfg = ChipConfig::new();
+    let inputs = experiments::load_table1_inputs(&dir)?;
+    println!(
+        "loaded artifacts: MNIST MLP {} cells, AE layer-9 {} cells, {} + {} test samples",
+        inputs.mnist_model.total_cells(),
+        inputs.ae_l9_model.total_cells(),
+        inputs.mnist_test.len(),
+        inputs.admos_test.len()
+    );
+
+    // ---------------- SW baseline via PJRT (python never runs here) ----
+    let rt = Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let mlp_hlo = rt.load(&dir.join("mnist_mlp_b256.hlo.txt"))?;
+    let t0 = Instant::now();
+    let mut correct_hlo = 0usize;
+    let n = inputs.mnist_test.len();
+    let mut i = 0;
+    while i < n {
+        let b = 256.min(n - i);
+        let mut batch = vec![0i8; 256 * 784];
+        for j in 0..b {
+            batch[j * 784..(j + 1) * 784].copy_from_slice(&inputs.mnist_test.image_q(i + j));
+        }
+        let out = mlp_hlo.run_i8(&batch, &[256, 784])?;
+        for j in 0..b {
+            let logits = &out[j * 10..(j + 1) * 10];
+            let pred = logits
+                .iter()
+                .enumerate()
+                .max_by_key(|(pos, &v)| (v, std::cmp::Reverse(*pos)))
+                .unwrap()
+                .0;
+            if pred == inputs.mnist_test.labels[i + j] as usize {
+                correct_hlo += 1;
+            }
+        }
+        i += b;
+    }
+    let hlo_dt = t0.elapsed();
+    let acc_hlo = correct_hlo as f64 / n as f64;
+    println!(
+        "SW baseline (AOT HLO, Pallas kernel): {:.2}% on {} samples in {:.2}s ({:.0} inf/s)",
+        100.0 * acc_hlo,
+        n,
+        hlo_dt.as_secs_f64(),
+        n as f64 / hlo_dt.as_secs_f64()
+    );
+
+    // cross-check: rust integer reference must equal the HLO result
+    let acc_ref = experiments::mnist_accuracy_sw(&inputs.mnist_model, &inputs.mnist_test);
+    assert!((acc_ref - acc_hlo).abs() < 1e-12, "HLO and rust reference diverge!");
+    println!("bit-exactness HLO == rust reference: OK");
+
+    // ---------------- the chip: program, run, bake, run ----------------
+    let mut chip = Chip::new(&cfg);
+    let t0 = Instant::now();
+    let pm = chip.program_model(&inputs.mnist_model)?;
+    println!(
+        "\nprogrammed MNIST model: {} cells, {} ISPP pulses, {:.2}s",
+        pm.total_cells(),
+        pm.total_pulses(),
+        t0.elapsed().as_secs_f64()
+    );
+
+    chip.reset_stats();
+    let t0 = Instant::now();
+    let acc_before = experiments::mnist_accuracy_chip(&mut chip, &pm, &inputs.mnist_test);
+    let chip_dt = t0.elapsed();
+    let st = chip.stats();
+    let e = metrics::nmcu_energy(&st, &cfg.power);
+    println!(
+        "chip before bake: {:.2}% | {:.0} inf/s (sim wall) | {:.1} us + {:.2} uJ per inference (modeled)",
+        100.0 * acc_before,
+        n as f64 / chip_dt.as_secs_f64(),
+        metrics::nmcu_latency_s(&st, &cfg) * 1e6 / n as f64,
+        e.total_uj() / n as f64
+    );
+
+    chip.bake(340.0, cfg.retention.bake_temp_c);
+    let acc_after = experiments::mnist_accuracy_chip(&mut chip, &pm, &inputs.mnist_test);
+    println!("chip after 340 h @125C: {:.2}%", 100.0 * acc_after);
+
+    // ---------------- AutoEncoder (Fig 7 split) ------------------------
+    let mut chip_a = Chip::new(&cfg);
+    let ae = experiments::run_autoencoder(
+        &mut chip_a,
+        &inputs.ae_float,
+        &inputs.ae_l9_model,
+        &inputs.admos_test,
+        160.0,
+    )?;
+
+    // ---------------- Table 1 ------------------------------------------
+    println!("\nTable 1: Measured results of AI inference tasks (reproduction)\n");
+    let mut t = Table::new(&["Inference Accuracy", "MNIST", "AutoEncoder"]);
+    t.row(&[
+        "Before Bake".into(),
+        format!("{:.2}%", 100.0 * acc_before),
+        format!("{:.3} AUC", ae.auc_before_bake),
+    ]);
+    t.row(&[
+        "After Bake".into(),
+        format!("{:.2}%", 100.0 * acc_after),
+        format!("{:.3} AUC", ae.auc_after_bake),
+    ]);
+    t.row(&[
+        "SW. Baseline".into(),
+        format!("{:.2}%", 100.0 * acc_hlo),
+        format!("{:.3} AUC", ae.auc_sw_baseline),
+    ]);
+    t.print();
+    println!("\npaper: 95.67% / 95.58% / 95.62% and 0.878 / 0.878 / 0.878 AUC");
+    Ok(())
+}

@@ -1,0 +1,35 @@
+//! Debug utility: load an HLO text file and run it with a ramp int8 input
+//! of the given shape, printing the raw output. Used to isolate
+//! jax-lowering vs xla_extension-execution mismatches.
+//! Usage: cargo run --example hlo_probe -- <file> <rows> <cols> [i8|i32]
+
+use nvmcu::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let path = std::path::PathBuf::from(&args[0]);
+    let rows: usize = args[1].parse()?;
+    let cols: usize = args[2].parse()?;
+    let out_ty = args.get(3).map(|s| s.as_str()).unwrap_or("i8");
+    let rt = Runtime::cpu()?;
+    let exe = rt.load(&path)?;
+    let x: Vec<i8> = (0..rows * cols).map(|i| (i % 7) as i8 - 3).collect();
+    println!("input: {:?}", &x[..x.len().min(16)]);
+    match out_ty {
+        "i8" => {
+            let out = exe.run_i8(&x, &[rows, cols])?;
+            println!("output i8: {:?}", &out[..out.len().min(32)]);
+        }
+        "i32" => {
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(x.as_ptr() as *const u8, x.len())
+            };
+            let lit = xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::S8, &[rows, cols], bytes)?;
+            let out = exe.run_literals(&[lit])?;
+            println!("output i32: {:?}", &out.to_vec::<i32>()?[..32.min(out.element_count())]);
+        }
+        _ => panic!("i8|i32"),
+    }
+    Ok(())
+}

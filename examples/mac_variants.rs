@@ -1,0 +1,62 @@
+//! Perf-pass scratch bench: compare mac_lanes implementations.
+use nvmcu::util::bench::bench;
+use std::time::Duration;
+
+fn v0(x: &[i8], w: &[i8]) -> i32 {
+    let mut acc = 0i32;
+    let mut xi = x.chunks_exact(16);
+    let mut wi = w.chunks_exact(16);
+    for (xc, wc) in (&mut xi).zip(&mut wi) {
+        let mut s = 0i32;
+        for k in 0..16 { s += (xc[k] as i32) * (wc[k] as i32); }
+        acc += s;
+    }
+    for (a, b) in xi.remainder().iter().zip(wi.remainder()) { acc += (*a as i32) * (*b as i32); }
+    acc
+}
+
+fn v1(x: &[i8], w: &[i8]) -> i32 {
+    x.iter().zip(w).map(|(&a, &b)| a as i32 * b as i32).sum()
+}
+
+fn v2(x: &[i8], w: &[i8]) -> i32 {
+    // sequential i16 pair products, widened
+    let mut acc = 0i32;
+    let mut xi = x.chunks_exact(16);
+    let mut wi = w.chunks_exact(16);
+    for (xc, wc) in (&mut xi).zip(&mut wi) {
+        let mut s = 0i32;
+        for k in 0..8 {
+            let p = xc[2*k] as i16 * wc[2*k] as i16 + xc[2*k+1] as i16 * wc[2*k+1] as i16;
+            s += p as i32;
+        }
+        acc += s;
+    }
+    for (a, b) in xi.remainder().iter().zip(wi.remainder()) { acc += (*a as i32) * (*b as i32); }
+    acc
+}
+
+fn v3(x: &[i8], w: &[i8]) -> i32 {
+    // i16 intermediate, full 16-chunk, single widen at the end of chunk
+    let mut acc = 0i32;
+    let mut xi = x.chunks_exact(8);
+    let mut wi = w.chunks_exact(8);
+    for (xc, wc) in (&mut xi).zip(&mut wi) {
+        let mut s = 0i16;
+        for k in 0..8 { s += xc[k] as i16 * wc[k] as i16; }  // max 8*1024 = 8192 ok
+        acc += s as i32;
+    }
+    for (a, b) in xi.remainder().iter().zip(wi.remainder()) { acc += (*a as i32) * (*b as i32); }
+    acc
+}
+
+fn main() {
+    let x: Vec<i8> = (0..128).map(|i| ((i * 37) % 256) as u8 as i8).collect();
+    let w: Vec<i8> = (0..128).map(|i| ((i * 13) % 16) as i8 - 8).collect();
+    let want = v1(&x, &w);
+    assert_eq!(v0(&x,&w), want); assert_eq!(v2(&x,&w), want); assert_eq!(v3(&x,&w), want);
+    let tgt = Duration::from_millis(300);
+    for (name, f) in [("v0 chunks16-i32", v0 as fn(&[i8],&[i8])->i32), ("v1 iterator", v1), ("v2 pair-i16", v2), ("v3 chunk8-i16", v3)] {
+        bench(name, tgt, || { std::hint::black_box(f(std::hint::black_box(&x), std::hint::black_box(&w))); });
+    }
+}

@@ -1,0 +1,124 @@
+//! Firmware-level demo: the RV32I core drives a full MNIST inference
+//! through the memory-mapped NMCU and the custom-0 `nmcu.mvm`
+//! instruction — the paper's "single RISC-V instruction" control plane.
+//! The firmware is assembled from source below, loaded into SRAM, and
+//! executed by the interpreter; it prints its result over the UART.
+//!
+//!     make artifacts && cargo run --release --example mcu_firmware
+
+use nvmcu::artifacts;
+use nvmcu::config::ChipConfig;
+use nvmcu::coordinator::Chip;
+use nvmcu::cpu::asm::*;
+use nvmcu::soc::{map, nmcu_reg, Mcu, RunExit};
+
+fn main() -> anyhow::Result<()> {
+    let dir = artifacts::artifacts_dir();
+    let cfg = ChipConfig::new();
+    let model = artifacts::load_qmodel(&dir, "mnist_weights")?;
+    let test = nvmcu::datasets::load_mnist(&dir)?;
+
+    // program the weight EFLASH, then hand the macro to the MCU
+    let mut chip = Chip::new(&cfg);
+    let pm = chip.program_model(&model)?;
+    let mut mcu = Mcu::with_eflash(&cfg, chip.eflash);
+
+    // lay out descriptors + bias tables in SRAM
+    let mut at = map::SRAM_BASE + 0x2_0000;
+    let mut desc_addrs = Vec::new();
+    for d in &pm.descs {
+        let bias_at = at + 0x40;
+        mcu.write_descriptor(at, bias_at, d);
+        desc_addrs.push(at);
+        at = bias_at + 4 * d.n as u32 + 0x40;
+    }
+    let in_addr = at;
+    let out_addr = at + 0x1000;
+
+    // ---- firmware (assembled from source right here) -------------------
+    // begin; DMA input; one nmcu.mvm per layer; store output; find the
+    // argmax in registers; print "D<digit>\n" on the UART; exit(argmax)
+    let mut a = Asm::new();
+    a.emit_all(&li32(5, map::NMCU_BASE));
+    a.emit(addi(6, 0, 1));
+    a.emit(sw(5, 6, nmcu_reg::BEGIN as i32));
+    a.emit_all(&li32(7, in_addr));
+    a.emit(sw(5, 7, nmcu_reg::INPUT_ADDR as i32));
+    a.emit_all(&li32(8, 784));
+    a.emit(sw(5, 8, nmcu_reg::INPUT_LEN as i32));
+    a.emit(sw(5, 6, nmcu_reg::INPUT_LOAD as i32));
+    for &d in &desc_addrs {
+        a.emit_all(&li32(9, d));
+        a.emit(nmcu_mvm(10, 9)); // <- the paper's one-instruction MVM
+    }
+    a.emit_all(&li32(11, out_addr));
+    a.emit(sw(5, 11, nmcu_reg::OUT_ADDR as i32));
+    a.emit(addi(12, 0, 10));
+    a.emit(sw(5, 12, nmcu_reg::OUT_LEN as i32));
+    a.emit(sw(5, 6, nmcu_reg::OUT_STORE as i32));
+    // argmax over the 10 int8 logits at out_addr:
+    //   r13 = best index, r14 = best value, r15 = i
+    a.emit(addi(13, 0, 0));
+    a.emit(lb(14, 11, 0));
+    a.emit(addi(15, 0, 1));
+    a.label("loop");
+    a.emit(add(16, 11, 15));
+    a.emit(lb(17, 16, 0));
+    a.branch_to(|o| bge(14, 17, o), "skip"); // if best >= cur, skip
+    a.emit(addi(13, 15, 0));
+    a.emit(addi(14, 17, 0));
+    a.label("skip");
+    a.emit(addi(15, 15, 1));
+    a.emit(addi(18, 0, 10));
+    a.branch_to(|o| blt(15, 18, o), "loop");
+    // UART: 'D', '0'+argmax, '\n'
+    a.emit_all(&li32(20, map::UART_BASE));
+    a.emit(addi(21, 0, 'D' as i32));
+    a.emit(sw(20, 21, 0));
+    a.emit(addi(21, 13, '0' as i32));
+    a.emit(sw(20, 21, 0));
+    a.emit(addi(21, 0, '\n' as i32));
+    a.emit(sw(20, 21, 0));
+    // exit(argmax)
+    a.emit(addi(17, 0, 93));
+    a.emit(addi(10, 13, 0));
+    a.emit(ecall());
+    let fw = a.assemble();
+    println!("firmware: {} instructions", fw.len());
+
+    // ---- run a few samples ---------------------------------------------
+    let mut correct = 0;
+    let n = 50.min(test.len());
+    for i in 0..n {
+        let bytes: Vec<u8> = test.image_q(i).iter().map(|&v| v as u8).collect();
+        mcu.load_firmware(&fw);
+        mcu.bus.sram_write(in_addr, &bytes);
+        match mcu.run(100_000) {
+            RunExit::Exit(pred) => {
+                if pred == test.labels[i] as u32 {
+                    correct += 1;
+                }
+                if i < 5 {
+                    println!(
+                        "sample {i}: label {} -> UART {:?} ({} instret)",
+                        test.labels[i],
+                        mcu.bus.uart.tx_string().lines().last().unwrap_or(""),
+                        mcu.cpu.instret
+                    );
+                }
+            }
+            other => panic!("firmware crashed: {other:?}"),
+        }
+    }
+    println!(
+        "firmware path accuracy on {n} samples: {:.1}% | NMCU launches: {} | host instret/inference: {}",
+        100.0 * correct as f64 / n as f64,
+        mcu.launches,
+        mcu.cpu.instret
+    );
+    println!(
+        "NMCU totals: {} EFLASH reads, {} MACs — all addressed by flow control, not the CPU",
+        mcu.nmcu.stats.eflash_reads, mcu.nmcu.stats.mac_ops
+    );
+    Ok(())
+}

@@ -1,0 +1,89 @@
+//! Quickstart: fabricate a chip, program a small quantized layer into the
+//! 4-bits/cell EFLASH with full program-verify, run an MVM on the NMCU,
+//! and inspect the statistics. No artifacts needed.
+//!
+//!     cargo run --release --example quickstart
+
+use nvmcu::config::ChipConfig;
+use nvmcu::coordinator::Chip;
+use nvmcu::artifacts::QLayer;
+use nvmcu::artifacts::QModel;
+use nvmcu::metrics;
+use nvmcu::nmcu::Requant;
+use nvmcu::util::rng::Rng;
+
+fn main() {
+    // 1. a chip with the paper's default configuration (4 Mb 4-bits/cell
+    //    EFLASH, 2 PEs x 128 lanes, VDDH 2.5 V -> VPGM 10 V)
+    let cfg = ChipConfig::new();
+    let mut chip = Chip::new(&cfg);
+    println!(
+        "fabricated: {} cells ({} Mb, {} bits/cell), {} rows of {}",
+        cfg.eflash.n_cells(),
+        cfg.eflash.capacity_bits / (1024 * 1024),
+        cfg.eflash.bits_per_cell,
+        cfg.eflash.rows(),
+        cfg.eflash.cells_per_read
+    );
+
+    // 2. a random int4 layer: 256 inputs -> 32 outputs
+    let mut r = Rng::new(7);
+    let (k, n) = (256usize, 32usize);
+    let layer = QLayer {
+        name: "demo".into(),
+        k,
+        n,
+        relu: true,
+        codes: (0..k * n).map(|_| (r.below(16) as i8) - 8).collect(),
+        bias: (0..n).map(|_| (r.below(2000) as i32) - 1000).collect(),
+        requant: Requant { m0: 1_518_500_250, shift: 40, z_out: -3 },
+        z_in: -128,
+        s_in: 1.0 / 255.0,
+        s_w: 0.04,
+        s_out: 0.08,
+    };
+    let model = QModel { name: "quickstart".into(), layers: vec![layer] };
+
+    // 3. program it (ISPP program-verify against the 15-level ladder)
+    let pm = chip.program_model(&model).expect("program");
+    println!(
+        "programmed {} cells in {} rows with {} ISPP pulses ({} failed)",
+        pm.total_cells(),
+        pm.regions[0].n_rows,
+        pm.total_pulses(),
+        pm.reports[0].failed_cells
+    );
+
+    // 4. one inference on the NMCU
+    let x: Vec<i8> = (0..k).map(|_| (r.below(256) as i32 - 128) as i8).collect();
+    let y = chip.infer(&pm, &x);
+    println!("output[0..8] = {:?}", &y[..8]);
+
+    // 5. the same math in pure software must agree bit-exactly
+    let want = nvmcu::models::qmodel_forward(&model, &x);
+    assert_eq!(y, want);
+    println!("bit-exact vs software reference: OK");
+
+    // 6. statistics + energy estimate
+    let st = chip.stats();
+    let e = metrics::nmcu_energy(&st, &cfg.power);
+    println!(
+        "eflash reads: {} | MACs: {} | cycles: {} | energy: {:.1} nJ | latency: {:.2} us",
+        st.eflash_reads,
+        st.mac_ops,
+        st.cycles,
+        e.total_pj() / 1000.0,
+        metrics::nmcu_latency_s(&st, &cfg) * 1e6
+    );
+
+    // 7. bake it: weights survive 160 h at 125 C unpowered
+    chip.bake(160.0, 125.0);
+    let y2 = chip.infer(&pm, &x);
+    let drift = y
+        .iter()
+        .zip(&y2)
+        .map(|(&a, &b)| (a as i32 - b as i32).abs())
+        .max()
+        .unwrap();
+    println!("after 160 h @125C bake: max output drift {drift} LSB (zero standby power)");
+}

@@ -1,0 +1,7 @@
+# The requantization arithmetic (quant.py, kernels/nmcu_mvm.py) needs real
+# int64; enable x64 before any jax array is created. All public dtypes in
+# this package are explicit, so lowered HLO is unaffected apart from the
+# intended int64 requant multiplies.
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,180 @@
+"""AOT entry point: ``python -m compile.aot --out-dir ../artifacts``
+
+Runs the entire build-time python pipeline ONCE (Makefile caches on the
+artifact stamp; python is never on the rust request path):
+
+1. generate + export the synthetic test datasets,
+2. QAT-train the MNIST MLP and the FC-AutoEncoder,
+3. export quantized weights (the EFLASH byte image) + float AE params,
+4. lower the L2 JAX graphs (which embed the L1 Pallas kernel) to HLO
+   *text* for the rust PJRT runtime, and
+5. write expected.json with python-side metrics + golden vectors for the
+   cross-language bit-exactness tests.
+
+HLO text (NOT proto .serialize()) is the interchange format: jax >= 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import datasets
+from .kernels.ref import ref_mvm
+from .model import AEParams, ae_forward, ae_post, ae_pre, mlp_forward
+from .train import ae_scores_quant, mlp_int8_logits, train_autoencoder, train_mnist
+
+HLO_BATCHES = (1, 256)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is ESSENTIAL: the default printer elides
+    # big weight constants as `constant({...})`, which xla_extension
+    # 0.5.1's text parser silently accepts as garbage data.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_and_write(fn, specs, path: Path):
+    text = to_hlo_text(jax.jit(fn).lower(*specs))
+    path.write_text(text)
+    print(f"  wrote {path.name} ({len(text)} chars)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true", help="tiny training run (CI smoke)")
+    ap.add_argument("--seed", type=int, default=7)
+    args = ap.parse_args()
+    out = Path(args.out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+
+    from .export import write_admos_test, write_ae_float, write_mnist_test, write_qmodel
+
+    # ------------------------------------------------------------------ data
+    n_te_mnist = 512 if args.quick else 4000
+    print("[aot] generating test datasets")
+    mnist_imgs, mnist_labels = datasets.synth_mnist(n_te_mnist, seed=args.seed + 1)
+    write_mnist_test(out / "mnist_test.bin", mnist_imgs, mnist_labels)
+    n_nrm = 160 if args.quick else 1200
+    admos_x, admos_y = datasets.synth_admos(n_nrm, n_nrm, seed=12)
+    write_admos_test(out / "admos_test.bin", admos_x, admos_y)
+
+    # ------------------------------------------------------------------ train
+    print("[aot] training MNIST MLP (QAT)")
+    if args.quick:
+        mn = train_mnist(n_train=2000, n_test=n_te_mnist, seed=args.seed,
+                         epochs_float=2, epochs_qat=2, verbose=True)
+    else:
+        mn = train_mnist(n_test=n_te_mnist, seed=args.seed)
+    print("[aot] training FC-AutoEncoder (QAT layer 9)")
+    if args.quick:
+        ae = train_autoencoder(n_train=1000, n_test_normal=n_nrm, n_test_anomaly=n_nrm,
+                               epochs_float=5, epochs_qat=2, seed=11)
+    else:
+        ae = train_autoencoder(n_test_normal=n_nrm, n_test_anomaly=n_nrm, seed=11)
+
+    # ------------------------------------------------------------------ export
+    print("[aot] exporting weights")
+    write_qmodel(out / "mnist_weights", "mnist_mlp",
+                 [("fc1", mn.l1, True), ("fc2", mn.l2, False)])
+    write_qmodel(out / "ae_l9_weights", "ae_layer9", [("fc9", ae.l9, True)])
+    write_ae_float(
+        out / "ae_float", ae.params.weights, ae.params.biases, ae.x_mean, ae.x_std,
+        extra={
+            "l9_s_in": ae.params.l9_s_in, "l9_z_in": ae.params.l9_z_in,
+            "l9_s_out": ae.params.l9_s_out, "l9_z_out": ae.params.l9_z_out,
+            "onchip_layer": 9,
+        },
+    )
+
+    # ------------------------------------------------------------------ HLO
+    print("[aot] lowering HLO modules")
+    l1c, l2c = mn.l1, mn.l2
+    from .model import QLayerConst
+
+    l1k, l2k = QLayerConst.of(l1c), QLayerConst.of(l2c)
+    aep = ae.params
+    for b in HLO_BATCHES:
+        lower_and_write(
+            lambda x: (mlp_forward(x, l1k, l2k),),
+            [jax.ShapeDtypeStruct((b, 784), jnp.int8)],
+            out / f"mnist_mlp_b{b}.hlo.txt",
+        )
+        lower_and_write(
+            lambda x: (ae_pre(x, aep),),
+            [jax.ShapeDtypeStruct((b, 640), jnp.float32)],
+            out / f"ae_pre_b{b}.hlo.txt",
+        )
+        lower_and_write(
+            lambda y: (ae_post(y, aep),),
+            [jax.ShapeDtypeStruct((b, 128), jnp.int8)],
+            out / f"ae_post_b{b}.hlo.txt",
+        )
+        lower_and_write(
+            lambda x: (ae_forward(x, aep),),
+            [jax.ShapeDtypeStruct((b, 640), jnp.float32)],
+            out / f"ae_sw_b{b}.hlo.txt",
+        )
+
+    # ------------------------------------------------------------------ goldens
+    print("[aot] writing expected.json")
+    g_idx = list(range(8))
+    g_logits = mlp_int8_logits(
+        mnist_imgs.reshape(len(mnist_labels), -1)[g_idx], mn.l1, mn.l2
+    )
+    xq9 = np.asarray(ae_pre(jnp.asarray(admos_x[g_idx], jnp.float32), aep))
+    y9 = ref_mvm(xq9, aep.l9.w_q, aep.l9.b_q, m0=aep.l9.m0, shift=aep.l9.shift,
+                 z_out=aep.l9.z_out, relu=True)
+    scores_q = ae_scores_quant(aep, admos_x)
+    auc_q = datasets.auc_score(scores_q, admos_y)
+
+    expected = {
+        "mnist": {
+            "n_test": int(n_te_mnist),
+            "acc_float": mn.acc_float,
+            "acc_quant": mn.acc_quant,
+            "hidden": 43,
+            "golden_indices": g_idx,
+            "golden_logits_int8": g_logits.astype(int).tolist(),
+            "golden_labels": mnist_labels[g_idx].astype(int).tolist(),
+        },
+        "admos": {
+            "n_test": int(len(admos_y)),
+            "auc_float": ae.auc_float,
+            "auc_quant": float(auc_q),
+            "golden_indices": g_idx,
+            "golden_l9_in_int8": xq9.astype(int).tolist(),
+            "golden_l9_out_int8": y9.astype(int).tolist(),
+            "golden_scores_quant": [float(s) for s in scores_q[g_idx]],
+        },
+        "quant": {
+            "mnist_l1": {"m0": int(mn.l1.m0), "shift": int(mn.l1.shift),
+                          "z_out": int(mn.l1.z_out), "z_in": int(mn.l1.z_in)},
+            "mnist_l2": {"m0": int(mn.l2.m0), "shift": int(mn.l2.shift),
+                          "z_out": int(mn.l2.z_out), "z_in": int(mn.l2.z_in)},
+            "ae_l9": {"m0": int(ae.l9.m0), "shift": int(ae.l9.shift),
+                       "z_out": int(ae.l9.z_out), "z_in": int(ae.l9.z_in)},
+        },
+    }
+    (out / "expected.json").write_text(json.dumps(expected, indent=1))
+
+    manifest = sorted(p.name for p in out.iterdir() if p.is_file() and p.name != "manifest.json")
+    (out / "manifest.json").write_text(json.dumps({"files": manifest}, indent=1))
+    print(f"[aot] done: {len(manifest)} artifacts in {out}")
+
+
+if __name__ == "__main__":
+    main()

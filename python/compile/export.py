@@ -1,0 +1,104 @@
+"""Artifact writers — the binary/JSON interchange consumed by the rust side.
+
+Formats (all little-endian; rust parsers live in rust/src/artifacts.rs):
+
+- ``<model>_weights.json`` + ``.bin``: per-layer quantized parameters.
+  The .bin holds, per layer, the int4 weight codes packed 2-per-byte in
+  row-major (K,N) order — i.e. the exact byte image programmed into the
+  4-bits/cell EFLASH macro — followed by the int32 bias vector.
+- ``mnist_test.bin``: magic "MNT1", u32 n, n*784 u8 pixels, n u8 labels.
+- ``admos_test.bin``: magic "ADM1", u32 n, u32 dim, n*dim f32, n u8 labels.
+- ``ae_float.bin`` + ``.json``: the float AE layers + input norm stats
+  (lets pure-rust reference inference run without PJRT).
+- ``expected.json``: python-side metrics + golden vectors for the
+  cross-language bit-exactness tests.
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+from pathlib import Path
+
+import numpy as np
+
+from .quant import QLinearLayer, pack_int4
+
+
+def write_qmodel(path_base: Path, model_name: str, layers: list[tuple[str, QLinearLayer, bool]]):
+    """layers: (name, qlayer, relu). Writes <base>.json and <base>.bin."""
+    blob = bytearray()
+    meta_layers = []
+    for name, l, relu in layers:
+        w_off = len(blob)
+        packed = pack_int4(l.weight_q)  # row-major (K,N)
+        blob.extend(packed.tobytes())
+        b_off = len(blob)
+        blob.extend(np.asarray(l.bias_q, "<i4").tobytes())
+        meta_layers.append(
+            {
+                "name": name,
+                "k": int(l.k),
+                "n": int(l.n),
+                "relu": bool(relu),
+                "m0": int(l.m0),
+                "shift": int(l.shift),
+                "z_out": int(l.z_out),
+                "z_in": int(l.z_in),
+                "s_in": float(l.s_in),
+                "s_w": float(l.s_w),
+                "s_out": float(l.s_out),
+                "w_offset": w_off,
+                "w_bytes": b_off - w_off,
+                "b_offset": b_off,
+                "b_bytes": 4 * int(l.n),
+            }
+        )
+    meta = {"model": model_name, "bin": path_base.name + ".bin", "layers": meta_layers}
+    path_base.with_suffix(".json").write_text(json.dumps(meta, indent=1))
+    path_base.with_suffix(".bin").write_bytes(bytes(blob))
+
+
+def write_mnist_test(path: Path, images_u8: np.ndarray, labels_u8: np.ndarray):
+    n = len(labels_u8)
+    with open(path, "wb") as f:
+        f.write(b"MNT1")
+        f.write(struct.pack("<I", n))
+        f.write(images_u8.astype(np.uint8).reshape(n, -1).tobytes())
+        f.write(labels_u8.astype(np.uint8).tobytes())
+
+
+def write_admos_test(path: Path, feats_f32: np.ndarray, labels_u8: np.ndarray):
+    n, dim = feats_f32.shape
+    with open(path, "wb") as f:
+        f.write(b"ADM1")
+        f.write(struct.pack("<II", n, dim))
+        f.write(feats_f32.astype("<f4").tobytes())
+        f.write(labels_u8.astype(np.uint8).tobytes())
+
+
+def write_ae_float(path_base: Path, weights, biases, x_mean, x_std, extra: dict):
+    blob = bytearray()
+    meta_layers = []
+    for i, (w, b) in enumerate(zip(weights, biases)):
+        w_off = len(blob)
+        blob.extend(np.asarray(w, "<f4").tobytes())
+        b_off = len(blob)
+        blob.extend(np.asarray(b, "<f4").tobytes())
+        meta_layers.append(
+            {"k": int(w.shape[0]), "n": int(w.shape[1]), "w_offset": w_off, "b_offset": b_off}
+        )
+    m_off = len(blob)
+    blob.extend(np.asarray(x_mean, "<f4").tobytes())
+    s_off = len(blob)
+    blob.extend(np.asarray(x_std, "<f4").tobytes())
+    meta = {
+        "layers": meta_layers,
+        "mean_offset": m_off,
+        "std_offset": s_off,
+        "dim": int(len(x_mean)),
+        "bin": path_base.name + ".bin",
+        **extra,
+    }
+    path_base.with_suffix(".json").write_text(json.dumps(meta, indent=1))
+    path_base.with_suffix(".bin").write_bytes(bytes(blob))

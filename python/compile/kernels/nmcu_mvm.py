@@ -1,0 +1,149 @@
+"""L1 — the NMCU matrix-vector-multiply hot-spot as a Pallas kernel.
+
+Hardware correspondence (paper Fig 2, DESIGN.md §3 "Hardware adaptation"):
+
+- One 4-bits/cell EFLASH read delivers 256 4-bit weights; two PEs per
+  macro each consume 128 of them. The kernel therefore tiles the
+  contraction dimension K in blocks of ``BLOCK_K = 128`` — one grid step
+  along K is one EFLASH read per PE.
+- The NMCU flow-control logic that auto-increments weight addresses for a
+  whole MVM is exactly the Pallas grid + BlockSpec index maps.
+- The ping-pong buffer that holds int32 partial sums and receives the
+  requantized int8 write-back is the VMEM accumulator tile: we allocate
+  it as a grid-persistent output and requantize on the last K step.
+- Requantization is the TFLite-micro fixed-point scheme defined in
+  ``compile.quant`` (int64 multiply, round-half-away-from-zero shift).
+
+The kernel is lowered with ``interpret=True`` (CPU PJRT cannot execute
+Mosaic custom-calls); on a real TPU the same BlockSpecs map BLOCK_K x
+BLOCK_N int8 tiles onto the MXU. TPU resource estimate in DESIGN.md §8.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+# One EFLASH read feeds one PE with 128 weights (256 per macro / 2 PEs).
+BLOCK_K = 128
+# Output tile width: how many accumulator columns live in the ping-pong
+# buffer at once. 16 matches the two-PE x 8-deep accumulator bank of the
+# NMCU; larger values trade VMEM for fewer grid steps on TPU.
+BLOCK_N = 16
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+def _mvm_kernel(x_ref, w_ref, b_ref, acc_ref, out_ref, *, n_k: int,
+                m0: int, shift: int, z_out: int, relu: bool):
+    """Grid = (batch, N-tiles, K-tiles); K innermost (sequential reads)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _load_bias():
+        acc_ref[...] = b_ref[...]
+
+    x = x_ref[...].astype(jnp.int32)  # (1, BLOCK_K) int8 activations
+    w = w_ref[...].astype(jnp.int32)  # (BLOCK_K, BLOCK_N) int4 codes
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _writeback():
+        acc = acc_ref[...].astype(jnp.int64)
+        prod = acc * jnp.int64(m0)
+        add = jnp.int64(1) << jnp.int64(shift - 1)
+        rounded = jnp.where(
+            prod >= 0,
+            (prod + add) >> jnp.int64(shift),
+            -((-prod + add) >> jnp.int64(shift)),
+        )
+        q = rounded + jnp.int64(z_out)
+        q = jnp.clip(q, -128, 127).astype(jnp.int8)
+        if relu:
+            q = jnp.maximum(q, jnp.int8(z_out))
+        out_ref[...] = q
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("m0", "shift", "z_out", "relu", "block_n", "interpret"),
+)
+def nmcu_mvm(
+    x_q: jnp.ndarray,  # int8 (B, K)
+    w_q: jnp.ndarray,  # int8 codes in [-8, 7], (K, N)
+    bias_q: jnp.ndarray,  # int32 (N,) with z_in correction folded in
+    *,
+    m0: int,
+    shift: int,
+    z_out: int,
+    relu: bool = False,
+    block_n: int = BLOCK_N,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Quantized MVM exactly as the NMCU executes it. Returns int8 (B, N)."""
+    if x_q.ndim != 2 or w_q.ndim != 2:
+        raise ValueError("x_q must be (B,K), w_q must be (K,N)")
+    b_sz, k_sz = x_q.shape
+    k_w, n_sz = w_q.shape
+    if k_w != k_sz:
+        raise ValueError(f"K mismatch: x has {k_sz}, w has {k_w}")
+
+    x_p = _pad_to(x_q.astype(jnp.int8), 1, BLOCK_K)
+    w_p = _pad_to(_pad_to(w_q.astype(jnp.int8), 0, BLOCK_K), 1, block_n)
+    bias_p = _pad_to(bias_q.astype(jnp.int32).reshape(1, -1), 1, block_n)
+    kp = x_p.shape[1]
+    np_ = w_p.shape[1]
+    n_k = kp // BLOCK_K
+    n_n = np_ // block_n
+
+    kernel = functools.partial(
+        _mvm_kernel, n_k=n_k, m0=m0, shift=shift, z_out=z_out, relu=relu
+    )
+    acc, out = pl.pallas_call(
+        kernel,
+        grid=(b_sz, n_n, n_k),
+        in_specs=[
+            pl.BlockSpec((1, BLOCK_K), lambda b, n, k: (b, k)),
+            pl.BlockSpec((BLOCK_K, block_n), lambda b, n, k: (k, n)),
+            pl.BlockSpec((1, block_n), lambda b, n, k: (0, n)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_n), lambda b, n, k: (b, n)),
+            pl.BlockSpec((1, block_n), lambda b, n, k: (b, n)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b_sz, np_), jnp.int32),  # ping-pong acc
+            jax.ShapeDtypeStruct((b_sz, np_), jnp.int8),  # write-back
+        ],
+        interpret=interpret,
+    )(x_p, w_p, bias_p)
+    del acc  # grid-persistent accumulator, contents superseded by out
+    return out[:, :n_sz]
+
+
+def eflash_reads_for(k: int, n: int, block_n: int = BLOCK_N) -> int:
+    """Number of EFLASH read operations the NMCU issues for a (K,N) MVM.
+
+    Each read supplies 256 weights (128 per PE x 2 PEs); both PEs work on
+    the same 128-element input slice, covering 2 output columns per read.
+    """
+    k_tiles = -(-k // BLOCK_K)
+    col_pairs = -(-n // 2)
+    return k_tiles * col_pairs
+
+
+__all__ = ["nmcu_mvm", "eflash_reads_for", "BLOCK_K", "BLOCK_N"]

@@ -1,0 +1,35 @@
+# Pure-numpy correctness oracle for the NMCU Pallas kernel.
+# pytest asserts nmcu_mvm(...) == ref_mvm(...) bit-exactly across shapes,
+# and the rust NMCU simulator is held to the same oracle through the
+# artifacts it consumes — this file is the CORE correctness signal.
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..quant import requantize
+
+
+def ref_mvm(
+    x_q: np.ndarray,
+    w_q: np.ndarray,
+    bias_q: np.ndarray,
+    *,
+    m0: int,
+    shift: int,
+    z_out: int,
+    relu: bool = False,
+) -> np.ndarray:
+    """int8 (B,K) x int4-code (K,N) + int32 bias -> int8 (B,N)."""
+    x = np.asarray(x_q, np.int64)
+    w = np.asarray(w_q, np.int64)
+    acc = x @ w + np.asarray(bias_q, np.int64)[None, :]
+    acc = np.clip(acc, -(2**31), 2**31 - 1).astype(np.int32)
+    out = requantize(acc, m0, shift, z_out)
+    if relu:
+        out = np.maximum(out, np.int8(z_out))
+    return out
+
+
+def ref_linear_float(x: np.ndarray, w: np.ndarray, b: np.ndarray) -> np.ndarray:
+    return np.asarray(x, np.float32) @ np.asarray(w, np.float32) + np.asarray(b, np.float32)

@@ -1,0 +1,155 @@
+"""L2 — the paper's inference models as JAX compute graphs.
+
+Two models, matching the paper's evaluation (§3, Table 1, Fig 7):
+
+- ``mlp_forward``: the MNIST MLP. 784 -> H -> 10, both layers 4-bit
+  weights / 8-bit activations, run entirely on the NMCU. H is chosen so
+  the weight count lands at the paper's "34K cells" (Fig 6a):
+  784*43 + 43*10 = 34,142 cells.
+
+- ``ae_forward`` / ``ae_pre`` / ``ae_post``: the MLPerf-Tiny
+  FC-AutoEncoder (640 -> [128 x4] -> 8 -> [128 x4] -> 640). Per Fig 7
+  only the 9th layer (128 x 128 = 16,384 cells, Fig 6b) runs on-chip in
+  4-bit; the remaining layers run off-chip in float. ``ae_pre`` covers
+  layers 1-8 and emits the int8 input of layer 9; ``ae_post`` consumes
+  layer 9's int8 output and runs layer 10.
+
+Every quantized matmul goes through the L1 Pallas kernel, so the AOT HLO
+artifact the rust runtime executes contains the identical integer
+arithmetic the rust NMCU simulator implements: the cross-language tests
+require bit-equality between the two.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.nmcu_mvm import nmcu_mvm
+from .quant import QLinearLayer
+
+MNIST_IN = 784
+MNIST_HIDDEN = 43  # 784*43 + 43*10 = 34,142 ~ "34K cells" of Fig 6(a)
+MNIST_OUT = 10
+
+AE_DIM = 640
+AE_HIDDEN = 128
+AE_LATENT = 8
+# encoder: 640-128-128-128-128-8 | decoder: 8-128-128-128-128-640
+AE_TOPOLOGY = [AE_DIM, 128, 128, 128, 128, AE_LATENT, 128, 128, 128, 128, AE_DIM]
+AE_ONCHIP_LAYER = 9  # 1-indexed: the 128x128 layer run on the NMCU (Fig 7)
+
+
+@dataclasses.dataclass(frozen=True)
+class QLayerConst:
+    """Static (python-side) view of a QLinearLayer for graph construction."""
+
+    w_q: np.ndarray  # int8 codes (K,N)
+    b_q: np.ndarray  # int32 (N,)
+    m0: int
+    shift: int
+    z_out: int
+
+    @staticmethod
+    def of(l: QLinearLayer) -> "QLayerConst":
+        return QLayerConst(
+            w_q=np.asarray(l.weight_q, np.int8),
+            b_q=np.asarray(l.bias_q, np.int32),
+            m0=l.m0,
+            shift=l.shift,
+            z_out=l.z_out,
+        )
+
+
+def qlinear(x_q: jnp.ndarray, layer: QLayerConst, *, relu: bool) -> jnp.ndarray:
+    """One NMCU layer: int8 in -> int8 out via the Pallas kernel."""
+    return nmcu_mvm(
+        x_q,
+        jnp.asarray(layer.w_q),
+        jnp.asarray(layer.b_q),
+        m0=layer.m0,
+        shift=layer.shift,
+        z_out=layer.z_out,
+        relu=relu,
+    )
+
+
+# ---------------------------------------------------------------------------
+# MNIST MLP (fully on-chip)
+# ---------------------------------------------------------------------------
+
+
+def mlp_forward(x_q: jnp.ndarray, l1: QLayerConst, l2: QLayerConst) -> jnp.ndarray:
+    """int8 (B,784) pixels -> int8 (B,10) quantized logits."""
+    h = qlinear(x_q, l1, relu=True)
+    return qlinear(h, l2, relu=False)
+
+
+# ---------------------------------------------------------------------------
+# FC-AutoEncoder (layer 9 on-chip, rest float off-chip)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AEParams:
+    """Float layers (W list, b list) + the quantized layer AE_ONCHIP_LAYER."""
+
+    weights: Sequence[np.ndarray]  # float32, len 10, weights[i]: (K_i, N_i)
+    biases: Sequence[np.ndarray]
+    l9: QLayerConst
+    # activation qparams at the layer-9 boundary
+    l9_s_in: float
+    l9_z_in: int
+    l9_s_out: float
+    l9_z_out: int
+    # input normalization (mean/std over the training normals)
+    x_mean: np.ndarray
+    x_std: np.ndarray
+
+
+def _float_layer(x, w, b, relu):
+    y = x @ jnp.asarray(w, jnp.float32) + jnp.asarray(b, jnp.float32)
+    return jnp.maximum(y, 0.0) if relu else y
+
+
+def ae_pre(x: jnp.ndarray, p: AEParams) -> jnp.ndarray:
+    """Layers 1..8 in float, then quantize to the int8 layer-9 input."""
+    h = (x - jnp.asarray(p.x_mean, jnp.float32)) / jnp.asarray(p.x_std, jnp.float32)
+    for i in range(AE_ONCHIP_LAYER - 1):  # layers 1..8 (0-indexed 0..7)
+        h = _float_layer(h, p.weights[i], p.biases[i], relu=True)
+    q = jnp.round(h / jnp.float32(p.l9_s_in)) + jnp.float32(p.l9_z_in)
+    return jnp.clip(q, -128, 127).astype(jnp.int8)
+
+
+def ae_post(y9_q: jnp.ndarray, p: AEParams) -> jnp.ndarray:
+    """Dequantize layer-9 output (its ReLU already applied on-chip), then
+    run layer 10 (float) to the 640-dim reconstruction."""
+    h = (y9_q.astype(jnp.float32) - jnp.float32(p.l9_z_out)) * jnp.float32(p.l9_s_out)
+    i = AE_ONCHIP_LAYER  # 0-indexed index of layer 10
+    h = _float_layer(h, p.weights[i], p.biases[i], relu=False)
+    return h
+
+
+def ae_forward(x: jnp.ndarray, p: AEParams) -> jnp.ndarray:
+    """Full chip-equivalent path: pre (float) -> NMCU layer 9 -> post."""
+    xq = ae_pre(x, p)
+    y9 = qlinear(xq, p.l9, relu=True)
+    return ae_post(y9, p)
+
+
+def ae_forward_float(x: jnp.ndarray, p: AEParams) -> jnp.ndarray:
+    """All-float reference (no quantization anywhere)."""
+    h = (x - jnp.asarray(p.x_mean, jnp.float32)) / jnp.asarray(p.x_std, jnp.float32)
+    n = len(p.weights)
+    for i in range(n):
+        h = _float_layer(h, p.weights[i], p.biases[i], relu=(i < n - 1))
+    return h
+
+
+def ae_anomaly_score(x: jnp.ndarray, recon: jnp.ndarray, p: AEParams) -> jnp.ndarray:
+    """MSE in the normalized domain — the MLPerf-Tiny AD metric input."""
+    xn = (x - jnp.asarray(p.x_mean, jnp.float32)) / jnp.asarray(p.x_std, jnp.float32)
+    return jnp.mean((xn - recon) ** 2, axis=-1)

@@ -1,0 +1,199 @@
+"""Shared quantization semantics for the whole stack.
+
+This module is the single normative definition of the integer arithmetic
+used by (a) the Pallas NMCU kernel (L1), (b) the JAX model graphs that are
+AOT-lowered to HLO (L2), (c) the pure-numpy oracle in kernels/ref.py, and
+(d) the Rust NMCU simulator (rust/src/nmcu/quant.rs re-implements exactly
+these formulas; the cross-language integration tests assert bit-equality).
+
+Scheme (paper §2.2: "element-wise int8 quantization schemes from
+TFLite-micro" [2], weights fitted to the 4-bits/cell EFLASH):
+
+- activations: int8, per-tensor affine  q = clamp(round(x/s) + z, -128, 127)
+- weights:     int4 symmetric (z == 0), values in [-8, 7] — exactly the 16
+  EFLASH cell states of Fig 5(a)
+- bias:        int32 at scale s_x * s_w
+- accumulation: int32
+- requantization: fixed-point multiply by M0 (int32 mantissa) and
+  arithmetic right shift, rounding half away from zero:
+
+      y = clamp(z_out + rounding_rshift(acc * M0, shift), -128, 127)
+
+  where  M0 / 2^shift  ≈  s_x * s_w / s_out, M0 in [2^30, 2^31).
+
+The asymmetric input zero-point is folded into the bias:
+      acc = sum_i x_i w_ij + (bias_j - z_x * sum_i w_ij)
+so the MAC datapath (the NMCU PE / Pallas kernel) only ever computes the
+raw int8 x int4 dot product plus an int32 addend.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+INT4_MIN, INT4_MAX = -8, 7
+INT8_MIN, INT8_MAX = -128, 127
+ACC_BITS = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class QParams:
+    """Per-tensor affine quantization parameters."""
+
+    scale: float
+    zero_point: int
+
+    def quantize(self, x: np.ndarray) -> np.ndarray:
+        q = np.round(np.asarray(x, np.float64) / self.scale) + self.zero_point
+        return np.clip(q, INT8_MIN, INT8_MAX).astype(np.int8)
+
+    def dequantize(self, q: np.ndarray) -> np.ndarray:
+        return (q.astype(np.float64) - self.zero_point) * self.scale
+
+
+def choose_act_qparams(lo: float, hi: float) -> QParams:
+    """Pick int8 affine params covering [lo, hi] with 0 exactly representable."""
+    lo = min(float(lo), 0.0)
+    hi = max(float(hi), 0.0)
+    if hi == lo:
+        hi = lo + 1e-6
+    scale = (hi - lo) / 255.0
+    zp = int(round(INT8_MIN - lo / scale))
+    zp = int(np.clip(zp, INT8_MIN, INT8_MAX))
+    return QParams(scale=scale, zero_point=zp)
+
+
+def choose_weight_scale(w: np.ndarray) -> float:
+    """Symmetric int4 per-tensor scale for a weight matrix."""
+    amax = float(np.max(np.abs(w)))
+    if amax == 0.0:
+        return 1.0
+    # map amax to the +/-8 boundary so codes use the full [-8, 7] range
+    return amax / 8.0
+
+
+def quantize_weights_int4(w: np.ndarray, scale: float) -> np.ndarray:
+    q = np.round(np.asarray(w, np.float64) / scale)
+    return np.clip(q, INT4_MIN, INT4_MAX).astype(np.int8)
+
+
+def quantize_multiplier(real_multiplier: float) -> tuple[int, int]:
+    """Decompose ``real_multiplier`` (0 < m < 1 typically) into (M0, shift)
+    such that  M0 / 2^shift ~= real_multiplier  with M0 an int32 in
+    [2^30, 2^31).  Mirrors TFLite's QuantizeMultiplier.
+    """
+    if real_multiplier <= 0:
+        raise ValueError(f"multiplier must be positive, got {real_multiplier}")
+    import math
+
+    mant, exp = math.frexp(real_multiplier)  # real = mant * 2^exp, mant in [0.5,1)
+    m0 = int(round(mant * (1 << 31)))
+    if m0 == (1 << 31):  # rounding overflow: 0.99999... -> 1.0
+        m0 //= 2
+        exp += 1
+    shift = int(31 - exp)
+    if shift < 1:
+        raise ValueError(f"multiplier {real_multiplier} too large (shift={shift})")
+    if shift > 62:
+        # degenerate tiny multiplier; clamp (result rounds to ~0 anyway)
+        m0 = m0 >> (shift - 62)
+        shift = 62
+    return m0, shift
+
+
+def rounding_rshift(x: np.ndarray, shift: int) -> np.ndarray:
+    """Arithmetic right shift with round-half-away-from-zero on int64."""
+    x = np.asarray(x, np.int64)
+    add = np.int64(1) << np.int64(shift - 1)
+    pos = (x + add) >> np.int64(shift)
+    neg = -((-x + add) >> np.int64(shift))
+    return np.where(x >= 0, pos, neg)
+
+
+def requantize(acc: np.ndarray, m0: int, shift: int, zero_point: int) -> np.ndarray:
+    """int32 accumulator -> int8 output, the NMCU write-back step."""
+    prod = acc.astype(np.int64) * np.int64(m0)
+    y = rounding_rshift(prod, shift) + np.int64(zero_point)
+    return np.clip(y, INT8_MIN, INT8_MAX).astype(np.int8)
+
+
+@dataclasses.dataclass(frozen=True)
+class QLinearLayer:
+    """Fully-quantized linear layer: everything the NMCU needs."""
+
+    weight_q: np.ndarray  # int8 array holding int4 codes, shape (K, N)
+    bias_q: np.ndarray  # int32, shape (N,), z_x correction already folded in
+    m0: int
+    shift: int
+    z_out: int
+    # bookkeeping for the float world
+    s_in: float
+    z_in: int
+    s_w: float
+    s_out: float
+
+    @property
+    def k(self) -> int:
+        return self.weight_q.shape[0]
+
+    @property
+    def n(self) -> int:
+        return self.weight_q.shape[1]
+
+
+def make_qlinear(
+    w: np.ndarray,
+    b: np.ndarray | None,
+    q_in: QParams,
+    q_out: QParams,
+) -> QLinearLayer:
+    """Quantize a float linear layer (y = x @ w + b) end to end."""
+    s_w = choose_weight_scale(w)
+    wq = quantize_weights_int4(w, s_w)
+    s_bias = q_in.scale * s_w
+    if b is None:
+        b = np.zeros(w.shape[1], np.float64)
+    bq = np.round(np.asarray(b, np.float64) / s_bias).astype(np.int64)
+    # fold the input zero-point: acc = x.q @ wq + (bq - z_in * colsum(wq))
+    corr = np.int64(q_in.zero_point) * wq.astype(np.int64).sum(axis=0)
+    bq = np.clip(bq - corr, -(2**31), 2**31 - 1).astype(np.int32)
+    m0, shift = quantize_multiplier(s_bias / q_out.scale)
+    return QLinearLayer(
+        weight_q=wq,
+        bias_q=bq,
+        m0=m0,
+        shift=shift,
+        z_out=q_out.zero_point,
+        s_in=q_in.scale,
+        z_in=q_in.zero_point,
+        s_w=s_w,
+        s_out=q_out.scale,
+    )
+
+
+def pack_int4(codes: np.ndarray) -> np.ndarray:
+    """Pack int4 codes (int8 values in [-8,7]) two-per-byte, low nibble first.
+
+    This is the on-EFLASH layout: one byte = two adjacent cells.
+    """
+    flat = codes.astype(np.int8).reshape(-1)
+    if flat.size % 2:
+        flat = np.concatenate([flat, np.zeros(1, np.int8)])
+    lo = flat[0::2].astype(np.uint8) & 0x0F
+    hi = (flat[1::2].astype(np.uint8) & 0x0F) << 4
+    return (lo | hi).astype(np.uint8)
+
+
+def unpack_int4(packed: np.ndarray, count: int) -> np.ndarray:
+    """Inverse of pack_int4: returns int8 values in [-8, 7]."""
+    p = packed.astype(np.uint8)
+    lo = (p & 0x0F).astype(np.int8)
+    hi = ((p >> 4) & 0x0F).astype(np.int8)
+    lo = np.where(lo >= 8, lo - 16, lo).astype(np.int8)
+    hi = np.where(hi >= 8, hi - 16, hi).astype(np.int8)
+    out = np.empty(p.size * 2, np.int8)
+    out[0::2] = lo
+    out[1::2] = hi
+    return out[:count]

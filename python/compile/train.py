@@ -1,0 +1,382 @@
+"""Quantization-aware training (build-time only).
+
+Trains the paper's two evaluation models on the synthetic datasets
+(DESIGN.md §2) and produces fully-quantized integer parameters:
+
+- MNIST MLP 784-43-10: 4-bit weights / 8-bit activations throughout
+  (the paper: "4 bit integer quantization aware training with MNIST").
+- FC-AutoEncoder 640-[128x4]-8-[128x4]-640: float training on normal
+  clips only, then QAT fine-tuning of the on-chip 9th layer (128x128)
+  with int8 activation boundaries.
+
+QAT uses straight-through-estimator fake quantization; activation ranges
+are calibrated after float pre-training and frozen for the fine-tune.
+Adam is hand-rolled (no optax in this environment).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datasets
+from .kernels.ref import ref_mvm
+from .model import (
+    AE_ONCHIP_LAYER,
+    AE_TOPOLOGY,
+    MNIST_HIDDEN,
+    MNIST_IN,
+    MNIST_OUT,
+    AEParams,
+    QLayerConst,
+)
+from .quant import QParams, choose_act_qparams, make_qlinear
+
+# ---------------------------------------------------------------------------
+# generic bits
+# ---------------------------------------------------------------------------
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat = jax.tree_util.tree_map(lambda m: m / (1 - b1**t), m)
+    vhat = jax.tree_util.tree_map(lambda v: v / (1 - b2**t), v)
+    new = jax.tree_util.tree_map(
+        lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mhat, vhat
+    )
+    return new, {"m": m, "v": v, "t": t}
+
+
+def fq_weight_int4(w):
+    """Fake-quantize a weight tensor to int4 symmetric, STE gradient."""
+    s = jnp.maximum(jnp.max(jnp.abs(w)), 1e-8) / 8.0
+    wq = jnp.clip(jnp.round(w / s), -8, 7) * s
+    return w + jax.lax.stop_gradient(wq - w)
+
+
+def fq_act(x, scale, zp):
+    """Fake-quantize activations to int8 affine with fixed params, STE."""
+    q = jnp.clip(jnp.round(x / scale) + zp, -128, 127)
+    xq = (q - zp) * scale
+    return x + jax.lax.stop_gradient(xq - x)
+
+
+# ---------------------------------------------------------------------------
+# MNIST MLP
+# ---------------------------------------------------------------------------
+
+MNIST_INPUT_Q = QParams(scale=1.0 / 255.0, zero_point=-128)  # q = pixel - 128
+
+
+@dataclasses.dataclass
+class MnistResult:
+    l1: "object"
+    l2: "object"
+    q_h: QParams
+    q_logits: QParams
+    acc_float: float
+    acc_quant: float
+    w1: np.ndarray
+    b1: np.ndarray
+    w2: np.ndarray
+    b2: np.ndarray
+
+
+def _mlp_fwd_float(params, x):
+    h = jnp.maximum(x @ params["w1"] + params["b1"], 0.0)
+    return h @ params["w2"] + params["b2"], h
+
+
+def _mlp_fwd_qat(params, x, hq: QParams):
+    xq = fq_act(x, MNIST_INPUT_Q.scale, MNIST_INPUT_Q.zero_point)
+    h = jnp.maximum(xq @ fq_weight_int4(params["w1"]) + params["b1"], 0.0)
+    h = fq_act(h, hq.scale, hq.zero_point)
+    return h @ fq_weight_int4(params["w2"]) + params["b2"]
+
+
+def _ce_loss(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def mlp_int8_logits(x_u8: np.ndarray, l1, l2) -> np.ndarray:
+    """The integer inference path (numpy oracle) used for eval + goldens."""
+    xq = (x_u8.astype(np.int32) - 128).astype(np.int8)
+    h = ref_mvm(xq, l1.weight_q, l1.bias_q, m0=l1.m0, shift=l1.shift, z_out=l1.z_out, relu=True)
+    return ref_mvm(h, l2.weight_q, l2.bias_q, m0=l2.m0, shift=l2.shift, z_out=l2.z_out, relu=False)
+
+
+def train_mnist(
+    n_train=20000,
+    n_test=4000,
+    seed=7,
+    epochs_float=10,
+    epochs_qat=8,
+    batch=128,
+    verbose=True,
+) -> MnistResult:
+    x_tr_img, y_tr = datasets.synth_mnist(n_train, seed=seed)
+    x_te_img, y_te = datasets.synth_mnist(n_test, seed=seed + 1)
+    x_tr = (x_tr_img.reshape(n_train, -1) / 255.0).astype(np.float32)
+    x_te = (x_te_img.reshape(n_test, -1) / 255.0).astype(np.float32)
+    y_tr = y_tr.astype(np.int32)
+
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    params = {
+        "w1": (jax.random.normal(k1, (MNIST_IN, MNIST_HIDDEN), jnp.float32) * 0.05),
+        "b1": jnp.zeros(MNIST_HIDDEN, jnp.float32),
+        "w2": (jax.random.normal(k2, (MNIST_HIDDEN, MNIST_OUT), jnp.float32) * 0.1),
+        "b2": jnp.zeros(MNIST_OUT, jnp.float32),
+    }
+
+    @jax.jit
+    def step_float(params, opt, xb, yb, lr):
+        def loss_fn(p):
+            logits, _ = _mlp_fwd_float(p, xb)
+            return _ce_loss(logits, yb)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt = adam_update(params, grads, opt, lr)
+        return params, opt, loss
+
+    rng = np.random.default_rng(seed)
+    opt = adam_init(params)
+    n_steps = n_train // batch
+    for ep in range(epochs_float):
+        perm = rng.permutation(n_train)
+        lr = 2e-3 if ep < epochs_float - 3 else 5e-4
+        for i in range(n_steps):
+            idx = perm[i * batch : (i + 1) * batch]
+            params, opt, loss = step_float(params, opt, x_tr[idx], y_tr[idx], lr)
+        if verbose:
+            print(f"[mnist float] epoch {ep} loss={float(loss):.4f}")
+
+    # calibrate activation ranges on the training set
+    logits_f, h_f = _mlp_fwd_float(params, jnp.asarray(x_tr))
+    h_hi = float(np.percentile(np.asarray(h_f), 99.9))
+    q_h = choose_act_qparams(0.0, h_hi)
+    lo = float(np.percentile(np.asarray(logits_f), 0.005))
+    hi = float(np.percentile(np.asarray(logits_f), 99.995))
+    q_logits = choose_act_qparams(lo, hi)
+
+    @jax.jit
+    def step_qat(params, opt, xb, yb, lr):
+        def loss_fn(p):
+            logits = _mlp_fwd_qat(p, xb, q_h)
+            return _ce_loss(logits, yb)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt = adam_update(params, grads, opt, lr)
+        return params, opt, loss
+
+    opt = adam_init(params)
+    for ep in range(epochs_qat):
+        perm = rng.permutation(n_train)
+        for i in range(n_steps):
+            idx = perm[i * batch : (i + 1) * batch]
+            params, opt, loss = step_qat(params, opt, x_tr[idx], y_tr[idx], 5e-4)
+        if verbose:
+            print(f"[mnist qat] epoch {ep} loss={float(loss):.4f}")
+
+    w1 = np.asarray(params["w1"], np.float64)
+    b1 = np.asarray(params["b1"], np.float64)
+    w2 = np.asarray(params["w2"], np.float64)
+    b2 = np.asarray(params["b2"], np.float64)
+
+    l1 = make_qlinear(w1, b1, MNIST_INPUT_Q, q_h)
+    l2 = make_qlinear(w2, b2, q_h, q_logits)
+
+    logits_te = _mlp_fwd_qat(params, jnp.asarray(x_te), q_h)
+    acc_float = float(np.mean(np.argmax(np.asarray(logits_te), 1) == y_te))
+    lq = mlp_int8_logits(x_te_img.reshape(n_test, -1), l1, l2)
+    acc_quant = float(np.mean(np.argmax(lq.astype(np.int32), 1) == y_te))
+    if verbose:
+        print(f"[mnist] acc float(fakequant)={acc_float:.4f} acc int8/int4={acc_quant:.4f}")
+    return MnistResult(
+        l1=l1, l2=l2, q_h=q_h, q_logits=q_logits,
+        acc_float=acc_float, acc_quant=acc_quant,
+        w1=w1.astype(np.float32), b1=b1.astype(np.float32),
+        w2=w2.astype(np.float32), b2=b2.astype(np.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# FC-AutoEncoder
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class AeResult:
+    params: AEParams
+    l9: "object"  # QLinearLayer
+    auc_float: float
+    auc_quant: float
+    x_mean: np.ndarray
+    x_std: np.ndarray
+
+
+def _ae_fwd_float(params, x, n_layers):
+    h = x
+    for i in range(n_layers):
+        h = h @ params[f"w{i}"] + params[f"b{i}"]
+        if i < n_layers - 1:
+            h = jnp.maximum(h, 0.0)
+    return h
+
+
+def _ae_fwd_qat9(params, x, n_layers, s_in, z_in, s_out, z_out):
+    h = x
+    for i in range(n_layers):
+        if i == AE_ONCHIP_LAYER - 1:  # the on-chip 128x128 layer
+            h = fq_act(h, s_in, z_in)
+            h = h @ fq_weight_int4(params[f"w{i}"]) + params[f"b{i}"]
+            h = jnp.maximum(h, 0.0)
+            h = fq_act(h, s_out, z_out)
+            continue
+        h = h @ params[f"w{i}"] + params[f"b{i}"]
+        if i < n_layers - 1:
+            h = jnp.maximum(h, 0.0)
+    return h
+
+
+def train_autoencoder(
+    n_train=8000,
+    n_test_normal=1200,
+    n_test_anomaly=1200,
+    seed=11,
+    epochs_float=60,
+    epochs_qat=15,
+    batch=128,
+    verbose=True,
+) -> AeResult:
+    x_tr, _ = datasets.synth_admos(n_train, 0, seed=seed)
+    x_mean = x_tr.mean(axis=0)
+    x_std = x_tr.std(axis=0) + 1e-3
+    xn_tr = ((x_tr - x_mean) / x_std).astype(np.float32)
+
+    dims = AE_TOPOLOGY
+    n_layers = len(dims) - 1
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    for i in range(n_layers):
+        key, k = jax.random.split(key)
+        params[f"w{i}"] = jax.random.normal(k, (dims[i], dims[i + 1]), jnp.float32) * np.sqrt(
+            2.0 / dims[i]
+        ).astype(np.float32)
+        params[f"b{i}"] = jnp.zeros(dims[i + 1], jnp.float32)
+
+    @jax.jit
+    def step(params, opt, xb, lr):
+        def loss_fn(p):
+            recon = _ae_fwd_float(p, xb, n_layers)
+            return jnp.mean((recon - xb) ** 2)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt = adam_update(params, grads, opt, lr)
+        return params, opt, loss
+
+    rng = np.random.default_rng(seed)
+    opt = adam_init(params)
+    n_steps = n_train // batch
+    for ep in range(epochs_float):
+        perm = rng.permutation(n_train)
+        lr = 1e-3 if ep < epochs_float - 10 else 3e-4
+        for i in range(n_steps):
+            idx = perm[i * batch : (i + 1) * batch]
+            params, opt, loss = step(params, opt, xn_tr[idx], lr)
+        if verbose and ep % 10 == 0:
+            print(f"[ae float] epoch {ep} loss={float(loss):.5f}")
+
+    # calibrate the layer-9 activation boundaries on training data
+    h = jnp.asarray(xn_tr)
+    for i in range(AE_ONCHIP_LAYER - 1):
+        h = jnp.maximum(h @ params[f"w{i}"] + params[f"b{i}"], 0.0)
+    h8 = np.asarray(h)
+    q_in = choose_act_qparams(0.0, float(np.percentile(h8, 99.9)))
+    h9 = np.maximum(h8 @ np.asarray(params[f"w{AE_ONCHIP_LAYER-1}"]) +
+                    np.asarray(params[f"b{AE_ONCHIP_LAYER-1}"]), 0.0)
+    q_out = choose_act_qparams(0.0, float(np.percentile(h9, 99.9)))
+
+    @jax.jit
+    def step_qat(params, opt, xb, lr):
+        def loss_fn(p):
+            recon = _ae_fwd_qat9(
+                p, xb, n_layers, q_in.scale, q_in.zero_point, q_out.scale, q_out.zero_point
+            )
+            return jnp.mean((recon - xb) ** 2)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt = adam_update(params, grads, opt, lr)
+        return params, opt, loss
+
+    opt = adam_init(params)
+    for ep in range(epochs_qat):
+        perm = rng.permutation(n_train)
+        for i in range(n_steps):
+            idx = perm[i * batch : (i + 1) * batch]
+            params, opt, loss = step_qat(params, opt, xn_tr[idx], 3e-4)
+        if verbose and ep % 5 == 0:
+            print(f"[ae qat] epoch {ep} loss={float(loss):.5f}")
+
+    weights = [np.asarray(params[f"w{i}"], np.float32) for i in range(n_layers)]
+    biases = [np.asarray(params[f"b{i}"], np.float32) for i in range(n_layers)]
+    i9 = AE_ONCHIP_LAYER - 1
+    l9 = make_qlinear(weights[i9].astype(np.float64), biases[i9].astype(np.float64), q_in, q_out)
+
+    ae = AEParams(
+        weights=weights,
+        biases=biases,
+        l9=QLayerConst.of(l9),
+        l9_s_in=q_in.scale,
+        l9_z_in=q_in.zero_point,
+        l9_s_out=q_out.scale,
+        l9_z_out=q_out.zero_point,
+        x_mean=x_mean.astype(np.float32),
+        x_std=x_std.astype(np.float32),
+    )
+
+    # evaluation on the held-out mixed test set
+    x_te, y_te = datasets.synth_admos(n_test_normal, n_test_anomaly, seed=seed + 1)
+    auc_float = float(
+        datasets.auc_score(np.asarray(_ae_scores_float(ae, x_te)), y_te)
+    )
+    auc_quant = float(
+        datasets.auc_score(np.asarray(ae_scores_quant(ae, x_te)), y_te)
+    )
+    if verbose:
+        print(f"[ae] AUC float={auc_float:.4f} AUC quant-l9={auc_quant:.4f}")
+    return AeResult(
+        params=ae, l9=l9, auc_float=auc_float, auc_quant=auc_quant,
+        x_mean=x_mean.astype(np.float32), x_std=x_std.astype(np.float32),
+    )
+
+
+def _ae_scores_float(ae: AEParams, x: np.ndarray) -> np.ndarray:
+    from .model import ae_anomaly_score, ae_forward_float
+
+    recon = ae_forward_float(jnp.asarray(x, jnp.float32), ae)
+    return np.asarray(ae_anomaly_score(jnp.asarray(x, jnp.float32), recon, ae))
+
+
+def ae_scores_quant(ae: AEParams, x: np.ndarray) -> np.ndarray:
+    """Chip-equivalent path with the integer layer 9 via the numpy oracle."""
+    from .model import ae_post, ae_pre
+
+    xq = np.asarray(ae_pre(jnp.asarray(x, jnp.float32), ae))
+    l9 = ae.l9
+    y9 = ref_mvm(xq, l9.w_q, l9.b_q, m0=l9.m0, shift=l9.shift, z_out=l9.z_out, relu=True)
+    recon = np.asarray(ae_post(jnp.asarray(y9), ae))
+    xn = (x - ae.x_mean) / ae.x_std
+    return np.mean((xn - recon) ** 2, axis=-1)

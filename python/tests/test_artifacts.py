@@ -1,0 +1,96 @@
+"""End-to-end artifact coherence tests.
+
+These run only when artifacts/ has been built (make artifacts); they
+assert that what we exported is exactly what a consumer will decode.
+"""
+
+import json
+import struct
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+ART = Path(__file__).resolve().parents[2] / "artifacts"
+
+pytestmark = pytest.mark.skipif(
+    not (ART / "expected.json").exists(), reason="artifacts not built"
+)
+
+
+def _load_qmodel(base):
+    meta = json.loads((ART / f"{base}.json").read_text())
+    blob = (ART / f"{base}.bin").read_bytes()
+    from compile.quant import unpack_int4
+
+    layers = []
+    for l in meta["layers"]:
+        codes = unpack_int4(
+            np.frombuffer(blob, np.uint8, count=l["w_bytes"], offset=l["w_offset"]),
+            l["k"] * l["n"],
+        ).reshape(l["k"], l["n"])
+        bias = np.frombuffer(blob, "<i4", count=l["n"], offset=l["b_offset"])
+        layers.append((l, codes, bias))
+    return layers
+
+
+def test_mnist_weights_roundtrip_and_goldens():
+    expected = json.loads((ART / "expected.json").read_text())
+    layers = _load_qmodel("mnist_weights")
+    assert [l[0]["name"] for l in layers] == ["fc1", "fc2"]
+    (m1, w1, b1), (m2, w2, b2) = layers
+    assert w1.shape == (784, 43) and w2.shape == (43, 10)
+    assert w1.min() >= -8 and w1.max() <= 7
+
+    # golden logits: decode weights from the .bin and re-run the oracle
+    from compile.kernels.ref import ref_mvm
+
+    raw = (ART / "mnist_test.bin").read_bytes()
+    assert raw[:4] == b"MNT1"
+    n = struct.unpack("<I", raw[4:8])[0]
+    imgs = np.frombuffer(raw, np.uint8, count=n * 784, offset=8).reshape(n, 784)
+    g = expected["mnist"]
+    xq = (imgs[g["golden_indices"]].astype(np.int32) - 128).astype(np.int8)
+    h = ref_mvm(xq, w1, b1, m0=m1["m0"], shift=m1["shift"], z_out=m1["z_out"], relu=True)
+    lg = ref_mvm(h, w2, b2, m0=m2["m0"], shift=m2["shift"], z_out=m2["z_out"], relu=False)
+    np.testing.assert_array_equal(lg, np.array(g["golden_logits_int8"], np.int8))
+
+
+def test_admos_bin_roundtrip():
+    raw = (ART / "admos_test.bin").read_bytes()
+    assert raw[:4] == b"ADM1"
+    n, dim = struct.unpack("<II", raw[4:12])
+    assert dim == 640
+    x = np.frombuffer(raw, "<f4", count=n * dim, offset=12)
+    labels = np.frombuffer(raw, np.uint8, count=n, offset=12 + 4 * n * dim)
+    assert set(np.unique(labels)) <= {0, 1}
+    assert np.isfinite(x).all()
+
+
+def test_ae_l9_golden_vectors():
+    expected = json.loads((ART / "expected.json").read_text())
+    g = expected["admos"]
+    (m9, w9, b9) = _load_qmodel("ae_l9_weights")[0]
+    assert w9.shape == (128, 128)
+    from compile.kernels.ref import ref_mvm
+
+    xq = np.array(g["golden_l9_in_int8"], np.int8)
+    out = ref_mvm(xq, w9, b9, m0=m9["m0"], shift=m9["shift"], z_out=m9["z_out"], relu=True)
+    np.testing.assert_array_equal(out, np.array(g["golden_l9_out_int8"], np.int8))
+
+
+def test_hlo_artifacts_exist_and_parse():
+    names = [f"{m}_b{b}.hlo.txt" for m in ("mnist_mlp", "ae_pre", "ae_post", "ae_sw")
+             for b in (1, 256)]
+    for nm in names:
+        text = (ART / nm).read_text()
+        assert text.startswith("HloModule"), nm
+
+
+def test_accuracy_in_paper_regime():
+    expected = json.loads((ART / "expected.json").read_text())
+    if expected["mnist"]["n_test"] < 4000:
+        pytest.skip("quick artifacts")
+    # Table 1 regime: SW baseline 95.62% MNIST, 0.878 AUC.
+    assert expected["mnist"]["acc_quant"] > 0.90
+    assert expected["admos"]["auc_quant"] > 0.8

@@ -1,0 +1,78 @@
+"""Model-graph and dataset tests (L2)."""
+
+import numpy as np
+import pytest
+
+from compile import datasets
+from compile.kernels.ref import ref_mvm
+from compile.model import (
+    AE_TOPOLOGY,
+    MNIST_HIDDEN,
+    MNIST_IN,
+    MNIST_OUT,
+)
+
+
+def test_mnist_cell_count_matches_paper():
+    # Fig 6(a): "34K cells" for the MNIST MLP weights
+    cells = MNIST_IN * MNIST_HIDDEN + MNIST_HIDDEN * MNIST_OUT
+    assert 33_000 <= cells <= 35_000, cells
+
+
+def test_ae_topology_is_mlperf_tiny():
+    assert AE_TOPOLOGY == [640, 128, 128, 128, 128, 8, 128, 128, 128, 128, 640]
+    # Fig 6(b): 9th layer = 128x128 = 16K cells on-chip
+    assert AE_TOPOLOGY[8] * AE_TOPOLOGY[9] == 16_384
+
+
+def test_synth_mnist_deterministic():
+    a_img, a_lab = datasets.synth_mnist(16, seed=3)
+    b_img, b_lab = datasets.synth_mnist(16, seed=3)
+    np.testing.assert_array_equal(a_img, b_img)
+    np.testing.assert_array_equal(a_lab, b_lab)
+    c_img, _ = datasets.synth_mnist(16, seed=4)
+    assert not np.array_equal(a_img, c_img)
+
+
+def test_synth_mnist_shape_range():
+    imgs, labels = datasets.synth_mnist(8, seed=0)
+    assert imgs.shape == (8, 28, 28) and imgs.dtype == np.uint8
+    assert labels.shape == (8,) and set(labels) <= set(range(10))
+    assert imgs.max() > 150  # strokes present
+    # corners mostly dark
+    assert imgs[:, 0, 0].mean() < 100
+
+
+def test_synth_admos_separability():
+    x, y = datasets.synth_admos(200, 200, seed=5)
+    assert x.shape == (400, 640)
+    # anomalies deviate more from the per-machine mean than normals do
+    mu = x[y == 0].mean(axis=0)
+    d_norm = np.abs(x[y == 0] - mu).mean()
+    d_anom = np.abs(x[y == 1] - mu).mean()
+    assert d_anom > d_norm
+
+
+def test_auc_score_sanity():
+    scores = np.array([0.1, 0.2, 0.8, 0.9])
+    labels = np.array([0, 0, 1, 1])
+    assert datasets.auc_score(scores, labels) == 1.0
+    assert datasets.auc_score(-scores, labels) == 0.0
+    assert abs(datasets.auc_score(np.array([1.0, 1.0, 1.0, 1.0]), labels) - 0.5) < 1e-12
+
+
+def test_auc_handles_ties_like_rank_method():
+    scores = np.array([0.5, 0.5, 0.5, 0.7])
+    labels = np.array([0, 1, 0, 1])
+    a = datasets.auc_score(scores, labels)
+    assert 0.5 < a < 1.0
+
+
+def test_ref_mvm_relu_clamps_at_zero_point():
+    x = np.zeros((1, 4), np.int8)
+    w = np.zeros((4, 3), np.int8)
+    b = np.array([-(10**6), 0, 10**6], np.int32)
+    out = ref_mvm(x, w, b, m0=2**30, shift=31, z_out=5, relu=True)
+    assert out[0, 0] == 5  # clamped up to z_out
+    assert out[0, 1] == 5
+    assert out[0, 2] == 127  # saturated high

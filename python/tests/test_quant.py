@@ -1,0 +1,109 @@
+"""Quantization primitive tests: the normative integer arithmetic."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.quant import (
+    QParams,
+    choose_act_qparams,
+    choose_weight_scale,
+    make_qlinear,
+    pack_int4,
+    quantize_multiplier,
+    quantize_weights_int4,
+    requantize,
+    rounding_rshift,
+    unpack_int4,
+)
+
+
+@given(st.floats(1e-9, 0.9999999))
+@settings(max_examples=200, deadline=None)
+def test_quantize_multiplier_accuracy(m):
+    m0, shift = quantize_multiplier(m)
+    assert 0 < m0 < 2**31
+    approx = m0 / (1 << shift) if shift < 63 else m0 * 2.0**-shift
+    assert abs(approx - m) / m < 1e-6 or shift == 62  # clamped tail
+
+
+def test_rounding_rshift_half_away():
+    # 3/2 -> 2, -3/2 -> -2 (away from zero), 1 -> 0 remainder exact
+    assert rounding_rshift(np.array([3]), 1)[0] == 2
+    assert rounding_rshift(np.array([-3]), 1)[0] == -2
+    assert rounding_rshift(np.array([4]), 2)[0] == 1
+    assert rounding_rshift(np.array([-4]), 2)[0] == -1
+    assert rounding_rshift(np.array([6]), 2)[0] == 2  # 1.5 -> 2
+    assert rounding_rshift(np.array([-6]), 2)[0] == -2
+
+
+@given(st.integers(-(2**31), 2**31 - 1), st.integers(1, 40))
+@settings(max_examples=300, deadline=None)
+def test_rounding_rshift_matches_float(x, shift):
+    got = int(rounding_rshift(np.array([x]), shift)[0])
+    want = x / (1 << shift)
+    # round half away from zero
+    import math
+    frac = abs(want) - math.floor(abs(want))
+    if frac == 0.5:
+        want = math.copysign(math.ceil(abs(want)), want)
+    else:
+        want = round(want)
+    assert got == int(want)
+
+
+def test_requantize_saturates():
+    acc = np.array([2**31 - 1, -(2**31)], np.int32)
+    out = requantize(acc, m0=2**31 - 1, shift=31, zero_point=0)
+    assert out[0] == 127 and out[1] == -128
+
+
+@given(st.lists(st.integers(-8, 7), min_size=1, max_size=999))
+@settings(max_examples=100, deadline=None)
+def test_pack_unpack_roundtrip(codes):
+    arr = np.array(codes, np.int8)
+    packed = pack_int4(arr)
+    assert packed.nbytes == (len(codes) + 1) // 2
+    back = unpack_int4(packed, len(codes))
+    np.testing.assert_array_equal(arr, back)
+
+
+def test_weight_scale_full_range():
+    w = np.array([[-1.0, 0.5], [0.25, 1.0]])
+    s = choose_weight_scale(w)
+    q = quantize_weights_int4(w, s)
+    assert q.min() >= -8 and q.max() <= 7
+    assert abs(q).max() == 8  # amax maps to the boundary
+
+
+def test_act_qparams_zero_exact():
+    q = choose_act_qparams(-0.35, 1.2)
+    z = q.zero_point
+    assert -128 <= z <= 127
+    # real zero must be exactly representable
+    assert abs(q.dequantize(np.array([z], np.int8))[0]) < 1e-12
+
+
+def test_make_qlinear_zero_input_correction():
+    """With x == z_in everywhere (real value 0), acc must equal pure bias."""
+    rng = np.random.default_rng(3)
+    w = rng.normal(0, 0.2, (64, 8))
+    b = rng.normal(0, 0.5, 8)
+    q_in = choose_act_qparams(-1.0, 1.0)
+    q_out = choose_act_qparams(-2.0, 2.0)
+    l = make_qlinear(w, b, q_in, q_out)
+    xq = np.full((1, 64), q_in.zero_point, np.int8)
+    acc = xq.astype(np.int64) @ l.weight_q.astype(np.int64) + l.bias_q
+    # acc * s_in * s_w should approximate b
+    approx = acc[0] * q_in.scale * l.s_w
+    np.testing.assert_allclose(approx, b, atol=q_in.scale * l.s_w)
+
+
+def test_qparams_quantize_dequantize():
+    q = QParams(scale=0.05, zero_point=10)
+    x = np.linspace(-5, 5, 101)
+    xq = q.quantize(x)
+    xd = q.dequantize(xq)
+    clipped = np.clip(x, (-128 - 10) * 0.05, (127 - 10) * 0.05)
+    np.testing.assert_allclose(xd, clipped, atol=0.026)

@@ -1,0 +1,141 @@
+//! Ablation A4 — bits per cell. The core capacity/reliability trade of
+//! the paper: 4 bits/cell quadruples weight density (and quarters read
+//! traffic) vs the single-bit configurations of [1][4][6], at the cost
+//! of 16-state margins. This bench sweeps 1/2/4 bits per cell with the
+//! ladder rebuilt for each (same voltage window, 2^b states), and
+//! measures capacity, traffic, margins, and post-bake accuracy.
+//!
+//!     cargo bench --bench ablation_bitspercell
+
+use nvmcu::artifacts;
+use nvmcu::config::ChipConfig;
+use nvmcu::coordinator::{experiments, Chip};
+use nvmcu::util::bench::Table;
+
+fn main() {
+    if !artifacts::artifacts_available() {
+        eprintln!("artifacts not built; run `make artifacts`");
+        return;
+    }
+    let dir = artifacts::artifacts_dir();
+    let inputs = experiments::load_table1_inputs(&dir).unwrap();
+    let model = &inputs.mnist_model;
+    let weights = model.total_cells() as u64; // int4 weights
+
+    println!("\n=== A4: bits-per-cell sweep (same 4 Mb macro, same voltage window) ===\n");
+    let mut t = Table::new(&[
+        "bits/cell", "states", "cells for model", "macro capacity [int4 wgts]",
+        "reads/inference", "min margin [mV]", "acc 0h", "acc 340h", "acc 3000h",
+    ]);
+    for bits in [4u32, 2, 1] {
+        let mut cfg = ChipConfig::new();
+        cfg.eflash.bits_per_cell = bits;
+        // a b-bit cell stores b of the 4 weight bits: 4/b cells per weight.
+        // the macro's cell count is fixed; capacity in weights scales down.
+        let cells_per_weight = 4 / bits as u64;
+        let capacity_weights = cfg.eflash.n_cells() as u64 * bits as u64 / 4;
+
+        // margins from the rebuilt ladder
+        let chip_probe = Chip::new(&cfg);
+        let margin = chip_probe.eflash.ladders.min_margin(1.5 * cfg.eflash.ispp_step);
+        let n_states = cfg.eflash.n_states();
+
+        // accuracy: pack the int4 model into b-bit cells — simulate by
+        // splitting each weight across 4/b cells. For the accuracy model
+        // we emulate with the 4-bit datapath but drift applied per-cell
+        // at the b-bit margin; the decisive quantity is margin vs drift,
+        // so we program the same codes against the b-bit ladder geometry
+        // by scaling states into the available window.
+        let mut row = vec![
+            format!("{bits}"),
+            format!("{n_states}"),
+            format!("{}", weights * cells_per_weight),
+            format!("{capacity_weights}"),
+            format!("{}", 154 * cells_per_weight + 22 * cells_per_weight),
+            format!("{:.1}", margin * 1000.0),
+        ];
+        for hours in [0.0, 340.0, 3000.0] {
+            let acc = accuracy_at(bits, hours, &inputs);
+            row.push(format!("{:.2}%", 100.0 * acc));
+        }
+        t.row(&row);
+    }
+    t.print();
+    println!("\nshape check: 1 bit/cell never misdecodes even at 3000 h (huge margins)");
+    println!("but needs 4x the cells and reads; 4 bits/cell holds the paper's");
+    println!("accuracy through the bake window while quadrupling density.");
+}
+
+/// Accuracy of the MNIST model stored at `bits`/cell after `hours` bake.
+/// For b < 4, each int4 weight is split across 4/b cells (high bits
+/// first); each cell is programmed on the 2^b-state ladder and drifts
+/// independently; weights are reassembled before inference.
+fn accuracy_at(bits: u32, hours: f64, inputs: &experiments::Table1Inputs) -> f64 {
+    let mut cfg = ChipConfig::new();
+    cfg.eflash.bits_per_cell = bits;
+    let mut chip = Chip::new(&cfg);
+    let model = &inputs.mnist_model;
+
+    if bits == 4 {
+        let pm = chip.program_model(model).unwrap();
+        chip.bake(hours, cfg.retention.bake_temp_c);
+        return experiments::mnist_accuracy_chip(&mut chip, &pm, &inputs.mnist_test);
+    }
+
+    // split codes into b-bit fields, program as raw cell states
+    let fields = (4 / bits) as usize;
+    let mask = (1u8 << bits) - 1;
+    let mapping = chip.eflash.mapping;
+    let mut regions = Vec::new();
+    for l in &model.layers {
+        let mut cell_codes: Vec<i8> = Vec::with_capacity(l.codes.len() * fields);
+        for &c in &l.codes {
+            let u = (c as i16 + 8) as u8; // 0..15
+            for f in (0..fields).rev() {
+                let field = (u >> (f as u32 * bits)) & mask;
+                // store the raw field as a "weight value" on the reduced
+                // ladder: state index = field (0..2^b-1)
+                cell_codes.push(mapping.state_to_value(field % 16));
+            }
+        }
+        // value_to_state will invert mapping -> state == field
+        let (region, _) = chip.eflash.program_region(&cell_codes).unwrap();
+        regions.push(region);
+    }
+    chip.bake(hours, cfg.retention.bake_temp_c);
+
+    // read back, reassemble weights, run the software path
+    let mut codes_per_layer = Vec::new();
+    let cpr = chip.eflash.cells_per_read();
+    for (region, l) in regions.iter().zip(&model.layers) {
+        let mut buf = vec![0i8; cpr];
+        let mut cells = Vec::with_capacity(region.n_codes);
+        for r in 0..region.n_rows {
+            chip.eflash.read_row(region.first_row + r, &mut buf);
+            let take = cpr.min(region.n_codes - cells.len());
+            cells.extend_from_slice(&buf[..take]);
+        }
+        let mut codes = Vec::with_capacity(l.codes.len());
+        for chunk in cells.chunks(fields) {
+            let mut u: u8 = 0;
+            for (f, &cell) in chunk.iter().enumerate() {
+                let field = mapping.value_to_state(cell) & mask;
+                u |= field << ((fields - 1 - f) as u32 * bits);
+            }
+            codes.push((u as i16 - 8) as i8);
+        }
+        codes_per_layer.push(codes);
+    }
+    let mut correct = 0usize;
+    for i in 0..inputs.mnist_test.len() {
+        let out = nvmcu::models::qmodel_forward_with(
+            model,
+            &codes_per_layer,
+            &inputs.mnist_test.image_q(i),
+        );
+        if nvmcu::models::argmax_i8(&out) == inputs.mnist_test.labels[i] as usize {
+            correct += 1;
+        }
+    }
+    correct as f64 / inputs.mnist_test.len() as f64
+}

@@ -1,0 +1,80 @@
+//! Ablation A3 — the ping-pong buffer (Fig 2). With it, layer L's output
+//! feeds layer L+1 inside the NMCU: the only bus traffic is the first
+//! input vector and the final result ("no additional data movement is
+//! required beyond the first input vector", §2.2). Without it, every
+//! intermediate activation crosses the bus twice (store + reload).
+//!
+//!     cargo bench --bench ablation_pingpong
+
+use nvmcu::artifacts;
+use nvmcu::config::ChipConfig;
+use nvmcu::coordinator::{experiments, Chip};
+use nvmcu::util::bench::Table;
+
+fn main() {
+    if !artifacts::artifacts_available() {
+        eprintln!("artifacts not built; run `make artifacts`");
+        return;
+    }
+    let dir = artifacts::artifacts_dir();
+    let cfg = ChipConfig::new();
+    let inputs = experiments::load_table1_inputs(&dir).unwrap();
+    let model = &inputs.mnist_model;
+
+    // with ping-pong: the coordinator path (output stays in the NMCU)
+    let mut chip = Chip::new(&cfg);
+    let pm = chip.program_model(model).unwrap();
+    let x0 = inputs.mnist_test.image_q(0);
+    chip.reset_stats();
+    chip.infer(&pm, &x0);
+    let with_pp = chip.stats();
+
+    // without ping-pong: read back + reload every intermediate activation
+    let mut chip2 = Chip::new(&cfg);
+    let pm2 = chip2.program_model(model).unwrap();
+    chip2.reset_stats();
+    let mut h = x0.clone();
+    for d in &pm2.descs {
+        chip2.nmcu.begin_inference(); // resets fetch to the input buffer
+        chip2.nmcu.load_input(&h); // bus: activation reload
+        chip2.nmcu.execute_layer(&mut chip2.eflash, d);
+        h = chip2.nmcu.read_output(d.n); // bus: activation readback
+    }
+    let without_pp = chip2.stats();
+
+    println!("\n=== A3: ping-pong buffer vs host round-trips (1 MNIST inference) ===\n");
+    let mut t = Table::new(&["path", "bus bytes", "eflash reads", "MACs", "bus energy [nJ]"]);
+    for (name, st) in [("with ping-pong (paper)", &with_pp), ("host round-trip", &without_pp)] {
+        t.row(&[
+            name.into(),
+            format!("{}", st.bus_bytes),
+            format!("{}", st.eflash_reads),
+            format!("{}", st.mac_ops),
+            format!("{:.2}", st.bus_bytes as f64 * cfg.power.bus_byte_pj / 1000.0),
+        ]);
+    }
+    t.print();
+    let saved = without_pp.bus_bytes - with_pp.bus_bytes;
+    println!(
+        "\nping-pong eliminates {} bus bytes/inference ({:.0}% of activation traffic);",
+        saved,
+        100.0 * saved as f64 / without_pp.bus_bytes as f64
+    );
+    println!("for deeper models (the 10-layer AE) the saving multiplies per layer.");
+
+    // deeper-model illustration with the AE run fully on-chip if it fit:
+    // count the traffic the 10-layer topology would generate
+    let dims = &inputs.ae_float.dims;
+    let mut io_bytes = dims[0].0 as u64; // first input
+    let mut roundtrip = dims[0].0 as u64;
+    for (_k, n) in dims.iter() {
+        roundtrip += 2 * *n as u64; // store + reload between layers
+    }
+    io_bytes += dims.last().unwrap().1 as u64;
+    println!(
+        "10-layer FC-AutoEncoder: {} bytes with ping-pong vs {} with round-trips ({}x)",
+        io_bytes,
+        roundtrip,
+        roundtrip / io_bytes
+    );
+}

@@ -1,0 +1,97 @@
+//! Bench F5 — regenerates every panel of Fig 5:
+//!  (a) the 4-bits/cell state-mapping table,
+//!  (b) the 16-state program-verify sequence (ISPP pulse/verify counts),
+//!  (c) the charge-pump VPP1-4 transient (levels + settle time),
+//!  (d) the WL-driver verify waveforms (proposed vs conventional),
+//! and times the underlying simulators.
+//!
+//!     cargo bench --bench fig5
+
+use nvmcu::analog::{ChargePump, DriverKind, PumpMode, WlDriver, WlOp};
+use nvmcu::config::ChipConfig;
+use nvmcu::coordinator::Chip;
+use nvmcu::eflash::mapping::StateMapping;
+use nvmcu::util::bench::{bench, Table};
+use std::time::Duration;
+
+fn main() {
+    let cfg = ChipConfig::new();
+
+    println!("=== Fig 5(a): state mapping (adjacent states differ by 1) ===\n");
+    print!("{}", StateMapping::AdjacentUnit.table());
+    println!(
+        "worst adjacent-state weight error: proposed {} LSB | two's-complement {} LSB | gray {} LSB\n",
+        StateMapping::AdjacentUnit.worst_adjacent_error(),
+        StateMapping::TwosComplement.worst_adjacent_error(),
+        StateMapping::Gray.worst_adjacent_error()
+    );
+
+    println!("=== Fig 5(b): program-verify sequence over the 15 verify levels ===\n");
+    let mut chip = Chip::new(&cfg);
+    let codes: Vec<i8> = (0..4096).map(|i| ((i % 16) as i8) - 8).collect();
+    let (_, rep) = chip.eflash.program_region(&codes).unwrap();
+    print!("{}", rep.sequence_trace());
+    println!(
+        "total: {} pulses, {} cells programmed, {} failed\n",
+        rep.total_pulses(),
+        rep.programmed_cells,
+        rep.failed_cells
+    );
+
+    println!("=== Fig 5(c): HV generator VPP1-4 transient ===\n");
+    let tr = ChargePump::simulate(&cfg.analog, PumpMode::Program, 150e-6, 50e-9);
+    let mut t = Table::new(&["node", "settled [V]", "paper"]);
+    for (k, paper) in [(0, "VPP1"), (1, "VPP2"), (2, "VPP3"), (3, "VPP4 ~10V")] {
+        t.row(&[format!("VPP{}", k + 1), format!("{:.2}", tr.settled_vpp(k)), paper.into()]);
+    }
+    t.print();
+    println!("settle time to 95%: {:.1} us", tr.settle_time() * 1e6);
+    let disch = ChargePump::simulate(&cfg.analog, PumpMode::Read, 20e-6, 50e-9);
+    println!(
+        "read mode: VPP4 discharges to {:.2} V (VDDH), VPS pinned to VDDH\n",
+        disch.vpp[3].last().unwrap()
+    );
+
+    println!("=== Fig 5(d): WL driver verify levels (PWL/WWL) ===\n");
+    let prop = WlDriver::new(&cfg.analog, DriverKind::OverstressFree);
+    let conv = WlDriver::new(&cfg.analog, DriverKind::Conventional);
+    let mut t = Table::new(&["VRD requested [V]", "proposed WL [V]", "conventional [7] WL [V]"]);
+    for (req, got) in prop.vrd_sweep(11) {
+        t.row(&[
+            format!("{req:.2}"),
+            format!("{got:.2}"),
+            format!("{:.2}", conv.deliverable_vrd(req)),
+        ]);
+    }
+    t.print();
+    println!(
+        "proposed driver full range: 0..{:.2} V | conventional ceiling: {:.2} V (Vth drop)",
+        prop.vrd_ceiling(),
+        conv.vrd_ceiling()
+    );
+    let trp = prop.transient(WlOp::Program, 0.0, 5e-6, 1e-9);
+    println!(
+        "program op: WL reaches {:.2} V with max per-device stress {:.2} V (< VDDH {})\n",
+        trp.wl.last().unwrap(),
+        trp.max_device_stress,
+        cfg.analog.vddh
+    );
+
+    println!("=== simulator timings ===");
+    let tgt = Duration::from_millis(300);
+    bench("charge pump step (50ns dt)", tgt, || {
+        let mut p = ChargePump::new(&cfg.analog);
+        p.mode = PumpMode::Program;
+        for _ in 0..100 {
+            std::hint::black_box(p.step(50e-9));
+        }
+    });
+    bench("WL driver verify transient (500 pts)", tgt, || {
+        std::hint::black_box(prop.transient(WlOp::ProgramVerify, 2.4, 100e-9, 0.2e-9));
+    });
+    let mut chip2 = Chip::new(&cfg);
+    bench("program-verify one 256-cell row (16 states)", tgt, || {
+        let codes: Vec<i8> = (0..256).map(|i| ((i % 16) as i8) - 8).collect();
+        std::hint::black_box(chip2.eflash.program_region(&codes).unwrap());
+    });
+}

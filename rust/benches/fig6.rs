@@ -1,0 +1,77 @@
+//! Bench F6 — regenerates Fig 6: the measured weight/state distributions
+//! of the programmed 4-bits/cell cells for (a) the MNIST model (34K
+//! cells) and (b) the AutoEncoder layer 9 (16K cells), before and after
+//! the unpowered 125 C bake, as Vt histograms + state occupancy.
+//!
+//!     cargo bench --bench fig6
+
+use nvmcu::artifacts;
+use nvmcu::config::ChipConfig;
+use nvmcu::coordinator::{experiments, Chip};
+use nvmcu::util::bench::Table;
+
+fn main() {
+    if !artifacts::artifacts_available() {
+        eprintln!("artifacts not built; run `make artifacts`");
+        return;
+    }
+    let dir = artifacts::artifacts_dir();
+    let cfg = ChipConfig::new();
+    let inputs = experiments::load_table1_inputs(&dir).unwrap();
+
+    for (title, model, bake_h) in [
+        ("Fig 6(a): MNIST weights", &inputs.mnist_model, 340.0),
+        ("Fig 6(b): AutoEncoder layer-9 weights", &inputs.ae_l9_model, 160.0),
+    ] {
+        println!("\n=== {title} ({} cells) ===", model.total_cells());
+        let mut chip = Chip::new(&cfg);
+        let pm = chip.program_model(model).unwrap();
+
+        // weight-code occupancy: the paper's point — trained weights
+        // concentrate near zero, so mid-ladder states dominate
+        let hists = experiments::fig6_histograms(&mut chip, &pm);
+        let mut occupancy = [0u64; 16];
+        for h in &hists {
+            for (s, c) in h.iter().enumerate() {
+                occupancy[s] += c;
+            }
+        }
+        let mut t = Table::new(&["state", "weight", "cells", "bar"]);
+        let max = *occupancy.iter().max().unwrap();
+        for s in 0..16 {
+            let w = nvmcu::eflash::mapping::StateMapping::AdjacentUnit.state_to_value(s as u8);
+            let bar = "#".repeat(((occupancy[s] as f64 / max as f64) * 40.0) as usize);
+            t.row(&[format!("S{s}"), format!("{w}"), format!("{}", occupancy[s]), bar]);
+        }
+        t.print();
+
+        println!("\nVt histogram before bake (layer-0 region):");
+        print!("{}", chip.eflash.vt_histogram(&pm.regions[0], 48).ascii(40));
+
+        chip.bake(bake_h, cfg.retention.bake_temp_c);
+        println!("\nVt histogram after {bake_h} h @125C (adjacent-state overlap appears):");
+        print!("{}", chip.eflash.vt_histogram(&pm.regions[0], 48).ascii(40));
+
+        let mut exact = 0u64;
+        let mut off1 = 0u64;
+        let mut worse = 0u64;
+        for (i, l) in model.layers.iter().enumerate() {
+            let decoded = chip.decoded_codes(&pm, i);
+            for (g, w) in decoded.iter().zip(&l.codes) {
+                match (*g as i32 - *w as i32).abs() {
+                    0 => exact += 1,
+                    1 => off1 += 1,
+                    _ => worse += 1,
+                }
+            }
+        }
+        let total = (exact + off1 + worse) as f64;
+        println!(
+            "\ndecode after bake: exact {:.2}% | +/-1 state {:.3}% | worse {:.4}% \
+             (the Fig 5a mapping bounds the damage to 1 LSB)",
+            100.0 * exact as f64 / total,
+            100.0 * off1 as f64 / total,
+            100.0 * worse as f64 / total
+        );
+    }
+}

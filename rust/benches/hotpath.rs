@@ -1,0 +1,112 @@
+//! Hot-path microbenchmarks — the §Perf baseline and regression guard:
+//! the 128-lane MAC, the EFLASH row read (cached + resampled), one NMCU
+//! layer, and the end-to-end inference. Run before and after every
+//! optimization (EXPERIMENTS.md §Perf records the history).
+//!
+//!     cargo bench --bench hotpath
+
+use nvmcu::config::ChipConfig;
+use nvmcu::coordinator::Chip;
+use nvmcu::eflash::read::ReadMode;
+use nvmcu::nmcu::pe::mac_lanes;
+use nvmcu::util::bench::bench;
+use nvmcu::util::rng::Rng;
+use std::time::Duration;
+
+fn main() {
+    let tgt = Duration::from_millis(500);
+    let mut r = Rng::new(3);
+
+    // ---- L3 kernel primitives -------------------------------------------
+    let x: Vec<i8> = (0..128).map(|_| (r.below(256) as i32 - 128) as i8).collect();
+    let w: Vec<i8> = (0..128).map(|_| (r.below(16) as i8) - 8).collect();
+    let t = bench("mac_lanes 128 (one PE-read)", tgt, || {
+        std::hint::black_box(mac_lanes(std::hint::black_box(&x), std::hint::black_box(&w)));
+    });
+    println!(
+        "  -> {:.2} GMAC/s per PE thread",
+        128.0 / t.per_iter_ns
+    );
+
+    // ---- EFLASH read path --------------------------------------------------
+    let cfg = ChipConfig::new();
+    let mut chip = Chip::new(&cfg);
+    let codes: Vec<i8> = (0..256 * 64).map(|_| (r.below(16) as i8) - 8).collect();
+    let (region, _) = chip.eflash.program_region(&codes).unwrap();
+    let mut buf = vec![0i8; 256];
+    bench("eflash read_row cached (256 cells)", tgt, || {
+        std::hint::black_box(chip.eflash.read_row(region.first_row, &mut buf));
+    });
+    chip.eflash.read_mode = ReadMode::Resample;
+    bench("eflash read_row resample (256 cells)", tgt, || {
+        std::hint::black_box(chip.eflash.read_row(region.first_row, &mut buf));
+    });
+    chip.eflash.read_mode = ReadMode::Cached;
+
+    // ---- one NMCU layer and a full inference --------------------------------
+    use nvmcu::artifacts::{QLayer, QModel};
+    use nvmcu::nmcu::Requant;
+    let layer = |k: usize, n: usize, r: &mut Rng| QLayer {
+        name: "l".into(),
+        k,
+        n,
+        relu: true,
+        codes: (0..k * n).map(|_| (r.below(16) as i8) - 8).collect(),
+        bias: (0..n).map(|_| (r.below(2000) as i32) - 1000).collect(),
+        requant: Requant { m0: 1_518_500_250, shift: 40, z_out: -3 },
+        z_in: -128,
+        s_in: 1.0,
+        s_w: 1.0,
+        s_out: 1.0,
+    };
+    let model = QModel {
+        name: "mnist-shaped".into(),
+        layers: vec![layer(784, 43, &mut r), layer(43, 10, &mut r)],
+    };
+    let mut chip = Chip::new(&cfg);
+    let pm = chip.program_model(&model).unwrap();
+    let x784: Vec<i8> = (0..784).map(|_| (r.below(256) as i32 - 128) as i8).collect();
+
+    let t1 = bench("NMCU layer 784x43 (154 reads)", tgt, || {
+        chip.nmcu.begin_inference();
+        chip.nmcu.load_input(&x784);
+        std::hint::black_box(chip.nmcu.execute_layer(&mut chip.eflash, &pm.descs[0]));
+    });
+    let t2 = bench("full MNIST-shaped inference (2 layers)", tgt, || {
+        std::hint::black_box(chip.infer(&pm, &x784));
+    });
+    println!(
+        "  -> layer: {:.2} us | inference: {:.2} us | {:.0} inferences/s | {:.2} GMAC/s effective",
+        t1.per_iter_ns / 1000.0,
+        t2.per_iter_ns / 1000.0,
+        1e9 / t2.per_iter_ns,
+        (784.0 * 43.0 + 43.0 * 10.0) / t2.per_iter_ns
+    );
+
+    // ---- software reference for comparison ----------------------------------
+    bench("rust integer reference (same model)", tgt, || {
+        std::hint::black_box(nvmcu::models::qmodel_forward(&model, &x784));
+    });
+
+    // ---- RV32I interpreter ---------------------------------------------------
+    use nvmcu::cpu::asm::*;
+    use nvmcu::soc::Mcu;
+    let mut mcu = Mcu::new(&cfg);
+    // tight loop: 1M iterations of add/bne
+    let prog = [
+        addi(1, 0, 0),
+        addi(2, 0, 2047),
+        addi(3, 0, 0), // loop:
+        addi(1, 1, 1),
+        bne(1, 2, -4),
+        addi(17, 0, 93),
+        addi(10, 0, 0),
+        ecall(),
+    ];
+    mcu.load_firmware(&prog);
+    let t = bench("RV32I interpreter (2047-iter loop)", tgt, || {
+        mcu.cpu = nvmcu::cpu::Cpu::new(nvmcu::soc::map::SRAM_BASE);
+        std::hint::black_box(mcu.run(10_000));
+    });
+    println!("  -> {:.0} MIPS", 2.0 * 2047.0 / (t.per_iter_ns / 1000.0));
+}

@@ -1,0 +1,85 @@
+//! Bench T1 — regenerates Table 1 (inference accuracy before/after bake
+//! vs SW baseline) and times the three inference paths:
+//! chip (NMCU+EFLASH sim), rust integer reference, and AOT-HLO via PJRT.
+//!
+//!     cargo bench --bench table1
+
+use nvmcu::artifacts;
+use nvmcu::config::ChipConfig;
+use nvmcu::coordinator::{experiments, Chip};
+use nvmcu::metrics;
+use nvmcu::util::bench::{bench, Table};
+use std::time::Duration;
+
+fn main() {
+    let dir = artifacts::artifacts_dir();
+    if !artifacts::artifacts_available() {
+        eprintln!("artifacts not built; run `make artifacts`");
+        return;
+    }
+    let cfg = ChipConfig::new();
+    let inputs = experiments::load_table1_inputs(&dir).unwrap();
+
+    // ---- the table itself ------------------------------------------------
+    let (mn, ae) = experiments::run_table1(&cfg, &inputs).unwrap();
+    println!("\n=== Table 1 (reproduction) ===\n");
+    let mut t = Table::new(&["Inference Accuracy", "MNIST", "AutoEncoder", "paper MNIST", "paper AE"]);
+    t.row(&["Before Bake".into(), format!("{:.2}%", 100.0 * mn.acc_before_bake),
+            format!("{:.3} AUC", ae.auc_before_bake), "95.67%".into(), "0.878".into()]);
+    t.row(&["After Bake".into(), format!("{:.2}%", 100.0 * mn.acc_after_bake),
+            format!("{:.3} AUC", ae.auc_after_bake), "95.58%".into(), "0.878".into()]);
+    t.row(&["SW. Baseline".into(), format!("{:.2}%", 100.0 * mn.acc_sw_baseline),
+            format!("{:.3} AUC", ae.auc_sw_baseline), "95.62%".into(), "0.878".into()]);
+    t.print();
+    println!(
+        "decode errors after 340h bake: exact {:.2}%, +/-1 {:.3}%, worse {:.4}%",
+        100.0 * mn.decode_after.exact_rate(),
+        100.0 * mn.decode_after.off_by_one as f64 / mn.decode_after.total as f64,
+        100.0 * mn.decode_after.worse as f64 / mn.decode_after.total as f64
+    );
+
+    // ---- timings -----------------------------------------------------------
+    println!("\n=== inference-path timings ===");
+    let mut chip = Chip::new(&cfg);
+    let pm = chip.program_model(&inputs.mnist_model).unwrap();
+    let x0 = inputs.mnist_test.image_q(0);
+    let tgt = Duration::from_millis(400);
+
+    let t_chip = bench("chip NMCU+EFLASH inference (1 img)", tgt, || {
+        std::hint::black_box(chip.infer(&pm, &x0));
+    });
+    let t_ref = bench("rust integer reference (1 img)", tgt, || {
+        std::hint::black_box(nvmcu::models::qmodel_forward(&inputs.mnist_model, &x0));
+    });
+
+    let rt = nvmcu::runtime::Runtime::cpu().unwrap();
+    let hlo1 = rt.load(&dir.join("mnist_mlp_b1.hlo.txt")).unwrap();
+    let t_hlo = bench("AOT HLO via PJRT b1 (1 img)", tgt, || {
+        std::hint::black_box(hlo1.run_i8(&x0, &[1, 784]).unwrap());
+    });
+    let hlo256 = rt.load(&dir.join("mnist_mlp_b256.hlo.txt")).unwrap();
+    let mut batch = vec![0i8; 256 * 784];
+    for j in 0..256.min(inputs.mnist_test.len()) {
+        batch[j * 784..(j + 1) * 784].copy_from_slice(&inputs.mnist_test.image_q(j));
+    }
+    let t_hlo256 = bench("AOT HLO via PJRT b256 (256 img)", tgt, || {
+        std::hint::black_box(hlo256.run_i8(&batch, &[256, 784]).unwrap());
+    });
+
+    println!("\nthroughput:");
+    println!("  chip sim      : {:>10.0} inf/s", t_chip.throughput(1.0));
+    println!("  rust reference: {:>10.0} inf/s", t_ref.throughput(1.0));
+    println!("  HLO b1        : {:>10.0} inf/s", t_hlo.throughput(1.0));
+    println!("  HLO b256      : {:>10.0} inf/s", t_hlo256.throughput(256.0));
+
+    // modeled on-chip latency/energy (the numbers a datasheet would quote)
+    chip.reset_stats();
+    chip.infer(&pm, &x0);
+    let st = chip.stats();
+    println!(
+        "\nmodeled on-chip: {:.1} us / inference @ {} MHz, {:.2} uJ",
+        metrics::nmcu_latency_s(&st, &cfg) * 1e6,
+        cfg.nmcu.clock_hz / 1e6,
+        metrics::nmcu_energy(&st, &cfg.power).total_uj()
+    );
+}

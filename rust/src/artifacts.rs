@@ -1,0 +1,230 @@
+//! Loaders for the build-time artifacts produced by `make artifacts`
+//! (python/compile/export.py documents the formats):
+//!
+//! - `<model>_weights.json/.bin` — quantized layers: int4 codes packed
+//!   two-per-byte in row-major (K,N) order (the EFLASH byte image) +
+//!   int32 bias + requant params,
+//! - `ae_float.json/.bin` — the float AutoEncoder layers + norm stats,
+//! - `mnist_test.bin` / `admos_test.bin` — test datasets,
+//! - `expected.json` — python-side metrics and golden vectors.
+
+use crate::nmcu::Requant;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One quantized linear layer as exported by python.
+#[derive(Clone, Debug)]
+pub struct QLayer {
+    pub name: String,
+    pub k: usize,
+    pub n: usize,
+    pub relu: bool,
+    /// int4 codes, row-major (K, N), one i8 per code in [-8, 7]
+    pub codes: Vec<i8>,
+    pub bias: Vec<i32>,
+    pub requant: Requant,
+    pub z_in: i8,
+    pub s_in: f64,
+    pub s_w: f64,
+    pub s_out: f64,
+}
+
+/// A quantized model (sequence of layers).
+#[derive(Clone, Debug)]
+pub struct QModel {
+    pub name: String,
+    pub layers: Vec<QLayer>,
+}
+
+impl QModel {
+    pub fn total_cells(&self) -> usize {
+        self.layers.iter().map(|l| l.k * l.n).sum()
+    }
+}
+
+/// Unpack int4 codes (two per byte, low nibble first) to i8 in [-8, 7].
+pub fn unpack_int4(packed: &[u8], count: usize) -> Vec<i8> {
+    let mut out = Vec::with_capacity(count);
+    for &b in packed {
+        let lo = (b & 0x0F) as i8;
+        let hi = ((b >> 4) & 0x0F) as i8;
+        out.push(if lo >= 8 { lo - 16 } else { lo });
+        if out.len() < count {
+            out.push(if hi >= 8 { hi - 16 } else { hi });
+        }
+        if out.len() >= count {
+            break;
+        }
+    }
+    out.truncate(count);
+    out
+}
+
+/// Pack i8 codes in [-8,7] two per byte (inverse of `unpack_int4`).
+pub fn pack_int4(codes: &[i8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(codes.len().div_ceil(2));
+    for pair in codes.chunks(2) {
+        let lo = (pair[0] as u8) & 0x0F;
+        let hi = if pair.len() > 1 { (pair[1] as u8) & 0x0F } else { 0 };
+        out.push(lo | (hi << 4));
+    }
+    out
+}
+
+pub fn load_qmodel(dir: &Path, base: &str) -> Result<QModel> {
+    let meta_path = dir.join(format!("{base}.json"));
+    let text = std::fs::read_to_string(&meta_path)
+        .with_context(|| format!("reading {meta_path:?} (run `make artifacts`?)"))?;
+    let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{meta_path:?}: {e}"))?;
+    let bin = std::fs::read(dir.join(j.str("bin")))
+        .with_context(|| format!("reading {}", j.str("bin")))?;
+    let mut layers = Vec::new();
+    for l in j.arr("layers") {
+        let k = l.i64("k") as usize;
+        let n = l.i64("n") as usize;
+        let w_off = l.i64("w_offset") as usize;
+        let w_bytes = l.i64("w_bytes") as usize;
+        let b_off = l.i64("b_offset") as usize;
+        if b_off + 4 * n > bin.len() {
+            bail!("layer {} bias out of range", l.str("name"));
+        }
+        let codes = unpack_int4(&bin[w_off..w_off + w_bytes], k * n);
+        let bias: Vec<i32> = (0..n)
+            .map(|i| {
+                i32::from_le_bytes(bin[b_off + 4 * i..b_off + 4 * i + 4].try_into().unwrap())
+            })
+            .collect();
+        layers.push(QLayer {
+            name: l.str("name").to_string(),
+            k,
+            n,
+            relu: l.bool("relu"),
+            codes,
+            bias,
+            requant: Requant {
+                m0: l.i64("m0") as i32,
+                shift: l.i64("shift") as u32,
+                z_out: l.i64("z_out") as i8,
+            },
+            z_in: l.i64("z_in") as i8,
+            s_in: l.f64("s_in"),
+            s_w: l.f64("s_w"),
+            s_out: l.f64("s_out"),
+        });
+    }
+    Ok(QModel { name: j.str("model").to_string(), layers })
+}
+
+/// The float FC-AutoEncoder (off-chip layers) + quantization boundary.
+#[derive(Clone, Debug)]
+pub struct AeFloat {
+    /// weights[i]: row-major (K_i, N_i)
+    pub weights: Vec<Vec<f32>>,
+    pub dims: Vec<(usize, usize)>,
+    pub biases: Vec<Vec<f32>>,
+    pub x_mean: Vec<f32>,
+    pub x_std: Vec<f32>,
+    pub l9_s_in: f64,
+    pub l9_z_in: i8,
+    pub l9_s_out: f64,
+    pub l9_z_out: i8,
+    /// 1-indexed on-chip layer (paper Fig 7: the 9th)
+    pub onchip_layer: usize,
+}
+
+pub fn load_ae_float(dir: &Path) -> Result<AeFloat> {
+    let text = std::fs::read_to_string(dir.join("ae_float.json"))
+        .context("reading ae_float.json (run `make artifacts`?)")?;
+    let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("ae_float.json: {e}"))?;
+    let bin = std::fs::read(dir.join(j.str("bin")))?;
+    let f32s = |off: usize, n: usize| -> Vec<f32> {
+        (0..n)
+            .map(|i| f32::from_le_bytes(bin[off + 4 * i..off + 4 * i + 4].try_into().unwrap()))
+            .collect()
+    };
+    let mut weights = Vec::new();
+    let mut biases = Vec::new();
+    let mut dims = Vec::new();
+    for l in j.arr("layers") {
+        let k = l.i64("k") as usize;
+        let n = l.i64("n") as usize;
+        weights.push(f32s(l.i64("w_offset") as usize, k * n));
+        biases.push(f32s(l.i64("b_offset") as usize, n));
+        dims.push((k, n));
+    }
+    let dim = j.i64("dim") as usize;
+    Ok(AeFloat {
+        weights,
+        biases,
+        dims,
+        x_mean: f32s(j.i64("mean_offset") as usize, dim),
+        x_std: f32s(j.i64("std_offset") as usize, dim),
+        l9_s_in: j.f64("l9_s_in"),
+        l9_z_in: j.i64("l9_z_in") as i8,
+        l9_s_out: j.f64("l9_s_out"),
+        l9_z_out: j.i64("l9_z_out") as i8,
+        onchip_layer: j.i64("onchip_layer") as usize,
+    })
+}
+
+/// expected.json, parsed lazily by the callers that need golden vectors.
+pub fn load_expected(dir: &Path) -> Result<Json> {
+    let text = std::fs::read_to_string(dir.join("expected.json"))
+        .context("reading expected.json (run `make artifacts`?)")?;
+    Json::parse(&text).map_err(|e| anyhow::anyhow!("expected.json: {e}"))
+}
+
+/// Locate the artifacts directory: $NVMCU_ARTIFACTS or ./artifacts
+/// relative to the crate root / cwd.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("NVMCU_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    for candidate in ["artifacts", "../artifacts", "../../artifacts"] {
+        let p = PathBuf::from(candidate);
+        if p.join("expected.json").exists() {
+            return p;
+        }
+    }
+    PathBuf::from("artifacts")
+}
+
+/// True if `make artifacts` outputs are present.
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("expected.json").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn int4_pack_unpack_roundtrip() {
+        let codes: Vec<i8> = (-8..8).chain(-8..8).collect();
+        let packed = pack_int4(&codes);
+        assert_eq!(packed.len(), 16);
+        assert_eq!(unpack_int4(&packed, 32), codes);
+        // odd count
+        let odd = vec![-8i8, 7, 3];
+        assert_eq!(unpack_int4(&pack_int4(&odd), 3), odd);
+    }
+
+    #[test]
+    fn unpack_matches_python_nibble_order() {
+        // python pack_int4: low nibble first. byte 0x7F -> [-1, 7]
+        assert_eq!(unpack_int4(&[0x7F], 2), vec![-1, 7]);
+        // byte 0x08 -> [-8, 0]
+        assert_eq!(unpack_int4(&[0x08], 2), vec![-8, 0]);
+    }
+
+    #[test]
+    fn qmodel_loader_errors_without_artifacts() {
+        let r = load_qmodel(Path::new("/nonexistent"), "mnist_weights");
+        assert!(r.is_err());
+        assert!(format!("{:#}", r.unwrap_err()).contains("make artifacts"));
+    }
+
+    // full loader round-trips are exercised by rust/tests/test_bitexact.rs
+    // once artifacts exist
+}

@@ -1,0 +1,372 @@
+//! Chip configuration — every physical and architectural parameter of the
+//! simulated microcontroller in one place, with the paper's values as
+//! defaults (28 nm low-power logic, VDD=1.0 V core / VDDH=2.5 V I/O,
+//! VPGM≈10 V from the 6-stage doubler, 4 Mb 4-bits/cell EFLASH macro,
+//! 2 PEs per macro, 256 weights per read).
+//!
+//! Configs load/merge from a JSON file (`--config chip.json`) and from
+//! `--set section.key=value` CLI overrides, so experiments and ablations
+//! are driven by data, not recompilation.
+
+use crate::util::json::Json;
+
+/// EFLASH macro geometry + cell physics.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EflashConfig {
+    /// total weight-memory capacity in bits (paper: 4 Mb)
+    pub capacity_bits: usize,
+    /// bits stored per cell (paper: 4 -> 16 states)
+    pub bits_per_cell: u32,
+    /// cells delivered by one read operation (paper: 256 weights/read)
+    pub cells_per_read: usize,
+    /// number of banks the macro is split into
+    pub banks: usize,
+    /// erased-state threshold voltage mean [V]
+    pub vt_erased_mean: f64,
+    /// erased-state Vt sigma [V] (process variation)
+    pub vt_erased_sigma: f64,
+    /// ISPP: nominal Vt gain per program pulse [V]
+    pub ispp_step: f64,
+    /// per-cell program efficiency sigma (multiplies ispp_step)
+    pub ispp_efficiency_sigma: f64,
+    /// per-pulse Vt noise sigma [V]
+    pub ispp_noise_sigma: f64,
+    /// maximum program pulses per cell before marking it failed
+    pub max_pulses: u32,
+    /// sense-amplifier read noise sigma [V]
+    pub read_noise_sigma: f64,
+    /// verify ladder low end [V] (first programmed state verify level)
+    pub verify_lo: f64,
+    /// verify ladder high end [V] — reachable only with the proposed
+    /// overstress-free WL driver (= VDDH); the conventional driver tops
+    /// out at VDDH - VTH_NMOS (ablation A2)
+    pub verify_hi: f64,
+}
+
+impl Default for EflashConfig {
+    fn default() -> Self {
+        EflashConfig {
+            capacity_bits: 4 * 1024 * 1024,
+            bits_per_cell: 4,
+            cells_per_read: 256,
+            banks: 8,
+            vt_erased_mean: 0.80,
+            vt_erased_sigma: 0.045,
+            ispp_step: 0.025,
+            ispp_efficiency_sigma: 0.10,
+            ispp_noise_sigma: 0.006,
+            max_pulses: 512,
+            read_noise_sigma: 0.006,
+            verify_lo: 1.05,
+            verify_hi: 2.45,
+        }
+    }
+}
+
+impl EflashConfig {
+    pub fn n_states(&self) -> usize {
+        1usize << self.bits_per_cell
+    }
+
+    pub fn n_cells(&self) -> usize {
+        self.capacity_bits / self.bits_per_cell as usize
+    }
+
+    pub fn rows(&self) -> usize {
+        self.n_cells() / self.cells_per_read
+    }
+}
+
+/// Standard-logic HV generator (Fig 3) behavioral parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AnalogConfig {
+    /// I/O supply voltage [V] (paper: 2.5 V)
+    pub vddh: f64,
+    /// target program/erase voltage [V] (paper: ~10 V)
+    pub vpgm: f64,
+    /// number of voltage-doubler stages (paper: 6)
+    pub pump_stages: usize,
+    /// per-stage voltage transfer efficiency (<1 from parasitics)
+    pub pump_stage_efficiency: f64,
+    /// pump clock frequency [Hz]
+    pub pump_clock_hz: f64,
+    /// flying capacitor per stage [F]
+    pub pump_cap_f: f64,
+    /// load capacitance at each VPP node [F]
+    pub pump_load_cap_f: f64,
+    /// static load current during programming [A]
+    pub pump_load_current_a: f64,
+    /// regulation reference for VPP1 (SREF comparator) [V]
+    pub pump_sref: f64,
+    /// NMOS threshold voltage (the drop the proposed WL driver removes) [V]
+    pub vth_nmos: f64,
+    /// PMOS threshold voltage magnitude [V]
+    pub vth_pmos: f64,
+    /// WL parasitic R [ohm] and C [F] for the RC waveforms
+    pub wl_r_ohm: f64,
+    pub wl_c_f: f64,
+}
+
+impl Default for AnalogConfig {
+    fn default() -> Self {
+        AnalogConfig {
+            vddh: 2.5,
+            vpgm: 10.0,
+            pump_stages: 6,
+            pump_stage_efficiency: 0.92,
+            pump_clock_hz: 20.0e6,
+            pump_cap_f: 2.0e-12,
+            pump_load_cap_f: 10.0e-12,
+            pump_load_current_a: 12.0e-6,
+            pump_sref: 2.3,
+            vth_nmos: 0.45,
+            vth_pmos: 0.42,
+            wl_r_ohm: 4.0e3,
+            wl_c_f: 1.2e-12,
+        }
+    }
+}
+
+/// Retention / unpowered-bake model (Arrhenius-accelerated charge loss).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RetentionConfig {
+    /// fractional charge loss amplitude at the reference condition
+    pub loss_amplitude: f64,
+    /// stretched-exponential exponent beta
+    pub beta: f64,
+    /// characteristic time at the bake temperature [hours]
+    pub tau_hours_at_bake: f64,
+    /// bake temperature the tau above refers to [C]
+    pub bake_temp_c: f64,
+    /// activation energy [eV] for Arrhenius scaling to other temps
+    pub activation_energy_ev: f64,
+    /// per-cell lognormal sigma of the loss amplitude
+    pub cell_sigma: f64,
+    /// fraction of cells with fast charge-loss tails (defect population)
+    pub fast_tail_fraction: f64,
+    /// multiplier on loss for the fast-tail population
+    pub fast_tail_multiplier: f64,
+}
+
+impl Default for RetentionConfig {
+    fn default() -> Self {
+        RetentionConfig {
+            loss_amplitude: 0.023,
+            beta: 0.42,
+            tau_hours_at_bake: 900.0,
+            bake_temp_c: 125.0,
+            activation_energy_ev: 1.1,
+            cell_sigma: 0.38,
+            fast_tail_fraction: 0.004,
+            fast_tail_multiplier: 4.0,
+        }
+    }
+}
+
+/// NMCU microarchitecture.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NmcuConfig {
+    /// processing elements per EFLASH macro (paper: 2)
+    pub pes_per_macro: usize,
+    /// MAC lanes per PE (paper: 128 elements per read)
+    pub lanes_per_pe: usize,
+    /// ping-pong buffer capacity in int8 elements (per half)
+    pub pingpong_capacity: usize,
+    /// input buffer capacity in int8 elements
+    pub input_capacity: usize,
+    /// NMCU clock [Hz] for the cycle model
+    pub clock_hz: f64,
+    /// EFLASH read latency in NMCU cycles
+    pub read_latency_cycles: u64,
+    /// cycles per 128-lane MAC (pipelined: 1)
+    pub mac_cycles: u64,
+    /// cycles for the requantize + write-back step per output
+    pub writeback_cycles: u64,
+}
+
+impl Default for NmcuConfig {
+    fn default() -> Self {
+        NmcuConfig {
+            pes_per_macro: 2,
+            lanes_per_pe: 128,
+            pingpong_capacity: 1024,
+            input_capacity: 1024,
+            clock_hz: 100.0e6,
+            read_latency_cycles: 4,
+            mac_cycles: 1,
+            writeback_cycles: 2,
+        }
+    }
+}
+
+/// Energy / standby-power model constants (28 nm LP estimates; these feed
+/// Table 2's qualitative rows and the ablation energy accounting).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PowerConfig {
+    /// energy per 8b x 4b MAC [pJ]
+    pub mac_pj: f64,
+    /// energy per EFLASH row read (256 cells) [pJ]
+    pub eflash_read_pj: f64,
+    /// energy per byte moved over the system bus [pJ]
+    pub bus_byte_pj: f64,
+    /// energy per SRAM byte access [pJ]
+    pub sram_byte_pj: f64,
+    /// SRAM retention leakage [uW per KB] when NOT power gated
+    pub sram_leak_uw_per_kb: f64,
+    /// EFLASH standby power [uW] (zero-standby claim)
+    pub eflash_standby_uw: f64,
+    /// core logic leakage when powered [uW]
+    pub logic_leak_uw: f64,
+    /// charge-pump efficiency (input power / delivered power)
+    pub pump_efficiency: f64,
+}
+
+impl Default for PowerConfig {
+    fn default() -> Self {
+        PowerConfig {
+            mac_pj: 0.08,
+            eflash_read_pj: 18.0,
+            bus_byte_pj: 1.2,
+            sram_byte_pj: 0.35,
+            sram_leak_uw_per_kb: 0.9,
+            eflash_standby_uw: 0.0,
+            logic_leak_uw: 14.0,
+            pump_efficiency: 0.30,
+        }
+    }
+}
+
+/// Top-level chip configuration.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ChipConfig {
+    pub eflash: EflashConfig,
+    pub analog: AnalogConfig,
+    pub retention: RetentionConfig,
+    pub nmcu: NmcuConfig,
+    pub power: PowerConfig,
+    /// master RNG seed for all Monte-Carlo device models
+    pub seed: u64,
+}
+
+impl ChipConfig {
+    pub fn new() -> Self {
+        ChipConfig { seed: 0x5EED_CAFE, ..Default::default() }
+    }
+
+    /// Apply a `section.key=value` override (CLI `--set`).
+    pub fn set(&mut self, key: &str, value: &str) -> Result<(), String> {
+        let parse_f =
+            |v: &str| v.parse::<f64>().map_err(|_| format!("bad float for {key}: {v}"));
+        let parse_u =
+            |v: &str| v.parse::<usize>().map_err(|_| format!("bad int for {key}: {v}"));
+        match key {
+            "seed" => self.seed = value.parse().map_err(|_| "bad seed".to_string())?,
+            "eflash.bits_per_cell" => self.eflash.bits_per_cell = parse_u(value)? as u32,
+            "eflash.capacity_bits" => self.eflash.capacity_bits = parse_u(value)?,
+            "eflash.cells_per_read" => self.eflash.cells_per_read = parse_u(value)?,
+            "eflash.banks" => self.eflash.banks = parse_u(value)?,
+            "eflash.vt_erased_mean" => self.eflash.vt_erased_mean = parse_f(value)?,
+            "eflash.vt_erased_sigma" => self.eflash.vt_erased_sigma = parse_f(value)?,
+            "eflash.ispp_step" => self.eflash.ispp_step = parse_f(value)?,
+            "eflash.ispp_efficiency_sigma" => {
+                self.eflash.ispp_efficiency_sigma = parse_f(value)?
+            }
+            "eflash.ispp_noise_sigma" => self.eflash.ispp_noise_sigma = parse_f(value)?,
+            "eflash.max_pulses" => self.eflash.max_pulses = parse_u(value)? as u32,
+            "eflash.read_noise_sigma" => self.eflash.read_noise_sigma = parse_f(value)?,
+            "eflash.verify_lo" => self.eflash.verify_lo = parse_f(value)?,
+            "eflash.verify_hi" => self.eflash.verify_hi = parse_f(value)?,
+            "analog.vddh" => self.analog.vddh = parse_f(value)?,
+            "analog.vpgm" => self.analog.vpgm = parse_f(value)?,
+            "analog.pump_stages" => self.analog.pump_stages = parse_u(value)?,
+            "analog.vth_nmos" => self.analog.vth_nmos = parse_f(value)?,
+            "retention.loss_amplitude" => self.retention.loss_amplitude = parse_f(value)?,
+            "retention.beta" => self.retention.beta = parse_f(value)?,
+            "retention.tau_hours_at_bake" => {
+                self.retention.tau_hours_at_bake = parse_f(value)?
+            }
+            "retention.cell_sigma" => self.retention.cell_sigma = parse_f(value)?,
+            "retention.fast_tail_fraction" => {
+                self.retention.fast_tail_fraction = parse_f(value)?
+            }
+            "nmcu.pes_per_macro" => self.nmcu.pes_per_macro = parse_u(value)?,
+            "nmcu.lanes_per_pe" => self.nmcu.lanes_per_pe = parse_u(value)?,
+            "nmcu.clock_hz" => self.nmcu.clock_hz = parse_f(value)?,
+            _ => return Err(format!("unknown config key `{key}`")),
+        }
+        Ok(())
+    }
+
+    /// Merge overrides from a JSON object {"section.key": value, ...}.
+    pub fn merge_json(&mut self, j: &Json) -> Result<(), String> {
+        if let Json::Obj(m) = j {
+            for (k, v) in m {
+                let s = match v {
+                    Json::Int(i) => i.to_string(),
+                    Json::Num(f) => f.to_string(),
+                    Json::Str(s) => s.clone(),
+                    _ => return Err(format!("config key {k}: unsupported value")),
+                };
+                self.set(k, &s)?;
+            }
+            Ok(())
+        } else {
+            Err("config file must be a JSON object".into())
+        }
+    }
+
+    pub fn load_file(&mut self, path: &str) -> Result<(), String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        let j = Json::parse(&text).map_err(|e| e.to_string())?;
+        self.merge_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = ChipConfig::new();
+        assert_eq!(c.eflash.capacity_bits, 4 * 1024 * 1024); // 4 Mb
+        assert_eq!(c.eflash.bits_per_cell, 4); // 4 bits/cell
+        assert_eq!(c.eflash.n_states(), 16); // 16 states
+        assert_eq!(c.eflash.cells_per_read, 256); // 256 weights/read
+        assert_eq!(c.analog.vddh, 2.5); // VDDH
+        assert_eq!(c.analog.vpgm, 10.0); // VPP4 target
+        assert_eq!(c.analog.pump_stages, 6); // six-stage doubler
+        assert_eq!(c.nmcu.pes_per_macro, 2); // 2 PEs
+        assert_eq!(c.nmcu.lanes_per_pe, 128); // 128 MACs/read
+        assert_eq!(c.power.eflash_standby_uw, 0.0); // zero-standby claim
+    }
+
+    #[test]
+    fn geometry_derived() {
+        let c = EflashConfig::default();
+        assert_eq!(c.n_cells(), 1_048_576);
+        assert_eq!(c.rows(), 4096);
+    }
+
+    #[test]
+    fn set_overrides() {
+        let mut c = ChipConfig::new();
+        c.set("eflash.bits_per_cell", "1").unwrap();
+        c.set("retention.beta", "0.5").unwrap();
+        c.set("seed", "99").unwrap();
+        assert_eq!(c.eflash.bits_per_cell, 1);
+        assert_eq!(c.retention.beta, 0.5);
+        assert_eq!(c.seed, 99);
+        assert!(c.set("bogus.key", "1").is_err());
+        assert!(c.set("eflash.ispp_step", "not-a-number").is_err());
+    }
+
+    #[test]
+    fn merge_json_config() {
+        let mut c = ChipConfig::new();
+        let j = Json::parse(r#"{"eflash.read_noise_sigma": 0.01, "analog.vddh": 2.4}"#).unwrap();
+        c.merge_json(&j).unwrap();
+        assert_eq!(c.eflash.read_noise_sigma, 0.01);
+        assert_eq!(c.analog.vddh, 2.4);
+    }
+}

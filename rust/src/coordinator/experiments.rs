@@ -1,0 +1,272 @@
+//! Experiment drivers reproducing the paper's evaluation (§3): Table 1
+//! (inference accuracy before/after bake vs SW baseline), Fig 6 (state
+//! occupancy histograms), and the supporting decode-error sweeps used by
+//! the ablation benches. Each driver returns a plain struct the benches
+//! and examples format.
+
+use super::{Chip, ProgrammedModel};
+use crate::artifacts::{self, AeFloat, QModel};
+use crate::config::ChipConfig;
+use crate::datasets::{AdmosTest, MnistTest};
+use crate::eflash::DecodeErrors;
+use crate::models;
+use crate::util::stats;
+use anyhow::Result;
+use std::path::Path;
+
+/// Table 1, MNIST column.
+#[derive(Clone, Debug)]
+pub struct MnistResult {
+    pub n_test: usize,
+    pub acc_sw_baseline: f64,
+    pub acc_before_bake: f64,
+    pub acc_after_bake: f64,
+    pub bake_hours: f64,
+    pub decode_before: DecodeErrors,
+    pub decode_after: DecodeErrors,
+}
+
+/// Run the full MNIST experiment on a chip (programs the model, measures
+/// before-bake accuracy, bakes, measures again). The SW baseline is the
+/// pure-integer reference path — bit-identical to the AOT HLO graph
+/// (cross-checked by `rust/tests/test_runtime.rs`).
+pub fn run_mnist(
+    chip: &mut Chip,
+    model: &QModel,
+    test: &MnistTest,
+    bake_hours: f64,
+) -> Result<MnistResult> {
+    let pm = chip.program_model(model)?;
+    let acc_sw = mnist_accuracy_sw(model, test);
+    let acc_before = mnist_accuracy_chip(chip, &pm, test);
+    let decode_before = decode_errors_all(chip, &pm, model);
+    chip.bake(bake_hours, chip.cfg.retention.bake_temp_c);
+    let acc_after = mnist_accuracy_chip(chip, &pm, test);
+    let decode_after = decode_errors_all(chip, &pm, model);
+    Ok(MnistResult {
+        n_test: test.len(),
+        acc_sw_baseline: acc_sw,
+        acc_before_bake: acc_before,
+        acc_after_bake: acc_after,
+        bake_hours,
+        decode_before,
+        decode_after,
+    })
+}
+
+pub fn mnist_accuracy_sw(model: &QModel, test: &MnistTest) -> f64 {
+    let mut correct = 0usize;
+    for i in 0..test.len() {
+        let logits = models::qmodel_forward(model, &test.image_q(i));
+        if models::argmax_i8(&logits) == test.labels[i] as usize {
+            correct += 1;
+        }
+    }
+    correct as f64 / test.len() as f64
+}
+
+pub fn mnist_accuracy_chip(chip: &mut Chip, pm: &ProgrammedModel, test: &MnistTest) -> f64 {
+    let mut correct = 0usize;
+    for i in 0..test.len() {
+        let logits = chip.infer(pm, &test.image_q(i));
+        if models::argmax_i8(&logits) == test.labels[i] as usize {
+            correct += 1;
+        }
+    }
+    correct as f64 / test.len() as f64
+}
+
+fn decode_errors_all(chip: &mut Chip, pm: &ProgrammedModel, model: &QModel) -> DecodeErrors {
+    let mut total = DecodeErrors::default();
+    for i in 0..model.layers.len() {
+        let decoded = chip.decoded_codes(pm, i);
+        let want = &model.layers[i].codes;
+        for (g, w) in decoded.iter().zip(want) {
+            let d = (*g as i32 - *w as i32).abs();
+            total.total += 1;
+            total.sum_abs_lsb += d as u64;
+            match d {
+                0 => total.exact += 1,
+                1 => total.off_by_one += 1,
+                _ => total.worse += 1,
+            }
+        }
+    }
+    total
+}
+
+/// Table 1, AutoEncoder column (Fig 7 split: layer 9 on-chip).
+#[derive(Clone, Debug)]
+pub struct AeResult {
+    pub n_test: usize,
+    pub auc_sw_baseline: f64,
+    pub auc_before_bake: f64,
+    pub auc_after_bake: f64,
+    pub bake_hours: f64,
+}
+
+pub fn run_autoencoder(
+    chip: &mut Chip,
+    ae: &AeFloat,
+    l9_model: &QModel,
+    test: &AdmosTest,
+    bake_hours: f64,
+) -> Result<AeResult> {
+    let pm = chip.program_model(l9_model)?;
+    let desc = pm.descs[0].clone();
+    let l9 = &l9_model.layers[0];
+
+    // SW baseline: layer 9 through the integer reference path
+    let auc_sw = ae_auc(ae, test, |xq| {
+        crate::nmcu::reference_mvm(xq, &l9.codes, l9.k, l9.n, &l9.bias, l9.requant, l9.relu)
+    });
+    let auc_before = ae_auc(ae, test, |xq| chip.infer_layer(&desc, xq));
+    chip.bake(bake_hours, chip.cfg.retention.bake_temp_c);
+    let auc_after = ae_auc(ae, test, |xq| chip.infer_layer(&desc, xq));
+    Ok(AeResult {
+        n_test: test.len(),
+        auc_sw_baseline: auc_sw,
+        auc_before_bake: auc_before,
+        auc_after_bake: auc_after,
+        bake_hours,
+    })
+}
+
+/// AUC of the anomaly detector with a pluggable layer-9 executor.
+pub fn ae_auc(ae: &AeFloat, test: &AdmosTest, mut l9: impl FnMut(&[i8]) -> Vec<i8>) -> f64 {
+    let mut scores = Vec::with_capacity(test.len());
+    let mut labels = Vec::with_capacity(test.len());
+    for i in 0..test.len() {
+        let x = test.feat(i);
+        let (_, score) = models::ae_forward_split(ae, &mut l9, x);
+        scores.push(score);
+        labels.push(test.labels[i] == 1);
+    }
+    stats::auc(&scores, &labels)
+}
+
+/// Fig 6: state-occupancy histogram of a programmed model region.
+pub fn fig6_histograms(chip: &mut Chip, pm: &ProgrammedModel) -> Vec<[u64; 16]> {
+    pm.regions.iter().map(|r| chip.eflash.state_histogram(r)).collect()
+}
+
+/// Load all artifacts needed by Table 1 in one call.
+pub struct Table1Inputs {
+    pub mnist_model: QModel,
+    pub ae_l9_model: QModel,
+    pub ae_float: AeFloat,
+    pub mnist_test: MnistTest,
+    pub admos_test: AdmosTest,
+}
+
+pub fn load_table1_inputs(dir: &Path) -> Result<Table1Inputs> {
+    Ok(Table1Inputs {
+        mnist_model: artifacts::load_qmodel(dir, "mnist_weights")?,
+        ae_l9_model: artifacts::load_qmodel(dir, "ae_l9_weights")?,
+        ae_float: artifacts::load_ae_float(dir)?,
+        mnist_test: crate::datasets::load_mnist(dir)?,
+        admos_test: crate::datasets::load_admos(dir)?,
+    })
+}
+
+/// Full Table 1 as the paper prints it (both workloads, chip + bake).
+pub fn run_table1(cfg: &ChipConfig, inputs: &Table1Inputs) -> Result<(MnistResult, AeResult)> {
+    // the paper baked the MNIST chip 340 h and the AE chip 160 h
+    let mut chip_m = Chip::new(cfg);
+    let mnist = run_mnist(&mut chip_m, &inputs.mnist_model, &inputs.mnist_test, 340.0)?;
+    let mut chip_a = Chip::new(cfg);
+    let ae = run_autoencoder(
+        &mut chip_a,
+        &inputs.ae_float,
+        &inputs.ae_l9_model,
+        &inputs.admos_test,
+        160.0,
+    )?;
+    Ok((mnist, ae))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::artifacts::QLayer;
+    use crate::nmcu::Requant;
+    use crate::util::rng::Rng;
+
+    /// Synthetic MNIST-shaped inputs: a random linear-separable-ish task
+    /// exercising the full pipeline without artifacts.
+    fn synth_mnist_like() -> (QModel, MnistTest) {
+        let mut r = Rng::new(42);
+        let (k, h, c) = (784usize, 16usize, 10usize);
+        let l1 = QLayer {
+            name: "fc1".into(),
+            k,
+            n: h,
+            relu: true,
+            codes: (0..k * h).map(|_| (r.below(16) as i8) - 8).collect(),
+            bias: vec![0; h],
+            requant: Requant { m0: 1_518_500_250, shift: 43, z_out: -128 },
+            z_in: -128,
+            s_in: 1.0 / 255.0,
+            s_w: 0.05,
+            s_out: 0.1,
+        };
+        let l2 = QLayer {
+            name: "fc2".into(),
+            k: h,
+            n: c,
+            relu: false,
+            codes: (0..h * c).map(|_| (r.below(16) as i8) - 8).collect(),
+            bias: vec![0; c],
+            requant: Requant { m0: 1_518_500_250, shift: 38, z_out: 0 },
+            z_in: -128,
+            s_in: 0.1,
+            s_w: 0.05,
+            s_out: 0.5,
+        };
+        let model = QModel { name: "synth".into(), layers: vec![l1, l2] };
+        // labels = argmax of the reference model on random images (so the
+        // "SW baseline accuracy" is 1.0 by construction)
+        let n_test = 40;
+        let mut images = Vec::with_capacity(n_test * 784);
+        let mut labels = Vec::with_capacity(n_test);
+        for _ in 0..n_test {
+            let img: Vec<u8> = (0..784).map(|_| r.below(256) as u8).collect();
+            let xq: Vec<i8> = img.iter().map(|&p| (p as i32 - 128) as i8).collect();
+            let logits = models::qmodel_forward(&model, &xq);
+            labels.push(models::argmax_i8(&logits) as u8);
+            images.extend(img);
+        }
+        (model, MnistTest { images, labels })
+    }
+
+    #[test]
+    fn table1_mnist_pipeline_on_synthetic_model() {
+        let mut cfg = ChipConfig::new();
+        cfg.eflash.capacity_bits = 1024 * 1024;
+        let mut chip = Chip::new(&cfg);
+        let (model, test) = synth_mnist_like();
+        let res = run_mnist(&mut chip, &model, &test, 160.0).unwrap();
+        // SW baseline is perfect by construction; chip-before-bake is
+        // bit-identical to SW (program-verify leaves no decode errors)
+        assert_eq!(res.acc_sw_baseline, 1.0);
+        assert_eq!(res.acc_before_bake, 1.0);
+        assert_eq!(res.decode_before.exact, res.decode_before.total);
+        // after bake: most cells still exact, accuracy stays high
+        assert!(res.decode_after.exact_rate() > 0.85);
+        assert!(res.acc_after_bake > 0.8, "acc after bake {}", res.acc_after_bake);
+    }
+
+    #[test]
+    fn fig6_histogram_covers_all_cells() {
+        let mut cfg = ChipConfig::new();
+        cfg.eflash.capacity_bits = 1024 * 1024;
+        let mut chip = Chip::new(&cfg);
+        let (model, _) = synth_mnist_like();
+        let pm = chip.program_model(&model).unwrap();
+        let hists = fig6_histograms(&mut chip, &pm);
+        assert_eq!(hists.len(), 2);
+        // the histogram counts padded cells too (erased state): total is
+        // the row image size, >= the logical code count
+        assert!(hists[0].iter().sum::<u64>() >= (784 * 16) as u64);
+    }
+}

@@ -1,0 +1,254 @@
+//! Inference coordinator: programs model artifacts into the EFLASH weight
+//! memory, schedules NMCU layers (fully-on-chip MNIST; the Fig 7
+//! on-chip/off-chip split for the AutoEncoder) and drives the paper's
+//! experiments (Table 1, Fig 5, Fig 6).
+
+pub mod experiments;
+
+use crate::artifacts::QModel;
+use crate::config::ChipConfig;
+use crate::eflash::program::ProgramReport;
+use crate::eflash::{EflashMacro, Region};
+use crate::nmcu::{layout_codes, LayerDesc, Nmcu, NmcuStats};
+use anyhow::{bail, Result};
+
+/// A model programmed into the weight memory.
+#[derive(Clone, Debug)]
+pub struct ProgrammedModel {
+    pub name: String,
+    pub descs: Vec<LayerDesc>,
+    pub regions: Vec<Region>,
+    pub reports: Vec<ProgramReport>,
+    /// the original artifact codes per layer (for decode-error analyses)
+    pub layer_codes: Vec<Vec<i8>>,
+    /// the EFLASH row-image codes per layer (what was actually programmed)
+    pub layer_images: Vec<Vec<i8>>,
+}
+
+impl ProgrammedModel {
+    pub fn total_pulses(&self) -> u64 {
+        self.reports.iter().map(|r| r.total_pulses()).sum()
+    }
+
+    pub fn total_cells(&self) -> usize {
+        self.regions.iter().map(|r| r.n_codes).sum()
+    }
+}
+
+/// The chip: EFLASH weight memory + NMCU, with a high-level inference API.
+/// (The firmware-level path through the RV32I core lives in `soc::Mcu`;
+/// this facade drives the same hardware models directly, which is what
+/// the throughput experiments use.)
+pub struct Chip {
+    pub cfg: ChipConfig,
+    pub eflash: EflashMacro,
+    pub nmcu: Nmcu,
+}
+
+impl Chip {
+    pub fn new(cfg: &ChipConfig) -> Self {
+        Chip {
+            cfg: cfg.clone(),
+            eflash: EflashMacro::new(cfg),
+            nmcu: Nmcu::new(&cfg.nmcu),
+        }
+    }
+
+    /// Fabricate with a VRD ceiling (conventional WL driver ablation).
+    pub fn with_vrd_limit(cfg: &ChipConfig, vrd_max: f64) -> Self {
+        Chip {
+            cfg: cfg.clone(),
+            eflash: EflashMacro::with_vrd_limit(cfg, vrd_max),
+            nmcu: Nmcu::new(&cfg.nmcu),
+        }
+    }
+
+    /// Program a quantized model into the EFLASH with full program-verify.
+    pub fn program_model(&mut self, model: &QModel) -> Result<ProgrammedModel> {
+        let lanes = self.cfg.nmcu.lanes_per_pe;
+        let mut pm = ProgrammedModel {
+            name: model.name.clone(),
+            descs: Vec::new(),
+            regions: Vec::new(),
+            reports: Vec::new(),
+            layer_codes: Vec::new(),
+            layer_images: Vec::new(),
+        };
+        for l in &model.layers {
+            let image = layout_codes(&l.codes, l.k, l.n, lanes);
+            let Some((region, report)) = self.eflash.program_region(&image) else {
+                bail!("EFLASH capacity exhausted programming {}", l.name);
+            };
+            if report.failed_cells > 0 {
+                bail!("{} cells failed program-verify in {}", report.failed_cells, l.name);
+            }
+            pm.descs.push(LayerDesc {
+                first_row: region.first_row,
+                k: l.k,
+                n: l.n,
+                bias: l.bias.clone(),
+                requant: l.requant,
+                relu: l.relu,
+            });
+            pm.regions.push(region);
+            pm.reports.push(report);
+            pm.layer_codes.push(l.codes.clone());
+            pm.layer_images.push(image);
+        }
+        Ok(pm)
+    }
+
+    /// Run one inference through all programmed layers (fully on-chip).
+    pub fn infer(&mut self, pm: &ProgrammedModel, x_q: &[i8]) -> Vec<i8> {
+        self.nmcu.begin_inference();
+        self.nmcu.load_input(x_q);
+        let mut out = Vec::new();
+        for d in &pm.descs {
+            out = self.nmcu.execute_layer(&mut self.eflash, d);
+        }
+        let n = out.len();
+        self.nmcu.read_output(n)
+    }
+
+    /// Run a single programmed layer (the Fig 7 on-chip layer 9 path).
+    pub fn infer_layer(&mut self, desc: &LayerDesc, x_q: &[i8]) -> Vec<i8> {
+        self.nmcu.begin_inference();
+        self.nmcu.load_input(x_q);
+        self.nmcu.execute_layer(&mut self.eflash, desc);
+        self.nmcu.read_output(desc.n)
+    }
+
+    /// Unpowered bake (the paper's 125C retention stress).
+    pub fn bake(&mut self, hours: f64, temp_c: f64) {
+        self.eflash.bake(hours, temp_c);
+    }
+
+    pub fn stats(&self) -> NmcuStats {
+        self.nmcu.stats
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.nmcu.stats = NmcuStats::default();
+    }
+
+    /// Decoded (possibly drifted) codes of a programmed layer, in the
+    /// original row-major (K, N) order.
+    pub fn decoded_codes(&mut self, pm: &ProgrammedModel, layer: usize) -> Vec<i8> {
+        let lanes = self.cfg.nmcu.lanes_per_pe;
+        let d = &pm.descs[layer];
+        let k_tiles = d.k.div_ceil(lanes);
+        let mut out = vec![0i8; d.k * d.n];
+        let cpr = self.eflash.cells_per_read();
+        let mut buf = vec![0i8; cpr];
+        for p in 0..d.n.div_ceil(2) {
+            for t in 0..k_tiles {
+                self.eflash.read_row(d.first_row + p * k_tiles + t, &mut buf);
+                for lane in 0..lanes {
+                    let ki = t * lanes + lane;
+                    if ki >= d.k {
+                        break;
+                    }
+                    out[ki * d.n + 2 * p] = buf[lane];
+                    if 2 * p + 1 < d.n {
+                        out[ki * d.n + 2 * p + 1] = buf[lanes + lane];
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::artifacts::QLayer;
+    use crate::models::qmodel_forward;
+    use crate::nmcu::Requant;
+    use crate::util::rng::Rng;
+
+    fn chip_cfg() -> ChipConfig {
+        let mut c = ChipConfig::new();
+        c.eflash.capacity_bits = 1024 * 1024;
+        c
+    }
+
+    fn synth_model(seed: u64) -> QModel {
+        let mut r = Rng::new(seed);
+        let mk = |r: &mut Rng, name: &str, k: usize, n: usize, relu: bool| QLayer {
+            name: name.into(),
+            k,
+            n,
+            relu,
+            codes: (0..k * n).map(|_| (r.below(16) as i8) - 8).collect(),
+            bias: (0..n).map(|_| (r.below(2000) as i32) - 1000).collect(),
+            requant: Requant { m0: 1_518_500_250, shift: 40, z_out: -3 },
+            z_in: -128,
+            s_in: 1.0 / 255.0,
+            s_w: 0.05,
+            s_out: 0.1,
+        };
+        let l1 = mk(&mut r, "fc1", 100, 16, true);
+        let l2 = mk(&mut r, "fc2", 16, 4, false);
+        QModel { name: "synth".into(), layers: vec![l1, l2] }
+    }
+
+    #[test]
+    fn program_and_infer_matches_reference() {
+        let cfg = chip_cfg();
+        let mut chip = Chip::new(&cfg);
+        let model = synth_model(9);
+        let pm = chip.program_model(&model).unwrap();
+        assert_eq!(pm.descs.len(), 2);
+        assert!(pm.total_pulses() > 0);
+        let mut r = Rng::new(10);
+        for _ in 0..5 {
+            let x: Vec<i8> = (0..100).map(|_| (r.below(256) as i32 - 128) as i8).collect();
+            let got = chip.infer(&pm, &x);
+            let want = qmodel_forward(&model, &x);
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn decoded_codes_roundtrip_fresh() {
+        let cfg = chip_cfg();
+        let mut chip = Chip::new(&cfg);
+        let model = synth_model(11);
+        let pm = chip.program_model(&model).unwrap();
+        for (i, l) in model.layers.iter().enumerate() {
+            let decoded = chip.decoded_codes(&pm, i);
+            assert_eq!(decoded, l.codes, "layer {i}");
+        }
+    }
+
+    #[test]
+    fn bake_then_infer_still_works() {
+        let cfg = chip_cfg();
+        let mut chip = Chip::new(&cfg);
+        let model = synth_model(12);
+        let pm = chip.program_model(&model).unwrap();
+        let x: Vec<i8> = (0..100).map(|i| (i as i8).wrapping_mul(3)).collect();
+        let before = chip.infer(&pm, &x);
+        chip.bake(160.0, 125.0);
+        let after = chip.infer(&pm, &x);
+        assert_eq!(before.len(), after.len());
+        // outputs stay close: each weight drifts at most ~1 LSB
+        let max_d = before
+            .iter()
+            .zip(&after)
+            .map(|(&a, &b)| (a as i32 - b as i32).abs())
+            .max()
+            .unwrap();
+        assert!(max_d <= 24, "bake perturbed outputs too much: {max_d}");
+    }
+
+    #[test]
+    fn capacity_exhaustion_reported() {
+        let mut cfg = chip_cfg();
+        cfg.eflash.capacity_bits = 8 * 1024; // 2K cells = 8 rows only
+        let mut chip = Chip::new(&cfg);
+        let model = synth_model(13); // needs > 4K cells
+        assert!(chip.program_model(&model).is_err());
+    }
+}

@@ -1,0 +1,8 @@
+//! RISC-V control plane: RV32I(+MUL) interpreter and the firmware
+//! assembler, including the custom-0 `nmcu.mvm` instruction (paper §2.2:
+//! one instruction launches a whole MVM).
+
+pub mod asm;
+pub mod rv32i;
+
+pub use rv32i::{Cpu, Event, Mem};

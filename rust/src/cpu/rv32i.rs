@@ -1,0 +1,420 @@
+//! RV32I interpreter — the paper's host CPU ("32-bit RISC-V CPU core").
+//!
+//! Implements the full RV32I base ISA plus the custom-0 NMCU launch
+//! instruction the paper's §2.2 describes: *"the NMCU's flow control
+//! logic automatically adjusts the address of the weight parameters as
+//! required for the MVM operation with a single RISC-V instruction"*.
+//! `nmcu.mvm rd, rs1` (opcode 0x0B, funct3 0) hands the descriptor
+//! pointer in rs1 to the NMCU and returns when the launch is accepted.
+
+/// Memory interface the CPU executes against (implemented by `soc::Bus`).
+pub trait Mem {
+    fn read8(&mut self, addr: u32) -> u8;
+    fn write8(&mut self, addr: u32, v: u8);
+
+    fn read16(&mut self, addr: u32) -> u16 {
+        self.read8(addr) as u16 | ((self.read8(addr + 1) as u16) << 8)
+    }
+
+    fn read32(&mut self, addr: u32) -> u32 {
+        self.read16(addr) as u32 | ((self.read16(addr + 2) as u32) << 16)
+    }
+
+    fn write16(&mut self, addr: u32, v: u16) {
+        self.write8(addr, v as u8);
+        self.write8(addr + 1, (v >> 8) as u8);
+    }
+
+    fn write32(&mut self, addr: u32, v: u32) {
+        self.write16(addr, v as u16);
+        self.write16(addr + 2, (v >> 16) as u16);
+    }
+}
+
+/// What `step` tells the SoC beyond "keep going".
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Event {
+    /// normal instruction retired
+    None,
+    /// custom-0: launch the NMCU MVM whose descriptor lives at `desc_addr`
+    NmcuLaunch { desc_addr: u32 },
+    /// ECALL (firmware exit convention: a7 = 93, a0 = exit code)
+    Ecall,
+    /// EBREAK
+    Ebreak,
+    /// illegal/unsupported instruction
+    Illegal { raw: u32, pc: u32 },
+}
+
+#[derive(Clone, Debug)]
+pub struct Cpu {
+    pub regs: [u32; 32],
+    pub pc: u32,
+    pub instret: u64,
+}
+
+impl Cpu {
+    pub fn new(pc: u32) -> Self {
+        Cpu { regs: [0; 32], pc, instret: 0 }
+    }
+
+    #[inline]
+    fn rd(&self, r: usize) -> u32 {
+        if r == 0 {
+            0
+        } else {
+            self.regs[r]
+        }
+    }
+
+    #[inline]
+    fn wr(&mut self, r: usize, v: u32) {
+        if r != 0 {
+            self.regs[r] = v;
+        }
+    }
+
+    /// Execute one instruction. Returns the retired event.
+    pub fn step(&mut self, mem: &mut impl Mem) -> Event {
+        let raw = mem.read32(self.pc);
+        let opcode = raw & 0x7F;
+        let rd = ((raw >> 7) & 0x1F) as usize;
+        let funct3 = (raw >> 12) & 0x7;
+        let rs1 = ((raw >> 15) & 0x1F) as usize;
+        let rs2 = ((raw >> 20) & 0x1F) as usize;
+        let funct7 = raw >> 25;
+        let mut next_pc = self.pc.wrapping_add(4);
+        let mut event = Event::None;
+
+        match opcode {
+            0x37 => self.wr(rd, raw & 0xFFFF_F000), // LUI
+            0x17 => self.wr(rd, self.pc.wrapping_add(raw & 0xFFFF_F000)), // AUIPC
+            0x6F => {
+                // JAL
+                let imm = imm_j(raw);
+                self.wr(rd, next_pc);
+                next_pc = self.pc.wrapping_add(imm as u32);
+            }
+            0x67 => {
+                // JALR
+                let imm = imm_i(raw);
+                let target = self.rd(rs1).wrapping_add(imm as u32) & !1;
+                self.wr(rd, next_pc);
+                next_pc = target;
+            }
+            0x63 => {
+                // branches
+                let a = self.rd(rs1);
+                let b = self.rd(rs2);
+                let take = match funct3 {
+                    0b000 => a == b,
+                    0b001 => a != b,
+                    0b100 => (a as i32) < (b as i32),
+                    0b101 => (a as i32) >= (b as i32),
+                    0b110 => a < b,
+                    0b111 => a >= b,
+                    _ => return Event::Illegal { raw, pc: self.pc },
+                };
+                if take {
+                    next_pc = self.pc.wrapping_add(imm_b(raw) as u32);
+                }
+            }
+            0x03 => {
+                // loads
+                let addr = self.rd(rs1).wrapping_add(imm_i(raw) as u32);
+                let v = match funct3 {
+                    0b000 => mem.read8(addr) as i8 as i32 as u32, // LB
+                    0b001 => mem.read16(addr) as i16 as i32 as u32, // LH
+                    0b010 => mem.read32(addr),                    // LW
+                    0b100 => mem.read8(addr) as u32,              // LBU
+                    0b101 => mem.read16(addr) as u32,             // LHU
+                    _ => return Event::Illegal { raw, pc: self.pc },
+                };
+                self.wr(rd, v);
+            }
+            0x23 => {
+                // stores
+                let addr = self.rd(rs1).wrapping_add(imm_s(raw) as u32);
+                let v = self.rd(rs2);
+                match funct3 {
+                    0b000 => mem.write8(addr, v as u8),
+                    0b001 => mem.write16(addr, v as u16),
+                    0b010 => mem.write32(addr, v),
+                    _ => return Event::Illegal { raw, pc: self.pc },
+                }
+            }
+            0x13 => {
+                // OP-IMM
+                let imm = imm_i(raw) as u32;
+                let a = self.rd(rs1);
+                let shamt = (imm & 0x1F) as u32;
+                let v = match funct3 {
+                    0b000 => a.wrapping_add(imm),
+                    0b010 => ((a as i32) < (imm as i32)) as u32,
+                    0b011 => (a < imm) as u32,
+                    0b100 => a ^ imm,
+                    0b110 => a | imm,
+                    0b111 => a & imm,
+                    0b001 => a << shamt,
+                    0b101 => {
+                        if funct7 & 0x20 != 0 {
+                            ((a as i32) >> shamt) as u32 // SRAI
+                        } else {
+                            a >> shamt // SRLI
+                        }
+                    }
+                    _ => return Event::Illegal { raw, pc: self.pc },
+                };
+                self.wr(rd, v);
+            }
+            0x33 => {
+                // OP
+                let a = self.rd(rs1);
+                let b = self.rd(rs2);
+                let v = match (funct7, funct3) {
+                    (0x00, 0b000) => a.wrapping_add(b),
+                    (0x20, 0b000) => a.wrapping_sub(b),
+                    (0x00, 0b001) => a << (b & 0x1F),
+                    (0x00, 0b010) => ((a as i32) < (b as i32)) as u32,
+                    (0x00, 0b011) => (a < b) as u32,
+                    (0x00, 0b100) => a ^ b,
+                    (0x00, 0b101) => a >> (b & 0x1F),
+                    (0x20, 0b101) => ((a as i32) >> (b & 0x1F)) as u32,
+                    (0x00, 0b110) => a | b,
+                    (0x00, 0b111) => a & b,
+                    // M extension (MUL only — handy for address math in
+                    // firmware; the paper's core is RV32IM-class)
+                    (0x01, 0b000) => a.wrapping_mul(b),
+                    _ => return Event::Illegal { raw, pc: self.pc },
+                };
+                self.wr(rd, v);
+            }
+            0x0F => {} // FENCE: no-op in this single-hart model
+            0x73 => {
+                match raw {
+                    0x0000_0073 => event = Event::Ecall,
+                    0x0010_0073 => event = Event::Ebreak,
+                    _ => {
+                        // minimal Zicsr: rdinstret/rdcycle read the retire counter
+                        let csr = raw >> 20;
+                        match (csr, funct3) {
+                            (0xC00 | 0xC02, 0b010) => self.wr(rd, self.instret as u32),
+                            (0xC80 | 0xC82, 0b010) => {
+                                self.wr(rd, (self.instret >> 32) as u32)
+                            }
+                            _ => return Event::Illegal { raw, pc: self.pc },
+                        }
+                    }
+                }
+            }
+            0x0B => {
+                // custom-0: NMCU launch (funct3 0). rs1 = descriptor addr.
+                match funct3 {
+                    0b000 => event = Event::NmcuLaunch { desc_addr: self.rd(rs1) },
+                    _ => return Event::Illegal { raw, pc: self.pc },
+                }
+                self.wr(rd, 0); // success code by convention
+            }
+            _ => return Event::Illegal { raw, pc: self.pc },
+        }
+
+        self.pc = next_pc;
+        self.instret += 1;
+        event
+    }
+}
+
+// ---- immediate decoders ----------------------------------------------------
+
+#[inline]
+fn imm_i(raw: u32) -> i32 {
+    (raw as i32) >> 20
+}
+
+#[inline]
+fn imm_s(raw: u32) -> i32 {
+    (((raw & 0xFE00_0000) as i32) >> 20) | (((raw >> 7) & 0x1F) as i32)
+}
+
+#[inline]
+fn imm_b(raw: u32) -> i32 {
+    (((raw & 0x8000_0000) as i32) >> 19)
+        | (((raw & 0x80) << 4) as i32)
+        | (((raw >> 20) & 0x7E0) as i32)
+        | (((raw >> 7) & 0x1E) as i32)
+}
+
+#[inline]
+fn imm_j(raw: u32) -> i32 {
+    (((raw & 0x8000_0000) as i32) >> 11)
+        | ((raw & 0xF_F000) as i32)
+        | (((raw >> 9) & 0x800) as i32)
+        | (((raw >> 20) & 0x7FE) as i32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpu::asm::*;
+
+    /// flat 64 KB RAM at 0 for isolated CPU tests
+    struct Ram(Vec<u8>);
+
+    impl Mem for Ram {
+        fn read8(&mut self, addr: u32) -> u8 {
+            self.0[addr as usize]
+        }
+        fn write8(&mut self, addr: u32, v: u8) {
+            self.0[addr as usize] = v;
+        }
+    }
+
+    fn run(program: &[u32], max_steps: usize) -> (Cpu, Ram) {
+        let mut ram = Ram(vec![0; 64 * 1024]);
+        for (i, &w) in program.iter().enumerate() {
+            ram.write32((i * 4) as u32, w);
+        }
+        let mut cpu = Cpu::new(0);
+        for _ in 0..max_steps {
+            match cpu.step(&mut ram) {
+                Event::Ecall | Event::Ebreak => break,
+                Event::Illegal { raw, pc } => panic!("illegal {raw:#x} at {pc:#x}"),
+                _ => {}
+            }
+        }
+        (cpu, ram)
+    }
+
+    #[test]
+    fn arithmetic_and_immediates() {
+        let prog = [
+            addi(1, 0, 42),
+            addi(2, 0, -7),
+            add(3, 1, 2), // 35
+            sub(4, 1, 2), // 49
+            slti(5, 2, 0), // 1 (-7 < 0)
+            sltiu(6, 2, 0), // 0 (big unsigned)
+            xori(7, 1, 0xFF), // 42 ^ 255 = 213
+            ecall(),
+        ];
+        let (cpu, _) = run(&prog, 100);
+        assert_eq!(cpu.regs[3], 35);
+        assert_eq!(cpu.regs[4], 49);
+        assert_eq!(cpu.regs[5], 1);
+        assert_eq!(cpu.regs[6], 0);
+        assert_eq!(cpu.regs[7], 213);
+    }
+
+    #[test]
+    fn shifts_match_spec() {
+        let prog = [
+            addi(1, 0, -16), // 0xFFFF_FFF0
+            srli(2, 1, 2),   // logical
+            srai(3, 1, 2),   // arithmetic = -4
+            slli(4, 1, 4),
+            ecall(),
+        ];
+        let (cpu, _) = run(&prog, 100);
+        assert_eq!(cpu.regs[2], 0x3FFF_FFFC);
+        assert_eq!(cpu.regs[3] as i32, -4);
+        assert_eq!(cpu.regs[4], 0xFFFF_FF00);
+    }
+
+    #[test]
+    fn loads_stores_all_widths() {
+        let prog = [
+            lui(1, 0x1), // r1 = 0x1000
+            addi(2, 0, -2), // 0xFFFF_FFFE
+            sw(1, 2, 0),
+            lw(3, 1, 0),
+            lh(4, 1, 0),  // sign-extended 0xFFFE -> -2
+            lhu(5, 1, 0), // 0xFFFE
+            lb(6, 1, 1),  // 0xFF -> -1
+            lbu(7, 1, 1), // 255
+            sb(1, 0, 3),  // overwrite top byte with 0
+            lw(8, 1, 0),  // 0x00FF_FFFE
+            ecall(),
+        ];
+        let (cpu, _) = run(&prog, 100);
+        assert_eq!(cpu.regs[3], 0xFFFF_FFFE);
+        assert_eq!(cpu.regs[4] as i32, -2);
+        assert_eq!(cpu.regs[5], 0xFFFE);
+        assert_eq!(cpu.regs[6] as i32, -1);
+        assert_eq!(cpu.regs[7], 255);
+        assert_eq!(cpu.regs[8], 0x00FF_FFFE);
+    }
+
+    #[test]
+    fn branch_loop_sums_1_to_10() {
+        // r1 = counter, r2 = sum
+        let prog = [
+            addi(1, 0, 10),
+            addi(2, 0, 0),
+            // loop:
+            add(2, 2, 1),
+            addi(1, 1, -1),
+            bne(1, 0, -8), // back to loop
+            ecall(),
+        ];
+        let (cpu, _) = run(&prog, 200);
+        assert_eq!(cpu.regs[2], 55);
+    }
+
+    #[test]
+    fn jal_jalr_link() {
+        let prog = [
+            jal(1, 8),      // skip next, r1 = 4
+            addi(2, 0, 99), // skipped
+            addi(3, 0, 7),
+            jalr(4, 1, 0), // jump to 4 (the skipped addi), r4 = 16
+            ecall(),
+        ];
+        let (cpu, _) = run(&prog, 10);
+        assert_eq!(cpu.regs[1], 4);
+        assert_eq!(cpu.regs[2], 99); // executed after jalr
+        assert_eq!(cpu.regs[3], 7);
+        assert_eq!(cpu.regs[4], 16);
+    }
+
+    #[test]
+    fn x0_is_hardwired_zero() {
+        let prog = [addi(0, 0, 55), add(1, 0, 0), ecall()];
+        let (cpu, _) = run(&prog, 10);
+        assert_eq!(cpu.regs[0], 0);
+        assert_eq!(cpu.regs[1], 0);
+    }
+
+    #[test]
+    fn mul_works() {
+        let prog = [addi(1, 0, -3), addi(2, 0, 7), mul(3, 1, 2), ecall()];
+        let (cpu, _) = run(&prog, 10);
+        assert_eq!(cpu.regs[3] as i32, -21);
+    }
+
+    #[test]
+    fn custom0_reports_descriptor() {
+        let mut ram = Ram(vec![0; 4096]);
+        ram.write32(0, addi(5, 0, 0x100));
+        ram.write32(4, nmcu_mvm(6, 5));
+        let mut cpu = Cpu::new(0);
+        assert_eq!(cpu.step(&mut ram), Event::None);
+        assert_eq!(cpu.step(&mut ram), Event::NmcuLaunch { desc_addr: 0x100 });
+        assert_eq!(cpu.regs[6], 0);
+        assert_eq!(cpu.instret, 2);
+    }
+
+    #[test]
+    fn illegal_opcode_reported() {
+        let mut ram = Ram(vec![0; 64]);
+        ram.write32(0, 0xFFFF_FFFF);
+        let mut cpu = Cpu::new(0);
+        assert!(matches!(cpu.step(&mut ram), Event::Illegal { .. }));
+    }
+
+    #[test]
+    fn instret_csr_readable() {
+        let prog = [addi(1, 0, 1), addi(1, 0, 2), rdinstret(2), ecall()];
+        let (cpu, _) = run(&prog, 10);
+        assert_eq!(cpu.regs[2], 2);
+    }
+}

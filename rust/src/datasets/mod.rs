@@ -1,0 +1,161 @@
+//! Test-set loaders (byte formats written by python/compile/export.py)
+//! plus a synthetic workload generator for benches that don't need the
+//! trained models.
+
+use crate::util::rng::Rng;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// MNIST-like test set: 28x28 u8 images + labels.
+#[derive(Clone, Debug)]
+pub struct MnistTest {
+    pub images: Vec<u8>, // n * 784
+    pub labels: Vec<u8>,
+}
+
+impl MnistTest {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn image(&self, i: usize) -> &[u8] {
+        &self.images[i * 784..(i + 1) * 784]
+    }
+
+    /// Input quantization: q = pixel - 128 (scale 1/255, zp -128).
+    pub fn image_q(&self, i: usize) -> Vec<i8> {
+        self.image(i).iter().map(|&p| (p as i32 - 128) as i8).collect()
+    }
+}
+
+pub fn load_mnist(dir: &Path) -> Result<MnistTest> {
+    let raw = std::fs::read(dir.join("mnist_test.bin"))
+        .context("reading mnist_test.bin (run `make artifacts`?)")?;
+    if &raw[..4] != b"MNT1" {
+        bail!("bad magic in mnist_test.bin");
+    }
+    let n = u32::from_le_bytes(raw[4..8].try_into().unwrap()) as usize;
+    let img_end = 8 + n * 784;
+    if raw.len() < img_end + n {
+        bail!("mnist_test.bin truncated");
+    }
+    Ok(MnistTest {
+        images: raw[8..img_end].to_vec(),
+        labels: raw[img_end..img_end + n].to_vec(),
+    })
+}
+
+/// ToyADMOS-like test set: 640-dim f32 features + anomaly labels.
+#[derive(Clone, Debug)]
+pub struct AdmosTest {
+    pub dim: usize,
+    pub feats: Vec<f32>, // n * dim
+    pub labels: Vec<u8>, // 1 = anomaly
+}
+
+impl AdmosTest {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn feat(&self, i: usize) -> &[f32] {
+        &self.feats[i * self.dim..(i + 1) * self.dim]
+    }
+}
+
+pub fn load_admos(dir: &Path) -> Result<AdmosTest> {
+    let raw = std::fs::read(dir.join("admos_test.bin"))
+        .context("reading admos_test.bin (run `make artifacts`?)")?;
+    if &raw[..4] != b"ADM1" {
+        bail!("bad magic in admos_test.bin");
+    }
+    let n = u32::from_le_bytes(raw[4..8].try_into().unwrap()) as usize;
+    let dim = u32::from_le_bytes(raw[8..12].try_into().unwrap()) as usize;
+    let feat_end = 12 + 4 * n * dim;
+    if raw.len() < feat_end + n {
+        bail!("admos_test.bin truncated");
+    }
+    let feats: Vec<f32> = raw[12..feat_end]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Ok(AdmosTest { dim, feats, labels: raw[feat_end..feat_end + n].to_vec() })
+}
+
+/// Synthetic int8 activation vectors + int4 weight matrices for benches
+/// that exercise the NMCU/eflash independent of the trained models.
+pub struct WorkloadGen {
+    rng: Rng,
+}
+
+impl WorkloadGen {
+    pub fn new(seed: u64) -> Self {
+        WorkloadGen { rng: Rng::new(seed) }
+    }
+
+    pub fn activations(&mut self, n: usize) -> Vec<i8> {
+        (0..n).map(|_| (self.rng.below(256) as i32 - 128) as i8).collect()
+    }
+
+    /// int4 codes with a near-zero-concentrated distribution, mimicking
+    /// trained-weight statistics (paper Fig 6 / [8]).
+    pub fn weights_gaussian(&mut self, n: usize, sigma: f64) -> Vec<i8> {
+        (0..n)
+            .map(|_| (self.rng.normal(0.0, sigma).round() as i64).clamp(-8, 7) as i8)
+            .collect()
+    }
+
+    /// uniformly distributed codes (worst case for the Fig 5a mapping)
+    pub fn weights_uniform(&mut self, n: usize) -> Vec<i8> {
+        (0..n).map(|_| (self.rng.below(16) as i8) - 8).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workload_weights_in_range_and_concentrated() {
+        let mut g = WorkloadGen::new(3);
+        let w = g.weights_gaussian(10_000, 2.0);
+        assert!(w.iter().all(|&c| (-8..=7).contains(&c)));
+        let near_zero = w.iter().filter(|&&c| c.abs() <= 2).count();
+        assert!(near_zero > 6_000, "not concentrated: {near_zero}");
+        let wu = g.weights_uniform(10_000);
+        let near_zero_u = wu.iter().filter(|&&c| c.abs() <= 2).count();
+        assert!(near_zero_u < 4_000);
+    }
+
+    #[test]
+    fn activation_range() {
+        let mut g = WorkloadGen::new(4);
+        let x = g.activations(1000);
+        assert!(x.iter().any(|&v| v < -100));
+        assert!(x.iter().any(|&v| v > 100));
+    }
+
+    #[test]
+    fn loaders_error_cleanly_without_files() {
+        assert!(load_mnist(Path::new("/nonexistent")).is_err());
+        assert!(load_admos(Path::new("/nonexistent")).is_err());
+    }
+
+    #[test]
+    fn mnist_quantization_convention() {
+        let images: Vec<u8> = [0u8, 128, 255, 7].repeat(196);
+        let t = MnistTest { images, labels: vec![3] };
+        let q = t.image_q(0);
+        assert_eq!(q[0], -128);
+        assert_eq!(q[1], 0);
+        assert_eq!(q[2], 127);
+    }
+}

@@ -1,0 +1,258 @@
+//! The physical cell array: one threshold voltage per cell plus static
+//! per-cell process variation (program efficiency, retention defects).
+//!
+//! The 4 Mb macro is 1,048,576 cells organized as `banks x rows x 256
+//! cells`; one row is one read unit (256 cells = 256 4-bit weights,
+//! paper Fig 2). Storage is flat `Vec<f32>` — the hot read path indexes
+//! a row slice directly.
+
+use crate::config::EflashConfig;
+use crate::util::rng::Rng;
+
+/// Address of one read unit (a word line within a bank).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RowAddr {
+    pub bank: usize,
+    pub row: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct EflashArray {
+    pub cfg: EflashConfig,
+    /// threshold voltage per cell [V]
+    vt: Vec<f32>,
+    /// per-cell ISPP efficiency multiplier (process variation, fixed at t0)
+    efficiency: Vec<f32>,
+    /// per-cell retention-loss multiplier (lognormal; includes fast tails)
+    retention_factor: Vec<f32>,
+    /// lifetime statistics
+    pub total_program_pulses: u64,
+    pub total_reads: u64,
+    pub total_erases: u64,
+}
+
+impl EflashArray {
+    /// Fabricate a fresh die: all cells erased, process variation sampled.
+    pub fn new(cfg: &EflashConfig, retention_cell_sigma: f64, fast_tail_fraction: f64,
+               fast_tail_multiplier: f64, rng: &mut Rng) -> Self {
+        let n = cfg.n_cells();
+        let mut vt = Vec::with_capacity(n);
+        let mut efficiency = Vec::with_capacity(n);
+        let mut retention_factor = Vec::with_capacity(n);
+        for _ in 0..n {
+            vt.push(rng.normal(cfg.vt_erased_mean, cfg.vt_erased_sigma) as f32);
+            efficiency.push(
+                rng.normal(1.0, cfg.ispp_efficiency_sigma).clamp(0.3, 2.0) as f32,
+            );
+            let mut f = rng.lognormal(0.0, retention_cell_sigma);
+            if rng.chance(fast_tail_fraction) {
+                f *= fast_tail_multiplier;
+            }
+            retention_factor.push(f as f32);
+        }
+        EflashArray {
+            cfg: cfg.clone(),
+            vt,
+            efficiency,
+            retention_factor,
+            total_program_pulses: 0,
+            total_reads: 0,
+            total_erases: 0,
+        }
+    }
+
+    pub fn n_cells(&self) -> usize {
+        self.vt.len()
+    }
+
+    pub fn rows_per_bank(&self) -> usize {
+        self.cfg.rows() / self.cfg.banks
+    }
+
+    /// Flat cell index of the first cell in a row.
+    #[inline]
+    pub fn row_base(&self, addr: RowAddr) -> usize {
+        debug_assert!(addr.bank < self.cfg.banks, "bank {} out of range", addr.bank);
+        debug_assert!(addr.row < self.rows_per_bank(), "row {} out of range", addr.row);
+        (addr.bank * self.rows_per_bank() + addr.row) * self.cfg.cells_per_read
+    }
+
+    /// Convert a flat row index (0..rows()) to a RowAddr (round-robin by bank).
+    pub fn row_addr(&self, flat_row: usize) -> RowAddr {
+        let rpb = self.rows_per_bank();
+        RowAddr { bank: flat_row / rpb, row: flat_row % rpb }
+    }
+
+    #[inline]
+    pub fn vt(&self, cell: usize) -> f32 {
+        self.vt[cell]
+    }
+
+    #[inline]
+    pub fn vt_row(&self, addr: RowAddr) -> &[f32] {
+        let base = self.row_base(addr);
+        &self.vt[base..base + self.cfg.cells_per_read]
+    }
+
+    #[inline]
+    pub fn efficiency(&self, cell: usize) -> f32 {
+        self.efficiency[cell]
+    }
+
+    #[inline]
+    pub fn retention_factor(&self, cell: usize) -> f32 {
+        self.retention_factor[cell]
+    }
+
+    /// Apply one program pulse to a cell (FN tunneling, ISPP regime):
+    /// Vt rises by ~step * cell_efficiency + noise. Saturates near the
+    /// physical ceiling set by the program voltage.
+    #[inline]
+    pub fn program_pulse(&mut self, cell: usize, rng: &mut Rng) {
+        let step = self.cfg.ispp_step * self.efficiency[cell] as f64
+            + rng.normal(0.0, self.cfg.ispp_noise_sigma);
+        // saturation: the tunnel field collapses as Vt approaches ~3.2 V,
+        // so injection stops entirely at the ceiling
+        let headroom = ((3.2 - self.vt[cell] as f64) / 3.2).clamp(0.0, 1.0);
+        self.vt[cell] = (self.vt[cell] as f64 + step.max(0.0) * headroom) as f32;
+        self.total_program_pulses += 1;
+    }
+
+    /// Block erase: all cells return to the erased distribution (fresh
+    /// lognormal-ish spread; erase is uniform enough at this abstraction).
+    pub fn erase_all(&mut self, rng: &mut Rng) {
+        for v in self.vt.iter_mut() {
+            *v = rng.normal(self.cfg.vt_erased_mean, self.cfg.vt_erased_sigma) as f32;
+        }
+        self.total_erases += 1;
+    }
+
+    /// Erase a single row (used by per-layer reprogramming).
+    pub fn erase_row(&mut self, addr: RowAddr, rng: &mut Rng) {
+        let base = self.row_base(addr);
+        for i in 0..self.cfg.cells_per_read {
+            self.vt[base + i] =
+                rng.normal(self.cfg.vt_erased_mean, self.cfg.vt_erased_sigma) as f32;
+        }
+        self.total_erases += 1;
+    }
+
+    /// Directly perturb a cell's Vt (retention model hook).
+    #[inline]
+    pub fn shift_vt(&mut self, cell: usize, delta: f64) {
+        self.vt[cell] = (self.vt[cell] as f64 + delta) as f32;
+    }
+
+    pub fn note_read(&mut self) {
+        self.total_reads += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    fn small_cfg() -> EflashConfig {
+        EflashConfig {
+            capacity_bits: 64 * 1024, // 16K cells
+            ..Default::default()
+        }
+    }
+
+    fn mk(cfg: &EflashConfig) -> EflashArray {
+        let mut rng = Rng::new(1);
+        EflashArray::new(cfg, 0.3, 0.004, 4.0, &mut rng)
+    }
+
+    #[test]
+    fn fresh_die_is_erased_distribution() {
+        let cfg = small_cfg();
+        let a = mk(&cfg);
+        let vts: Vec<f64> = (0..a.n_cells()).map(|i| a.vt(i) as f64).collect();
+        let m = stats::mean(&vts);
+        let s = stats::std_dev(&vts);
+        assert!((m - cfg.vt_erased_mean).abs() < 0.01, "mean {m}");
+        assert!((s - cfg.vt_erased_sigma).abs() < 0.01, "sigma {s}");
+    }
+
+    #[test]
+    fn addressing_roundtrip() {
+        let cfg = small_cfg();
+        let a = mk(&cfg);
+        assert_eq!(a.n_cells(), 16384);
+        assert_eq!(cfg.rows(), 64);
+        assert_eq!(a.rows_per_bank(), 8);
+        for flat in 0..cfg.rows() {
+            let addr = a.row_addr(flat);
+            assert_eq!(a.row_base(addr), flat * cfg.cells_per_read);
+        }
+    }
+
+    #[test]
+    fn program_pulse_raises_vt_monotonically_in_expectation() {
+        let cfg = small_cfg();
+        let mut a = mk(&cfg);
+        let mut rng = Rng::new(2);
+        let before = a.vt(0);
+        for _ in 0..30 {
+            a.program_pulse(0, &mut rng);
+        }
+        assert!(a.vt(0) > before + 0.3, "{} -> {}", before, a.vt(0));
+        assert_eq!(a.total_program_pulses, 30);
+    }
+
+    #[test]
+    fn program_saturates_below_ceiling() {
+        let cfg = small_cfg();
+        let mut a = mk(&cfg);
+        let mut rng = Rng::new(3);
+        for _ in 0..5000 {
+            a.program_pulse(1, &mut rng);
+        }
+        assert!(a.vt(1) < 3.6, "vt ran away: {}", a.vt(1));
+    }
+
+    #[test]
+    fn erase_resets() {
+        let cfg = small_cfg();
+        let mut a = mk(&cfg);
+        let mut rng = Rng::new(4);
+        for _ in 0..100 {
+            a.program_pulse(7, &mut rng);
+        }
+        assert!(a.vt(7) > 1.5);
+        a.erase_all(&mut rng);
+        assert!(a.vt(7) < 1.1);
+    }
+
+    #[test]
+    fn erase_row_only_touches_row() {
+        let cfg = small_cfg();
+        let mut a = mk(&cfg);
+        let mut rng = Rng::new(5);
+        let addr = RowAddr { bank: 1, row: 2 };
+        let base = a.row_base(addr);
+        for i in 0..cfg.cells_per_read {
+            for _ in 0..30 {
+                a.program_pulse(base + i, &mut rng);
+            }
+        }
+        let outside_before = a.vt(base - 1);
+        a.erase_row(addr, &mut rng);
+        assert!(a.vt(base) < 1.1);
+        assert_eq!(a.vt(base - 1), outside_before);
+    }
+
+    #[test]
+    fn retention_factors_lognormal_with_tail() {
+        let cfg = small_cfg();
+        let a = mk(&cfg);
+        let fs: Vec<f64> = (0..a.n_cells()).map(|i| a.retention_factor(i) as f64).collect();
+        let median = stats::percentile(&fs, 50.0);
+        assert!((median - 1.0).abs() < 0.05, "median {median}");
+        // fast tail population exists
+        let n_fast = fs.iter().filter(|&&f| f > 3.0).count();
+        assert!(n_fast > 10, "fast tail missing: {n_fast}");
+    }
+}

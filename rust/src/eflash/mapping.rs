@@ -1,0 +1,150 @@
+//! 4-bits/cell state mapping (paper Fig 5a).
+//!
+//! A 4-bits/cell EFLASH cell mostly fails by drifting into an *adjacent*
+//! threshold-voltage state. The paper therefore maps the 16 Vt-ordered
+//! states onto the sixteen int4 weight values such that Vt-adjacent
+//! states hold weights that differ by exactly one ("adjacent states can
+//! differ by one decimal value"): a retention error then perturbs the
+//! weight by +/-1 LSB instead of an arbitrary amount.
+//!
+//! On a line of 16 values, the only unit-step Hamiltonian orderings are
+//! the monotonic ones, so the proposed mapping is value = state - 8
+//! (state 0 = erased = most negative weight). The natural two's-
+//! complement nibble mapping — the baseline an implementation without
+//! this insight would use — is kept for ablation A1: there, the drift
+//! S7 -> S8 flips +7 to -8 (a 15-LSB error).
+
+/// How 4-bit weight values are assigned to the 16 Vt-ordered states.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StateMapping {
+    /// Paper's mapping: value = state_index - 8 (unit adjacent distance).
+    AdjacentUnit,
+    /// Naive mapping: state_index interpreted as a two's-complement nibble.
+    TwosComplement,
+    /// Binary-reflected Gray code on the nibble (common flash trick for
+    /// 1-bit-flip tolerance, but NOT unit *decimal* distance).
+    Gray,
+}
+
+impl StateMapping {
+    pub const ALL: [StateMapping; 3] =
+        [StateMapping::AdjacentUnit, StateMapping::TwosComplement, StateMapping::Gray];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            StateMapping::AdjacentUnit => "adjacent-unit (paper, Fig 5a)",
+            StateMapping::TwosComplement => "two's-complement (naive)",
+            StateMapping::Gray => "gray-code",
+        }
+    }
+
+    /// Weight value stored by Vt-ordered state `s` (0..16) -> [-8, 7].
+    #[inline]
+    pub fn state_to_value(&self, s: u8) -> i8 {
+        debug_assert!(s < 16);
+        match self {
+            StateMapping::AdjacentUnit => s as i8 - 8,
+            StateMapping::TwosComplement => ((s as i8) << 4) >> 4,
+            StateMapping::Gray => {
+                // value whose gray encoding (of value+8) equals s
+                // s = g(v+8)  =>  v = g^-1(s) - 8
+                let mut v = s;
+                let mut shift = 1;
+                while shift < 8 {
+                    v ^= v >> shift;
+                    shift <<= 1;
+                }
+                v as i8 - 8
+            }
+        }
+    }
+
+    /// Vt-ordered state that stores weight value `v` in [-8, 7].
+    #[inline]
+    pub fn value_to_state(&self, v: i8) -> u8 {
+        debug_assert!((-8..=7).contains(&v));
+        match self {
+            StateMapping::AdjacentUnit => (v + 8) as u8,
+            StateMapping::TwosComplement => (v as u8) & 0x0F,
+            StateMapping::Gray => {
+                let u = (v + 8) as u8;
+                u ^ (u >> 1)
+            }
+        }
+    }
+
+    /// Worst-case |weight error| from a +/-1-state drift, over all states.
+    pub fn worst_adjacent_error(&self) -> u32 {
+        let mut worst = 0u32;
+        for s in 0..15u8 {
+            let a = self.state_to_value(s) as i32;
+            let b = self.state_to_value(s + 1) as i32;
+            worst = worst.max((a - b).unsigned_abs());
+        }
+        worst
+    }
+
+    /// Pretty-print the Fig 5(a) mapping table.
+    pub fn table(&self) -> String {
+        let mut out = String::from("state (Vt order) -> weight value\n");
+        for s in 0..16u8 {
+            out.push_str(&format!("  S{s:<2} -> {:>3}\n", self.state_to_value(s)));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_mappings_are_bijections() {
+        for m in StateMapping::ALL {
+            let mut seen = [false; 16];
+            for s in 0..16u8 {
+                let v = m.state_to_value(s);
+                assert!((-8..=7).contains(&v), "{m:?} S{s} -> {v}");
+                assert_eq!(m.value_to_state(v), s, "{m:?} roundtrip");
+                let idx = (v + 8) as usize;
+                assert!(!seen[idx], "{m:?} duplicate value {v}");
+                seen[idx] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn paper_mapping_has_unit_adjacent_distance() {
+        assert_eq!(StateMapping::AdjacentUnit.worst_adjacent_error(), 1);
+    }
+
+    #[test]
+    fn naive_mapping_has_catastrophic_wraparound() {
+        // S7 (+7) -> S8 (-8): error 15
+        assert_eq!(StateMapping::TwosComplement.worst_adjacent_error(), 15);
+        let m = StateMapping::TwosComplement;
+        assert_eq!(m.state_to_value(7), 7);
+        assert_eq!(m.state_to_value(8), -8);
+    }
+
+    #[test]
+    fn gray_mapping_intermediate() {
+        // gray adjacency is 1 *bit*, not 1 decimal; worst decimal jump > 1
+        let w = StateMapping::Gray.worst_adjacent_error();
+        assert!(w > 1 && w < 15, "gray worst = {w}");
+    }
+
+    #[test]
+    fn erased_state_is_most_negative_in_paper_mapping() {
+        assert_eq!(StateMapping::AdjacentUnit.state_to_value(0), -8);
+        assert_eq!(StateMapping::AdjacentUnit.state_to_value(15), 7);
+    }
+
+    #[test]
+    fn table_renders_16_rows() {
+        let t = StateMapping::AdjacentUnit.table();
+        assert_eq!(t.lines().count(), 17);
+        assert!(t.contains("S0  ->  -8"));
+        assert!(t.contains("S15 ->   7"));
+    }
+}

@@ -1,0 +1,209 @@
+//! ISPP program-verify controller (paper Fig 5b).
+//!
+//! Programming proceeds state-by-state through the 15 verify levels:
+//! for each programmed state k (ascending Vt), every cell targeted at k
+//! receives incremental program pulses until its Vt passes VRD_k (the
+//! verify read — which needs the full-VDDH VRD range the overstress-free
+//! WL driver provides). The per-state pulse trace is recorded so the
+//! fig5 bench can print the program-verify sequence.
+
+use super::array::{EflashArray, RowAddr};
+use super::levels::Ladders;
+use super::mapping::StateMapping;
+use crate::util::rng::Rng;
+
+/// Outcome of programming a set of rows.
+#[derive(Clone, Debug, Default)]
+pub struct ProgramReport {
+    /// pulses issued per state index 1..15 (index 0 = state 1)
+    pub pulses_per_state: Vec<u64>,
+    /// verify reads per state
+    pub verifies_per_state: Vec<u64>,
+    /// cells that failed to verify within max_pulses
+    pub failed_cells: u64,
+    /// total cells programmed (excluding those left erased)
+    pub programmed_cells: u64,
+    /// total cells covered (including erased-state targets)
+    pub total_cells: u64,
+}
+
+impl ProgramReport {
+    pub fn total_pulses(&self) -> u64 {
+        self.pulses_per_state.iter().sum()
+    }
+
+    /// Fig 5(b)-style trace: one line per state.
+    pub fn sequence_trace(&self) -> String {
+        let mut out = String::from("state | cells-pulses | verify-reads\n");
+        for (i, (&p, &v)) in self
+            .pulses_per_state
+            .iter()
+            .zip(&self.verifies_per_state)
+            .enumerate()
+        {
+            out.push_str(&format!("  S{:<3} | {:>12} | {:>12}\n", i + 1, p, v));
+        }
+        out
+    }
+}
+
+/// Program `codes` (int4 weight values, one per cell) into consecutive
+/// cells of `rows`, using `mapping` to pick target states and verifying
+/// against `ladders`. Cells targeted at state 0 stay erased (that is the
+/// paper's cheapest, most-common level once weights concentrate near the
+/// low-Vt codes).
+pub fn program_rows(
+    array: &mut EflashArray,
+    rows: &[RowAddr],
+    codes: &[i8],
+    mapping: StateMapping,
+    ladders: &Ladders,
+    rng: &mut Rng,
+) -> ProgramReport {
+    let cpr = array.cfg.cells_per_read;
+    assert!(
+        codes.len() <= rows.len() * cpr,
+        "codes {} exceed capacity of {} rows",
+        codes.len(),
+        rows.len()
+    );
+    let n_prog_states = ladders.verify.len();
+    let mut report = ProgramReport {
+        pulses_per_state: vec![0; n_prog_states],
+        verifies_per_state: vec![0; n_prog_states],
+        ..Default::default()
+    };
+    report.total_cells = codes.len() as u64;
+
+    // resolve target state per cell (flat cell index)
+    let mut targets: Vec<(usize, u8)> = Vec::with_capacity(codes.len());
+    for (i, &code) in codes.iter().enumerate() {
+        let row = rows[i / cpr];
+        let cell = array.row_base(row) + (i % cpr);
+        let state = mapping.value_to_state(code);
+        targets.push((cell, state));
+    }
+
+    // Fig 5b: sequential verify level sweep, lowest state first
+    let max_pulses = array.cfg.max_pulses;
+    for k in 1..=n_prog_states {
+        let vrd = ladders.verify[k - 1];
+        // cells whose target is exactly state k
+        for &(cell, state) in targets.iter().filter(|&&(_, s)| s as usize == k) {
+            debug_assert_eq!(state as usize, k);
+            let mut pulses = 0u32;
+            loop {
+                // verify read first (cheap exit for already-high cells)
+                report.verifies_per_state[k - 1] += 1;
+                if array.vt(cell) as f64 >= vrd {
+                    break;
+                }
+                if pulses >= max_pulses {
+                    report.failed_cells += 1;
+                    break;
+                }
+                array.program_pulse(cell, rng);
+                report.pulses_per_state[k - 1] += 1;
+                pulses += 1;
+            }
+            report.programmed_cells += 1;
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EflashConfig;
+
+    fn setup() -> (EflashArray, Ladders, Rng) {
+        let cfg = EflashConfig { capacity_bits: 64 * 1024, ..Default::default() };
+        let mut rng = Rng::new(9);
+        let arr = EflashArray::new(&cfg, 0.3, 0.004, 4.0, &mut rng);
+        let ladders = Ladders::new(&cfg, 2.5);
+        (arr, ladders, rng)
+    }
+
+    #[test]
+    fn programs_all_16_states_with_margin() {
+        let (mut arr, ladders, mut rng) = setup();
+        // program one full row with codes -8..7 repeated
+        let codes: Vec<i8> = (0..256).map(|i| ((i % 16) as i8) - 8).collect();
+        let rows = [RowAddr { bank: 0, row: 0 }];
+        let rep = program_rows(
+            &mut arr, &rows, &codes, StateMapping::AdjacentUnit, &ladders, &mut rng,
+        );
+        assert_eq!(rep.failed_cells, 0, "{rep:?}");
+        assert_eq!(rep.total_cells, 256);
+        // every cell decodes back to its target state
+        for (i, &code) in codes.iter().enumerate() {
+            let vt = arr.vt(i) as f64;
+            let state = ladders.decode(vt);
+            let got = StateMapping::AdjacentUnit.state_to_value(state);
+            assert_eq!(got, code, "cell {i}: vt={vt}");
+        }
+    }
+
+    #[test]
+    fn erased_targets_receive_no_pulses() {
+        let (mut arr, ladders, mut rng) = setup();
+        let codes = vec![-8i8; 256]; // all erased-state targets
+        let rows = [RowAddr { bank: 0, row: 1 }];
+        let rep = program_rows(
+            &mut arr, &rows, &codes, StateMapping::AdjacentUnit, &ladders, &mut rng,
+        );
+        assert_eq!(rep.total_pulses(), 0);
+        assert_eq!(rep.programmed_cells, 0);
+    }
+
+    #[test]
+    fn higher_states_need_more_pulses() {
+        let (mut arr, ladders, mut rng) = setup();
+        let mut codes = vec![-7i8; 128];
+        codes.extend(vec![7i8; 128]);
+        let rows = [RowAddr { bank: 0, row: 2 }];
+        let rep = program_rows(
+            &mut arr, &rows, &codes, StateMapping::AdjacentUnit, &ladders, &mut rng,
+        );
+        let low = rep.pulses_per_state[0]; // state 1
+        let high = rep.pulses_per_state[14]; // state 15
+        assert!(high > low * 2, "low={low} high={high}");
+    }
+
+    #[test]
+    fn placement_spread_is_tight() {
+        // all cells placed at a mid state should sit within ~1.5 ISPP steps
+        let (mut arr, ladders, mut rng) = setup();
+        let codes = vec![0i8; 256]; // state 8
+        let rows = [RowAddr { bank: 1, row: 0 }];
+        program_rows(&mut arr, &rows, &codes, StateMapping::AdjacentUnit, &ladders, &mut rng);
+        let vrd = ladders.verify[7];
+        let base = arr.row_base(rows[0]);
+        for i in 0..256 {
+            let vt = arr.vt(base + i) as f64;
+            assert!(vt >= vrd - 1e-9, "cell below verify: {vt} < {vrd}");
+            assert!(vt < vrd + 0.25, "cell overshot: {vt}");
+        }
+    }
+
+    #[test]
+    fn sequence_trace_has_15_state_lines() {
+        let (mut arr, ladders, mut rng) = setup();
+        let codes: Vec<i8> = (0..256).map(|i| ((i % 16) as i8) - 8).collect();
+        let rows = [RowAddr { bank: 2, row: 0 }];
+        let rep = program_rows(
+            &mut arr, &rows, &codes, StateMapping::AdjacentUnit, &ladders, &mut rng,
+        );
+        assert_eq!(rep.sequence_trace().lines().count(), 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceed capacity")]
+    fn too_many_codes_panics() {
+        let (mut arr, ladders, mut rng) = setup();
+        let codes = vec![0i8; 257];
+        let rows = [RowAddr { bank: 0, row: 0 }];
+        program_rows(&mut arr, &rows, &codes, StateMapping::AdjacentUnit, &ladders, &mut rng);
+    }
+}

@@ -1,0 +1,32 @@
+//! # nvmcu — non-volatile AI microcontroller simulator
+//!
+//! Reproduction of *"A 28 nm AI microcontroller with tightly coupled
+//! zero-standby power weight memory featuring standard logic compatible
+//! 4 Mb 4-bits/cell embedded flash technology"* (ANAFLASH, EDGE AI
+//! Research Symposium 2025).
+//!
+//! Three-layer architecture (DESIGN.md):
+//! - **L3 (this crate)**: the full microcontroller simulator — 4-bits/
+//!   cell EFLASH device model, analog subsystems (HV charge pump,
+//!   overstress-free WL driver), the near-memory computing unit, a
+//!   RISC-V control plane, SoC fabric, and the inference coordinator.
+//! - **L2/L1 (python/, build-time only)**: JAX model graphs embedding a
+//!   Pallas NMCU kernel, AOT-lowered to HLO text executed by
+//!   [`runtime`] via PJRT — the "software baseline" of Table 1.
+//!
+//! Start with [`coordinator::Chip`] for the high-level API, or
+//! `examples/quickstart.rs`.
+
+pub mod analog;
+pub mod artifacts;
+pub mod config;
+pub mod coordinator;
+pub mod cpu;
+pub mod datasets;
+pub mod eflash;
+pub mod metrics;
+pub mod models;
+pub mod nmcu;
+pub mod runtime;
+pub mod soc;
+pub mod util;

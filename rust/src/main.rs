@@ -1,0 +1,301 @@
+//! `nvmcu` — CLI for the non-volatile AI microcontroller simulator.
+//!
+//! Subcommands:
+//!   table1      reproduce Table 1 (accuracy before/after bake vs SW)
+//!   table2      print the Table 2 comparison
+//!   fig5        charge-pump + WL-driver waveforms, mapping, ISPP trace
+//!   fig6        programmed-state histograms of the two models
+//!   infer       run one inference (MNIST index) on the chip
+//!   pump        charge pump transient only
+//!   retention   bake-time sweep of decode errors + accuracy
+//!   info        chip configuration summary
+//!
+//! Global options: --config <file.json>, --set section.key=value (comma
+//! separated list), --artifacts <dir>, --seed <n>.
+
+use nvmcu::analog::{ChargePump, DriverKind, PumpMode, WlDriver, WlOp};
+use nvmcu::artifacts;
+use nvmcu::config::ChipConfig;
+use nvmcu::coordinator::{experiments, Chip};
+use nvmcu::eflash::mapping::StateMapping;
+use nvmcu::metrics;
+use nvmcu::util::bench::Table;
+use nvmcu::util::cli::Args;
+
+fn chip_config(args: &Args) -> ChipConfig {
+    let mut cfg = ChipConfig::new();
+    if let Some(path) = args.opt("config") {
+        cfg.load_file(path).unwrap_or_else(|e| panic!("--config: {e}"));
+    }
+    if let Some(sets) = args.opt("set") {
+        for kv in sets.split(',') {
+            let (k, v) = kv.split_once('=').unwrap_or_else(|| panic!("--set wants k=v"));
+            cfg.set(k, v).unwrap_or_else(|e| panic!("--set: {e}"));
+        }
+    }
+    if let Some(seed) = args.opt("seed") {
+        cfg.seed = seed.parse().expect("--seed wants an integer");
+    }
+    cfg
+}
+
+fn art_dir(args: &Args) -> std::path::PathBuf {
+    args.opt("artifacts").map(Into::into).unwrap_or_else(artifacts::artifacts_dir)
+}
+
+fn main() {
+    let args = Args::parse(true);
+    let cmd = args.subcommand.clone().unwrap_or_else(|| "help".into());
+    match cmd.as_str() {
+        "table1" => cmd_table1(&args),
+        "table2" => cmd_table2(&args),
+        "fig5" => cmd_fig5(&args),
+        "fig6" => cmd_fig6(&args),
+        "infer" => cmd_infer(&args),
+        "pump" => cmd_pump(&args),
+        "retention" => cmd_retention(&args),
+        "info" => cmd_info(&args),
+        _ => {
+            println!(
+                "nvmcu — 28nm AI microcontroller with 4-bits/cell EFLASH (reproduction)\n\
+                 usage: nvmcu <table1|table2|fig5|fig6|infer|pump|retention|info> [options]\n\
+                 options: --config <json> --set k=v[,k=v] --artifacts <dir> --seed <n>"
+            );
+        }
+    }
+}
+
+fn cmd_table1(args: &Args) {
+    let cfg = chip_config(args);
+    let dir = art_dir(args);
+    let inputs = experiments::load_table1_inputs(&dir).expect("artifacts");
+    let (mn, ae) = experiments::run_table1(&cfg, &inputs).expect("table1");
+    println!("\nTable 1: Measured results of AI inference tasks (reproduction)\n");
+    let mut t = Table::new(&["Inference Accuracy", "MNIST", "AutoEncoder"]);
+    t.row(&[
+        "Before Bake".into(),
+        format!("{:.2}%", 100.0 * mn.acc_before_bake),
+        format!("{:.3} AUC", ae.auc_before_bake),
+    ]);
+    t.row(&[
+        format!("After Bake ({}h/{}h)", mn.bake_hours, ae.bake_hours),
+        format!("{:.2}%", 100.0 * mn.acc_after_bake),
+        format!("{:.3} AUC", ae.auc_after_bake),
+    ]);
+    t.row(&[
+        "SW. Baseline".into(),
+        format!("{:.2}%", 100.0 * mn.acc_sw_baseline),
+        format!("{:.3} AUC", ae.auc_sw_baseline),
+    ]);
+    t.print();
+    println!(
+        "\nMNIST decode errors after bake: exact {:.2}% | +/-1 LSB {:.3}% | worse {:.4}%",
+        100.0 * mn.decode_after.exact_rate(),
+        100.0 * mn.decode_after.off_by_one as f64 / mn.decode_after.total as f64,
+        100.0 * mn.decode_after.worse as f64 / mn.decode_after.total as f64,
+    );
+}
+
+fn cmd_table2(args: &Args) {
+    let cfg = chip_config(args);
+    println!("\nTable 2: Comparison (reproduction)\n");
+    let mut t = Table::new(&[
+        "", "Process", "Overhead", "Memory", "NonVolatile", "Act", "Wgt",
+        "Standby uW (34K-wgt model)", "cells/wgt", "reads/256wgt",
+    ]);
+    for r in metrics::comparison_table(&cfg.power) {
+        t.row(&[
+            r.name.into(),
+            format!("{} nm", r.process_nm),
+            if r.process_overhead { "Yes" } else { "No" }.into(),
+            format!("{} bit/cell {}", r.bits_per_cell, r.memory_kind),
+            if r.non_volatile { "Yes" } else { "No" }.into(),
+            r.activation_bits.into(),
+            r.weight_bits.into(),
+            format!("{:.2}", r.standby_uw),
+            format!("{}", r.cells_per_weight),
+            format!("{}", r.reads_per_256_weights),
+        ]);
+    }
+    t.print();
+}
+
+fn cmd_fig5(args: &Args) {
+    let cfg = chip_config(args);
+    println!("== Fig 5(a): state mapping ==\n{}", StateMapping::AdjacentUnit.table());
+
+    println!("== Fig 5(b): 16-state program-verify sequence (one row, all 16 states) ==");
+    let mut chip = Chip::new(&cfg);
+    let codes: Vec<i8> = (0..256).map(|i| ((i % 16) as i8) - 8).collect();
+    let (_, rep) = chip.eflash.program_region(&codes).unwrap();
+    println!("{}", rep.sequence_trace());
+
+    println!("== Fig 5(c): charge pump VPP1-4 transient ==");
+    let tr = ChargePump::simulate(&cfg.analog, PumpMode::Program, 150e-6, 100e-9);
+    println!("  t[us]   VPP1    VPP2    VPP3    VPP4");
+    let n = tr.t.len();
+    for i in (0..n).step_by(n / 15) {
+        println!(
+            "{:7.1} {:7.2} {:7.2} {:7.2} {:7.2}",
+            tr.t[i] * 1e6, tr.vpp[0][i], tr.vpp[1][i], tr.vpp[2][i], tr.vpp[3][i]
+        );
+    }
+    println!(
+        "settled: VPP1={:.2} VPP2={:.2} VPP3={:.2} VPP4={:.2} (paper: ~10 V)\n",
+        tr.settled_vpp(0), tr.settled_vpp(1), tr.settled_vpp(2), tr.settled_vpp(3)
+    );
+
+    println!("== Fig 5(d): WL driver deliverable VRD (proposed vs conventional [7]) ==");
+    let prop = WlDriver::new(&cfg.analog, DriverKind::OverstressFree);
+    let conv = WlDriver::new(&cfg.analog, DriverKind::Conventional);
+    println!("  VRD_req  proposed  conventional");
+    for (req, got) in prop.vrd_sweep(11) {
+        println!("  {req:7.2}  {got:8.2}  {:12.2}", conv.deliverable_vrd(req));
+    }
+    let trv = prop.transient(WlOp::ProgramVerify, cfg.analog.vddh, 100e-9, 0.5e-9);
+    println!(
+        "proposed verify transient to VDDH: settles at {:.2} V, max device stress {:.2} V",
+        trv.wl.last().unwrap(),
+        trv.max_device_stress
+    );
+}
+
+fn cmd_fig6(args: &Args) {
+    let cfg = chip_config(args);
+    let dir = art_dir(args);
+    let inputs = experiments::load_table1_inputs(&dir).expect("artifacts");
+    for (name, model, bake_h) in [
+        ("MNIST (34K cells)", &inputs.mnist_model, 340.0),
+        ("AutoEncoder layer 9 (16K cells)", &inputs.ae_l9_model, 160.0),
+    ] {
+        let mut chip = Chip::new(&cfg);
+        let pm = chip.program_model(model).unwrap();
+        println!("\n== Fig 6: weight/state distribution — {name} ==");
+        println!("cells: {}", model.total_cells());
+        println!("-- before bake: Vt histogram (layer 0 region) --");
+        let h = chip.eflash.vt_histogram(&pm.regions[0], 52);
+        print!("{}", h.ascii(46));
+        let h_states = experiments::fig6_histograms(&mut chip, &pm);
+        println!("state occupancy (layer 0): {:?}", h_states[0]);
+        chip.bake(bake_h, cfg.retention.bake_temp_c);
+        println!("-- after {bake_h} h bake at {} C --", cfg.retention.bake_temp_c);
+        let h = chip.eflash.vt_histogram(&pm.regions[0], 52);
+        print!("{}", h.ascii(46));
+        let codes = chip.decoded_codes(&pm, 0);
+        let want = &model.layers[0].codes;
+        let exact = codes.iter().zip(want).filter(|(g, w)| g == w).count();
+        println!(
+            "layer-0 exact decode after bake: {:.2}%",
+            100.0 * exact as f64 / want.len() as f64
+        );
+    }
+}
+
+fn cmd_infer(args: &Args) {
+    let cfg = chip_config(args);
+    let dir = art_dir(args);
+    let inputs = experiments::load_table1_inputs(&dir).expect("artifacts");
+    let idx = args.opt_usize("index", 0);
+    let mut chip = Chip::new(&cfg);
+    let pm = chip.program_model(&inputs.mnist_model).unwrap();
+    let xq = inputs.mnist_test.image_q(idx);
+    let logits = chip.infer(&pm, &xq);
+    let pred = nvmcu::models::argmax_i8(&logits);
+    println!(
+        "MNIST[{idx}]: predicted {pred}, label {}, logits {:?}",
+        inputs.mnist_test.labels[idx], logits
+    );
+    let st = chip.stats();
+    let e = metrics::nmcu_energy(&st, &cfg.power);
+    println!(
+        "eflash reads {}, MACs {}, cycles {}, est. energy {:.2} uJ, latency {:.1} us",
+        st.eflash_reads,
+        st.mac_ops,
+        st.cycles,
+        e.total_uj(),
+        metrics::nmcu_latency_s(&st, &cfg) * 1e6
+    );
+}
+
+fn cmd_pump(args: &Args) {
+    let cfg = chip_config(args);
+    let dur = args.opt_f64("duration-us", 150.0) * 1e-6;
+    let tr = ChargePump::simulate(&cfg.analog, PumpMode::Program, dur, 50e-9);
+    println!("VPP4 settle time: {:.1} us", tr.settle_time() * 1e6);
+    for k in 0..4 {
+        println!("VPP{} settled: {:.2} V", k + 1, tr.settled_vpp(k));
+    }
+}
+
+fn cmd_retention(args: &Args) {
+    let cfg = chip_config(args);
+    let dir = art_dir(args);
+    let inputs = experiments::load_table1_inputs(&dir).expect("artifacts");
+    println!("bake sweep at {} C (MNIST):", cfg.retention.bake_temp_c);
+    println!("{:>8} {:>10} {:>10} {:>10} {:>9}", "hours", "exact%", "off1%", "worse%", "acc%");
+    for hours in [0.0, 40.0, 160.0, 340.0, 1000.0, 3000.0] {
+        let mut chip = Chip::new(&cfg);
+        let pm = chip.program_model(&inputs.mnist_model).unwrap();
+        chip.bake(hours, cfg.retention.bake_temp_c);
+        let acc = experiments::mnist_accuracy_chip(&mut chip, &pm, &inputs.mnist_test);
+        let mut e = nvmcu::eflash::DecodeErrors::default();
+        for i in 0..inputs.mnist_model.layers.len() {
+            let decoded = chip.decoded_codes(&pm, i);
+            for (g, w) in decoded.iter().zip(&inputs.mnist_model.layers[i].codes) {
+                let d = (*g as i32 - *w as i32).abs();
+                e.total += 1;
+                e.sum_abs_lsb += d as u64;
+                match d {
+                    0 => e.exact += 1,
+                    1 => e.off_by_one += 1,
+                    _ => e.worse += 1,
+                }
+            }
+        }
+        println!(
+            "{:>8} {:>10.3} {:>10.3} {:>10.4} {:>9.2}",
+            hours,
+            100.0 * e.exact_rate(),
+            100.0 * e.off_by_one as f64 / e.total as f64,
+            100.0 * e.worse as f64 / e.total as f64,
+            100.0 * acc
+        );
+    }
+    let eq_years =
+        nvmcu::eflash::retention::equivalent_hours(&cfg.retention, 160.0, 25.0) / 24.0 / 365.0;
+    println!("160 h @125C is equivalent to ~{eq_years:.0} years at 25C (Arrhenius)");
+}
+
+fn cmd_info(args: &Args) {
+    let cfg = chip_config(args);
+    println!("chip configuration:");
+    println!(
+        "  EFLASH: {} Mb, {} bits/cell, {} states, {} cells/read, {} banks",
+        cfg.eflash.capacity_bits / 1024 / 1024,
+        cfg.eflash.bits_per_cell,
+        cfg.eflash.n_states(),
+        cfg.eflash.cells_per_read,
+        cfg.eflash.banks
+    );
+    println!(
+        "  NMCU: {} PEs x {} lanes @ {} MHz",
+        cfg.nmcu.pes_per_macro,
+        cfg.nmcu.lanes_per_pe,
+        cfg.nmcu.clock_hz / 1e6
+    );
+    println!(
+        "  analog: VDDH {} V -> VPGM {} V, {}-stage doubler",
+        cfg.analog.vddh, cfg.analog.vpgm, cfg.analog.pump_stages
+    );
+    println!(
+        "  retention: tau {} h @{} C, Ea {} eV",
+        cfg.retention.tau_hours_at_bake,
+        cfg.retention.bake_temp_c,
+        cfg.retention.activation_energy_ev
+    );
+    println!(
+        "  artifacts: {:?} (present: {})",
+        art_dir(args),
+        artifacts::artifacts_available()
+    );
+}

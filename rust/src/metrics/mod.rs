@@ -1,0 +1,179 @@
+//! Energy / latency / standby-power models and the Table 2 comparison
+//! framework.
+//!
+//! Absolute joules are 28 nm-LP *estimates* (constants in
+//! `config::PowerConfig`, sources documented there and in DESIGN.md §2);
+//! what the paper's comparison actually rests on — and what these models
+//! preserve — are the *relative* properties: non-volatility (zero
+//! standby), 4 bits per cell (4x fewer cells and reads than 1 bit/cell),
+//! no extra process steps, and near-memory compute (no weight movement
+//! over the bus).
+
+use crate::config::{ChipConfig, PowerConfig};
+use crate::nmcu::NmcuStats;
+
+/// Energy breakdown of a workload [pJ].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EnergyBreakdown {
+    pub mac_pj: f64,
+    pub eflash_read_pj: f64,
+    pub bus_pj: f64,
+    pub writeback_pj: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total_pj(&self) -> f64 {
+        self.mac_pj + self.eflash_read_pj + self.bus_pj + self.writeback_pj
+    }
+
+    pub fn total_uj(&self) -> f64 {
+        self.total_pj() * 1e-6
+    }
+}
+
+/// Energy of an NMCU execution trace.
+pub fn nmcu_energy(stats: &NmcuStats, p: &PowerConfig) -> EnergyBreakdown {
+    EnergyBreakdown {
+        mac_pj: stats.mac_ops as f64 * p.mac_pj,
+        eflash_read_pj: stats.eflash_reads as f64 * p.eflash_read_pj,
+        bus_pj: stats.bus_bytes as f64 * p.bus_byte_pj,
+        // write-back touches the ping-pong SRAM cell once per output
+        writeback_pj: stats.writebacks as f64 * p.sram_byte_pj,
+    }
+}
+
+/// Latency of an NMCU execution trace [s].
+pub fn nmcu_latency_s(stats: &NmcuStats, cfg: &ChipConfig) -> f64 {
+    stats.cycles as f64 / cfg.nmcu.clock_hz
+}
+
+/// One row of the Table 2 comparison.
+#[derive(Clone, Debug)]
+pub struct CompareRow {
+    pub name: &'static str,
+    pub process_nm: u32,
+    pub process_overhead: bool,
+    pub bits_per_cell: u32,
+    pub memory_kind: &'static str,
+    pub non_volatile: bool,
+    pub activation_bits: &'static str,
+    pub weight_bits: &'static str,
+    /// measured/estimated standby power holding a 17 KB (34K x 4b) model
+    pub standby_uw: f64,
+    /// cells needed to store one 4-bit weight
+    pub cells_per_weight: f64,
+    /// reads needed per 256 4-bit weights
+    pub reads_per_256_weights: f64,
+}
+
+/// Build Table 2: the published comparison points [1][4][6] + this work,
+/// with the quantitative columns computed from the respective memory
+/// configurations (1 bit/cell needs 4 cells and 4x the read traffic for a
+/// 4-bit weight; volatile memories leak in standby).
+pub fn comparison_table(p: &PowerConfig) -> Vec<CompareRow> {
+    let model_kb = 34_142.0 * 4.0 / 8.0 / 1024.0; // the MNIST model footprint
+    vec![
+        CompareRow {
+            name: "[1] MRAM-CIM 22nm",
+            process_nm: 22,
+            process_overhead: true, // MRAM needs extra masks
+            bits_per_cell: 1,
+            memory_kind: "MRAM",
+            non_volatile: true,
+            activation_bits: "1b",
+            weight_bits: "4b",
+            standby_uw: 0.0, // non-volatile
+            cells_per_weight: 4.0,
+            reads_per_256_weights: 4.0,
+        },
+        CompareRow {
+            name: "[4] SRAM-CIM 18nm",
+            process_nm: 18,
+            process_overhead: false,
+            bits_per_cell: 1,
+            memory_kind: "SRAM",
+            non_volatile: false,
+            activation_bits: "1-4b",
+            weight_bits: "1-4b",
+            standby_uw: model_kb * p.sram_leak_uw_per_kb,
+            cells_per_weight: 4.0,
+            reads_per_256_weights: 4.0,
+        },
+        CompareRow {
+            name: "[6] iMCU SRAM 28nm",
+            process_nm: 28,
+            process_overhead: false,
+            bits_per_cell: 1,
+            memory_kind: "SRAM",
+            non_volatile: false,
+            activation_bits: "8b",
+            weight_bits: "8b",
+            standby_uw: 2.0 * model_kb * p.sram_leak_uw_per_kb, // 8b weights
+            cells_per_weight: 8.0,
+            reads_per_256_weights: 8.0,
+        },
+        CompareRow {
+            name: "This Work EFLASH 28nm",
+            process_nm: 28,
+            process_overhead: false, // standard logic compatible
+            bits_per_cell: 4,
+            memory_kind: "EFLASH",
+            non_volatile: true,
+            activation_bits: "8b",
+            weight_bits: "4b",
+            standby_uw: p.eflash_standby_uw,
+            cells_per_weight: 1.0,
+            reads_per_256_weights: 1.0,
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn energy_scales_with_work() {
+        let p = PowerConfig::default();
+        let s1 = NmcuStats { eflash_reads: 10, mac_ops: 1280, writebacks: 20,
+                             cycles: 100, bus_bytes: 784, layers_run: 1 };
+        let mut s2 = s1;
+        s2.eflash_reads *= 2;
+        s2.mac_ops *= 2;
+        let e1 = nmcu_energy(&s1, &p);
+        let e2 = nmcu_energy(&s2, &p);
+        assert!(e2.total_pj() > e1.total_pj());
+        assert!(e1.total_pj() > 0.0);
+        assert_eq!(e2.mac_pj, 2.0 * e1.mac_pj);
+    }
+
+    #[test]
+    fn table2_shape_matches_paper() {
+        let rows = comparison_table(&PowerConfig::default());
+        assert_eq!(rows.len(), 4);
+        let this_work = &rows[3];
+        // the paper's claims, as checkable properties:
+        assert_eq!(this_work.bits_per_cell, 4);
+        assert!(!this_work.process_overhead);
+        assert!(this_work.non_volatile);
+        assert_eq!(this_work.standby_uw, 0.0);
+        // 4 bits/cell needs 4x fewer cells than every 1 bit/cell entry
+        for r in &rows[..3] {
+            assert!(r.cells_per_weight >= 4.0 * this_work.cells_per_weight);
+            assert!(r.reads_per_256_weights >= 4.0 * this_work.reads_per_256_weights);
+        }
+        // only the MRAM design needs extra process steps
+        assert!(rows[0].process_overhead);
+        assert!(!rows[1].process_overhead);
+        // volatile designs leak
+        assert!(rows[1].standby_uw > 0.0);
+        assert!(rows[2].standby_uw > rows[1].standby_uw);
+    }
+
+    #[test]
+    fn latency_uses_nmcu_clock() {
+        let cfg = ChipConfig::new();
+        let s = NmcuStats { cycles: 100_000_000, ..Default::default() };
+        assert!((nmcu_latency_s(&s, &cfg) - 1.0).abs() < 1e-9); // 100 MHz
+    }
+}

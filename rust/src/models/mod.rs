@@ -1,0 +1,202 @@
+//! Model-level operations in pure rust: quantized-layer reference math
+//! (held bit-exact to the NMCU and the HLO graph) and the float
+//! AutoEncoder path used when PJRT is not on the menu (tests, ablations).
+
+use crate::artifacts::{AeFloat, QLayer, QModel};
+use crate::nmcu::{quant, reference_mvm};
+
+/// Run a full quantized model (all layers) through the software reference
+/// path. Input is the int8 input vector; returns the final int8 outputs.
+pub fn qmodel_forward(model: &QModel, x_q: &[i8]) -> Vec<i8> {
+    let mut h = x_q.to_vec();
+    for l in &model.layers {
+        h = reference_mvm(&h, &l.codes, l.k, l.n, &l.bias, l.requant, l.relu);
+    }
+    h
+}
+
+/// Same, but with a per-layer override of the weight codes (for running
+/// against EFLASH-decoded, possibly drifted, codes).
+pub fn qmodel_forward_with(
+    model: &QModel,
+    codes_per_layer: &[Vec<i8>],
+    x_q: &[i8],
+) -> Vec<i8> {
+    let mut h = x_q.to_vec();
+    for (l, codes) in model.layers.iter().zip(codes_per_layer) {
+        h = reference_mvm(&h, codes, l.k, l.n, &l.bias, l.requant, l.relu);
+    }
+    h
+}
+
+/// argmax over int8 logits (MNIST classification head).
+pub fn argmax_i8(v: &[i8]) -> usize {
+    let mut best = 0usize;
+    for (i, &x) in v.iter().enumerate() {
+        if x > v[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+// ---------------------------------------------------------------------------
+// Float AutoEncoder (off-chip layers of Fig 7)
+// ---------------------------------------------------------------------------
+
+fn linear_f32(x: &[f32], w: &[f32], b: &[f32], k: usize, n: usize, relu: bool) -> Vec<f32> {
+    debug_assert_eq!(x.len(), k);
+    debug_assert_eq!(w.len(), k * n);
+    let mut out = b.to_vec();
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue; // post-ReLU activations are sparse
+        }
+        let row = &w[i * n..(i + 1) * n];
+        for (o, &wij) in out.iter_mut().zip(row) {
+            *o += xi * wij;
+        }
+    }
+    if relu {
+        for o in out.iter_mut() {
+            if *o < 0.0 {
+                *o = 0.0;
+            }
+        }
+    }
+    out
+}
+
+/// Normalize an input clip with the training statistics.
+pub fn ae_normalize(ae: &AeFloat, x: &[f32]) -> Vec<f32> {
+    x.iter()
+        .zip(ae.x_mean.iter().zip(&ae.x_std))
+        .map(|(&v, (&m, &s))| (v - m) / s)
+        .collect()
+}
+
+/// Layers 1..=8 (float) then quantize to the layer-9 int8 input.
+pub fn ae_pre(ae: &AeFloat, x: &[f32]) -> Vec<i8> {
+    let mut h = ae_normalize(ae, x);
+    for i in 0..ae.onchip_layer - 1 {
+        let (k, n) = ae.dims[i];
+        h = linear_f32(&h, &ae.weights[i], &ae.biases[i], k, n, true);
+    }
+    h.iter()
+        .map(|&v| quant::quantize_f32(v, ae.l9_s_in as f32, ae.l9_z_in))
+        .collect()
+}
+
+/// Dequantize the layer-9 int8 output and run layer 10 (float, linear).
+pub fn ae_post(ae: &AeFloat, y9_q: &[i8]) -> Vec<f32> {
+    let h: Vec<f32> = y9_q
+        .iter()
+        .map(|&q| quant::dequantize_i8(q, ae.l9_s_out as f32, ae.l9_z_out))
+        .collect();
+    let i = ae.onchip_layer; // 0-indexed layer 10
+    let (k, n) = ae.dims[i];
+    linear_f32(&h, &ae.weights[i], &ae.biases[i], k, n, false)
+}
+
+/// Anomaly score: MSE between the normalized input and the reconstruction.
+pub fn ae_score(ae: &AeFloat, x: &[f32], recon: &[f32]) -> f64 {
+    let xn = ae_normalize(ae, x);
+    let mut s = 0.0f64;
+    for (a, b) in xn.iter().zip(recon) {
+        let d = (*a - *b) as f64;
+        s += d * d;
+    }
+    s / xn.len() as f64
+}
+
+/// All-float reference path (no quantization; sanity baseline).
+pub fn ae_forward_float(ae: &AeFloat, x: &[f32]) -> Vec<f32> {
+    let mut h = ae_normalize(ae, x);
+    let nl = ae.dims.len();
+    for i in 0..nl {
+        let (k, n) = ae.dims[i];
+        h = linear_f32(&h, &ae.weights[i], &ae.biases[i], k, n, i < nl - 1);
+    }
+    h
+}
+
+/// Chip-equivalent AE path with an externally supplied layer-9 executor
+/// (the NMCU, the HLO runtime, or the rust reference).
+pub fn ae_forward_split(
+    ae: &AeFloat,
+    l9: impl FnOnce(&[i8]) -> Vec<i8>,
+    x: &[f32],
+) -> (Vec<f32>, f64) {
+    let xq = ae_pre(ae, x);
+    let y9 = l9(&xq);
+    let recon = ae_post(ae, &y9);
+    let score = ae_score(ae, x, &recon);
+    (recon, score)
+}
+
+/// The layer-9 reference executor from a QLayer (rust oracle).
+pub fn l9_reference(l: &QLayer) -> impl Fn(&[i8]) -> Vec<i8> + '_ {
+    move |xq| reference_mvm(xq, &l.codes, l.k, l.n, &l.bias, l.requant, l.relu)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::artifacts::QLayer;
+    use crate::nmcu::Requant;
+
+    fn tiny_qmodel() -> QModel {
+        let l1 = QLayer {
+            name: "fc1".into(),
+            k: 4,
+            n: 3,
+            relu: true,
+            codes: vec![1, -1, 2, /* row0 */ 0, 3, -2, /* row1 */ 1, 1, 1, -8, 7, 0],
+            bias: vec![10, -10, 0],
+            requant: Requant { m0: 1 << 30, shift: 33, z_out: -5 },
+            z_in: 0,
+            s_in: 1.0,
+            s_w: 1.0,
+            s_out: 1.0,
+        };
+        QModel { name: "tiny".into(), layers: vec![l1] }
+    }
+
+    #[test]
+    fn qmodel_forward_single_layer() {
+        let m = tiny_qmodel();
+        let out = qmodel_forward(&m, &[1, 2, 3, 4]);
+        // acc_j = bias + sum x_i w_ij ; requant = round(acc/8) - 5, relu at -5
+        // col0: 10 + 1*1+2*0+3*1+4*-8 = -18 -> round(-18/8)=-2 -> -7 -> relu -5
+        // col1: -10 + (-1+6+3+28)=26 -> 3 -> -2
+        // col2: 0 + (2-4+3+0)=1 -> 0 -> -5
+        assert_eq!(out, vec![-5, -2, -5]);
+    }
+
+    #[test]
+    fn argmax_ties_take_first() {
+        assert_eq!(argmax_i8(&[1, 5, 5, 2]), 1);
+        assert_eq!(argmax_i8(&[-3]), 0);
+    }
+
+    #[test]
+    fn linear_f32_matches_manual() {
+        let x = [1.0f32, -2.0];
+        let w = [0.5f32, 1.0, -1.0, 2.0]; // (2,2) row-major
+        let b = [0.0f32, 1.0];
+        let y = linear_f32(&x, &w, &b, 2, 2, false);
+        assert_eq!(y, vec![0.5 + 2.0, 1.0 + 1.0 - 4.0]);
+        let yr = linear_f32(&x, &w, &b, 2, 2, true);
+        assert_eq!(yr, vec![2.5, 0.0]);
+    }
+
+    #[test]
+    fn forward_with_override_changes_result() {
+        let m = tiny_qmodel();
+        let clean = qmodel_forward(&m, &[1, 2, 3, 4]);
+        let mut drifted = m.layers[0].codes.clone();
+        drifted[1] = 5; // perturb one weight a lot
+        let out = qmodel_forward_with(&m, &[drifted], &[1, 2, 3, 4]);
+        assert_ne!(clean, out);
+    }
+}

@@ -1,0 +1,180 @@
+//! NMCU activation buffers (paper Fig 2).
+//!
+//! - The *input buffer* receives the first input vector from the host
+//!   (via DMA/bus).
+//! - The *ping-pong buffer* holds layer outputs: the result of layer L
+//!   is written to one half while the other half feeds layer L+1 — so a
+//!   multi-layer model like the FC-AutoEncoder moves NO activation data
+//!   over the system bus between layers ("no additional data movement is
+//!   required beyond the first input vector", §2.2).
+//! - The *input fetcher* multiplexes between the two sources.
+
+/// Double-buffered int8 activation store.
+#[derive(Clone, Debug)]
+pub struct PingPong {
+    half: [Vec<i8>; 2],
+    /// which half currently holds valid layer output (the "read" side)
+    active: usize,
+    /// bytes written to each half over the run (data-movement accounting)
+    pub bytes_written: u64,
+    pub bytes_read: u64,
+}
+
+impl PingPong {
+    pub fn new(capacity: usize) -> Self {
+        PingPong {
+            half: [vec![0; capacity], vec![0; capacity]],
+            active: 0,
+            bytes_written: 0,
+            bytes_read: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.half[0].len()
+    }
+
+    /// The side the next layer reads from.
+    pub fn read_side(&self) -> &[i8] {
+        &self.half[self.active]
+    }
+
+    /// Write a full layer output to the inactive side and flip. This is
+    /// the NMCU write-back path (one int8 per requantized output).
+    pub fn write_and_flip(&mut self, data: &[i8]) {
+        assert!(data.len() <= self.capacity(), "layer output exceeds ping-pong half");
+        let side = 1 - self.active;
+        self.half[side][..data.len()].copy_from_slice(data);
+        self.bytes_written += data.len() as u64;
+        self.active = side;
+    }
+
+    /// Write one element to the inactive side (streaming write-back).
+    pub fn write_element(&mut self, idx: usize, v: i8) {
+        let side = 1 - self.active;
+        self.half[side][idx] = v;
+        self.bytes_written += 1;
+    }
+
+    /// Flip after a streaming write-back pass.
+    pub fn flip(&mut self) {
+        self.active = 1 - self.active;
+    }
+
+    pub fn note_read(&mut self, n: usize) {
+        self.bytes_read += n as u64;
+    }
+}
+
+/// Where the next layer's input comes from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FetchSource {
+    InputBuffer,
+    PingPong,
+}
+
+/// The input fetcher: supplies 128-element input slices to the PEs.
+#[derive(Clone, Debug)]
+pub struct Fetcher {
+    pub input: Vec<i8>,
+    pub source: FetchSource,
+    /// pad value for slices past the end of the vector: the input's
+    /// zero-point (real 0), so padded lanes contribute z_x * w — exactly
+    /// what the bias correction term expects
+    pub pad: i8,
+    pub input_len: usize,
+}
+
+impl Fetcher {
+    pub fn new(capacity: usize) -> Self {
+        Fetcher {
+            input: vec![0; capacity],
+            source: FetchSource::InputBuffer,
+            pad: 0,
+            input_len: 0,
+        }
+    }
+
+    /// Host loads the first input vector (the only bus data movement a
+    /// fully-on-chip model needs).
+    pub fn load_input(&mut self, data: &[i8], pad: i8) {
+        assert!(data.len() <= self.input.len(), "input exceeds input buffer");
+        self.input[..data.len()].copy_from_slice(data);
+        self.input_len = data.len();
+        self.pad = pad;
+        self.source = FetchSource::InputBuffer;
+    }
+
+    /// Fetch lane slice [offset, offset+lanes) into `out`, padding past
+    /// the end of the logical vector. Hot path: slice copy + pad fill
+    /// (the per-element branchy form cost ~60% of layer time, §Perf).
+    pub fn fetch(&self, pp: &PingPong, len: usize, offset: usize, out: &mut [i8]) {
+        let src: &[i8] = match self.source {
+            FetchSource::InputBuffer => &self.input[..self.input_len.min(self.input.len())],
+            FetchSource::PingPong => &pp.read_side()[..len],
+        };
+        let logical = len.min(src.len());
+        let n_copy = logical.saturating_sub(offset).min(out.len());
+        out[..n_copy].copy_from_slice(&src[offset..offset + n_copy]);
+        out[n_copy..].fill(self.pad);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pingpong_flips_sides() {
+        let mut pp = PingPong::new(16);
+        pp.write_and_flip(&[1, 2, 3]);
+        assert_eq!(&pp.read_side()[..3], &[1, 2, 3]);
+        pp.write_and_flip(&[9, 9]);
+        assert_eq!(&pp.read_side()[..2], &[9, 9]);
+        // the first write is still on the other side (not clobbered)
+        assert_eq!(pp.half[1 - pp.active][..3], [1, 2, 3]);
+        assert_eq!(pp.bytes_written, 5);
+    }
+
+    #[test]
+    fn streaming_writeback_then_flip() {
+        let mut pp = PingPong::new(8);
+        for i in 0..4 {
+            pp.write_element(i, (i as i8) * 2);
+        }
+        pp.flip();
+        assert_eq!(&pp.read_side()[..4], &[0, 2, 4, 6]);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds ping-pong half")]
+    fn overflow_panics() {
+        let mut pp = PingPong::new(4);
+        pp.write_and_flip(&[0; 5]);
+    }
+
+    #[test]
+    fn fetcher_pads_with_zero_point() {
+        let mut f = Fetcher::new(32);
+        let pp = PingPong::new(32);
+        f.load_input(&[10, 20, 30], -7);
+        let mut out = [0i8; 8];
+        f.fetch(&pp, 3, 0, &mut out);
+        assert_eq!(out, [10, 20, 30, -7, -7, -7, -7, -7]);
+        f.fetch(&pp, 3, 2, &mut out);
+        assert_eq!(out, [30, -7, -7, -7, -7, -7, -7, -7]);
+    }
+
+    #[test]
+    fn fetcher_switches_to_pingpong() {
+        let mut f = Fetcher::new(8);
+        let mut pp = PingPong::new(8);
+        f.load_input(&[1, 1], 0);
+        pp.write_and_flip(&[5, 6, 7]);
+        f.source = FetchSource::PingPong;
+        f.pad = -128;
+        let mut out = [0i8; 4];
+        f.fetch(&pp, 3, 0, &mut out);
+        assert_eq!(out, [5, 6, 7, -128]);
+    }
+}

@@ -1,0 +1,418 @@
+//! Near-Memory Computing Unit (paper Fig 2).
+//!
+//! The NMCU sits directly on the 4-bits/cell EFLASH macro's 256-cell
+//! read port. Its flow-control logic turns one launch command (a single
+//! RISC-V custom instruction, §2.2) into the full address sequence of a
+//! matrix-vector multiply: for every output column pair it streams the
+//! K-dimension tiles, each EFLASH read feeding both PEs with 128 weights;
+//! accumulators requantize to int8 and write back to the ping-pong
+//! buffer, which feeds the next layer without any bus traffic.
+
+pub mod buffer;
+pub mod pe;
+pub mod quant;
+
+use crate::eflash::EflashMacro;
+pub use buffer::{FetchSource, Fetcher, PingPong};
+pub use pe::Pe;
+pub use quant::{requantize, Requant};
+
+/// Everything the flow-control logic needs to run one layer's MVM.
+/// (The firmware writes this descriptor to NMCU CSRs; `coordinator`
+/// builds it from the model artifacts.)
+#[derive(Clone, Debug)]
+pub struct LayerDesc {
+    /// first EFLASH row of the layer's weight region
+    pub first_row: usize,
+    /// contraction length (input features)
+    pub k: usize,
+    /// output features
+    pub n: usize,
+    /// int32 bias with the z_in correction folded (artifact `bias_q`)
+    pub bias: Vec<i32>,
+    pub requant: Requant,
+    pub relu: bool,
+}
+
+impl LayerDesc {
+    pub fn k_tiles(&self, lanes: usize) -> usize {
+        self.k.div_ceil(lanes)
+    }
+
+    pub fn col_pairs(&self) -> usize {
+        self.n.div_ceil(2)
+    }
+
+    /// EFLASH rows occupied by this layer.
+    pub fn n_rows(&self, lanes: usize) -> usize {
+        self.k_tiles(lanes) * self.col_pairs()
+    }
+}
+
+/// Lay out a row-major (K, N) int4 code matrix into the EFLASH row image
+/// the flow control expects: row index = pair * k_tiles + k_tile, first
+/// 128 cells = column 2*pair, next 128 = column 2*pair+1. Out-of-range
+/// cells keep the erased code (-8) and are never touched by a MAC whose
+/// input lane is zero-padded.
+pub fn layout_codes(w: &[i8], k: usize, n: usize, lanes: usize) -> Vec<i8> {
+    assert_eq!(w.len(), k * n);
+    let k_tiles = k.div_ceil(lanes);
+    let pairs = n.div_ceil(2);
+    let cells_per_row = 2 * lanes;
+    let mut out = vec![-8i8; k_tiles * pairs * cells_per_row];
+    for p in 0..pairs {
+        for t in 0..k_tiles {
+            let row = p * k_tiles + t;
+            let base = row * cells_per_row;
+            for lane in 0..lanes {
+                let ki = t * lanes + lane;
+                if ki >= k {
+                    break;
+                }
+                let c0 = 2 * p;
+                out[base + lane] = w[ki * n + c0];
+                if c0 + 1 < n {
+                    out[base + lanes + lane] = w[ki * n + c0 + 1];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Execution statistics (feed the cycle/energy models and the ablations).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct NmcuStats {
+    pub eflash_reads: u64,
+    pub mac_ops: u64,
+    pub writebacks: u64,
+    pub cycles: u64,
+    /// bytes that crossed the system bus into/out of the NMCU
+    pub bus_bytes: u64,
+    pub layers_run: u64,
+}
+
+impl NmcuStats {
+    pub fn add(&mut self, o: &NmcuStats) {
+        self.eflash_reads += o.eflash_reads;
+        self.mac_ops += o.mac_ops;
+        self.writebacks += o.writebacks;
+        self.cycles += o.cycles;
+        self.bus_bytes += o.bus_bytes;
+        self.layers_run += o.layers_run;
+    }
+}
+
+/// The near-memory computing unit.
+pub struct Nmcu {
+    pub cfg: crate::config::NmcuConfig,
+    pub pes: Vec<Pe>,
+    pub pingpong: PingPong,
+    pub fetcher: Fetcher,
+    pub stats: NmcuStats,
+    /// scratch row buffer (one EFLASH read)
+    row_buf: Vec<i8>,
+    /// scratch input slice
+    x_buf: Vec<i8>,
+}
+
+impl Nmcu {
+    pub fn new(cfg: &crate::config::NmcuConfig) -> Self {
+        Nmcu {
+            cfg: cfg.clone(),
+            pes: (0..cfg.pes_per_macro).map(|_| Pe::new(cfg.lanes_per_pe)).collect(),
+            pingpong: PingPong::new(cfg.pingpong_capacity),
+            fetcher: Fetcher::new(cfg.input_capacity),
+            stats: NmcuStats::default(),
+            row_buf: vec![0; cfg.pes_per_macro * cfg.lanes_per_pe],
+            x_buf: vec![0; cfg.lanes_per_pe],
+        }
+    }
+
+    /// Host-side input load (counted as bus traffic — the ONLY activation
+    /// bytes a fully-on-chip model moves, §2.2).
+    pub fn load_input(&mut self, x_q: &[i8]) {
+        // pad lanes past the logical end contribute x=0 ("real" zero is
+        // handled by the folded bias, padded EFLASH cells see x=0)
+        self.fetcher.load_input(x_q, 0);
+        self.stats.bus_bytes += x_q.len() as u64;
+    }
+
+    /// Run one layer MVM entirely near-memory. The input comes from the
+    /// buffer selected by `self.fetcher.source`; the output lands in the
+    /// ping-pong buffer (and is also returned for inspection).
+    pub fn execute_layer(&mut self, eflash: &mut EflashMacro, desc: &LayerDesc) -> Vec<i8> {
+        let lanes = self.cfg.lanes_per_pe;
+        assert_eq!(
+            eflash.cells_per_read(),
+            lanes * self.cfg.pes_per_macro,
+            "EFLASH read width must equal PEs x lanes"
+        );
+        assert!(desc.n <= self.pingpong.capacity(), "output exceeds ping-pong half");
+        assert_eq!(desc.bias.len(), desc.n);
+        let k_tiles = desc.k_tiles(lanes);
+        let pairs = desc.col_pairs();
+        let mut out = vec![0i8; desc.n];
+
+        for p in 0..pairs {
+            let mut acc0 = desc.bias[2 * p];
+            let mut acc1 = if 2 * p + 1 < desc.n { desc.bias[2 * p + 1] } else { 0 };
+            for t in 0..k_tiles {
+                let row = desc.first_row + p * k_tiles + t;
+                self.fetcher.fetch(&self.pingpong, desc.k, t * lanes, &mut self.x_buf);
+                // zero-copy row access in Cached mode (the hot path);
+                // Resample mode goes through the noisy sense chain
+                let row_data: &[i8] = match eflash.read_mode {
+                    crate::eflash::read::ReadMode::Cached => eflash.row_cached(row),
+                    crate::eflash::read::ReadMode::Resample => {
+                        eflash.read_row(row, &mut self.row_buf);
+                        &self.row_buf
+                    }
+                };
+                self.stats.eflash_reads += 1;
+                self.stats.cycles += self.cfg.read_latency_cycles;
+                // PE0: even column, PE1: odd column — same input slice
+                acc0 = self.pes[0].accumulate(acc0, &self.x_buf, &row_data[..lanes]);
+                self.stats.mac_ops += lanes as u64;
+                if 2 * p + 1 < desc.n {
+                    acc1 = self.pes[1].accumulate(acc1, &self.x_buf, &row_data[lanes..]);
+                    self.stats.mac_ops += lanes as u64;
+                }
+                self.stats.cycles += self.cfg.mac_cycles;
+            }
+            // requantize + write back to the ping-pong buffer
+            let mut q0 = requantize(acc0, desc.requant);
+            if desc.relu {
+                q0 = quant::relu_q(q0, desc.requant.z_out);
+            }
+            out[2 * p] = q0;
+            self.pingpong.write_element(2 * p, q0);
+            self.stats.writebacks += 1;
+            self.stats.cycles += self.cfg.writeback_cycles;
+            if 2 * p + 1 < desc.n {
+                let mut q1 = requantize(acc1, desc.requant);
+                if desc.relu {
+                    q1 = quant::relu_q(q1, desc.requant.z_out);
+                }
+                out[2 * p + 1] = q1;
+                self.pingpong.write_element(2 * p + 1, q1);
+                self.stats.writebacks += 1;
+                self.stats.cycles += self.cfg.writeback_cycles;
+            }
+        }
+        self.pingpong.flip();
+        self.pingpong.note_read(desc.k * k_tiles.min(1)); // logical read of input
+        // subsequent layers read from the ping-pong buffer
+        self.fetcher.source = FetchSource::PingPong;
+        self.fetcher.pad = 0;
+        self.stats.layers_run += 1;
+        out
+    }
+
+    /// Read the final result back over the bus (counted).
+    pub fn read_output(&mut self, n: usize) -> Vec<i8> {
+        self.stats.bus_bytes += n as u64;
+        self.pingpong.read_side()[..n].to_vec()
+    }
+
+    /// Reset per-inference state (buffers + fetch source, not counters).
+    pub fn begin_inference(&mut self) {
+        self.fetcher.source = FetchSource::InputBuffer;
+        self.fetcher.pad = 0;
+    }
+
+    /// Wall-clock estimate at the configured NMCU clock.
+    pub fn elapsed_seconds(&self) -> f64 {
+        self.stats.cycles as f64 / self.cfg.clock_hz
+    }
+}
+
+/// Pure-software reference MVM over decoded codes (what the NMCU must
+/// match bit-exactly; also the "ideal weights" path for ablations).
+pub fn reference_mvm(
+    x_q: &[i8],
+    w_codes: &[i8], // row-major (K, N)
+    k: usize,
+    n: usize,
+    bias: &[i32],
+    rq: Requant,
+    relu: bool,
+) -> Vec<i8> {
+    assert_eq!(w_codes.len(), k * n);
+    assert_eq!(bias.len(), n);
+    let mut out = vec![0i8; n];
+    for j in 0..n {
+        let mut acc = bias[j] as i64;
+        for i in 0..k.min(x_q.len()) {
+            acc += x_q[i] as i64 * w_codes[i * n + j] as i64;
+        }
+        let acc32 = acc.clamp(i32::MIN as i64, i32::MAX as i64) as i32;
+        let mut q = requantize(acc32, rq);
+        if relu {
+            q = quant::relu_q(q, rq.z_out);
+        }
+        out[j] = q;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ChipConfig;
+    use crate::util::prop_check;
+
+    fn chip() -> ChipConfig {
+        let mut c = ChipConfig::new();
+        c.eflash.capacity_bits = 1024 * 1024; // 256K cells
+        c
+    }
+
+    fn program_layer(
+        eflash: &mut EflashMacro,
+        w: &[i8],
+        k: usize,
+        n: usize,
+        bias: Vec<i32>,
+        rq: Requant,
+        relu: bool,
+    ) -> LayerDesc {
+        let image = layout_codes(w, k, n, 128);
+        let (region, rep) = eflash.program_region(&image).unwrap();
+        assert_eq!(rep.failed_cells, 0);
+        LayerDesc { first_row: region.first_row, k, n, bias, requant: rq, relu }
+    }
+
+    #[test]
+    fn layout_roundtrip_positions() {
+        // K=3, N=3 with lanes=4: check specific cell positions
+        let w: Vec<i8> = vec![
+            1, 2, 3, //
+            4, 5, 6, //
+            7, -8, -1,
+        ];
+        let img = layout_codes(&w, 3, 3, 4);
+        // pairs=2, k_tiles=1, cells_per_row=8
+        assert_eq!(img.len(), 16);
+        // row 0 (pair 0): col0 = [1,4,7,pad], col1 = [2,5,-8,pad]
+        assert_eq!(&img[0..4], &[1, 4, 7, -8]);
+        assert_eq!(&img[4..8], &[2, 5, -8, -8]);
+        // row 1 (pair 1): col2 = [3,6,-1,pad], col3 absent -> erased
+        assert_eq!(&img[8..12], &[3, 6, -1, -8]);
+        assert_eq!(&img[12..16], &[-8, -8, -8, -8]);
+    }
+
+    #[test]
+    fn nmcu_matches_reference_exactly() {
+        let cfg = chip();
+        let mut eflash = EflashMacro::new(&cfg);
+        let mut nmcu = Nmcu::new(&cfg.nmcu);
+        let mut r = crate::util::rng::Rng::new(5);
+        let (k, n) = (200, 30);
+        let w: Vec<i8> = (0..k * n).map(|_| (r.below(16) as i8) - 8).collect();
+        let bias: Vec<i32> = (0..n).map(|_| (r.below(20000) as i32) - 10000).collect();
+        let rq = Requant { m0: 1_518_500_250, shift: 40, z_out: -3 };
+        let desc = program_layer(&mut eflash, &w, k, n, bias.clone(), rq, true);
+        let x: Vec<i8> = (0..k).map(|_| (r.below(256) as i32 - 128) as i8).collect();
+
+        nmcu.begin_inference();
+        nmcu.load_input(&x);
+        let got = nmcu.execute_layer(&mut eflash, &desc);
+        let want = reference_mvm(&x, &w, k, n, &bias, rq, true);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn multilayer_chains_through_pingpong_without_bus_traffic() {
+        let cfg = chip();
+        let mut eflash = EflashMacro::new(&cfg);
+        let mut nmcu = Nmcu::new(&cfg.nmcu);
+        let mut r = crate::util::rng::Rng::new(6);
+        let rq = Requant { m0: 1_200_000_000, shift: 38, z_out: -10 };
+        let (k1, n1, n2) = (50, 20, 8);
+        let w1: Vec<i8> = (0..k1 * n1).map(|_| (r.below(16) as i8) - 8).collect();
+        let w2: Vec<i8> = (0..n1 * n2).map(|_| (r.below(16) as i8) - 8).collect();
+        let b1 = vec![100i32; n1];
+        let b2 = vec![-50i32; n2];
+        let d1 = program_layer(&mut eflash, &w1, k1, n1, b1.clone(), rq, true);
+        let d2 = program_layer(&mut eflash, &w2, n1, n2, b2.clone(), rq, false);
+
+        let x: Vec<i8> = (0..k1).map(|_| (r.below(256) as i32 - 128) as i8).collect();
+        nmcu.begin_inference();
+        nmcu.load_input(&x);
+        let bus_after_input = nmcu.stats.bus_bytes;
+        let h = nmcu.execute_layer(&mut eflash, &d1);
+        let y = nmcu.execute_layer(&mut eflash, &d2);
+        // no bus bytes moved between the two layers
+        assert_eq!(nmcu.stats.bus_bytes, bus_after_input);
+        // bit-exact against the chained reference
+        let h_ref = reference_mvm(&x, &w1, k1, n1, &b1, rq, true);
+        assert_eq!(h, h_ref);
+        let y_ref = reference_mvm(&h_ref, &w2, n1, n2, &b2, rq, false);
+        assert_eq!(y, y_ref);
+    }
+
+    #[test]
+    fn read_count_matches_paper_formula() {
+        // ceil(K/128) * ceil(N/2) reads per MVM (Fig 2 geometry)
+        let cfg = chip();
+        let mut eflash = EflashMacro::new(&cfg);
+        let mut nmcu = Nmcu::new(&cfg.nmcu);
+        let (k, n) = (784, 43);
+        let w = vec![1i8; k * n];
+        let rq = Requant { m0: 1 << 30, shift: 35, z_out: 0 };
+        let desc = program_layer(&mut eflash, &w, k, n, vec![0; n], rq, false);
+        nmcu.begin_inference();
+        nmcu.load_input(&vec![1i8; k]);
+        nmcu.execute_layer(&mut eflash, &desc);
+        assert_eq!(nmcu.stats.eflash_reads, 7 * 22);
+        assert_eq!(nmcu.stats.writebacks, 43);
+    }
+
+    #[test]
+    fn prop_nmcu_equals_reference() {
+        prop_check(12, |r| {
+            let cfg = chip();
+            let mut eflash = EflashMacro::new(&cfg);
+            let mut nmcu = Nmcu::new(&cfg.nmcu);
+            let k = 1 + r.below(300) as usize;
+            let n = 1 + r.below(40) as usize;
+            let w: Vec<i8> = (0..k * n).map(|_| (r.below(16) as i8) - 8).collect();
+            let bias: Vec<i32> =
+                (0..n).map(|_| (r.below(4000) as i32) - 2000).collect();
+            let rq = Requant {
+                m0: (1 << 30) + r.below(1 << 30) as i32,
+                shift: 36 + r.below(8) as u32,
+                z_out: (r.below(40) as i32 - 20) as i8,
+            };
+            let relu = r.chance(0.5);
+            let desc = program_layer(&mut eflash, &w, k, n, bias.clone(), rq, relu);
+            let x: Vec<i8> = (0..k).map(|_| (r.below(256) as i32 - 128) as i8).collect();
+            nmcu.begin_inference();
+            nmcu.load_input(&x);
+            let got = nmcu.execute_layer(&mut eflash, &desc);
+            let want = reference_mvm(&x, &w, k, n, &bias, rq, relu);
+            assert_eq!(got, want, "k={k} n={n}");
+        });
+    }
+
+    #[test]
+    fn cycle_model_accumulates() {
+        let cfg = chip();
+        let mut eflash = EflashMacro::new(&cfg);
+        let mut nmcu = Nmcu::new(&cfg.nmcu);
+        let w = vec![0i8; 128 * 2];
+        let rq = Requant { m0: 1 << 30, shift: 35, z_out: 0 };
+        let desc = program_layer(&mut eflash, &w, 128, 2, vec![0, 0], rq, false);
+        nmcu.begin_inference();
+        nmcu.load_input(&vec![1i8; 128]);
+        nmcu.execute_layer(&mut eflash, &desc);
+        // 1 read + 1 mac + 2 writebacks
+        let c = &cfg.nmcu;
+        assert_eq!(
+            nmcu.stats.cycles,
+            c.read_latency_cycles + c.mac_cycles + 2 * c.writeback_cycles
+        );
+        assert!(nmcu.elapsed_seconds() > 0.0);
+    }
+}

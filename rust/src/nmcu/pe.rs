@@ -1,0 +1,125 @@
+//! Processing element: the 128-lane int8 x int4 MAC datapath.
+//!
+//! One EFLASH read delivers 256 4-bit weights; the two PEs of the macro
+//! each consume 128 of them against the same 128-element input slice
+//! (paper Fig 2: "one PE can process MAC operations of up to 128
+//! elements per EFLASH read"). The accumulator is int32; worst case
+//! |acc| growth per read is 128*128*8 = 2^17, so thousands of reads fit
+//! without overflow (checked in tests).
+
+/// 128-lane multiply-accumulate: sum(x[i] * w[i]). The slice lengths must
+/// match.
+///
+/// Perf note (EXPERIMENTS.md §Perf): the chunks-of-16 i32 form is what
+/// LLVM vectorizes best here (25 ns / 128 lanes); i16-pair variants
+/// (pmaddwd-style) were measured slower on this target and reverted.
+#[inline]
+pub fn mac_lanes(x: &[i8], w: &[i8]) -> i32 {
+    debug_assert_eq!(x.len(), w.len());
+    let mut acc = 0i32;
+    let mut xi = x.chunks_exact(16);
+    let mut wi = w.chunks_exact(16);
+    for (xc, wc) in (&mut xi).zip(&mut wi) {
+        let mut s = 0i32;
+        for k in 0..16 {
+            s += (xc[k] as i32) * (wc[k] as i32);
+        }
+        acc += s;
+    }
+    for (a, b) in xi.remainder().iter().zip(wi.remainder()) {
+        acc += (*a as i32) * (*b as i32);
+    }
+    acc
+}
+
+/// A processing element with its accumulator bank.
+#[derive(Clone, Debug)]
+pub struct Pe {
+    pub lanes: usize,
+    /// MACs executed (for the cycle/energy model)
+    pub mac_ops: u64,
+}
+
+impl Pe {
+    pub fn new(lanes: usize) -> Self {
+        Pe { lanes, mac_ops: 0 }
+    }
+
+    /// One EFLASH-read worth of work: accumulate `x . w` into `acc`.
+    /// `x` and `w` must be exactly `lanes` long (pad with zeros upstream,
+    /// as the flow-control logic does for partial tiles).
+    #[inline]
+    pub fn accumulate(&mut self, acc: i32, x: &[i8], w: &[i8]) -> i32 {
+        debug_assert_eq!(x.len(), self.lanes);
+        debug_assert_eq!(w.len(), self.lanes);
+        self.mac_ops += self.lanes as u64;
+        acc.wrapping_add(mac_lanes(x, w))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop_check;
+
+    #[test]
+    fn mac_matches_naive() {
+        let x: Vec<i8> = (0..128).map(|i| (i % 251) as i8).collect();
+        let w: Vec<i8> = (0..128).map(|i| ((i * 7) % 16) as i8 - 8).collect();
+        let naive: i32 = x.iter().zip(&w).map(|(&a, &b)| a as i32 * b as i32).sum();
+        assert_eq!(mac_lanes(&x, &w), naive);
+    }
+
+    #[test]
+    fn mac_handles_non_multiple_of_16() {
+        for n in [1usize, 5, 17, 43, 127] {
+            let x: Vec<i8> = (0..n).map(|i| (i as i8).wrapping_mul(3)).collect();
+            let w: Vec<i8> = (0..n).map(|i| ((i % 15) as i8) - 7).collect();
+            let naive: i32 = x.iter().zip(&w).map(|(&a, &b)| a as i32 * b as i32).sum();
+            assert_eq!(mac_lanes(&x, &w), naive, "n={n}");
+        }
+    }
+
+    #[test]
+    fn mac_extremes_no_overflow() {
+        let x = vec![-128i8; 128];
+        let w = vec![-8i8; 128];
+        assert_eq!(mac_lanes(&x, &w), 128 * 128 * 8);
+        let w2 = vec![7i8; 128];
+        assert_eq!(mac_lanes(&x, &w2), 128 * -128 * 7);
+    }
+
+    #[test]
+    fn pe_counts_ops() {
+        let mut pe = Pe::new(128);
+        let x = vec![1i8; 128];
+        let w = vec![2i8; 128];
+        let acc = pe.accumulate(0, &x, &w);
+        assert_eq!(acc, 256);
+        assert_eq!(pe.mac_ops, 128);
+        let acc = pe.accumulate(acc, &x, &w);
+        assert_eq!(acc, 512);
+        assert_eq!(pe.mac_ops, 256);
+    }
+
+    #[test]
+    fn prop_mac_equals_i64_reference() {
+        prop_check(50, |r| {
+            let n = 128;
+            let x: Vec<i8> = (0..n).map(|_| (r.below(256) as i64 - 128) as i8).collect();
+            let w: Vec<i8> = (0..n).map(|_| (r.below(16) as i64 - 8) as i8).collect();
+            let want: i64 = x.iter().zip(&w).map(|(&a, &b)| a as i64 * b as i64).sum();
+            assert_eq!(mac_lanes(&x, &w) as i64, want);
+        });
+    }
+
+    #[test]
+    fn thousands_of_reads_fit_in_i32() {
+        // design check backing the int32 accumulator choice: the largest
+        // layer in the paper's models has K=784 (7 reads); even 4096 reads
+        // of worst-case data stay inside i32.
+        let worst_per_read: i64 = 128 * 128 * 8;
+        assert!(worst_per_read * 4096 < i32::MAX as i64 * 4); // with headroom logic
+        assert!(worst_per_read * 1024 < i32::MAX as i64);
+    }
+}

@@ -1,0 +1,135 @@
+//! Integer requantization — bit-identical to `python/compile/quant.py`
+//! (the normative definition; the cross-language tests in
+//! `rust/tests/test_bitexact.rs` hold this file to the golden vectors).
+//!
+//! Scheme: int8 activations (per-tensor affine), int4 symmetric weights,
+//! int32 accumulate, fixed-point requantize with round-half-away-from-
+//! zero, clamp to int8 (TFLite-micro element-wise int8, paper §2.2).
+
+/// Requantization parameters of one layer (what the NMCU's write-back
+/// stage is configured with).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Requant {
+    /// fixed-point multiplier mantissa, in [2^30, 2^31)
+    pub m0: i32,
+    /// arithmetic right shift (total, includes the 31-bit mantissa)
+    pub shift: u32,
+    /// output zero point
+    pub z_out: i8,
+}
+
+/// Arithmetic right shift with round-half-away-from-zero (i64 domain).
+#[inline]
+pub fn rounding_rshift(x: i64, shift: u32) -> i64 {
+    debug_assert!(shift >= 1 && shift < 63);
+    let add = 1i64 << (shift - 1);
+    if x >= 0 {
+        (x + add) >> shift
+    } else {
+        -((-x + add) >> shift)
+    }
+}
+
+/// int32 accumulator -> int8 output (the ping-pong write-back step).
+#[inline]
+pub fn requantize(acc: i32, rq: Requant) -> i8 {
+    let prod = acc as i64 * rq.m0 as i64;
+    let y = rounding_rshift(prod, rq.shift) + rq.z_out as i64;
+    y.clamp(-128, 127) as i8
+}
+
+/// ReLU in the quantized domain: real zero maps to z_out.
+#[inline]
+pub fn relu_q(q: i8, z_out: i8) -> i8 {
+    q.max(z_out)
+}
+
+/// Float -> int8 quantization (used at model boundaries, not in the NMCU
+/// hot path).
+#[inline]
+pub fn quantize_f32(x: f32, scale: f32, zero_point: i8) -> i8 {
+    let q = (x / scale).round() + zero_point as f32;
+    q.clamp(-128.0, 127.0) as i8
+}
+
+/// int8 -> float dequantization.
+#[inline]
+pub fn dequantize_i8(q: i8, scale: f32, zero_point: i8) -> f32 {
+    (q as i32 - zero_point as i32) as f32 * scale
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rshift_rounds_half_away_from_zero() {
+        assert_eq!(rounding_rshift(3, 1), 2); // 1.5 -> 2
+        assert_eq!(rounding_rshift(-3, 1), -2); // -1.5 -> -2
+        assert_eq!(rounding_rshift(4, 2), 1);
+        assert_eq!(rounding_rshift(-4, 2), -1);
+        assert_eq!(rounding_rshift(6, 2), 2); // 1.5 -> 2
+        assert_eq!(rounding_rshift(-6, 2), -2);
+        assert_eq!(rounding_rshift(5, 2), 1); // 1.25 -> 1
+        assert_eq!(rounding_rshift(0, 5), 0);
+    }
+
+    #[test]
+    fn requantize_matches_float_reference() {
+        // m0/2^shift ~= 0.0007 -> compare against f64 rounding
+        let rq = Requant { m0: 1_506_476_669, shift: 41, z_out: -3 };
+        let real = rq.m0 as f64 / (1u64 << rq.shift) as f64;
+        for acc in [-100_000i32, -1234, -1, 0, 1, 999, 54_321, 2_000_000] {
+            let want_f = acc as f64 * real;
+            let frac = want_f.abs() - want_f.abs().floor();
+            let want = if (frac - 0.5).abs() < 1e-9 {
+                want_f.signum() * want_f.abs().ceil()
+            } else {
+                want_f.round()
+            } + rq.z_out as f64;
+            let got = requantize(acc, rq);
+            assert_eq!(got as f64, want.clamp(-128.0, 127.0), "acc={acc}");
+        }
+    }
+
+    #[test]
+    fn requantize_saturates() {
+        let rq = Requant { m0: i32::MAX, shift: 31, z_out: 0 };
+        assert_eq!(requantize(i32::MAX, rq), 127);
+        assert_eq!(requantize(i32::MIN, rq), -128);
+    }
+
+    #[test]
+    fn relu_clamps_to_zero_point() {
+        assert_eq!(relu_q(-50, -20), -20);
+        assert_eq!(relu_q(30, -20), 30);
+        assert_eq!(relu_q(-20, -20), -20);
+    }
+
+    #[test]
+    fn quant_dequant_roundtrip_near_identity() {
+        let (s, z) = (0.05f32, 10i8);
+        for x in [-3.0f32, -0.3, 0.0, 0.72, 2.0] {
+            let q = quantize_f32(x, s, z);
+            let back = dequantize_i8(q, s, z);
+            assert!((back - x.clamp((-138.0) * s, 117.0 * s)).abs() <= s / 2.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn golden_against_python_formula() {
+        // independently computed with python/compile/quant.requantize
+        let rq = Requant { m0: 1_518_500_250, shift: 40, z_out: -3 };
+        let cases: [(i32, i8); 6] = [
+            (0, -3),
+            (724, -2),
+            (7_240, 7),
+            (-7_240, -13),
+            (1_000_000, 127),
+            (-1_000_000, -128),
+        ];
+        for (acc, want) in cases {
+            assert_eq!(requantize(acc, rq), want, "acc={acc}");
+        }
+    }
+}

@@ -1,0 +1,110 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts (L2 JAX graphs
+//! embedding the L1 Pallas kernel) and executes them on the CPU PJRT
+//! client — the "software baseline" path of Table 1, and the off-chip
+//! layer executor of Fig 7. Python is never on this path; the artifacts
+//! were lowered once by `make artifacts`.
+//!
+//! Interchange is HLO *text* (not serialized protos): jax >= 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A compiled HLO module ready to execute.
+pub struct HloExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+/// The PJRT CPU runtime.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile an HLO text artifact.
+    pub fn load(&self, path: &Path) -> Result<HloExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?} (run `make artifacts`?)"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))?;
+        Ok(HloExecutable {
+            exe,
+            name: path.file_name().unwrap().to_string_lossy().into_owned(),
+        })
+    }
+}
+
+impl HloExecutable {
+    /// Execute with raw input literals; unwraps the 1-tuple the AOT path
+    /// always produces (return_tuple=True).
+    pub fn run_literals(&self, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        let result = self.exe.execute::<xla::Literal>(inputs)?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        result.to_tuple1().context("unwrapping result tuple")
+    }
+
+    fn literal_i8(x: &[i8], dims: &[usize]) -> Result<xla::Literal> {
+        let bytes: &[u8] =
+            unsafe { std::slice::from_raw_parts(x.as_ptr() as *const u8, x.len()) };
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::S8,
+            dims,
+            bytes,
+        )?)
+    }
+
+    fn literal_f32(x: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(x.as_ptr() as *const u8, x.len() * 4)
+        };
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            dims,
+            bytes,
+        )?)
+    }
+
+    /// int8 (B, K) input -> int8 (B, N) output (the quantized MLP path).
+    pub fn run_i8(&self, x: &[i8], dims: &[usize]) -> Result<Vec<i8>> {
+        let out = self.run_literals(&[Self::literal_i8(x, dims)?])?;
+        Ok(out.to_vec::<i8>()?)
+    }
+
+    /// f32 input -> f32 output (the float AE paths).
+    pub fn run_f32(&self, x: &[f32], dims: &[usize]) -> Result<Vec<f32>> {
+        let out = self.run_literals(&[Self::literal_f32(x, dims)?])?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// f32 input -> int8 output (ae_pre: float layers + quantize).
+    pub fn run_f32_to_i8(&self, x: &[f32], dims: &[usize]) -> Result<Vec<i8>> {
+        let out = self.run_literals(&[Self::literal_f32(x, dims)?])?;
+        Ok(out.to_vec::<i8>()?)
+    }
+
+    /// int8 input -> f32 output (ae_post: dequantize + float layer).
+    pub fn run_i8_to_f32(&self, x: &[i8], dims: &[usize]) -> Result<Vec<f32>> {
+        let out = self.run_literals(&[Self::literal_i8(x, dims)?])?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+// PJRT integration tests live in rust/tests/ (they need the artifacts and
+// the xla_extension shared library).

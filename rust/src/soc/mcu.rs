@@ -1,0 +1,314 @@
+//! The complete microcontroller: RV32I core + SoC bus + NMCU + 4-bits/
+//! cell EFLASH weight memory (paper Fig 1), with the firmware execution
+//! loop that services NMCU launches (from the custom-0 instruction or
+//! the MMIO CTRL register).
+
+use super::{map, Pending, SocBus, DESC_WORDS};
+use crate::config::ChipConfig;
+use crate::cpu::{Cpu, Event, Mem};
+use crate::eflash::EflashMacro;
+use crate::nmcu::{LayerDesc, Nmcu, Requant};
+
+/// Why `run` returned.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RunExit {
+    /// ECALL with a7=93: exit(a0)
+    Exit(u32),
+    /// EBREAK hit
+    Break,
+    /// step budget exhausted
+    OutOfFuel,
+    /// illegal instruction
+    Illegal { raw: u32, pc: u32 },
+}
+
+pub struct Mcu {
+    pub cpu: Cpu,
+    pub bus: SocBus,
+    pub eflash: EflashMacro,
+    pub nmcu: Nmcu,
+    /// NMCU launches serviced (one per custom-0 / CTRL launch)
+    pub launches: u64,
+}
+
+impl Mcu {
+    pub fn new(cfg: &ChipConfig) -> Self {
+        Mcu {
+            cpu: Cpu::new(map::SRAM_BASE),
+            bus: SocBus::new(&cfg.power),
+            eflash: EflashMacro::new(cfg),
+            nmcu: Nmcu::new(&cfg.nmcu),
+            launches: 0,
+        }
+    }
+
+    /// Build around an existing (already programmed) EFLASH macro.
+    pub fn with_eflash(cfg: &ChipConfig, eflash: EflashMacro) -> Self {
+        Mcu {
+            cpu: Cpu::new(map::SRAM_BASE),
+            bus: SocBus::new(&cfg.power),
+            eflash,
+            nmcu: Nmcu::new(&cfg.nmcu),
+            launches: 0,
+        }
+    }
+
+    /// Load firmware words into SRAM at the reset vector.
+    pub fn load_firmware(&mut self, words: &[u32]) {
+        for (i, &w) in words.iter().enumerate() {
+            self.bus.write32(map::SRAM_BASE + (i as u32) * 4, w);
+        }
+        self.cpu = Cpu::new(map::SRAM_BASE);
+    }
+
+    /// Read an MVM descriptor from SRAM (8 words):
+    /// [first_row, k, n, bias_ptr, m0, shift, z_out(i32), flags(bit0=relu)]
+    pub fn read_descriptor(&mut self, addr: u32) -> LayerDesc {
+        let mut w = [0u32; DESC_WORDS];
+        for (i, slot) in w.iter_mut().enumerate() {
+            *slot = self.bus.read32(addr + (i as u32) * 4);
+        }
+        let n = w[2] as usize;
+        let bias_ptr = w[3];
+        let mut bias = Vec::with_capacity(n);
+        for j in 0..n {
+            bias.push(self.bus.read32(bias_ptr + (j as u32) * 4) as i32);
+        }
+        LayerDesc {
+            first_row: w[0] as usize,
+            k: w[1] as usize,
+            n,
+            bias,
+            requant: Requant { m0: w[4] as i32, shift: w[5], z_out: w[6] as i32 as i8 },
+            relu: w[7] & 1 != 0,
+        }
+    }
+
+    /// Write an MVM descriptor + its bias table into SRAM; returns the
+    /// descriptor address. `bias_at` is where the bias table goes.
+    pub fn write_descriptor(&mut self, at: u32, bias_at: u32, d: &LayerDesc) {
+        let words = [
+            d.first_row as u32,
+            d.k as u32,
+            d.n as u32,
+            bias_at,
+            d.requant.m0 as u32,
+            d.requant.shift,
+            d.requant.z_out as i32 as u32,
+            d.relu as u32,
+        ];
+        for (i, w) in words.iter().enumerate() {
+            self.bus.write32(at + (i as u32) * 4, *w);
+        }
+        for (j, b) in d.bias.iter().enumerate() {
+            self.bus.write32(bias_at + (j as u32) * 4, *b as u32);
+        }
+    }
+
+    fn service_pending(&mut self) {
+        let pending: Vec<Pending> = self.bus.pending.drain(..).collect();
+        for p in pending {
+            match p {
+                Pending::Launch { desc_addr } => {
+                    let desc = self.read_descriptor(desc_addr);
+                    self.nmcu.execute_layer(&mut self.eflash, &desc);
+                    self.bus.nmcu_status = 1;
+                    self.launches += 1;
+                }
+                Pending::InputLoad => {
+                    let addr = self.bus.nmcu_input_addr;
+                    let len = self.bus.nmcu_input_len as usize;
+                    let bytes: Vec<i8> = self
+                        .bus
+                        .sram_slice(addr, len)
+                        .iter()
+                        .map(|&b| b as i8)
+                        .collect();
+                    self.nmcu.load_input(&bytes);
+                }
+                Pending::OutputStore => {
+                    let addr = self.bus.nmcu_out_addr;
+                    let len = self.bus.nmcu_out_len as usize;
+                    let out = self.nmcu.read_output(len);
+                    let bytes: Vec<u8> = out.iter().map(|&v| v as u8).collect();
+                    self.bus.sram_write(addr, &bytes);
+                }
+                Pending::Begin => self.nmcu.begin_inference(),
+            }
+        }
+    }
+
+    /// Run until exit/illegal or `max_steps` instructions retire.
+    pub fn run(&mut self, max_steps: u64) -> RunExit {
+        for _ in 0..max_steps {
+            let ev = self.cpu.step(&mut self.bus);
+            match ev {
+                Event::None => {}
+                Event::NmcuLaunch { desc_addr } => {
+                    let desc = self.read_descriptor(desc_addr);
+                    self.nmcu.execute_layer(&mut self.eflash, &desc);
+                    self.bus.nmcu_status = 1;
+                    self.launches += 1;
+                }
+                Event::Ecall => {
+                    if self.cpu.regs[17] == 93 {
+                        return RunExit::Exit(self.cpu.regs[10]);
+                    }
+                    // other ecalls: no-op semihosting
+                }
+                Event::Ebreak => return RunExit::Break,
+                Event::Illegal { raw, pc } => return RunExit::Illegal { raw, pc },
+            }
+            if !self.bus.pending.is_empty() {
+                self.service_pending();
+            }
+        }
+        RunExit::OutOfFuel
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpu::asm::*;
+    use crate::nmcu::layout_codes;
+    use crate::soc::nmcu_reg;
+
+    fn chip() -> ChipConfig {
+        let mut c = ChipConfig::new();
+        c.eflash.capacity_bits = 1024 * 1024;
+        c
+    }
+
+    /// Program a small layer and return its descriptor.
+    fn small_layer(mcu: &mut Mcu) -> (LayerDesc, Vec<i8>, Vec<i8>) {
+        let (k, n) = (128, 4);
+        let mut r = crate::util::rng::Rng::new(77);
+        let w: Vec<i8> = (0..k * n).map(|_| (r.below(16) as i8) - 8).collect();
+        let image = layout_codes(&w, k, n, 128);
+        let (region, _) = mcu.eflash.program_region(&image).unwrap();
+        let bias = vec![500i32, -500, 0, 1000];
+        let desc = LayerDesc {
+            first_row: region.first_row,
+            k,
+            n,
+            bias: bias.clone(),
+            requant: Requant { m0: 1_518_500_250, shift: 40, z_out: -3 },
+            relu: true,
+        };
+        let x: Vec<i8> = (0..k).map(|_| (r.below(256) as i32 - 128) as i8).collect();
+        let want = crate::nmcu::reference_mvm(&x, &w, k, n, &bias, desc.requant, true);
+        (desc, x, want)
+    }
+
+    #[test]
+    fn firmware_runs_mvm_via_custom0_instruction() {
+        let cfg = chip();
+        let mut mcu = Mcu::new(&cfg);
+        let (desc, x, want) = small_layer(&mut mcu);
+
+        // place descriptor at +0x1000, bias at +0x1100, input at +0x1200,
+        // output at +0x1300 (SRAM offsets)
+        let d_at = map::SRAM_BASE + 0x1000;
+        let b_at = map::SRAM_BASE + 0x1100;
+        let in_at = map::SRAM_BASE + 0x1200;
+        let out_at = map::SRAM_BASE + 0x1300;
+        mcu.write_descriptor(d_at, b_at, &desc);
+        let xb: Vec<u8> = x.iter().map(|&v| v as u8).collect();
+        mcu.bus.sram_write(in_at, &xb);
+
+        // firmware: begin; load input; nmcu.mvm (custom-0!); store output; exit
+        let mut a = Asm::new();
+        let nb = map::NMCU_BASE;
+        a.emit_all(&li32(5, nb)); // r5 = NMCU base
+        a.emit(addi(6, 0, 1));
+        a.emit(sw(5, 6, nmcu_reg::BEGIN as i32)); // begin inference
+        a.emit_all(&li32(7, in_at));
+        a.emit(sw(5, 7, nmcu_reg::INPUT_ADDR as i32));
+        a.emit(addi(8, 0, desc.k as i32));
+        a.emit(sw(5, 8, nmcu_reg::INPUT_LEN as i32));
+        a.emit(sw(5, 6, nmcu_reg::INPUT_LOAD as i32));
+        a.emit_all(&li32(9, d_at));
+        a.emit(nmcu_mvm(10, 9)); // THE single-instruction MVM launch
+        a.emit_all(&li32(11, out_at));
+        a.emit(sw(5, 11, nmcu_reg::OUT_ADDR as i32));
+        a.emit(addi(12, 0, desc.n as i32));
+        a.emit(sw(5, 12, nmcu_reg::OUT_LEN as i32));
+        a.emit(sw(5, 6, nmcu_reg::OUT_STORE as i32));
+        a.emit(addi(17, 0, 93)); // a7 = exit
+        a.emit(addi(10, 0, 0)); // a0 = 0
+        a.emit(ecall());
+        let fw = a.assemble();
+        // firmware must start at the reset vector; move data well past it
+        mcu.load_firmware(&fw);
+
+        let exit = mcu.run(10_000);
+        assert_eq!(exit, RunExit::Exit(0));
+        assert_eq!(mcu.launches, 1);
+        let got: Vec<i8> =
+            mcu.bus.sram_slice(out_at, desc.n).iter().map(|&b| b as i8).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn mmio_ctrl_launch_equivalent_to_custom0() {
+        let cfg = chip();
+        let mut mcu = Mcu::new(&cfg);
+        let (desc, x, want) = small_layer(&mut mcu);
+        let d_at = map::SRAM_BASE + 0x2000;
+        let b_at = map::SRAM_BASE + 0x2100;
+        mcu.write_descriptor(d_at, b_at, &desc);
+
+        // no firmware: drive the MMIO interface directly from the test
+        mcu.nmcu.begin_inference();
+        mcu.nmcu.load_input(&x);
+        mcu.bus.write32(map::NMCU_BASE + nmcu_reg::DESC_ADDR, d_at);
+        mcu.bus.write32(map::NMCU_BASE + nmcu_reg::CTRL, 1);
+        mcu.service_pending();
+        assert_eq!(mcu.bus.read32(map::NMCU_BASE + nmcu_reg::STATUS), 1);
+        let got = mcu.nmcu.read_output(desc.n);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn descriptor_roundtrip() {
+        let cfg = chip();
+        let mut mcu = Mcu::new(&cfg);
+        let d = LayerDesc {
+            first_row: 77,
+            k: 300,
+            n: 5,
+            bias: vec![1, -2, 3, -4, 5],
+            requant: Requant { m0: 2_000_000_001, shift: 45, z_out: -128 },
+            relu: true,
+        };
+        let at = map::SRAM_BASE + 0x3000;
+        let b_at = map::SRAM_BASE + 0x3100;
+        mcu.write_descriptor(at, b_at, &d);
+        let back = mcu.read_descriptor(at);
+        assert_eq!(back.first_row, 77);
+        assert_eq!(back.k, 300);
+        assert_eq!(back.n, 5);
+        assert_eq!(back.bias, d.bias);
+        assert_eq!(back.requant, d.requant);
+        assert!(back.relu);
+    }
+
+    #[test]
+    fn illegal_instruction_stops_run() {
+        let cfg = chip();
+        let mut mcu = Mcu::new(&cfg);
+        mcu.load_firmware(&[0xFFFF_FFFF]);
+        assert!(matches!(mcu.run(10), RunExit::Illegal { .. }));
+    }
+
+    #[test]
+    fn out_of_fuel() {
+        let cfg = chip();
+        let mut mcu = Mcu::new(&cfg);
+        // infinite loop: jal x0, 0
+        mcu.load_firmware(&[jal(0, 0)]);
+        assert_eq!(mcu.run(100), RunExit::OutOfFuel);
+        assert_eq!(mcu.cpu.instret, 100);
+    }
+}

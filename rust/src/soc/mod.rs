@@ -1,0 +1,304 @@
+//! SoC fabric: the microcontroller around the NMCU (paper Fig 1) —
+//! memory map, SRAM, boot-code EFLASH, DMA, UART, power controller, and
+//! [`Mcu`], which ties the RV32I core to the NMCU + weight EFLASH.
+
+pub mod dma;
+pub mod mcu;
+pub mod power;
+pub mod uart;
+
+pub use mcu::{Mcu, RunExit};
+
+use crate::cpu::Mem;
+
+/// Memory map (word-aligned MMIO).
+pub mod map {
+    /// instruction/data SRAM (256 KB)
+    pub const SRAM_BASE: u32 = 0x1000_0000;
+    pub const SRAM_SIZE: u32 = 256 * 1024;
+    /// 128 Kb boot/code EFLASH (16 KB, read-only to the core)
+    pub const BOOT_BASE: u32 = 0x2000_0000;
+    pub const BOOT_SIZE: u32 = 16 * 1024;
+    /// NMCU control/status registers
+    pub const NMCU_BASE: u32 = 0x4000_0000;
+    /// DMA controller
+    pub const DMA_BASE: u32 = 0x5000_0000;
+    /// UART (TX only modelled)
+    pub const UART_BASE: u32 = 0x6000_0000;
+    /// power controller
+    pub const PWR_BASE: u32 = 0x7000_0000;
+}
+
+/// NMCU register offsets (from NMCU_BASE).
+pub mod nmcu_reg {
+    /// write 1: launch the MVM whose descriptor is at DESC_ADDR
+    pub const CTRL: u32 = 0x00;
+    /// bit0: done
+    pub const STATUS: u32 = 0x04;
+    pub const DESC_ADDR: u32 = 0x08;
+    /// SRAM address + length of the int8 input vector
+    pub const INPUT_ADDR: u32 = 0x0C;
+    pub const INPUT_LEN: u32 = 0x10;
+    /// write 1: DMA the input vector into the NMCU input buffer
+    pub const INPUT_LOAD: u32 = 0x14;
+    /// SRAM address + length for reading back the ping-pong buffer
+    pub const OUT_ADDR: u32 = 0x18;
+    pub const OUT_LEN: u32 = 0x1C;
+    /// write 1: DMA the current ping-pong read side out to SRAM
+    pub const OUT_STORE: u32 = 0x20;
+    /// resets the fetch source to the input buffer (new inference)
+    pub const BEGIN: u32 = 0x24;
+}
+
+/// MVM descriptor layout in SRAM (8 consecutive words; see
+/// `Mcu::read_descriptor`).
+pub const DESC_WORDS: usize = 8;
+
+/// Side effects MMIO writes queue for the MCU to execute after the
+/// current instruction retires (keeps the bus borrow-free).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pending {
+    Launch { desc_addr: u32 },
+    InputLoad,
+    OutputStore,
+    Begin,
+}
+
+/// The peripheral/bus state the CPU sees. The NMCU and EFLASH themselves
+/// live in [`Mcu`]; the bus only holds their register file.
+pub struct SocBus {
+    pub sram: Vec<u8>,
+    pub boot: Vec<u8>,
+    pub uart: uart::Uart,
+    pub dma: dma::Dma,
+    pub power: power::PowerCtrl,
+    // NMCU register file
+    pub nmcu_status: u32,
+    pub nmcu_desc_addr: u32,
+    pub nmcu_input_addr: u32,
+    pub nmcu_input_len: u32,
+    pub nmcu_out_addr: u32,
+    pub nmcu_out_len: u32,
+    pub pending: Vec<Pending>,
+    /// reads/writes that fell outside the map (debug aid + tests)
+    pub bus_faults: u64,
+}
+
+impl SocBus {
+    pub fn new(power_cfg: &crate::config::PowerConfig) -> Self {
+        SocBus {
+            sram: vec![0; map::SRAM_SIZE as usize],
+            boot: vec![0; map::BOOT_SIZE as usize],
+            uart: uart::Uart::new(),
+            dma: dma::Dma::new(),
+            power: power::PowerCtrl::new(power_cfg),
+            nmcu_status: 0,
+            nmcu_desc_addr: 0,
+            nmcu_input_addr: 0,
+            nmcu_input_len: 0,
+            nmcu_out_addr: 0,
+            nmcu_out_len: 0,
+            pending: Vec::new(),
+            bus_faults: 0,
+        }
+    }
+
+    fn mmio_read32(&mut self, addr: u32) -> u32 {
+        let (base, off) = (addr & 0xFFFF_0000, addr & 0xFFFF);
+        match base {
+            map::NMCU_BASE => match off {
+                nmcu_reg::STATUS => self.nmcu_status,
+                nmcu_reg::DESC_ADDR => self.nmcu_desc_addr,
+                nmcu_reg::INPUT_ADDR => self.nmcu_input_addr,
+                nmcu_reg::INPUT_LEN => self.nmcu_input_len,
+                nmcu_reg::OUT_ADDR => self.nmcu_out_addr,
+                nmcu_reg::OUT_LEN => self.nmcu_out_len,
+                _ => 0,
+            },
+            map::DMA_BASE => self.dma.read32(off),
+            map::UART_BASE => self.uart.read32(off),
+            map::PWR_BASE => self.power.read32(off),
+            _ => {
+                self.bus_faults += 1;
+                0
+            }
+        }
+    }
+
+    fn mmio_write32(&mut self, addr: u32, v: u32) {
+        let (base, off) = (addr & 0xFFFF_0000, addr & 0xFFFF);
+        match base {
+            map::NMCU_BASE => match off {
+                nmcu_reg::CTRL => {
+                    if v & 1 != 0 {
+                        self.nmcu_status = 0;
+                        self.pending.push(Pending::Launch { desc_addr: self.nmcu_desc_addr });
+                    }
+                }
+                nmcu_reg::DESC_ADDR => self.nmcu_desc_addr = v,
+                nmcu_reg::INPUT_ADDR => self.nmcu_input_addr = v,
+                nmcu_reg::INPUT_LEN => self.nmcu_input_len = v,
+                nmcu_reg::INPUT_LOAD => {
+                    if v & 1 != 0 {
+                        self.pending.push(Pending::InputLoad);
+                    }
+                }
+                nmcu_reg::OUT_ADDR => self.nmcu_out_addr = v,
+                nmcu_reg::OUT_LEN => self.nmcu_out_len = v,
+                nmcu_reg::OUT_STORE => {
+                    if v & 1 != 0 {
+                        self.pending.push(Pending::OutputStore);
+                    }
+                }
+                nmcu_reg::BEGIN => {
+                    if v & 1 != 0 {
+                        self.pending.push(Pending::Begin);
+                    }
+                }
+                _ => {}
+            },
+            map::DMA_BASE => {
+                if let Some(req) = self.dma.write32(off, v) {
+                    // execute mem-to-mem copies immediately (zero-latency
+                    // model; cycle cost accounted by the DMA engine)
+                    self.dma_copy(req.0, req.1, req.2);
+                }
+            }
+            map::UART_BASE => self.uart.write32(off, v),
+            map::PWR_BASE => self.power.write32(off, v),
+            _ => self.bus_faults += 1,
+        }
+    }
+
+    fn dma_copy(&mut self, src: u32, dst: u32, len: u32) {
+        for i in 0..len {
+            let b = self.read8(src + i);
+            self.write8(dst + i, b);
+        }
+        self.dma.note_copy(len);
+    }
+
+    /// Direct SRAM slice access for the coordinator/tests.
+    pub fn sram_slice(&self, addr: u32, len: usize) -> &[u8] {
+        let off = (addr - map::SRAM_BASE) as usize;
+        &self.sram[off..off + len]
+    }
+
+    pub fn sram_write(&mut self, addr: u32, data: &[u8]) {
+        let off = (addr - map::SRAM_BASE) as usize;
+        self.sram[off..off + data.len()].copy_from_slice(data);
+    }
+}
+
+impl Mem for SocBus {
+    fn read8(&mut self, addr: u32) -> u8 {
+        if (map::SRAM_BASE..map::SRAM_BASE + map::SRAM_SIZE).contains(&addr) {
+            self.sram[(addr - map::SRAM_BASE) as usize]
+        } else if (map::BOOT_BASE..map::BOOT_BASE + map::BOOT_SIZE).contains(&addr) {
+            self.boot[(addr - map::BOOT_BASE) as usize]
+        } else {
+            // byte reads of MMIO extract from the aligned word
+            let w = self.mmio_read32(addr & !3);
+            (w >> ((addr & 3) * 8)) as u8
+        }
+    }
+
+    fn write8(&mut self, addr: u32, v: u8) {
+        if (map::SRAM_BASE..map::SRAM_BASE + map::SRAM_SIZE).contains(&addr) {
+            self.sram[(addr - map::SRAM_BASE) as usize] = v;
+        } else if (map::BOOT_BASE..map::BOOT_BASE + map::BOOT_SIZE).contains(&addr) {
+            // boot flash is read-only at runtime
+            self.bus_faults += 1;
+        } else {
+            // byte-wide MMIO writes only valid for UART TX
+            self.mmio_write32(addr & !3, v as u32);
+        }
+    }
+
+    fn read32(&mut self, addr: u32) -> u32 {
+        if (map::SRAM_BASE..map::SRAM_BASE + map::SRAM_SIZE - 3).contains(&addr) {
+            let o = (addr - map::SRAM_BASE) as usize;
+            u32::from_le_bytes(self.sram[o..o + 4].try_into().unwrap())
+        } else if (map::BOOT_BASE..map::BOOT_BASE + map::BOOT_SIZE - 3).contains(&addr) {
+            let o = (addr - map::BOOT_BASE) as usize;
+            u32::from_le_bytes(self.boot[o..o + 4].try_into().unwrap())
+        } else {
+            self.mmio_read32(addr)
+        }
+    }
+
+    fn write32(&mut self, addr: u32, v: u32) {
+        if (map::SRAM_BASE..map::SRAM_BASE + map::SRAM_SIZE - 3).contains(&addr) {
+            let o = (addr - map::SRAM_BASE) as usize;
+            self.sram[o..o + 4].copy_from_slice(&v.to_le_bytes());
+        } else if (map::BOOT_BASE..map::BOOT_BASE + map::BOOT_SIZE - 3).contains(&addr) {
+            self.bus_faults += 1;
+        } else {
+            self.mmio_write32(addr, v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PowerConfig;
+
+    fn bus() -> SocBus {
+        SocBus::new(&PowerConfig::default())
+    }
+
+    #[test]
+    fn sram_word_and_byte_access() {
+        let mut b = bus();
+        b.write32(map::SRAM_BASE + 16, 0xDEAD_BEEF);
+        assert_eq!(b.read32(map::SRAM_BASE + 16), 0xDEAD_BEEF);
+        assert_eq!(b.read8(map::SRAM_BASE + 16), 0xEF);
+        assert_eq!(b.read8(map::SRAM_BASE + 19), 0xDE);
+        b.write8(map::SRAM_BASE + 17, 0x00);
+        assert_eq!(b.read32(map::SRAM_BASE + 16), 0xDEAD_00EF);
+    }
+
+    #[test]
+    fn boot_flash_is_read_only() {
+        let mut b = bus();
+        b.boot[0] = 7;
+        assert_eq!(b.read8(map::BOOT_BASE), 7);
+        b.write8(map::BOOT_BASE, 9);
+        assert_eq!(b.read8(map::BOOT_BASE), 7);
+        assert_eq!(b.bus_faults, 1);
+    }
+
+    #[test]
+    fn nmcu_regs_queue_pending_ops() {
+        let mut b = bus();
+        b.write32(map::NMCU_BASE + nmcu_reg::DESC_ADDR, 0x1000_0100);
+        b.write32(map::NMCU_BASE + nmcu_reg::CTRL, 1);
+        assert_eq!(b.pending, vec![Pending::Launch { desc_addr: 0x1000_0100 }]);
+        assert_eq!(b.read32(map::NMCU_BASE + nmcu_reg::STATUS), 0);
+        b.write32(map::NMCU_BASE + nmcu_reg::INPUT_LOAD, 1);
+        b.write32(map::NMCU_BASE + nmcu_reg::OUT_STORE, 1);
+        b.write32(map::NMCU_BASE + nmcu_reg::BEGIN, 1);
+        assert_eq!(b.pending.len(), 4);
+    }
+
+    #[test]
+    fn unmapped_access_faults() {
+        let mut b = bus();
+        let _ = b.read32(0x9000_0000);
+        b.write32(0x9000_0000, 1);
+        assert_eq!(b.bus_faults, 2);
+    }
+
+    #[test]
+    fn dma_mem_to_mem_copy() {
+        let mut b = bus();
+        b.sram_write(map::SRAM_BASE, &[1, 2, 3, 4, 5]);
+        b.write32(map::DMA_BASE + dma::reg::SRC, map::SRAM_BASE);
+        b.write32(map::DMA_BASE + dma::reg::DST, map::SRAM_BASE + 0x100);
+        b.write32(map::DMA_BASE + dma::reg::LEN, 5);
+        b.write32(map::DMA_BASE + dma::reg::CTRL, 1);
+        assert_eq!(b.sram_slice(map::SRAM_BASE + 0x100, 5), &[1, 2, 3, 4, 5]);
+        assert_eq!(b.dma.bytes_copied, 5);
+    }
+}

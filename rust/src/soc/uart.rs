@@ -1,0 +1,53 @@
+//! UART peripheral (TX modelled; the paper's chip exposes UART/SPI/GPIO
+//! for sensor I/O). Firmware prints land in `tx_log` for the tests and
+//! examples to inspect.
+
+pub mod reg {
+    /// write: transmit one byte
+    pub const TX: u32 = 0x00;
+    /// read: TX ready (always 1 in this model)
+    pub const STATUS: u32 = 0x04;
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Uart {
+    pub tx_log: Vec<u8>,
+}
+
+impl Uart {
+    pub fn new() -> Self {
+        Uart::default()
+    }
+
+    pub fn read32(&self, off: u32) -> u32 {
+        match off {
+            reg::STATUS => 1,
+            _ => 0,
+        }
+    }
+
+    pub fn write32(&mut self, off: u32, v: u32) {
+        if off == reg::TX {
+            self.tx_log.push(v as u8);
+        }
+    }
+
+    pub fn tx_string(&self) -> String {
+        String::from_utf8_lossy(&self.tx_log).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_tx_bytes() {
+        let mut u = Uart::new();
+        for b in b"ok\n" {
+            u.write32(reg::TX, *b as u32);
+        }
+        assert_eq!(u.tx_string(), "ok\n");
+        assert_eq!(u.read32(reg::STATUS), 1);
+    }
+}

@@ -1,0 +1,144 @@
+//! Tiny benchmark harness (criterion is unavailable offline). Benches are
+//! `harness = false` binaries that call [`Bench::run`] for timing and use
+//! the report builders for the paper-table outputs.
+
+use std::time::{Duration, Instant};
+
+/// Timing result for one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Timing {
+    pub name: String,
+    pub iters: u64,
+    pub total: Duration,
+    pub per_iter_ns: f64,
+    /// standard deviation across measurement batches (ns)
+    pub sigma_ns: f64,
+}
+
+impl Timing {
+    pub fn per_iter(&self) -> Duration {
+        Duration::from_nanos(self.per_iter_ns as u64)
+    }
+
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.per_iter_ns * 1e-9)
+    }
+}
+
+/// Measure `f`, auto-calibrating the iteration count to hit ~`target` of
+/// wall time, reporting mean and stddev over 5 batches.
+pub fn bench<F: FnMut()>(name: &str, target: Duration, mut f: F) -> Timing {
+    // warmup + calibration
+    let mut iters = 1u64;
+    loop {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let el = t0.elapsed();
+        if el > Duration::from_millis(20) || iters > 1 << 30 {
+            let per = el.as_nanos() as f64 / iters as f64;
+            let want = (target.as_nanos() as f64 / 5.0 / per.max(1.0)).ceil() as u64;
+            iters = want.max(1);
+            break;
+        }
+        iters *= 4;
+    }
+    let batches = 5;
+    let mut times = Vec::with_capacity(batches);
+    let t_all = Instant::now();
+    for _ in 0..batches {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        times.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+    }
+    let total = t_all.elapsed();
+    let mean = times.iter().sum::<f64>() / batches as f64;
+    let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / batches as f64;
+    let t = Timing {
+        name: name.to_string(),
+        iters: iters * batches as u64,
+        total,
+        per_iter_ns: mean,
+        sigma_ns: var.sqrt(),
+    };
+    println!(
+        "bench {:<44} {:>12.1} ns/iter (+/- {:>8.1})  [{} iters]",
+        t.name, t.per_iter_ns, t.sigma_ns, t.iters
+    );
+    t
+}
+
+/// Fixed-column table printer for the paper-figure reports.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |out: &mut String, cells: &[String]| {
+            out.push('|');
+            for (i, c) in cells.iter().enumerate() {
+                out.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+            }
+            out.push('\n');
+        };
+        line(&mut out, &self.headers);
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            line(&mut out, row);
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.to_string());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut x = 0u64;
+        let t = bench("noop-ish", Duration::from_millis(50), || {
+            x = x.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(t.per_iter_ns > 0.0);
+        assert!(t.iters > 100);
+    }
+
+    #[test]
+    fn table_layout() {
+        let mut t = Table::new(&["a", "bb"]);
+        t.row(&["1".into(), "2".into()]);
+        let s = t.to_string();
+        assert!(s.contains("| a | bb |"));
+        assert!(s.lines().count() == 3);
+    }
+}

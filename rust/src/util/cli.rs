@@ -1,0 +1,127 @@
+//! Minimal CLI argument parser for the `nvmcu` binary and the examples
+//! (clap is unavailable offline). Supports subcommands, `--flag`,
+//! `--key value` / `--key=value`, and positional arguments.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+/// Boolean flags that never consume a following value. Everything else
+/// after `--` is a `--key value` option. Keep in sync with main.rs usage.
+pub const BOOL_FLAGS: &[&str] = &[
+    "verbose", "quiet", "help", "quick", "resample", "no-bake", "fast", "firmware",
+    "conventional-driver", "json",
+];
+
+impl Args {
+    /// Parse from an explicit token list. `with_subcommand` controls
+    /// whether the first positional token is treated as a subcommand.
+    pub fn parse_from(tokens: &[String], with_subcommand: bool) -> Args {
+        let mut a = Args::default();
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if let Some(body) = t.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    a.options.insert(k.to_string(), v.to_string());
+                } else if BOOL_FLAGS.contains(&body) {
+                    a.flags.push(body.to_string());
+                } else if i + 1 < tokens.len() && !tokens[i + 1].starts_with("--") {
+                    a.options.insert(body.to_string(), tokens[i + 1].clone());
+                    i += 1;
+                } else {
+                    a.flags.push(body.to_string());
+                }
+            } else if with_subcommand && a.subcommand.is_none() && a.positional.is_empty() {
+                a.subcommand = Some(t.clone());
+            } else {
+                a.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        a
+    }
+
+    pub fn parse(with_subcommand: bool) -> Args {
+        let tokens: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse_from(&tokens, with_subcommand)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> usize {
+        self.opt(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer")))
+            .unwrap_or(default)
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> u64 {
+        self.opt(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer")))
+            .unwrap_or(default)
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> f64 {
+        self.opt(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number")))
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = Args::parse_from(&toks("infer --model mnist --n=100 --verbose x.bin"), true);
+        assert_eq!(a.subcommand.as_deref(), Some("infer"));
+        assert_eq!(a.opt("model"), Some("mnist"));
+        assert_eq!(a.opt_usize("n", 0), 100);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["x.bin"]);
+    }
+
+    #[test]
+    fn no_subcommand_mode() {
+        let a = Args::parse_from(&toks("pos1 --k v pos2"), false);
+        assert_eq!(a.subcommand, None);
+        assert_eq!(a.positional, vec!["pos1", "pos2"]);
+        assert_eq!(a.opt("k"), Some("v"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = Args::parse_from(&toks("run --fast"), true);
+        assert!(a.flag("fast"));
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse_from(&[], true);
+        assert_eq!(a.opt_or("x", "d"), "d");
+        assert_eq!(a.opt_f64("y", 1.5), 1.5);
+        assert_eq!(a.opt_u64("z", 9), 9);
+    }
+}

@@ -1,0 +1,49 @@
+//! Foundation utilities: deterministic RNG, statistics, JSON, CLI args,
+//! bench harness, and a mini property-testing helper. All hand-rolled —
+//! the crate registry is offline in this environment (see DESIGN.md §2).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+/// Mini property-test driver: runs `f` over `n` seeded RNGs; failures
+/// report the seed so the case can be replayed deterministically.
+pub fn prop_check(n: u64, mut f: impl FnMut(&mut rng::Rng)) {
+    for seed in 0..n {
+        let mut r = rng::Rng::new(0xC0FFEE ^ seed.wrapping_mul(0x9E3779B97F4A7C15));
+        // run inside catch_unwind so we can attach the seed to the panic
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut r)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| e.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!("property failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prop_check_passes() {
+        prop_check(16, |r| {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at seed")]
+    fn prop_check_reports_seed() {
+        prop_check(4, |r| {
+            assert!(r.f64() < 2.0); // always true
+            assert!(false, "forced");
+        });
+    }
+}

@@ -1,0 +1,211 @@
+//! Small statistics toolkit used by the device models, the metrics layer
+//! and the benchmark harnesses (histograms for Fig 6, AUC for Table 1,
+//! percentiles for verify-level placement).
+
+/// Mean of a slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Linear-interpolated percentile, p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Fixed-width histogram over [lo, hi) with `bins` buckets.
+/// Out-of-range samples clamp into the edge buckets.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(hi > lo && bins > 0);
+        Histogram { lo, hi, counts: vec![0; bins] }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        let bins = self.counts.len();
+        let t = (x - self.lo) / (self.hi - self.lo);
+        let idx = ((t * bins as f64) as isize).clamp(0, bins as isize - 1) as usize;
+        self.counts[idx] += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Render an ASCII bar chart (used by the fig5/fig6 bench reports).
+    pub fn ascii(&self, width: usize) -> String {
+        let max = self.counts.iter().copied().max().unwrap_or(1).max(1);
+        let bins = self.counts.len();
+        let mut out = String::new();
+        for (i, &c) in self.counts.iter().enumerate() {
+            let a = self.lo + (self.hi - self.lo) * i as f64 / bins as f64;
+            let b = self.lo + (self.hi - self.lo) * (i + 1) as f64 / bins as f64;
+            let bar = "#".repeat(((c as f64 / max as f64) * width as f64).round() as usize);
+            out.push_str(&format!("{a:7.3}..{b:7.3} |{bar:<width$}| {c}\n"));
+        }
+        out
+    }
+}
+
+/// ROC AUC by the Mann-Whitney rank statistic with midrank tie handling.
+/// Must agree with `datasets.auc_score` on the python side (same algorithm).
+pub fn auc(scores: &[f64], labels: &[bool]) -> f64 {
+    assert_eq!(scores.len(), labels.len());
+    let n_pos = labels.iter().filter(|&&l| l).count();
+    let n_neg = labels.len() - n_pos;
+    if n_pos == 0 || n_neg == 0 {
+        return f64::NAN;
+    }
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+    let mut ranks = vec![0.0f64; scores.len()];
+    let mut i = 0;
+    while i < idx.len() {
+        let mut j = i;
+        while j + 1 < idx.len() && scores[idx[j + 1]] == scores[idx[i]] {
+            j += 1;
+        }
+        let r = 0.5 * (i + j) as f64 + 1.0;
+        for k in i..=j {
+            ranks[idx[k]] = r;
+        }
+        i = j + 1;
+    }
+    let r_pos: f64 = (0..scores.len()).filter(|&k| labels[k]).map(|k| ranks[k]).sum();
+    (r_pos - n_pos as f64 * (n_pos as f64 + 1.0) / 2.0) / (n_pos as f64 * n_neg as f64)
+}
+
+/// Online mean/min/max/stddev accumulator for streaming metrics.
+#[derive(Clone, Debug, Default)]
+pub struct Running {
+    pub n: u64,
+    mean: f64,
+    m2: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Running {
+    pub fn new() -> Self {
+        Running { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { f64::NAN } else { self.mean }
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { (self.m2 / self.n as f64).sqrt() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_percentile() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(mean(&xs), 3.0);
+        assert!((std_dev(&xs) - 1.4142).abs() < 1e-3);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 25.0), 2.0);
+    }
+
+    #[test]
+    fn histogram_bins_and_clamp() {
+        let mut h = Histogram::new(0.0, 1.0, 4);
+        for &x in &[0.1, 0.3, 0.6, 0.9, -5.0, 5.0] {
+            h.add(x);
+        }
+        assert_eq!(h.counts, vec![2, 1, 1, 2]);
+        assert_eq!(h.total(), 6);
+        assert!(h.ascii(10).lines().count() == 4);
+    }
+
+    #[test]
+    fn auc_perfect_and_random() {
+        let s = [0.1, 0.2, 0.8, 0.9];
+        let l = [false, false, true, true];
+        assert_eq!(auc(&s, &l), 1.0);
+        let l2 = [true, true, false, false];
+        assert_eq!(auc(&s, &l2), 0.0);
+        let tied = [0.5, 0.5, 0.5, 0.5];
+        assert!((auc(&tied, &l) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auc_matches_bruteforce_pair_count() {
+        // midrank AUC == P(score_pos > score_neg) + 0.5 P(equal)
+        let scores = [1.0, 3.0, 2.0, 3.0, 0.5, 2.5];
+        let labels = [false, true, false, true, false, true];
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for i in 0..6 {
+            for j in 0..6 {
+                if labels[i] && !labels[j] {
+                    den += 1.0;
+                    if scores[i] > scores[j] {
+                        num += 1.0;
+                    } else if scores[i] == scores[j] {
+                        num += 0.5;
+                    }
+                }
+            }
+        }
+        assert!((auc(&scores, &labels) - num / den).abs() < 1e-12);
+    }
+
+    #[test]
+    fn running_accumulator() {
+        let mut r = Running::new();
+        for x in [2.0, 4.0, 6.0] {
+            r.add(x);
+        }
+        assert_eq!(r.mean(), 4.0);
+        assert_eq!(r.min, 2.0);
+        assert_eq!(r.max, 6.0);
+        assert!((r.std() - (8.0f64 / 3.0).sqrt()).abs() < 1e-12);
+    }
+}

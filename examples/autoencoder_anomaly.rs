@@ -44,7 +44,7 @@ fn main() -> anyhow::Result<()> {
         // off-chip: layers 1..8 (+ int8 quantization at the boundary)
         let xq = pre.run_f32_to_i8(x, &[1, 640])?;
         // on-chip: layer 9 via the NMCU reading the EFLASH weight memory
-        let y9 = chip.infer_layer(&desc, &xq);
+        let y9 = chip.infer_layer(&desc, &xq)?;
         // off-chip: layer 10 to the reconstruction
         let recon = post.run_i8_to_f32(&y9, &[1, 128])?;
         let score = nvmcu::models::ae_score(&ae, x, &recon);

@@ -29,7 +29,7 @@ fn main() -> anyhow::Result<()> {
     for i in 0..wakeups_per_day {
         power.wake();
         let xq = inputs.mnist_test.image_q(i % n);
-        let logits = chip.infer(&pm, &xq);
+        let logits = chip.infer(&pm, &xq)?;
         detections[nvmcu::models::argmax_i8(&logits)] += 1;
         power.enter_idle(60.0);
     }

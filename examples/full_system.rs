@@ -1,20 +1,22 @@
-//! END-TO-END system driver (DESIGN.md: the required full-workload run).
+//! END-TO-END system driver (DESIGN.md: the required full-workload run),
+//! on the unified engine API.
 //!
-//! Loads the real trained artifacts, programs both models into the
-//! 4-bits/cell EFLASH with program-verify, runs the complete test sets
-//! through the NMCU simulator (before and after the 125 C bake), runs
-//! the SW baseline through the AOT HLO graphs via PJRT (the L2 JAX model
-//! embedding the L1 Pallas kernel), cross-checks bit-exactness, and
-//! prints Table 1 plus throughput/latency/energy.
+//! Loads the real trained artifacts and serves the complete test sets
+//! through three Backend implementations: the software reference
+//! (bit-exact SW baseline), the chip simulator (before and after the
+//! 125 C bake), and a 4-way ShardedEngine that fans the batch across
+//! worker threads — then cross-checks bit-exactness between all of them
+//! and prints Table 1 plus throughput/latency/energy. With
+//! `--features pjrt` the AOT HLO graphs (the L2 JAX model embedding the
+//! L1 Pallas kernel) run as a fourth backend via PJRT.
 //!
 //!     make artifacts && cargo run --release --example full_system
 
 use nvmcu::artifacts;
 use nvmcu::config::ChipConfig;
-use nvmcu::coordinator::{experiments, Chip};
+use nvmcu::coordinator::experiments;
+use nvmcu::engine::{Backend, NmcuBackend, ShardedEngine};
 use nvmcu::metrics;
-
-use nvmcu::runtime::Runtime;
 use nvmcu::util::bench::Table;
 use std::time::Instant;
 
@@ -22,73 +24,75 @@ fn main() -> anyhow::Result<()> {
     let dir = artifacts::artifacts_dir();
     let cfg = ChipConfig::new();
     let inputs = experiments::load_table1_inputs(&dir)?;
+    let n = inputs.mnist_test.len();
     println!(
         "loaded artifacts: MNIST MLP {} cells, AE layer-9 {} cells, {} + {} test samples",
         inputs.mnist_model.total_cells(),
         inputs.ae_l9_model.total_cells(),
-        inputs.mnist_test.len(),
+        n,
         inputs.admos_test.len()
     );
+    let all_inputs: Vec<Vec<i8>> = (0..n).map(|i| inputs.mnist_test.image_q(i)).collect();
 
-    // ---------------- SW baseline via PJRT (python never runs here) ----
-    let rt = Runtime::cpu()?;
-    println!("PJRT platform: {}", rt.platform());
-    let mlp_hlo = rt.load(&dir.join("mnist_mlp_b256.hlo.txt"))?;
+    // ---------------- SW baseline: the reference backend ----------------
+    let mut sw = nvmcu::engine::ReferenceBackend::new();
+    let h_sw = sw.program(&inputs.mnist_model)?;
     let t0 = Instant::now();
-    let mut correct_hlo = 0usize;
-    let n = inputs.mnist_test.len();
-    let mut i = 0;
-    while i < n {
-        let b = 256.min(n - i);
-        let mut batch = vec![0i8; 256 * 784];
-        for j in 0..b {
-            batch[j * 784..(j + 1) * 784].copy_from_slice(&inputs.mnist_test.image_q(i + j));
-        }
-        let out = mlp_hlo.run_i8(&batch, &[256, 784])?;
-        for j in 0..b {
-            let logits = &out[j * 10..(j + 1) * 10];
-            let pred = logits
-                .iter()
-                .enumerate()
-                .max_by_key(|(pos, &v)| (v, std::cmp::Reverse(*pos)))
-                .unwrap()
-                .0;
-            if pred == inputs.mnist_test.labels[i + j] as usize {
-                correct_hlo += 1;
-            }
-        }
-        i += b;
-    }
-    let hlo_dt = t0.elapsed();
-    let acc_hlo = correct_hlo as f64 / n as f64;
+    let acc_sw = experiments::mnist_accuracy(&mut sw, h_sw, &inputs.mnist_test)?;
+    let sw_dt = t0.elapsed();
     println!(
-        "SW baseline (AOT HLO, Pallas kernel): {:.2}% on {} samples in {:.2}s ({:.0} inf/s)",
-        100.0 * acc_hlo,
+        "SW baseline (integer reference): {:.2}% on {} samples in {:.2}s ({:.0} inf/s)",
+        100.0 * acc_sw,
         n,
-        hlo_dt.as_secs_f64(),
-        n as f64 / hlo_dt.as_secs_f64()
+        sw_dt.as_secs_f64(),
+        n as f64 / sw_dt.as_secs_f64()
     );
 
-    // cross-check: rust integer reference must equal the HLO result
-    let acc_ref = experiments::mnist_accuracy_sw(&inputs.mnist_model, &inputs.mnist_test);
-    assert!((acc_ref - acc_hlo).abs() < 1e-12, "HLO and rust reference diverge!");
-    println!("bit-exactness HLO == rust reference: OK");
+    // ---------------- SW baseline via PJRT (python never runs here) -----
+    // any HLO-unavailability (no PJRT, missing/stale artifacts) skips
+    // this baseline; the chip/fleet/bake sections must still run
+    #[cfg(feature = "pjrt")]
+    {
+        let hlo_baseline = || -> anyhow::Result<()> {
+            let mut hlo = nvmcu::engine::HloBackend::new(&dir)?;
+            println!("PJRT platform: {}", hlo.platform());
+            let h_hlo = hlo.program(&inputs.mnist_model)?;
+            let t0 = Instant::now();
+            let acc_hlo = experiments::mnist_accuracy(&mut hlo, h_hlo, &inputs.mnist_test)?;
+            let hlo_dt = t0.elapsed();
+            println!(
+                "SW baseline (AOT HLO, Pallas kernel): {:.2}% in {:.2}s ({:.0} inf/s)",
+                100.0 * acc_hlo,
+                hlo_dt.as_secs_f64(),
+                n as f64 / hlo_dt.as_secs_f64()
+            );
+            assert!((acc_sw - acc_hlo).abs() < 1e-12, "HLO and rust reference diverge!");
+            println!("bit-exactness HLO == rust reference: OK");
+            Ok(())
+        };
+        if let Err(e) = hlo_baseline() {
+            println!("(HLO/PJRT baseline skipped: {e:#})");
+        }
+    }
+    #[cfg(not(feature = "pjrt"))]
+    println!("(HLO/PJRT baseline skipped: built without the `pjrt` feature)");
 
     // ---------------- the chip: program, run, bake, run ----------------
-    let mut chip = Chip::new(&cfg);
+    let mut chip = NmcuBackend::new(&cfg);
     let t0 = Instant::now();
-    let pm = chip.program_model(&inputs.mnist_model)?;
+    let h_chip = chip.program(&inputs.mnist_model)?;
     println!(
         "\nprogrammed MNIST model: {} cells, {} ISPP pulses, {:.2}s",
-        pm.total_cells(),
-        pm.total_pulses(),
+        chip.model(h_chip)?.total_cells(),
+        chip.model(h_chip)?.total_pulses(),
         t0.elapsed().as_secs_f64()
     );
 
     chip.reset_stats();
     let t0 = Instant::now();
-    let acc_before = experiments::mnist_accuracy_chip(&mut chip, &pm, &inputs.mnist_test);
+    let chip_outs = chip.infer_batch(h_chip, &all_inputs)?;
     let chip_dt = t0.elapsed();
+    let acc_before = experiments::accuracy_of_outputs(&chip_outs, &inputs.mnist_test.labels);
     let st = chip.stats();
     let e = metrics::nmcu_energy(&st, &cfg.power);
     println!(
@@ -99,12 +103,26 @@ fn main() -> anyhow::Result<()> {
         e.total_uj() / n as f64
     );
 
-    chip.bake(340.0, cfg.retention.bake_temp_c);
-    let acc_after = experiments::mnist_accuracy_chip(&mut chip, &pm, &inputs.mnist_test);
+    // ---------------- sharded serving: 4 chips, one batch ---------------
+    let mut fleet = ShardedEngine::new(&cfg, 4)?;
+    let h_fleet = fleet.program(&inputs.mnist_model)?;
+    let t0 = Instant::now();
+    let fleet_outs = fleet.infer_batch(h_fleet, &all_inputs)?;
+    let fleet_dt = t0.elapsed();
+    assert_eq!(fleet_outs, chip_outs, "sharded outputs must be bit-exact to one chip");
+    println!(
+        "4-shard fleet: bit-exact to single chip | {:.0} inf/s wall ({:.2}x)",
+        n as f64 / fleet_dt.as_secs_f64(),
+        chip_dt.as_secs_f64() / fleet_dt.as_secs_f64()
+    );
+
+    // ---------------- bake the chip, re-measure -------------------------
+    chip.chip_mut().bake(340.0, cfg.retention.bake_temp_c);
+    let acc_after = experiments::mnist_accuracy(&mut chip, h_chip, &inputs.mnist_test)?;
     println!("chip after 340 h @125C: {:.2}%", 100.0 * acc_after);
 
     // ---------------- AutoEncoder (Fig 7 split) ------------------------
-    let mut chip_a = Chip::new(&cfg);
+    let mut chip_a = NmcuBackend::new(&cfg);
     let ae = experiments::run_autoencoder(
         &mut chip_a,
         &inputs.ae_float,
@@ -128,7 +146,7 @@ fn main() -> anyhow::Result<()> {
     ]);
     t.row(&[
         "SW. Baseline".into(),
-        format!("{:.2}%", 100.0 * acc_hlo),
+        format!("{:.2}%", 100.0 * acc_sw),
         format!("{:.3} AUC", ae.auc_sw_baseline),
     ]);
     t.print();

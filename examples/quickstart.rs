@@ -1,22 +1,23 @@
 //! Quickstart: fabricate a chip, program a small quantized layer into the
-//! 4-bits/cell EFLASH with full program-verify, run an MVM on the NMCU,
-//! and inspect the statistics. No artifacts needed.
+//! 4-bits/cell EFLASH with full program-verify, and serve it through the
+//! unified engine API — single samples, a batch, and a bake in between.
+//! No artifacts needed.
 //!
 //!     cargo run --release --example quickstart
 
+use nvmcu::artifacts::{QLayer, QModel};
 use nvmcu::config::ChipConfig;
-use nvmcu::coordinator::Chip;
-use nvmcu::artifacts::QLayer;
-use nvmcu::artifacts::QModel;
+use nvmcu::engine::{Backend, NmcuBackend};
 use nvmcu::metrics;
 use nvmcu::nmcu::Requant;
 use nvmcu::util::rng::Rng;
 
 fn main() {
     // 1. a chip with the paper's default configuration (4 Mb 4-bits/cell
-    //    EFLASH, 2 PEs x 128 lanes, VDDH 2.5 V -> VPGM 10 V)
+    //    EFLASH, 2 PEs x 128 lanes, VDDH 2.5 V -> VPGM 10 V), wrapped in
+    //    the engine Backend API
     let cfg = ChipConfig::new();
-    let mut chip = Chip::new(&cfg);
+    let mut engine = NmcuBackend::new(&cfg);
     println!(
         "fabricated: {} cells ({} Mb, {} bits/cell), {} rows of {}",
         cfg.eflash.n_cells(),
@@ -44,19 +45,22 @@ fn main() {
     };
     let model = QModel { name: "quickstart".into(), layers: vec![layer] };
 
-    // 3. program it (ISPP program-verify against the 15-level ladder)
-    let pm = chip.program_model(&model).expect("program");
+    // 3. program it (ISPP program-verify against the 15-level ladder);
+    //    errors are typed values, not panics
+    let handle = engine.program(&model).expect("program");
+    let pm = engine.model(handle).unwrap();
     println!(
-        "programmed {} cells in {} rows with {} ISPP pulses ({} failed)",
+        "programmed {} cells in {} rows with {} ISPP pulses ({} failed) -> handle {:?}",
         pm.total_cells(),
         pm.regions[0].n_rows,
         pm.total_pulses(),
-        pm.reports[0].failed_cells
+        pm.reports[0].failed_cells,
+        handle
     );
 
     // 4. one inference on the NMCU
     let x: Vec<i8> = (0..k).map(|_| (r.below(256) as i32 - 128) as i8).collect();
-    let y = chip.infer(&pm, &x);
+    let y = engine.infer(handle, &x).expect("infer");
     println!("output[0..8] = {:?}", &y[..8]);
 
     // 5. the same math in pure software must agree bit-exactly
@@ -64,8 +68,8 @@ fn main() {
     assert_eq!(y, want);
     println!("bit-exact vs software reference: OK");
 
-    // 6. statistics + energy estimate
-    let st = chip.stats();
+    // 6. statistics + energy estimate for that ONE inference
+    let st = engine.stats();
     let e = metrics::nmcu_energy(&st, &cfg.power);
     println!(
         "eflash reads: {} | MACs: {} | cycles: {} | energy: {:.1} nJ | latency: {:.2} us",
@@ -76,9 +80,24 @@ fn main() {
         metrics::nmcu_latency_s(&st, &cfg) * 1e6
     );
 
-    // 7. bake it: weights survive 160 h at 125 C unpowered
-    chip.bake(160.0, 125.0);
-    let y2 = chip.infer(&pm, &x);
+    // 7. a batch through the same handle (fresh counters)
+    engine.reset_stats();
+    let batch: Vec<Vec<i8>> = (0..16)
+        .map(|_| (0..k).map(|_| (r.below(256) as i32 - 128) as i8).collect())
+        .collect();
+    let outs = engine.infer_batch(handle, &batch).expect("batch");
+    let st = engine.stats();
+    println!(
+        "served a batch of {} ({} outputs each): {} eflash reads, {} MACs total",
+        outs.len(),
+        outs[0].len(),
+        st.eflash_reads,
+        st.mac_ops
+    );
+
+    // 8. bake it: weights survive 160 h at 125 C unpowered
+    engine.chip_mut().bake(160.0, 125.0);
+    let y2 = engine.infer(handle, &x).expect("infer after bake");
     let drift = y
         .iter()
         .zip(&y2)

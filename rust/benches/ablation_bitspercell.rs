@@ -10,6 +10,7 @@
 use nvmcu::artifacts;
 use nvmcu::config::ChipConfig;
 use nvmcu::coordinator::{experiments, Chip};
+use nvmcu::engine::{Backend, NmcuBackend};
 use nvmcu::util::bench::Table;
 
 fn main() {
@@ -77,9 +78,10 @@ fn accuracy_at(bits: u32, hours: f64, inputs: &experiments::Table1Inputs) -> f64
     let model = &inputs.mnist_model;
 
     if bits == 4 {
-        let pm = chip.program_model(model).unwrap();
-        chip.bake(hours, cfg.retention.bake_temp_c);
-        return experiments::mnist_accuracy_chip(&mut chip, &pm, &inputs.mnist_test);
+        let mut backend = NmcuBackend::from_chip(chip);
+        let h = backend.program(model).unwrap();
+        backend.chip_mut().bake(hours, cfg.retention.bake_temp_c);
+        return experiments::mnist_accuracy(&mut backend, h, &inputs.mnist_test).unwrap();
     }
 
     // split codes into b-bit fields, program as raw cell states

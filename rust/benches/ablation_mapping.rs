@@ -10,6 +10,7 @@ use nvmcu::artifacts;
 use nvmcu::config::ChipConfig;
 use nvmcu::coordinator::{experiments, Chip};
 use nvmcu::eflash::mapping::StateMapping;
+use nvmcu::engine::{Backend, NmcuBackend};
 use nvmcu::util::bench::Table;
 
 fn main() {
@@ -34,9 +35,10 @@ fn main() {
         for &hours in &bakes {
             let mut chip = Chip::new(&cfg);
             chip.eflash.mapping = mapping;
-            let pm = chip.program_model(&inputs.mnist_model).unwrap();
-            chip.bake(hours, cfg.retention.bake_temp_c);
-            let acc = experiments::mnist_accuracy_chip(&mut chip, &pm, &inputs.mnist_test);
+            let mut backend = NmcuBackend::from_chip(chip);
+            let h = backend.program(&inputs.mnist_model).unwrap();
+            backend.chip_mut().bake(hours, cfg.retention.bake_temp_c);
+            let acc = experiments::mnist_accuracy(&mut backend, h, &inputs.mnist_test).unwrap();
             row.push(format!("{:.2}", 100.0 * acc));
         }
         t.row(&row);

@@ -26,7 +26,7 @@ fn main() {
     let pm = chip.program_model(model).unwrap();
     let x0 = inputs.mnist_test.image_q(0);
     chip.reset_stats();
-    chip.infer(&pm, &x0);
+    chip.infer(&pm, &x0).unwrap();
     let with_pp = chip.stats();
 
     // without ping-pong: read back + reload every intermediate activation
@@ -36,8 +36,8 @@ fn main() {
     let mut h = x0.clone();
     for d in &pm2.descs {
         chip2.nmcu.begin_inference(); // resets fetch to the input buffer
-        chip2.nmcu.load_input(&h); // bus: activation reload
-        chip2.nmcu.execute_layer(&mut chip2.eflash, d);
+        chip2.nmcu.load_input(&h).unwrap(); // bus: activation reload
+        chip2.nmcu.execute_layer(&mut chip2.eflash, d).unwrap();
         h = chip2.nmcu.read_output(d.n); // bus: activation readback
     }
     let without_pp = chip2.stats();

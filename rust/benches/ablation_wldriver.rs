@@ -11,6 +11,7 @@ use nvmcu::analog::{DriverKind, WlDriver};
 use nvmcu::artifacts;
 use nvmcu::config::ChipConfig;
 use nvmcu::coordinator::{experiments, Chip};
+use nvmcu::engine::{Backend, NmcuBackend};
 use nvmcu::util::bench::Table;
 
 fn main() {
@@ -45,10 +46,11 @@ fn main() {
             ));
         }
         for hours in [0.0, 340.0, 1000.0] {
-            let mut chip = Chip::with_vrd_limit(&cfg, vrd_max);
-            let pm = chip.program_model(&inputs.mnist_model).unwrap();
-            chip.bake(hours, cfg.retention.bake_temp_c);
-            let acc = experiments::mnist_accuracy_chip(&mut chip, &pm, &inputs.mnist_test);
+            let chip = Chip::with_vrd_limit(&cfg, vrd_max);
+            let mut backend = NmcuBackend::from_chip(chip);
+            let h = backend.program(&inputs.mnist_model).unwrap();
+            backend.chip_mut().bake(hours, cfg.retention.bake_temp_c);
+            let acc = experiments::mnist_accuracy(&mut backend, h, &inputs.mnist_test).unwrap();
             row.push(format!("{:.2}%", 100.0 * acc));
         }
         t.row(&row);

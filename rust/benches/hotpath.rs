@@ -1,6 +1,7 @@
 //! Hot-path microbenchmarks — the §Perf baseline and regression guard:
 //! the 128-lane MAC, the EFLASH row read (cached + resampled), one NMCU
-//! layer, and the end-to-end inference. Run before and after every
+//! layer, the end-to-end inference, and the engine serving path (batched
+//! single-chip vs the sharded fleet). Run before and after every
 //! optimization (EXPERIMENTS.md §Perf records the history).
 //!
 //!     cargo bench --bench hotpath
@@ -8,6 +9,7 @@
 use nvmcu::config::ChipConfig;
 use nvmcu::coordinator::Chip;
 use nvmcu::eflash::read::ReadMode;
+use nvmcu::engine::{Backend, NmcuBackend, ShardedEngine};
 use nvmcu::nmcu::pe::mac_lanes;
 use nvmcu::util::bench::bench;
 use nvmcu::util::rng::Rng;
@@ -69,11 +71,11 @@ fn main() {
 
     let t1 = bench("NMCU layer 784x43 (154 reads)", tgt, || {
         chip.nmcu.begin_inference();
-        chip.nmcu.load_input(&x784);
-        std::hint::black_box(chip.nmcu.execute_layer(&mut chip.eflash, &pm.descs[0]));
+        chip.nmcu.load_input(&x784).unwrap();
+        std::hint::black_box(chip.nmcu.execute_layer(&mut chip.eflash, &pm.descs[0]).unwrap());
     });
     let t2 = bench("full MNIST-shaped inference (2 layers)", tgt, || {
-        std::hint::black_box(chip.infer(&pm, &x784));
+        std::hint::black_box(chip.infer(&pm, &x784).unwrap());
     });
     println!(
         "  -> layer: {:.2} us | inference: {:.2} us | {:.0} inferences/s | {:.2} GMAC/s effective",
@@ -87,6 +89,29 @@ fn main() {
     bench("rust integer reference (same model)", tgt, || {
         std::hint::black_box(nvmcu::models::qmodel_forward(&model, &x784));
     });
+
+    // ---- engine serving path: batched single chip vs sharded fleet ----------
+    const BATCH: usize = 256;
+    const SHARDS: usize = 4;
+    let batch: Vec<Vec<i8>> = (0..BATCH)
+        .map(|_| (0..784).map(|_| (r.below(256) as i32 - 128) as i8).collect())
+        .collect();
+    let mut single = NmcuBackend::new(&cfg);
+    let h1 = single.program(&model).unwrap();
+    let t_single = bench("engine infer_batch 256 imgs (1 chip)", tgt, || {
+        std::hint::black_box(single.infer_batch(h1, &batch).unwrap());
+    });
+    let mut fleet = ShardedEngine::new(&cfg, SHARDS).unwrap();
+    let hs = fleet.program(&model).unwrap();
+    let t_fleet = bench("sharded infer_batch 256 imgs (4 chips)", tgt, || {
+        std::hint::black_box(fleet.infer_batch(hs, &batch).unwrap());
+    });
+    println!(
+        "  -> {:.0} inf/s single chip | {:.0} inf/s {SHARDS}-shard fleet | {:.2}x wall-clock",
+        t_single.throughput(BATCH as f64),
+        t_fleet.throughput(BATCH as f64),
+        t_single.per_iter_ns / t_fleet.per_iter_ns
+    );
 
     // ---- RV32I interpreter ---------------------------------------------------
     use nvmcu::cpu::asm::*;

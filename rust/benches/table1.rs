@@ -46,35 +46,41 @@ fn main() {
     let tgt = Duration::from_millis(400);
 
     let t_chip = bench("chip NMCU+EFLASH inference (1 img)", tgt, || {
-        std::hint::black_box(chip.infer(&pm, &x0));
+        std::hint::black_box(chip.infer(&pm, &x0).unwrap());
     });
     let t_ref = bench("rust integer reference (1 img)", tgt, || {
         std::hint::black_box(nvmcu::models::qmodel_forward(&inputs.mnist_model, &x0));
     });
 
-    let rt = nvmcu::runtime::Runtime::cpu().unwrap();
-    let hlo1 = rt.load(&dir.join("mnist_mlp_b1.hlo.txt")).unwrap();
-    let t_hlo = bench("AOT HLO via PJRT b1 (1 img)", tgt, || {
-        std::hint::black_box(hlo1.run_i8(&x0, &[1, 784]).unwrap());
-    });
-    let hlo256 = rt.load(&dir.join("mnist_mlp_b256.hlo.txt")).unwrap();
-    let mut batch = vec![0i8; 256 * 784];
-    for j in 0..256.min(inputs.mnist_test.len()) {
-        batch[j * 784..(j + 1) * 784].copy_from_slice(&inputs.mnist_test.image_q(j));
-    }
-    let t_hlo256 = bench("AOT HLO via PJRT b256 (256 img)", tgt, || {
-        std::hint::black_box(hlo256.run_i8(&batch, &[256, 784]).unwrap());
-    });
-
     println!("\nthroughput:");
     println!("  chip sim      : {:>10.0} inf/s", t_chip.throughput(1.0));
     println!("  rust reference: {:>10.0} inf/s", t_ref.throughput(1.0));
-    println!("  HLO b1        : {:>10.0} inf/s", t_hlo.throughput(1.0));
-    println!("  HLO b256      : {:>10.0} inf/s", t_hlo256.throughput(256.0));
+
+    #[cfg(feature = "pjrt")]
+    if let Ok(rt) = nvmcu::runtime::Runtime::cpu() {
+        let hlo1 = rt.load(&dir.join("mnist_mlp_b1.hlo.txt")).unwrap();
+        let t_hlo = bench("AOT HLO via PJRT b1 (1 img)", tgt, || {
+            std::hint::black_box(hlo1.run_i8(&x0, &[1, 784]).unwrap());
+        });
+        let hlo256 = rt.load(&dir.join("mnist_mlp_b256.hlo.txt")).unwrap();
+        let mut batch = vec![0i8; 256 * 784];
+        for j in 0..256.min(inputs.mnist_test.len()) {
+            batch[j * 784..(j + 1) * 784].copy_from_slice(&inputs.mnist_test.image_q(j));
+        }
+        let t_hlo256 = bench("AOT HLO via PJRT b256 (256 img)", tgt, || {
+            std::hint::black_box(hlo256.run_i8(&batch, &[256, 784]).unwrap());
+        });
+        println!("  HLO b1        : {:>10.0} inf/s", t_hlo.throughput(1.0));
+        println!("  HLO b256      : {:>10.0} inf/s", t_hlo256.throughput(256.0));
+    } else {
+        println!("  (HLO timings skipped: PJRT runtime unavailable — stub xla build)");
+    }
+    #[cfg(not(feature = "pjrt"))]
+    println!("  (HLO timings skipped: built without the `pjrt` feature)");
 
     // modeled on-chip latency/energy (the numbers a datasheet would quote)
     chip.reset_stats();
-    chip.infer(&pm, &x0);
+    chip.infer(&pm, &x0).unwrap();
     let st = chip.stats();
     println!(
         "\nmodeled on-chip: {:.1} us / inference @ {} MHz, {:.2} uJ",

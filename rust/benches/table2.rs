@@ -52,7 +52,7 @@ fn main() {
     let pm = chip.program_model(&inputs.mnist_model).unwrap();
     chip.reset_stats();
     let x0 = inputs.mnist_test.image_q(0);
-    chip.infer(&pm, &x0);
+    chip.infer(&pm, &x0).unwrap();
     let reads4 = chip.stats().eflash_reads;
     let cells = inputs.mnist_model.total_cells();
     for (name, bits) in [("4 bits/cell (this work)", 4u64), ("2 bits/cell", 2), ("1 bit/cell", 1)] {

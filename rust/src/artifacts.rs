@@ -41,6 +41,52 @@ impl QModel {
     pub fn total_cells(&self) -> usize {
         self.layers.iter().map(|l| l.k * l.n).sum()
     }
+
+    /// Structural validation shared by every engine backend, so the same
+    /// malformed model is rejected with the same typed error everywhere:
+    /// at least one layer, consecutive layers chain (n of layer i == k of
+    /// layer i+1), and per-layer codes/bias lengths match the shape.
+    pub fn validate(&self) -> Result<(), crate::error::EngineError> {
+        use crate::error::EngineError;
+        if self.layers.is_empty() {
+            return Err(EngineError::BadDescriptor {
+                reason: format!("model {} has no layers", self.name),
+            });
+        }
+        for w in self.layers.windows(2) {
+            if w[0].n != w[1].k {
+                return Err(EngineError::BadDescriptor {
+                    reason: format!(
+                        "layer {} outputs {} features but layer {} expects {}",
+                        w[0].name, w[0].n, w[1].name, w[1].k
+                    ),
+                });
+            }
+        }
+        for l in &self.layers {
+            if l.k == 0 || l.n == 0 {
+                return Err(EngineError::BadDescriptor {
+                    reason: format!("layer {}: zero dimension (k={}, n={})", l.name, l.k, l.n),
+                });
+            }
+            if l.codes.len() != l.k * l.n {
+                return Err(EngineError::BadDescriptor {
+                    reason: format!(
+                        "layer {}: {} weight codes != k*n = {}",
+                        l.name,
+                        l.codes.len(),
+                        l.k * l.n
+                    ),
+                });
+            }
+            if l.bias.len() != l.n {
+                return Err(EngineError::BadDescriptor {
+                    reason: format!("layer {}: bias length {} != n={}", l.name, l.bias.len(), l.n),
+                });
+            }
+        }
+        Ok(())
+    }
 }
 
 /// Unpack int4 codes (two per byte, low nibble first) to i8 in [-8, 7].

@@ -1,14 +1,18 @@
 //! Experiment drivers reproducing the paper's evaluation (§3): Table 1
 //! (inference accuracy before/after bake vs SW baseline), Fig 6 (state
 //! occupancy histograms), and the supporting decode-error sweeps used by
-//! the ablation benches. Each driver returns a plain struct the benches
-//! and examples format.
+//! the ablation benches. Drivers run on the `engine` API — accuracy
+//! measurement goes through [`Backend::infer_batch`] so the same code
+//! measures a chip, the software reference, or a sharded fleet — while
+//! device-level steps (bake, decode) reach the chip through
+//! [`NmcuBackend`].
 
-use super::{Chip, ProgrammedModel};
+use super::Chip;
 use crate::artifacts::{self, AeFloat, QModel};
 use crate::config::ChipConfig;
 use crate::datasets::{AdmosTest, MnistTest};
 use crate::eflash::DecodeErrors;
+use crate::engine::{Backend, EngineError, ModelHandle, NmcuBackend};
 use crate::models;
 use crate::util::stats;
 use anyhow::Result;
@@ -26,23 +30,24 @@ pub struct MnistResult {
     pub decode_after: DecodeErrors,
 }
 
-/// Run the full MNIST experiment on a chip (programs the model, measures
-/// before-bake accuracy, bakes, measures again). The SW baseline is the
-/// pure-integer reference path — bit-identical to the AOT HLO graph
-/// (cross-checked by `rust/tests/test_runtime.rs`).
+/// Run the full MNIST experiment on a chip backend (programs the model,
+/// measures before-bake accuracy, bakes, measures again). The SW
+/// baseline is the pure-integer reference path — bit-identical to the
+/// AOT HLO graph (cross-checked by `rust/tests/test_bitexact.rs`).
 pub fn run_mnist(
-    chip: &mut Chip,
+    backend: &mut NmcuBackend,
     model: &QModel,
     test: &MnistTest,
     bake_hours: f64,
 ) -> Result<MnistResult> {
-    let pm = chip.program_model(model)?;
+    let h = backend.program(model)?;
     let acc_sw = mnist_accuracy_sw(model, test);
-    let acc_before = mnist_accuracy_chip(chip, &pm, test);
-    let decode_before = decode_errors_all(chip, &pm, model);
-    chip.bake(bake_hours, chip.cfg.retention.bake_temp_c);
-    let acc_after = mnist_accuracy_chip(chip, &pm, test);
-    let decode_after = decode_errors_all(chip, &pm, model);
+    let acc_before = mnist_accuracy(backend, h, test)?;
+    let decode_before = decode_errors_all(backend, h, model)?;
+    let bake_temp = backend.chip().cfg.retention.bake_temp_c;
+    backend.chip_mut().bake(bake_hours, bake_temp);
+    let acc_after = mnist_accuracy(backend, h, test)?;
+    let decode_after = decode_errors_all(backend, h, model)?;
     Ok(MnistResult {
         n_test: test.len(),
         acc_sw_baseline: acc_sw,
@@ -65,21 +70,46 @@ pub fn mnist_accuracy_sw(model: &QModel, test: &MnistTest) -> f64 {
     correct as f64 / test.len() as f64
 }
 
-pub fn mnist_accuracy_chip(chip: &mut Chip, pm: &ProgrammedModel, test: &MnistTest) -> f64 {
-    let mut correct = 0usize;
-    for i in 0..test.len() {
-        let logits = chip.infer(pm, &test.image_q(i));
-        if models::argmax_i8(&logits) == test.labels[i] as usize {
-            correct += 1;
-        }
-    }
-    correct as f64 / test.len() as f64
+/// Count how many int8 logit vectors argmax to their label (ties take
+/// the first maximum, matching `models::argmax_i8` everywhere).
+fn count_correct(outs: &[Vec<i8>], labels: &[u8]) -> usize {
+    outs.iter()
+        .zip(labels)
+        .filter(|(logits, &label)| models::argmax_i8(logits) == label as usize)
+        .count()
 }
 
-fn decode_errors_all(chip: &mut Chip, pm: &ProgrammedModel, model: &QModel) -> DecodeErrors {
+/// Accuracy of already-computed logits against labels — the one scoring
+/// rule shared by the experiment drivers and the examples.
+pub fn accuracy_of_outputs(outs: &[Vec<i8>], labels: &[u8]) -> f64 {
+    count_correct(outs, labels) as f64 / outs.len().max(1) as f64
+}
+
+/// MNIST accuracy of a resident model on any backend, measured through
+/// the batched serving path in ONE infer_batch call — backends chunk
+/// internally as their substrate needs (HLO at the AOT graph width,
+/// sharded across the fleet).
+pub fn mnist_accuracy(
+    backend: &mut dyn Backend,
+    handle: ModelHandle,
+    test: &MnistTest,
+) -> Result<f64, EngineError> {
+    let xs: Vec<Vec<i8>> = (0..test.len()).map(|i| test.image_q(i)).collect();
+    let outs = backend.infer_batch(handle, &xs)?;
+    Ok(accuracy_of_outputs(&outs, &test.labels))
+}
+
+/// Decode-error statistics of a resident model against its original
+/// codes, summed over all layers (shared by the Table 1 driver and the
+/// `retention` CLI sweep).
+pub fn decode_errors_all(
+    backend: &mut NmcuBackend,
+    handle: ModelHandle,
+    model: &QModel,
+) -> Result<DecodeErrors, EngineError> {
     let mut total = DecodeErrors::default();
     for i in 0..model.layers.len() {
-        let decoded = chip.decoded_codes(pm, i);
+        let decoded = backend.decoded_codes(handle, i)?;
         let want = &model.layers[i].codes;
         for (g, w) in decoded.iter().zip(want) {
             let d = (*g as i32 - *w as i32).abs();
@@ -92,7 +122,7 @@ fn decode_errors_all(chip: &mut Chip, pm: &ProgrammedModel, model: &QModel) -> D
             }
         }
     }
-    total
+    Ok(total)
 }
 
 /// Table 1, AutoEncoder column (Fig 7 split: layer 9 on-chip).
@@ -106,23 +136,26 @@ pub struct AeResult {
 }
 
 pub fn run_autoencoder(
-    chip: &mut Chip,
+    backend: &mut NmcuBackend,
     ae: &AeFloat,
     l9_model: &QModel,
     test: &AdmosTest,
     bake_hours: f64,
 ) -> Result<AeResult> {
-    let pm = chip.program_model(l9_model)?;
-    let desc = pm.descs[0].clone();
+    let h = backend.program(l9_model)?;
     let l9 = &l9_model.layers[0];
 
     // SW baseline: layer 9 through the integer reference path
     let auc_sw = ae_auc(ae, test, |xq| {
-        crate::nmcu::reference_mvm(xq, &l9.codes, l9.k, l9.n, &l9.bias, l9.requant, l9.relu)
-    });
-    let auc_before = ae_auc(ae, test, |xq| chip.infer_layer(&desc, xq));
-    chip.bake(bake_hours, chip.cfg.retention.bake_temp_c);
-    let auc_after = ae_auc(ae, test, |xq| chip.infer_layer(&desc, xq));
+        Ok(crate::nmcu::reference_mvm(
+            xq, &l9.codes, l9.k, l9.n, &l9.bias, l9.requant, l9.relu,
+        ))
+    })?;
+    // the l9 model is single-layer, so backend.infer IS the layer-9 path
+    let auc_before = ae_auc(ae, test, |xq| backend.infer(h, xq))?;
+    let bake_temp = backend.chip().cfg.retention.bake_temp_c;
+    backend.chip_mut().bake(bake_hours, bake_temp);
+    let auc_after = ae_auc(ae, test, |xq| backend.infer(h, xq))?;
     Ok(AeResult {
         n_test: test.len(),
         auc_sw_baseline: auc_sw,
@@ -132,21 +165,28 @@ pub fn run_autoencoder(
     })
 }
 
-/// AUC of the anomaly detector with a pluggable layer-9 executor.
-pub fn ae_auc(ae: &AeFloat, test: &AdmosTest, mut l9: impl FnMut(&[i8]) -> Vec<i8>) -> f64 {
+/// AUC of the anomaly detector with a pluggable (fallible) layer-9
+/// executor.
+pub fn ae_auc(
+    ae: &AeFloat,
+    test: &AdmosTest,
+    mut l9: impl FnMut(&[i8]) -> Result<Vec<i8>, EngineError>,
+) -> Result<f64, EngineError> {
     let mut scores = Vec::with_capacity(test.len());
     let mut labels = Vec::with_capacity(test.len());
     for i in 0..test.len() {
         let x = test.feat(i);
-        let (_, score) = models::ae_forward_split(ae, &mut l9, x);
-        scores.push(score);
+        let xq = models::ae_pre(ae, x);
+        let y9 = l9(&xq)?;
+        let recon = models::ae_post(ae, &y9);
+        scores.push(models::ae_score(ae, x, &recon));
         labels.push(test.labels[i] == 1);
     }
-    stats::auc(&scores, &labels)
+    Ok(stats::auc(&scores, &labels))
 }
 
 /// Fig 6: state-occupancy histogram of a programmed model region.
-pub fn fig6_histograms(chip: &mut Chip, pm: &ProgrammedModel) -> Vec<[u64; 16]> {
+pub fn fig6_histograms(chip: &mut Chip, pm: &super::ProgrammedModel) -> Vec<[u64; 16]> {
     pm.regions.iter().map(|r| chip.eflash.state_histogram(r)).collect()
 }
 
@@ -172,11 +212,11 @@ pub fn load_table1_inputs(dir: &Path) -> Result<Table1Inputs> {
 /// Full Table 1 as the paper prints it (both workloads, chip + bake).
 pub fn run_table1(cfg: &ChipConfig, inputs: &Table1Inputs) -> Result<(MnistResult, AeResult)> {
     // the paper baked the MNIST chip 340 h and the AE chip 160 h
-    let mut chip_m = Chip::new(cfg);
-    let mnist = run_mnist(&mut chip_m, &inputs.mnist_model, &inputs.mnist_test, 340.0)?;
-    let mut chip_a = Chip::new(cfg);
+    let mut backend_m = NmcuBackend::new(cfg);
+    let mnist = run_mnist(&mut backend_m, &inputs.mnist_model, &inputs.mnist_test, 340.0)?;
+    let mut backend_a = NmcuBackend::new(cfg);
     let ae = run_autoencoder(
-        &mut chip_a,
+        &mut backend_a,
         &inputs.ae_float,
         &inputs.ae_l9_model,
         &inputs.admos_test,
@@ -243,9 +283,9 @@ mod tests {
     fn table1_mnist_pipeline_on_synthetic_model() {
         let mut cfg = ChipConfig::new();
         cfg.eflash.capacity_bits = 1024 * 1024;
-        let mut chip = Chip::new(&cfg);
+        let mut backend = NmcuBackend::new(&cfg);
         let (model, test) = synth_mnist_like();
-        let res = run_mnist(&mut chip, &model, &test, 160.0).unwrap();
+        let res = run_mnist(&mut backend, &model, &test, 160.0).unwrap();
         // SW baseline is perfect by construction; chip-before-bake is
         // bit-identical to SW (program-verify leaves no decode errors)
         assert_eq!(res.acc_sw_baseline, 1.0);
@@ -254,6 +294,15 @@ mod tests {
         // after bake: most cells still exact, accuracy stays high
         assert!(res.decode_after.exact_rate() > 0.85);
         assert!(res.acc_after_bake > 0.8, "acc after bake {}", res.acc_after_bake);
+    }
+
+    #[test]
+    fn mnist_accuracy_same_on_reference_backend() {
+        let (model, test) = synth_mnist_like();
+        let mut backend = crate::engine::ReferenceBackend::new();
+        let h = backend.program(&model).unwrap();
+        let acc = mnist_accuracy(&mut backend, h, &test).unwrap();
+        assert_eq!(acc, 1.0);
     }
 
     #[test]

@@ -9,8 +9,8 @@ use crate::artifacts::QModel;
 use crate::config::ChipConfig;
 use crate::eflash::program::ProgramReport;
 use crate::eflash::{EflashMacro, Region};
+use crate::error::EngineError;
 use crate::nmcu::{layout_codes, LayerDesc, Nmcu, NmcuStats};
-use anyhow::{bail, Result};
 
 /// A model programmed into the weight memory.
 #[derive(Clone, Debug)]
@@ -64,8 +64,53 @@ impl Chip {
     }
 
     /// Program a quantized model into the EFLASH with full program-verify.
-    pub fn program_model(&mut self, model: &QModel) -> Result<ProgrammedModel> {
+    /// Failures (capacity, verify) are typed [`EngineError`]s so a serving
+    /// process can react instead of aborting. Capacity is checked for the
+    /// WHOLE model up front, so a `CapacityExhausted` error leaves the
+    /// bump allocator untouched and a smaller model can still be
+    /// programmed afterwards. (A mid-model `ProgramVerifyFailed` does
+    /// leave the already-programmed rows allocated — those cells are
+    /// physically worn and should not be reused without an erase.)
+    pub fn program_model(&mut self, model: &QModel) -> Result<ProgrammedModel, EngineError> {
         let lanes = self.cfg.nmcu.lanes_per_pe;
+        model.validate()?;
+        // NMCU geometry: a model that could never be inferred must not
+        // consume EFLASH rows (the bump allocator has no free). Layer
+        // chaining is already validated, so checking every n plus the
+        // first k covers all layer inputs too.
+        let pp = self.cfg.nmcu.pingpong_capacity;
+        for l in &model.layers {
+            if l.n > pp {
+                return Err(EngineError::BadDescriptor {
+                    reason: format!(
+                        "layer {}: n={} exceeds ping-pong half capacity {pp}",
+                        l.name, l.n
+                    ),
+                });
+            }
+        }
+        let first = &model.layers[0];
+        if first.k > self.cfg.nmcu.input_capacity {
+            return Err(EngineError::BadDescriptor {
+                reason: format!(
+                    "layer {}: k={} exceeds input buffer capacity {}",
+                    first.name, first.k, self.cfg.nmcu.input_capacity
+                ),
+            });
+        }
+        // build the row images first and size the pre-check from them, so
+        // the capacity math has a single source of truth (layout_codes)
+        let images: Vec<Vec<i8>> =
+            model.layers.iter().map(|l| layout_codes(&l.codes, l.k, l.n, lanes)).collect();
+        let cpr = self.eflash.cells_per_read();
+        let rows_needed: usize = images.iter().map(|img| img.len().div_ceil(cpr)).sum();
+        if rows_needed > self.eflash.rows_free() {
+            return Err(EngineError::CapacityExhausted {
+                requested_rows: rows_needed,
+                rows_free: self.eflash.rows_free(),
+                what: model.name.clone(),
+            });
+        }
         let mut pm = ProgrammedModel {
             name: model.name.clone(),
             descs: Vec::new(),
@@ -74,13 +119,17 @@ impl Chip {
             layer_codes: Vec::new(),
             layer_images: Vec::new(),
         };
-        for l in &model.layers {
-            let image = layout_codes(&l.codes, l.k, l.n, lanes);
+        for (l, image) in model.layers.iter().zip(images) {
             let Some((region, report)) = self.eflash.program_region(&image) else {
-                bail!("EFLASH capacity exhausted programming {}", l.name);
+                // capacity was pre-checked for the whole model above, so
+                // this is an internal invariant violation, not bad input
+                unreachable!("EFLASH capacity pre-check missed layer {}", l.name);
             };
             if report.failed_cells > 0 {
-                bail!("{} cells failed program-verify in {}", report.failed_cells, l.name);
+                return Err(EngineError::ProgramVerifyFailed {
+                    layer: l.name.clone(),
+                    failed_cells: report.failed_cells,
+                });
             }
             pm.descs.push(LayerDesc {
                 first_row: region.first_row,
@@ -99,23 +148,23 @@ impl Chip {
     }
 
     /// Run one inference through all programmed layers (fully on-chip).
-    pub fn infer(&mut self, pm: &ProgrammedModel, x_q: &[i8]) -> Vec<i8> {
+    pub fn infer(&mut self, pm: &ProgrammedModel, x_q: &[i8]) -> Result<Vec<i8>, EngineError> {
         self.nmcu.begin_inference();
-        self.nmcu.load_input(x_q);
+        self.nmcu.load_input(x_q)?;
         let mut out = Vec::new();
         for d in &pm.descs {
-            out = self.nmcu.execute_layer(&mut self.eflash, d);
+            out = self.nmcu.execute_layer(&mut self.eflash, d)?;
         }
         let n = out.len();
-        self.nmcu.read_output(n)
+        Ok(self.nmcu.read_output(n))
     }
 
     /// Run a single programmed layer (the Fig 7 on-chip layer 9 path).
-    pub fn infer_layer(&mut self, desc: &LayerDesc, x_q: &[i8]) -> Vec<i8> {
+    pub fn infer_layer(&mut self, desc: &LayerDesc, x_q: &[i8]) -> Result<Vec<i8>, EngineError> {
         self.nmcu.begin_inference();
-        self.nmcu.load_input(x_q);
-        self.nmcu.execute_layer(&mut self.eflash, desc);
-        self.nmcu.read_output(desc.n)
+        self.nmcu.load_input(x_q)?;
+        self.nmcu.execute_layer(&mut self.eflash, desc)?;
+        Ok(self.nmcu.read_output(desc.n))
     }
 
     /// Unpowered bake (the paper's 125C retention stress).
@@ -204,7 +253,7 @@ mod tests {
         let mut r = Rng::new(10);
         for _ in 0..5 {
             let x: Vec<i8> = (0..100).map(|_| (r.below(256) as i32 - 128) as i8).collect();
-            let got = chip.infer(&pm, &x);
+            let got = chip.infer(&pm, &x).unwrap();
             let want = qmodel_forward(&model, &x);
             assert_eq!(got, want);
         }
@@ -229,9 +278,9 @@ mod tests {
         let model = synth_model(12);
         let pm = chip.program_model(&model).unwrap();
         let x: Vec<i8> = (0..100).map(|i| (i as i8).wrapping_mul(3)).collect();
-        let before = chip.infer(&pm, &x);
+        let before = chip.infer(&pm, &x).unwrap();
         chip.bake(160.0, 125.0);
-        let after = chip.infer(&pm, &x);
+        let after = chip.infer(&pm, &x).unwrap();
         assert_eq!(before.len(), after.len());
         // outputs stay close: each weight drifts at most ~1 LSB
         let max_d = before
@@ -249,6 +298,10 @@ mod tests {
         cfg.eflash.capacity_bits = 8 * 1024; // 2K cells = 8 rows only
         let mut chip = Chip::new(&cfg);
         let model = synth_model(13); // needs > 4K cells
-        assert!(chip.program_model(&model).is_err());
+        let err = chip.program_model(&model).unwrap_err();
+        assert!(
+            matches!(err, EngineError::CapacityExhausted { .. }),
+            "expected CapacityExhausted, got {err:?}"
+        );
     }
 }

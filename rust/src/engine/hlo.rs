@@ -1,0 +1,196 @@
+//! The PJRT backend (`--features pjrt`): serves models through the
+//! AOT-compiled HLO text artifacts (the L2 JAX graphs embedding the L1
+//! Pallas kernel). `program` resolves the artifacts by model name — the
+//! single-sample graph `<name>_b1.hlo.txt` plus, when present, the
+//! batched graph `<name>_b256.hlo.txt` (the convention
+//! `python/compile/aot.py` writes) — so `infer_batch` runs real batched
+//! XLA executions instead of per-sample dispatch.
+
+use super::{lookup, Backend, EngineError, ModelHandle, ModelInfo, Result, AOT_BATCH};
+use crate::artifacts::QModel;
+use crate::nmcu::NmcuStats;
+use crate::runtime::{HloExecutable, Runtime};
+use std::path::{Path, PathBuf};
+
+struct HloModel {
+    name: String,
+    exe: HloExecutable,
+    /// the `_b256` graph, when the artifact exists (inputs are padded
+    /// with zeros up to [`AOT_BATCH`] rows for partial chunks)
+    batch_exe: Option<HloExecutable>,
+    input_dim: usize,
+    output_dim: usize,
+    n_layers: u64,
+    /// LOGICAL MACs one inference performs (sum of k*n over the layers,
+    /// like `ReferenceBackend`; the NMCU backend reports physical
+    /// padded-lane MACs instead)
+    macs_per_inference: u64,
+}
+
+pub struct HloBackend {
+    rt: Runtime,
+    dir: PathBuf,
+    models: Vec<HloModel>,
+    stats: NmcuStats,
+}
+
+fn backend_err(e: anyhow::Error) -> EngineError {
+    EngineError::Backend { backend: "hlo", reason: format!("{e:#}") }
+}
+
+/// The loaded HLO graph's output shape disagrees with the QModel — the
+/// artifacts are stale relative to the model (re-run `make artifacts`).
+fn stale_artifact(model: &str, expected: usize, got: usize) -> EngineError {
+    EngineError::Backend {
+        backend: "hlo",
+        reason: format!(
+            "{model}: HLO graph produced {got} output elements, model expects {expected} \
+             (stale artifacts? re-run `make artifacts`)"
+        ),
+    }
+}
+
+/// One sample through the single-sample (`_b1`) graph, with the
+/// stale-artifact shape check — shared by `infer` and the
+/// `infer_batch` fallback so the two paths cannot drift.
+fn run_b1(m: &HloModel, x: &[i8]) -> Result<Vec<i8>> {
+    let res = m.exe.run_i8(x, &[1, m.input_dim]).map_err(backend_err)?;
+    if res.len() != m.output_dim {
+        return Err(stale_artifact(&m.name, m.output_dim, res.len()));
+    }
+    Ok(res)
+}
+
+impl HloBackend {
+    /// Create the PJRT CPU client; `dir` is where the `.hlo.txt`
+    /// artifacts live (`make artifacts`).
+    pub fn new(dir: &Path) -> Result<HloBackend> {
+        let rt = Runtime::cpu().map_err(backend_err)?;
+        Ok(HloBackend {
+            rt,
+            dir: dir.to_path_buf(),
+            models: Vec::new(),
+            stats: NmcuStats::default(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.rt.platform()
+    }
+}
+
+impl Backend for HloBackend {
+    fn name(&self) -> &'static str {
+        "hlo"
+    }
+
+    fn program(&mut self, model: &QModel) -> Result<ModelHandle> {
+        model.validate()?;
+        let first = &model.layers[0];
+        let exe = self
+            .rt
+            .load(&self.dir.join(format!("{}_b1.hlo.txt", model.name)))
+            .map_err(backend_err)?;
+        // the batched graph is optional — fall back to per-sample
+        // dispatch when the artifact set doesn't include it. A graph
+        // that EXISTS but fails to load is an error, not a silent
+        // fallback to orders-of-magnitude slower dispatch.
+        let batch_path = self.dir.join(format!("{}_b{AOT_BATCH}.hlo.txt", model.name));
+        let batch_exe = if batch_path.exists() {
+            Some(self.rt.load(&batch_path).map_err(backend_err)?)
+        } else {
+            // visible, because per-sample dispatch is orders of magnitude
+            // slower and would silently skew any batched-baseline numbers
+            eprintln!(
+                "hlo backend: {} not found — {} will serve batches per-sample via the b1 graph",
+                batch_path.display(),
+                model.name
+            );
+            None
+        };
+        self.models.push(HloModel {
+            name: model.name.clone(),
+            exe,
+            batch_exe,
+            input_dim: first.k,
+            output_dim: model.layers.last().unwrap().n,
+            n_layers: model.layers.len() as u64,
+            macs_per_inference: model.layers.iter().map(|l| (l.k * l.n) as u64).sum(),
+        });
+        Ok(ModelHandle::from_index(self.models.len() - 1))
+    }
+
+    fn infer(&mut self, handle: ModelHandle, x: &[i8]) -> Result<Vec<i8>> {
+        let m = lookup(&self.models, handle)?;
+        if x.len() != m.input_dim {
+            return Err(EngineError::InputSize { expected: m.input_dim, got: x.len() });
+        }
+        let out = run_b1(m, x)?;
+        self.stats.bus_bytes += (x.len() + out.len()) as u64;
+        self.stats.layers_run += m.n_layers;
+        self.stats.mac_ops += m.macs_per_inference;
+        Ok(out)
+    }
+
+    /// Serve a batch through the `_b256` graph in [`AOT_BATCH`]-sized
+    /// XLA executions (zero-padding the last partial chunk) instead of
+    /// per-sample dispatch; falls back to the b1 graph when no batched
+    /// artifact was found at program time.
+    fn infer_batch(&mut self, handle: ModelHandle, xs: &[Vec<i8>]) -> Result<Vec<Vec<i8>>> {
+        let m = lookup(&self.models, handle)?;
+        let (k, n_out) = (m.input_dim, m.output_dim);
+        if let Some(bad) = xs.iter().find(|x| x.len() != k) {
+            return Err(EngineError::InputSize { expected: k, got: bad.len() });
+        }
+        let mut out = Vec::with_capacity(xs.len());
+        match &m.batch_exe {
+            Some(batch_exe) => {
+                for chunk in xs.chunks(AOT_BATCH) {
+                    let mut flat = vec![0i8; AOT_BATCH * k];
+                    for (j, x) in chunk.iter().enumerate() {
+                        flat[j * k..(j + 1) * k].copy_from_slice(x);
+                    }
+                    let res = batch_exe.run_i8(&flat, &[AOT_BATCH, k]).map_err(backend_err)?;
+                    // a stale artifact (regenerated model, old graph) is a
+                    // typed error, not an out-of-bounds slice mid-batch
+                    if res.len() != AOT_BATCH * n_out {
+                        return Err(stale_artifact(&m.name, AOT_BATCH * n_out, res.len()));
+                    }
+                    for j in 0..chunk.len() {
+                        out.push(res[j * n_out..(j + 1) * n_out].to_vec());
+                    }
+                }
+            }
+            None => {
+                for x in xs {
+                    out.push(run_b1(m, x)?);
+                }
+            }
+        }
+        self.stats.bus_bytes += (xs.len() * (k + n_out)) as u64;
+        self.stats.layers_run += m.n_layers * xs.len() as u64;
+        self.stats.mac_ops += m.macs_per_inference * xs.len() as u64;
+        Ok(out)
+    }
+
+    fn n_models(&self) -> usize {
+        self.models.len()
+    }
+
+    fn model_info(&self, handle: ModelHandle) -> Option<ModelInfo> {
+        self.models.get(handle.index()).map(|m| ModelInfo {
+            name: m.name.clone(),
+            input_dim: m.input_dim,
+            output_dim: m.output_dim,
+            n_layers: m.n_layers as usize,
+        })
+    }
+
+    fn stats(&self) -> NmcuStats {
+        self.stats
+    }
+
+    fn reset_stats(&mut self) {
+        self.stats = NmcuStats::default();
+    }
+}

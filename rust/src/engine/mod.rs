@@ -1,0 +1,257 @@
+//! # Unified inference engine
+//!
+//! One API over every inference path in the crate. The repo grew four
+//! divergent single-sample entry points (`coordinator::Chip::infer`, the
+//! `models::qmodel_forward` reference, `runtime::HloExecutable::run_i8`,
+//! and the firmware path through `soc::Mcu`); this module redesigns the
+//! public surface around a [`Backend`] trait with batched, fallible
+//! methods, so serving code is written once and runs against any
+//! substrate:
+//!
+//! - [`NmcuBackend`] — the chip simulator (EFLASH weight memory + NMCU),
+//! - [`ReferenceBackend`] — the bit-exact pure-software integer path,
+//! - `HloBackend` — the AOT-compiled HLO graphs via PJRT
+//!   (`--features pjrt`),
+//! - [`ShardedEngine`] — N replicated chips on worker threads, the
+//!   data-parallel throughput primitive (itself a [`Backend`]).
+//!
+//! Models are addressed by opaque [`ModelHandle`]s: a backend owns a
+//! registry of resident models (multiple models share one EFLASH through
+//! the existing `Region` bump allocator) instead of the caller threading
+//! `ProgrammedModel` around. All failures are typed [`EngineError`]
+//! values — nothing on the program/infer path panics on bad input.
+//!
+//! ```no_run
+//! use nvmcu::config::ChipConfig;
+//! use nvmcu::engine::Engine;
+//! # fn model() -> nvmcu::artifacts::QModel { unimplemented!() }
+//! let mut engine = Engine::nmcu(&ChipConfig::new());
+//! let h = engine.program(&model()).unwrap();
+//! let batch: Vec<Vec<i8>> = vec![vec![0; 784]; 64];
+//! let logits = engine.infer_batch(h, &batch).unwrap();
+//! ```
+
+mod nmcu_backend;
+mod reference;
+mod sharded;
+
+#[cfg(feature = "pjrt")]
+mod hlo;
+
+pub use crate::error::EngineError;
+#[cfg(feature = "pjrt")]
+pub use hlo::HloBackend;
+pub use nmcu_backend::NmcuBackend;
+pub use reference::ReferenceBackend;
+pub use sharded::ShardedEngine;
+
+use crate::artifacts::QModel;
+use crate::config::ChipConfig;
+use crate::nmcu::NmcuStats;
+use std::path::Path;
+
+/// Engine results carry typed [`EngineError`]s.
+pub type Result<T> = std::result::Result<T, EngineError>;
+
+/// Batch width of the AOT-compiled batched HLO graphs
+/// (`python/compile/aot.py` emits `<name>_b{AOT_BATCH}.hlo.txt`).
+/// Batch-oriented callers chunk at this width so the HLO backend only
+/// zero-pads the final partial chunk.
+pub const AOT_BATCH: usize = 256;
+
+/// Opaque handle to a model resident in a backend's registry. Handles
+/// are allocated sequentially per backend and are only meaningful for
+/// the backend that issued them.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ModelHandle(usize);
+
+impl ModelHandle {
+    /// Build a handle from a raw registry index (tests, serialization).
+    pub fn from_index(index: usize) -> ModelHandle {
+        ModelHandle(index)
+    }
+
+    pub fn index(&self) -> usize {
+        self.0
+    }
+}
+
+/// Shared registry lookup used by every backend.
+pub(crate) fn lookup<T>(models: &[T], handle: ModelHandle) -> Result<&T> {
+    models.get(handle.index()).ok_or_else(|| EngineError::InvalidHandle {
+        handle: handle.index(),
+        n_models: models.len(),
+    })
+}
+
+/// The contract every inference substrate implements.
+///
+/// `program` moves a quantized model into the backend's weight store and
+/// returns a handle; `infer`/`infer_batch` run resident models. All
+/// methods are fallible — backends must never panic on malformed input.
+pub trait Backend: Send {
+    /// Short name for logs and CLI output.
+    fn name(&self) -> &'static str;
+
+    /// Make `model` resident and return its handle.
+    fn program(&mut self, model: &QModel) -> Result<ModelHandle>;
+
+    /// Run one int8 input through a resident model.
+    fn infer(&mut self, handle: ModelHandle, x: &[i8]) -> Result<Vec<i8>>;
+
+    /// Run a batch of inputs; `out[i]` corresponds to `xs[i]`. The
+    /// default loops `infer`; backends with real batch parallelism
+    /// ([`ShardedEngine`]) override it.
+    fn infer_batch(&mut self, handle: ModelHandle, xs: &[Vec<i8>]) -> Result<Vec<Vec<i8>>> {
+        xs.iter().map(|x| self.infer(handle, x)).collect()
+    }
+
+    /// Number of models resident in the registry.
+    fn n_models(&self) -> usize;
+
+    /// Metadata of a resident model, or `None` for an unknown handle.
+    fn model_info(&self, handle: ModelHandle) -> Option<ModelInfo>;
+
+    /// Cumulative execution statistics (reads, MACs, cycles, bus bytes).
+    fn stats(&self) -> NmcuStats;
+
+    /// Zero the statistics counters.
+    fn reset_stats(&mut self);
+}
+
+/// Which backend an [`Engine`] should run on (CLI `--backend`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    Nmcu,
+    Reference,
+    Hlo,
+}
+
+impl std::str::FromStr for BackendKind {
+    type Err = EngineError;
+
+    fn from_str(s: &str) -> std::result::Result<BackendKind, EngineError> {
+        match s {
+            "nmcu" | "chip" => Ok(BackendKind::Nmcu),
+            "reference" | "ref" | "sw" => Ok(BackendKind::Reference),
+            "hlo" | "pjrt" => Ok(BackendKind::Hlo),
+            other => Err(EngineError::InvalidConfig {
+                reason: format!("unknown backend `{other}` (expected nmcu|reference|hlo)"),
+            }),
+        }
+    }
+}
+
+/// Per-model metadata the engine keeps for request validation.
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub name: String,
+    /// input features of the first layer
+    pub input_dim: usize,
+    /// output features of the last layer
+    pub output_dim: usize,
+    pub n_layers: usize,
+}
+
+/// A serving front-end over any [`Backend`]: validates requests (handle
+/// and input-dimension checks) before they reach the substrate. Model
+/// metadata comes from the backend itself ([`Backend::model_info`]), so
+/// wrapping a backend that already has models resident works.
+pub struct Engine {
+    backend: Box<dyn Backend>,
+}
+
+impl Engine {
+    /// Wrap an already-constructed backend.
+    pub fn new(backend: Box<dyn Backend>) -> Engine {
+        Engine { backend }
+    }
+
+    /// Engine over a single simulated chip.
+    pub fn nmcu(cfg: &ChipConfig) -> Engine {
+        Engine::new(Box::new(NmcuBackend::new(cfg)))
+    }
+
+    /// Engine over the pure-software integer reference.
+    pub fn reference() -> Engine {
+        Engine::new(Box::new(ReferenceBackend::new()))
+    }
+
+    /// Engine over `n_shards` replicated chips on worker threads.
+    pub fn sharded(cfg: &ChipConfig, n_shards: usize) -> Result<Engine> {
+        Ok(Engine::new(Box::new(ShardedEngine::new(cfg, n_shards)?)))
+    }
+
+    /// Engine over the AOT HLO graphs via PJRT.
+    #[cfg(feature = "pjrt")]
+    pub fn hlo(artifacts_dir: &Path) -> Result<Engine> {
+        Ok(Engine::new(Box::new(HloBackend::new(artifacts_dir)?)))
+    }
+
+    /// Build the backend named by `kind`. `artifacts_dir` is only used
+    /// by the HLO backend (which loads `.hlo.txt` artifacts by model
+    /// name).
+    pub fn from_kind(kind: BackendKind, cfg: &ChipConfig, artifacts_dir: &Path) -> Result<Engine> {
+        match kind {
+            BackendKind::Nmcu => Ok(Engine::nmcu(cfg)),
+            BackendKind::Reference => Ok(Engine::reference()),
+            #[cfg(feature = "pjrt")]
+            BackendKind::Hlo => Engine::hlo(artifacts_dir),
+            #[cfg(not(feature = "pjrt"))]
+            BackendKind::Hlo => {
+                let _ = artifacts_dir;
+                Err(EngineError::Backend {
+                    backend: "hlo",
+                    reason: "this binary was built without the `pjrt` feature".into(),
+                })
+            }
+        }
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    pub fn n_models(&self) -> usize {
+        self.backend.n_models()
+    }
+
+    /// Metadata of a resident model.
+    pub fn model_info(&self, handle: ModelHandle) -> Result<ModelInfo> {
+        self.backend.model_info(handle).ok_or_else(|| EngineError::InvalidHandle {
+            handle: handle.index(),
+            n_models: self.backend.n_models(),
+        })
+    }
+
+    /// Program a model into the backend (every backend runs the shared
+    /// `QModel::validate` structural checks).
+    pub fn program(&mut self, model: &QModel) -> Result<ModelHandle> {
+        self.backend.program(model)
+    }
+
+    /// Single-sample inference (the backend performs the handle and
+    /// input-size checks itself, so no per-request metadata lookup).
+    pub fn infer(&mut self, handle: ModelHandle, x: &[i8]) -> Result<Vec<i8>> {
+        self.backend.infer(handle, x)
+    }
+
+    /// Validated batched inference; `out[i]` corresponds to `xs[i]`.
+    /// Validation up front means a bad sample anywhere in the batch is
+    /// rejected before any shard starts computing.
+    pub fn infer_batch(&mut self, handle: ModelHandle, xs: &[Vec<i8>]) -> Result<Vec<Vec<i8>>> {
+        let expected = self.model_info(handle)?.input_dim;
+        if let Some(bad) = xs.iter().find(|x| x.len() != expected) {
+            return Err(EngineError::InputSize { expected, got: bad.len() });
+        }
+        self.backend.infer_batch(handle, xs)
+    }
+
+    pub fn stats(&self) -> NmcuStats {
+        self.backend.stats()
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.backend.reset_stats();
+    }
+}

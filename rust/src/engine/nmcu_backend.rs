@@ -1,0 +1,100 @@
+//! The chip-simulator backend: a [`Chip`] (4-bits/cell EFLASH weight
+//! memory + NMCU) plus a registry of models resident in its EFLASH.
+//! Multiple models coexist through the macro's `Region` bump allocator;
+//! callers address them by [`ModelHandle`] instead of carrying
+//! `ProgrammedModel` around.
+
+use super::{lookup, Backend, EngineError, ModelHandle, ModelInfo, Result};
+use crate::artifacts::QModel;
+use crate::config::ChipConfig;
+use crate::coordinator::{Chip, ProgrammedModel};
+use crate::nmcu::NmcuStats;
+
+pub struct NmcuBackend {
+    chip: Chip,
+    models: Vec<ProgrammedModel>,
+}
+
+impl NmcuBackend {
+    /// Fabricate a fresh chip with `cfg`.
+    pub fn new(cfg: &ChipConfig) -> NmcuBackend {
+        NmcuBackend { chip: Chip::new(cfg), models: Vec::new() }
+    }
+
+    /// Wrap an existing chip (ablations that pre-configure the EFLASH:
+    /// state mapping, VRD ceiling, read mode, ...).
+    pub fn from_chip(chip: Chip) -> NmcuBackend {
+        NmcuBackend { chip, models: Vec::new() }
+    }
+
+    /// Direct access to the underlying chip (bake experiments, Vt
+    /// histograms, power accounting).
+    pub fn chip(&self) -> &Chip {
+        &self.chip
+    }
+
+    pub fn chip_mut(&mut self) -> &mut Chip {
+        &mut self.chip
+    }
+
+    /// The programmed image of a resident model.
+    pub fn model(&self, handle: ModelHandle) -> Result<&ProgrammedModel> {
+        lookup(&self.models, handle)
+    }
+
+    /// Decoded (possibly drifted) codes of one layer of a resident model.
+    pub fn decoded_codes(&mut self, handle: ModelHandle, layer: usize) -> Result<Vec<i8>> {
+        let pm = lookup(&self.models, handle)?;
+        if layer >= pm.descs.len() {
+            return Err(EngineError::BadDescriptor {
+                reason: format!("layer {layer} out of range ({} layers)", pm.descs.len()),
+            });
+        }
+        Ok(self.chip.decoded_codes(pm, layer))
+    }
+}
+
+impl Backend for NmcuBackend {
+    fn name(&self) -> &'static str {
+        "nmcu"
+    }
+
+    fn program(&mut self, model: &QModel) -> Result<ModelHandle> {
+        let pm = self.chip.program_model(model)?;
+        self.models.push(pm);
+        Ok(ModelHandle::from_index(self.models.len() - 1))
+    }
+
+    fn infer(&mut self, handle: ModelHandle, x: &[i8]) -> Result<Vec<i8>> {
+        let pm = lookup(&self.models, handle)?;
+        // uniform Backend contract: exact input dimension, like HloBackend
+        // (Chip::infer itself keeps the hardware's zero-pad semantics)
+        if let Some(d) = pm.descs.first() {
+            if x.len() != d.k {
+                return Err(EngineError::InputSize { expected: d.k, got: x.len() });
+            }
+        }
+        self.chip.infer(pm, x)
+    }
+
+    fn n_models(&self) -> usize {
+        self.models.len()
+    }
+
+    fn model_info(&self, handle: ModelHandle) -> Option<ModelInfo> {
+        self.models.get(handle.index()).map(|pm| ModelInfo {
+            name: pm.name.clone(),
+            input_dim: pm.descs.first().map_or(0, |d| d.k),
+            output_dim: pm.descs.last().map_or(0, |d| d.n),
+            n_layers: pm.descs.len(),
+        })
+    }
+
+    fn stats(&self) -> NmcuStats {
+        self.chip.stats()
+    }
+
+    fn reset_stats(&mut self) {
+        self.chip.reset_stats();
+    }
+}

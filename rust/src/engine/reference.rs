@@ -1,0 +1,78 @@
+//! The pure-software reference backend: runs resident models through
+//! `models::qmodel_forward`, the integer path the NMCU is held bit-exact
+//! to. No device model, no drift — the "SW baseline" column of Table 1
+//! behind the same [`Backend`] contract as the chip.
+
+use super::{lookup, Backend, EngineError, ModelHandle, ModelInfo, Result};
+use crate::artifacts::QModel;
+use crate::models::qmodel_forward;
+use crate::nmcu::NmcuStats;
+
+#[derive(Default)]
+pub struct ReferenceBackend {
+    models: Vec<QModel>,
+    stats: NmcuStats,
+}
+
+impl ReferenceBackend {
+    pub fn new() -> ReferenceBackend {
+        ReferenceBackend::default()
+    }
+}
+
+impl Backend for ReferenceBackend {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn program(&mut self, model: &QModel) -> Result<ModelHandle> {
+        // shared structural validation so serving can't hit a shape
+        // mismatch mid-batch (same checks as the chip backend)
+        model.validate()?;
+        self.models.push(model.clone());
+        Ok(ModelHandle::from_index(self.models.len() - 1))
+    }
+
+    fn infer(&mut self, handle: ModelHandle, x: &[i8]) -> Result<Vec<i8>> {
+        let model = lookup(&self.models, handle)?;
+        // uniform Backend contract: exact input dimension
+        let expected = model.layers[0].k;
+        if x.len() != expected {
+            return Err(EngineError::InputSize { expected, got: x.len() });
+        }
+        let out = qmodel_forward(model, x);
+        // bookkeeping: bus bytes = model input + output, like the NMCU.
+        // mac_ops counts LOGICAL k*n MACs; the NMCU backend reports
+        // PHYSICAL padded-lane MACs (k rounded up to the 128-lane read
+        // width) because its energy model is built on them — compare
+        // mac_ops across backends only with that distinction in mind.
+        self.stats.bus_bytes += (x.len() + out.len()) as u64;
+        for l in &model.layers {
+            self.stats.mac_ops += (l.k * l.n) as u64;
+            self.stats.writebacks += l.n as u64;
+            self.stats.layers_run += 1;
+        }
+        Ok(out)
+    }
+
+    fn n_models(&self) -> usize {
+        self.models.len()
+    }
+
+    fn model_info(&self, handle: ModelHandle) -> Option<ModelInfo> {
+        self.models.get(handle.index()).map(|m| ModelInfo {
+            name: m.name.clone(),
+            input_dim: m.layers[0].k,
+            output_dim: m.layers.last().map_or(0, |l| l.n),
+            n_layers: m.layers.len(),
+        })
+    }
+
+    fn stats(&self) -> NmcuStats {
+        self.stats
+    }
+
+    fn reset_stats(&mut self) {
+        self.stats = NmcuStats::default();
+    }
+}

@@ -1,0 +1,148 @@
+//! Data-parallel serving over N replicated chips. Each shard is a full
+//! [`NmcuBackend`] (its own EFLASH + NMCU, fabricated from the same
+//! `ChipConfig` and therefore bit-identical); `infer_batch` splits a
+//! batch into contiguous chunks and runs them on scoped worker threads,
+//! then merges the per-shard `NmcuStats`. This is the first real
+//! throughput-scaling primitive in the repo: the paper's chip is a
+//! single fixed-function device, and a rack of them serves traffic
+//! exactly like this — replicate the weights, fan out the requests.
+
+use super::{Backend, EngineError, ModelHandle, ModelInfo, NmcuBackend, Result};
+use crate::artifacts::QModel;
+use crate::config::ChipConfig;
+use crate::nmcu::NmcuStats;
+
+pub struct ShardedEngine {
+    shards: Vec<NmcuBackend>,
+}
+
+impl ShardedEngine {
+    /// Fabricate `n_shards` identically-seeded chips.
+    pub fn new(cfg: &ChipConfig, n_shards: usize) -> Result<ShardedEngine> {
+        if n_shards == 0 {
+            return Err(EngineError::InvalidConfig { reason: "n_shards must be >= 1".into() });
+        }
+        Ok(ShardedEngine {
+            shards: (0..n_shards).map(|_| NmcuBackend::new(cfg)).collect(),
+        })
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Access one shard (per-shard stats, bake experiments).
+    pub fn shard(&self, i: usize) -> &NmcuBackend {
+        &self.shards[i]
+    }
+
+    pub fn shard_mut(&mut self, i: usize) -> &mut NmcuBackend {
+        &mut self.shards[i]
+    }
+}
+
+impl Backend for ShardedEngine {
+    fn name(&self) -> &'static str {
+        "nmcu-sharded"
+    }
+
+    /// Replicate the model into every shard's EFLASH, programming the
+    /// shards concurrently (each pays the full ISPP program-verify cost,
+    /// so a serial loop would multiply fleet setup time by N). All
+    /// shards run the same allocation sequence, so they must agree on
+    /// the handle.
+    fn program(&mut self, model: &QModel) -> Result<ModelHandle> {
+        let mut results: Vec<Result<ModelHandle>> = Vec::new();
+        std::thread::scope(|scope| {
+            let mut workers = Vec::new();
+            for shard in self.shards.iter_mut() {
+                workers.push(scope.spawn(move || shard.program(model)));
+            }
+            for (i, worker) in workers.into_iter().enumerate() {
+                results.push(
+                    worker.join().unwrap_or_else(|_| Err(EngineError::WorkerPanicked { shard: i })),
+                );
+            }
+        });
+        let mut handle = None;
+        for (i, r) in results.into_iter().enumerate() {
+            let h = r?;
+            match handle {
+                None => handle = Some(h),
+                Some(h0) if h0 == h => {}
+                Some(h0) => {
+                    return Err(EngineError::Backend {
+                        backend: "nmcu-sharded",
+                        reason: format!(
+                            "shard {i} allocated handle {} but shard 0 allocated {}",
+                            h.index(),
+                            h0.index()
+                        ),
+                    })
+                }
+            }
+        }
+        Ok(handle.expect("n_shards >= 1"))
+    }
+
+    /// Single samples run on shard 0 (no fan-out to pay for).
+    fn infer(&mut self, handle: ModelHandle, x: &[i8]) -> Result<Vec<i8>> {
+        self.shards[0].infer(handle, x)
+    }
+
+    /// Fan the batch across the shards on scoped worker threads and
+    /// reassemble the outputs in request order.
+    fn infer_batch(&mut self, handle: ModelHandle, xs: &[Vec<i8>]) -> Result<Vec<Vec<i8>>> {
+        if xs.is_empty() {
+            // still validate the handle, like every other Backend method
+            return match self.shards[0].model_info(handle) {
+                Some(_) => Ok(Vec::new()),
+                None => Err(EngineError::InvalidHandle {
+                    handle: handle.index(),
+                    n_models: self.shards[0].n_models(),
+                }),
+            };
+        }
+        let per_shard = xs.len().div_ceil(self.shards.len());
+        let mut results: Vec<Result<Vec<Vec<i8>>>> = Vec::new();
+        std::thread::scope(|scope| {
+            let mut workers = Vec::new();
+            for (shard, chunk) in self.shards.iter_mut().zip(xs.chunks(per_shard)) {
+                workers.push(scope.spawn(move || shard.infer_batch(handle, chunk)));
+            }
+            for (i, worker) in workers.into_iter().enumerate() {
+                results.push(
+                    worker.join().unwrap_or_else(|_| Err(EngineError::WorkerPanicked { shard: i })),
+                );
+            }
+        });
+        let mut out = Vec::with_capacity(xs.len());
+        for r in results {
+            out.extend(r?);
+        }
+        Ok(out)
+    }
+
+    fn n_models(&self) -> usize {
+        self.shards[0].n_models()
+    }
+
+    fn model_info(&self, handle: ModelHandle) -> Option<ModelInfo> {
+        self.shards[0].model_info(handle)
+    }
+
+    /// Merged statistics across all shards.
+    fn stats(&self) -> NmcuStats {
+        let mut total = NmcuStats::default();
+        for shard in &self.shards {
+            total.add(&shard.stats());
+        }
+        total
+    }
+
+    fn reset_stats(&mut self) {
+        for shard in &mut self.shards {
+            shard.reset_stats();
+        }
+    }
+}

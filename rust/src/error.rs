@@ -1,0 +1,102 @@
+//! Typed errors for the program/infer paths. These replace the
+//! `bail!`/`assert!` exits that used to live on the serving hot paths:
+//! a malformed request or an exhausted weight memory must surface as a
+//! value a serving process can handle, not abort it.
+//!
+//! This lives at the bottom of the crate's layering so the device
+//! modules (`nmcu`, `coordinator`, `soc`) and the serving API
+//! (`engine`, which re-exports [`EngineError`]) can share it without
+//! the hardware model depending on the engine layer.
+
+use std::fmt;
+
+/// Everything that can go wrong while programming or serving a model.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum EngineError {
+    /// The EFLASH weight memory has no room for the requested region.
+    CapacityExhausted {
+        /// rows the allocation needed
+        requested_rows: usize,
+        /// rows still free in the macro
+        rows_free: usize,
+        /// what was being programmed (model/layer name)
+        what: String,
+    },
+    /// Cells failed ISPP program-verify (the region is unusable).
+    ProgramVerifyFailed { layer: String, failed_cells: u64 },
+    /// A layer descriptor violates the NMCU/EFLASH geometry.
+    BadDescriptor { reason: String },
+    /// The model handle does not name a resident model.
+    InvalidHandle { handle: usize, n_models: usize },
+    /// An input vector does not match the model's input dimension.
+    InputSize { expected: usize, got: usize },
+    /// An input vector does not fit the NMCU input buffer.
+    InputOverflow { capacity: usize, got: usize },
+    /// A backend-specific failure (loading an HLO artifact, missing
+    /// feature, PJRT init, ...).
+    Backend { backend: &'static str, reason: String },
+    /// Invalid engine configuration (e.g. zero shards).
+    InvalidConfig { reason: String },
+    /// A shard worker thread panicked mid-batch.
+    WorkerPanicked { shard: usize },
+}
+
+impl fmt::Display for EngineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EngineError::CapacityExhausted { requested_rows, rows_free, what } => write!(
+                f,
+                "EFLASH capacity exhausted programming {what}: \
+                 {requested_rows} rows requested, {rows_free} free"
+            ),
+            EngineError::ProgramVerifyFailed { layer, failed_cells } => {
+                write!(f, "{failed_cells} cells failed program-verify in {layer}")
+            }
+            EngineError::BadDescriptor { reason } => write!(f, "bad layer descriptor: {reason}"),
+            EngineError::InvalidHandle { handle, n_models } => {
+                write!(f, "invalid model handle {handle} ({n_models} models resident)")
+            }
+            EngineError::InputSize { expected, got } => {
+                write!(f, "input length {got} does not match model input dimension {expected}")
+            }
+            EngineError::InputOverflow { capacity, got } => {
+                write!(f, "input length {got} exceeds the {capacity}-element input buffer")
+            }
+            EngineError::Backend { backend, reason } => {
+                write!(f, "{backend} backend: {reason}")
+            }
+            EngineError::InvalidConfig { reason } => write!(f, "invalid engine config: {reason}"),
+            EngineError::WorkerPanicked { shard } => {
+                write!(f, "shard {shard} worker thread panicked")
+            }
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn displays_are_informative() {
+        let e = EngineError::CapacityExhausted {
+            requested_rows: 40,
+            rows_free: 8,
+            what: "mnist_mlp.fc1".into(),
+        };
+        let s = e.to_string();
+        assert!(s.contains("mnist_mlp.fc1") && s.contains("40") && s.contains("8"));
+        assert!(EngineError::InputSize { expected: 784, got: 10 }.to_string().contains("784"));
+    }
+
+    #[test]
+    fn converts_into_anyhow() {
+        fn f() -> anyhow::Result<()> {
+            Err(EngineError::WorkerPanicked { shard: 3 })?;
+            Ok(())
+        }
+        assert!(f().unwrap_err().to_string().contains("shard 3"));
+    }
+}

@@ -3,19 +3,45 @@
 //! Reproduction of *"A 28 nm AI microcontroller with tightly coupled
 //! zero-standby power weight memory featuring standard logic compatible
 //! 4 Mb 4-bits/cell embedded flash technology"* (ANAFLASH, EDGE AI
-//! Research Symposium 2025).
+//! Research Symposium 2025), grown into a servable inference engine.
 //!
-//! Three-layer architecture (DESIGN.md):
+//! ## Architecture
+//!
+//! Three layers (DESIGN.md):
 //! - **L3 (this crate)**: the full microcontroller simulator — 4-bits/
-//!   cell EFLASH device model, analog subsystems (HV charge pump,
-//!   overstress-free WL driver), the near-memory computing unit, a
-//!   RISC-V control plane, SoC fabric, and the inference coordinator.
+//!   cell EFLASH device model ([`eflash`]), analog subsystems (HV charge
+//!   pump, overstress-free WL driver, [`analog`]), the near-memory
+//!   computing unit ([`nmcu`]), a RISC-V control plane ([`cpu`],
+//!   [`soc`]), and the inference [`coordinator`].
 //! - **L2/L1 (python/, build-time only)**: JAX model graphs embedding a
-//!   Pallas NMCU kernel, AOT-lowered to HLO text executed by
-//!   [`runtime`] via PJRT — the "software baseline" of Table 1.
+//!   Pallas NMCU kernel, AOT-lowered to HLO text executed by `runtime`
+//!   via PJRT (`--features pjrt`) — the "software baseline" of Table 1.
 //!
-//! Start with [`coordinator::Chip`] for the high-level API, or
-//! `examples/quickstart.rs`.
+//! ## The `engine` API
+//!
+//! [`engine`] is the public serving surface: a [`engine::Backend`] trait
+//! (`program` / `infer` / `infer_batch` / `stats`, all returning typed
+//! [`engine::EngineError`]s) with three substrates — the chip simulator
+//! ([`engine::NmcuBackend`]), the bit-exact software reference
+//! ([`engine::ReferenceBackend`]), and the AOT-HLO graphs via PJRT
+//! (`engine::HloBackend`, feature-gated) — plus
+//! [`engine::ShardedEngine`], which replicates the chip N ways and fans
+//! batches across worker threads.
+//!
+//! Migrating from the old single-sample API:
+//!
+//! ```text
+//! // before                                // after
+//! let mut chip = Chip::new(&cfg);          let mut e = Engine::nmcu(&cfg);
+//! let pm = chip.program_model(&m)?;        let h = e.program(&m)?;
+//! let y = chip.infer(&pm, &x);             let y = e.infer(h, &x)?;
+//!                                          let ys = e.infer_batch(h, &batch)?;
+//! ```
+//!
+//! `Chip::program_model`/`Chip::infer` still exist for device-level
+//! experiments (bake, Vt histograms, ablations) but are now fallible;
+//! serving code should go through [`engine::Engine`] or a
+//! [`engine::Backend`]. Start with `examples/quickstart.rs`.
 
 pub mod analog;
 pub mod artifacts;
@@ -24,9 +50,12 @@ pub mod coordinator;
 pub mod cpu;
 pub mod datasets;
 pub mod eflash;
+pub mod engine;
+pub mod error;
 pub mod metrics;
 pub mod models;
 pub mod nmcu;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod soc;
 pub mod util;

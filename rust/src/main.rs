@@ -5,7 +5,9 @@
 //!   table2      print the Table 2 comparison
 //!   fig5        charge-pump + WL-driver waveforms, mapping, ISPP trace
 //!   fig6        programmed-state histograms of the two models
-//!   infer       run one inference (MNIST index) on the chip
+//!   infer       serve MNIST inferences through the engine API
+//!               (--backend nmcu|reference|hlo, --batch <n>,
+//!                --shards <n>, --index <i>)
 //!   pump        charge pump transient only
 //!   retention   bake-time sweep of decode errors + accuracy
 //!   info        chip configuration summary
@@ -18,6 +20,7 @@ use nvmcu::artifacts;
 use nvmcu::config::ChipConfig;
 use nvmcu::coordinator::{experiments, Chip};
 use nvmcu::eflash::mapping::StateMapping;
+use nvmcu::engine::{Backend, BackendKind, Engine, NmcuBackend};
 use nvmcu::metrics;
 use nvmcu::util::bench::Table;
 use nvmcu::util::cli::Args;
@@ -59,7 +62,8 @@ fn main() {
             println!(
                 "nvmcu — 28nm AI microcontroller with 4-bits/cell EFLASH (reproduction)\n\
                  usage: nvmcu <table1|table2|fig5|fig6|infer|pump|retention|info> [options]\n\
-                 options: --config <json> --set k=v[,k=v] --artifacts <dir> --seed <n>"
+                 options: --config <json> --set k=v[,k=v] --artifacts <dir> --seed <n>\n\
+                 infer:   --backend nmcu|reference|hlo --batch <n> --shards <n> --index <i>"
             );
         }
     }
@@ -191,30 +195,89 @@ fn cmd_fig6(args: &Args) {
     }
 }
 
+/// Serve MNIST inferences through the unified engine API.
+///
+///   --backend nmcu|reference|hlo   inference substrate (default nmcu)
+///   --shards <n>                   fan batches across n chips (nmcu only)
+///   --batch <n>                    batch size (default 1)
+///   --index <i>                    first test-set index (default 0)
 fn cmd_infer(args: &Args) {
     let cfg = chip_config(args);
     let dir = art_dir(args);
-    let inputs = experiments::load_table1_inputs(&dir).expect("artifacts");
+    let inputs = experiments::load_table1_inputs(&dir).unwrap_or_else(|e| {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    });
     let idx = args.opt_usize("index", 0);
-    let mut chip = Chip::new(&cfg);
-    let pm = chip.program_model(&inputs.mnist_model).unwrap();
-    let xq = inputs.mnist_test.image_q(idx);
-    let logits = chip.infer(&pm, &xq);
-    let pred = nvmcu::models::argmax_i8(&logits);
+    let batch = args.opt_usize("batch", 1).max(1);
+    let shards = args.opt_usize("shards", 1).max(1);
+    fn fail(e: nvmcu::engine::EngineError) -> ! {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+
+    let kind: BackendKind =
+        args.opt_or("backend", "nmcu").parse().unwrap_or_else(|e| fail(e));
+    let mut engine = if shards > 1 {
+        if kind != BackendKind::Nmcu {
+            eprintln!("error: --shards requires --backend nmcu");
+            std::process::exit(1);
+        }
+        Engine::sharded(&cfg, shards).unwrap_or_else(|e| fail(e))
+    } else {
+        Engine::from_kind(kind, &cfg, &dir).unwrap_or_else(|e| fail(e))
+    };
+
+    let h = engine.program(&inputs.mnist_model).unwrap_or_else(|e| fail(e));
+    let n = inputs.mnist_test.len();
+    let xs: Vec<Vec<i8>> =
+        (0..batch).map(|j| inputs.mnist_test.image_q((idx + j) % n)).collect();
+    let t0 = std::time::Instant::now();
+    let outs = engine.infer_batch(h, &xs).unwrap_or_else(|e| fail(e));
+    let dt = t0.elapsed();
+
+    let mut correct = 0usize;
+    for (j, logits) in outs.iter().enumerate() {
+        let i = (idx + j) % n;
+        let pred = nvmcu::models::argmax_i8(logits);
+        if pred == inputs.mnist_test.labels[i] as usize {
+            correct += 1;
+        }
+        if j < 4 {
+            println!(
+                "MNIST[{i}]: predicted {pred}, label {}, logits {:?}",
+                inputs.mnist_test.labels[i], logits
+            );
+        }
+    }
+    if batch > 4 {
+        println!("... ({} more samples)", batch - 4);
+    }
     println!(
-        "MNIST[{idx}]: predicted {pred}, label {}, logits {:?}",
-        inputs.mnist_test.labels[idx], logits
+        "backend {} | batch {batch} | {correct}/{batch} correct | {:.0} inf/s wall-clock",
+        engine.backend_name(),
+        batch as f64 / dt.as_secs_f64().max(1e-12)
     );
-    let st = chip.stats();
-    let e = metrics::nmcu_energy(&st, &cfg.power);
-    println!(
-        "eflash reads {}, MACs {}, cycles {}, est. energy {:.2} uJ, latency {:.1} us",
-        st.eflash_reads,
-        st.mac_ops,
-        st.cycles,
-        e.total_uj(),
-        metrics::nmcu_latency_s(&st, &cfg) * 1e6
-    );
+    let st = engine.stats();
+    let per = batch as f64;
+    if st.eflash_reads > 0 {
+        // the chip backends also carry the cycle/energy model
+        let e = metrics::nmcu_energy(&st, &cfg.power);
+        println!(
+            "per inference: {:.0} eflash reads, {:.0} MACs, est. energy {:.2} uJ, \
+             modeled latency {:.1} us",
+            st.eflash_reads as f64 / per,
+            st.mac_ops as f64 / per,
+            e.total_uj() / per,
+            metrics::nmcu_latency_s(&st, &cfg) * 1e6 / per
+        );
+    } else if st.mac_ops > 0 {
+        println!(
+            "per inference: {:.0} logical MACs, {:.0} bus bytes",
+            st.mac_ops as f64 / per,
+            st.bus_bytes as f64 / per
+        );
+    }
 }
 
 fn cmd_pump(args: &Args) {
@@ -234,24 +297,13 @@ fn cmd_retention(args: &Args) {
     println!("bake sweep at {} C (MNIST):", cfg.retention.bake_temp_c);
     println!("{:>8} {:>10} {:>10} {:>10} {:>9}", "hours", "exact%", "off1%", "worse%", "acc%");
     for hours in [0.0, 40.0, 160.0, 340.0, 1000.0, 3000.0] {
-        let mut chip = Chip::new(&cfg);
-        let pm = chip.program_model(&inputs.mnist_model).unwrap();
-        chip.bake(hours, cfg.retention.bake_temp_c);
-        let acc = experiments::mnist_accuracy_chip(&mut chip, &pm, &inputs.mnist_test);
-        let mut e = nvmcu::eflash::DecodeErrors::default();
-        for i in 0..inputs.mnist_model.layers.len() {
-            let decoded = chip.decoded_codes(&pm, i);
-            for (g, w) in decoded.iter().zip(&inputs.mnist_model.layers[i].codes) {
-                let d = (*g as i32 - *w as i32).abs();
-                e.total += 1;
-                e.sum_abs_lsb += d as u64;
-                match d {
-                    0 => e.exact += 1,
-                    1 => e.off_by_one += 1,
-                    _ => e.worse += 1,
-                }
-            }
-        }
+        let mut backend = NmcuBackend::new(&cfg);
+        let h = backend.program(&inputs.mnist_model).expect("program");
+        backend.chip_mut().bake(hours, cfg.retention.bake_temp_c);
+        let acc =
+            experiments::mnist_accuracy(&mut backend, h, &inputs.mnist_test).expect("infer");
+        let e = experiments::decode_errors_all(&mut backend, h, &inputs.mnist_model)
+            .expect("decode");
         println!(
             "{:>8} {:>10.3} {:>10.3} {:>10.4} {:>9.2}",
             hours,

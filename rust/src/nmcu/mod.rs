@@ -13,6 +13,7 @@ pub mod pe;
 pub mod quant;
 
 use crate::eflash::EflashMacro;
+use crate::error::EngineError;
 pub use buffer::{FetchSource, Fetcher, PingPong};
 pub use pe::Pe;
 pub use quant::{requantize, Requant};
@@ -130,28 +131,86 @@ impl Nmcu {
     }
 
     /// Host-side input load (counted as bus traffic — the ONLY activation
-    /// bytes a fully-on-chip model moves, §2.2).
-    pub fn load_input(&mut self, x_q: &[i8]) {
+    /// bytes a fully-on-chip model moves, §2.2). An oversized input is a
+    /// typed error, not a panic — the serving path must survive it.
+    pub fn load_input(&mut self, x_q: &[i8]) -> Result<(), EngineError> {
+        let capacity = self.fetcher.input.len();
+        if x_q.len() > capacity {
+            return Err(EngineError::InputOverflow { capacity, got: x_q.len() });
+        }
         // pad lanes past the logical end contribute x=0 ("real" zero is
         // handled by the folded bias, padded EFLASH cells see x=0)
         self.fetcher.load_input(x_q, 0);
         self.stats.bus_bytes += x_q.len() as u64;
+        Ok(())
     }
 
     /// Run one layer MVM entirely near-memory. The input comes from the
     /// buffer selected by `self.fetcher.source`; the output lands in the
     /// ping-pong buffer (and is also returned for inspection).
-    pub fn execute_layer(&mut self, eflash: &mut EflashMacro, desc: &LayerDesc) -> Vec<i8> {
+    ///
+    /// A malformed descriptor is a typed [`EngineError::BadDescriptor`]
+    /// — the NMCU must never abort a serving process on bad input (the
+    /// firmware path reports it through the status register instead).
+    pub fn execute_layer(
+        &mut self,
+        eflash: &mut EflashMacro,
+        desc: &LayerDesc,
+    ) -> Result<Vec<i8>, EngineError> {
         let lanes = self.cfg.lanes_per_pe;
-        assert_eq!(
-            eflash.cells_per_read(),
-            lanes * self.cfg.pes_per_macro,
-            "EFLASH read width must equal PEs x lanes"
-        );
-        assert!(desc.n <= self.pingpong.capacity(), "output exceeds ping-pong half");
-        assert_eq!(desc.bias.len(), desc.n);
+        // a zero-dimension MVM is meaningless; treating it as a no-op
+        // would flip the ping-pong buffer and report success for an
+        // all-zeros (e.g. unprogrammed-SRAM) descriptor
+        if desc.k == 0 || desc.n == 0 {
+            return Err(EngineError::BadDescriptor {
+                reason: format!("zero dimension (k={}, n={})", desc.k, desc.n),
+            });
+        }
+        let read_width = lanes * self.cfg.pes_per_macro;
+        if eflash.cells_per_read() != read_width {
+            return Err(EngineError::BadDescriptor {
+                reason: format!(
+                    "EFLASH read width {} must equal PEs x lanes = {read_width}",
+                    eflash.cells_per_read()
+                ),
+            });
+        }
+        if desc.n > self.pingpong.capacity() {
+            return Err(EngineError::BadDescriptor {
+                reason: format!(
+                    "layer output n={} exceeds ping-pong half capacity {}",
+                    desc.n,
+                    self.pingpong.capacity()
+                ),
+            });
+        }
+        if desc.bias.len() != desc.n {
+            return Err(EngineError::BadDescriptor {
+                reason: format!("bias length {} != n={}", desc.bias.len(), desc.n),
+            });
+        }
         let k_tiles = desc.k_tiles(lanes);
         let pairs = desc.col_pairs();
+        if desc.first_row + pairs * k_tiles > eflash.total_rows() {
+            return Err(EngineError::BadDescriptor {
+                reason: format!(
+                    "weight region [{}, {}) exceeds the {}-row EFLASH macro",
+                    desc.first_row,
+                    desc.first_row + pairs * k_tiles,
+                    eflash.total_rows()
+                ),
+            });
+        }
+        let input_from_pingpong = self.fetcher.source == FetchSource::PingPong;
+        if input_from_pingpong && desc.k > self.pingpong.capacity() {
+            return Err(EngineError::BadDescriptor {
+                reason: format!(
+                    "layer input k={} exceeds ping-pong half capacity {}",
+                    desc.k,
+                    self.pingpong.capacity()
+                ),
+            });
+        }
         let mut out = vec![0i8; desc.n];
 
         for p in 0..pairs {
@@ -201,12 +260,19 @@ impl Nmcu {
             }
         }
         self.pingpong.flip();
-        self.pingpong.note_read(desc.k * k_tiles.min(1)); // logical read of input
+        // ping-pong read accounting: the flow control re-streams the
+        // K-long input once per output column pair, and only layers >= 2
+        // actually read it from the ping-pong buffer (layer 1 reads the
+        // host input buffer). The old `desc.k * k_tiles.min(1)` collapsed
+        // to `desc.k` for every non-empty layer.
+        if input_from_pingpong {
+            self.pingpong.note_read(desc.k * pairs);
+        }
         // subsequent layers read from the ping-pong buffer
         self.fetcher.source = FetchSource::PingPong;
         self.fetcher.pad = 0;
         self.stats.layers_run += 1;
-        out
+        Ok(out)
     }
 
     /// Read the final result back over the bus (counted).
@@ -316,8 +382,8 @@ mod tests {
         let x: Vec<i8> = (0..k).map(|_| (r.below(256) as i32 - 128) as i8).collect();
 
         nmcu.begin_inference();
-        nmcu.load_input(&x);
-        let got = nmcu.execute_layer(&mut eflash, &desc);
+        nmcu.load_input(&x).unwrap();
+        let got = nmcu.execute_layer(&mut eflash, &desc).unwrap();
         let want = reference_mvm(&x, &w, k, n, &bias, rq, true);
         assert_eq!(got, want);
     }
@@ -339,10 +405,10 @@ mod tests {
 
         let x: Vec<i8> = (0..k1).map(|_| (r.below(256) as i32 - 128) as i8).collect();
         nmcu.begin_inference();
-        nmcu.load_input(&x);
+        nmcu.load_input(&x).unwrap();
         let bus_after_input = nmcu.stats.bus_bytes;
-        let h = nmcu.execute_layer(&mut eflash, &d1);
-        let y = nmcu.execute_layer(&mut eflash, &d2);
+        let h = nmcu.execute_layer(&mut eflash, &d1).unwrap();
+        let y = nmcu.execute_layer(&mut eflash, &d2).unwrap();
         // no bus bytes moved between the two layers
         assert_eq!(nmcu.stats.bus_bytes, bus_after_input);
         // bit-exact against the chained reference
@@ -363,8 +429,8 @@ mod tests {
         let rq = Requant { m0: 1 << 30, shift: 35, z_out: 0 };
         let desc = program_layer(&mut eflash, &w, k, n, vec![0; n], rq, false);
         nmcu.begin_inference();
-        nmcu.load_input(&vec![1i8; k]);
-        nmcu.execute_layer(&mut eflash, &desc);
+        nmcu.load_input(&vec![1i8; k]).unwrap();
+        nmcu.execute_layer(&mut eflash, &desc).unwrap();
         assert_eq!(nmcu.stats.eflash_reads, 7 * 22);
         assert_eq!(nmcu.stats.writebacks, 43);
     }
@@ -389,8 +455,8 @@ mod tests {
             let desc = program_layer(&mut eflash, &w, k, n, bias.clone(), rq, relu);
             let x: Vec<i8> = (0..k).map(|_| (r.below(256) as i32 - 128) as i8).collect();
             nmcu.begin_inference();
-            nmcu.load_input(&x);
-            let got = nmcu.execute_layer(&mut eflash, &desc);
+            nmcu.load_input(&x).unwrap();
+            let got = nmcu.execute_layer(&mut eflash, &desc).unwrap();
             let want = reference_mvm(&x, &w, k, n, &bias, rq, relu);
             assert_eq!(got, want, "k={k} n={n}");
         });
@@ -405,8 +471,8 @@ mod tests {
         let rq = Requant { m0: 1 << 30, shift: 35, z_out: 0 };
         let desc = program_layer(&mut eflash, &w, 128, 2, vec![0, 0], rq, false);
         nmcu.begin_inference();
-        nmcu.load_input(&vec![1i8; 128]);
-        nmcu.execute_layer(&mut eflash, &desc);
+        nmcu.load_input(&[1i8; 128]).unwrap();
+        nmcu.execute_layer(&mut eflash, &desc).unwrap();
         // 1 read + 1 mac + 2 writebacks
         let c = &cfg.nmcu;
         assert_eq!(
@@ -414,5 +480,102 @@ mod tests {
             c.read_latency_cycles + c.mac_cycles + 2 * c.writeback_cycles
         );
         assert!(nmcu.elapsed_seconds() > 0.0);
+    }
+
+    #[test]
+    fn pingpong_read_accounting_counts_k_per_column_pair() {
+        // the flow control re-streams the K-long input once per output
+        // column pair; only layers fed FROM the ping-pong buffer count
+        // (layer 1 reads the host input buffer)
+        let cfg = chip();
+        let mut eflash = EflashMacro::new(&cfg);
+        let mut nmcu = Nmcu::new(&cfg.nmcu);
+        let rq = Requant { m0: 1 << 30, shift: 35, z_out: 0 };
+        let (k1, n1, n2) = (300, 20, 7);
+        let w1 = vec![1i8; k1 * n1];
+        let w2 = vec![1i8; n1 * n2];
+        let d1 = program_layer(&mut eflash, &w1, k1, n1, vec![0; n1], rq, false);
+        let d2 = program_layer(&mut eflash, &w2, n1, n2, vec![0; n2], rq, false);
+
+        nmcu.begin_inference();
+        nmcu.load_input(&vec![1i8; k1]).unwrap();
+        nmcu.execute_layer(&mut eflash, &d1).unwrap();
+        assert_eq!(nmcu.pingpong.bytes_read, 0, "layer 1 reads the input buffer");
+        nmcu.execute_layer(&mut eflash, &d2).unwrap();
+        // layer 2: K=20 input streamed once per ceil(7/2)=4 column pairs
+        assert_eq!(nmcu.pingpong.bytes_read, (n1 * n2.div_ceil(2)) as u64);
+        assert_eq!(nmcu.pingpong.bytes_read, 80);
+    }
+
+    #[test]
+    fn bad_descriptors_error_instead_of_panicking() {
+        let cfg = chip();
+        let mut eflash = EflashMacro::new(&cfg);
+        let mut nmcu = Nmcu::new(&cfg.nmcu);
+        let rq = Requant { m0: 1 << 30, shift: 35, z_out: 0 };
+        let cap = cfg.nmcu.pingpong_capacity;
+
+        // output exceeds a ping-pong half
+        let oversized = LayerDesc {
+            first_row: 0,
+            k: 8,
+            n: cap + 2,
+            bias: vec![0; cap + 2],
+            requant: rq,
+            relu: false,
+        };
+        nmcu.begin_inference();
+        nmcu.load_input(&[1i8; 8]).unwrap();
+        let r = nmcu.execute_layer(&mut eflash, &oversized);
+        assert!(matches!(r, Err(EngineError::BadDescriptor { .. })), "{r:?}");
+
+        // bias length mismatch
+        let bad_bias =
+            LayerDesc { first_row: 0, k: 8, n: 4, bias: vec![0; 3], requant: rq, relu: false };
+        let r = nmcu.execute_layer(&mut eflash, &bad_bias);
+        assert!(matches!(r, Err(EngineError::BadDescriptor { .. })), "{r:?}");
+
+        // weight region past the end of the macro
+        let rows = eflash.total_rows();
+        let out_of_range =
+            LayerDesc { first_row: rows, k: 8, n: 2, bias: vec![0; 2], requant: rq, relu: false };
+        let r = nmcu.execute_layer(&mut eflash, &out_of_range);
+        assert!(matches!(r, Err(EngineError::BadDescriptor { .. })), "{r:?}");
+
+        // read-width / datapath mismatch
+        let mut narrow_cfg = cfg.clone();
+        narrow_cfg.nmcu.lanes_per_pe = 64;
+        let mut narrow = Nmcu::new(&narrow_cfg.nmcu);
+        let ok_desc =
+            LayerDesc { first_row: 0, k: 8, n: 2, bias: vec![0; 2], requant: rq, relu: false };
+        narrow.begin_inference();
+        narrow.load_input(&[1i8; 8]).unwrap();
+        let r = narrow.execute_layer(&mut eflash, &ok_desc);
+        assert!(matches!(r, Err(EngineError::BadDescriptor { .. })), "{r:?}");
+
+        // and the NMCU is still usable after the faults
+        let w = vec![1i8; 8 * 2];
+        let good = program_layer(&mut eflash, &w, 8, 2, vec![0, 0], rq, false);
+        nmcu.begin_inference();
+        nmcu.load_input(&[1i8; 8]).unwrap();
+        assert!(nmcu.execute_layer(&mut eflash, &good).is_ok());
+
+        // a ping-pong-fed layer whose k exceeds the half capacity must
+        // error, not index out of range inside the fetcher
+        let wide_k = LayerDesc {
+            first_row: 0,
+            k: cap + 1,
+            n: 2,
+            bias: vec![0; 2],
+            requant: rq,
+            relu: false,
+        };
+        let r = nmcu.execute_layer(&mut eflash, &wide_k); // source is now PingPong
+        assert!(matches!(r, Err(EngineError::BadDescriptor { .. })), "{r:?}");
+
+        // oversized host input is a typed error too
+        let too_long = vec![0i8; cfg.nmcu.input_capacity + 1];
+        let r = nmcu.load_input(&too_long);
+        assert!(matches!(r, Err(EngineError::InputOverflow { .. })), "{r:?}");
     }
 }

@@ -66,13 +66,22 @@ impl Mcu {
     pub fn read_descriptor(&mut self, addr: u32) -> LayerDesc {
         let mut w = [0u32; DESC_WORDS];
         for (i, slot) in w.iter_mut().enumerate() {
-            *slot = self.bus.read32(addr + (i as u32) * 4);
+            // wrapping add: a corrupted pointer near u32::MAX must fault
+            // on the bus (read32 range-checks), not panic in debug builds
+            *slot = self.bus.read32(addr.wrapping_add((i as u32) * 4));
         }
         let n = w[2] as usize;
         let bias_ptr = w[3];
-        let mut bias = Vec::with_capacity(n);
-        for j in 0..n {
-            bias.push(self.bus.read32(bias_ptr + (j as u32) * 4) as i32);
+        // cap the SRAM traffic on a corrupted descriptor: a bogus n must
+        // not allocate gigabytes or loop for billions of bus reads, and a
+        // bias table outside SRAM must not silently read as zeros. The
+        // descriptor keeps the raw n and gets an empty bias, so
+        // execute_layer rejects it with a typed BadDescriptor.
+        let bias_readable = self.bus.data_in_range(bias_ptr, n.saturating_mul(4));
+        let n_read = if n > self.nmcu.pingpong.capacity() || !bias_readable { 0 } else { n };
+        let mut bias = Vec::with_capacity(n_read);
+        for j in 0..n_read {
+            bias.push(self.bus.read32(bias_ptr.wrapping_add((j as u32) * 4)) as i32);
         }
         LayerDesc {
             first_row: w[0] as usize,
@@ -109,33 +118,69 @@ impl Mcu {
         let pending: Vec<Pending> = self.bus.pending.drain(..).collect();
         for p in pending {
             match p {
-                Pending::Launch { desc_addr } => {
-                    let desc = self.read_descriptor(desc_addr);
-                    self.nmcu.execute_layer(&mut self.eflash, &desc);
-                    self.bus.nmcu_status = 1;
-                    self.launches += 1;
-                }
+                Pending::Launch { desc_addr } => self.launch(desc_addr),
                 Pending::InputLoad => {
                     let addr = self.bus.nmcu_input_addr;
                     let len = self.bus.nmcu_input_len as usize;
-                    let bytes: Vec<i8> = self
-                        .bus
-                        .sram_slice(addr, len)
-                        .iter()
-                        .map(|&b| b as i8)
-                        .collect();
-                    self.nmcu.load_input(&bytes);
+                    // firmware-controlled address/length: out-of-range is
+                    // a fault, not a slice panic
+                    if !self.bus.sram_in_range(addr, len) {
+                        self.bus.nmcu_status = 2;
+                    } else {
+                        let bytes: Vec<i8> = self
+                            .bus
+                            .sram_slice(addr, len)
+                            .iter()
+                            .map(|&b| b as i8)
+                            .collect();
+                        if self.nmcu.load_input(&bytes).is_err() {
+                            self.bus.nmcu_status = 2;
+                        }
+                    }
                 }
                 Pending::OutputStore => {
                     let addr = self.bus.nmcu_out_addr;
                     let len = self.bus.nmcu_out_len as usize;
-                    let out = self.nmcu.read_output(len);
-                    let bytes: Vec<u8> = out.iter().map(|&v| v as u8).collect();
-                    self.bus.sram_write(addr, &bytes);
+                    // a faulted pipeline must not DMA stale ping-pong
+                    // contents into SRAM (sticky STATUS=2, like launch)
+                    if self.bus.nmcu_status == 2
+                        || len > self.nmcu.pingpong.capacity()
+                        || !self.bus.sram_in_range(addr, len)
+                    {
+                        self.bus.nmcu_status = 2;
+                    } else {
+                        let out = self.nmcu.read_output(len);
+                        let bytes: Vec<u8> = out.iter().map(|&v| v as u8).collect();
+                        self.bus.sram_write(addr, &bytes);
+                    }
                 }
-                Pending::Begin => self.nmcu.begin_inference(),
+                Pending::Begin => {
+                    self.nmcu.begin_inference();
+                    // a new inference clears any sticky fault status
+                    self.bus.nmcu_status = 0;
+                }
             }
         }
+    }
+
+    /// One NMCU launch (custom-0 instruction or MMIO CTRL, identical
+    /// semantics): read the descriptor, execute, report through STATUS.
+    /// A malformed descriptor must not abort the SoC — the fault
+    /// surfaces as STATUS=2. An unreadable descriptor POINTER is also a
+    /// fault: reading it through the bus would yield silent zeros (a
+    /// degenerate descriptor that "succeeds" without computing). Faults
+    /// are STICKY until the next BEGIN — a launch on an already-faulted
+    /// pipeline would compute on stale buffer contents, so it skips the
+    /// MVM entirely and reports the fault again.
+    fn launch(&mut self, desc_addr: u32) {
+        let ok = self.bus.nmcu_status != 2
+            && self.bus.data_in_range(desc_addr, DESC_WORDS * 4)
+            && {
+                let desc = self.read_descriptor(desc_addr);
+                self.nmcu.execute_layer(&mut self.eflash, &desc).is_ok()
+            };
+        self.bus.nmcu_status = if ok { 1 } else { 2 };
+        self.launches += 1;
     }
 
     /// Run until exit/illegal or `max_steps` instructions retire.
@@ -144,12 +189,7 @@ impl Mcu {
             let ev = self.cpu.step(&mut self.bus);
             match ev {
                 Event::None => {}
-                Event::NmcuLaunch { desc_addr } => {
-                    let desc = self.read_descriptor(desc_addr);
-                    self.nmcu.execute_layer(&mut self.eflash, &desc);
-                    self.bus.nmcu_status = 1;
-                    self.launches += 1;
-                }
+                Event::NmcuLaunch { desc_addr } => self.launch(desc_addr),
                 Event::Ecall => {
                     if self.cpu.regs[17] == 93 {
                         return RunExit::Exit(self.cpu.regs[10]);
@@ -261,13 +301,127 @@ mod tests {
 
         // no firmware: drive the MMIO interface directly from the test
         mcu.nmcu.begin_inference();
-        mcu.nmcu.load_input(&x);
+        mcu.nmcu.load_input(&x).unwrap();
         mcu.bus.write32(map::NMCU_BASE + nmcu_reg::DESC_ADDR, d_at);
         mcu.bus.write32(map::NMCU_BASE + nmcu_reg::CTRL, 1);
         mcu.service_pending();
         assert_eq!(mcu.bus.read32(map::NMCU_BASE + nmcu_reg::STATUS), 1);
         let got = mcu.nmcu.read_output(desc.n);
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn malformed_descriptor_sets_error_status_without_panicking() {
+        let cfg = chip();
+        let mut mcu = Mcu::new(&cfg);
+        let (mut desc, x, _) = small_layer(&mut mcu);
+        // corrupt the descriptor: output wider than a ping-pong half
+        desc.n = cfg.nmcu.pingpong_capacity + 8;
+        desc.bias = vec![0; desc.n];
+        let d_at = map::SRAM_BASE + 0x2000;
+        let b_at = map::SRAM_BASE + 0x2100;
+        mcu.write_descriptor(d_at, b_at, &desc);
+
+        mcu.nmcu.begin_inference();
+        mcu.nmcu.load_input(&x).unwrap();
+        mcu.bus.write32(map::NMCU_BASE + nmcu_reg::DESC_ADDR, d_at);
+        mcu.bus.write32(map::NMCU_BASE + nmcu_reg::CTRL, 1);
+        mcu.service_pending();
+        // fault reported through the status register, SoC still alive
+        assert_eq!(mcu.bus.read32(map::NMCU_BASE + nmcu_reg::STATUS), 2);
+        assert_eq!(mcu.launches, 1);
+    }
+
+    #[test]
+    fn out_of_range_mmio_requests_fault_instead_of_panicking() {
+        let cfg = chip();
+        let mut mcu = Mcu::new(&cfg);
+
+        // input load reaching past the end of SRAM
+        mcu.bus.write32(
+            map::NMCU_BASE + nmcu_reg::INPUT_ADDR,
+            map::SRAM_BASE + map::SRAM_SIZE - 4,
+        );
+        mcu.bus.write32(map::NMCU_BASE + nmcu_reg::INPUT_LEN, 64);
+        mcu.bus.write32(map::NMCU_BASE + nmcu_reg::INPUT_LOAD, 1);
+        mcu.service_pending();
+        assert_eq!(mcu.bus.read32(map::NMCU_BASE + nmcu_reg::STATUS), 2);
+
+        // output store wider than the ping-pong half
+        mcu.bus.write32(map::NMCU_BASE + nmcu_reg::BEGIN, 1);
+        mcu.service_pending();
+        mcu.bus.write32(map::NMCU_BASE + nmcu_reg::OUT_ADDR, map::SRAM_BASE + 0x1000);
+        mcu.bus
+            .write32(map::NMCU_BASE + nmcu_reg::OUT_LEN, cfg.nmcu.pingpong_capacity as u32 + 1);
+        mcu.bus.write32(map::NMCU_BASE + nmcu_reg::OUT_STORE, 1);
+        mcu.service_pending();
+        assert_eq!(mcu.bus.read32(map::NMCU_BASE + nmcu_reg::STATUS), 2);
+
+        // a descriptor POINTER outside any readable region is a fault,
+        // not a silently-zeroed no-op descriptor reporting success
+        mcu.bus.write32(map::NMCU_BASE + nmcu_reg::BEGIN, 1);
+        mcu.service_pending();
+        mcu.bus.write32(map::NMCU_BASE + nmcu_reg::DESC_ADDR, 0xFFFF_0000);
+        mcu.bus.write32(map::NMCU_BASE + nmcu_reg::CTRL, 1);
+        mcu.service_pending();
+        assert_eq!(mcu.bus.read32(map::NMCU_BASE + nmcu_reg::STATUS), 2);
+
+        // corrupted descriptor with an absurd n: no giant allocation,
+        // just a typed fault through STATUS
+        mcu.bus.write32(map::NMCU_BASE + nmcu_reg::BEGIN, 1);
+        mcu.service_pending();
+        let bad = LayerDesc {
+            first_row: 0,
+            k: 8,
+            n: 0x00FF_FFFF,
+            bias: Vec::new(),
+            requant: Requant { m0: 1 << 30, shift: 35, z_out: 0 },
+            relu: false,
+        };
+        let d_at = map::SRAM_BASE + 0x2000;
+        mcu.write_descriptor(d_at, d_at + 0x40, &bad);
+        mcu.bus.write32(map::NMCU_BASE + nmcu_reg::DESC_ADDR, d_at);
+        mcu.bus.write32(map::NMCU_BASE + nmcu_reg::CTRL, 1);
+        mcu.service_pending();
+        assert_eq!(mcu.bus.read32(map::NMCU_BASE + nmcu_reg::STATUS), 2);
+    }
+
+    #[test]
+    fn input_load_fault_is_sticky_until_begin() {
+        let cfg = chip();
+        let mut mcu = Mcu::new(&cfg);
+        let (desc, x, want) = small_layer(&mut mcu);
+        let d_at = map::SRAM_BASE + 0x2000;
+        let b_at = map::SRAM_BASE + 0x2100;
+        mcu.write_descriptor(d_at, b_at, &desc);
+        let in_at = map::SRAM_BASE + 0x3000;
+        mcu.bus.sram_write(in_at, &[0u8; 2000]);
+
+        // oversized DMA input load: fault latched in STATUS
+        mcu.bus.write32(map::NMCU_BASE + nmcu_reg::BEGIN, 1);
+        mcu.bus.write32(map::NMCU_BASE + nmcu_reg::INPUT_ADDR, in_at);
+        mcu.bus.write32(map::NMCU_BASE + nmcu_reg::INPUT_LEN, 2000);
+        mcu.bus.write32(map::NMCU_BASE + nmcu_reg::INPUT_LOAD, 1);
+        mcu.service_pending();
+        assert_eq!(mcu.bus.read32(map::NMCU_BASE + nmcu_reg::STATUS), 2);
+
+        // a subsequent successful launch must NOT clear the fault — it
+        // would have computed on stale input
+        mcu.bus.write32(map::NMCU_BASE + nmcu_reg::DESC_ADDR, d_at);
+        mcu.bus.write32(map::NMCU_BASE + nmcu_reg::CTRL, 1);
+        mcu.service_pending();
+        assert_eq!(mcu.bus.read32(map::NMCU_BASE + nmcu_reg::STATUS), 2);
+
+        // BEGIN clears the fault and a clean run reports success
+        mcu.bus.write32(map::NMCU_BASE + nmcu_reg::BEGIN, 1);
+        mcu.service_pending();
+        assert_eq!(mcu.bus.read32(map::NMCU_BASE + nmcu_reg::STATUS), 0);
+        mcu.nmcu.load_input(&x).unwrap();
+        mcu.bus.write32(map::NMCU_BASE + nmcu_reg::DESC_ADDR, d_at);
+        mcu.bus.write32(map::NMCU_BASE + nmcu_reg::CTRL, 1);
+        mcu.service_pending();
+        assert_eq!(mcu.bus.read32(map::NMCU_BASE + nmcu_reg::STATUS), 1);
+        assert_eq!(mcu.nmcu.read_output(desc.n), want);
     }
 
     #[test]

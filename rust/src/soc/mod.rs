@@ -131,7 +131,11 @@ impl SocBus {
             map::NMCU_BASE => match off {
                 nmcu_reg::CTRL => {
                     if v & 1 != 0 {
-                        self.nmcu_status = 0;
+                        // faults (2) are sticky until BEGIN; a launch on a
+                        // faulted pipeline must not look like a fresh run
+                        if self.nmcu_status != 2 {
+                            self.nmcu_status = 0;
+                        }
                         self.pending.push(Pending::Launch { desc_addr: self.nmcu_desc_addr });
                     }
                 }
@@ -176,6 +180,22 @@ impl SocBus {
             self.write8(dst + i, b);
         }
         self.dma.note_copy(len);
+    }
+
+    /// True when `[addr, addr+len)` lies entirely inside SRAM (guards
+    /// the firmware-controlled DMA paths against slice panics).
+    pub fn sram_in_range(&self, addr: u32, len: usize) -> bool {
+        addr >= map::SRAM_BASE
+            && (addr - map::SRAM_BASE) as u64 + len as u64 <= map::SRAM_SIZE as u64
+    }
+
+    /// True when `[addr, addr+len)` lies entirely inside a bus-readable
+    /// data region — SRAM or the read-only boot flash (constant tables
+    /// like descriptor biases may live in either).
+    pub fn data_in_range(&self, addr: u32, len: usize) -> bool {
+        self.sram_in_range(addr, len)
+            || (addr >= map::BOOT_BASE
+                && (addr - map::BOOT_BASE) as u64 + len as u64 <= map::BOOT_SIZE as u64)
     }
 
     /// Direct SRAM slice access for the coordinator/tests.

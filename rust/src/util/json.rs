@@ -117,13 +117,7 @@ impl Json {
         self.req(key).as_arr().unwrap_or_else(|| panic!("key `{key}` not an array"))
     }
 
-    // ----- serialization --------------------------------------------------
-
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s);
-        s
-    }
+    // ----- serialization (Display; `.to_string()` via ToString) -----------
 
     fn write(&self, out: &mut String) {
         match self {
@@ -175,6 +169,14 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s);
+        f.write_str(&s)
     }
 }
 

@@ -1,0 +1,284 @@
+//! Engine API integration tests: the Backend contract, multi-model
+//! EFLASH residency, typed error surfaces, and the central serving
+//! property — `ShardedEngine::infer_batch` is bit-exact to per-sample
+//! `Chip::infer` across random shard counts and batch sizes. All tests
+//! run on synthetic models; no artifacts needed.
+
+use nvmcu::artifacts::{QLayer, QModel};
+use nvmcu::config::ChipConfig;
+use nvmcu::coordinator::Chip;
+use nvmcu::engine::{
+    Backend, BackendKind, Engine, EngineError, ModelHandle, NmcuBackend, ReferenceBackend,
+    ShardedEngine,
+};
+use nvmcu::nmcu::Requant;
+use nvmcu::util::prop_check;
+use nvmcu::util::rng::Rng;
+
+fn small_cfg() -> ChipConfig {
+    let mut c = ChipConfig::new();
+    c.eflash.capacity_bits = 256 * 1024; // 64K cells for test speed
+    c
+}
+
+fn rand_layer(r: &mut Rng, name: &str, k: usize, n: usize, relu: bool) -> QLayer {
+    QLayer {
+        name: name.into(),
+        k,
+        n,
+        relu,
+        codes: (0..k * n).map(|_| (r.below(16) as i8) - 8).collect(),
+        bias: (0..n).map(|_| (r.below(2000) as i32) - 1000).collect(),
+        requant: Requant { m0: 1_518_500_250, shift: 40, z_out: -3 },
+        z_in: -128,
+        s_in: 1.0 / 255.0,
+        s_w: 0.05,
+        s_out: 0.1,
+    }
+}
+
+fn rand_model(r: &mut Rng, name: &str, k: usize, h: usize, c: usize) -> QModel {
+    let l1 = rand_layer(r, "fc1", k, h, true);
+    let l2 = rand_layer(r, "fc2", h, c, false);
+    QModel { name: name.into(), layers: vec![l1, l2] }
+}
+
+fn rand_input(r: &mut Rng, k: usize) -> Vec<i8> {
+    (0..k).map(|_| (r.below(256) as i32 - 128) as i8).collect()
+}
+
+/// The acceptance property: a sharded fleet of N identically-configured
+/// chips serving a batch is bit-exact to one chip running the samples
+/// one by one, for random shard counts and batch sizes (including
+/// batches smaller than the fleet and the empty batch).
+#[test]
+fn sharded_batches_bit_exact_to_single_chip() {
+    prop_check(8, |r| {
+        let cfg = small_cfg();
+        let n_shards = 1 + r.below(4) as usize; // 1..=4
+        let batch = r.below(14) as usize; // 0..=13
+        let k = 1 + r.below(200) as usize;
+        let h = 1 + r.below(16) as usize;
+        let c = 1 + r.below(10) as usize;
+        let model = rand_model(r, "prop", k, h, c);
+        let xs: Vec<Vec<i8>> = (0..batch).map(|_| rand_input(r, k)).collect();
+
+        let mut fleet = ShardedEngine::new(&cfg, n_shards).unwrap();
+        let handle = fleet.program(&model).unwrap();
+        let got = fleet.infer_batch(handle, &xs).unwrap();
+
+        let mut chip = Chip::new(&cfg);
+        let pm = chip.program_model(&model).unwrap();
+        let want: Vec<Vec<i8>> = xs.iter().map(|x| chip.infer(&pm, x).unwrap()).collect();
+        assert_eq!(got, want, "shards={n_shards} batch={batch} k={k} h={h} c={c}");
+    });
+}
+
+#[test]
+fn multi_model_residency_interleaved() {
+    // two models resident in ONE EFLASH, inferred interleaved: handles
+    // address the right weight regions and outputs stay bit-exact
+    let cfg = small_cfg();
+    let mut r = Rng::new(101);
+    let model_a = rand_model(&mut r, "model_a", 120, 12, 6);
+    let model_b = rand_model(&mut r, "model_b", 64, 10, 4);
+
+    let mut backend = NmcuBackend::new(&cfg);
+    let ha = backend.program(&model_a).unwrap();
+    let hb = backend.program(&model_b).unwrap();
+    assert_ne!(ha, hb);
+    // regions must not overlap (bump allocator)
+    let a_rows: usize = backend.model(ha).unwrap().regions.iter().map(|g| g.n_rows).sum();
+    let b_first = backend.model(hb).unwrap().regions[0].first_row;
+    assert!(b_first >= a_rows, "model_b rows overlap model_a");
+
+    for i in 0..6 {
+        let (model, h, k) =
+            if i % 2 == 0 { (&model_a, ha, 120) } else { (&model_b, hb, 64) };
+        let x = rand_input(&mut r, k);
+        let got = backend.infer(h, &x).unwrap();
+        let want = nvmcu::models::qmodel_forward(model, &x);
+        assert_eq!(got, want, "interleaved inference {i}");
+    }
+}
+
+#[test]
+fn capacity_exhaustion_surfaces_as_typed_error() {
+    let mut cfg = small_cfg();
+    cfg.eflash.capacity_bits = 8 * 1024; // 2K cells = 8 rows only
+    let mut r = Rng::new(7);
+    let model = rand_model(&mut r, "too_big", 200, 16, 8);
+    let mut backend = NmcuBackend::new(&cfg);
+    let rows_before = backend.chip().eflash.rows_free();
+    let err = backend.program(&model).unwrap_err();
+    match err {
+        EngineError::CapacityExhausted { requested_rows, rows_free, what } => {
+            assert!(requested_rows > rows_free, "{requested_rows} vs {rows_free}");
+            assert!(what.contains("too_big"), "{what}");
+        }
+        other => panic!("expected CapacityExhausted, got {other:?}"),
+    }
+    // the failed program must not leak rows: a model that fits still fits
+    assert_eq!(backend.chip().eflash.rows_free(), rows_before);
+    let small = rand_model(&mut r, "small_enough", 20, 4, 2);
+    assert!(backend.program(&small).is_ok());
+}
+
+#[test]
+fn engine_validates_handles_and_input_sizes() {
+    let cfg = small_cfg();
+    let mut r = Rng::new(9);
+    let model = rand_model(&mut r, "served", 96, 8, 4);
+    let mut engine = Engine::nmcu(&cfg);
+    let h = engine.program(&model).unwrap();
+    assert_eq!(engine.n_models(), 1);
+    assert_eq!(engine.model_info(h).unwrap().input_dim, 96);
+    assert_eq!(engine.model_info(h).unwrap().output_dim, 4);
+
+    // wrong input length is rejected before touching the chip
+    let err = engine.infer(h, &[0i8; 5]).unwrap_err();
+    assert!(matches!(err, EngineError::InputSize { expected: 96, got: 5 }), "{err:?}");
+    // a foreign/stale handle is rejected
+    let bogus = ModelHandle::from_index(3);
+    let err = engine.infer(bogus, &rand_input(&mut r, 96)).unwrap_err();
+    assert!(matches!(err, EngineError::InvalidHandle { handle: 3, n_models: 1 }), "{err:?}");
+    // batch validation catches one bad sample anywhere in the batch
+    let xs = vec![rand_input(&mut r, 96), vec![0i8; 95]];
+    let err = engine.infer_batch(h, &xs).unwrap_err();
+    assert!(matches!(err, EngineError::InputSize { .. }), "{err:?}");
+    // and the engine still serves after the faults
+    assert_eq!(engine.infer(h, &rand_input(&mut r, 96)).unwrap().len(), 4);
+}
+
+#[test]
+fn backends_reject_malformed_requests_without_panicking() {
+    let cfg = small_cfg();
+    let mut r = Rng::new(21);
+    let model = rand_model(&mut r, "hardened", 96, 8, 4);
+
+    // wrong-length raw input on the trait path (bypassing Engine
+    // validation): every backend rejects it with the same typed error
+    let mut backend = NmcuBackend::new(&cfg);
+    let h = backend.program(&model).unwrap();
+    let huge = vec![0i8; cfg.nmcu.input_capacity + 100];
+    let err = backend.infer(h, &huge).unwrap_err();
+    assert!(matches!(err, EngineError::InputSize { expected: 96, .. }), "{err:?}");
+    // still serving afterwards
+    assert_eq!(backend.infer(h, &rand_input(&mut r, 96)).unwrap().len(), 4);
+
+    // the raw chip path keeps zero-pad semantics but still cannot be
+    // crashed by an input larger than the NMCU input buffer
+    let chip = backend.chip_mut();
+    let pm_model = rand_model(&mut r, "direct", 64, 6, 3);
+    let pm = chip.program_model(&pm_model).unwrap();
+    let err = chip.infer(&pm, &huge).unwrap_err();
+    assert!(matches!(err, EngineError::InputOverflow { .. }), "{err:?}");
+
+    // a model whose codes don't match k*n is rejected at program time
+    // by EVERY backend (layout_codes would otherwise assert)
+    let mut broken = rand_model(&mut r, "broken", 20, 6, 3);
+    broken.layers[0].codes.truncate(50);
+    let mut sw = ReferenceBackend::new();
+    let err = sw.program(&broken).unwrap_err();
+    assert!(matches!(err, EngineError::BadDescriptor { .. }), "{err:?}");
+    let mut chip_backend = NmcuBackend::new(&cfg);
+    let err = chip_backend.program(&broken).unwrap_err();
+    assert!(matches!(err, EngineError::BadDescriptor { .. }), "{err:?}");
+
+    // a model the NMCU could never infer (output wider than a ping-pong
+    // half, or input wider than the input buffer) is rejected at
+    // program time WITHOUT consuming EFLASH rows
+    let mut chip_backend2 = NmcuBackend::new(&cfg);
+    let rows_before = chip_backend2.chip().eflash.rows_free();
+    let too_wide = rand_model(&mut r, "too_wide", 8, 4, cfg.nmcu.pingpong_capacity + 1);
+    let err = chip_backend2.program(&too_wide).unwrap_err();
+    assert!(matches!(err, EngineError::BadDescriptor { .. }), "{err:?}");
+    let too_deep_in = rand_model(&mut r, "too_deep_in", cfg.nmcu.input_capacity + 1, 4, 2);
+    let err = chip_backend2.program(&too_deep_in).unwrap_err();
+    assert!(matches!(err, EngineError::BadDescriptor { .. }), "{err:?}");
+    assert_eq!(chip_backend2.chip().eflash.rows_free(), rows_before);
+
+    // a zero-dimension layer is rejected by the shared validator
+    let mut degenerate = rand_model(&mut r, "degenerate", 20, 6, 3);
+    degenerate.layers[1].n = 0;
+    degenerate.layers[1].codes = Vec::new();
+    degenerate.layers[1].bias = Vec::new();
+    let err = ReferenceBackend::new().program(&degenerate).unwrap_err();
+    assert!(matches!(err, EngineError::BadDescriptor { .. }), "{err:?}");
+
+    // so is a model whose layers don't chain (n of layer i != k of i+1)
+    let mut unchained = rand_model(&mut r, "unchained", 20, 6, 3);
+    unchained.layers[1].k = 16;
+    unchained.layers[1].codes = vec![0i8; 16 * 3];
+    let err = ReferenceBackend::new().program(&unchained).unwrap_err();
+    assert!(matches!(err, EngineError::BadDescriptor { .. }), "{err:?}");
+    let err = NmcuBackend::new(&cfg).program(&unchained).unwrap_err();
+    assert!(matches!(err, EngineError::BadDescriptor { .. }), "{err:?}");
+}
+
+#[test]
+fn reference_backend_is_bit_exact_to_chip_backend() {
+    let cfg = small_cfg();
+    let mut r = Rng::new(33);
+    let model = rand_model(&mut r, "xcheck", 150, 14, 5);
+    let xs: Vec<Vec<i8>> = (0..9).map(|_| rand_input(&mut r, 150)).collect();
+
+    let mut nmcu = NmcuBackend::new(&cfg);
+    let mut sw = ReferenceBackend::new();
+    let hn = nmcu.program(&model).unwrap();
+    let hs = sw.program(&model).unwrap();
+    assert_eq!(
+        nmcu.infer_batch(hn, &xs).unwrap(),
+        sw.infer_batch(hs, &xs).unwrap(),
+        "chip and reference backends diverge"
+    );
+}
+
+#[test]
+fn sharded_engine_merges_stats_and_validates_config() {
+    let cfg = small_cfg();
+    let mut r = Rng::new(55);
+    let model = rand_model(&mut r, "stats", 100, 8, 4);
+    let xs: Vec<Vec<i8>> = (0..10).map(|_| rand_input(&mut r, 100)).collect();
+
+    let mut fleet = ShardedEngine::new(&cfg, 2).unwrap();
+    assert_eq!(fleet.n_shards(), 2);
+    let h = fleet.program(&model).unwrap();
+    fleet.reset_stats();
+    fleet.infer_batch(h, &xs).unwrap();
+    let merged = fleet.stats();
+    // every sample runs both layers, wherever it was routed
+    assert_eq!(merged.layers_run, (xs.len() * model.layers.len()) as u64);
+    // and the merged work equals one chip doing the whole batch
+    let mut single = NmcuBackend::new(&cfg);
+    let hs = single.program(&model).unwrap();
+    single.reset_stats();
+    single.infer_batch(hs, &xs).unwrap();
+    assert_eq!(merged.eflash_reads, single.stats().eflash_reads);
+    assert_eq!(merged.mac_ops, single.stats().mac_ops);
+
+    let err = ShardedEngine::new(&cfg, 0).unwrap_err();
+    assert!(matches!(err, EngineError::InvalidConfig { .. }), "{err:?}");
+}
+
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn hlo_backend_unavailable_without_pjrt_feature() {
+    let cfg = small_cfg();
+    let err = Engine::from_kind(BackendKind::Hlo, &cfg, std::path::Path::new(".")).unwrap_err();
+    match err {
+        EngineError::Backend { backend, reason } => {
+            assert_eq!(backend, "hlo");
+            assert!(reason.contains("pjrt"), "{reason}");
+        }
+        other => panic!("expected Backend error, got {other:?}"),
+    }
+}
+
+#[test]
+fn backend_kind_parses() {
+    assert_eq!("nmcu".parse::<BackendKind>().unwrap(), BackendKind::Nmcu);
+    assert_eq!("reference".parse::<BackendKind>().unwrap(), BackendKind::Reference);
+    assert_eq!("hlo".parse::<BackendKind>().unwrap(), BackendKind::Hlo);
+    assert!("gpu".parse::<BackendKind>().is_err());
+}

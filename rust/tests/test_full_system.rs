@@ -99,7 +99,7 @@ fn firmware_mnist_matches_coordinator_bit_exact() {
         assert_eq!(exit, RunExit::Exit(0), "sample {i}");
         let got: Vec<i8> =
             mcu.bus.sram_slice(out_addr, 10).iter().map(|&b| b as i8).collect();
-        let want = chip.infer(&pm, &xq);
+        let want = chip.infer(&pm, &xq).unwrap();
         assert_eq!(got, want, "sample {i}: firmware vs coordinator");
         if models::argmax_i8(&got) == test.labels[i] as usize {
             firmware_correct += 1;

@@ -1,0 +1,167 @@
+//! Minimal, API-compatible shim of the `anyhow` crate for offline builds
+//! (the crate registry is unavailable in the build environment).
+//!
+//! Implements the subset this workspace uses: [`Error`], [`Result`],
+//! [`Context`], `anyhow!` and `bail!`. An `Error` is a chain of messages,
+//! outermost context first; `{:#}` formatting joins the chain with `: `
+//! like the real crate, and `{:?}` prints a `Caused by:` list.
+
+use std::fmt;
+
+/// An error chain: `msgs[0]` is the outermost context, the rest are the
+/// wrapped causes (innermost last).
+pub struct Error {
+    msgs: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg(message: impl fmt::Display) -> Error {
+        Error { msgs: vec![message.to_string()] }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context(mut self, context: impl fmt::Display) -> Error {
+        self.msgs.insert(0, context.to_string());
+        self
+    }
+
+    /// The messages in the chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.msgs.iter().map(|s| s.as_str())
+    }
+
+    /// The outermost message.
+    pub fn root_message(&self) -> &str {
+        &self.msgs[0]
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.msgs.join(": "))
+        } else {
+            write!(f, "{}", self.msgs[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msgs[0])?;
+        if self.msgs.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for m in &self.msgs[1..] {
+                write!(f, "\n    {m}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`, so
+// this blanket conversion does not overlap the reflexive `From<T> for T`
+// (same trick the real anyhow uses via specialization-free design).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        Error { msgs }
+    }
+}
+
+/// `anyhow::Result<T>` — a `Result` defaulting its error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    Error: From<E>,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "no such file")
+    }
+
+    #[test]
+    fn context_chains_and_alternate_format() {
+        let r: Result<()> = Err(io_err()).context("reading x.json (run `make artifacts`?)");
+        let e = r.unwrap_err();
+        assert_eq!(e.root_message(), "reading x.json (run `make artifacts`?)");
+        let full = format!("{e:#}");
+        assert!(full.contains("make artifacts"));
+        assert!(full.contains("no such file"));
+    }
+
+    #[test]
+    fn option_context_and_bail() {
+        fn f(flag: bool) -> Result<u32> {
+            let v = Some(7).context("missing")?;
+            if flag {
+                bail!("flagged {v}");
+            }
+            Ok(v)
+        }
+        assert_eq!(f(false).unwrap(), 7);
+        assert_eq!(f(true).unwrap_err().to_string(), "flagged 7");
+        let none: Option<u32> = None;
+        assert_eq!(none.context("gone").unwrap_err().to_string(), "gone");
+    }
+
+    #[test]
+    fn debug_prints_cause_list() {
+        let e = Error::from(io_err()).context("outer");
+        let dbg = format!("{e:?}");
+        assert!(dbg.starts_with("outer"));
+        assert!(dbg.contains("Caused by:"));
+    }
+}

@@ -1,4 +1,4 @@
-//! END-TO-END system driver (DESIGN.md: the required full-workload run),
+//! END-TO-END system driver (ARCHITECTURE.md: the full-workload run),
 //! on the unified engine API.
 //!
 //! Loads the real trained artifacts and serves the complete test sets

@@ -18,10 +18,15 @@ use crate::config::AnalogConfig;
 /// VPS program-supply nodes.
 #[derive(Clone, Debug)]
 pub struct PumpTrace {
+    /// simulation time step [s]
     pub dt: f64,
+    /// sample times [s]
     pub t: Vec<f64>,
+    /// tap voltages VPP1..VPP4 per sample [V]
     pub vpp: [Vec<f64>; 4],
+    /// program-supply nodes VPS1..VPS4 per sample [V]
     pub vps: [Vec<f64>; 4],
+    /// regulation state per sample (pump clock gated on/off)
     pub clk_enabled: Vec<bool>,
 }
 
@@ -34,16 +39,20 @@ pub enum PumpMode {
     Read,
 }
 
+/// The six-stage voltage doubler + regulation state machine.
 pub struct ChargePump {
+    /// analog design parameters (stage count, efficiency, VDDH, ...)
     pub cfg: AnalogConfig,
     /// current tap voltages VPP1..VPP4
     pub v: [f64; 4],
+    /// current operating mode (program/read)
     pub mode: PumpMode,
     /// cumulative charge delivered [C] (for the energy model)
     pub charge_delivered: f64,
 }
 
 impl ChargePump {
+    /// A pump at rest: all taps discharged to VDDH, clock gated.
     pub fn new(cfg: &AnalogConfig) -> Self {
         ChargePump {
             cfg: cfg.clone(),

@@ -1,7 +1,7 @@
 //! Behavioral models of the chip's analog subsystems: the standard-logic
 //! HV charge pump (Fig 3 / Fig 5c) and the overstress-free WL driver
 //! (Fig 4 / Fig 5d). These are calibrated waveform-level simulators, not
-//! SPICE — DESIGN.md §2 records why that preserves the paper's claims.
+//! SPICE — ARCHITECTURE.md records why that preserves the paper's claims.
 
 pub mod charge_pump;
 pub mod wl_driver;

@@ -14,6 +14,7 @@
 
 use crate::config::AnalogConfig;
 
+/// Which word-line driver topology to model.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DriverKind {
     /// NMOS-source-follower reference path only ([7], the baseline)
@@ -22,6 +23,7 @@ pub enum DriverKind {
     OverstressFree,
 }
 
+/// The word-line operation being driven.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum WlOp {
     /// drive WL to VPGM (HV pump on)
@@ -36,19 +38,26 @@ pub enum WlOp {
 /// stress seen during the op.
 #[derive(Clone, Debug)]
 pub struct WlTrace {
+    /// sample times [s]
     pub t: Vec<f64>,
+    /// word-line voltage per sample [V]
     pub wl: Vec<f64>,
+    /// worst terminal-pair stress any single device saw [V]
     pub max_device_stress: f64,
 }
 
+/// The word-line driver model (conventional or overstress-free).
 pub struct WlDriver {
+    /// analog design parameters (VDDH, VPGM, slew limits, ...)
     pub cfg: AnalogConfig,
+    /// driver topology being modeled
     pub kind: DriverKind,
     /// series devices in the VPGM discharge stack (stress splitting)
     pub stack_devices: usize,
 }
 
 impl WlDriver {
+    /// A driver of the given topology with the paper's 5-device stack.
     pub fn new(cfg: &AnalogConfig, kind: DriverKind) -> Self {
         WlDriver { cfg: cfg.clone(), kind, stack_devices: 5 }
     }

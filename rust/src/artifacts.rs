@@ -16,28 +16,41 @@ use std::path::{Path, PathBuf};
 /// One quantized linear layer as exported by python.
 #[derive(Clone, Debug)]
 pub struct QLayer {
+    /// layer name from the export (e.g. `fc1`)
     pub name: String,
+    /// input features (contraction length)
     pub k: usize,
+    /// output features
     pub n: usize,
+    /// apply quantized ReLU after requantization
     pub relu: bool,
     /// int4 codes, row-major (K, N), one i8 per code in [-8, 7]
     pub codes: Vec<i8>,
+    /// int32 bias with the z_in correction folded in (`bias_q`)
     pub bias: Vec<i32>,
+    /// fixed-point requantization parameters
     pub requant: Requant,
+    /// input zero point
     pub z_in: i8,
+    /// input activation scale
     pub s_in: f64,
+    /// weight scale
     pub s_w: f64,
+    /// output activation scale
     pub s_out: f64,
 }
 
 /// A quantized model (sequence of layers).
 #[derive(Clone, Debug)]
 pub struct QModel {
+    /// model name from the export (e.g. `mnist_weights`)
     pub name: String,
+    /// the layers, in execution order
     pub layers: Vec<QLayer>,
 }
 
 impl QModel {
+    /// Total EFLASH cells the model occupies (one 4-bit cell per code).
     pub fn total_cells(&self) -> usize {
         self.layers.iter().map(|l| l.k * l.n).sum()
     }
@@ -118,6 +131,7 @@ pub fn pack_int4(codes: &[i8]) -> Vec<u8> {
     out
 }
 
+/// Load a quantized model from `<dir>/<base>.json` + its `.bin` blob.
 pub fn load_qmodel(dir: &Path, base: &str) -> Result<QModel> {
     let meta_path = dir.join(format!("{base}.json"));
     let text = std::fs::read_to_string(&meta_path)
@@ -167,18 +181,27 @@ pub fn load_qmodel(dir: &Path, base: &str) -> Result<QModel> {
 pub struct AeFloat {
     /// weights[i]: row-major (K_i, N_i)
     pub weights: Vec<Vec<f32>>,
+    /// per-layer (K, N) shapes
     pub dims: Vec<(usize, usize)>,
+    /// per-layer float biases
     pub biases: Vec<Vec<f32>>,
+    /// training-set feature means (input normalization)
     pub x_mean: Vec<f32>,
+    /// training-set feature standard deviations
     pub x_std: Vec<f32>,
+    /// input scale of the on-chip (layer 9) quantization boundary
     pub l9_s_in: f64,
+    /// input zero point of the on-chip boundary
     pub l9_z_in: i8,
+    /// output scale of the on-chip boundary
     pub l9_s_out: f64,
+    /// output zero point of the on-chip boundary
     pub l9_z_out: i8,
     /// 1-indexed on-chip layer (paper Fig 7: the 9th)
     pub onchip_layer: usize,
 }
 
+/// Load the float AutoEncoder layers from `<dir>/ae_float.json` + blob.
 pub fn load_ae_float(dir: &Path) -> Result<AeFloat> {
     let text = std::fs::read_to_string(dir.join("ae_float.json"))
         .context("reading ae_float.json (run `make artifacts`?)")?;

@@ -64,14 +64,17 @@ impl Default for EflashConfig {
 }
 
 impl EflashConfig {
+    /// Distinct Vt states per cell (16 for 4 bits/cell).
     pub fn n_states(&self) -> usize {
         1usize << self.bits_per_cell
     }
 
+    /// Total cells in the macro.
     pub fn n_cells(&self) -> usize {
         self.capacity_bits / self.bits_per_cell as usize
     }
 
+    /// Total read units (word lines).
     pub fn rows(&self) -> usize {
         self.n_cells() / self.cells_per_read
     }
@@ -102,8 +105,9 @@ pub struct AnalogConfig {
     pub vth_nmos: f64,
     /// PMOS threshold voltage magnitude [V]
     pub vth_pmos: f64,
-    /// WL parasitic R [ohm] and C [F] for the RC waveforms
+    /// WL parasitic R [ohm] for the RC waveforms
     pub wl_r_ohm: f64,
+    /// WL parasitic C [F] for the RC waveforms
     pub wl_c_f: f64,
 }
 
@@ -239,16 +243,22 @@ impl Default for PowerConfig {
 /// Top-level chip configuration.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct ChipConfig {
+    /// EFLASH macro geometry and device parameters
     pub eflash: EflashConfig,
+    /// HV generator / WL driver parameters
     pub analog: AnalogConfig,
+    /// retention (bake) model parameters
     pub retention: RetentionConfig,
+    /// NMCU geometry and clock
     pub nmcu: NmcuConfig,
+    /// energy/leakage constants
     pub power: PowerConfig,
     /// master RNG seed for all Monte-Carlo device models
     pub seed: u64,
 }
 
 impl ChipConfig {
+    /// The paper's default configuration with a fixed seed.
     pub fn new() -> Self {
         ChipConfig { seed: 0x5EED_CAFE, ..Default::default() }
     }
@@ -315,6 +325,7 @@ impl ChipConfig {
         }
     }
 
+    /// Merge a JSON config file over the current values (CLI `--config`).
     pub fn load_file(&mut self, path: &str) -> Result<(), String> {
         let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
         let j = Json::parse(&text).map_err(|e| e.to_string())?;

@@ -21,12 +21,19 @@ use std::path::Path;
 /// Table 1, MNIST column.
 #[derive(Clone, Debug)]
 pub struct MnistResult {
+    /// test images evaluated
     pub n_test: usize,
+    /// accuracy of the pure-software integer reference
     pub acc_sw_baseline: f64,
+    /// chip accuracy before the retention bake
     pub acc_before_bake: f64,
+    /// chip accuracy after the retention bake
     pub acc_after_bake: f64,
+    /// bake duration [h]
     pub bake_hours: f64,
+    /// weight decode errors before the bake
     pub decode_before: DecodeErrors,
+    /// weight decode errors after the bake
     pub decode_after: DecodeErrors,
 }
 
@@ -59,6 +66,7 @@ pub fn run_mnist(
     })
 }
 
+/// MNIST accuracy of the software reference path.
 pub fn mnist_accuracy_sw(model: &QModel, test: &MnistTest) -> f64 {
     let mut correct = 0usize;
     for i in 0..test.len() {
@@ -128,13 +136,20 @@ pub fn decode_errors_all(
 /// Table 1, AutoEncoder column (Fig 7 split: layer 9 on-chip).
 #[derive(Clone, Debug)]
 pub struct AeResult {
+    /// test clips evaluated
     pub n_test: usize,
+    /// AUC with layer 9 on the software reference path
     pub auc_sw_baseline: f64,
+    /// chip AUC before the retention bake
     pub auc_before_bake: f64,
+    /// chip AUC after the retention bake
     pub auc_after_bake: f64,
+    /// bake duration [h]
     pub bake_hours: f64,
 }
 
+/// Run the full AutoEncoder experiment (program layer 9, AUC before/
+/// after bake; the other layers run in float off-chip, Fig 7).
 pub fn run_autoencoder(
     backend: &mut NmcuBackend,
     ae: &AeFloat,
@@ -192,13 +207,19 @@ pub fn fig6_histograms(chip: &mut Chip, pm: &super::ProgrammedModel) -> Vec<[u64
 
 /// Load all artifacts needed by Table 1 in one call.
 pub struct Table1Inputs {
+    /// the quantized MNIST MLP
     pub mnist_model: QModel,
+    /// the quantized AutoEncoder layer 9 (the on-chip layer)
     pub ae_l9_model: QModel,
+    /// the float AutoEncoder layers + normalization stats
     pub ae_float: AeFloat,
+    /// the MNIST test set
     pub mnist_test: MnistTest,
+    /// the ToyADMOS-like anomaly test set
     pub admos_test: AdmosTest,
 }
 
+/// Load every artifact Table 1 needs from `dir`.
 pub fn load_table1_inputs(dir: &Path) -> Result<Table1Inputs> {
     Ok(Table1Inputs {
         mnist_model: artifacts::load_qmodel(dir, "mnist_weights")?,

@@ -15,9 +15,13 @@ use crate::nmcu::{layout_codes, LayerDesc, Nmcu, NmcuStats};
 /// A model programmed into the weight memory.
 #[derive(Clone, Debug)]
 pub struct ProgrammedModel {
+    /// model name from the artifacts
     pub name: String,
+    /// per-layer NMCU descriptors (what a launch consumes)
     pub descs: Vec<LayerDesc>,
+    /// per-layer EFLASH regions
     pub regions: Vec<Region>,
+    /// per-layer ISPP program-verify reports
     pub reports: Vec<ProgramReport>,
     /// the original artifact codes per layer (for decode-error analyses)
     pub layer_codes: Vec<Vec<i8>>,
@@ -26,10 +30,12 @@ pub struct ProgrammedModel {
 }
 
 impl ProgrammedModel {
+    /// Total ISPP pulses spent programming the model.
     pub fn total_pulses(&self) -> u64 {
         self.reports.iter().map(|r| r.total_pulses()).sum()
     }
 
+    /// Total EFLASH cells the model occupies.
     pub fn total_cells(&self) -> usize {
         self.regions.iter().map(|r| r.n_codes).sum()
     }
@@ -40,12 +46,16 @@ impl ProgrammedModel {
 /// this facade drives the same hardware models directly, which is what
 /// the throughput experiments use.)
 pub struct Chip {
+    /// configuration the chip was fabricated with
     pub cfg: ChipConfig,
+    /// the 4-bits/cell weight memory
     pub eflash: EflashMacro,
+    /// the near-memory computing unit
     pub nmcu: Nmcu,
 }
 
 impl Chip {
+    /// Fabricate a chip with the paper's proposed WL driver.
     pub fn new(cfg: &ChipConfig) -> Self {
         Chip {
             cfg: cfg.clone(),
@@ -172,10 +182,12 @@ impl Chip {
         self.eflash.bake(hours, temp_c);
     }
 
+    /// Cumulative NMCU execution statistics.
     pub fn stats(&self) -> NmcuStats {
         self.nmcu.stats
     }
 
+    /// Zero the NMCU statistics counters.
     pub fn reset_stats(&mut self) {
         self.nmcu.stats = NmcuStats::default();
     }

@@ -40,14 +40,17 @@ fn b_type(funct3: u32, rs1: u32, rs2: u32, imm: i32) -> u32 {
 
 // ---- mnemonics --------------------------------------------------------------
 
+/// Encode `lui rd, imm20` (load upper immediate).
 pub fn lui(rd: u32, imm20: u32) -> u32 {
     0x37 | (rd << 7) | (imm20 << 12)
 }
 
+/// Encode `auipc rd, imm20` (PC-relative upper immediate).
 pub fn auipc(rd: u32, imm20: u32) -> u32 {
     0x17 | (rd << 7) | (imm20 << 12)
 }
 
+/// Encode `jal rd, offset` (jump and link, byte offset).
 pub fn jal(rd: u32, offset: i32) -> u32 {
     debug_assert!(offset % 2 == 0);
     let imm = offset as u32;
@@ -58,123 +61,161 @@ pub fn jal(rd: u32, offset: i32) -> u32 {
         | (((imm >> 20) & 1) << 31)
 }
 
+/// Encode `jalr rd, rs1, imm` (indirect jump and link).
 pub fn jalr(rd: u32, rs1: u32, imm: i32) -> u32 {
     i_type(0x67, rd, 0, rs1, imm)
 }
 
+/// Encode `beq rs1, rs2, off` (branch if equal).
 pub fn beq(rs1: u32, rs2: u32, off: i32) -> u32 {
     b_type(0b000, rs1, rs2, off)
 }
+/// Encode `bne rs1, rs2, off` (branch if not equal).
 pub fn bne(rs1: u32, rs2: u32, off: i32) -> u32 {
     b_type(0b001, rs1, rs2, off)
 }
+/// Encode `blt rs1, rs2, off` (branch if less than, signed).
 pub fn blt(rs1: u32, rs2: u32, off: i32) -> u32 {
     b_type(0b100, rs1, rs2, off)
 }
+/// Encode `bge rs1, rs2, off` (branch if greater/equal, signed).
 pub fn bge(rs1: u32, rs2: u32, off: i32) -> u32 {
     b_type(0b101, rs1, rs2, off)
 }
+/// Encode `bltu rs1, rs2, off` (branch if less than, unsigned).
 pub fn bltu(rs1: u32, rs2: u32, off: i32) -> u32 {
     b_type(0b110, rs1, rs2, off)
 }
+/// Encode `bgeu rs1, rs2, off` (branch if greater/equal, unsigned).
 pub fn bgeu(rs1: u32, rs2: u32, off: i32) -> u32 {
     b_type(0b111, rs1, rs2, off)
 }
 
+/// Encode `lb rd, imm(rs1)` (load byte, sign-extended).
 pub fn lb(rd: u32, rs1: u32, imm: i32) -> u32 {
     i_type(0x03, rd, 0b000, rs1, imm)
 }
+/// Encode `lh rd, imm(rs1)` (load halfword, sign-extended).
 pub fn lh(rd: u32, rs1: u32, imm: i32) -> u32 {
     i_type(0x03, rd, 0b001, rs1, imm)
 }
+/// Encode `lw rd, imm(rs1)` (load word).
 pub fn lw(rd: u32, rs1: u32, imm: i32) -> u32 {
     i_type(0x03, rd, 0b010, rs1, imm)
 }
+/// Encode `lbu rd, imm(rs1)` (load byte, zero-extended).
 pub fn lbu(rd: u32, rs1: u32, imm: i32) -> u32 {
     i_type(0x03, rd, 0b100, rs1, imm)
 }
+/// Encode `lhu rd, imm(rs1)` (load halfword, zero-extended).
 pub fn lhu(rd: u32, rs1: u32, imm: i32) -> u32 {
     i_type(0x03, rd, 0b101, rs1, imm)
 }
 
+/// Encode `sb rs2, imm(rs1)` (store byte).
 pub fn sb(rs1: u32, rs2: u32, imm: i32) -> u32 {
     s_type(0x23, 0b000, rs1, rs2, imm)
 }
+/// Encode `sh rs2, imm(rs1)` (store halfword).
 pub fn sh(rs1: u32, rs2: u32, imm: i32) -> u32 {
     s_type(0x23, 0b001, rs1, rs2, imm)
 }
+/// Encode `sw rs2, imm(rs1)` (store word).
 pub fn sw(rs1: u32, rs2: u32, imm: i32) -> u32 {
     s_type(0x23, 0b010, rs1, rs2, imm)
 }
 
+/// Encode `addi rd, rs1, imm` (add immediate).
 pub fn addi(rd: u32, rs1: u32, imm: i32) -> u32 {
     i_type(0x13, rd, 0b000, rs1, imm)
 }
+/// Encode `slti rd, rs1, imm` (set if less than immediate, signed).
 pub fn slti(rd: u32, rs1: u32, imm: i32) -> u32 {
     i_type(0x13, rd, 0b010, rs1, imm)
 }
+/// Encode `sltiu rd, rs1, imm` (set if less than immediate, unsigned).
 pub fn sltiu(rd: u32, rs1: u32, imm: i32) -> u32 {
     i_type(0x13, rd, 0b011, rs1, imm)
 }
+/// Encode `xori rd, rs1, imm` (xor immediate).
 pub fn xori(rd: u32, rs1: u32, imm: i32) -> u32 {
     i_type(0x13, rd, 0b100, rs1, imm)
 }
+/// Encode `ori rd, rs1, imm` (or immediate).
 pub fn ori(rd: u32, rs1: u32, imm: i32) -> u32 {
     i_type(0x13, rd, 0b110, rs1, imm)
 }
+/// Encode `andi rd, rs1, imm` (and immediate).
 pub fn andi(rd: u32, rs1: u32, imm: i32) -> u32 {
     i_type(0x13, rd, 0b111, rs1, imm)
 }
+/// Encode `slli rd, rs1, shamt` (shift left logical immediate).
 pub fn slli(rd: u32, rs1: u32, shamt: u32) -> u32 {
     i_type(0x13, rd, 0b001, rs1, shamt as i32)
 }
+/// Encode `srli rd, rs1, shamt` (shift right logical immediate).
 pub fn srli(rd: u32, rs1: u32, shamt: u32) -> u32 {
     i_type(0x13, rd, 0b101, rs1, shamt as i32)
 }
+/// Encode `srai rd, rs1, shamt` (shift right arithmetic immediate).
 pub fn srai(rd: u32, rs1: u32, shamt: u32) -> u32 {
     i_type(0x13, rd, 0b101, rs1, (shamt | 0x400) as i32)
 }
 
+/// Encode `add rd, rs1, rs2`.
 pub fn add(rd: u32, rs1: u32, rs2: u32) -> u32 {
     r_type(0x33, rd, 0b000, rs1, rs2, 0x00)
 }
+/// Encode `sub rd, rs1, rs2`.
 pub fn sub(rd: u32, rs1: u32, rs2: u32) -> u32 {
     r_type(0x33, rd, 0b000, rs1, rs2, 0x20)
 }
+/// Encode `sll rd, rs1, rs2` (shift left logical).
 pub fn sll(rd: u32, rs1: u32, rs2: u32) -> u32 {
     r_type(0x33, rd, 0b001, rs1, rs2, 0x00)
 }
+/// Encode `slt rd, rs1, rs2` (set if less than, signed).
 pub fn slt(rd: u32, rs1: u32, rs2: u32) -> u32 {
     r_type(0x33, rd, 0b010, rs1, rs2, 0x00)
 }
+/// Encode `sltu rd, rs1, rs2` (set if less than, unsigned).
 pub fn sltu(rd: u32, rs1: u32, rs2: u32) -> u32 {
     r_type(0x33, rd, 0b011, rs1, rs2, 0x00)
 }
+/// Encode `xor rd, rs1, rs2`.
 pub fn xor(rd: u32, rs1: u32, rs2: u32) -> u32 {
     r_type(0x33, rd, 0b100, rs1, rs2, 0x00)
 }
+/// Encode `srl rd, rs1, rs2` (shift right logical).
 pub fn srl(rd: u32, rs1: u32, rs2: u32) -> u32 {
     r_type(0x33, rd, 0b101, rs1, rs2, 0x00)
 }
+/// Encode `sra rd, rs1, rs2` (shift right arithmetic).
 pub fn sra(rd: u32, rs1: u32, rs2: u32) -> u32 {
     r_type(0x33, rd, 0b101, rs1, rs2, 0x20)
 }
+/// Encode `or rd, rs1, rs2`.
 pub fn or(rd: u32, rs1: u32, rs2: u32) -> u32 {
     r_type(0x33, rd, 0b110, rs1, rs2, 0x00)
 }
+/// Encode `and rd, rs1, rs2`.
 pub fn and(rd: u32, rs1: u32, rs2: u32) -> u32 {
     r_type(0x33, rd, 0b111, rs1, rs2, 0x00)
 }
+/// Encode `mul rd, rs1, rs2` (M extension, low word).
 pub fn mul(rd: u32, rs1: u32, rs2: u32) -> u32 {
     r_type(0x33, rd, 0b000, rs1, rs2, 0x01)
 }
 
+/// Encode `ecall` (environment call; a7=93 exits).
 pub fn ecall() -> u32 {
     0x0000_0073
 }
+/// Encode `ebreak` (breakpoint).
 pub fn ebreak() -> u32 {
     0x0010_0073
 }
+/// Encode `rdinstret rd` (read the retired-instruction counter).
 pub fn rdinstret(rd: u32) -> u32 {
     0x73 | (rd << 7) | (0b010 << 12) | (0xC02 << 20)
 }
@@ -207,20 +248,24 @@ enum FixKind {
 }
 
 impl Asm {
+    /// An empty program.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Define `name` at the current position.
     pub fn label(&mut self, name: &str) -> &mut Self {
         self.labels.insert(name.to_string(), self.words.len());
         self
     }
 
+    /// Append one encoded instruction word.
     pub fn emit(&mut self, word: u32) -> &mut Self {
         self.words.push(word);
         self
     }
 
+    /// Append a sequence of encoded words (e.g. a `li32` pair).
     pub fn emit_all(&mut self, words: &[u32]) -> &mut Self {
         self.words.extend_from_slice(words);
         self
@@ -233,12 +278,14 @@ impl Asm {
         self
     }
 
+    /// `jal rd, label` with the offset fixed up at assembly.
     pub fn jump_to(&mut self, rd: u32, label: &str) -> &mut Self {
         self.fixups.push((self.words.len(), label.to_string(), FixKind::Jump));
         self.words.push(jal(rd, 0));
         self
     }
 
+    /// Resolve every label fixup and return the finished words.
     pub fn assemble(&self) -> Vec<u32> {
         let mut out = self.words.clone();
         for (at, label, kind) in &self.fixups {

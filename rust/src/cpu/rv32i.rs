@@ -9,22 +9,28 @@
 
 /// Memory interface the CPU executes against (implemented by `soc::Bus`).
 pub trait Mem {
+    /// Read one byte.
     fn read8(&mut self, addr: u32) -> u8;
+    /// Write one byte.
     fn write8(&mut self, addr: u32, v: u8);
 
+    /// Read a little-endian halfword.
     fn read16(&mut self, addr: u32) -> u16 {
         self.read8(addr) as u16 | ((self.read8(addr + 1) as u16) << 8)
     }
 
+    /// Read a little-endian word.
     fn read32(&mut self, addr: u32) -> u32 {
         self.read16(addr) as u32 | ((self.read16(addr + 2) as u32) << 16)
     }
 
+    /// Write a little-endian halfword.
     fn write16(&mut self, addr: u32, v: u16) {
         self.write8(addr, v as u8);
         self.write8(addr + 1, (v >> 8) as u8);
     }
 
+    /// Write a little-endian word.
     fn write32(&mut self, addr: u32, v: u32) {
         self.write16(addr, v as u16);
         self.write16(addr + 2, (v >> 16) as u16);
@@ -37,23 +43,36 @@ pub enum Event {
     /// normal instruction retired
     None,
     /// custom-0: launch the NMCU MVM whose descriptor lives at `desc_addr`
-    NmcuLaunch { desc_addr: u32 },
+    NmcuLaunch {
+        /// SRAM address of the 8-word MVM descriptor
+        desc_addr: u32,
+    },
     /// ECALL (firmware exit convention: a7 = 93, a0 = exit code)
     Ecall,
     /// EBREAK
     Ebreak,
     /// illegal/unsupported instruction
-    Illegal { raw: u32, pc: u32 },
+    Illegal {
+        /// the raw instruction word
+        raw: u32,
+        /// where it was fetched
+        pc: u32,
+    },
 }
 
+/// Architectural state of the RV32I core.
 #[derive(Clone, Debug)]
 pub struct Cpu {
+    /// the 32 integer registers (x0 reads as zero)
     pub regs: [u32; 32],
+    /// program counter
     pub pc: u32,
+    /// retired-instruction counter
     pub instret: u64,
 }
 
 impl Cpu {
+    /// A core reset to `pc` with zeroed registers.
     pub fn new(pc: u32) -> Self {
         Cpu { regs: [0; 32], pc, instret: 0 }
     }

@@ -2,26 +2,59 @@
 //! plus a synthetic workload generator for benches that don't need the
 //! trained models.
 
+use crate::artifacts::{QLayer, QModel};
+use crate::nmcu::Requant;
 use crate::util::rng::Rng;
 use anyhow::{bail, Context, Result};
 use std::path::Path;
 
+/// A deterministic random two-layer int4 MLP (`k -> h -> c`, ReLU after
+/// the hidden layer) with trained-model-like requantization constants —
+/// the one synthetic stand-in shared by the serving CLI, benches,
+/// examples, and tests, so they cannot drift apart. Use
+/// `synthetic_qmodel(r, "synthetic-mnist", 784, 43, 10)` for a model
+/// with the real MNIST MLP's geometry and EFLASH footprint.
+pub fn synthetic_qmodel(r: &mut Rng, name: &str, k: usize, h: usize, c: usize) -> QModel {
+    let layer = |name: &str, k: usize, n: usize, relu: bool, r: &mut Rng| QLayer {
+        name: name.into(),
+        k,
+        n,
+        relu,
+        codes: (0..k * n).map(|_| (r.below(16) as i8) - 8).collect(),
+        bias: (0..n).map(|_| (r.below(2000) as i32) - 1000).collect(),
+        requant: Requant { m0: 1_518_500_250, shift: 40, z_out: -3 },
+        z_in: -128,
+        s_in: 1.0 / 255.0,
+        s_w: 0.05,
+        s_out: 0.1,
+    };
+    QModel {
+        name: name.into(),
+        layers: vec![layer("fc1", k, h, true, r), layer("fc2", h, c, false, r)],
+    }
+}
+
 /// MNIST-like test set: 28x28 u8 images + labels.
 #[derive(Clone, Debug)]
 pub struct MnistTest {
-    pub images: Vec<u8>, // n * 784
+    /// raw pixels, n * 784 bytes, row-major
+    pub images: Vec<u8>,
+    /// class labels, one byte per image
     pub labels: Vec<u8>,
 }
 
 impl MnistTest {
+    /// Number of test images.
     pub fn len(&self) -> usize {
         self.labels.len()
     }
 
+    /// True when the set holds no images.
     pub fn is_empty(&self) -> bool {
         self.labels.is_empty()
     }
 
+    /// Raw 784-byte pixel slice of image `i`.
     pub fn image(&self, i: usize) -> &[u8] {
         &self.images[i * 784..(i + 1) * 784]
     }
@@ -32,6 +65,7 @@ impl MnistTest {
     }
 }
 
+/// Load `<dir>/mnist_test.bin` (`MNT1` format).
 pub fn load_mnist(dir: &Path) -> Result<MnistTest> {
     let raw = std::fs::read(dir.join("mnist_test.bin"))
         .context("reading mnist_test.bin (run `make artifacts`?)")?;
@@ -52,25 +86,32 @@ pub fn load_mnist(dir: &Path) -> Result<MnistTest> {
 /// ToyADMOS-like test set: 640-dim f32 features + anomaly labels.
 #[derive(Clone, Debug)]
 pub struct AdmosTest {
+    /// feature dimensionality (640 in the paper's setup)
     pub dim: usize,
-    pub feats: Vec<f32>, // n * dim
-    pub labels: Vec<u8>, // 1 = anomaly
+    /// flattened features, n * dim f32s
+    pub feats: Vec<f32>,
+    /// per-clip labels, 1 = anomaly
+    pub labels: Vec<u8>,
 }
 
 impl AdmosTest {
+    /// Number of test clips.
     pub fn len(&self) -> usize {
         self.labels.len()
     }
 
+    /// True when the set holds no clips.
     pub fn is_empty(&self) -> bool {
         self.labels.is_empty()
     }
 
+    /// Feature slice of clip `i`.
     pub fn feat(&self, i: usize) -> &[f32] {
         &self.feats[i * self.dim..(i + 1) * self.dim]
     }
 }
 
+/// Load `<dir>/admos_test.bin` (`ADM1` format).
 pub fn load_admos(dir: &Path) -> Result<AdmosTest> {
     let raw = std::fs::read(dir.join("admos_test.bin"))
         .context("reading admos_test.bin (run `make artifacts`?)")?;
@@ -97,10 +138,12 @@ pub struct WorkloadGen {
 }
 
 impl WorkloadGen {
+    /// A generator with its own deterministic stream.
     pub fn new(seed: u64) -> Self {
         WorkloadGen { rng: Rng::new(seed) }
     }
 
+    /// `n` uniform int8 activations.
     pub fn activations(&mut self, n: usize) -> Vec<i8> {
         (0..n).map(|_| (self.rng.below(256) as i32 - 128) as i8).collect()
     }
@@ -133,6 +176,18 @@ mod tests {
         let wu = g.weights_uniform(10_000);
         let near_zero_u = wu.iter().filter(|&&c| c.abs() <= 2).count();
         assert!(near_zero_u < 4_000);
+    }
+
+    #[test]
+    fn synthetic_qmodel_is_valid_and_deterministic() {
+        let m = synthetic_qmodel(&mut Rng::new(9), "syn", 64, 8, 4);
+        m.validate().expect("structurally valid");
+        assert_eq!(m.layers[0].k, 64);
+        assert_eq!(m.layers[1].n, 4);
+        assert!(m.layers[0].relu && !m.layers[1].relu);
+        assert!(m.layers[0].codes.iter().all(|&c| (-8..=7).contains(&c)));
+        let m2 = synthetic_qmodel(&mut Rng::new(9), "syn", 64, 8, 4);
+        assert_eq!(m.layers[0].codes, m2.layers[0].codes);
     }
 
     #[test]

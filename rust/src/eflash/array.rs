@@ -12,12 +12,16 @@ use crate::util::rng::Rng;
 /// Address of one read unit (a word line within a bank).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct RowAddr {
+    /// bank index (0..banks)
     pub bank: usize,
+    /// word line within the bank
     pub row: usize,
 }
 
+/// The cell array of one EFLASH macro (Vt state + process variation).
 #[derive(Clone, Debug)]
 pub struct EflashArray {
+    /// geometry and device parameters the array was fabricated with
     pub cfg: EflashConfig,
     /// threshold voltage per cell [V]
     vt: Vec<f32>,
@@ -25,9 +29,11 @@ pub struct EflashArray {
     efficiency: Vec<f32>,
     /// per-cell retention-loss multiplier (lognormal; includes fast tails)
     retention_factor: Vec<f32>,
-    /// lifetime statistics
+    /// lifetime statistics: ISPP pulses applied
     pub total_program_pulses: u64,
+    /// lifetime statistics: row reads performed
     pub total_reads: u64,
+    /// lifetime statistics: erase operations performed
     pub total_erases: u64,
 }
 
@@ -61,10 +67,12 @@ impl EflashArray {
         }
     }
 
+    /// Total cells in the macro.
     pub fn n_cells(&self) -> usize {
         self.vt.len()
     }
 
+    /// Word lines per bank.
     pub fn rows_per_bank(&self) -> usize {
         self.cfg.rows() / self.cfg.banks
     }
@@ -83,22 +91,26 @@ impl EflashArray {
         RowAddr { bank: flat_row / rpb, row: flat_row % rpb }
     }
 
+    /// Threshold voltage of one cell [V].
     #[inline]
     pub fn vt(&self, cell: usize) -> f32 {
         self.vt[cell]
     }
 
+    /// Threshold voltages of one read unit (256 cells).
     #[inline]
     pub fn vt_row(&self, addr: RowAddr) -> &[f32] {
         let base = self.row_base(addr);
         &self.vt[base..base + self.cfg.cells_per_read]
     }
 
+    /// Per-cell ISPP efficiency multiplier (process variation).
     #[inline]
     pub fn efficiency(&self, cell: usize) -> f32 {
         self.efficiency[cell]
     }
 
+    /// Per-cell retention-loss multiplier (lognormal, with fast tails).
     #[inline]
     pub fn retention_factor(&self, cell: usize) -> f32 {
         self.retention_factor[cell]
@@ -143,6 +155,7 @@ impl EflashArray {
         self.vt[cell] = (self.vt[cell] as f64 + delta) as f32;
     }
 
+    /// Count one row read in the lifetime statistics.
     pub fn note_read(&mut self) {
         self.total_reads += 1;
     }

@@ -10,6 +10,7 @@
 
 use crate::config::EflashConfig;
 
+/// The verify and read reference ladders of one macro.
 #[derive(Clone, Debug)]
 pub struct Ladders {
     /// verify level for programmed state k (index 0 = state 1), [V]

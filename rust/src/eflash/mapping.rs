@@ -27,9 +27,11 @@ pub enum StateMapping {
 }
 
 impl StateMapping {
+    /// Every mapping, for ablation sweeps.
     pub const ALL: [StateMapping; 3] =
         [StateMapping::AdjacentUnit, StateMapping::TwosComplement, StateMapping::Gray];
 
+    /// Human-readable mapping name for reports.
     pub fn name(&self) -> &'static str {
         match self {
             StateMapping::AdjacentUnit => "adjacent-unit (paper, Fig 5a)",

@@ -21,17 +21,25 @@ use read::ReadMode;
 /// A programmed weight region (one model layer's rows).
 #[derive(Clone, Debug)]
 pub struct Region {
+    /// first flat row index of the region
     pub first_row: usize,
+    /// consecutive rows occupied
     pub n_rows: usize,
+    /// int4 codes stored (may not fill the last row)
     pub n_codes: usize,
 }
 
 /// The EFLASH macro with its sense ladders and decode cache.
 pub struct EflashMacro {
+    /// chip configuration the macro was fabricated with
     pub cfg: ChipConfig,
+    /// the physical cell array (Vt state, process variation)
     pub array: EflashArray,
+    /// program-verify and read sense ladders
     pub ladders: Ladders,
+    /// code -> Vt state mapping (Fig 5a)
     pub mapping: StateMapping,
+    /// decode caching policy of the read path
     pub read_mode: ReadMode,
     rng: Rng,
     /// next free row for the bump allocator
@@ -75,10 +83,12 @@ impl EflashMacro {
         }
     }
 
+    /// Cells delivered by one row read (256: one weight tile).
     pub fn cells_per_read(&self) -> usize {
         self.cfg.eflash.cells_per_read
     }
 
+    /// Total word lines in the macro.
     pub fn total_rows(&self) -> usize {
         self.cfg.eflash.rows()
     }
@@ -93,6 +103,7 @@ impl EflashMacro {
         Some(first)
     }
 
+    /// Rows the bump allocator has not handed out yet.
     pub fn rows_free(&self) -> usize {
         self.total_rows() - self.next_row
     }
@@ -247,20 +258,28 @@ impl EflashMacro {
     }
 }
 
+/// Decode-vs-intended error tally of a programmed region (Fig 6).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct DecodeErrors {
+    /// cells compared
     pub total: u64,
+    /// cells decoding to exactly the programmed code
     pub exact: u64,
+    /// cells off by one LSB
     pub off_by_one: u64,
+    /// cells off by two or more LSB
     pub worse: u64,
+    /// summed absolute decode error [LSB]
     pub sum_abs_lsb: u64,
 }
 
 impl DecodeErrors {
+    /// Fraction of cells decoding exactly.
     pub fn exact_rate(&self) -> f64 {
         self.exact as f64 / self.total.max(1) as f64
     }
 
+    /// Mean absolute decode error [LSB].
     pub fn mean_abs_lsb(&self) -> f64 {
         self.sum_abs_lsb as f64 / self.total.max(1) as f64
     }

@@ -28,6 +28,7 @@ pub struct ProgramReport {
 }
 
 impl ProgramReport {
+    /// Total ISPP pulses across all states.
     pub fn total_pulses(&self) -> u64 {
         self.pulses_per_state.iter().sum()
     }

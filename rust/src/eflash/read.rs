@@ -15,9 +15,12 @@ use super::array::{EflashArray, RowAddr};
 use super::levels::Ladders;
 use crate::util::rng::Rng;
 
+/// Decode caching policy of the sense path (see the module docs).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ReadMode {
+    /// fresh comparator noise on every read (physically faithful)
     Resample,
+    /// decode once, reuse the codes until program/erase/bake
     Cached,
 }
 

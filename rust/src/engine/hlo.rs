@@ -27,6 +27,8 @@ struct HloModel {
     macs_per_inference: u64,
 }
 
+/// The PJRT [`Backend`] over the AOT-compiled HLO artifacts
+/// (`--features pjrt`).
 pub struct HloBackend {
     rt: Runtime,
     dir: PathBuf,
@@ -74,6 +76,7 @@ impl HloBackend {
         })
     }
 
+    /// PJRT platform name (e.g. `cpu`).
     pub fn platform(&self) -> String {
         self.rt.platform()
     }

@@ -15,6 +15,12 @@
 //! - [`ShardedEngine`] — N replicated chips on worker threads, the
 //!   data-parallel throughput primitive (itself a [`Backend`]).
 //!
+//! On top of the batch primitive sits the serving layer:
+//! [`InferenceServer`] (see [`server`]) accepts independent
+//! single-sample requests on a bounded admission queue and coalesces
+//! them into micro-batches under a [`BatchPolicy`] — the piece that
+//! turns "a stream of users" into "the batches a fleet of chips wants".
+//!
 //! Models are addressed by opaque [`ModelHandle`]s: a backend owns a
 //! registry of resident models (multiple models share one EFLASH through
 //! the existing `Region` bump allocator) instead of the caller threading
@@ -33,6 +39,7 @@
 
 mod nmcu_backend;
 mod reference;
+pub mod server;
 mod sharded;
 
 #[cfg(feature = "pjrt")]
@@ -43,6 +50,7 @@ pub use crate::error::EngineError;
 pub use hlo::HloBackend;
 pub use nmcu_backend::NmcuBackend;
 pub use reference::ReferenceBackend;
+pub use server::{BatchPolicy, InferenceServer, Pending, ServerClient};
 pub use sharded::ShardedEngine;
 
 use crate::artifacts::QModel;
@@ -71,6 +79,7 @@ impl ModelHandle {
         ModelHandle(index)
     }
 
+    /// The raw registry index this handle names.
     pub fn index(&self) -> usize {
         self.0
     }
@@ -122,8 +131,11 @@ pub trait Backend: Send {
 /// Which backend an [`Engine`] should run on (CLI `--backend`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum BackendKind {
+    /// The chip simulator ([`NmcuBackend`]).
     Nmcu,
+    /// The pure-software integer reference ([`ReferenceBackend`]).
     Reference,
+    /// The AOT HLO graphs via PJRT (`HloBackend`, `--features pjrt`).
     Hlo,
 }
 
@@ -145,11 +157,13 @@ impl std::str::FromStr for BackendKind {
 /// Per-model metadata the engine keeps for request validation.
 #[derive(Clone, Debug)]
 pub struct ModelInfo {
+    /// model name from the artifacts (e.g. `mnist_weights`)
     pub name: String,
     /// input features of the first layer
     pub input_dim: usize,
     /// output features of the last layer
     pub output_dim: usize,
+    /// number of layers resident for this model
     pub n_layers: usize,
 }
 
@@ -208,10 +222,18 @@ impl Engine {
         }
     }
 
+    /// Unwrap into the inner backend, e.g. to hand an already-programmed
+    /// substrate to an [`InferenceServer`].
+    pub fn into_backend(self) -> Box<dyn Backend> {
+        self.backend
+    }
+
+    /// Short name of the underlying backend (logs, CLI output).
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
     }
 
+    /// Number of models resident in the backend's registry.
     pub fn n_models(&self) -> usize {
         self.backend.n_models()
     }
@@ -247,10 +269,12 @@ impl Engine {
         self.backend.infer_batch(handle, xs)
     }
 
+    /// Cumulative execution statistics of the underlying backend.
     pub fn stats(&self) -> NmcuStats {
         self.backend.stats()
     }
 
+    /// Zero the backend's statistics counters.
     pub fn reset_stats(&mut self) {
         self.backend.reset_stats();
     }

@@ -10,6 +10,8 @@ use crate::config::ChipConfig;
 use crate::coordinator::{Chip, ProgrammedModel};
 use crate::nmcu::NmcuStats;
 
+/// The chip-simulator [`Backend`]: one [`Chip`] plus the registry of
+/// models programmed into its EFLASH.
 pub struct NmcuBackend {
     chip: Chip,
     models: Vec<ProgrammedModel>,
@@ -33,6 +35,7 @@ impl NmcuBackend {
         &self.chip
     }
 
+    /// Mutable access to the underlying chip (bake, read-mode changes).
     pub fn chip_mut(&mut self) -> &mut Chip {
         &mut self.chip
     }

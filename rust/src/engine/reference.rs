@@ -8,6 +8,7 @@ use crate::artifacts::QModel;
 use crate::models::qmodel_forward;
 use crate::nmcu::NmcuStats;
 
+/// The pure-software reference [`Backend`] (no device model, no drift).
 #[derive(Default)]
 pub struct ReferenceBackend {
     models: Vec<QModel>,
@@ -15,6 +16,7 @@ pub struct ReferenceBackend {
 }
 
 impl ReferenceBackend {
+    /// An empty reference backend (no models resident).
     pub fn new() -> ReferenceBackend {
         ReferenceBackend::default()
     }

@@ -1,0 +1,688 @@
+//! Dynamic-batching request scheduler: the layer that turns a stream of
+//! independent single-sample requests into the batches the data-parallel
+//! substrates ([`ShardedEngine`](super::ShardedEngine), the batched HLO
+//! graphs) are built to consume.
+//!
+//! # Why this exists
+//!
+//! The paper's chip keeps its compute fed with a *ping-pong buffer*: one
+//! half drains into the PEs while the other half fills, so the expensive
+//! resource never waits for I/O. [`InferenceServer`] is the system-level
+//! analogue. Two threads pipeline the same way:
+//!
+//! - the **scheduler** thread admits requests from a bounded queue and
+//!   coalesces them into per-model micro-batches under a [`BatchPolicy`]
+//!   (dispatch when a batch reaches `max_batch`, or when its oldest
+//!   request has waited `max_wait`);
+//! - the **dispatch** thread owns the [`Backend`] and executes one
+//!   micro-batch while the scheduler is already forming the next one.
+//!
+//! While the backend is busy, arrivals pile into the forming batch — so
+//! batch sizes adapt to load automatically: near-empty batches at low
+//! traffic (latency-optimal), full batches at saturation
+//! (throughput-optimal).
+//!
+//! ```text
+//!  callers            InferenceServer                               Backend
+//!  ───────            ───────────────────────────────────────────   ───────
+//!  submit ──┐
+//!  submit ──┼─► [bounded admission queue] ─► scheduler ─► dispatch ─► infer_batch
+//!  submit ──┘         │ full? typed            │ per-model   │ owns the
+//!           ◄─────────┘ QueueFull              │ queues,     │ backend,
+//!     per-request                              │ coalesce    │ ping-pong
+//!     completion channels ◄────────────────────┴─────────────┘ with scheduler
+//! ```
+//!
+//! Overload is a *value*, not a panic: when the admission queue is full,
+//! [`submit`](ServerClient::submit) returns
+//! [`EngineError::QueueFull`] immediately (open-loop callers shed load,
+//! closed-loop callers retry). Requests never get stuck: a partial batch
+//! is flushed `max_wait` after its oldest request arrived, and
+//! [`shutdown`](InferenceServer::shutdown) drains everything already
+//! admitted before returning the backend.
+//!
+//! Scheduling never changes results: batch composition affects *when* a
+//! request runs, not *what* it computes, so outputs stay bit-exact to
+//! per-sample [`Backend::infer`] (pinned in `rust/tests/test_server.rs`).
+//!
+//! # Example: serve a model through the scheduler
+//!
+//! ```
+//! use nvmcu::artifacts::{QLayer, QModel};
+//! use nvmcu::engine::{Backend, BatchPolicy, InferenceServer, ReferenceBackend};
+//! use nvmcu::nmcu::Requant;
+//!
+//! // a tiny 4-in/2-out int8 layer (identity requant: m0/2^shift == 1)
+//! let layer = QLayer {
+//!     name: "fc".into(), k: 4, n: 2, relu: false,
+//!     codes: vec![1i8; 8], bias: vec![3, -3],
+//!     requant: Requant { m0: 1 << 30, shift: 30, z_out: 0 },
+//!     z_in: 0, s_in: 1.0, s_w: 1.0, s_out: 1.0,
+//! };
+//! let model = QModel { name: "tiny".into(), layers: vec![layer] };
+//!
+//! let mut backend = ReferenceBackend::new();
+//! let handle = backend.program(&model)?;
+//! let server = InferenceServer::start(Box::new(backend), BatchPolicy::default())?;
+//!
+//! // submit asynchronously, then collect each result
+//! let pendings: Vec<_> = (0..8)
+//!     .map(|i| server.submit(handle, vec![i as i8; 4]).unwrap())
+//!     .collect();
+//! for (i, p) in pendings.into_iter().enumerate() {
+//!     let logits = p.wait()?;
+//!     assert_eq!(logits, vec![4 * i as i8 + 3, 4 * i as i8 - 3]);
+//! }
+//!
+//! // a clean shutdown hands the (still-programmed) backend back
+//! let backend = server.shutdown()?;
+//! assert_eq!(backend.n_models(), 1);
+//! # Ok::<(), nvmcu::engine::EngineError>(())
+//! ```
+
+use super::{Backend, EngineError, ModelHandle, Result};
+use crate::metrics::{ServerStats, ServingMeter};
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, SyncSender, TryRecvError, TrySendError};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// How often the scheduler wakes from an idle wait to check for
+/// shutdown (bounds [`InferenceServer::shutdown`] latency when no
+/// requests are in flight).
+const IDLE_POLL: Duration = Duration::from_millis(25);
+
+/// The knobs of the coalescing scheduler.
+///
+/// `max_batch` trades per-request scheduling overhead (and, with a
+/// [`ShardedEngine`](super::ShardedEngine) backend, data-parallel
+/// speedup) against batching delay; `max_wait` caps how long a lone
+/// request can be held back waiting for batch-mates; `queue_depth`
+/// bounds admitted-but-unscheduled requests, converting overload into
+/// typed [`EngineError::QueueFull`] backpressure instead of unbounded
+/// memory growth.
+///
+/// ```
+/// use nvmcu::engine::BatchPolicy;
+/// use std::time::Duration;
+///
+/// let policy = BatchPolicy { max_batch: 64, ..BatchPolicy::default() };
+/// assert_eq!(policy.max_batch, 64);
+/// assert!(policy.max_wait > Duration::ZERO);
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BatchPolicy {
+    /// Dispatch a micro-batch as soon as it holds this many requests.
+    /// `1` degenerates to pass-through (no coalescing, minimum latency).
+    pub max_batch: usize,
+    /// Flush a partial micro-batch once its *oldest* request has waited
+    /// this long. `Duration::ZERO` flushes whatever is queued on every
+    /// scheduler pass (greedy coalescing).
+    pub max_wait: Duration,
+    /// Capacity of the bounded admission queue; submissions beyond it
+    /// are rejected with [`EngineError::QueueFull`].
+    pub queue_depth: usize,
+}
+
+impl Default for BatchPolicy {
+    /// Moderate coalescing: `max_batch` 32, `max_wait` 2 ms,
+    /// `queue_depth` 1024.
+    fn default() -> BatchPolicy {
+        BatchPolicy {
+            max_batch: 32,
+            max_wait: Duration::from_millis(2),
+            queue_depth: 1024,
+        }
+    }
+}
+
+impl BatchPolicy {
+    fn validate(&self) -> Result<()> {
+        if self.max_batch == 0 {
+            return Err(EngineError::InvalidConfig {
+                reason: "BatchPolicy.max_batch must be >= 1".into(),
+            });
+        }
+        if self.queue_depth == 0 {
+            return Err(EngineError::InvalidConfig {
+                reason: "BatchPolicy.queue_depth must be >= 1".into(),
+            });
+        }
+        Ok(())
+    }
+}
+
+/// One admitted request, in flight through the scheduler.
+struct Request {
+    handle: ModelHandle,
+    input: Vec<i8>,
+    /// when the request entered the admission queue (latency t=0)
+    enqueued: Instant,
+    /// per-request completion channel back to the caller
+    done: mpsc::Sender<Result<Vec<i8>>>,
+}
+
+/// A coalesced single-model batch handed from the scheduler to the
+/// dispatch thread.
+struct MicroBatch {
+    handle: ModelHandle,
+    requests: Vec<Request>,
+}
+
+/// State shared by the admission side, the scheduler, and the dispatch
+/// thread.
+struct Shared {
+    /// requests accepted into the admission queue
+    submitted: AtomicU64,
+    /// submissions rejected with `QueueFull`
+    rejected: AtomicU64,
+    /// live gauge: requests admitted but not yet handed to the
+    /// dispatcher (admission channel + per-model coalescing queues)
+    queued: AtomicUsize,
+    /// shutdown requested — the scheduler drains and exits
+    stop: AtomicBool,
+    meter: Mutex<ServingMeter>,
+}
+
+impl Shared {
+    fn new(max_batch: usize) -> Shared {
+        Shared {
+            submitted: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            queued: AtomicUsize::new(0),
+            stop: AtomicBool::new(false),
+            meter: Mutex::new(ServingMeter::new(max_batch)),
+        }
+    }
+
+    /// Lock the meter, recovering from poisoning (a panicking backend
+    /// must not take observability down with it).
+    fn meter(&self) -> MutexGuard<'_, ServingMeter> {
+        self.meter.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn snapshot(&self) -> ServerStats {
+        // clone the meter under the lock (a bounded memcpy), then sort
+        // the latency window and build the snapshot OUTSIDE it — stats
+        // polling must never stall the dispatch hot path
+        let meter = self.meter().clone();
+        meter.snapshot(
+            self.submitted.load(Ordering::Relaxed),
+            self.rejected.load(Ordering::Relaxed),
+            self.queued.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// The result slot of one submitted request.
+///
+/// Obtained from [`ServerClient::submit`]; redeem it with
+/// [`wait`](Pending::wait). Dropping a `Pending` abandons the result
+/// (the request still runs; the scheduler ignores the closed channel).
+pub struct Pending {
+    rx: mpsc::Receiver<Result<Vec<i8>>>,
+}
+
+impl Pending {
+    /// Block until the request completes; returns the model output or
+    /// the typed error the backend produced. [`EngineError::ServerStopped`]
+    /// means the server shut down before the request was scheduled.
+    pub fn wait(self) -> Result<Vec<i8>> {
+        match self.rx.recv() {
+            Ok(result) => result,
+            Err(_) => Err(EngineError::ServerStopped),
+        }
+    }
+
+    /// Like [`wait`](Pending::wait), but gives up after `timeout` with
+    /// [`EngineError::Timeout`] (the request itself keeps running; only
+    /// the caller stops waiting).
+    pub fn wait_timeout(self, timeout: Duration) -> Result<Vec<i8>> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(result) => result,
+            Err(mpsc::RecvTimeoutError::Disconnected) => Err(EngineError::ServerStopped),
+            Err(mpsc::RecvTimeoutError::Timeout) => Err(EngineError::Timeout { waited: timeout }),
+        }
+    }
+}
+
+/// A cheap, cloneable handle for submitting requests to a running
+/// [`InferenceServer`] (e.g. one per producer thread).
+#[derive(Clone)]
+pub struct ServerClient {
+    tx: SyncSender<Request>,
+    shared: Arc<Shared>,
+    depth: usize,
+}
+
+impl ServerClient {
+    /// Submit one request for the resident model `handle`. Returns
+    /// immediately with a [`Pending`] completion slot, or with typed
+    /// backpressure ([`EngineError::QueueFull`]) when the admission
+    /// queue is at capacity — never blocks, never panics.
+    pub fn submit(&self, handle: ModelHandle, input: Vec<i8>) -> Result<Pending> {
+        if self.shared.stop.load(Ordering::Relaxed) {
+            return Err(EngineError::ServerStopped);
+        }
+        let (done, rx) = mpsc::channel();
+        let req = Request { handle, input, enqueued: Instant::now(), done };
+        // gauge up BEFORE the send so the scheduler's decrement (which
+        // can only follow a successful send) never underflows it
+        self.shared.queued.fetch_add(1, Ordering::Relaxed);
+        match self.tx.try_send(req) {
+            Ok(()) => {
+                self.shared.submitted.fetch_add(1, Ordering::Relaxed);
+                Ok(Pending { rx })
+            }
+            Err(TrySendError::Full(_)) => {
+                self.shared.queued.fetch_sub(1, Ordering::Relaxed);
+                self.shared.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(EngineError::QueueFull { depth: self.depth })
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                self.shared.queued.fetch_sub(1, Ordering::Relaxed);
+                Err(EngineError::ServerStopped)
+            }
+        }
+    }
+
+    /// Submit and block for the result — the closed-loop convenience
+    /// wrapper over [`submit`](ServerClient::submit) + [`Pending::wait`].
+    pub fn infer(&self, handle: ModelHandle, input: Vec<i8>) -> Result<Vec<i8>> {
+        self.submit(handle, input)?.wait()
+    }
+
+    /// Point-in-time scheduler statistics (queue depth, batch-size
+    /// distribution, latency percentiles).
+    pub fn stats(&self) -> ServerStats {
+        self.shared.snapshot()
+    }
+}
+
+/// The dynamic-batching inference server: owns a [`Backend`] and serves
+/// single-sample requests by coalescing them into micro-batches (see the
+/// [module docs](self) for the dataflow).
+///
+/// Construct with [`start`](InferenceServer::start); submit through the
+/// server itself or through cloned [`ServerClient`]s; stop with
+/// [`shutdown`](InferenceServer::shutdown) (drains, then returns the
+/// backend) — or just drop it (drains, discards the backend).
+///
+/// ```
+/// use nvmcu::artifacts::{QLayer, QModel};
+/// use nvmcu::engine::{Backend, BatchPolicy, InferenceServer, ReferenceBackend};
+/// use nvmcu::nmcu::Requant;
+///
+/// let layer = QLayer {
+///     name: "fc".into(), k: 2, n: 1, relu: false,
+///     codes: vec![1i8, 1], bias: vec![0],
+///     requant: Requant { m0: 1 << 30, shift: 30, z_out: 0 },
+///     z_in: 0, s_in: 1.0, s_w: 1.0, s_out: 1.0,
+/// };
+/// let model = QModel { name: "sum2".into(), layers: vec![layer] };
+/// let mut backend = ReferenceBackend::new();
+/// let handle = backend.program(&model)?;
+///
+/// // max_batch = 1: the scheduler degenerates to pass-through
+/// let policy = BatchPolicy { max_batch: 1, ..BatchPolicy::default() };
+/// let server = InferenceServer::start(Box::new(backend), policy)?;
+/// for (x, want) in [(vec![1i8, 2], 3i8), (vec![5, -2], 3), (vec![-1, -1], -2)] {
+///     assert_eq!(server.infer(handle, x)?, vec![want]);
+/// }
+/// let stats = server.stats();
+/// assert_eq!(stats.completed, 3);
+/// assert_eq!(stats.batch_hist[1], 3); // three singleton batches
+/// # Ok::<(), nvmcu::engine::EngineError>(())
+/// ```
+pub struct InferenceServer {
+    client: ServerClient,
+    policy: BatchPolicy,
+    shared: Arc<Shared>,
+    scheduler: Option<JoinHandle<()>>,
+    dispatcher: Option<JoinHandle<Box<dyn Backend>>>,
+}
+
+impl InferenceServer {
+    /// Take ownership of `backend` (with its models already resident)
+    /// and start the scheduler + dispatch threads. Fails with
+    /// [`EngineError::InvalidConfig`] on a degenerate policy
+    /// (`max_batch == 0` or `queue_depth == 0`).
+    pub fn start(backend: Box<dyn Backend>, policy: BatchPolicy) -> Result<InferenceServer> {
+        policy.validate()?;
+        let shared = Arc::new(Shared::new(policy.max_batch));
+        let (tx, rx) = mpsc::sync_channel::<Request>(policy.queue_depth);
+        // rendezvous channel: the dispatch thread takes the next batch
+        // the instant it finishes the current one (the ping-pong handoff)
+        let (batch_tx, batch_rx) = mpsc::sync_channel::<MicroBatch>(0);
+
+        let spawn_err = |what: &str| EngineError::Backend {
+            backend: "server",
+            reason: format!("failed to spawn {what} thread"),
+        };
+        let shared_d = Arc::clone(&shared);
+        let dispatcher = std::thread::Builder::new()
+            .name("nvmcu-dispatch".into())
+            .spawn(move || run_dispatcher(backend, batch_rx, shared_d))
+            .map_err(|_| spawn_err("dispatch"))?;
+        let shared_s = Arc::clone(&shared);
+        let scheduler = std::thread::Builder::new()
+            .name("nvmcu-scheduler".into())
+            .spawn(move || run_scheduler(rx, batch_tx, policy, shared_s))
+            .map_err(|_| spawn_err("scheduler"))?;
+
+        let client = ServerClient { tx, shared: Arc::clone(&shared), depth: policy.queue_depth };
+        Ok(InferenceServer {
+            client,
+            policy,
+            shared,
+            scheduler: Some(scheduler),
+            dispatcher: Some(dispatcher),
+        })
+    }
+
+    /// A new submission handle (clone freely, e.g. one per producer
+    /// thread).
+    pub fn client(&self) -> ServerClient {
+        self.client.clone()
+    }
+
+    /// The policy the scheduler is running.
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
+    }
+
+    /// Submit one request (see [`ServerClient::submit`]).
+    pub fn submit(&self, handle: ModelHandle, input: Vec<i8>) -> Result<Pending> {
+        self.client.submit(handle, input)
+    }
+
+    /// Submit and block for the result (see [`ServerClient::infer`]).
+    pub fn infer(&self, handle: ModelHandle, input: Vec<i8>) -> Result<Vec<i8>> {
+        self.client.infer(handle, input)
+    }
+
+    /// Point-in-time scheduler statistics.
+    pub fn stats(&self) -> ServerStats {
+        self.shared.snapshot()
+    }
+
+    /// Stop accepting new work, drain every request already admitted
+    /// (partial batches included — nothing is stranded), join the
+    /// threads, and hand the backend back for reuse or inspection.
+    pub fn shutdown(mut self) -> Result<Box<dyn Backend>> {
+        self.shared.stop.store(true, Ordering::Relaxed);
+        let scheduler = self.scheduler.take();
+        let dispatcher = self.dispatcher.take();
+        drop(self); // closes this server's admission sender
+        let panicked = || EngineError::Backend {
+            backend: "server",
+            reason: "a server thread panicked during shutdown".into(),
+        };
+        if let Some(h) = scheduler {
+            h.join().map_err(|_| panicked())?;
+        }
+        match dispatcher {
+            Some(h) => h.join().map_err(|_| panicked()),
+            None => Err(panicked()), // unreachable: only shutdown takes it
+        }
+    }
+}
+
+impl Drop for InferenceServer {
+    /// Dropping the server is an implicit [`InferenceServer::shutdown`]
+    /// that discards the backend: admitted requests still drain, threads
+    /// are joined, nothing leaks.
+    fn drop(&mut self) {
+        self.shared.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.scheduler.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Measurement harness shared by `nvmcu bench-serve` and
+/// `rust/benches/serving.rs`: burst-submit every input in `pool` for
+/// `handle` through a fresh server over `backend`, wait for all
+/// completions, and return the wall time plus the final scheduler
+/// stats.
+///
+/// This is a benchmarking utility, not a serving path: it panics on any
+/// typed error, including queue-full — size `policy.queue_depth >=
+/// pool.len()` so the whole burst is admitted.
+pub fn burst_trial(
+    backend: Box<dyn Backend>,
+    policy: BatchPolicy,
+    handle: ModelHandle,
+    pool: &[Vec<i8>],
+) -> (Duration, ServerStats) {
+    let server = InferenceServer::start(backend, policy).expect("valid policy");
+    let t0 = Instant::now();
+    let pendings: Vec<Pending> = pool
+        .iter()
+        .map(|x| server.submit(handle, x.clone()).expect("queue sized for the burst"))
+        .collect();
+    for p in pendings {
+        p.wait().expect("burst request failed");
+    }
+    (t0.elapsed(), server.stats())
+}
+
+// ---------------------------------------------------------------------------
+// scheduler thread: admission queue -> per-model coalescing -> micro-batches
+// ---------------------------------------------------------------------------
+
+/// Per-model FIFO queues of admitted requests, keyed by handle index
+/// (BTreeMap for deterministic iteration order).
+type PendingQueues = BTreeMap<usize, VecDeque<Request>>;
+
+fn run_scheduler(
+    rx: Receiver<Request>,
+    batch_tx: SyncSender<MicroBatch>,
+    policy: BatchPolicy,
+    shared: Arc<Shared>,
+) {
+    let mut pending: PendingQueues = BTreeMap::new();
+    let mut open = true; // admission senders still connected
+    let mut dispatcher_gone = false;
+
+    'main: while open || !pending.is_empty() {
+        // 1. drain everything already admitted into the per-model queues
+        loop {
+            match rx.try_recv() {
+                Ok(req) => admit(&mut pending, req),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    open = false;
+                    break;
+                }
+            }
+        }
+        let draining = shared.stop.load(Ordering::Relaxed) || !open;
+
+        // 2. dispatch every ready micro-batch, oldest-head first
+        while let Some(key) = pick_ready(&pending, &policy, draining) {
+            let queue = pending.get_mut(&key).expect("picked key exists");
+            let take = queue.len().min(policy.max_batch);
+            let requests: Vec<Request> = queue.drain(..take).collect();
+            if queue.is_empty() {
+                pending.remove(&key);
+            }
+            // the gauge tracks waiting requests: these now leave the
+            // coalescing queues for the dispatcher
+            shared.queued.fetch_sub(take, Ordering::Relaxed);
+            let batch = MicroBatch { handle: ModelHandle::from_index(key), requests };
+            // rendezvous: blocks while the dispatcher is busy, which is
+            // exactly when arrivals should keep coalescing behind us
+            if let Err(mpsc::SendError(dead)) = batch_tx.send(batch) {
+                fail_batch(dead.requests, &EngineError::WorkerPanicked { shard: 0 }, &shared);
+                dispatcher_gone = true;
+                break 'main;
+            }
+        }
+        if draining && pending.is_empty() && !open {
+            break;
+        }
+
+        // 3. sleep until the next arrival or the earliest flush deadline
+        if draining {
+            // stop was requested while senders are still connected: take
+            // one more non-blocking pass, then exit with the queue drained
+            if pending.is_empty() {
+                break;
+            }
+            continue;
+        }
+        let wait = next_deadline(&pending, &policy).unwrap_or(IDLE_POLL).min(IDLE_POLL);
+        match rx.recv_timeout(wait) {
+            Ok(req) => admit(&mut pending, req),
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => open = false,
+        }
+    }
+
+    // final sweep: anything still admitted after the loop (e.g. racing
+    // submissions during shutdown, or a dead dispatcher) must not hang
+    // its caller
+    let err = if dispatcher_gone {
+        EngineError::WorkerPanicked { shard: 0 }
+    } else {
+        EngineError::ServerStopped
+    };
+    for (_, queue) in std::mem::take(&mut pending) {
+        shared.queued.fetch_sub(queue.len(), Ordering::Relaxed);
+        fail_batch(queue.into_iter().collect(), &err, &shared);
+    }
+    while let Ok(req) = rx.try_recv() {
+        shared.queued.fetch_sub(1, Ordering::Relaxed);
+        let _ = req.done.send(Err(err.clone()));
+    }
+}
+
+/// Move one admitted request into its model's coalescing queue. The
+/// `queued` gauge is NOT decremented here — a coalescing request is
+/// still waiting, and the gauge reports waiting requests; it drops when
+/// the request is handed to the dispatcher.
+fn admit(pending: &mut PendingQueues, req: Request) {
+    pending.entry(req.handle.index()).or_default().push_back(req);
+}
+
+/// The model whose micro-batch should dispatch now: any queue at
+/// `max_batch`, or whose oldest request has waited `max_wait` (all of
+/// them when `draining`) — oldest head wins, so no model starves.
+fn pick_ready(pending: &PendingQueues, policy: &BatchPolicy, draining: bool) -> Option<usize> {
+    let now = Instant::now();
+    let mut best: Option<(Instant, usize)> = None;
+    for (&key, queue) in pending {
+        let head = match queue.front() {
+            Some(head) => head,
+            None => continue,
+        };
+        let ready = draining
+            || queue.len() >= policy.max_batch
+            || now.duration_since(head.enqueued) >= policy.max_wait;
+        let oldest_so_far = match best {
+            None => true,
+            Some((oldest, _)) => head.enqueued < oldest,
+        };
+        if ready && oldest_so_far {
+            best = Some((head.enqueued, key));
+        }
+    }
+    best.map(|(_, key)| key)
+}
+
+/// Time until the earliest partial-batch flush deadline, `None` when
+/// nothing is pending (or `max_wait` is effectively infinite).
+fn next_deadline(pending: &PendingQueues, policy: &BatchPolicy) -> Option<Duration> {
+    let now = Instant::now();
+    pending
+        .values()
+        .filter_map(|q| q.front())
+        .filter_map(|head| head.enqueued.checked_add(policy.max_wait))
+        .map(|deadline| deadline.saturating_duration_since(now))
+        .min()
+}
+
+/// Complete every request in a failed batch with (a clone of) `err`.
+/// All completions are recorded under ONE meter lock, *before* any
+/// caller is woken — so the dispatch path pays one acquisition per
+/// batch and a stats read that follows a completed request always sees
+/// it counted.
+fn fail_batch(requests: Vec<Request>, err: &EngineError, shared: &Shared) {
+    {
+        let mut meter = shared.meter();
+        for req in &requests {
+            meter.record_completion(req.enqueued.elapsed().as_secs_f64() * 1e3, false);
+        }
+    }
+    for req in requests {
+        let _ = req.done.send(Err(err.clone()));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// dispatch thread: owns the backend, executes micro-batches
+// ---------------------------------------------------------------------------
+
+fn run_dispatcher(
+    mut backend: Box<dyn Backend>,
+    batch_rx: Receiver<MicroBatch>,
+    shared: Arc<Shared>,
+) -> Box<dyn Backend> {
+    while let Ok(batch) = batch_rx.recv() {
+        execute_batch(backend.as_mut(), batch, &shared);
+    }
+    // channel closed: the scheduler exited; hand the backend back
+    backend
+}
+
+/// Run one micro-batch. Per-request validation happens here (against the
+/// backend's own model metadata) so one malformed request gets its own
+/// typed error instead of poisoning its batch-mates.
+fn execute_batch(backend: &mut dyn Backend, batch: MicroBatch, shared: &Shared) {
+    let info = match backend.model_info(batch.handle) {
+        Some(info) => info,
+        None => {
+            let err = EngineError::InvalidHandle {
+                handle: batch.handle.index(),
+                n_models: backend.n_models(),
+            };
+            fail_batch(batch.requests, &err, shared);
+            return;
+        }
+    };
+    let (mut valid, invalid): (Vec<Request>, Vec<Request>) =
+        batch.requests.into_iter().partition(|r| r.input.len() == info.input_dim);
+    for req in invalid {
+        let err = EngineError::InputSize { expected: info.input_dim, got: req.input.len() };
+        fail_batch(vec![req], &err, shared);
+    }
+    if valid.is_empty() {
+        return;
+    }
+
+    let xs: Vec<Vec<i8>> = valid.iter_mut().map(|r| std::mem::take(&mut r.input)).collect();
+    shared.meter().record_batch(xs.len());
+    match backend.infer_batch(batch.handle, &xs) {
+        Ok(outputs) => {
+            // one meter lock for the whole batch, and record before
+            // waking any caller: a stats read that follows a completed
+            // request always sees it counted
+            {
+                let mut meter = shared.meter();
+                for req in &valid {
+                    meter.record_completion(req.enqueued.elapsed().as_secs_f64() * 1e3, true);
+                }
+            }
+            for (req, out) in valid.into_iter().zip(outputs) {
+                let _ = req.done.send(Ok(out));
+            }
+        }
+        Err(err) => fail_batch(valid, &err, shared),
+    }
+}

@@ -12,6 +12,8 @@ use crate::artifacts::QModel;
 use crate::config::ChipConfig;
 use crate::nmcu::NmcuStats;
 
+/// N replicated chips serving batches in parallel — the data-parallel
+/// [`Backend`] (see the module docs).
 pub struct ShardedEngine {
     shards: Vec<NmcuBackend>,
 }
@@ -27,6 +29,7 @@ impl ShardedEngine {
         })
     }
 
+    /// Number of replicated chips in the fleet.
     pub fn n_shards(&self) -> usize {
         self.shards.len()
     }
@@ -36,6 +39,7 @@ impl ShardedEngine {
         &self.shards[i]
     }
 
+    /// Mutable access to one shard (bake experiments, fault injection).
     pub fn shard_mut(&mut self, i: usize) -> &mut NmcuBackend {
         &mut self.shards[i]
     }

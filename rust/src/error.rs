@@ -9,6 +9,7 @@
 //! the hardware model depending on the engine layer.
 
 use std::fmt;
+use std::time::Duration;
 
 /// Everything that can go wrong while programming or serving a model.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -23,22 +24,73 @@ pub enum EngineError {
         what: String,
     },
     /// Cells failed ISPP program-verify (the region is unusable).
-    ProgramVerifyFailed { layer: String, failed_cells: u64 },
+    ProgramVerifyFailed {
+        /// layer being programmed
+        layer: String,
+        /// cells that never passed verify
+        failed_cells: u64,
+    },
     /// A layer descriptor violates the NMCU/EFLASH geometry.
-    BadDescriptor { reason: String },
+    BadDescriptor {
+        /// which constraint was violated
+        reason: String,
+    },
     /// The model handle does not name a resident model.
-    InvalidHandle { handle: usize, n_models: usize },
+    InvalidHandle {
+        /// the offending handle's index
+        handle: usize,
+        /// models actually resident
+        n_models: usize,
+    },
     /// An input vector does not match the model's input dimension.
-    InputSize { expected: usize, got: usize },
+    InputSize {
+        /// the model's input dimension
+        expected: usize,
+        /// the request's vector length
+        got: usize,
+    },
     /// An input vector does not fit the NMCU input buffer.
-    InputOverflow { capacity: usize, got: usize },
+    InputOverflow {
+        /// input-buffer capacity [elements]
+        capacity: usize,
+        /// the request's vector length
+        got: usize,
+    },
     /// A backend-specific failure (loading an HLO artifact, missing
     /// feature, PJRT init, ...).
-    Backend { backend: &'static str, reason: String },
+    Backend {
+        /// short backend name
+        backend: &'static str,
+        /// what failed
+        reason: String,
+    },
     /// Invalid engine configuration (e.g. zero shards).
-    InvalidConfig { reason: String },
+    InvalidConfig {
+        /// which knob was invalid
+        reason: String,
+    },
     /// A shard worker thread panicked mid-batch.
-    WorkerPanicked { shard: usize },
+    WorkerPanicked {
+        /// index of the shard whose worker died
+        shard: usize,
+    },
+    /// The serving admission queue is full — typed backpressure. The
+    /// caller should retry later or shed load; the server never blocks
+    /// or panics on an over-capacity burst.
+    QueueFull {
+        /// configured admission-queue capacity that was exceeded
+        depth: usize,
+    },
+    /// The request was submitted to (or was in flight on) a server that
+    /// has shut down.
+    ServerStopped,
+    /// A caller-side wait deadline elapsed before the request
+    /// completed. Unlike [`EngineError::Backend`], nothing failed — the
+    /// request is still in flight and may yet complete.
+    Timeout {
+        /// how long the caller waited
+        waited: Duration,
+    },
 }
 
 impl fmt::Display for EngineError {
@@ -69,6 +121,13 @@ impl fmt::Display for EngineError {
             EngineError::WorkerPanicked { shard } => {
                 write!(f, "shard {shard} worker thread panicked")
             }
+            EngineError::QueueFull { depth } => {
+                write!(f, "admission queue full (capacity {depth}) — retry later")
+            }
+            EngineError::ServerStopped => write!(f, "inference server has shut down"),
+            EngineError::Timeout { waited } => {
+                write!(f, "request not completed within {waited:?} (still in flight)")
+            }
         }
     }
 }
@@ -89,6 +148,10 @@ mod tests {
         let s = e.to_string();
         assert!(s.contains("mnist_mlp.fc1") && s.contains("40") && s.contains("8"));
         assert!(EngineError::InputSize { expected: 784, got: 10 }.to_string().contains("784"));
+        assert!(EngineError::QueueFull { depth: 64 }.to_string().contains("64"));
+        assert!(EngineError::ServerStopped.to_string().contains("shut down"));
+        let t = EngineError::Timeout { waited: std::time::Duration::from_secs(5) };
+        assert!(t.to_string().contains("still in flight"), "{t}");
     }
 
     #[test]

@@ -4,10 +4,12 @@
 //! zero-standby power weight memory featuring standard logic compatible
 //! 4 Mb 4-bits/cell embedded flash technology"* (ANAFLASH, EDGE AI
 //! Research Symposium 2025), grown into a servable inference engine.
+//! Start at the repository `README.md`; the design document is
+//! `ARCHITECTURE.md` at the repository root.
 //!
 //! ## Architecture
 //!
-//! Three layers (DESIGN.md):
+//! Three layers (ARCHITECTURE.md):
 //! - **L3 (this crate)**: the full microcontroller simulator — 4-bits/
 //!   cell EFLASH device model ([`eflash`]), analog subsystems (HV charge
 //!   pump, overstress-free WL driver, [`analog`]), the near-memory
@@ -28,6 +30,13 @@
 //! [`engine::ShardedEngine`], which replicates the chip N ways and fans
 //! batches across worker threads.
 //!
+//! On top sits the dynamic-batching scheduler
+//! ([`engine::InferenceServer`]): single-sample requests in on a bounded
+//! admission queue, coalesced per-model micro-batches out to any
+//! backend, typed [`engine::EngineError::QueueFull`] backpressure, and
+//! [`metrics::ServerStats`] observability (queue depth, batch-size
+//! distribution, latency percentiles).
+//!
 //! Migrating from the old single-sample API:
 //!
 //! ```text
@@ -40,8 +49,12 @@
 //!
 //! `Chip::program_model`/`Chip::infer` still exist for device-level
 //! experiments (bake, Vt histograms, ablations) but are now fallible;
-//! serving code should go through [`engine::Engine`] or a
-//! [`engine::Backend`]. Start with `examples/quickstart.rs`.
+//! serving code should go through [`engine::Engine`], a
+//! [`engine::Backend`], or — for request streams — an
+//! [`engine::InferenceServer`]. Start with `examples/quickstart.rs` and
+//! `examples/serving.rs`.
+
+#![warn(missing_docs)]
 
 pub mod analog;
 pub mod artifacts;

@@ -8,6 +8,12 @@
 //!   infer       serve MNIST inferences through the engine API
 //!               (--backend nmcu|reference|hlo, --batch <n>,
 //!                --shards <n>, --index <i>)
+//!   serve       open-loop workload through the dynamic-batching
+//!               InferenceServer (--backend, --shards, --requests <n>,
+//!               --rate <req/s>, --max-batch, --max-wait-us,
+//!               --queue-depth)
+//!   bench-serve compare batch=1 vs coalesced vs coalesced+sharded
+//!               scheduling on the same burst workload
 //!   pump        charge pump transient only
 //!   retention   bake-time sweep of decode errors + accuracy
 //!   info        chip configuration summary
@@ -17,13 +23,20 @@
 
 use nvmcu::analog::{ChargePump, DriverKind, PumpMode, WlDriver, WlOp};
 use nvmcu::artifacts;
+use nvmcu::artifacts::QModel;
 use nvmcu::config::ChipConfig;
 use nvmcu::coordinator::{experiments, Chip};
 use nvmcu::eflash::mapping::StateMapping;
-use nvmcu::engine::{Backend, BackendKind, Engine, NmcuBackend};
+use nvmcu::engine::{
+    Backend, BackendKind, BatchPolicy, Engine, InferenceServer, NmcuBackend, ShardedEngine,
+};
 use nvmcu::metrics;
+use nvmcu::metrics::ServerStats;
 use nvmcu::util::bench::Table;
 use nvmcu::util::cli::Args;
+use nvmcu::util::rng::Rng;
+use nvmcu::util::workload;
+use std::time::{Duration, Instant};
 
 fn chip_config(args: &Args) -> ChipConfig {
     let mut cfg = ChipConfig::new();
@@ -55,15 +68,21 @@ fn main() {
         "fig5" => cmd_fig5(&args),
         "fig6" => cmd_fig6(&args),
         "infer" => cmd_infer(&args),
+        "serve" => cmd_serve(&args),
+        "bench-serve" => cmd_bench_serve(&args),
         "pump" => cmd_pump(&args),
         "retention" => cmd_retention(&args),
         "info" => cmd_info(&args),
         _ => {
             println!(
                 "nvmcu — 28nm AI microcontroller with 4-bits/cell EFLASH (reproduction)\n\
-                 usage: nvmcu <table1|table2|fig5|fig6|infer|pump|retention|info> [options]\n\
+                 usage: nvmcu <table1|table2|fig5|fig6|infer|serve|bench-serve|pump|retention\
+                 |info> [options]\n\
                  options: --config <json> --set k=v[,k=v] --artifacts <dir> --seed <n>\n\
-                 infer:   --backend nmcu|reference|hlo --batch <n> --shards <n> --index <i>"
+                 infer:   --backend nmcu|reference|hlo --batch <n> --shards <n> --index <i>\n\
+                 serve:   --backend --shards --requests <n> --rate <req/s> --max-batch <n>\n\
+                 \x20        --max-wait-us <us> --queue-depth <n>\n\
+                 bench-serve: --requests <n> --shards <n> --max-batch <n>"
             );
         }
     }
@@ -278,6 +297,215 @@ fn cmd_infer(args: &Args) {
             st.bus_bytes as f64 / per
         );
     }
+}
+
+/// The MNIST-shaped synthetic model (784 -> 43 -> 10) used by `serve`
+/// and `bench-serve` when no artifacts are on disk: same geometry and
+/// EFLASH footprint as the real MNIST MLP, random int4 weights.
+fn synthetic_model(r: &mut Rng) -> QModel {
+    nvmcu::datasets::synthetic_qmodel(r, "synthetic-mnist", 784, 43, 10)
+}
+
+/// The serving policy from the CLI options (defaults match
+/// `BatchPolicy::default()` except where flags say otherwise).
+fn serve_policy(args: &Args) -> BatchPolicy {
+    let d = BatchPolicy::default();
+    BatchPolicy {
+        max_batch: args.opt_usize("max-batch", d.max_batch),
+        max_wait: Duration::from_micros(
+            args.opt_u64("max-wait-us", d.max_wait.as_micros() as u64),
+        ),
+        queue_depth: args.opt_usize("queue-depth", d.queue_depth),
+    }
+}
+
+/// Drive an open-loop Poisson-ish workload through the dynamic-batching
+/// [`InferenceServer`].
+///
+///   --backend nmcu|reference|hlo   substrate (default nmcu)
+///   --shards <n>                   replicate the chip n ways (nmcu only)
+///   --requests <n>                 workload size (default 512)
+///   --rate <req/s>                 mean Poisson arrival rate (default
+///                                  2000; 0 = instantaneous burst)
+///   --max-batch/--max-wait-us/--queue-depth   the BatchPolicy
+///
+/// Uses the real MNIST model + test set when artifacts are present,
+/// otherwise a synthetic MNIST-shaped model. Arrivals and inputs are
+/// deterministic in --seed.
+fn cmd_serve(args: &Args) {
+    let cfg = chip_config(args);
+    let dir = art_dir(args);
+    fn fail(e: nvmcu::engine::EngineError) -> ! {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+    let kind: BackendKind = args.opt_or("backend", "nmcu").parse().unwrap_or_else(|e| fail(e));
+    let shards = args.opt_usize("shards", 1).max(1);
+    let n_req = args.opt_usize("requests", 512);
+    let rate = args.opt_f64("rate", 2000.0);
+    let policy = serve_policy(args);
+
+    // model + request pool: real artifacts when available, synthetic
+    // MNIST-shaped otherwise (so `serve` runs in a bare checkout)
+    let mut r = Rng::new(cfg.seed);
+    let (model, pool) = match experiments::load_table1_inputs(&dir) {
+        Ok(inputs) => {
+            let n = inputs.mnist_test.len();
+            let pool: Vec<Vec<i8>> =
+                (0..n_req).map(|i| inputs.mnist_test.image_q(i % n)).collect();
+            (inputs.mnist_model, pool)
+        }
+        Err(_) => {
+            println!("(no artifacts found — serving a synthetic MNIST-shaped model)");
+            let model = synthetic_model(&mut r);
+            let pool = workload::random_inputs(&mut r, n_req, 784);
+            (model, pool)
+        }
+    };
+
+    let mut engine = if shards > 1 {
+        if kind != BackendKind::Nmcu {
+            eprintln!("error: --shards requires --backend nmcu");
+            std::process::exit(1);
+        }
+        Engine::sharded(&cfg, shards).unwrap_or_else(|e| fail(e))
+    } else {
+        Engine::from_kind(kind, &cfg, &dir).unwrap_or_else(|e| fail(e))
+    };
+    let backend_name = engine.backend_name();
+    let h = engine.program(&model).unwrap_or_else(|e| fail(e));
+    let server =
+        InferenceServer::start(engine.into_backend(), policy).unwrap_or_else(|e| fail(e));
+
+    println!(
+        "serving {n_req} requests at ~{rate:.0}/s against {backend_name} \
+         (shards {shards}) | max_batch {} max_wait {:?} queue_depth {}",
+        policy.max_batch, policy.max_wait, policy.queue_depth
+    );
+    let offsets = workload::arrival_offsets(&mut r, n_req, rate);
+    let t0 = Instant::now();
+    let mut pendings = Vec::with_capacity(n_req);
+    let mut rejected = 0usize;
+    for (x, off) in pool.into_iter().zip(offsets) {
+        let target = t0 + off;
+        let now = Instant::now();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        match server.submit(h, x) {
+            Ok(p) => pendings.push(p),
+            Err(nvmcu::engine::EngineError::QueueFull { .. }) => rejected += 1,
+            Err(e) => fail(e),
+        }
+    }
+    let mut ok = 0usize;
+    let mut failed = 0usize;
+    for p in pendings {
+        match p.wait() {
+            Ok(_) => ok += 1,
+            Err(_) => failed += 1,
+        }
+    }
+    let wall = t0.elapsed();
+
+    println!("{}", server.stats().summary());
+    println!(
+        "wall {:.1} ms | completed {:.0} req/s | {ok} ok, {failed} failed, \
+         {rejected} shed at admission",
+        wall.as_secs_f64() * 1e3,
+        ok as f64 / wall.as_secs_f64().max(1e-12),
+    );
+    let backend = server.shutdown().unwrap_or_else(|e| fail(e));
+    let st = backend.stats();
+    if st.eflash_reads > 0 && ok > 0 {
+        let e = metrics::nmcu_energy(&st, &cfg.power);
+        println!(
+            "per inference: {:.0} eflash reads, {:.0} MACs, est. energy {:.2} uJ, \
+             modeled latency {:.1} us",
+            st.eflash_reads as f64 / ok as f64,
+            st.mac_ops as f64 / ok as f64,
+            e.total_uj() / ok as f64,
+            metrics::nmcu_latency_s(&st, &cfg) * 1e6 / ok as f64
+        );
+    }
+}
+
+/// One bench-serve trial: burst-submit `pool` through an
+/// [`InferenceServer`] over a fresh `n_shards`-chip backend with the
+/// given `max_batch`, wait for every completion, return (wall, stats).
+fn run_serving_trial(
+    cfg: &ChipConfig,
+    model: &QModel,
+    pool: &[Vec<i8>],
+    n_shards: usize,
+    max_batch: usize,
+) -> (Duration, ServerStats) {
+    let mut backend: Box<dyn Backend> = if n_shards > 1 {
+        Box::new(ShardedEngine::new(cfg, n_shards).expect("shards"))
+    } else {
+        Box::new(NmcuBackend::new(cfg))
+    };
+    let h = backend.program(model).expect("program");
+    let policy = BatchPolicy {
+        max_batch,
+        max_wait: Duration::from_micros(200),
+        // sized for the whole burst: this trial measures scheduling, not
+        // admission-control shedding
+        queue_depth: pool.len().max(1),
+    };
+    nvmcu::engine::server::burst_trial(backend, policy, h, pool)
+}
+
+/// Compare naive batch=1 dispatch, coalesced scheduling, and coalesced +
+/// sharded serving on the same burst workload (deterministic in --seed).
+///
+///   --requests <n>    workload size (default 384)
+///   --shards <n>      fleet size for the sharded rows (default 4)
+///   --max-batch <n>   coalescing limit (default 64)
+fn cmd_bench_serve(args: &Args) {
+    let cfg = chip_config(args);
+    let n_req = args.opt_usize("requests", 384);
+    let shards = args.opt_usize("shards", 4).max(2);
+    let max_batch = args.opt_usize("max-batch", 64).max(2);
+    let mut r = Rng::new(cfg.seed);
+    let model = synthetic_model(&mut r);
+    let pool = workload::random_inputs(&mut r, n_req, 784);
+
+    println!(
+        "bench-serve: {n_req}-request burst, MNIST-shaped synthetic model, \
+         coalescing up to {max_batch}\n"
+    );
+    let modes: [(String, usize, usize); 4] = [
+        ("batch=1, 1 chip".into(), 1, 1),
+        (format!("coalesced<={max_batch}, 1 chip"), 1, max_batch),
+        (format!("batch=1, {shards} shards"), shards, 1),
+        (format!("coalesced<={max_batch}, {shards} shards"), shards, max_batch),
+    ];
+    let mut t = Table::new(&[
+        "mode", "req/s", "speedup", "mean batch", "p50 ms", "p95 ms", "p99 ms",
+    ]);
+    let mut baseline_rps = 0.0f64;
+    for (label, n_shards, mb) in &modes {
+        let (wall, stats) = run_serving_trial(&cfg, &model, &pool, *n_shards, *mb);
+        let rps = n_req as f64 / wall.as_secs_f64().max(1e-12);
+        if baseline_rps == 0.0 {
+            baseline_rps = rps;
+        }
+        t.row(&[
+            label.clone(),
+            format!("{rps:.0}"),
+            format!("{:.2}x", rps / baseline_rps),
+            format!("{:.1}", stats.mean_batch()),
+            format!("{:.2}", stats.p50_ms),
+            format!("{:.2}", stats.p95_ms),
+            format!("{:.2}", stats.p99_ms),
+        ]);
+    }
+    t.print();
+    println!(
+        "\ncoalescing is what unlocks the fleet: batch=1 keeps {shards} shards \
+         as idle as 1 chip; micro-batches fan across all of them."
+    );
 }
 
 fn cmd_pump(args: &Args) {

@@ -1,13 +1,18 @@
-//! Energy / latency / standby-power models and the Table 2 comparison
-//! framework.
+//! Energy / latency / standby-power models, the Table 2 comparison
+//! framework, and the serving-side observability types
+//! ([`ServerStats`], [`ServingMeter`] — see [`serving`]).
 //!
 //! Absolute joules are 28 nm-LP *estimates* (constants in
-//! `config::PowerConfig`, sources documented there and in DESIGN.md §2);
+//! `config::PowerConfig`, sources documented there and in ARCHITECTURE.md);
 //! what the paper's comparison actually rests on — and what these models
 //! preserve — are the *relative* properties: non-volatility (zero
 //! standby), 4 bits per cell (4x fewer cells and reads than 1 bit/cell),
 //! no extra process steps, and near-memory compute (no weight movement
 //! over the bus).
+
+pub mod serving;
+
+pub use serving::{ServerStats, ServingMeter};
 
 use crate::config::{ChipConfig, PowerConfig};
 use crate::nmcu::NmcuStats;
@@ -15,17 +20,23 @@ use crate::nmcu::NmcuStats;
 /// Energy breakdown of a workload [pJ].
 #[derive(Clone, Copy, Debug, Default)]
 pub struct EnergyBreakdown {
+    /// MAC array energy [pJ]
     pub mac_pj: f64,
+    /// EFLASH row-read energy [pJ]
     pub eflash_read_pj: f64,
+    /// system-bus transfer energy [pJ]
     pub bus_pj: f64,
+    /// ping-pong SRAM write-back energy [pJ]
     pub writeback_pj: f64,
 }
 
 impl EnergyBreakdown {
+    /// Total energy [pJ].
     pub fn total_pj(&self) -> f64 {
         self.mac_pj + self.eflash_read_pj + self.bus_pj + self.writeback_pj
     }
 
+    /// Total energy [uJ].
     pub fn total_uj(&self) -> f64 {
         self.total_pj() * 1e-6
     }
@@ -50,13 +61,21 @@ pub fn nmcu_latency_s(stats: &NmcuStats, cfg: &ChipConfig) -> f64 {
 /// One row of the Table 2 comparison.
 #[derive(Clone, Debug)]
 pub struct CompareRow {
+    /// design label (citation key + technology)
     pub name: &'static str,
+    /// process node [nm]
     pub process_nm: u32,
+    /// needs process steps beyond standard logic (extra masks)
     pub process_overhead: bool,
+    /// weight-memory storage density [bits/cell]
     pub bits_per_cell: u32,
+    /// weight-memory technology (SRAM / MRAM / EFLASH)
     pub memory_kind: &'static str,
+    /// weights survive power-off
     pub non_volatile: bool,
+    /// activation precision as published
     pub activation_bits: &'static str,
+    /// weight precision as published
     pub weight_bits: &'static str,
     /// measured/estimated standby power holding a 17 KB (34K x 4b) model
     pub standby_uw: f64,

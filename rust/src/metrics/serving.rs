@@ -1,0 +1,276 @@
+//! Serving-side observability: the metrics the dynamic-batching
+//! scheduler ([`crate::engine::InferenceServer`]) records about itself.
+//!
+//! The device-side counters ([`crate::nmcu::NmcuStats`]) describe what
+//! the chip did; these describe how well the *scheduler* kept it fed —
+//! admission-queue depth, how large the coalesced micro-batches actually
+//! were, and the request-latency tail. A deployment is tuned by looking
+//! at both: a fleet at 100% utilization with a p99 of seconds is as
+//! broken as an idle one.
+//!
+//! [`ServingMeter`] is the accumulator the scheduler threads write into;
+//! [`ServerStats`] is the immutable snapshot handed to callers.
+//!
+//! ```
+//! use nvmcu::metrics::ServingMeter;
+//!
+//! let mut meter = ServingMeter::new(8);
+//! meter.record_batch(3);
+//! meter.record_batch(8);
+//! for ms in [1.0, 2.0, 10.0] {
+//!     meter.record_latency_ms(ms);
+//! }
+//! let stats = meter.snapshot(3, 0, 0);
+//! assert_eq!(stats.batches, 2);
+//! assert_eq!(stats.completed, 3);
+//! assert!((stats.mean_batch() - 5.5).abs() < 1e-9);
+//! assert!(stats.p50_ms <= stats.p95_ms && stats.p95_ms <= stats.p99_ms);
+//! ```
+
+use crate::util::stats::percentile_of_sorted;
+
+/// Cap on retained latency samples: the percentile window covers the
+/// most recent `LATENCY_WINDOW` completions (a ring buffer, so a
+/// long-running server reports *recent* tail latency, not all-time).
+pub const LATENCY_WINDOW: usize = 8192;
+
+/// Cap on individually-tracked batch-size buckets. Policies with a
+/// larger `max_batch` still work — dispatched sizes above the cap just
+/// clamp into the top bucket — but the histogram allocation stays
+/// bounded no matter what `max_batch` a caller asks for.
+pub const MAX_TRACKED_BATCH: usize = 4096;
+
+/// Accumulator for scheduler observations. One instance lives behind a
+/// mutex shared by the scheduler and dispatch threads; it is deliberately
+/// cheap to update (two vector writes per batch).
+#[derive(Clone, Debug)]
+pub struct ServingMeter {
+    /// `batch_hist[s]` = number of dispatched micro-batches of size `s`
+    /// (index 0 is unused; sizes are 1..=max_batch).
+    batch_hist: Vec<u64>,
+    /// ring buffer of per-request latencies [ms], completion-ordered
+    latencies_ms: Vec<f64>,
+    /// next write position in the ring
+    cursor: usize,
+    /// completions whose result was a typed error
+    failed: u64,
+    /// total requests completed (ok or err)
+    completed: u64,
+}
+
+impl ServingMeter {
+    /// A meter for batches up to `max_batch` requests (bucket count
+    /// capped at [`MAX_TRACKED_BATCH`]; larger sizes clamp into the top
+    /// bucket).
+    pub fn new(max_batch: usize) -> ServingMeter {
+        ServingMeter {
+            batch_hist: vec![0; max_batch.min(MAX_TRACKED_BATCH) + 1],
+            latencies_ms: Vec::new(),
+            cursor: 0,
+            failed: 0,
+            completed: 0,
+        }
+    }
+
+    /// Record one dispatched micro-batch of `size` requests. Sizes above
+    /// the meter's `max_batch` clamp into the top bucket (defensive —
+    /// the scheduler never forms one).
+    pub fn record_batch(&mut self, size: usize) {
+        let top = self.batch_hist.len() - 1;
+        self.batch_hist[size.min(top)] += 1;
+    }
+
+    /// Record one completed request: queue-entry to completion latency,
+    /// and whether the result was a typed error.
+    pub fn record_completion(&mut self, latency_ms: f64, ok: bool) {
+        self.record_latency_ms(latency_ms);
+        if !ok {
+            self.failed += 1;
+        }
+    }
+
+    /// Record one request latency [ms] (ring buffer of the most recent
+    /// [`LATENCY_WINDOW`] samples).
+    pub fn record_latency_ms(&mut self, ms: f64) {
+        self.completed += 1;
+        if self.latencies_ms.len() < LATENCY_WINDOW {
+            self.latencies_ms.push(ms);
+        } else {
+            self.latencies_ms[self.cursor] = ms;
+            self.cursor = (self.cursor + 1) % LATENCY_WINDOW;
+        }
+    }
+
+    /// Freeze a [`ServerStats`] snapshot. The submission-side counters
+    /// (`submitted`, `rejected`) and the live queue-depth gauge are
+    /// owned by the admission side, so the caller passes them in.
+    /// The latency window is sorted once for all three percentiles.
+    pub fn snapshot(&self, submitted: u64, rejected: u64, queue_depth: usize) -> ServerStats {
+        let mut sorted = self.latencies_ms.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+        ServerStats {
+            submitted,
+            rejected,
+            completed: self.completed,
+            failed: self.failed,
+            batches: self.batch_hist.iter().sum(),
+            queue_depth,
+            batch_hist: self.batch_hist.clone(),
+            p50_ms: percentile_of_sorted(&sorted, 50.0),
+            p95_ms: percentile_of_sorted(&sorted, 95.0),
+            p99_ms: percentile_of_sorted(&sorted, 99.0),
+        }
+    }
+}
+
+/// Point-in-time snapshot of a running [`crate::engine::InferenceServer`].
+///
+/// Percentiles are computed over the most recent [`LATENCY_WINDOW`]
+/// completions and are `NaN` until the first request completes.
+#[derive(Clone, Debug)]
+pub struct ServerStats {
+    /// requests accepted into the admission queue
+    pub submitted: u64,
+    /// requests rejected with [`crate::error::EngineError::QueueFull`]
+    pub rejected: u64,
+    /// requests completed (ok or typed error)
+    pub completed: u64,
+    /// completed requests whose result was a typed error
+    pub failed: u64,
+    /// micro-batches dispatched to the backend
+    pub batches: u64,
+    /// requests waiting right now: admitted (bounded queue + per-model
+    /// coalescing queues) but not yet handed to the backend
+    pub queue_depth: usize,
+    /// `batch_hist[s]` = micro-batches dispatched with `s` requests
+    /// (index 0 unused)
+    pub batch_hist: Vec<u64>,
+    /// median request latency, queue entry to completion [ms]
+    pub p50_ms: f64,
+    /// 95th-percentile request latency [ms]
+    pub p95_ms: f64,
+    /// 99th-percentile request latency [ms]
+    pub p99_ms: f64,
+}
+
+impl ServerStats {
+    /// Mean dispatched micro-batch size (`NaN` before the first batch).
+    pub fn mean_batch(&self) -> f64 {
+        let batches: u64 = self.batch_hist.iter().sum();
+        if batches == 0 {
+            return f64::NAN;
+        }
+        let requests: u64 =
+            self.batch_hist.iter().enumerate().map(|(s, &c)| s as u64 * c).sum();
+        requests as f64 / batches as f64
+    }
+
+    /// Largest micro-batch size dispatched so far (0 before the first).
+    pub fn max_batch_seen(&self) -> usize {
+        self.batch_hist.iter().rposition(|&c| c > 0).unwrap_or(0)
+    }
+
+    /// One-line human summary (the `serve` CLI prints this).
+    pub fn summary(&self) -> String {
+        format!(
+            "submitted {} | rejected {} | completed {} ({} failed) | \
+             {} batches (mean {:.1}, max {}) | queue {} | \
+             latency p50 {:.2} ms p95 {:.2} ms p99 {:.2} ms",
+            self.submitted,
+            self.rejected,
+            self.completed,
+            self.failed,
+            self.batches,
+            self.mean_batch(),
+            self.max_batch_seen(),
+            self.queue_depth,
+            self.p50_ms,
+            self.p95_ms,
+            self.p99_ms,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn absurd_max_batch_does_not_allocate_absurdly() {
+        // a hostile/typo'd policy must not OOM or overflow the bucket
+        // count; oversized dispatches clamp into the top bucket
+        let mut m = ServingMeter::new(usize::MAX);
+        m.record_batch(usize::MAX);
+        m.record_batch(3);
+        let s = m.snapshot(0, 0, 0);
+        assert_eq!(s.batch_hist.len(), MAX_TRACKED_BATCH + 1);
+        assert_eq!(s.batch_hist[MAX_TRACKED_BATCH], 1);
+        assert_eq!(s.batch_hist[3], 1);
+    }
+
+    #[test]
+    fn batch_histogram_and_mean() {
+        let mut m = ServingMeter::new(4);
+        m.record_batch(1);
+        m.record_batch(4);
+        m.record_batch(4);
+        m.record_batch(9); // clamps into the top bucket
+        let s = m.snapshot(0, 0, 0);
+        assert_eq!(s.batches, 4);
+        assert_eq!(s.batch_hist[1], 1);
+        assert_eq!(s.batch_hist[4], 3);
+        assert_eq!(s.max_batch_seen(), 4);
+        assert!((s.mean_batch() - 13.0 / 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_percentiles_ordered() {
+        let mut m = ServingMeter::new(8);
+        for i in 0..100 {
+            m.record_completion(i as f64, true);
+        }
+        let s = m.snapshot(100, 0, 0);
+        assert_eq!(s.completed, 100);
+        assert_eq!(s.failed, 0);
+        assert!(s.p50_ms <= s.p95_ms && s.p95_ms <= s.p99_ms);
+        assert!((s.p50_ms - 49.5).abs() < 1.0, "p50={}", s.p50_ms);
+    }
+
+    #[test]
+    fn latency_ring_keeps_recent_window() {
+        let mut m = ServingMeter::new(2);
+        // overfill the window with slow samples, then refill with fast
+        for _ in 0..LATENCY_WINDOW {
+            m.record_latency_ms(1000.0);
+        }
+        for _ in 0..LATENCY_WINDOW {
+            m.record_latency_ms(1.0);
+        }
+        let s = m.snapshot(0, 0, 0);
+        assert_eq!(s.completed, 2 * LATENCY_WINDOW as u64);
+        assert!(s.p99_ms <= 1.0 + 1e-9, "old samples leaked: p99={}", s.p99_ms);
+    }
+
+    #[test]
+    fn empty_meter_snapshot_is_sane() {
+        let s = ServingMeter::new(8).snapshot(0, 0, 3);
+        assert_eq!(s.batches, 0);
+        assert_eq!(s.queue_depth, 3);
+        assert!(s.p50_ms.is_nan());
+        assert!(s.mean_batch().is_nan());
+        assert_eq!(s.max_batch_seen(), 0);
+        // the summary must render even with no data
+        assert!(s.summary().contains("queue 3"));
+    }
+
+    #[test]
+    fn failed_completions_counted() {
+        let mut m = ServingMeter::new(2);
+        m.record_completion(5.0, false);
+        m.record_completion(5.0, true);
+        let s = m.snapshot(2, 1, 0);
+        assert_eq!(s.failed, 1);
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.rejected, 1);
+    }
+}

@@ -17,10 +17,12 @@ pub struct PingPong {
     active: usize,
     /// bytes written to each half over the run (data-movement accounting)
     pub bytes_written: u64,
+    /// bytes read back out of the buffer over the run
     pub bytes_read: u64,
 }
 
 impl PingPong {
+    /// A zeroed double buffer with `capacity` int8 slots per half.
     pub fn new(capacity: usize) -> Self {
         PingPong {
             half: [vec![0; capacity], vec![0; capacity]],
@@ -30,6 +32,7 @@ impl PingPong {
         }
     }
 
+    /// Capacity of one half [elements].
     pub fn capacity(&self) -> usize {
         self.half[0].len()
     }
@@ -61,6 +64,7 @@ impl PingPong {
         self.active = 1 - self.active;
     }
 
+    /// Account `n` bytes read out of the buffer.
     pub fn note_read(&mut self, n: usize) {
         self.bytes_read += n as u64;
     }
@@ -69,23 +73,29 @@ impl PingPong {
 /// Where the next layer's input comes from.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FetchSource {
+    /// the host-loaded input buffer (first layer)
     InputBuffer,
+    /// the ping-pong read side (subsequent layers)
     PingPong,
 }
 
 /// The input fetcher: supplies 128-element input slices to the PEs.
 #[derive(Clone, Debug)]
 pub struct Fetcher {
+    /// the host-visible input buffer contents
     pub input: Vec<i8>,
+    /// which buffer feeds the current layer
     pub source: FetchSource,
     /// pad value for slices past the end of the vector: the input's
     /// zero-point (real 0), so padded lanes contribute z_x * w — exactly
     /// what the bias correction term expects
     pub pad: i8,
+    /// logical length of the loaded input vector
     pub input_len: usize,
 }
 
 impl Fetcher {
+    /// A fetcher with a zeroed `capacity`-element input buffer.
     pub fn new(capacity: usize) -> Self {
         Fetcher {
             input: vec![0; capacity],

@@ -31,15 +31,19 @@ pub struct LayerDesc {
     pub n: usize,
     /// int32 bias with the z_in correction folded (artifact `bias_q`)
     pub bias: Vec<i32>,
+    /// write-back requantization parameters
     pub requant: Requant,
+    /// apply quantized ReLU on write-back
     pub relu: bool,
 }
 
 impl LayerDesc {
+    /// K-dimension tiles per output column pair (one EFLASH read each).
     pub fn k_tiles(&self, lanes: usize) -> usize {
         self.k.div_ceil(lanes)
     }
 
+    /// Output column pairs (two columns share one EFLASH row).
     pub fn col_pairs(&self) -> usize {
         self.n.div_ceil(2)
     }
@@ -84,16 +88,22 @@ pub fn layout_codes(w: &[i8], k: usize, n: usize, lanes: usize) -> Vec<i8> {
 /// Execution statistics (feed the cycle/energy models and the ablations).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct NmcuStats {
+    /// EFLASH row reads issued
     pub eflash_reads: u64,
+    /// MAC operations executed (physical padded-lane count)
     pub mac_ops: u64,
+    /// int8 outputs written back to the ping-pong buffer
     pub writebacks: u64,
+    /// modeled NMCU clock cycles
     pub cycles: u64,
     /// bytes that crossed the system bus into/out of the NMCU
     pub bus_bytes: u64,
+    /// layer launches completed
     pub layers_run: u64,
 }
 
 impl NmcuStats {
+    /// Accumulate another counter set into this one (shard merging).
     pub fn add(&mut self, o: &NmcuStats) {
         self.eflash_reads += o.eflash_reads;
         self.mac_ops += o.mac_ops;
@@ -106,10 +116,15 @@ impl NmcuStats {
 
 /// The near-memory computing unit.
 pub struct Nmcu {
+    /// geometry and clock the unit was built with
     pub cfg: crate::config::NmcuConfig,
+    /// the processing elements (paper: 2, one per EFLASH half-row)
     pub pes: Vec<Pe>,
+    /// the double-buffered activation store
     pub pingpong: PingPong,
+    /// the input fetcher feeding the PEs
     pub fetcher: Fetcher,
+    /// execution counters
     pub stats: NmcuStats,
     /// scratch row buffer (one EFLASH read)
     row_buf: Vec<i8>,
@@ -118,6 +133,7 @@ pub struct Nmcu {
 }
 
 impl Nmcu {
+    /// Build the unit from its configuration (buffers zeroed).
     pub fn new(cfg: &crate::config::NmcuConfig) -> Self {
         Nmcu {
             cfg: cfg.clone(),

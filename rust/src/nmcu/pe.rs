@@ -35,12 +35,14 @@ pub fn mac_lanes(x: &[i8], w: &[i8]) -> i32 {
 /// A processing element with its accumulator bank.
 #[derive(Clone, Debug)]
 pub struct Pe {
+    /// MAC lanes (128: one EFLASH half-row per cycle)
     pub lanes: usize,
     /// MACs executed (for the cycle/energy model)
     pub mac_ops: u64,
 }
 
 impl Pe {
+    /// A PE with `lanes` MAC lanes and a zeroed counter.
     pub fn new(lanes: usize) -> Self {
         Pe { lanes, mac_ops: 0 }
     }

@@ -14,6 +14,7 @@ use std::path::Path;
 /// A compiled HLO module ready to execute.
 pub struct HloExecutable {
     exe: xla::PjRtLoadedExecutable,
+    /// artifact stem the module was loaded from
     pub name: String,
 }
 
@@ -23,11 +24,13 @@ pub struct Runtime {
 }
 
 impl Runtime {
+    /// Create the PJRT CPU client.
     pub fn cpu() -> Result<Self> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         Ok(Runtime { client })
     }
 
+    /// PJRT platform name (e.g. `cpu`).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

@@ -2,29 +2,42 @@
 //! mem-to-mem engine with a register file; copies execute synchronously
 //! and the cycle model charges one bus beat per byte.
 
+/// Register offsets within the DMA aperture.
 pub mod reg {
+    /// source address
     pub const SRC: u32 = 0x00;
+    /// destination address
     pub const DST: u32 = 0x04;
+    /// transfer length [bytes]
     pub const LEN: u32 = 0x08;
     /// write 1: start (copy completes immediately; STATUS reads done)
     pub const CTRL: u32 = 0x0C;
+    /// completion status (always 1 in the synchronous model)
     pub const STATUS: u32 = 0x10;
 }
 
+/// The single-channel DMA engine and its register file.
 #[derive(Clone, Debug, Default)]
 pub struct Dma {
+    /// SRC register
     pub src: u32,
+    /// DST register
     pub dst: u32,
+    /// LEN register [bytes]
     pub len: u32,
+    /// lifetime bytes copied
     pub bytes_copied: u64,
+    /// lifetime transfers started
     pub transfers: u64,
 }
 
 impl Dma {
+    /// A quiesced DMA engine with zeroed registers.
     pub fn new() -> Self {
         Dma::default()
     }
 
+    /// Read one 32-bit register.
     pub fn read32(&self, off: u32) -> u32 {
         match off {
             reg::SRC => self.src,
@@ -47,6 +60,7 @@ impl Dma {
         None
     }
 
+    /// Account one completed copy in the lifetime statistics.
     pub fn note_copy(&mut self, len: u32) {
         self.bytes_copied += len as u64;
         self.transfers += 1;

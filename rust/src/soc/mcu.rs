@@ -19,19 +19,30 @@ pub enum RunExit {
     /// step budget exhausted
     OutOfFuel,
     /// illegal instruction
-    Illegal { raw: u32, pc: u32 },
+    Illegal {
+        /// the raw instruction word
+        raw: u32,
+        /// where it was fetched
+        pc: u32,
+    },
 }
 
+/// The complete microcontroller (core + bus + NMCU + weight EFLASH).
 pub struct Mcu {
+    /// the RV32I core
     pub cpu: Cpu,
+    /// SoC bus: SRAM, boot flash, peripherals, NMCU register file
     pub bus: SocBus,
+    /// the 4-bits/cell weight memory
     pub eflash: EflashMacro,
+    /// the near-memory computing unit
     pub nmcu: Nmcu,
     /// NMCU launches serviced (one per custom-0 / CTRL launch)
     pub launches: u64,
 }
 
 impl Mcu {
+    /// Fabricate a complete MCU from the chip configuration.
     pub fn new(cfg: &ChipConfig) -> Self {
         Mcu {
             cpu: Cpu::new(map::SRAM_BASE),

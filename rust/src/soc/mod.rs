@@ -15,9 +15,11 @@ use crate::cpu::Mem;
 pub mod map {
     /// instruction/data SRAM (256 KB)
     pub const SRAM_BASE: u32 = 0x1000_0000;
+    /// SRAM size [bytes]
     pub const SRAM_SIZE: u32 = 256 * 1024;
     /// 128 Kb boot/code EFLASH (16 KB, read-only to the core)
     pub const BOOT_BASE: u32 = 0x2000_0000;
+    /// boot EFLASH size [bytes]
     pub const BOOT_SIZE: u32 = 16 * 1024;
     /// NMCU control/status registers
     pub const NMCU_BASE: u32 = 0x4000_0000;
@@ -35,14 +37,17 @@ pub mod nmcu_reg {
     pub const CTRL: u32 = 0x00;
     /// bit0: done
     pub const STATUS: u32 = 0x04;
+    /// SRAM address of the MVM descriptor
     pub const DESC_ADDR: u32 = 0x08;
     /// SRAM address + length of the int8 input vector
     pub const INPUT_ADDR: u32 = 0x0C;
+    /// length of the int8 input vector [bytes]
     pub const INPUT_LEN: u32 = 0x10;
     /// write 1: DMA the input vector into the NMCU input buffer
     pub const INPUT_LOAD: u32 = 0x14;
     /// SRAM address + length for reading back the ping-pong buffer
     pub const OUT_ADDR: u32 = 0x18;
+    /// read-back length [bytes]
     pub const OUT_LEN: u32 = 0x1C;
     /// write 1: DMA the current ping-pong read side out to SRAM
     pub const OUT_STORE: u32 = 0x20;
@@ -58,33 +63,52 @@ pub const DESC_WORDS: usize = 8;
 /// current instruction retires (keeps the bus borrow-free).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Pending {
-    Launch { desc_addr: u32 },
+    /// launch the MVM whose descriptor sits at `desc_addr`
+    Launch {
+        /// SRAM address of the 8-word descriptor
+        desc_addr: u32,
+    },
+    /// DMA the input vector into the NMCU input buffer
     InputLoad,
+    /// DMA the ping-pong read side out to SRAM
     OutputStore,
+    /// reset the fetch source for a new inference
     Begin,
 }
 
 /// The peripheral/bus state the CPU sees. The NMCU and EFLASH themselves
 /// live in [`Mcu`]; the bus only holds their register file.
 pub struct SocBus {
+    /// instruction/data SRAM contents
     pub sram: Vec<u8>,
+    /// boot/code EFLASH contents (read-only to the core)
     pub boot: Vec<u8>,
+    /// UART peripheral
     pub uart: uart::Uart,
+    /// DMA controller
     pub dma: dma::Dma,
+    /// power/domain controller
     pub power: power::PowerCtrl,
-    // NMCU register file
+    /// NMCU STATUS register (bit0: done)
     pub nmcu_status: u32,
+    /// NMCU DESC_ADDR register
     pub nmcu_desc_addr: u32,
+    /// NMCU INPUT_ADDR register
     pub nmcu_input_addr: u32,
+    /// NMCU INPUT_LEN register
     pub nmcu_input_len: u32,
+    /// NMCU OUT_ADDR register
     pub nmcu_out_addr: u32,
+    /// NMCU OUT_LEN register
     pub nmcu_out_len: u32,
+    /// side effects queued by MMIO writes, executed after retire
     pub pending: Vec<Pending>,
     /// reads/writes that fell outside the map (debug aid + tests)
     pub bus_faults: u64,
 }
 
 impl SocBus {
+    /// A bus with zeroed SRAM/boot and quiesced peripherals.
     pub fn new(power_cfg: &crate::config::PowerConfig) -> Self {
         SocBus {
             sram: vec![0; map::SRAM_SIZE as usize],
@@ -204,6 +228,7 @@ impl SocBus {
         &self.sram[off..off + len]
     }
 
+    /// Direct SRAM write for the coordinator/tests.
     pub fn sram_write(&mut self, addr: u32, data: &[u8]) {
         let off = (addr - map::SRAM_BASE) as usize;
         self.sram[off..off + data.len()].copy_from_slice(data);

@@ -9,14 +9,20 @@
 
 use crate::config::PowerConfig;
 
+/// A gateable power domain (bit positions in the GATE register).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Domain {
+    /// RV32I core + logic
     Core = 0,
+    /// instruction/data SRAM
     Sram = 1,
+    /// the near-memory computing unit
     Nmcu = 2,
+    /// the weight EFLASH (non-volatile: gating costs nothing)
     EflashWeights = 3,
 }
 
+/// Register offsets within the power-controller aperture.
 pub mod reg {
     /// bitmask of gated domains (1 = gated/off)
     pub const GATE: u32 = 0x00;
@@ -24,8 +30,10 @@ pub mod reg {
     pub const IDLE_US_LO: u32 = 0x04;
 }
 
+/// The power-gating controller + standby/idle energy accounting.
 #[derive(Clone, Debug)]
 pub struct PowerCtrl {
+    /// leakage/energy constants the accounting runs on
     pub cfg: PowerConfig,
     /// gated state per domain (true = power gated)
     pub gated: [bool; 4],
@@ -36,6 +44,7 @@ pub struct PowerCtrl {
 }
 
 impl PowerCtrl {
+    /// A controller with every domain powered (nothing gated).
     pub fn new(cfg: &PowerConfig) -> Self {
         PowerCtrl {
             cfg: cfg.clone(),
@@ -45,6 +54,7 @@ impl PowerCtrl {
         }
     }
 
+    /// Read one 32-bit register.
     pub fn read32(&self, off: u32) -> u32 {
         match off {
             reg::GATE => self
@@ -57,6 +67,7 @@ impl PowerCtrl {
         }
     }
 
+    /// Write one 32-bit register (GATE sets the domain mask).
     pub fn write32(&mut self, off: u32, v: u32) {
         if off == reg::GATE {
             for i in 0..4 {
@@ -88,6 +99,7 @@ impl PowerCtrl {
         self.idle_seconds += seconds;
     }
 
+    /// Leave idle: ungate every domain.
     pub fn wake(&mut self) {
         self.gated = [false; 4];
     }
@@ -101,6 +113,7 @@ impl PowerCtrl {
         leak_uw * seconds // uW * s = uJ
     }
 
+    /// Accumulate active-mode energy [pJ] into the lifetime account.
     pub fn note_active_energy(&mut self, pj: f64) {
         self.active_energy_pj += pj;
     }

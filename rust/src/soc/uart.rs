@@ -2,6 +2,7 @@
 //! for sensor I/O). Firmware prints land in `tx_log` for the tests and
 //! examples to inspect.
 
+/// Register offsets within the UART aperture.
 pub mod reg {
     /// write: transmit one byte
     pub const TX: u32 = 0x00;
@@ -9,16 +10,20 @@ pub mod reg {
     pub const STATUS: u32 = 0x04;
 }
 
+/// The TX-only UART model.
 #[derive(Clone, Debug, Default)]
 pub struct Uart {
+    /// every byte firmware transmitted, in order
     pub tx_log: Vec<u8>,
 }
 
 impl Uart {
+    /// A UART with an empty TX log.
     pub fn new() -> Self {
         Uart::default()
     }
 
+    /// Read one 32-bit register.
     pub fn read32(&self, off: u32) -> u32 {
         match off {
             reg::STATUS => 1,
@@ -26,12 +31,14 @@ impl Uart {
         }
     }
 
+    /// Write one 32-bit register (TX appends to the log).
     pub fn write32(&mut self, off: u32, v: u32) {
         if off == reg::TX {
             self.tx_log.push(v as u8);
         }
     }
 
+    /// The TX log as lossy UTF-8 (firmware prints).
     pub fn tx_string(&self) -> String {
         String::from_utf8_lossy(&self.tx_log).into_owned()
     }

@@ -7,19 +7,25 @@ use std::time::{Duration, Instant};
 /// Timing result for one benchmark case.
 #[derive(Clone, Debug)]
 pub struct Timing {
+    /// benchmark case name
     pub name: String,
+    /// total iterations measured (all batches)
     pub iters: u64,
+    /// wall time across all measurement batches
     pub total: Duration,
+    /// mean time per iteration [ns]
     pub per_iter_ns: f64,
     /// standard deviation across measurement batches (ns)
     pub sigma_ns: f64,
 }
 
 impl Timing {
+    /// Mean time per iteration as a `Duration`.
     pub fn per_iter(&self) -> Duration {
         Duration::from_nanos(self.per_iter_ns as u64)
     }
 
+    /// Items per second given `items_per_iter` work per iteration.
     pub fn throughput(&self, items_per_iter: f64) -> f64 {
         items_per_iter / (self.per_iter_ns * 1e-9)
     }
@@ -78,10 +84,12 @@ pub struct Table {
 }
 
 impl Table {
+    /// An empty table with the given column headers.
     pub fn new(headers: &[&str]) -> Self {
         Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
     }
 
+    /// Append one row (must match the header count).
     pub fn row(&mut self, cells: &[String]) {
         assert_eq!(cells.len(), self.headers.len());
         self.rows.push(cells.to_vec());
@@ -114,6 +122,7 @@ impl Table {
         out
     }
 
+    /// Print the rendered table to stdout.
     pub fn print(&self) {
         print!("{self}");
     }

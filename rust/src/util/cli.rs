@@ -4,11 +4,16 @@
 
 use std::collections::BTreeMap;
 
+/// Parsed command line.
 #[derive(Clone, Debug, Default)]
 pub struct Args {
+    /// first positional token, when subcommand mode is on
     pub subcommand: Option<String>,
+    /// boolean `--flag`s seen
     pub flags: Vec<String>,
+    /// `--key value` / `--key=value` options
     pub options: BTreeMap<String, String>,
+    /// remaining positional arguments
     pub positional: Vec<String>,
 }
 
@@ -48,35 +53,43 @@ impl Args {
         a
     }
 
+    /// Parse the process arguments (`std::env::args`, program name
+    /// skipped).
     pub fn parse(with_subcommand: bool) -> Args {
         let tokens: Vec<String> = std::env::args().skip(1).collect();
         Args::parse_from(&tokens, with_subcommand)
     }
 
+    /// Was the boolean `--name` flag passed?
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Value of `--name <value>`, if present.
     pub fn opt(&self, name: &str) -> Option<&str> {
         self.options.get(name).map(|s| s.as_str())
     }
 
+    /// Value of `--name`, or `default` when absent.
     pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.opt(name).unwrap_or(default)
     }
 
+    /// Integer value of `--name` (panics on a non-integer), or `default`.
     pub fn opt_usize(&self, name: &str, default: usize) -> usize {
         self.opt(name)
             .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer")))
             .unwrap_or(default)
     }
 
+    /// u64 value of `--name` (panics on a non-integer), or `default`.
     pub fn opt_u64(&self, name: &str, default: u64) -> u64 {
         self.opt(name)
             .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer")))
             .unwrap_or(default)
     }
 
+    /// Float value of `--name` (panics on a non-number), or `default`.
     pub fn opt_f64(&self, name: &str, default: f64) -> f64 {
         self.opt(name)
             .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number")))

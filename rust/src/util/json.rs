@@ -7,21 +7,31 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
+/// A parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`
     Null,
+    /// `true` / `false`
     Bool(bool),
     /// Integer that fits i64 exactly (covers all quantization params).
     Int(i64),
+    /// Any other number, as f64.
     Num(f64),
+    /// A string (escapes resolved).
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys).
     Obj(BTreeMap<String, Json>),
 }
 
+/// A parse failure with its byte position.
 #[derive(Debug)]
 pub struct JsonError {
+    /// byte offset where parsing failed
     pub pos: usize,
+    /// what went wrong
     pub msg: String,
 }
 
@@ -34,6 +44,7 @@ impl fmt::Display for JsonError {
 impl std::error::Error for JsonError {}
 
 impl Json {
+    /// Parse a complete JSON document.
     pub fn parse(s: &str) -> Result<Json, JsonError> {
         let mut p = Parser { b: s.as_bytes(), i: 0 };
         p.ws();
@@ -47,6 +58,7 @@ impl Json {
 
     // ----- accessors ------------------------------------------------------
 
+    /// Object field lookup (`None` for absent keys or non-objects).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -60,6 +72,7 @@ impl Json {
             .unwrap_or_else(|| panic!("missing required json key `{key}`"))
     }
 
+    /// This value as an exact integer, if it is one.
     pub fn as_i64(&self) -> Option<i64> {
         match self {
             Json::Int(i) => Some(*i),
@@ -68,6 +81,7 @@ impl Json {
         }
     }
 
+    /// This value as a float, if it is numeric.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Int(i) => Some(*i as f64),
@@ -76,6 +90,7 @@ impl Json {
         }
     }
 
+    /// This value as a string slice, if it is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -83,6 +98,7 @@ impl Json {
         }
     }
 
+    /// This value as a bool, if it is one.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -90,6 +106,7 @@ impl Json {
         }
     }
 
+    /// This value as an array slice, if it is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -97,22 +114,27 @@ impl Json {
         }
     }
 
+    /// Required integer field (panics if absent/mistyped — our schema).
     pub fn i64(&self, key: &str) -> i64 {
         self.req(key).as_i64().unwrap_or_else(|| panic!("key `{key}` not an int"))
     }
 
+    /// Required numeric field (panics if absent/mistyped).
     pub fn f64(&self, key: &str) -> f64 {
         self.req(key).as_f64().unwrap_or_else(|| panic!("key `{key}` not a number"))
     }
 
+    /// Required string field (panics if absent/mistyped).
     pub fn str(&self, key: &str) -> &str {
         self.req(key).as_str().unwrap_or_else(|| panic!("key `{key}` not a string"))
     }
 
+    /// Required bool field (panics if absent/mistyped).
     pub fn bool(&self, key: &str) -> bool {
         self.req(key).as_bool().unwrap_or_else(|| panic!("key `{key}` not a bool"))
     }
 
+    /// Required array field (panics if absent/mistyped).
     pub fn arr(&self, key: &str) -> &[Json] {
         self.req(key).as_arr().unwrap_or_else(|| panic!("key `{key}` not an array"))
     }

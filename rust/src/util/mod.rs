@@ -1,12 +1,13 @@
 //! Foundation utilities: deterministic RNG, statistics, JSON, CLI args,
 //! bench harness, and a mini property-testing helper. All hand-rolled —
-//! the crate registry is offline in this environment (see DESIGN.md §2).
+//! the crate registry is offline in this environment (ARCHITECTURE.md).
 
 pub mod bench;
 pub mod cli;
 pub mod json;
 pub mod rng;
 pub mod stats;
+pub mod workload;
 
 /// Mini property-test driver: runs `f` over `n` seeded RNGs; failures
 /// report the seed so the case can be replayed deterministically.

@@ -24,6 +24,7 @@ fn splitmix64(state: &mut u64) -> u64 {
 }
 
 impl Rng {
+    /// Seed the 256-bit state from one u64 via splitmix64.
     pub fn new(seed: u64) -> Self {
         let mut sm = seed;
         let s = [
@@ -40,6 +41,7 @@ impl Rng {
         Rng::new(self.next_u64() ^ stream.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
+    /// Next raw 64-bit output of the generator.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;
@@ -105,6 +107,7 @@ impl Rng {
         }
     }
 
+    /// Gaussian with the given mean and standard deviation.
     #[inline]
     pub fn normal(&mut self, mean: f64, sigma: f64) -> f64 {
         mean + sigma * self.gaussian()
@@ -113,6 +116,14 @@ impl Rng {
     /// Lognormal with the given *underlying* normal parameters.
     pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
         self.normal(mu, sigma).exp()
+    }
+
+    /// Exponential variate with the given `mean` (inverse-CDF method).
+    /// Inter-arrival times of a Poisson process with rate `1.0 / mean` —
+    /// the open-loop serving workloads are built on this.
+    pub fn exponential(&mut self, mean: f64) -> f64 {
+        // 1 - f64() is in (0, 1], so ln() is finite
+        -mean * (1.0 - self.f64()).ln()
     }
 
     /// Bernoulli trial.
@@ -185,6 +196,20 @@ mod tests {
         for &c in &counts {
             assert!((c as f64 - 10_000.0).abs() < 600.0, "{counts:?}");
         }
+    }
+
+    #[test]
+    fn exponential_mean_and_positivity() {
+        let mut r = Rng::new(17);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = r.exponential(2.0);
+            assert!(x >= 0.0 && x.is_finite());
+            sum += x;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 2.0).abs() < 0.05, "mean={mean}");
     }
 
     #[test]

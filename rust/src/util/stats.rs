@@ -21,11 +21,18 @@ pub fn std_dev(xs: &[f64]) -> f64 {
 
 /// Linear-interpolated percentile, p in [0, 100].
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    if xs.is_empty() {
-        return f64::NAN;
-    }
     let mut v: Vec<f64> = xs.to_vec();
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_of_sorted(&v, p)
+}
+
+/// Linear-interpolated percentile of an **already-sorted** slice —
+/// callers taking several percentiles of one dataset sort once and use
+/// this instead of paying [`percentile`]'s clone+sort per call.
+pub fn percentile_of_sorted(v: &[f64], p: f64) -> f64 {
+    if v.is_empty() {
+        return f64::NAN;
+    }
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -40,17 +47,22 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
 /// Out-of-range samples clamp into the edge buckets.
 #[derive(Clone, Debug)]
 pub struct Histogram {
+    /// inclusive lower edge of the range
     pub lo: f64,
+    /// exclusive upper edge of the range
     pub hi: f64,
+    /// per-bucket sample counts
     pub counts: Vec<u64>,
 }
 
 impl Histogram {
+    /// An empty histogram over [lo, hi) with `bins` buckets.
     pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
         assert!(hi > lo && bins > 0);
         Histogram { lo, hi, counts: vec![0; bins] }
     }
 
+    /// Count one sample (out-of-range clamps to the edge buckets).
     pub fn add(&mut self, x: f64) {
         let bins = self.counts.len();
         let t = (x - self.lo) / (self.hi - self.lo);
@@ -58,6 +70,7 @@ impl Histogram {
         self.counts[idx] += 1;
     }
 
+    /// Total samples counted.
     pub fn total(&self) -> u64 {
         self.counts.iter().sum()
     }
@@ -108,18 +121,23 @@ pub fn auc(scores: &[f64], labels: &[bool]) -> f64 {
 /// Online mean/min/max/stddev accumulator for streaming metrics.
 #[derive(Clone, Debug, Default)]
 pub struct Running {
+    /// samples accumulated
     pub n: u64,
     mean: f64,
     m2: f64,
+    /// smallest sample seen
     pub min: f64,
+    /// largest sample seen
     pub max: f64,
 }
 
 impl Running {
+    /// An empty accumulator.
     pub fn new() -> Self {
         Running { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
     }
 
+    /// Accumulate one sample (Welford update).
     pub fn add(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;
@@ -129,10 +147,12 @@ impl Running {
         self.max = self.max.max(x);
     }
 
+    /// Mean of the samples (`NaN` when empty).
     pub fn mean(&self) -> f64 {
         if self.n == 0 { f64::NAN } else { self.mean }
     }
 
+    /// Population standard deviation (0 below two samples).
     pub fn std(&self) -> f64 {
         if self.n < 2 { 0.0 } else { (self.m2 / self.n as f64).sqrt() }
     }
@@ -151,6 +171,17 @@ mod tests {
         assert_eq!(percentile(&xs, 100.0), 5.0);
         assert_eq!(percentile(&xs, 50.0), 3.0);
         assert_eq!(percentile(&xs, 25.0), 2.0);
+    }
+
+    #[test]
+    fn percentile_of_sorted_matches_percentile() {
+        let xs = [5.0, 1.0, 4.0, 2.0, 3.0];
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for p in [0.0, 25.0, 50.0, 90.0, 100.0] {
+            assert_eq!(percentile_of_sorted(&sorted, p), percentile(&xs, p));
+        }
+        assert!(percentile_of_sorted(&[], 50.0).is_nan());
     }
 
     #[test]

@@ -1,0 +1,80 @@
+//! Deterministic synthetic request workloads for the serving benchmarks
+//! and the `serve` / `bench-serve` CLI modes.
+//!
+//! An *open-loop* workload fixes the request arrival times up front
+//! (here: a Poisson process — i.i.d. exponential inter-arrival gaps) and
+//! never waits for responses, so a slow server shows up as queueing and
+//! tail latency instead of silently throttling the generator. Everything
+//! is derived from a [`Rng`] seed, so a workload replays bit-identically
+//! across runs, backends, and scheduler policies.
+//!
+//! ```
+//! use nvmcu::util::rng::Rng;
+//! use nvmcu::util::workload::arrival_offsets;
+//!
+//! let a = arrival_offsets(&mut Rng::new(9), 100, 10_000.0);
+//! let b = arrival_offsets(&mut Rng::new(9), 100, 10_000.0);
+//! assert_eq!(a, b); // same seed, same schedule
+//! assert!(a.windows(2).all(|w| w[0] <= w[1])); // monotone arrivals
+//! ```
+
+use super::rng::Rng;
+use std::time::Duration;
+
+/// Arrival times of `n` requests of an open-loop Poisson process at
+/// `rate_hz` requests/second, as offsets from the workload start.
+/// Monotone non-decreasing; the first request arrives after one
+/// inter-arrival gap. A non-positive `rate_hz` collapses every arrival
+/// to t=0 (an instantaneous burst).
+pub fn arrival_offsets(rng: &mut Rng, n: usize, rate_hz: f64) -> Vec<Duration> {
+    let mut out = Vec::with_capacity(n);
+    let mut t = 0.0f64;
+    for _ in 0..n {
+        if rate_hz > 0.0 {
+            t += rng.exponential(1.0 / rate_hz);
+        }
+        out.push(Duration::from_secs_f64(t));
+    }
+    out
+}
+
+/// A deterministic batch of `n` random int8 input vectors of width `k`
+/// (the synthetic request payloads paired with [`arrival_offsets`]).
+pub fn random_inputs(rng: &mut Rng, n: usize, k: usize) -> Vec<Vec<i8>> {
+    (0..n)
+        .map(|_| (0..k).map(|_| (rng.below(256) as i32 - 128) as i8).collect())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_mean_rate() {
+        let mut r = Rng::new(4);
+        let n = 20_000;
+        let offs = arrival_offsets(&mut r, n, 1000.0);
+        assert_eq!(offs.len(), n);
+        // total duration of n arrivals at 1 kHz is about n ms
+        let total = offs.last().unwrap().as_secs_f64();
+        let want = n as f64 / 1000.0;
+        assert!((total - want).abs() / want < 0.05, "total={total} want={want}");
+    }
+
+    #[test]
+    fn burst_rate_zero() {
+        let mut r = Rng::new(4);
+        let offs = arrival_offsets(&mut r, 5, 0.0);
+        assert!(offs.iter().all(|d| d.is_zero()));
+    }
+
+    #[test]
+    fn inputs_deterministic_and_in_range() {
+        let a = random_inputs(&mut Rng::new(1), 4, 32);
+        let b = random_inputs(&mut Rng::new(1), 4, 32);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 4);
+        assert!(a.iter().all(|x| x.len() == 32));
+    }
+}

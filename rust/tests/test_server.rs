@@ -1,0 +1,387 @@
+//! InferenceServer integration tests: the central serving property —
+//! scheduled (coalesced, reordered-across-models) results are bit-exact
+//! to the software reference — plus the scheduler edge cases: max_batch=1
+//! pass-through, typed queue-full backpressure, partial-batch flush at
+//! max_wait (no stuck requests), per-model routing, per-request error
+//! isolation, and drain-on-shutdown. All on synthetic models; no
+//! artifacts needed.
+
+use nvmcu::artifacts::QModel;
+use nvmcu::config::ChipConfig;
+use nvmcu::datasets::synthetic_qmodel as rand_model;
+use nvmcu::engine::{
+    Backend, BatchPolicy, EngineError, InferenceServer, ModelHandle, NmcuBackend,
+    ReferenceBackend, ShardedEngine,
+};
+use nvmcu::models::qmodel_forward;
+use nvmcu::nmcu::NmcuStats;
+use nvmcu::util::rng::Rng;
+use nvmcu::util::workload;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+const WAIT: Duration = Duration::from_secs(5);
+
+fn small_cfg() -> ChipConfig {
+    let mut c = ChipConfig::new();
+    c.eflash.capacity_bits = 256 * 1024; // 64K cells for test speed
+    c
+}
+
+/// A reference backend instrumented for scheduler tests: optionally
+/// sleeps per batch (to back the admission queue up deterministically)
+/// and logs every `infer_batch` call as `(handle index, batch size)`.
+struct ProbeBackend {
+    inner: ReferenceBackend,
+    delay: Duration,
+    log: Arc<Mutex<Vec<(usize, usize)>>>,
+}
+
+impl ProbeBackend {
+    fn new(delay: Duration) -> (ProbeBackend, Arc<Mutex<Vec<(usize, usize)>>>) {
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let probe = ProbeBackend { inner: ReferenceBackend::new(), delay, log: Arc::clone(&log) };
+        (probe, log)
+    }
+}
+
+impl Backend for ProbeBackend {
+    fn name(&self) -> &'static str {
+        "probe"
+    }
+
+    fn program(&mut self, model: &QModel) -> Result<ModelHandle, EngineError> {
+        self.inner.program(model)
+    }
+
+    fn infer(&mut self, handle: ModelHandle, x: &[i8]) -> Result<Vec<i8>, EngineError> {
+        self.inner.infer(handle, x)
+    }
+
+    fn infer_batch(
+        &mut self,
+        handle: ModelHandle,
+        xs: &[Vec<i8>],
+    ) -> Result<Vec<Vec<i8>>, EngineError> {
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        self.log.lock().unwrap().push((handle.index(), xs.len()));
+        self.inner.infer_batch(handle, xs)
+    }
+
+    fn n_models(&self) -> usize {
+        self.inner.n_models()
+    }
+
+    fn model_info(&self, handle: ModelHandle) -> Option<nvmcu::engine::ModelInfo> {
+        self.inner.model_info(handle)
+    }
+
+    fn stats(&self) -> NmcuStats {
+        self.inner.stats()
+    }
+
+    fn reset_stats(&mut self) {
+        self.inner.reset_stats()
+    }
+}
+
+/// THE acceptance property: outputs of requests that went through
+/// admission, coalescing, and batched dispatch on the chip simulator are
+/// bit-exact to the pure-software ReferenceBackend running the same
+/// samples one at a time.
+#[test]
+fn scheduled_results_bit_exact_to_reference_backend() {
+    let cfg = small_cfg();
+    let mut r = Rng::new(2026);
+    let model = rand_model(&mut r, "pinned", 120, 12, 6);
+    let xs = workload::random_inputs(&mut r, 48, 120);
+
+    let mut chip = NmcuBackend::new(&cfg);
+    let h = chip.program(&model).unwrap();
+    let policy = BatchPolicy {
+        max_batch: 8,
+        max_wait: Duration::from_micros(500),
+        queue_depth: 64,
+    };
+    let server = InferenceServer::start(Box::new(chip), policy).unwrap();
+    let pendings: Vec<_> =
+        xs.iter().map(|x| server.submit(h, x.clone()).expect("queue sized")).collect();
+    let got: Vec<Vec<i8>> =
+        pendings.into_iter().map(|p| p.wait_timeout(WAIT).expect("completes")).collect();
+
+    let mut reference = ReferenceBackend::new();
+    let hr = reference.program(&model).unwrap();
+    for (i, (x, out)) in xs.iter().zip(&got).enumerate() {
+        assert_eq!(out, &reference.infer(hr, x).unwrap(), "request {i} diverged");
+    }
+
+    let stats = server.stats();
+    assert_eq!(stats.submitted, 48);
+    assert_eq!(stats.completed, 48);
+    assert_eq!(stats.failed, 0);
+    assert_eq!(stats.rejected, 0);
+    // percentiles come from real samples and are ordered
+    assert!(stats.p50_ms >= 0.0);
+    assert!(stats.p50_ms <= stats.p95_ms && stats.p95_ms <= stats.p99_ms);
+    // a 48-request burst through max_batch=8 must have coalesced
+    assert!(stats.batches >= 6, "at least ceil(48/8) batches, got {}", stats.batches);
+}
+
+/// Same property through the data-parallel fleet: scheduler + 3-shard
+/// ShardedEngine stays bit-exact to the reference.
+#[test]
+fn scheduled_sharded_results_bit_exact() {
+    let cfg = small_cfg();
+    let mut r = Rng::new(7);
+    let model = rand_model(&mut r, "fleet", 96, 10, 4);
+    let xs = workload::random_inputs(&mut r, 60, 96);
+
+    let mut fleet = ShardedEngine::new(&cfg, 3).unwrap();
+    let h = fleet.program(&model).unwrap();
+    let policy = BatchPolicy {
+        max_batch: 16,
+        max_wait: Duration::from_micros(500),
+        queue_depth: 64,
+    };
+    let server = InferenceServer::start(Box::new(fleet), policy).unwrap();
+    let pendings: Vec<_> =
+        xs.iter().map(|x| server.submit(h, x.clone()).expect("queue sized")).collect();
+    for (x, p) in xs.iter().zip(pendings) {
+        assert_eq!(p.wait_timeout(WAIT).expect("completes"), qmodel_forward(&model, x));
+    }
+}
+
+/// max_batch = 1 degenerates to pass-through: every dispatched batch is
+/// a singleton and every request still completes correctly.
+#[test]
+fn max_batch_one_degenerates_to_pass_through() {
+    let (mut probe, log) = ProbeBackend::new(Duration::ZERO);
+    let mut r = Rng::new(5);
+    let model = rand_model(&mut r, "passthrough", 32, 8, 3);
+    let h = probe.program(&model).unwrap();
+    let policy = BatchPolicy { max_batch: 1, ..BatchPolicy::default() };
+    let server = InferenceServer::start(Box::new(probe), policy).unwrap();
+
+    for x in workload::random_inputs(&mut r, 10, 32) {
+        assert_eq!(server.infer(h, x.clone()).unwrap(), qmodel_forward(&model, &x));
+    }
+    let calls = log.lock().unwrap();
+    assert_eq!(calls.len(), 10);
+    assert!(calls.iter().all(|&(_, size)| size == 1), "{calls:?}");
+    let stats = server.stats();
+    assert_eq!(stats.batch_hist[1], 10);
+    assert_eq!(stats.batches, 10);
+}
+
+/// Overload turns into typed QueueFull backpressure, never a panic or a
+/// block — and the server keeps serving afterwards.
+#[test]
+fn queue_full_returns_typed_backpressure() {
+    let (mut probe, _log) = ProbeBackend::new(Duration::from_millis(50));
+    let mut r = Rng::new(11);
+    let model = rand_model(&mut r, "slow", 16, 4, 2);
+    let h = probe.program(&model).unwrap();
+    let policy = BatchPolicy {
+        max_batch: 1,
+        max_wait: Duration::ZERO,
+        queue_depth: 1,
+    };
+    let server = InferenceServer::start(Box::new(probe), policy).unwrap();
+    let xs = workload::random_inputs(&mut r, 8, 16);
+
+    // phase A: fill the pipeline (first batch is computing for 50 ms,
+    // the next is staged at the rendezvous, one more fits the queue)
+    let mut pendings = Vec::new();
+    let mut rejected = 0usize;
+    for x in &xs[..3] {
+        match server.submit(h, x.clone()) {
+            Ok(p) => pendings.push(p),
+            Err(EngineError::QueueFull { depth }) => {
+                assert_eq!(depth, 1);
+                rejected += 1;
+            }
+            Err(e) => panic!("unexpected: {e:?}"),
+        }
+    }
+    std::thread::sleep(Duration::from_millis(10));
+    // phase B: the scheduler is now parked at the rendezvous; at most
+    // one more submission fits (the queue slot) — the rest MUST bounce
+    for x in &xs[3..] {
+        match server.submit(h, x.clone()) {
+            Ok(p) => pendings.push(p),
+            Err(EngineError::QueueFull { depth }) => {
+                assert_eq!(depth, 1);
+                rejected += 1;
+            }
+            Err(e) => panic!("unexpected: {e:?}"),
+        }
+    }
+    assert!(rejected >= 3, "burst of 8 into a depth-1 queue shed only {rejected}");
+    assert!(!pendings.is_empty(), "the first submission must have been admitted");
+
+    // every admitted request completes, and the server still serves
+    for p in pendings {
+        p.wait_timeout(WAIT).expect("admitted requests complete");
+    }
+    assert_eq!(server.infer(h, xs[0].clone()).unwrap(), qmodel_forward(&model, &xs[0]));
+    let stats = server.stats();
+    assert_eq!(stats.rejected, rejected as u64);
+}
+
+/// A partial batch (3 requests, max_batch 64) is flushed once its oldest
+/// request has waited max_wait — nothing gets stuck waiting for
+/// batch-mates that never come.
+#[test]
+fn partial_batch_flushes_at_max_wait() {
+    let (mut probe, log) = ProbeBackend::new(Duration::ZERO);
+    let mut r = Rng::new(13);
+    let model = rand_model(&mut r, "partial", 24, 6, 2);
+    let h = probe.program(&model).unwrap();
+    let policy = BatchPolicy {
+        max_batch: 64,
+        max_wait: Duration::from_millis(50),
+        queue_depth: 64,
+    };
+    let server = InferenceServer::start(Box::new(probe), policy).unwrap();
+
+    let xs = workload::random_inputs(&mut r, 3, 24);
+    let pendings: Vec<_> =
+        xs.iter().map(|x| server.submit(h, x.clone()).unwrap()).collect();
+    for (x, p) in xs.iter().zip(pendings) {
+        // completes despite the batch never filling (64 > 3)
+        assert_eq!(p.wait_timeout(WAIT).expect("flushed"), qmodel_forward(&model, x));
+    }
+    let calls = log.lock().unwrap();
+    assert_eq!(&calls[..], &[(h.index(), 3)][..], "one partial flush of all 3");
+    assert_eq!(server.stats().batch_hist[3], 1);
+}
+
+/// Per-model routing: two models resident in one backend, requests
+/// interleaved — every dispatched micro-batch is single-model, both
+/// models' results stay bit-exact, and the request counts add up.
+#[test]
+fn per_model_routing_serves_models_concurrently() {
+    let (mut probe, log) = ProbeBackend::new(Duration::ZERO);
+    let mut r = Rng::new(17);
+    let model_a = rand_model(&mut r, "model_a", 40, 8, 4);
+    let model_b = rand_model(&mut r, "model_b", 24, 6, 2);
+    let ha = probe.program(&model_a).unwrap();
+    let hb = probe.program(&model_b).unwrap();
+    let policy = BatchPolicy {
+        max_batch: 8,
+        max_wait: Duration::from_millis(2),
+        queue_depth: 128,
+    };
+    let server = InferenceServer::start(Box::new(probe), policy).unwrap();
+
+    let xs_a = workload::random_inputs(&mut r, 20, 40);
+    let xs_b = workload::random_inputs(&mut r, 20, 24);
+    let mut pendings = Vec::new();
+    for (xa, xb) in xs_a.iter().zip(&xs_b) {
+        pendings.push((ha, xa, server.submit(ha, xa.clone()).unwrap()));
+        pendings.push((hb, xb, server.submit(hb, xb.clone()).unwrap()));
+    }
+    for (h, x, p) in pendings {
+        let model = if h == ha { &model_a } else { &model_b };
+        assert_eq!(p.wait_timeout(WAIT).expect("completes"), qmodel_forward(model, x));
+    }
+
+    let calls = log.lock().unwrap();
+    let served_a: usize = calls.iter().filter(|c| c.0 == ha.index()).map(|c| c.1).sum();
+    let served_b: usize = calls.iter().filter(|c| c.0 == hb.index()).map(|c| c.1).sum();
+    assert_eq!(served_a, 20, "{calls:?}");
+    assert_eq!(served_b, 20, "{calls:?}");
+    // batches never exceed the policy and every call named a real model
+    assert!(calls.iter().all(|&(m, size)| size >= 1 && size <= 8 && m <= 1), "{calls:?}");
+}
+
+/// One malformed request gets its own typed error; its batch-mates are
+/// unaffected. An unknown handle is rejected per-request too.
+#[test]
+fn malformed_requests_do_not_poison_batch_mates() {
+    let mut backend = ReferenceBackend::new();
+    let mut r = Rng::new(19);
+    let model = rand_model(&mut r, "isolated", 16, 4, 2);
+    let h = backend.program(&model).unwrap();
+    let policy = BatchPolicy {
+        max_batch: 8,
+        max_wait: Duration::from_millis(20),
+        queue_depth: 16,
+    };
+    let server = InferenceServer::start(Box::new(backend), policy).unwrap();
+
+    let good1 = server.submit(h, vec![1i8; 16]).unwrap();
+    let bad = server.submit(h, vec![1i8; 5]).unwrap(); // wrong input width
+    let good2 = server.submit(h, vec![2i8; 16]).unwrap();
+    let ghost = server.submit(ModelHandle::from_index(9), vec![0i8; 16]).unwrap();
+
+    assert_eq!(good1.wait_timeout(WAIT).unwrap(), qmodel_forward(&model, &[1i8; 16]));
+    match bad.wait_timeout(WAIT) {
+        Err(EngineError::InputSize { expected: 16, got: 5 }) => {}
+        other => panic!("expected InputSize, got {other:?}"),
+    }
+    assert_eq!(good2.wait_timeout(WAIT).unwrap(), qmodel_forward(&model, &[2i8; 16]));
+    match ghost.wait_timeout(WAIT) {
+        Err(EngineError::InvalidHandle { handle: 9, .. }) => {}
+        other => panic!("expected InvalidHandle, got {other:?}"),
+    }
+    let stats = server.stats();
+    assert_eq!(stats.completed, 4);
+    assert_eq!(stats.failed, 2);
+}
+
+/// shutdown() drains everything already admitted (no stranded callers)
+/// and hands back the still-programmed backend.
+#[test]
+fn shutdown_drains_admitted_requests_and_returns_backend() {
+    let (mut probe, _log) = ProbeBackend::new(Duration::from_millis(20));
+    let mut r = Rng::new(23);
+    let model = rand_model(&mut r, "drained", 16, 4, 2);
+    let h = probe.program(&model).unwrap();
+    let policy = BatchPolicy {
+        max_batch: 4,
+        max_wait: Duration::from_millis(500), // far longer than the test
+        queue_depth: 16,
+    };
+    let server = InferenceServer::start(Box::new(probe), policy).unwrap();
+    let xs = workload::random_inputs(&mut r, 8, 16);
+    let pendings: Vec<_> = xs.iter().map(|x| server.submit(h, x.clone()).unwrap()).collect();
+
+    // shutdown must flush the partial batches long before max_wait
+    let backend = server.shutdown().expect("clean shutdown");
+    for (x, p) in xs.iter().zip(pendings) {
+        assert_eq!(p.wait_timeout(WAIT).expect("drained"), qmodel_forward(&model, x));
+    }
+    assert_eq!(backend.n_models(), 1, "backend comes back with its registry intact");
+}
+
+/// Submitting to a server that has shut down is a typed error.
+#[test]
+fn submit_after_shutdown_is_typed_error() {
+    let mut backend = ReferenceBackend::new();
+    let mut r = Rng::new(29);
+    let model = rand_model(&mut r, "closed", 8, 4, 2);
+    let h = backend.program(&model).unwrap();
+    let server = InferenceServer::start(Box::new(backend), BatchPolicy::default()).unwrap();
+    let client = server.client();
+    assert_eq!(client.infer(h, vec![0i8; 8]).unwrap(), qmodel_forward(&model, &[0i8; 8]));
+    drop(server);
+    match client.submit(h, vec![0i8; 8]) {
+        Err(EngineError::ServerStopped) => {}
+        other => panic!("expected ServerStopped, got {other:?}"),
+    }
+}
+
+/// Degenerate policies are rejected up front with InvalidConfig.
+#[test]
+fn degenerate_policies_rejected() {
+    for policy in [
+        BatchPolicy { max_batch: 0, ..BatchPolicy::default() },
+        BatchPolicy { queue_depth: 0, ..BatchPolicy::default() },
+    ] {
+        let err = InferenceServer::start(Box::new(ReferenceBackend::new()), policy).unwrap_err();
+        assert!(matches!(err, EngineError::InvalidConfig { .. }), "{err:?}");
+    }
+}

@@ -29,7 +29,7 @@ fn main() -> anyhow::Result<()> {
     // program layer 9 into the EFLASH
     let mut chip = Chip::new(&cfg);
     let pm = chip.program_model(&l9m)?;
-    let desc = pm.descs[0].clone();
+    let desc = pm.mvm_desc(0).expect("dense layer 9").clone();
     println!("programmed with {} ISPP pulses", pm.total_pulses());
 
     // off-chip layers through PJRT

@@ -26,7 +26,7 @@ fn main() -> anyhow::Result<()> {
     // lay out descriptors + bias tables in SRAM
     let mut at = map::SRAM_BASE + 0x2_0000;
     let mut desc_addrs = Vec::new();
-    for d in &pm.descs {
+    for d in pm.mvm_descs() {
         let bias_at = at + 0x40;
         mcu.write_descriptor(at, bias_at, d);
         desc_addrs.push(at);

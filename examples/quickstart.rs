@@ -5,7 +5,7 @@
 //!
 //!     cargo run --release --example quickstart
 
-use nvmcu::artifacts::{QLayer, QModel};
+use nvmcu::artifacts::{QLayer, QModel, QOp};
 use nvmcu::config::ChipConfig;
 use nvmcu::engine::{Backend, NmcuBackend};
 use nvmcu::metrics;
@@ -42,8 +42,9 @@ fn main() {
         s_in: 1.0 / 255.0,
         s_w: 0.04,
         s_out: 0.08,
+        op: QOp::Dense,
     };
-    let model = QModel { name: "quickstart".into(), layers: vec![layer] };
+    let model = QModel::mlp("quickstart", vec![layer]);
 
     // 3. program it (ISPP program-verify against the 15-level ladder);
     //    errors are typed values, not panics

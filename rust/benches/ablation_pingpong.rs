@@ -34,7 +34,7 @@ fn main() {
     let pm2 = chip2.program_model(model).unwrap();
     chip2.reset_stats();
     let mut h = x0.clone();
-    for d in &pm2.descs {
+    for d in pm2.mvm_descs() {
         chip2.nmcu.begin_inference(); // resets fetch to the input buffer
         chip2.nmcu.load_input(&h).unwrap(); // bus: activation reload
         chip2.nmcu.execute_layer(&mut chip2.eflash, d).unwrap();

@@ -46,7 +46,7 @@ fn main() {
     chip.eflash.read_mode = ReadMode::Cached;
 
     // ---- one NMCU layer and a full inference --------------------------------
-    use nvmcu::artifacts::{QLayer, QModel};
+    use nvmcu::artifacts::{QLayer, QModel, QOp};
     use nvmcu::nmcu::Requant;
     let layer = |k: usize, n: usize, r: &mut Rng| QLayer {
         name: "l".into(),
@@ -60,11 +60,9 @@ fn main() {
         s_in: 1.0,
         s_w: 1.0,
         s_out: 1.0,
+        op: QOp::Dense,
     };
-    let model = QModel {
-        name: "mnist-shaped".into(),
-        layers: vec![layer(784, 43, &mut r), layer(43, 10, &mut r)],
-    };
+    let model = QModel::mlp("mnist-shaped", vec![layer(784, 43, &mut r), layer(43, 10, &mut r)]);
     let mut chip = Chip::new(&cfg);
     let pm = chip.program_model(&model).unwrap();
     let x784: Vec<i8> = (0..784).map(|_| (r.below(256) as i32 - 128) as i8).collect();
@@ -72,7 +70,8 @@ fn main() {
     let t1 = bench("NMCU layer 784x43 (154 reads)", tgt, || {
         chip.nmcu.begin_inference();
         chip.nmcu.load_input(&x784).unwrap();
-        std::hint::black_box(chip.nmcu.execute_layer(&mut chip.eflash, &pm.descs[0]).unwrap());
+        let d = pm.mvm_desc(0).expect("dense layer 0");
+        std::hint::black_box(chip.nmcu.execute_layer(&mut chip.eflash, d).unwrap());
     });
     let t2 = bench("full MNIST-shaped inference (2 layers)", tgt, || {
         std::hint::black_box(chip.infer(&pm, &x784).unwrap());

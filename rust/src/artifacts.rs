@@ -8,23 +8,65 @@
 //! - `mnist_test.bin` / `admos_test.bin` — test datasets,
 //! - `expected.json` — python-side metrics and golden vectors.
 
-use crate::nmcu::Requant;
+use crate::error::EngineError;
+use crate::nmcu::{conv_out_dim, Requant};
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
 
-/// One quantized linear layer as exported by python.
+pub use crate::nmcu::Shape;
+
+/// The operator a [`QLayer`] executes. `Dense` is the paper's MVM;
+/// `Conv2D` and `MaxPool2d` are the CNN extension: conv layers keep
+/// their filters in EFLASH as the im2col weight matrix
+/// (`K = cin*kh*kw`, `N = cout`, row-major — the same layout a dense
+/// layer uses), pool layers carry no weights at all.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QOp {
+    /// Dense MVM over the (flattened) input vector.
+    Dense,
+    /// 2-D convolution, im2col-lowered to per-position MVMs.
+    Conv2D {
+        /// kernel height
+        kh: usize,
+        /// kernel width
+        kw: usize,
+        /// input channels
+        cin: usize,
+        /// output channels (filters)
+        cout: usize,
+        /// spatial stride (both axes)
+        stride: usize,
+        /// zero-padding (both axes, both sides; pads read the layer's
+        /// input zero-point, i.e. real zero)
+        pad: usize,
+    },
+    /// 2-D max pooling (no weights, no padding).
+    MaxPool2d {
+        /// window height
+        kh: usize,
+        /// window width
+        kw: usize,
+        /// spatial stride (both axes)
+        stride: usize,
+    },
+}
+
+/// One quantized layer as exported by python (dense) or built by the
+/// CNN generators in [`crate::datasets`].
 #[derive(Clone, Debug)]
 pub struct QLayer {
     /// layer name from the export (e.g. `fc1`)
     pub name: String,
-    /// input features (contraction length)
+    /// input features (contraction length; `cin*kh*kw` for conv, 0 for
+    /// weightless pool layers)
     pub k: usize,
-    /// output features
+    /// output features (`cout` for conv, 0 for pool layers)
     pub n: usize,
     /// apply quantized ReLU after requantization
     pub relu: bool,
     /// int4 codes, row-major (K, N), one i8 per code in [-8, 7]
+    /// (empty for pool layers)
     pub codes: Vec<i8>,
     /// int32 bias with the z_in correction folded in (`bias_q`)
     pub bias: Vec<i32>,
@@ -38,67 +80,187 @@ pub struct QLayer {
     pub s_w: f64,
     /// output activation scale
     pub s_out: f64,
+    /// which operator this layer executes
+    pub op: QOp,
 }
 
-/// A quantized model (sequence of layers).
+impl QLayer {
+    /// A weightless MaxPool2d layer (`k`/`n` 0, empty codes and bias,
+    /// identity requant — none of which the pool path reads).
+    pub fn maxpool(name: &str, kh: usize, kw: usize, stride: usize) -> QLayer {
+        QLayer {
+            name: name.into(),
+            k: 0,
+            n: 0,
+            relu: false,
+            codes: Vec::new(),
+            bias: Vec::new(),
+            requant: Requant { m0: 1 << 30, shift: 30, z_out: 0 },
+            z_in: 0,
+            s_in: 1.0,
+            s_w: 1.0,
+            s_out: 1.0,
+            op: QOp::MaxPool2d { kh, kw, stride },
+        }
+    }
+
+    /// Output shape this layer produces from `input`, or `None` when the
+    /// op is incompatible with it (wrong flattened length or channel
+    /// count, kernel that does not fit, degenerate stride).
+    pub fn out_shape(&self, input: Shape) -> Option<Shape> {
+        match self.op {
+            QOp::Dense => {
+                if input.len() == self.k {
+                    Some(Shape::vec(self.n))
+                } else {
+                    None
+                }
+            }
+            QOp::Conv2D { kh, kw, cin, cout, stride, pad } => {
+                if input.c != cin || self.k != cin * kh * kw || self.n != cout {
+                    return None;
+                }
+                Some(Shape {
+                    c: cout,
+                    h: conv_out_dim(input.h, kh, stride, pad)?,
+                    w: conv_out_dim(input.w, kw, stride, pad)?,
+                })
+            }
+            QOp::MaxPool2d { kh, kw, stride } => Some(Shape {
+                c: input.c,
+                h: conv_out_dim(input.h, kh, stride, 0)?,
+                w: conv_out_dim(input.w, kw, stride, 0)?,
+            }),
+        }
+    }
+}
+
+/// A quantized model: an input shape plus a sequence of layers.
 #[derive(Clone, Debug)]
 pub struct QModel {
     /// model name from the export (e.g. `mnist_weights`)
     pub name: String,
+    /// activation shape the first layer consumes (dense models use the
+    /// degenerate `Shape::vec(k)`)
+    pub input_shape: Shape,
     /// the layers, in execution order
     pub layers: Vec<QLayer>,
 }
 
 impl QModel {
-    /// Total EFLASH cells the model occupies (one 4-bit cell per code).
+    /// A dense MLP: the input shape is the first layer's flat `k`
+    /// vector (every layer must be [`QOp::Dense`] to validate).
+    pub fn mlp(name: &str, layers: Vec<QLayer>) -> QModel {
+        let k = layers.first().map_or(0, |l| l.k);
+        QModel { name: name.into(), input_shape: Shape::vec(k), layers }
+    }
+
+    /// A model with an explicit multi-dim input shape (CNNs).
+    pub fn cnn(name: &str, input_shape: Shape, layers: Vec<QLayer>) -> QModel {
+        QModel { name: name.into(), input_shape, layers }
+    }
+
+    /// Total EFLASH cells the model occupies (one 4-bit cell per code;
+    /// pool layers occupy none).
     pub fn total_cells(&self) -> usize {
         self.layers.iter().map(|l| l.k * l.n).sum()
     }
 
+    /// Flattened input length (what `infer` expects).
+    pub fn input_len(&self) -> usize {
+        self.input_shape.len()
+    }
+
+    /// Flattened output length of a valid model.
+    pub fn output_len(&self) -> Result<usize, EngineError> {
+        Ok(self.shapes()?.last().expect("shapes() includes the input").len())
+    }
+
+    /// Propagate the input shape through every layer: returns
+    /// `layers.len() + 1` shapes (the input first, then each layer's
+    /// output). Fails with a typed [`EngineError::BadDescriptor`] at the
+    /// first incompatible layer — this is the shape check every backend
+    /// runs before a model becomes resident.
+    pub fn shapes(&self) -> Result<Vec<Shape>, EngineError> {
+        let mut out = Vec::with_capacity(self.layers.len() + 1);
+        out.push(self.input_shape);
+        for l in &self.layers {
+            let prev = *out.last().expect("non-empty");
+            let s = l.out_shape(prev).ok_or_else(|| EngineError::BadDescriptor {
+                reason: format!(
+                    "layer {}: op {:?} (k={}, n={}) incompatible with input shape {prev}",
+                    l.name, l.op, l.k, l.n
+                ),
+            })?;
+            out.push(s);
+        }
+        Ok(out)
+    }
+
     /// Structural validation shared by every engine backend, so the same
     /// malformed model is rejected with the same typed error everywhere:
-    /// at least one layer, consecutive layers chain (n of layer i == k of
-    /// layer i+1), and per-layer codes/bias lengths match the shape.
-    pub fn validate(&self) -> Result<(), crate::error::EngineError> {
-        use crate::error::EngineError;
+    /// at least one layer, a non-empty input shape, per-layer codes/bias
+    /// lengths matching the layer geometry, and a consistent shape chain
+    /// (dense layers consume the previous flattened length; conv/pool
+    /// kernels fit their input maps).
+    pub fn validate(&self) -> Result<(), EngineError> {
         if self.layers.is_empty() {
             return Err(EngineError::BadDescriptor {
                 reason: format!("model {} has no layers", self.name),
             });
         }
-        for w in self.layers.windows(2) {
-            if w[0].n != w[1].k {
-                return Err(EngineError::BadDescriptor {
-                    reason: format!(
-                        "layer {} outputs {} features but layer {} expects {}",
-                        w[0].name, w[0].n, w[1].name, w[1].k
-                    ),
-                });
-            }
+        if self.input_shape.is_empty() {
+            return Err(EngineError::BadDescriptor {
+                reason: format!("model {}: empty input shape {}", self.name, self.input_shape),
+            });
         }
         for l in &self.layers {
-            if l.k == 0 || l.n == 0 {
-                return Err(EngineError::BadDescriptor {
-                    reason: format!("layer {}: zero dimension (k={}, n={})", l.name, l.k, l.n),
-                });
-            }
-            if l.codes.len() != l.k * l.n {
-                return Err(EngineError::BadDescriptor {
-                    reason: format!(
-                        "layer {}: {} weight codes != k*n = {}",
-                        l.name,
-                        l.codes.len(),
-                        l.k * l.n
-                    ),
-                });
-            }
-            if l.bias.len() != l.n {
-                return Err(EngineError::BadDescriptor {
-                    reason: format!("layer {}: bias length {} != n={}", l.name, l.bias.len(), l.n),
-                });
+            match l.op {
+                QOp::Dense | QOp::Conv2D { .. } => {
+                    if l.k == 0 || l.n == 0 {
+                        return Err(EngineError::BadDescriptor {
+                            reason: format!(
+                                "layer {}: zero dimension (k={}, n={})",
+                                l.name, l.k, l.n
+                            ),
+                        });
+                    }
+                    if l.codes.len() != l.k * l.n {
+                        return Err(EngineError::BadDescriptor {
+                            reason: format!(
+                                "layer {}: {} weight codes != k*n = {}",
+                                l.name,
+                                l.codes.len(),
+                                l.k * l.n
+                            ),
+                        });
+                    }
+                    if l.bias.len() != l.n {
+                        return Err(EngineError::BadDescriptor {
+                            reason: format!(
+                                "layer {}: bias length {} != n={}",
+                                l.name,
+                                l.bias.len(),
+                                l.n
+                            ),
+                        });
+                    }
+                }
+                QOp::MaxPool2d { .. } => {
+                    if !l.codes.is_empty() || !l.bias.is_empty() {
+                        return Err(EngineError::BadDescriptor {
+                            reason: format!(
+                                "layer {}: pool layers carry no weights ({} codes, {} bias)",
+                                l.name,
+                                l.codes.len(),
+                                l.bias.len()
+                            ),
+                        });
+                    }
+                }
             }
         }
-        Ok(())
+        self.shapes().map(|_| ())
     }
 }
 
@@ -131,7 +293,53 @@ pub fn pack_int4(codes: &[i8]) -> Vec<u8> {
     out
 }
 
+/// Parse a layer's optional `"op"` field (absent = dense, the format
+/// python/compile/export.py has always written).
+fn parse_op(l: &Json) -> Result<QOp> {
+    let Some(op) = l.get("op") else { return Ok(QOp::Dense) };
+    // corrupt geometry must be a load error, never a silent repair: a
+    // non-string op, a negative value, or an explicit stride of 0 would
+    // otherwise load as a DIFFERENT model than the exporter wrote
+    let Some(kind) = op.as_str() else {
+        bail!("layer `op` must be a string, got {op:?}");
+    };
+    let geom = |key: &str| -> Result<usize> {
+        let v = l.get(key).and_then(|v| v.as_i64()).unwrap_or(0);
+        if v < 0 {
+            bail!("layer op field `{key}` must be non-negative, got {v}");
+        }
+        Ok(v as usize)
+    };
+    // absent stride defaults to 1; a present stride must be >= 1
+    let stride = match l.get("stride") {
+        None => 1,
+        Some(_) => {
+            let s = geom("stride")?;
+            if s == 0 {
+                bail!("layer op field `stride` must be >= 1");
+            }
+            s
+        }
+    };
+    match kind {
+        "dense" => Ok(QOp::Dense),
+        "conv2d" => Ok(QOp::Conv2D {
+            kh: geom("kh")?,
+            kw: geom("kw")?,
+            cin: geom("cin")?,
+            cout: geom("cout")?,
+            stride,
+            pad: geom("pad")?,
+        }),
+        "maxpool2d" => Ok(QOp::MaxPool2d { kh: geom("kh")?, kw: geom("kw")?, stride }),
+        other => bail!("unknown layer op `{other}`"),
+    }
+}
+
 /// Load a quantized model from `<dir>/<base>.json` + its `.bin` blob.
+/// Dense-only exports carry no `"op"`/`"input_shape"` fields and load
+/// exactly as before; CNN exports name the op per layer and the model's
+/// `[c, h, w]` input shape.
 pub fn load_qmodel(dir: &Path, base: &str) -> Result<QModel> {
     let meta_path = dir.join(format!("{base}.json"));
     let text = std::fs::read_to_string(&meta_path)
@@ -171,9 +379,27 @@ pub fn load_qmodel(dir: &Path, base: &str) -> Result<QModel> {
             s_in: l.f64("s_in"),
             s_w: l.f64("s_w"),
             s_out: l.f64("s_out"),
+            op: parse_op(l)?,
         });
     }
-    Ok(QModel { name: j.str("model").to_string(), layers })
+    let input_shape = match j.get("input_shape") {
+        // absent = the dense export format: a flat first-layer-k vector
+        None => Shape::vec(layers.first().map_or(0, |l: &QLayer| l.k)),
+        // present but malformed must be a load error, not a silent
+        // fallback that misreports the model's shape downstream
+        Some(v) => {
+            let dims: Option<Vec<usize>> = v.as_arr().and_then(|a| {
+                a.iter()
+                    .map(|d| d.as_i64().filter(|&x| x >= 0).map(|x| x as usize))
+                    .collect()
+            });
+            match dims.as_deref() {
+                Some(&[c, h, w]) => Shape { c, h, w },
+                _ => bail!("input_shape must be a [c, h, w] array of non-negative integers"),
+            }
+        }
+    };
+    Ok(QModel { name: j.str("model").to_string(), input_shape, layers })
 }
 
 /// The float FC-AutoEncoder (off-chip layers) + quantization boundary.
@@ -296,4 +522,104 @@ mod tests {
 
     // full loader round-trips are exercised by rust/tests/test_bitexact.rs
     // once artifacts exist
+
+    fn conv_layer(name: &str, cin: usize, cout: usize, kh: usize, kw: usize, pad: usize) -> QLayer {
+        let k = cin * kh * kw;
+        QLayer {
+            name: name.into(),
+            k,
+            n: cout,
+            relu: true,
+            codes: vec![1; k * cout],
+            bias: vec![0; cout],
+            requant: Requant { m0: 1 << 30, shift: 35, z_out: 0 },
+            z_in: 0,
+            s_in: 1.0,
+            s_w: 1.0,
+            s_out: 1.0,
+            op: QOp::Conv2D { kh, kw, cin, cout, stride: 1, pad },
+        }
+    }
+
+    fn dense_layer(name: &str, k: usize, n: usize) -> QLayer {
+        QLayer {
+            name: name.into(),
+            k,
+            n,
+            relu: false,
+            codes: vec![1; k * n],
+            bias: vec![0; n],
+            requant: Requant { m0: 1 << 30, shift: 35, z_out: 0 },
+            z_in: 0,
+            s_in: 1.0,
+            s_w: 1.0,
+            s_out: 1.0,
+            op: QOp::Dense,
+        }
+    }
+
+    #[test]
+    fn cnn_shape_chain_propagates() {
+        let m = QModel::cnn(
+            "cnn",
+            Shape { c: 1, h: 8, w: 8 },
+            vec![
+                conv_layer("c1", 1, 4, 3, 3, 1),         // (4, 8, 8)
+                QLayer::maxpool("p1", 2, 2, 2),          // (4, 4, 4)
+                conv_layer("c2", 4, 8, 3, 3, 0),         // (8, 2, 2)
+                dense_layer("fc", 32, 10),               // (10, 1, 1)
+            ],
+        );
+        m.validate().expect("valid CNN");
+        let shapes = m.shapes().unwrap();
+        assert_eq!(shapes.len(), 5);
+        assert_eq!(shapes[1], Shape { c: 4, h: 8, w: 8 });
+        assert_eq!(shapes[2], Shape { c: 4, h: 4, w: 4 });
+        assert_eq!(shapes[3], Shape { c: 8, h: 2, w: 2 });
+        assert_eq!(shapes[4], Shape::vec(10));
+        assert_eq!(m.input_len(), 64);
+        assert_eq!(m.output_len().unwrap(), 10);
+        assert_eq!(m.total_cells(), 9 * 4 + 36 * 8 + 320);
+    }
+
+    #[test]
+    fn shape_mismatches_are_typed_errors() {
+        use crate::error::EngineError;
+        // dense head expects the wrong flattened length
+        let m = QModel::cnn(
+            "bad",
+            Shape { c: 1, h: 8, w: 8 },
+            vec![conv_layer("c1", 1, 4, 3, 3, 1), dense_layer("fc", 100, 10)],
+        );
+        assert!(matches!(m.validate(), Err(EngineError::BadDescriptor { .. })));
+        // conv channel count disagrees with the input map
+        let m = QModel::cnn(
+            "bad2",
+            Shape { c: 3, h: 8, w: 8 },
+            vec![conv_layer("c1", 1, 4, 3, 3, 1)],
+        );
+        assert!(matches!(m.validate(), Err(EngineError::BadDescriptor { .. })));
+        // kernel larger than the (padded) input
+        let m = QModel::cnn(
+            "bad3",
+            Shape { c: 1, h: 2, w: 2 },
+            vec![conv_layer("c1", 1, 4, 5, 5, 0)],
+        );
+        assert!(matches!(m.validate(), Err(EngineError::BadDescriptor { .. })));
+        // pool layers must be weightless
+        let mut pool = QLayer::maxpool("p", 2, 2, 2);
+        pool.codes = vec![1];
+        let m = QModel::cnn("bad4", Shape { c: 1, h: 4, w: 4 }, vec![pool]);
+        assert!(matches!(m.validate(), Err(EngineError::BadDescriptor { .. })));
+    }
+
+    #[test]
+    fn mlp_constructor_matches_legacy_semantics() {
+        let m = QModel::mlp("mlp", vec![dense_layer("fc1", 6, 4), dense_layer("fc2", 4, 2)]);
+        assert_eq!(m.input_shape, Shape::vec(6));
+        m.validate().unwrap();
+        // legacy chaining error still rejected (via shape propagation)
+        let bad = QModel::mlp("mlp2", vec![dense_layer("fc1", 6, 4), dense_layer("fc2", 5, 2)]);
+        assert!(bad.validate().is_err());
+    }
 }

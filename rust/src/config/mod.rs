@@ -178,6 +178,11 @@ pub struct NmcuConfig {
     pub pingpong_capacity: usize,
     /// input buffer capacity in int8 elements
     pub input_capacity: usize,
+    /// activation SRAM capacity in int8 elements — the on-chip store
+    /// conv/pool feature maps stream through (the CNN extension of the
+    /// paper's MLP-sized ping-pong buffer; gathers from it cost no bus
+    /// traffic)
+    pub act_capacity: usize,
     /// NMCU clock [Hz] for the cycle model
     pub clock_hz: f64,
     /// EFLASH read latency in NMCU cycles
@@ -195,6 +200,7 @@ impl Default for NmcuConfig {
             lanes_per_pe: 128,
             pingpong_capacity: 1024,
             input_capacity: 1024,
+            act_capacity: 4096,
             clock_hz: 100.0e6,
             read_latency_cycles: 4,
             mac_cycles: 1,
@@ -301,6 +307,7 @@ impl ChipConfig {
             }
             "nmcu.pes_per_macro" => self.nmcu.pes_per_macro = parse_u(value)?,
             "nmcu.lanes_per_pe" => self.nmcu.lanes_per_pe = parse_u(value)?,
+            "nmcu.act_capacity" => self.nmcu.act_capacity = parse_u(value)?,
             "nmcu.clock_hz" => self.nmcu.clock_hz = parse_f(value)?,
             _ => return Err(format!("unknown config key `{key}`")),
         }

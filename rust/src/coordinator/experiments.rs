@@ -270,6 +270,7 @@ mod tests {
             s_in: 1.0 / 255.0,
             s_w: 0.05,
             s_out: 0.1,
+            op: crate::artifacts::QOp::Dense,
         };
         let l2 = QLayer {
             name: "fc2".into(),
@@ -283,8 +284,9 @@ mod tests {
             s_in: 0.1,
             s_w: 0.05,
             s_out: 0.5,
+            op: crate::artifacts::QOp::Dense,
         };
-        let model = QModel { name: "synth".into(), layers: vec![l1, l2] };
+        let model = QModel::mlp("synth", vec![l1, l2]);
         // labels = argmax of the reference model on random images (so the
         // "SW baseline accuracy" is 1.0 by construction)
         let n_test = 40;

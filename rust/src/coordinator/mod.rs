@@ -5,28 +5,67 @@
 
 pub mod experiments;
 
-use crate::artifacts::QModel;
+use crate::artifacts::{QModel, QOp};
 use crate::config::ChipConfig;
 use crate::eflash::program::ProgramReport;
 use crate::eflash::{EflashMacro, Region};
 use crate::error::EngineError;
-use crate::nmcu::{layout_codes, LayerDesc, Nmcu, NmcuStats};
+use crate::nmcu::{layout_codes, ConvDesc, LayerDesc, Nmcu, NmcuStats, PoolDesc, Shape};
+
+/// One planned layer execution: the typed [`QOp`] lowered against the
+/// chip's geometry (EFLASH rows allocated for weighted ops, shapes
+/// resolved for the spatial ops).
+#[derive(Clone, Debug)]
+pub enum PlannedOp {
+    /// A dense MVM launch (the paper's one-instruction layer).
+    Mvm(LayerDesc),
+    /// An im2col-lowered Conv2D schedule over EFLASH-resident filters.
+    Conv(ConvDesc),
+    /// A MaxPool2d pass on the comparator path (no weights).
+    Pool(PoolDesc),
+}
+
+impl PlannedOp {
+    /// The dense MVM descriptor, for firmware paths that drive
+    /// `nmcu.mvm` launches directly (`None` for conv/pool ops).
+    pub fn as_mvm(&self) -> Option<&LayerDesc> {
+        match self {
+            PlannedOp::Mvm(d) => Some(d),
+            _ => None,
+        }
+    }
+
+    /// The EFLASH-backed MVM descriptor of a weighted op — dense or conv
+    /// (`None` for weightless pool layers).
+    pub fn weight_desc(&self) -> Option<&LayerDesc> {
+        match self {
+            PlannedOp::Mvm(d) => Some(d),
+            PlannedOp::Conv(cd) => Some(&cd.mvm),
+            PlannedOp::Pool(_) => None,
+        }
+    }
+}
 
 /// A model programmed into the weight memory.
 #[derive(Clone, Debug)]
 pub struct ProgrammedModel {
     /// model name from the artifacts
     pub name: String,
-    /// per-layer NMCU descriptors (what a launch consumes)
-    pub descs: Vec<LayerDesc>,
-    /// per-layer EFLASH regions
+    /// per-layer execution plans (1:1 with the model's layers)
+    pub ops: Vec<PlannedOp>,
+    /// EFLASH regions of the weighted layers, in execution order (pool
+    /// layers occupy none)
     pub regions: Vec<Region>,
-    /// per-layer ISPP program-verify reports
+    /// ISPP program-verify reports, parallel to `regions`
     pub reports: Vec<ProgramReport>,
-    /// the original artifact codes per layer (for decode-error analyses)
+    /// original artifact codes of the weighted layers (decode analyses)
     pub layer_codes: Vec<Vec<i8>>,
-    /// the EFLASH row-image codes per layer (what was actually programmed)
+    /// EFLASH row images of the weighted layers (what was programmed)
     pub layer_images: Vec<Vec<i8>>,
+    /// activation shape the model consumes
+    pub input_shape: Shape,
+    /// flattened output length the model produces
+    pub output_len: usize,
 }
 
 impl ProgrammedModel {
@@ -38,6 +77,23 @@ impl ProgrammedModel {
     /// Total EFLASH cells the model occupies.
     pub fn total_cells(&self) -> usize {
         self.regions.iter().map(|r| r.n_codes).sum()
+    }
+
+    /// Flattened input length (what `infer` expects).
+    pub fn input_len(&self) -> usize {
+        self.input_shape.len()
+    }
+
+    /// The dense MVM descriptor of layer `i`, when layer `i` is dense
+    /// (single-layer experiment paths, firmware descriptor tables).
+    pub fn mvm_desc(&self, i: usize) -> Option<&LayerDesc> {
+        self.ops.get(i).and_then(|op| op.as_mvm())
+    }
+
+    /// The dense MVM descriptors in execution order (firmware descriptor
+    /// tables; conv/pool ops are not firmware-launchable yet).
+    pub fn mvm_descs(&self) -> impl Iterator<Item = &LayerDesc> {
+        self.ops.iter().filter_map(|op| op.as_mvm())
     }
 }
 
@@ -84,36 +140,98 @@ impl Chip {
     pub fn program_model(&mut self, model: &QModel) -> Result<ProgrammedModel, EngineError> {
         let lanes = self.cfg.nmcu.lanes_per_pe;
         model.validate()?;
+        let shapes = model.shapes()?;
         // NMCU geometry: a model that could never be inferred must not
-        // consume EFLASH rows (the bump allocator has no free). Layer
-        // chaining is already validated, so checking every n plus the
-        // first k covers all layer inputs too.
+        // consume EFLASH rows (the bump allocator has no free).
         let pp = self.cfg.nmcu.pingpong_capacity;
-        for l in &model.layers {
-            if l.n > pp {
-                return Err(EngineError::BadDescriptor {
-                    reason: format!(
-                        "layer {}: n={} exceeds ping-pong half capacity {pp}",
-                        l.name, l.n
-                    ),
-                });
+        let in_cap = self.cfg.nmcu.input_capacity;
+        let act_cap = self.cfg.nmcu.act_capacity;
+        for (i, l) in model.layers.iter().enumerate() {
+            let (in_len, out_len) = (shapes[i].len(), shapes[i + 1].len());
+            match l.op {
+                QOp::Dense => {
+                    if l.n > pp {
+                        return Err(EngineError::BadDescriptor {
+                            reason: format!(
+                                "layer {}: n={} exceeds ping-pong half capacity {pp}",
+                                l.name, l.n
+                            ),
+                        });
+                    }
+                    // a dense layer reads the input buffer when it is
+                    // first or follows a conv/pool stage (re-staged
+                    // feature map); chained dense layers read the
+                    // ping-pong buffer, whose capacity the previous n
+                    // check already covers
+                    let staged =
+                        i == 0 || !matches!(model.layers[i - 1].op, QOp::Dense);
+                    if staged && l.k > in_cap {
+                        return Err(EngineError::BadDescriptor {
+                            reason: format!(
+                                "layer {}: k={} exceeds input buffer capacity {in_cap}",
+                                l.name, l.k
+                            ),
+                        });
+                    }
+                }
+                QOp::Conv2D { .. } => {
+                    if l.n > pp {
+                        return Err(EngineError::BadDescriptor {
+                            reason: format!(
+                                "layer {}: cout={} exceeds ping-pong half capacity {pp}",
+                                l.name, l.n
+                            ),
+                        });
+                    }
+                    if l.k > in_cap {
+                        return Err(EngineError::BadDescriptor {
+                            reason: format!(
+                                "layer {}: im2col patch k={} exceeds input buffer \
+                                 capacity {in_cap}",
+                                l.name, l.k
+                            ),
+                        });
+                    }
+                    if in_len > act_cap || out_len > act_cap {
+                        return Err(EngineError::BadDescriptor {
+                            reason: format!(
+                                "layer {}: feature map (in {in_len}, out {out_len}) \
+                                 exceeds activation SRAM capacity {act_cap}",
+                                l.name
+                            ),
+                        });
+                    }
+                }
+                QOp::MaxPool2d { .. } => {
+                    if in_len > act_cap || out_len > act_cap {
+                        return Err(EngineError::BadDescriptor {
+                            reason: format!(
+                                "layer {}: feature map (in {in_len}, out {out_len}) \
+                                 exceeds activation SRAM capacity {act_cap}",
+                                l.name
+                            ),
+                        });
+                    }
+                }
             }
         }
-        let first = &model.layers[0];
-        if first.k > self.cfg.nmcu.input_capacity {
-            return Err(EngineError::BadDescriptor {
-                reason: format!(
-                    "layer {}: k={} exceeds input buffer capacity {}",
-                    first.name, first.k, self.cfg.nmcu.input_capacity
-                ),
-            });
-        }
-        // build the row images first and size the pre-check from them, so
-        // the capacity math has a single source of truth (layout_codes)
-        let images: Vec<Vec<i8>> =
-            model.layers.iter().map(|l| layout_codes(&l.codes, l.k, l.n, lanes)).collect();
+        // build the row images of the weighted layers first and size the
+        // pre-check from them, so the capacity math has a single source
+        // of truth (layout_codes)
+        let images: Vec<Option<Vec<i8>>> = model
+            .layers
+            .iter()
+            .map(|l| match l.op {
+                QOp::MaxPool2d { .. } => None,
+                _ => Some(layout_codes(&l.codes, l.k, l.n, lanes)),
+            })
+            .collect();
         let cpr = self.eflash.cells_per_read();
-        let rows_needed: usize = images.iter().map(|img| img.len().div_ceil(cpr)).sum();
+        let rows_needed: usize = images
+            .iter()
+            .flatten()
+            .map(|img| img.len().div_ceil(cpr))
+            .sum();
         if rows_needed > self.eflash.rows_free() {
             return Err(EngineError::CapacityExhausted {
                 requested_rows: rows_needed,
@@ -123,13 +241,22 @@ impl Chip {
         }
         let mut pm = ProgrammedModel {
             name: model.name.clone(),
-            descs: Vec::new(),
+            ops: Vec::new(),
             regions: Vec::new(),
             reports: Vec::new(),
             layer_codes: Vec::new(),
             layer_images: Vec::new(),
+            input_shape: model.input_shape,
+            output_len: shapes.last().expect("shapes non-empty").len(),
         };
-        for (l, image) in model.layers.iter().zip(images) {
+        for ((i, l), image) in model.layers.iter().enumerate().zip(images) {
+            let Some(image) = image else {
+                let QOp::MaxPool2d { kh, kw, stride } = l.op else {
+                    unreachable!("only pool layers have no row image");
+                };
+                pm.ops.push(PlannedOp::Pool(PoolDesc { kh, kw, stride, in_shape: shapes[i] }));
+                continue;
+            };
             let Some((region, report)) = self.eflash.program_region(&image) else {
                 // capacity was pre-checked for the whole model above, so
                 // this is an internal invariant violation, not bad input
@@ -141,14 +268,29 @@ impl Chip {
                     failed_cells: report.failed_cells,
                 });
             }
-            pm.descs.push(LayerDesc {
+            let desc = LayerDesc {
                 first_row: region.first_row,
                 k: l.k,
                 n: l.n,
                 bias: l.bias.clone(),
                 requant: l.requant,
                 relu: l.relu,
-            });
+            };
+            match l.op {
+                QOp::Dense => pm.ops.push(PlannedOp::Mvm(desc)),
+                QOp::Conv2D { kh, kw, stride, pad, .. } => {
+                    pm.ops.push(PlannedOp::Conv(ConvDesc {
+                        mvm: desc,
+                        kh,
+                        kw,
+                        stride,
+                        pad,
+                        in_shape: shapes[i],
+                        pad_value: l.z_in,
+                    }));
+                }
+                QOp::MaxPool2d { .. } => unreachable!("pool layers handled above"),
+            }
             pm.regions.push(region);
             pm.reports.push(report);
             pm.layer_codes.push(l.codes.clone());
@@ -157,16 +299,39 @@ impl Chip {
         Ok(pm)
     }
 
-    /// Run one inference through all programmed layers (fully on-chip).
+    /// Run one inference through all programmed layers (fully on-chip):
+    /// dense layers chain through the ping-pong buffer exactly as
+    /// before; conv/pool layers stream their feature maps through the
+    /// activation SRAM (gathers cost no bus traffic). The input crosses
+    /// the bus once, the output once.
     pub fn infer(&mut self, pm: &ProgrammedModel, x_q: &[i8]) -> Result<Vec<i8>, EngineError> {
         self.nmcu.begin_inference();
-        self.nmcu.load_input(x_q)?;
-        let mut out = Vec::new();
-        for d in &pm.descs {
-            out = self.nmcu.execute_layer(&mut self.eflash, d)?;
+        match pm.ops.first() {
+            Some(PlannedOp::Mvm(_)) | None => self.nmcu.load_input(x_q)?,
+            Some(_) => {
+                // conv/pool first: the image is DMA'd straight into the
+                // activation SRAM — same bus cost, exact length required
+                // (spatial gathers have no zero-pad semantics)
+                if x_q.len() != pm.input_len() {
+                    return Err(EngineError::InputSize {
+                        expected: pm.input_len(),
+                        got: x_q.len(),
+                    });
+                }
+                self.nmcu.stats.bus_bytes += x_q.len() as u64;
+            }
         }
-        let n = out.len();
-        Ok(self.nmcu.read_output(n))
+        let mut act = x_q.to_vec();
+        for op in &pm.ops {
+            act = match op {
+                PlannedOp::Mvm(d) => self.nmcu.execute_layer(&mut self.eflash, d)?,
+                PlannedOp::Conv(cd) => self.nmcu.execute_conv(&mut self.eflash, cd, &act)?,
+                PlannedOp::Pool(pd) => self.nmcu.execute_pool(pd, &act)?,
+            };
+        }
+        // result readback over the bus
+        self.nmcu.stats.bus_bytes += act.len() as u64;
+        Ok(act)
     }
 
     /// Run a single programmed layer (the Fig 7 on-chip layer 9 path).
@@ -193,10 +358,13 @@ impl Chip {
     }
 
     /// Decoded (possibly drifted) codes of a programmed layer, in the
-    /// original row-major (K, N) order.
+    /// original row-major (K, N) order. Weightless pool layers decode to
+    /// an empty vector (they occupy no EFLASH cells).
     pub fn decoded_codes(&mut self, pm: &ProgrammedModel, layer: usize) -> Vec<i8> {
         let lanes = self.cfg.nmcu.lanes_per_pe;
-        let d = &pm.descs[layer];
+        let Some(d) = pm.ops[layer].weight_desc() else {
+            return Vec::new();
+        };
         let k_tiles = d.k.div_ceil(lanes);
         let mut out = vec![0i8; d.k * d.n];
         let cpr = self.eflash.cells_per_read();
@@ -248,10 +416,11 @@ mod tests {
             s_in: 1.0 / 255.0,
             s_w: 0.05,
             s_out: 0.1,
+            op: crate::artifacts::QOp::Dense,
         };
         let l1 = mk(&mut r, "fc1", 100, 16, true);
         let l2 = mk(&mut r, "fc2", 16, 4, false);
-        QModel { name: "synth".into(), layers: vec![l1, l2] }
+        QModel::mlp("synth", vec![l1, l2])
     }
 
     #[test]
@@ -260,7 +429,7 @@ mod tests {
         let mut chip = Chip::new(&cfg);
         let model = synth_model(9);
         let pm = chip.program_model(&model).unwrap();
-        assert_eq!(pm.descs.len(), 2);
+        assert_eq!(pm.ops.len(), 2);
         assert!(pm.total_pulses() > 0);
         let mut r = Rng::new(10);
         for _ in 0..5 {
@@ -314,6 +483,68 @@ mod tests {
         assert!(
             matches!(err, EngineError::CapacityExhausted { .. }),
             "expected CapacityExhausted, got {err:?}"
+        );
+    }
+
+    #[test]
+    fn cnn_programs_and_matches_reference() {
+        let cfg = chip_cfg();
+        let mut chip = Chip::new(&cfg);
+        let mut r = Rng::new(21);
+        let model = crate::datasets::synthetic_mnist_cnn(&mut r);
+        let pm = chip.program_model(&model).unwrap();
+        assert_eq!(pm.ops.len(), model.layers.len());
+        // pool layers occupy no EFLASH: regions only cover weighted ops
+        let weighted = model
+            .layers
+            .iter()
+            .filter(|l| !matches!(l.op, QOp::MaxPool2d { .. }))
+            .count();
+        assert_eq!(pm.regions.len(), weighted);
+        assert_eq!(pm.total_cells(), model.total_cells());
+        for _ in 0..3 {
+            let x: Vec<i8> =
+                (0..model.input_len()).map(|_| (r.below(256) as i32 - 128) as i8).collect();
+            let got = chip.infer(&pm, &x).unwrap();
+            let want = qmodel_forward(&model, &x);
+            assert_eq!(got, want, "CNN chip vs reference");
+            assert_eq!(got.len(), pm.output_len);
+        }
+    }
+
+    #[test]
+    fn cnn_moves_only_input_and_output_over_the_bus() {
+        let cfg = chip_cfg();
+        let mut chip = Chip::new(&cfg);
+        let mut r = Rng::new(22);
+        let model = crate::datasets::synthetic_mnist_cnn(&mut r);
+        let pm = chip.program_model(&model).unwrap();
+        chip.reset_stats();
+        let x = vec![0i8; model.input_len()];
+        let y = chip.infer(&pm, &x).unwrap();
+        // intermediate feature maps stay on-chip (activation SRAM +
+        // ping-pong): bus traffic is exactly input + output
+        assert_eq!(chip.stats().bus_bytes, (x.len() + y.len()) as u64);
+        assert!(chip.stats().eflash_reads > 0);
+    }
+
+    #[test]
+    fn oversized_feature_map_rejected_at_program_time() {
+        let mut cfg = chip_cfg();
+        cfg.nmcu.act_capacity = 64; // shrink the activation SRAM
+        let mut chip = Chip::new(&cfg);
+        let mut r = Rng::new(23);
+        let model = crate::datasets::synthetic_cnn(
+            &mut r,
+            "big",
+            Shape { c: 1, h: 10, w: 10 },
+            &[4],
+            4,
+        );
+        let err = chip.program_model(&model).unwrap_err();
+        assert!(
+            matches!(err, EngineError::BadDescriptor { .. }),
+            "expected BadDescriptor, got {err:?}"
         );
     }
 }

@@ -1,8 +1,9 @@
 //! Test-set loaders (byte formats written by python/compile/export.py)
-//! plus a synthetic workload generator for benches that don't need the
-//! trained models.
+//! plus synthetic model generators — a dense MLP and int4 CNNs
+//! (keyword-spotting / MNIST-shaped) — for the serving CLI, benches,
+//! examples, and property tests that don't need the trained models.
 
-use crate::artifacts::{QLayer, QModel};
+use crate::artifacts::{QLayer, QModel, QOp, Shape};
 use crate::nmcu::Requant;
 use crate::util::rng::Rng;
 use anyhow::{bail, Context, Result};
@@ -27,11 +28,127 @@ pub fn synthetic_qmodel(r: &mut Rng, name: &str, k: usize, h: usize, c: usize) -
         s_in: 1.0 / 255.0,
         s_w: 0.05,
         s_out: 0.1,
+        op: QOp::Dense,
     };
-    QModel {
+    QModel::mlp(name, vec![layer("fc1", k, h, true, r), layer("fc2", h, c, false, r)])
+}
+
+/// Requantization constants scaled to a layer's fan-in: the multiplier
+/// targets `~0.45/sqrt(k)` so random int4 weights against full-range
+/// int8 inputs land in a healthy (non-saturated, non-degenerate) int8
+/// output range. `m0` is normalized into `[2^30, 2^31)` like the python
+/// exporter's constants.
+fn requant_for(k: usize, z_out: i8) -> Requant {
+    let s = 0.45 / (k.max(1) as f64).sqrt();
+    let shift = (31.0 - s.log2()).floor() as u32;
+    let m0 = (s * (1u64 << shift) as f64).round() as i64;
+    Requant { m0: m0.clamp(1 << 30, (1 << 31) - 1) as i32, shift, z_out }
+}
+
+/// A random int4 Conv2D layer (`kh` x `kw`, `stride`, `pad`) with
+/// requantization scaled to its `cin*kh*kw` fan-in. Filters are stored
+/// as the im2col weight matrix, ready for EFLASH programming.
+#[allow(clippy::too_many_arguments)]
+pub fn conv_layer(
+    r: &mut Rng,
+    name: &str,
+    cin: usize,
+    cout: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    relu: bool,
+) -> QLayer {
+    let k = cin * kh * kw;
+    QLayer {
         name: name.into(),
-        layers: vec![layer("fc1", k, h, true, r), layer("fc2", h, c, false, r)],
+        k,
+        n: cout,
+        relu,
+        codes: (0..k * cout).map(|_| (r.below(16) as i8) - 8).collect(),
+        bias: (0..cout).map(|_| (r.below(2000) as i32) - 1000).collect(),
+        requant: requant_for(k, (r.below(13) as i32 - 6) as i8),
+        z_in: -128,
+        s_in: 1.0 / 255.0,
+        s_w: 0.05,
+        s_out: 0.1,
+        op: QOp::Conv2D { kh, kw, cin, cout, stride, pad },
     }
+}
+
+/// A random int4 dense layer with requantization scaled to its fan-in
+/// (the classifier head the CNN generators attach after flatten).
+pub fn dense_layer(r: &mut Rng, name: &str, k: usize, n: usize, relu: bool) -> QLayer {
+    QLayer {
+        name: name.into(),
+        k,
+        n,
+        relu,
+        codes: (0..k * n).map(|_| (r.below(16) as i8) - 8).collect(),
+        bias: (0..n).map(|_| (r.below(2000) as i32) - 1000).collect(),
+        requant: requant_for(k, (r.below(13) as i32 - 6) as i8),
+        z_in: -128,
+        s_in: 1.0 / 255.0,
+        s_w: 0.05,
+        s_out: 0.1,
+        op: QOp::Dense,
+    }
+}
+
+/// A deterministic random int4 CNN: for each entry of `channels`, a
+/// 3x3 stride-1 pad-1 conv (ReLU) followed — while the map is at least
+/// 2x2 — by a 2x2 stride-2 max-pool; then a dense classifier head to
+/// `classes` logits. The im2col-flattened filters and the head all fit
+/// the NMCU geometry for any input map within the activation SRAM.
+pub fn synthetic_cnn(
+    r: &mut Rng,
+    name: &str,
+    input: Shape,
+    channels: &[usize],
+    classes: usize,
+) -> QModel {
+    let mut layers: Vec<QLayer> = Vec::new();
+    let mut shape = input;
+    for (i, &cout) in channels.iter().enumerate() {
+        let conv = conv_layer(r, &format!("conv{}", i + 1), shape.c, cout, 3, 3, 1, 1, true);
+        shape = conv.out_shape(shape).expect("3x3 pad-1 conv always fits");
+        layers.push(conv);
+        if shape.h >= 2 && shape.w >= 2 {
+            let pool = QLayer::maxpool(&format!("pool{}", i + 1), 2, 2, 2);
+            shape = pool.out_shape(shape).expect("2x2 pool fits a >=2x2 map");
+            layers.push(pool);
+        }
+    }
+    layers.push(dense_layer(r, "fc", shape.len(), classes, false));
+    QModel::cnn(name, input, layers)
+}
+
+/// The MNIST-CNN stand-in: a 12x12 single-channel image through two
+/// conv+pool stages (8 then 16 filters) and a 10-way dense head —
+/// `(1,12,12) -> (8,12,12) -> (8,6,6) -> (16,6,6) -> (16,3,3) -> 10`.
+pub fn synthetic_mnist_cnn(r: &mut Rng) -> QModel {
+    synthetic_cnn(r, "synthetic-mnist-cnn", Shape { c: 1, h: 12, w: 12 }, &[8, 16], 10)
+}
+
+/// The keyword-spotting stand-in: a 32x10 MFCC-like map (32 frames x 10
+/// coefficients) through two conv+pool stages and a 12-keyword head —
+/// `(1,32,10) -> (4,32,10) -> (4,16,5) -> (8,16,5) -> (8,8,2) -> 12`.
+pub fn synthetic_kws_cnn(r: &mut Rng) -> QModel {
+    synthetic_cnn(r, "synthetic-kws-cnn", Shape { c: 1, h: 32, w: 10 }, &[4, 8], 12)
+}
+
+/// A dense `k -> h -> classes` MLP sized so its logical MAC count
+/// matches `cnn`'s — the FLOP-equivalent baseline the conv benches
+/// (`nvmcu bench-conv`, `cargo bench --bench conv`) compare against.
+/// Same input and output widths as the CNN, hidden width solved from
+/// `k*h + h*classes = macs`.
+pub fn mac_matched_mlp(r: &mut Rng, name: &str, cnn: &QModel) -> QModel {
+    let macs = crate::models::logical_macs(cnn) as usize;
+    let k = cnn.input_len().max(1);
+    let classes = cnn.output_len().unwrap_or(1).max(1);
+    let h = (macs / (k + classes)).max(1);
+    synthetic_qmodel(r, name, k, h, classes)
 }
 
 /// MNIST-like test set: 28x28 u8 images + labels.
@@ -188,6 +305,60 @@ mod tests {
         assert!(m.layers[0].codes.iter().all(|&c| (-8..=7).contains(&c)));
         let m2 = synthetic_qmodel(&mut Rng::new(9), "syn", 64, 8, 4);
         assert_eq!(m.layers[0].codes, m2.layers[0].codes);
+    }
+
+    #[test]
+    fn synthetic_cnns_validate_and_fit_the_chip() {
+        for (model, classes) in [
+            (synthetic_mnist_cnn(&mut Rng::new(5)), 10usize),
+            (synthetic_kws_cnn(&mut Rng::new(5)), 12usize),
+        ] {
+            model.validate().expect("generator builds valid CNNs");
+            let shapes = model.shapes().unwrap();
+            // >= 2 conv stages + pool + dense head (the acceptance shape)
+            let convs = model
+                .layers
+                .iter()
+                .filter(|l| matches!(l.op, crate::artifacts::QOp::Conv2D { .. }))
+                .count();
+            let pools = model
+                .layers
+                .iter()
+                .filter(|l| matches!(l.op, crate::artifacts::QOp::MaxPool2d { .. }))
+                .count();
+            assert!(convs >= 2 && pools >= 1);
+            assert_eq!(model.output_len().unwrap(), classes);
+            // every feature map fits the default activation SRAM and the
+            // dense head fits the input buffer
+            let cfg = crate::config::NmcuConfig::default();
+            for s in &shapes {
+                assert!(s.len() <= cfg.act_capacity, "map {s} too big");
+            }
+            for l in &model.layers {
+                if matches!(l.op, crate::artifacts::QOp::Conv2D { .. }) {
+                    assert!(l.k <= cfg.input_capacity);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cnn_outputs_are_not_degenerate() {
+        // the fan-in-scaled requant must produce varying logits, not a
+        // wall of -128/127
+        let mut r = Rng::new(8);
+        let model = synthetic_mnist_cnn(&mut r);
+        let mut distinct = std::collections::BTreeSet::new();
+        for i in 0..8 {
+            let x: Vec<i8> = (0..model.input_len())
+                .map(|j| ((i * 37 + j * 11) % 256) as i32 as u8 as i8)
+                .collect();
+            let y = crate::models::qmodel_forward(&model, &x);
+            assert_eq!(y.len(), 10);
+            distinct.extend(y.iter().copied());
+        }
+        assert!(distinct.len() > 4, "degenerate logits: {distinct:?}");
+        assert!(distinct.iter().any(|&v| v > -128 && v < 127));
     }
 
     #[test]

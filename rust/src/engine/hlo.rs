@@ -89,6 +89,18 @@ impl Backend for HloBackend {
 
     fn program(&mut self, model: &QModel) -> Result<ModelHandle> {
         model.validate()?;
+        // only dense MLPs are AOT-compiled by python/compile/aot.py; the
+        // conv/pool workloads run on the nmcu/reference backends
+        if model.layers.iter().any(|l| !matches!(l.op, crate::artifacts::QOp::Dense)) {
+            return Err(EngineError::Backend {
+                backend: "hlo",
+                reason: format!(
+                    "{}: conv/pool layers have no AOT HLO graphs yet — serve CNNs \
+                     through the nmcu or reference backend",
+                    model.name
+                ),
+            });
+        }
         let first = &model.layers[0];
         let exe = self
             .rt

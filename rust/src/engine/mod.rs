@@ -27,6 +27,13 @@
 //! `ProgrammedModel` around. All failures are typed [`EngineError`]
 //! values — nothing on the program/infer path panics on bad input.
 //!
+//! I/O is shape-checked: a model declares its
+//! [`Shape`](crate::artifacts::Shape) chain (dense vectors or
+//! channel-major conv/pool feature maps), every backend validates it at
+//! program time, and `infer`/`infer_batch` take the flattened
+//! `input_len` vector — so CNNs flow through batching, sharding, and
+//! the scheduler with no operator-specific code above the chip.
+//!
 //! ```no_run
 //! use nvmcu::config::ChipConfig;
 //! use nvmcu::engine::Engine;
@@ -83,6 +90,25 @@ impl ModelHandle {
     pub fn index(&self) -> usize {
         self.0
     }
+}
+
+/// Bench/CLI correctness gate shared by `nvmcu bench-conv` and
+/// `rust/benches/conv.rs` (the [`server::burst_trial`] pattern: a
+/// measurement harness, not a serving path — it panics on divergence,
+/// because a perf run must never time a wrong kernel). Programs `model`
+/// into a fresh chip and into the software reference and compares one
+/// inference on `x`.
+pub fn assert_chip_matches_reference(cfg: &ChipConfig, model: &QModel, x: &[i8]) {
+    let mut chip = NmcuBackend::new(cfg);
+    let hc = chip.program(model).expect("program (chip)");
+    let mut sw = ReferenceBackend::new();
+    let hs = sw.program(model).expect("program (reference)");
+    assert_eq!(
+        chip.infer(hc, x).expect("chip infer"),
+        sw.infer(hs, x).expect("reference infer"),
+        "{} diverged between the chip and the software reference",
+        model.name
+    );
 }
 
 /// Shared registry lookup used by every backend.

@@ -45,12 +45,13 @@ impl NmcuBackend {
         lookup(&self.models, handle)
     }
 
-    /// Decoded (possibly drifted) codes of one layer of a resident model.
+    /// Decoded (possibly drifted) codes of one layer of a resident model
+    /// (weightless pool layers decode to an empty vector).
     pub fn decoded_codes(&mut self, handle: ModelHandle, layer: usize) -> Result<Vec<i8>> {
         let pm = lookup(&self.models, handle)?;
-        if layer >= pm.descs.len() {
+        if layer >= pm.ops.len() {
             return Err(EngineError::BadDescriptor {
-                reason: format!("layer {layer} out of range ({} layers)", pm.descs.len()),
+                reason: format!("layer {layer} out of range ({} layers)", pm.ops.len()),
             });
         }
         Ok(self.chip.decoded_codes(pm, layer))
@@ -70,12 +71,11 @@ impl Backend for NmcuBackend {
 
     fn infer(&mut self, handle: ModelHandle, x: &[i8]) -> Result<Vec<i8>> {
         let pm = lookup(&self.models, handle)?;
-        // uniform Backend contract: exact input dimension, like HloBackend
-        // (Chip::infer itself keeps the hardware's zero-pad semantics)
-        if let Some(d) = pm.descs.first() {
-            if x.len() != d.k {
-                return Err(EngineError::InputSize { expected: d.k, got: x.len() });
-            }
+        // uniform Backend contract: exact (flattened) input dimension,
+        // like HloBackend (Chip::infer itself keeps the hardware's
+        // zero-pad semantics on the dense path)
+        if x.len() != pm.input_len() {
+            return Err(EngineError::InputSize { expected: pm.input_len(), got: x.len() });
         }
         self.chip.infer(pm, x)
     }
@@ -87,9 +87,9 @@ impl Backend for NmcuBackend {
     fn model_info(&self, handle: ModelHandle) -> Option<ModelInfo> {
         self.models.get(handle.index()).map(|pm| ModelInfo {
             name: pm.name.clone(),
-            input_dim: pm.descs.first().map_or(0, |d| d.k),
-            output_dim: pm.descs.last().map_or(0, |d| d.n),
-            n_layers: pm.descs.len(),
+            input_dim: pm.input_len(),
+            output_dim: pm.output_len,
+            n_layers: pm.ops.len(),
         })
     }
 

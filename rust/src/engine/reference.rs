@@ -5,13 +5,26 @@
 
 use super::{lookup, Backend, EngineError, ModelHandle, ModelInfo, Result};
 use crate::artifacts::QModel;
-use crate::models::qmodel_forward;
+use crate::models::{logical_macs, qmodel_forward};
 use crate::nmcu::NmcuStats;
+
+/// A resident model plus the per-inference accounting computed once at
+/// program time (shape propagation is validated there, so serving never
+/// recomputes or re-fails it).
+struct RefModel {
+    model: QModel,
+    input_len: usize,
+    output_len: usize,
+    /// logical MACs per inference (see `models::logical_macs`)
+    macs: u64,
+    /// int8 activations produced per inference (all layer outputs)
+    writebacks: u64,
+}
 
 /// The pure-software reference [`Backend`] (no device model, no drift).
 #[derive(Default)]
 pub struct ReferenceBackend {
-    models: Vec<QModel>,
+    models: Vec<RefModel>,
     stats: NmcuStats,
 }
 
@@ -28,32 +41,37 @@ impl Backend for ReferenceBackend {
     }
 
     fn program(&mut self, model: &QModel) -> Result<ModelHandle> {
-        // shared structural validation so serving can't hit a shape
-        // mismatch mid-batch (same checks as the chip backend)
+        // shared structural + shape validation so serving can't hit a
+        // shape mismatch mid-batch (same checks as the chip backend)
         model.validate()?;
-        self.models.push(model.clone());
+        let shapes = model.shapes()?;
+        self.models.push(RefModel {
+            input_len: model.input_len(),
+            output_len: shapes.last().expect("shapes non-empty").len(),
+            macs: logical_macs(model),
+            writebacks: shapes.iter().skip(1).map(|s| s.len() as u64).sum(),
+            model: model.clone(),
+        });
         Ok(ModelHandle::from_index(self.models.len() - 1))
     }
 
     fn infer(&mut self, handle: ModelHandle, x: &[i8]) -> Result<Vec<i8>> {
-        let model = lookup(&self.models, handle)?;
-        // uniform Backend contract: exact input dimension
-        let expected = model.layers[0].k;
-        if x.len() != expected {
-            return Err(EngineError::InputSize { expected, got: x.len() });
+        let m = lookup(&self.models, handle)?;
+        // uniform Backend contract: exact (flattened) input dimension
+        if x.len() != m.input_len {
+            return Err(EngineError::InputSize { expected: m.input_len, got: x.len() });
         }
-        let out = qmodel_forward(model, x);
+        let out = qmodel_forward(&m.model, x);
         // bookkeeping: bus bytes = model input + output, like the NMCU.
-        // mac_ops counts LOGICAL k*n MACs; the NMCU backend reports
-        // PHYSICAL padded-lane MACs (k rounded up to the 128-lane read
-        // width) because its energy model is built on them — compare
-        // mac_ops across backends only with that distinction in mind.
+        // mac_ops counts LOGICAL MACs (k*n per dense layer, k*n per
+        // output position for conv); the NMCU backend reports PHYSICAL
+        // padded-lane MACs (k rounded up to the 128-lane read width)
+        // because its energy model is built on them — compare mac_ops
+        // across backends only with that distinction in mind.
         self.stats.bus_bytes += (x.len() + out.len()) as u64;
-        for l in &model.layers {
-            self.stats.mac_ops += (l.k * l.n) as u64;
-            self.stats.writebacks += l.n as u64;
-            self.stats.layers_run += 1;
-        }
+        self.stats.mac_ops += m.macs;
+        self.stats.writebacks += m.writebacks;
+        self.stats.layers_run += m.model.layers.len() as u64;
         Ok(out)
     }
 
@@ -63,10 +81,10 @@ impl Backend for ReferenceBackend {
 
     fn model_info(&self, handle: ModelHandle) -> Option<ModelInfo> {
         self.models.get(handle.index()).map(|m| ModelInfo {
-            name: m.name.clone(),
-            input_dim: m.layers[0].k,
-            output_dim: m.layers.last().map_or(0, |l| l.n),
-            n_layers: m.layers.len(),
+            name: m.model.name.clone(),
+            input_dim: m.input_len,
+            output_dim: m.output_len,
+            n_layers: m.model.layers.len(),
         })
     }
 

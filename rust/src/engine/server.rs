@@ -48,7 +48,7 @@
 //! # Example: serve a model through the scheduler
 //!
 //! ```
-//! use nvmcu::artifacts::{QLayer, QModel};
+//! use nvmcu::artifacts::{QLayer, QModel, QOp};
 //! use nvmcu::engine::{Backend, BatchPolicy, InferenceServer, ReferenceBackend};
 //! use nvmcu::nmcu::Requant;
 //!
@@ -57,9 +57,9 @@
 //!     name: "fc".into(), k: 4, n: 2, relu: false,
 //!     codes: vec![1i8; 8], bias: vec![3, -3],
 //!     requant: Requant { m0: 1 << 30, shift: 30, z_out: 0 },
-//!     z_in: 0, s_in: 1.0, s_w: 1.0, s_out: 1.0,
+//!     z_in: 0, s_in: 1.0, s_w: 1.0, s_out: 1.0, op: QOp::Dense,
 //! };
-//! let model = QModel { name: "tiny".into(), layers: vec![layer] };
+//! let model = QModel::mlp("tiny", vec![layer]);
 //!
 //! let mut backend = ReferenceBackend::new();
 //! let handle = backend.program(&model)?;
@@ -311,7 +311,7 @@ impl ServerClient {
 /// backend) — or just drop it (drains, discards the backend).
 ///
 /// ```
-/// use nvmcu::artifacts::{QLayer, QModel};
+/// use nvmcu::artifacts::{QLayer, QModel, QOp};
 /// use nvmcu::engine::{Backend, BatchPolicy, InferenceServer, ReferenceBackend};
 /// use nvmcu::nmcu::Requant;
 ///
@@ -319,9 +319,9 @@ impl ServerClient {
 ///     name: "fc".into(), k: 2, n: 1, relu: false,
 ///     codes: vec![1i8, 1], bias: vec![0],
 ///     requant: Requant { m0: 1 << 30, shift: 30, z_out: 0 },
-///     z_in: 0, s_in: 1.0, s_w: 1.0, s_out: 1.0,
+///     z_in: 0, s_in: 1.0, s_w: 1.0, s_out: 1.0, op: QOp::Dense,
 /// };
-/// let model = QModel { name: "sum2".into(), layers: vec![layer] };
+/// let model = QModel::mlp("sum2", vec![layer]);
 /// let mut backend = ReferenceBackend::new();
 /// let handle = backend.program(&model)?;
 ///

@@ -19,6 +19,17 @@
 //!   Pallas NMCU kernel, AOT-lowered to HLO text executed by `runtime`
 //!   via PJRT (`--features pjrt`) — the "software baseline" of Table 1.
 //!
+//! ## Workloads
+//!
+//! Models are typed [`artifacts::QOp`] chains: dense MLPs (the paper's
+//! workloads) plus first-class int4 `Conv2D`/`MaxPool2d` operators —
+//! conv layers keep their filters in EFLASH as im2col weight matrices
+//! and execute as per-position MVMs on the same read/PE/requant
+//! datapath, so CNNs (keyword spotting, MNIST-CNN; see
+//! [`datasets::synthetic_kws_cnn`]) serve through every backend and the
+//! scheduler bit-exact to the software reference
+//! (`rust/tests/test_properties.rs`).
+//!
 //! ## The `engine` API
 //!
 //! [`engine`] is the public serving surface: a [`engine::Backend`] trait

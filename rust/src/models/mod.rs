@@ -1,35 +1,106 @@
 //! Model-level operations in pure rust: quantized-layer reference math
-//! (held bit-exact to the NMCU and the HLO graph) and the float
-//! AutoEncoder path used when PJRT is not on the menu (tests, ablations).
+//! (held bit-exact to the NMCU and the HLO graph), the im2col conv/pool
+//! reference composition, and the float AutoEncoder path used when PJRT
+//! is not on the menu (tests, ablations).
 
-use crate::artifacts::{AeFloat, QLayer, QModel};
-use crate::nmcu::{quant, reference_mvm};
+use crate::artifacts::{AeFloat, QLayer, QModel, QOp, Shape};
+use crate::nmcu::{gather_patch, maxpool2d, quant, reference_mvm};
 
-/// Run a full quantized model (all layers) through the software reference
-/// path. Input is the int8 input vector; returns the final int8 outputs.
+/// Reference Conv2D with an explicit code matrix (drift analyses):
+/// im2col patches composed through [`reference_mvm`] per output
+/// position, scattered into the channel-major output map. This is the
+/// oracle `Nmcu::execute_conv` is held bit-exact to — both paths share
+/// [`gather_patch`], and each position is exactly one dense MVM.
+pub fn conv2d_reference_with(l: &QLayer, codes: &[i8], x: &[i8], in_shape: Shape) -> Vec<i8> {
+    let QOp::Conv2D { kh, kw, cout, stride, pad, .. } = l.op else {
+        panic!("layer {} is not a Conv2D", l.name);
+    };
+    let os = l.out_shape(in_shape).expect("validated conv shape");
+    let plane = os.h * os.w;
+    let mut out = vec![0i8; os.len()];
+    let mut patch = vec![0i8; l.k];
+    for r in 0..os.h {
+        for q in 0..os.w {
+            gather_patch(x, in_shape, kh, kw, stride, pad, l.z_in, r, q, &mut patch);
+            let col = reference_mvm(&patch, codes, l.k, l.n, &l.bias, l.requant, l.relu);
+            debug_assert_eq!(col.len(), cout);
+            for (c, &v) in col.iter().enumerate() {
+                out[c * plane + r * os.w + q] = v;
+            }
+        }
+    }
+    out
+}
+
+/// Reference Conv2D over the layer's own codes (see
+/// [`conv2d_reference_with`]).
+pub fn conv2d_reference(l: &QLayer, x: &[i8], in_shape: Shape) -> Vec<i8> {
+    conv2d_reference_with(l, &l.codes, x, in_shape)
+}
+
+/// One layer of the reference path with an explicit code matrix.
+fn layer_forward(l: &QLayer, codes: &[i8], x: &[i8], in_shape: Shape) -> Vec<i8> {
+    match l.op {
+        QOp::Dense => reference_mvm(x, codes, l.k, l.n, &l.bias, l.requant, l.relu),
+        QOp::Conv2D { .. } => conv2d_reference_with(l, codes, x, in_shape),
+        QOp::MaxPool2d { kh, kw, stride } => maxpool2d(x, in_shape, kh, kw, stride),
+    }
+}
+
+/// Run a full quantized model (dense, conv, and pool layers) through the
+/// software reference path. Input is the int8 input vector (channel-major
+/// flattened for CNNs); returns the final int8 outputs.
 pub fn qmodel_forward(model: &QModel, x_q: &[i8]) -> Vec<i8> {
     let mut h = x_q.to_vec();
+    let mut shape = model.input_shape;
     for l in &model.layers {
-        h = reference_mvm(&h, &l.codes, l.k, l.n, &l.bias, l.requant, l.relu);
+        h = layer_forward(l, &l.codes, &h, shape);
+        shape = l.out_shape(shape).expect("validated model");
     }
     h
 }
 
 /// Same, but with a per-layer override of the weight codes (for running
-/// against EFLASH-decoded, possibly drifted, codes).
+/// against EFLASH-decoded, possibly drifted, codes). `codes_per_layer`
+/// parallels `model.layers`; entries for weightless pool layers are
+/// ignored (pass empty vectors).
 pub fn qmodel_forward_with(
     model: &QModel,
     codes_per_layer: &[Vec<i8>],
     x_q: &[i8],
 ) -> Vec<i8> {
     let mut h = x_q.to_vec();
+    let mut shape = model.input_shape;
     for (l, codes) in model.layers.iter().zip(codes_per_layer) {
-        h = reference_mvm(&h, codes, l.k, l.n, &l.bias, l.requant, l.relu);
+        h = layer_forward(l, codes, &h, shape);
+        shape = l.out_shape(shape).expect("validated model");
     }
     h
 }
 
+/// Logical MAC count of one inference (sum over weighted layers of
+/// `k * n`, times the output positions for conv layers; pool layers are
+/// free). This is the FLOP-equivalence yardstick `bench-conv` uses to
+/// build a dense model matched to a CNN.
+pub fn logical_macs(model: &QModel) -> u64 {
+    let Ok(shapes) = model.shapes() else { return 0 };
+    let mut total = 0u64;
+    for (l, out) in model.layers.iter().zip(shapes.iter().skip(1)) {
+        total += match l.op {
+            QOp::Dense => (l.k * l.n) as u64,
+            QOp::Conv2D { .. } => (l.k * l.n * out.h * out.w) as u64,
+            QOp::MaxPool2d { .. } => 0,
+        };
+    }
+    total
+}
+
 /// argmax over int8 logits (MNIST classification head).
+///
+/// Tie-breaking is deterministic: the FIRST maximum wins (strict `>`
+/// comparison), for any logit values including all-negative vectors.
+/// Every scoring path in the crate — experiments, CLI, firmware — uses
+/// this rule, so accuracies are comparable bit-for-bit across backends.
 pub fn argmax_i8(v: &[i8]) -> usize {
     let mut best = 0usize;
     for (i, &x) in v.iter().enumerate() {
@@ -158,8 +229,9 @@ mod tests {
             s_in: 1.0,
             s_w: 1.0,
             s_out: 1.0,
+            op: QOp::Dense,
         };
-        QModel { name: "tiny".into(), layers: vec![l1] }
+        QModel::mlp("tiny", vec![l1])
     }
 
     #[test]
@@ -177,6 +249,91 @@ mod tests {
     fn argmax_ties_take_first() {
         assert_eq!(argmax_i8(&[1, 5, 5, 2]), 1);
         assert_eq!(argmax_i8(&[-3]), 0);
+        // documented first-max-wins determinism: repeated maxima anywhere
+        assert_eq!(argmax_i8(&[7, 7, 7]), 0);
+        assert_eq!(argmax_i8(&[0, 3, 1, 3]), 1);
+    }
+
+    #[test]
+    fn argmax_all_negative_logits() {
+        // all-negative vectors must pick the (first) largest, not index 0
+        // by accident of initialization
+        assert_eq!(argmax_i8(&[-50, -3, -40]), 1);
+        assert_eq!(argmax_i8(&[-128, -128, -127, -127]), 2);
+        assert_eq!(argmax_i8(&[-1, -2, -3]), 0);
+    }
+
+    #[test]
+    fn conv_reference_matches_manual_3x3() {
+        // 1 input channel 3x3, one 2x2 filter, stride 1, no padding:
+        // identity requant (m0/2^shift == 1), so outputs are the raw sums
+        let l = QLayer {
+            name: "c".into(),
+            k: 4,
+            n: 1,
+            relu: false,
+            codes: vec![1, 2, 3, 4], // (K=4, N=1): taps rowmajor in window
+            bias: vec![0],
+            requant: Requant { m0: 1 << 30, shift: 30, z_out: 0 },
+            z_in: 0,
+            s_in: 1.0,
+            s_w: 1.0,
+            s_out: 1.0,
+            op: QOp::Conv2D { kh: 2, kw: 2, cin: 1, cout: 1, stride: 1, pad: 0 },
+        };
+        let s = Shape { c: 1, h: 3, w: 3 };
+        let x = [1i8, 2, 3, 4, 5, 6, 7, 8, 9];
+        let y = conv2d_reference(&l, &x, s);
+        // out(r,q) = 1*x[r,q] + 2*x[r,q+1] + 3*x[r+1,q] + 4*x[r+1,q+1]
+        assert_eq!(y, vec![1 + 4 + 12 + 20, 2 + 6 + 15 + 24, 4 + 10 + 21 + 32, 5 + 12 + 24 + 36]);
+    }
+
+    #[test]
+    fn conv_padding_reads_the_zero_point() {
+        // 1x1 input, 3x3 kernel pad 1: every tap but the center is padded
+        let mut codes = vec![1i8; 9];
+        codes[4] = 0; // zero the center tap
+        let l = QLayer {
+            name: "c".into(),
+            k: 9,
+            n: 1,
+            relu: false,
+            codes,
+            bias: vec![0],
+            requant: Requant { m0: 1 << 30, shift: 30, z_out: 0 },
+            z_in: -5,
+            s_in: 1.0,
+            s_w: 1.0,
+            s_out: 1.0,
+            op: QOp::Conv2D { kh: 3, kw: 3, cin: 1, cout: 1, stride: 1, pad: 1 },
+        };
+        let y = conv2d_reference(&l, &[100], Shape { c: 1, h: 1, w: 1 });
+        // 8 padded taps, each contributing 1 * z_in = -5
+        assert_eq!(y, vec![-40]);
+    }
+
+    #[test]
+    fn cnn_forward_composes_conv_pool_dense() {
+        use crate::util::rng::Rng;
+        let mut r = Rng::new(77);
+        let model = crate::datasets::synthetic_cnn(
+            &mut r,
+            "t",
+            Shape { c: 1, h: 6, w: 6 },
+            &[3],
+            4,
+        );
+        model.validate().unwrap();
+        let x: Vec<i8> = (0..36).map(|i| (i as i8).wrapping_mul(7)).collect();
+        let y = qmodel_forward(&model, &x);
+        assert_eq!(y.len(), 4);
+        // manual composition through the per-layer primitives agrees
+        let shapes = model.shapes().unwrap();
+        let mut h = x.clone();
+        for (l, s) in model.layers.iter().zip(&shapes) {
+            h = layer_forward(l, &l.codes, &h, *s);
+        }
+        assert_eq!(h, y);
     }
 
     #[test]

@@ -18,6 +18,134 @@ pub use buffer::{FetchSource, Fetcher, PingPong};
 pub use pe::Pe;
 pub use quant::{requantize, Requant};
 
+/// A 3-D activation shape, channel-major (`c` planes of `h` x `w`).
+/// Dense vectors are the degenerate `(n, 1, 1)` case ([`Shape::vec`]).
+/// This is the unit of shape checking for the multi-dim I/O path: every
+/// conv/pool operator maps one `Shape` to the next, and a model's layer
+/// chain is validated by propagating its input shape through the ops.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Shape {
+    /// channels (planes)
+    pub c: usize,
+    /// rows per plane
+    pub h: usize,
+    /// columns per plane
+    pub w: usize,
+}
+
+impl Shape {
+    /// The flat-vector shape `(n, 1, 1)` of a dense activation.
+    pub fn vec(n: usize) -> Shape {
+        Shape { c: n, h: 1, w: 1 }
+    }
+
+    /// Total elements when flattened channel-major. Saturates to
+    /// `usize::MAX` on overflow (a corrupt artifact's absurd shape must
+    /// fail the capacity checks, not wrap to a small "valid" length).
+    pub fn len(&self) -> usize {
+        self.c
+            .checked_mul(self.h)
+            .and_then(|v| v.checked_mul(self.w))
+            .unwrap_or(usize::MAX)
+    }
+
+    /// True for a degenerate shape with no elements.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl std::fmt::Display for Shape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "({}, {}, {})", self.c, self.h, self.w)
+    }
+}
+
+/// Output extent of a conv/pool window along one spatial axis:
+/// `floor((input + 2*pad - kernel) / stride) + 1`, or `None` when the
+/// kernel does not fit (or `stride`/`kernel` is zero).
+pub fn conv_out_dim(input: usize, kernel: usize, stride: usize, pad: usize) -> Option<usize> {
+    if stride == 0 || kernel == 0 {
+        return None;
+    }
+    // checked: absurd pad values (e.g. from a corrupt artifact) must
+    // report "does not fit", not overflow
+    let padded = input.checked_add(pad.checked_mul(2)?)?;
+    if padded < kernel {
+        return None;
+    }
+    Some((padded - kernel) / stride + 1)
+}
+
+/// Gather one im2col patch for output position `(oh, ow)` from a
+/// channel-major feature map `x` of shape `s` into `out` (length
+/// `s.c * kh * kw`, ordered channel-major then row-major within the
+/// window). Taps falling outside the image read `pad_value` — the
+/// layer's input zero-point, so padding represents real zero exactly as
+/// the folded bias correction expects. This is the flow-control gather
+/// the NMCU performs from its activation SRAM; the software reference
+/// uses the same function, so the two paths cannot disagree on
+/// patch extraction.
+#[allow(clippy::too_many_arguments)]
+pub fn gather_patch(
+    x: &[i8],
+    s: Shape,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    pad_value: i8,
+    oh: usize,
+    ow: usize,
+    out: &mut [i8],
+) {
+    debug_assert_eq!(x.len(), s.len());
+    debug_assert_eq!(out.len(), s.c * kh * kw);
+    let plane = s.h * s.w;
+    let mut idx = 0;
+    for c in 0..s.c {
+        let chan = &x[c * plane..(c + 1) * plane];
+        for dr in 0..kh {
+            let ih = (oh * stride + dr) as isize - pad as isize;
+            for dc in 0..kw {
+                let iw = (ow * stride + dc) as isize - pad as isize;
+                out[idx] = if ih >= 0 && (ih as usize) < s.h && iw >= 0 && (iw as usize) < s.w {
+                    chan[ih as usize * s.w + iw as usize]
+                } else {
+                    pad_value
+                };
+                idx += 1;
+            }
+        }
+    }
+}
+
+/// 2-D max pooling over a channel-major feature map (no padding): each
+/// output element is the maximum of a `kh` x `kw` window. Pure integer
+/// comparisons, so the NMCU comparator path and the software reference
+/// share this one implementation and are bit-exact by construction.
+pub fn maxpool2d(x: &[i8], s: Shape, kh: usize, kw: usize, stride: usize) -> Vec<i8> {
+    let oh = conv_out_dim(s.h, kh, stride, 0).unwrap_or(0);
+    let ow = conv_out_dim(s.w, kw, stride, 0).unwrap_or(0);
+    let plane = s.h * s.w;
+    let mut out = vec![0i8; s.c * oh * ow];
+    for c in 0..s.c {
+        let chan = &x[c * plane..(c + 1) * plane];
+        for r in 0..oh {
+            for q in 0..ow {
+                let mut m = i8::MIN;
+                for dr in 0..kh {
+                    for dc in 0..kw {
+                        m = m.max(chan[(r * stride + dr) * s.w + (q * stride + dc)]);
+                    }
+                }
+                out[(c * oh + r) * ow + q] = m;
+            }
+        }
+    }
+    out
+}
+
 /// Everything the flow-control logic needs to run one layer's MVM.
 /// (The firmware writes this descriptor to NMCU CSRs; `coordinator`
 /// builds it from the model artifacts.)
@@ -51,6 +179,69 @@ impl LayerDesc {
     /// EFLASH rows occupied by this layer.
     pub fn n_rows(&self, lanes: usize) -> usize {
         self.k_tiles(lanes) * self.col_pairs()
+    }
+}
+
+/// The conv-layer execution plan: an im2col-lowered MVM schedule over an
+/// EFLASH-resident filter matrix. The filters live in EFLASH as the
+/// ordinary row-major `(K, N)` matrix `K = cin*kh*kw`, `N = cout`
+/// (programmed with [`layout_codes`], exactly like a dense layer), and
+/// the flow control walks the output positions: gather patch → MVM →
+/// requantize → write back through the ping-pong buffer. The existing
+/// EFLASH read path, PEs, requant, and ReLU are reused unchanged.
+#[derive(Clone, Debug)]
+pub struct ConvDesc {
+    /// the per-position MVM (`k = cin*kh*kw`, `n = cout`, EFLASH rows)
+    pub mvm: LayerDesc,
+    /// kernel height
+    pub kh: usize,
+    /// kernel width
+    pub kw: usize,
+    /// spatial stride (both axes)
+    pub stride: usize,
+    /// zero-padding (both axes, both sides)
+    pub pad: usize,
+    /// input feature-map shape
+    pub in_shape: Shape,
+    /// value padded taps read (the layer's input zero-point = real zero)
+    pub pad_value: i8,
+}
+
+impl ConvDesc {
+    /// Output feature-map shape; spatial dims collapse to 0 when the
+    /// kernel does not fit (rejected at program/execute time).
+    pub fn out_shape(&self) -> Shape {
+        Shape {
+            c: self.mvm.n,
+            h: conv_out_dim(self.in_shape.h, self.kh, self.stride, self.pad).unwrap_or(0),
+            w: conv_out_dim(self.in_shape.w, self.kw, self.stride, self.pad).unwrap_or(0),
+        }
+    }
+}
+
+/// The max-pool execution plan (comparator path — no weights, no
+/// EFLASH traffic).
+#[derive(Clone, Debug)]
+pub struct PoolDesc {
+    /// window height
+    pub kh: usize,
+    /// window width
+    pub kw: usize,
+    /// spatial stride (both axes)
+    pub stride: usize,
+    /// input feature-map shape
+    pub in_shape: Shape,
+}
+
+impl PoolDesc {
+    /// Output feature-map shape; spatial dims collapse to 0 when the
+    /// window does not fit (rejected at program/execute time).
+    pub fn out_shape(&self) -> Shape {
+        Shape {
+            c: self.in_shape.c,
+            h: conv_out_dim(self.in_shape.h, self.kh, self.stride, 0).unwrap_or(0),
+            w: conv_out_dim(self.in_shape.w, self.kw, self.stride, 0).unwrap_or(0),
+        }
     }
 }
 
@@ -173,6 +364,42 @@ impl Nmcu {
         eflash: &mut EflashMacro,
         desc: &LayerDesc,
     ) -> Result<Vec<i8>, EngineError> {
+        self.validate_mvm(eflash, desc)?;
+        let input_from_pingpong = self.fetcher.source == FetchSource::PingPong;
+        if input_from_pingpong && desc.k > self.pingpong.capacity() {
+            return Err(EngineError::BadDescriptor {
+                reason: format!(
+                    "layer input k={} exceeds ping-pong half capacity {}",
+                    desc.k,
+                    self.pingpong.capacity()
+                ),
+            });
+        }
+        let mut out = vec![0i8; desc.n];
+        self.mvm_compute(eflash, desc, &mut out);
+        for (i, &q) in out.iter().enumerate() {
+            self.pingpong.write_element(i, q);
+        }
+        self.pingpong.flip();
+        // ping-pong read accounting: the flow control re-streams the
+        // K-long input once per output column pair, and only layers >= 2
+        // actually read it from the ping-pong buffer (layer 1 reads the
+        // host input buffer). The old `desc.k * k_tiles.min(1)` collapsed
+        // to `desc.k` for every non-empty layer.
+        if input_from_pingpong {
+            self.pingpong.note_read(desc.k * desc.col_pairs());
+        }
+        // subsequent layers read from the ping-pong buffer
+        self.fetcher.source = FetchSource::PingPong;
+        self.fetcher.pad = 0;
+        self.stats.layers_run += 1;
+        Ok(out)
+    }
+
+    /// Geometry checks shared by the dense and conv MVM paths — a
+    /// malformed descriptor must surface as a typed error before any
+    /// state (ping-pong side, statistics) changes.
+    fn validate_mvm(&self, eflash: &EflashMacro, desc: &LayerDesc) -> Result<(), EngineError> {
         let lanes = self.cfg.lanes_per_pe;
         // a zero-dimension MVM is meaningless; treating it as a no-op
         // would flip the ping-pong buffer and report success for an
@@ -217,18 +444,19 @@ impl Nmcu {
                 ),
             });
         }
-        let input_from_pingpong = self.fetcher.source == FetchSource::PingPong;
-        if input_from_pingpong && desc.k > self.pingpong.capacity() {
-            return Err(EngineError::BadDescriptor {
-                reason: format!(
-                    "layer input k={} exceeds ping-pong half capacity {}",
-                    desc.k,
-                    self.pingpong.capacity()
-                ),
-            });
-        }
-        let mut out = vec![0i8; desc.n];
+        Ok(())
+    }
 
+    /// The MVM core: stream the K-tiles of every output column pair from
+    /// EFLASH through the PEs, requantize, and write the int8 results
+    /// into `out` (length `desc.n`). Counts reads/MACs/writebacks/cycles;
+    /// the callers own the ping-pong writes so the dense path (one MVM
+    /// per layer) and the conv path (one MVM per output position) share
+    /// the exact same datapath.
+    fn mvm_compute(&mut self, eflash: &mut EflashMacro, desc: &LayerDesc, out: &mut [i8]) {
+        let lanes = self.cfg.lanes_per_pe;
+        let k_tiles = desc.k_tiles(lanes);
+        let pairs = desc.col_pairs();
         for p in 0..pairs {
             let mut acc0 = desc.bias[2 * p];
             let mut acc1 = if 2 * p + 1 < desc.n { desc.bias[2 * p + 1] } else { 0 };
@@ -255,13 +483,12 @@ impl Nmcu {
                 }
                 self.stats.cycles += self.cfg.mac_cycles;
             }
-            // requantize + write back to the ping-pong buffer
+            // requantize + write back
             let mut q0 = requantize(acc0, desc.requant);
             if desc.relu {
                 q0 = quant::relu_q(q0, desc.requant.z_out);
             }
             out[2 * p] = q0;
-            self.pingpong.write_element(2 * p, q0);
             self.stats.writebacks += 1;
             self.stats.cycles += self.cfg.writeback_cycles;
             if 2 * p + 1 < desc.n {
@@ -270,24 +497,157 @@ impl Nmcu {
                     q1 = quant::relu_q(q1, desc.requant.z_out);
                 }
                 out[2 * p + 1] = q1;
-                self.pingpong.write_element(2 * p + 1, q1);
                 self.stats.writebacks += 1;
                 self.stats.cycles += self.cfg.writeback_cycles;
             }
         }
-        self.pingpong.flip();
-        // ping-pong read accounting: the flow control re-streams the
-        // K-long input once per output column pair, and only layers >= 2
-        // actually read it from the ping-pong buffer (layer 1 reads the
-        // host input buffer). The old `desc.k * k_tiles.min(1)` collapsed
-        // to `desc.k` for every non-empty layer.
-        if input_from_pingpong {
-            self.pingpong.note_read(desc.k * pairs);
+    }
+
+    /// Run one Conv2D layer as im2col-lowered MVMs over the
+    /// EFLASH-resident filter matrix: for every output position the flow
+    /// control gathers the `cin*kh*kw` patch from the activation SRAM
+    /// (`x`, the previous layer's feature map — on-chip, no bus
+    /// traffic), streams it through the same EFLASH-read/PE/requant
+    /// datapath as a dense layer, and writes the `cout` results back
+    /// through the ping-pong buffer into the output map (channel-major).
+    ///
+    /// The output is re-staged into the input buffer when it fits, so a
+    /// following dense head reads it exactly like a host-loaded input
+    /// (bit-exact flatten); program-time validation guarantees the
+    /// staging fits whenever a dense layer follows.
+    pub fn execute_conv(
+        &mut self,
+        eflash: &mut EflashMacro,
+        cd: &ConvDesc,
+        x: &[i8],
+    ) -> Result<Vec<i8>, EngineError> {
+        let desc = &cd.mvm;
+        self.validate_mvm(eflash, desc)?;
+        if x.len() != cd.in_shape.len() {
+            return Err(EngineError::BadDescriptor {
+                reason: format!(
+                    "conv input length {} != feature map {} = {}",
+                    x.len(),
+                    cd.in_shape,
+                    cd.in_shape.len()
+                ),
+            });
         }
-        // subsequent layers read from the ping-pong buffer
-        self.fetcher.source = FetchSource::PingPong;
-        self.fetcher.pad = 0;
+        if desc.k != cd.in_shape.c * cd.kh * cd.kw {
+            return Err(EngineError::BadDescriptor {
+                reason: format!(
+                    "conv contraction k={} != cin*kh*kw = {}",
+                    desc.k,
+                    cd.in_shape.c * cd.kh * cd.kw
+                ),
+            });
+        }
+        if desc.k > self.fetcher.input.len() {
+            return Err(EngineError::BadDescriptor {
+                reason: format!(
+                    "im2col patch k={} exceeds the {}-element input buffer",
+                    desc.k,
+                    self.fetcher.input.len()
+                ),
+            });
+        }
+        let out_shape = cd.out_shape();
+        if out_shape.is_empty() {
+            return Err(EngineError::BadDescriptor {
+                reason: format!(
+                    "conv kernel {}x{} stride {} pad {} does not fit input {}",
+                    cd.kh, cd.kw, cd.stride, cd.pad, cd.in_shape
+                ),
+            });
+        }
+        let act_cap = self.cfg.act_capacity;
+        if cd.in_shape.len() > act_cap || out_shape.len() > act_cap {
+            return Err(EngineError::BadDescriptor {
+                reason: format!(
+                    "feature map (in {}, out {}) exceeds the {act_cap}-byte activation SRAM",
+                    cd.in_shape, out_shape
+                ),
+            });
+        }
+        let from_pingpong = self.fetcher.source == FetchSource::PingPong;
+        let plane = out_shape.h * out_shape.w;
+        let mut out = vec![0i8; out_shape.len()];
+        let mut patch = vec![0i8; desc.k];
+        let mut col = vec![0i8; desc.n];
+        for r in 0..out_shape.h {
+            for q in 0..out_shape.w {
+                gather_patch(
+                    x, cd.in_shape, cd.kh, cd.kw, cd.stride, cd.pad, cd.pad_value, r, q,
+                    &mut patch,
+                );
+                if from_pingpong {
+                    // the previous layer's map is re-read per position
+                    self.pingpong.note_read(desc.k);
+                }
+                // on-chip gather into the fetch stage: no bus bytes; pad
+                // lanes past k contribute x=0, like the dense path
+                self.fetcher.load_input(&patch, 0);
+                self.mvm_compute(eflash, desc, &mut col);
+                for (c, &v) in col.iter().enumerate() {
+                    self.pingpong.write_element(c, v);
+                    out[c * plane + r * out_shape.w + q] = v;
+                }
+                self.pingpong.flip();
+            }
+        }
+        // stage the output map for a following dense head (when it fits;
+        // a following conv/pool takes the map directly)
+        if out.len() <= self.fetcher.input.len() {
+            self.fetcher.load_input(&out, 0);
+        }
         self.stats.layers_run += 1;
+        Ok(out)
+    }
+
+    /// Run one MaxPool2d layer on the comparator path: pure int8 window
+    /// maxima over the activation SRAM, no EFLASH traffic, one modeled
+    /// cycle per window tap plus the write-back cost per output.
+    pub fn execute_pool(&mut self, pd: &PoolDesc, x: &[i8]) -> Result<Vec<i8>, EngineError> {
+        if x.len() != pd.in_shape.len() {
+            return Err(EngineError::BadDescriptor {
+                reason: format!(
+                    "pool input length {} != feature map {} = {}",
+                    x.len(),
+                    pd.in_shape,
+                    pd.in_shape.len()
+                ),
+            });
+        }
+        let out_shape = pd.out_shape();
+        if out_shape.is_empty() {
+            return Err(EngineError::BadDescriptor {
+                reason: format!(
+                    "pool window {}x{} stride {} does not fit input {}",
+                    pd.kh, pd.kw, pd.stride, pd.in_shape
+                ),
+            });
+        }
+        let act_cap = self.cfg.act_capacity;
+        if pd.in_shape.len() > act_cap || out_shape.len() > act_cap {
+            return Err(EngineError::BadDescriptor {
+                reason: format!(
+                    "feature map (in {}, out {}) exceeds the {act_cap}-byte activation SRAM",
+                    pd.in_shape, out_shape
+                ),
+            });
+        }
+        if self.fetcher.source == FetchSource::PingPong {
+            self.pingpong.note_read(x.len());
+        }
+        let out = maxpool2d(x, pd.in_shape, pd.kh, pd.kw, pd.stride);
+        self.stats.writebacks += out.len() as u64;
+        self.stats.cycles += out.len() as u64 * (pd.kh * pd.kw) as u64
+            + out.len() as u64 * self.cfg.writeback_cycles;
+        self.stats.layers_run += 1;
+        // stage for a following dense head, like execute_conv
+        if out.len() <= self.fetcher.input.len() {
+            self.fetcher.load_input(&out, 0);
+        }
         Ok(out)
     }
 
@@ -521,6 +881,179 @@ mod tests {
         // layer 2: K=20 input streamed once per ceil(7/2)=4 column pairs
         assert_eq!(nmcu.pingpong.bytes_read, (n1 * n2.div_ceil(2)) as u64);
         assert_eq!(nmcu.pingpong.bytes_read, 80);
+    }
+
+    #[test]
+    fn maxpool2d_windows_and_strides() {
+        // one 4x4 channel: 2x2 windows, stride 2
+        let s = Shape { c: 1, h: 4, w: 4 };
+        #[rustfmt::skip]
+        let x: Vec<i8> = vec![
+            1, 2, 3, 4,
+            5, 6, 7, 8,
+            -1, -2, -3, -4,
+            -5, -6, -7, -8,
+        ];
+        assert_eq!(maxpool2d(&x, s, 2, 2, 2), vec![6, 8, -1, -3]);
+        // stride 1: 3x3 output
+        assert_eq!(maxpool2d(&x, s, 2, 2, 1), vec![6, 7, 8, 6, 7, 8, -1, -2, -3]);
+        // two channels pool independently
+        let s2 = Shape { c: 2, h: 2, w: 2 };
+        let x2: Vec<i8> = vec![1, 2, 3, 4, -9, -8, -7, -6];
+        assert_eq!(maxpool2d(&x2, s2, 2, 2, 2), vec![4, -6]);
+    }
+
+    #[test]
+    fn gather_patch_pads_outside_the_image() {
+        let s = Shape { c: 1, h: 2, w: 2 };
+        let x = [1i8, 2, 3, 4];
+        let mut patch = vec![0i8; 9];
+        // 3x3 kernel pad 1, output position (0,0): the image occupies the
+        // bottom-right 2x2 of the window
+        gather_patch(&x, s, 3, 3, 1, 1, -9, 0, 0, &mut patch);
+        assert_eq!(patch, vec![-9, -9, -9, -9, 1, 2, -9, 3, 4]);
+    }
+
+    #[test]
+    fn conv_out_dim_formula() {
+        assert_eq!(conv_out_dim(8, 3, 1, 1), Some(8));
+        assert_eq!(conv_out_dim(8, 3, 1, 0), Some(6));
+        assert_eq!(conv_out_dim(8, 2, 2, 0), Some(4));
+        assert_eq!(conv_out_dim(5, 2, 2, 0), Some(2)); // floor
+        assert_eq!(conv_out_dim(2, 5, 1, 0), None); // kernel too big
+        assert_eq!(conv_out_dim(2, 5, 1, 2), Some(2)); // ...until padded
+        assert_eq!(conv_out_dim(4, 2, 0, 0), None); // degenerate stride
+    }
+
+    #[test]
+    fn nmcu_conv_matches_im2col_reference() {
+        let cfg = chip();
+        let mut eflash = EflashMacro::new(&cfg);
+        let mut nmcu = Nmcu::new(&cfg.nmcu);
+        let mut r = crate::util::rng::Rng::new(41);
+        let in_shape = Shape { c: 2, h: 6, w: 5 };
+        let (kh, kw, stride, pad, cout) = (3usize, 3usize, 1usize, 1usize, 4usize);
+        let k = in_shape.c * kh * kw;
+        let w: Vec<i8> = (0..k * cout).map(|_| (r.below(16) as i8) - 8).collect();
+        let bias: Vec<i32> = (0..cout).map(|_| (r.below(2000) as i32) - 1000).collect();
+        let rq = Requant { m0: 1_300_000_000, shift: 36, z_out: -2 };
+        let image = layout_codes(&w, k, cout, 128);
+        let (region, rep) = eflash.program_region(&image).unwrap();
+        assert_eq!(rep.failed_cells, 0);
+        let cd = ConvDesc {
+            mvm: LayerDesc {
+                first_row: region.first_row,
+                k,
+                n: cout,
+                bias: bias.clone(),
+                requant: rq,
+                relu: true,
+            },
+            kh,
+            kw,
+            stride,
+            pad,
+            in_shape,
+            pad_value: -7,
+        };
+        let x: Vec<i8> =
+            (0..in_shape.len()).map(|_| (r.below(256) as i32 - 128) as i8).collect();
+        nmcu.begin_inference();
+        let got = nmcu.execute_conv(&mut eflash, &cd, &x).unwrap();
+
+        // im2col + reference_mvm composition, scattered channel-major
+        let os = cd.out_shape();
+        assert_eq!(os, Shape { c: 4, h: 6, w: 5 });
+        let mut want = vec![0i8; os.len()];
+        let mut patch = vec![0i8; k];
+        for rr in 0..os.h {
+            for q in 0..os.w {
+                gather_patch(&x, in_shape, kh, kw, stride, pad, -7, rr, q, &mut patch);
+                let col = reference_mvm(&patch, &w, k, cout, &bias, rq, true);
+                for (c, &v) in col.iter().enumerate() {
+                    want[c * os.h * os.w + rr * os.w + q] = v;
+                }
+            }
+        }
+        assert_eq!(got, want);
+        // weight re-streaming: ceil(k/128)*ceil(cout/2) reads per position
+        let per_pos = k.div_ceil(128) as u64 * cout.div_ceil(2) as u64;
+        assert_eq!(nmcu.stats.eflash_reads, per_pos * os.len() as u64 / cout as u64);
+    }
+
+    #[test]
+    fn conv_bad_geometry_is_typed_error() {
+        let cfg = chip();
+        let mut eflash = EflashMacro::new(&cfg);
+        let mut nmcu = Nmcu::new(&cfg.nmcu);
+        let rq = Requant { m0: 1 << 30, shift: 35, z_out: 0 };
+        let in_shape = Shape { c: 1, h: 4, w: 4 };
+        let mk = |k: usize, n: usize| LayerDesc {
+            first_row: 0,
+            k,
+            n,
+            bias: vec![0; n],
+            requant: rq,
+            relu: false,
+        };
+        // kernel larger than the (unpadded) input
+        let cd = ConvDesc {
+            mvm: mk(25, 2),
+            kh: 5,
+            kw: 5,
+            stride: 1,
+            pad: 0,
+            in_shape,
+            pad_value: 0,
+        };
+        let r = nmcu.execute_conv(&mut eflash, &cd, &[0; 16]);
+        assert!(matches!(r, Err(EngineError::BadDescriptor { .. })), "{r:?}");
+        // wrong input length
+        let cd = ConvDesc {
+            mvm: mk(9, 2),
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad: 1,
+            in_shape,
+            pad_value: 0,
+        };
+        let r = nmcu.execute_conv(&mut eflash, &cd, &[0; 15]);
+        assert!(matches!(r, Err(EngineError::BadDescriptor { .. })), "{r:?}");
+        // k disagrees with cin*kh*kw
+        let cd = ConvDesc {
+            mvm: mk(8, 2),
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad: 1,
+            in_shape,
+            pad_value: 0,
+        };
+        let r = nmcu.execute_conv(&mut eflash, &cd, &[0; 16]);
+        assert!(matches!(r, Err(EngineError::BadDescriptor { .. })), "{r:?}");
+        // pool window that does not fit
+        let pd = PoolDesc { kh: 5, kw: 5, stride: 2, in_shape };
+        let r = nmcu.execute_pool(&pd, &[0; 16]);
+        assert!(matches!(r, Err(EngineError::BadDescriptor { .. })), "{r:?}");
+        // pool with wrong input length
+        let pd = PoolDesc { kh: 2, kw: 2, stride: 2, in_shape };
+        let r = nmcu.execute_pool(&pd, &[0; 3]);
+        assert!(matches!(r, Err(EngineError::BadDescriptor { .. })), "{r:?}");
+    }
+
+    #[test]
+    fn pool_counts_writebacks_not_reads() {
+        let cfg = chip();
+        let mut nmcu = Nmcu::new(&cfg.nmcu);
+        let pd = PoolDesc { kh: 2, kw: 2, stride: 2, in_shape: Shape { c: 2, h: 4, w: 4 } };
+        nmcu.begin_inference();
+        let x: Vec<i8> = (0..32).map(|i| i as i8).collect();
+        let out = nmcu.execute_pool(&pd, &x).unwrap();
+        assert_eq!(out.len(), 8);
+        assert_eq!(nmcu.stats.eflash_reads, 0);
+        assert_eq!(nmcu.stats.writebacks, 8);
+        assert_eq!(nmcu.stats.layers_run, 1);
     }
 
     #[test]

@@ -93,7 +93,7 @@ fn golden_ae_layer9_rust_and_chip() {
         let got_ref =
             nvmcu::nmcu::reference_mvm(&x, &l9.codes, l9.k, l9.n, &l9.bias, l9.requant, l9.relu);
         assert_eq!(got_ref, want, "rust reference");
-        let got_chip = chip.infer_layer(&pm.descs[0], &x).unwrap();
+        let got_chip = chip.infer_layer(pm.mvm_desc(0).expect("dense layer"), &x).unwrap();
         assert_eq!(got_chip, want, "chip NMCU");
     }
 }

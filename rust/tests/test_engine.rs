@@ -4,7 +4,7 @@
 //! `Chip::infer` across random shard counts and batch sizes. All tests
 //! run on synthetic models; no artifacts needed.
 
-use nvmcu::artifacts::{QLayer, QModel};
+use nvmcu::artifacts::{QLayer, QModel, QOp};
 use nvmcu::config::ChipConfig;
 use nvmcu::coordinator::Chip;
 use nvmcu::engine::{
@@ -34,13 +34,14 @@ fn rand_layer(r: &mut Rng, name: &str, k: usize, n: usize, relu: bool) -> QLayer
         s_in: 1.0 / 255.0,
         s_w: 0.05,
         s_out: 0.1,
+        op: QOp::Dense,
     }
 }
 
 fn rand_model(r: &mut Rng, name: &str, k: usize, h: usize, c: usize) -> QModel {
     let l1 = rand_layer(r, "fc1", k, h, true);
     let l2 = rand_layer(r, "fc2", h, c, false);
-    QModel { name: name.into(), layers: vec![l1, l2] }
+    QModel::mlp(name, vec![l1, l2])
 }
 
 fn rand_input(r: &mut Rng, k: usize) -> Vec<i8> {

@@ -77,7 +77,7 @@ fn firmware_mnist_matches_coordinator_bit_exact() {
     // place descriptors + bias tables high in SRAM
     let mut at = map::SRAM_BASE + 0x2_0000;
     let mut desc_addrs = Vec::new();
-    for d in &pm2.descs {
+    for d in pm2.mvm_descs() {
         let bias_at = at + 0x40;
         mcu.write_descriptor(at, bias_at, d);
         desc_addrs.push(at);
@@ -122,7 +122,7 @@ fn control_plane_overhead_is_constant_per_layer() {
 
     let mut at = map::SRAM_BASE + 0x2_0000;
     let mut desc_addrs = Vec::new();
-    for d in &pm.descs {
+    for d in pm.mvm_descs() {
         let bias_at = at + 0x40;
         mcu.write_descriptor(at, bias_at, d);
         desc_addrs.push(at);

@@ -1,0 +1,255 @@
+//! Cross-stack bit-exactness property suite. Every serving path —
+//! `NmcuBackend::infer`, `infer_batch`, `ShardedEngine`, and the
+//! dynamic-batching `InferenceServer` — must produce OUTPUTS IDENTICAL
+//! to `ReferenceBackend` for random models (dense MLPs and conv/pool
+//! CNNs), shapes, and seeds; and the EFLASH device model must
+//! round-trip all 16 per-cell states exactly at zero drift. These are
+//! seeded randomized properties (`util::prop_check` reports the failing
+//! seed for deterministic replay), not fixed golden cases: they pin the
+//! whole stack, so an operator regression anywhere fails here first.
+
+use nvmcu::artifacts::{QLayer, QModel, Shape};
+use nvmcu::config::ChipConfig;
+use nvmcu::datasets::{conv_layer, dense_layer, synthetic_qmodel};
+use nvmcu::engine::{
+    Backend, BatchPolicy, InferenceServer, NmcuBackend, ReferenceBackend, ShardedEngine,
+};
+use nvmcu::util::prop_check;
+use nvmcu::util::rng::Rng;
+
+fn small_cfg() -> ChipConfig {
+    let mut c = ChipConfig::new();
+    // 32K cells: plenty for every property model (largest is ~8K cells)
+    // while keeping per-seed chip fabrication + decode-cache cost low —
+    // this suite fabricates a few hundred chips across its seeds
+    c.eflash.capacity_bits = 128 * 1024;
+    c
+}
+
+fn rand_input(r: &mut Rng, k: usize) -> Vec<i8> {
+    (0..k).map(|_| (r.below(256) as i32 - 128) as i8).collect()
+}
+
+/// A random CNN: 1-channel input map of random size, 1-2 conv stages
+/// with random kernel geometry (3x3 or 2x2, stride 1-2, pad 0-1) and
+/// optional 2x2 pooling, then a dense head — always >= 2 conv layers +
+/// >= 1 pool when `deep`, so the acceptance topology is exercised on
+/// every seed.
+fn rand_cnn(r: &mut Rng, deep: bool) -> QModel {
+    let input = Shape { c: 1, h: 7 + r.below(8) as usize, w: 7 + r.below(8) as usize };
+    let mut layers: Vec<QLayer> = Vec::new();
+    let mut shape = input;
+
+    // conv stage 1: random kernel, padding keeps the map comfortable
+    let c1 = 2 + r.below(6) as usize;
+    let conv1 = conv_layer(r, "conv1", shape.c, c1, 3, 3, 1, 1, r.chance(0.8));
+    shape = conv1.out_shape(shape).expect("3x3 pad-1 fits");
+    layers.push(conv1);
+
+    // pool stage (always present when deep: the acceptance topology)
+    if deep || r.chance(0.7) {
+        let pool = QLayer::maxpool("pool1", 2, 2, 2);
+        shape = pool.out_shape(shape).expect("2x2 pool fits");
+        layers.push(pool);
+    }
+
+    // conv stage 2: random 2x2/3x3, random stride, random padding
+    let c2 = 2 + r.below(8) as usize;
+    let (kh, kw) = if r.chance(0.5) { (3, 3) } else { (2, 2) };
+    let stride = 1 + r.below(2) as usize;
+    let pad = r.below(2) as usize;
+    let conv2 = conv_layer(r, "conv2", shape.c, c2, kh, kw, stride, pad, r.chance(0.8));
+    shape = conv2.out_shape(shape).expect("kernel fits the pooled map");
+    layers.push(conv2);
+
+    if deep && shape.h >= 2 && shape.w >= 2 {
+        let pool = QLayer::maxpool("pool2", 2, 2, 2);
+        shape = pool.out_shape(shape).expect("2x2 pool fits");
+        layers.push(pool);
+    }
+
+    let classes = 2 + r.below(9) as usize;
+    layers.push(dense_layer(r, "fc", shape.len(), classes, false));
+    QModel::cnn("prop-cnn", input, layers)
+}
+
+/// THE acceptance property: a CNN (>= 2 conv layers + pool + dense
+/// head) programs into EFLASH and its outputs are bit-exact to the
+/// software reference across `infer`, `infer_batch`, a sharded fleet,
+/// and the `InferenceServer` scheduler, for >= 50 random seeds.
+#[test]
+fn cnn_bit_exact_across_all_serving_paths_50_seeds() {
+    prop_check(50, |r| {
+        let cfg = small_cfg();
+        let model = rand_cnn(r, true);
+        model.validate().expect("generator emits valid CNNs");
+        let k = model.input_len();
+        let batch = 1 + r.below(5) as usize;
+        let xs: Vec<Vec<i8>> = (0..batch).map(|_| rand_input(r, k)).collect();
+
+        // the oracle
+        let mut oracle = ReferenceBackend::new();
+        let ho = oracle.program(&model).expect("reference program");
+        let want: Vec<Vec<i8>> =
+            xs.iter().map(|x| oracle.infer(ho, x).expect("reference infer")).collect();
+
+        // single chip: infer and infer_batch
+        let mut chip = NmcuBackend::new(&cfg);
+        let hc = chip.program(&model).expect("chip program");
+        for (x, w) in xs.iter().zip(&want) {
+            assert_eq!(&chip.infer(hc, x).expect("chip infer"), w, "infer path");
+        }
+        assert_eq!(chip.infer_batch(hc, &xs).expect("chip batch"), want, "infer_batch path");
+
+        // sharded fleet
+        let n_shards = 2 + r.below(2) as usize;
+        let mut fleet = ShardedEngine::new(&cfg, n_shards).expect("fleet");
+        let hf = fleet.program(&model).expect("fleet program");
+        assert_eq!(fleet.infer_batch(hf, &xs).expect("fleet batch"), want, "sharded path");
+
+        // the dynamic-batching scheduler over the fleet
+        let policy = BatchPolicy { max_batch: 1 + r.below(4) as usize, ..Default::default() };
+        let server = InferenceServer::start(Box::new(fleet), policy).expect("server");
+        let pendings: Vec<_> = xs
+            .iter()
+            .map(|x| server.submit(hf, x.clone()).expect("submit"))
+            .collect();
+        for (p, w) in pendings.into_iter().zip(&want) {
+            assert_eq!(&p.wait().expect("scheduled result"), w, "server path");
+        }
+        server.shutdown().expect("shutdown");
+    });
+}
+
+/// The same cross-path property for dense MLPs of random shape —
+/// the regression net under the refactored dense path.
+#[test]
+fn mlp_bit_exact_across_all_serving_paths() {
+    prop_check(16, |r| {
+        let cfg = small_cfg();
+        let k = 1 + r.below(300) as usize;
+        let h = 1 + r.below(24) as usize;
+        let c = 1 + r.below(10) as usize;
+        let model = synthetic_qmodel(r, "prop-mlp", k, h, c);
+        let batch = 1 + r.below(6) as usize;
+        let xs: Vec<Vec<i8>> = (0..batch).map(|_| rand_input(r, k)).collect();
+
+        let mut oracle = ReferenceBackend::new();
+        let ho = oracle.program(&model).expect("reference program");
+        let want: Vec<Vec<i8>> =
+            xs.iter().map(|x| oracle.infer(ho, x).expect("reference infer")).collect();
+
+        let mut chip = NmcuBackend::new(&cfg);
+        let hc = chip.program(&model).expect("chip program");
+        assert_eq!(chip.infer_batch(hc, &xs).expect("chip batch"), want);
+
+        let mut fleet = ShardedEngine::new(&cfg, 1 + r.below(4) as usize).expect("fleet");
+        let hf = fleet.program(&model).expect("fleet program");
+        assert_eq!(fleet.infer_batch(hf, &xs).expect("fleet batch"), want);
+
+        let server =
+            InferenceServer::start(Box::new(fleet), BatchPolicy::default()).expect("server");
+        for (x, w) in xs.iter().zip(&want) {
+            assert_eq!(&server.infer(hf, x.clone()).expect("scheduled"), w);
+        }
+        server.shutdown().expect("shutdown");
+    });
+}
+
+/// Mixed residency: a CNN and an MLP share one EFLASH macro and are
+/// served interleaved — handles must address the right weight regions.
+#[test]
+fn cnn_and_mlp_coresident_stay_bit_exact() {
+    let cfg = small_cfg();
+    let mut r = Rng::new(2024);
+    let cnn = rand_cnn(&mut r, true);
+    let mlp = synthetic_qmodel(&mut r, "co-mlp", 120, 12, 6);
+
+    let mut chip = NmcuBackend::new(&cfg);
+    let h_cnn = chip.program(&cnn).expect("program CNN");
+    let h_mlp = chip.program(&mlp).expect("program MLP");
+
+    let mut oracle = ReferenceBackend::new();
+    let o_cnn = oracle.program(&cnn).expect("reference CNN");
+    let o_mlp = oracle.program(&mlp).expect("reference MLP");
+
+    for i in 0..6 {
+        if i % 2 == 0 {
+            let x = rand_input(&mut r, cnn.input_len());
+            assert_eq!(
+                chip.infer(h_cnn, &x).expect("chip CNN"),
+                oracle.infer(o_cnn, &x).expect("oracle CNN"),
+                "interleaved CNN inference {i}"
+            );
+        } else {
+            let x = rand_input(&mut r, 120);
+            assert_eq!(
+                chip.infer(h_mlp, &x).expect("chip MLP"),
+                oracle.infer(o_mlp, &x).expect("oracle MLP"),
+                "interleaved MLP inference {i}"
+            );
+        }
+    }
+}
+
+/// EFLASH round-trip property: programming a random int4 image (always
+/// covering all 16 states) and reading it back decodes EXACTLY at zero
+/// drift, for random image sizes — the device-level foundation the
+/// serving properties stand on.
+#[test]
+fn eflash_roundtrips_all_16_states_exactly_at_zero_drift() {
+    prop_check(20, |r| {
+        let cfg = small_cfg();
+        let mut mac = nvmcu::eflash::EflashMacro::new(&cfg);
+        let n = 16 + r.below(4000) as usize;
+        let mut codes: Vec<i8> = (0..n).map(|_| (r.below(16) as i8) - 8).collect();
+        // guarantee all 16 states appear in every image
+        for (i, c) in codes.iter_mut().take(16).enumerate() {
+            *c = i as i8 - 8;
+        }
+        let (region, report) = mac.program_region(&codes).expect("capacity");
+        assert_eq!(report.failed_cells, 0, "ISPP program-verify failed cells");
+        let e = mac.decode_errors(&region, &codes);
+        assert_eq!(e.exact, e.total, "non-exact decode at zero drift: {e:?}");
+        assert_eq!(e.total, n as u64);
+        assert_eq!(e.sum_abs_lsb, 0);
+    });
+}
+
+/// The conv reference itself is pinned to the `reference_mvm`
+/// composition: for random conv geometry, `conv2d_reference` equals a
+/// hand-rolled im2col gather + per-position dense MVM.
+#[test]
+fn conv_reference_is_reference_mvm_composition() {
+    prop_check(20, |r| {
+        let cin = 1 + r.below(3) as usize;
+        let (kh, kw) = (1 + r.below(3) as usize, 1 + r.below(3) as usize);
+        let stride = 1 + r.below(2) as usize;
+        let pad = r.below(2) as usize;
+        let cout = 1 + r.below(6) as usize;
+        let h = kh + r.below(8) as usize;
+        let w = kw + r.below(8) as usize;
+        let in_shape = Shape { c: cin, h, w };
+        let l = conv_layer(r, "c", cin, cout, kh, kw, stride, pad, r.chance(0.5));
+        let os = l.out_shape(in_shape).expect("kernel fits by construction");
+        let x = rand_input(r, in_shape.len());
+
+        let got = nvmcu::models::conv2d_reference(&l, &x, in_shape);
+        let mut want = vec![0i8; os.len()];
+        let mut patch = vec![0i8; l.k];
+        for rr in 0..os.h {
+            for q in 0..os.w {
+                nvmcu::nmcu::gather_patch(
+                    &x, in_shape, kh, kw, stride, pad, l.z_in, rr, q, &mut patch,
+                );
+                let col = nvmcu::nmcu::reference_mvm(
+                    &patch, &l.codes, l.k, l.n, &l.bias, l.requant, l.relu,
+                );
+                for (c, &v) in col.iter().enumerate() {
+                    want[c * os.h * os.w + rr * os.w + q] = v;
+                }
+            }
+        }
+        assert_eq!(got, want, "cin={cin} k={kh}x{kw} s={stride} p={pad}");
+    });
+}

@@ -1,0 +1,140 @@
+//! Retention-model properties pinning the paper's headline reliability
+//! experiment (unpowered 125 °C bake): `loss_fraction` is monotonic in
+//! both time and temperature, `equivalent_hours` inverts `tau_hours`
+//! consistently (same stretched-exponential loss at the translated
+//! time), and baking a programmed chip degrades its weight decode
+//! monotonically — longer bakes never *improve* the decode-error count.
+
+use nvmcu::config::{ChipConfig, RetentionConfig};
+use nvmcu::coordinator::experiments::decode_errors_all;
+use nvmcu::datasets::synthetic_qmodel;
+use nvmcu::eflash::retention::{equivalent_hours, loss_fraction, tau_hours};
+use nvmcu::engine::{Backend, NmcuBackend};
+use nvmcu::util::rng::Rng;
+
+#[test]
+fn loss_fraction_monotonic_in_hours() {
+    let cfg = RetentionConfig::default();
+    for temp in [25.0, 55.0, 85.0, 125.0] {
+        let mut prev = loss_fraction(&cfg, 0.0, temp);
+        assert_eq!(prev, 0.0, "no loss at t=0");
+        for hours in [0.5, 2.0, 10.0, 40.0, 160.0, 340.0, 1000.0, 10_000.0] {
+            let l = loss_fraction(&cfg, hours, temp);
+            assert!(
+                l > prev,
+                "loss not strictly increasing at {hours} h / {temp} C: {l} vs {prev}"
+            );
+            assert!(l < cfg.loss_amplitude, "loss exceeds its amplitude");
+            prev = l;
+        }
+    }
+}
+
+#[test]
+fn loss_fraction_monotonic_in_temperature() {
+    let cfg = RetentionConfig::default();
+    for hours in [1.0, 40.0, 160.0, 1000.0] {
+        let mut prev = 0.0f64;
+        for temp in [-25.0, 0.0, 25.0, 55.0, 85.0, 105.0, 125.0, 150.0] {
+            let l = loss_fraction(&cfg, hours, temp);
+            assert!(
+                l > prev,
+                "loss not increasing with temperature at {hours} h / {temp} C"
+            );
+            prev = l;
+        }
+    }
+}
+
+#[test]
+fn equivalent_hours_inverts_tau_consistently() {
+    let cfg = RetentionConfig::default();
+    // at the bake temperature the translation is the identity
+    let same = equivalent_hours(&cfg, 160.0, cfg.bake_temp_c);
+    assert!((same - 160.0).abs() < 1e-9, "identity at bake temp: {same}");
+    for use_temp in [-25.0, 25.0, 55.0, 85.0, 150.0] {
+        let eq = equivalent_hours(&cfg, 160.0, use_temp);
+        // definitionally: eq/bake_hours == tau(use)/tau(bake)
+        let ratio = tau_hours(&cfg, use_temp) / tau_hours(&cfg, cfg.bake_temp_c);
+        assert!(
+            (eq / 160.0 - ratio).abs() < 1e-9 * ratio.abs(),
+            "equivalent_hours disagrees with the tau ratio at {use_temp} C"
+        );
+        // and the translated time reproduces the SAME fractional loss:
+        // (t/tau)^beta is preserved, so the stretched exponential is too
+        let want = loss_fraction(&cfg, 160.0, cfg.bake_temp_c);
+        let got = loss_fraction(&cfg, eq, use_temp);
+        assert!(
+            (got - want).abs() < 1e-12 + 1e-9 * want,
+            "loss not preserved under time translation at {use_temp} C: {got} vs {want}"
+        );
+        // colder use conditions stretch the lifetime, hotter shrink it
+        if use_temp < cfg.bake_temp_c {
+            assert!(eq > 160.0, "{use_temp} C should be slower than the bake");
+        } else if use_temp > cfg.bake_temp_c {
+            assert!(eq < 160.0, "{use_temp} C should be faster than the bake");
+        }
+    }
+}
+
+/// The paper's experiment, as a monotonicity property: identically
+/// fabricated + programmed chips baked for increasing durations show a
+/// non-decreasing decode-error count, and the 160 h @ 125 °C point
+/// never *improves* on the fresh chip (which decodes exactly).
+#[test]
+fn bake_degrades_decode_monotonically() {
+    let mut cfg = ChipConfig::new();
+    cfg.eflash.capacity_bits = 256 * 1024; // 64K cells for test speed
+    let model = synthetic_qmodel(&mut Rng::new(404), "retention-model", 256, 24, 8);
+
+    let mut prev_errors = 0u64;
+    let mut prev_abs = 0u64;
+    for (i, hours) in [0.0, 40.0, 160.0, 340.0, 1000.0].into_iter().enumerate() {
+        // a fresh, identically-seeded chip per duration: fabrication,
+        // ISPP programming, and read noise are all bit-identical, so the
+        // bake duration is the ONLY difference between the points
+        let mut backend = NmcuBackend::new(&cfg);
+        let h = backend.program(&model).expect("program");
+        backend.chip_mut().bake(hours, cfg.retention.bake_temp_c);
+        let e = decode_errors_all(&mut backend, h, &model).expect("decode");
+        assert_eq!(e.total, model.total_cells() as u64);
+        let errors = e.total - e.exact;
+        if i == 0 {
+            // fresh chips decode exactly (program-verify guarantees it)
+            assert_eq!(errors, 0, "fresh chip decodes with errors: {e:?}");
+        }
+        assert!(
+            errors >= prev_errors,
+            "decode errors IMPROVED with a longer bake: {errors} after {hours} h \
+             vs {prev_errors} before"
+        );
+        assert!(
+            e.sum_abs_lsb >= prev_abs,
+            "total decode drift shrank with a longer bake at {hours} h"
+        );
+        prev_errors = errors;
+        prev_abs = e.sum_abs_lsb;
+    }
+    // and the bake is doing real damage by the paper's 160 h point
+    assert!(prev_errors > 0, "a 1000 h bake left zero decode errors — model inert?");
+}
+
+/// The 160 h @ 125 °C headline stress keeps the chip serving: accuracy
+/// on a self-labeled task stays high while decode errors appear — the
+/// Fig 5a unit-distance mapping bounding almost all of them to 1 LSB.
+#[test]
+fn bake_160h_errors_are_unit_dominated() {
+    let mut cfg = ChipConfig::new();
+    cfg.eflash.capacity_bits = 256 * 1024;
+    let model = synthetic_qmodel(&mut Rng::new(405), "bake-model", 256, 24, 8);
+    let mut backend = NmcuBackend::new(&cfg);
+    let h = backend.program(&model).expect("program");
+    backend.chip_mut().bake(160.0, cfg.retention.bake_temp_c);
+    let e = decode_errors_all(&mut backend, h, &model).expect("decode");
+    assert!(e.exact_rate() > 0.8, "exact decode collapsed: {}", e.exact_rate());
+    // multi-LSB errors are a rare fast-tail population, not the norm
+    assert!(
+        (e.worse as f64) < 0.05 * (e.off_by_one as f64) + 5.0,
+        "multi-state decode errors too common after 160 h: {e:?}"
+    );
+}

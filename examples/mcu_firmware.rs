@@ -1,124 +1,96 @@
-//! Firmware-level demo: the RV32I core drives a full MNIST inference
-//! through the memory-mapped NMCU and the custom-0 `nmcu.mvm`
-//! instruction — the paper's "single RISC-V instruction" control plane.
-//! The firmware is assembled from source below, loaded into SRAM, and
-//! executed by the interpreter; it prints its result over the UART.
+//! Firmware-level demo: a full model served *through the RV32I core* —
+//! the `soc::firmware` builder assembles a resident batch-serving boot
+//! image (DMA-staged I/O, one custom-0 `nmcu.mvm` per dense layer,
+//! STATUS checks, UART progress prints), `engine::McuBackend` drives
+//! it, and every output is checked against the bit-exact software
+//! reference.
 //!
-//!     make artifacts && cargo run --release --example mcu_firmware
+//! Runs on the real MNIST artifacts when present (`make artifacts`),
+//! otherwise on a deterministic synthetic MNIST-shaped model:
+//!
+//!     cargo run --release --example mcu_firmware
 
 use nvmcu::artifacts;
 use nvmcu::config::ChipConfig;
-use nvmcu::coordinator::Chip;
-use nvmcu::cpu::asm::*;
-use nvmcu::soc::{map, nmcu_reg, Mcu, RunExit};
+use nvmcu::engine::{Backend, McuBackend, ReferenceBackend};
+use nvmcu::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
     let dir = artifacts::artifacts_dir();
     let cfg = ChipConfig::new();
-    let model = artifacts::load_qmodel(&dir, "mnist_weights")?;
-    let test = nvmcu::datasets::load_mnist(&dir)?;
+    let mut r = Rng::new(cfg.seed);
 
-    // program the weight EFLASH, then hand the macro to the MCU
-    let mut chip = Chip::new(&cfg);
-    let pm = chip.program_model(&model)?;
-    let mut mcu = Mcu::with_eflash(&cfg, chip.eflash);
-
-    // lay out descriptors + bias tables in SRAM
-    let mut at = map::SRAM_BASE + 0x2_0000;
-    let mut desc_addrs = Vec::new();
-    for d in pm.mvm_descs() {
-        let bias_at = at + 0x40;
-        mcu.write_descriptor(at, bias_at, d);
-        desc_addrs.push(at);
-        at = bias_at + 4 * d.n as u32 + 0x40;
-    }
-    let in_addr = at;
-    let out_addr = at + 0x1000;
-
-    // ---- firmware (assembled from source right here) -------------------
-    // begin; DMA input; one nmcu.mvm per layer; store output; find the
-    // argmax in registers; print "D<digit>\n" on the UART; exit(argmax)
-    let mut a = Asm::new();
-    a.emit_all(&li32(5, map::NMCU_BASE));
-    a.emit(addi(6, 0, 1));
-    a.emit(sw(5, 6, nmcu_reg::BEGIN as i32));
-    a.emit_all(&li32(7, in_addr));
-    a.emit(sw(5, 7, nmcu_reg::INPUT_ADDR as i32));
-    a.emit_all(&li32(8, 784));
-    a.emit(sw(5, 8, nmcu_reg::INPUT_LEN as i32));
-    a.emit(sw(5, 6, nmcu_reg::INPUT_LOAD as i32));
-    for &d in &desc_addrs {
-        a.emit_all(&li32(9, d));
-        a.emit(nmcu_mvm(10, 9)); // <- the paper's one-instruction MVM
-    }
-    a.emit_all(&li32(11, out_addr));
-    a.emit(sw(5, 11, nmcu_reg::OUT_ADDR as i32));
-    a.emit(addi(12, 0, 10));
-    a.emit(sw(5, 12, nmcu_reg::OUT_LEN as i32));
-    a.emit(sw(5, 6, nmcu_reg::OUT_STORE as i32));
-    // argmax over the 10 int8 logits at out_addr:
-    //   r13 = best index, r14 = best value, r15 = i
-    a.emit(addi(13, 0, 0));
-    a.emit(lb(14, 11, 0));
-    a.emit(addi(15, 0, 1));
-    a.label("loop");
-    a.emit(add(16, 11, 15));
-    a.emit(lb(17, 16, 0));
-    a.branch_to(|o| bge(14, 17, o), "skip"); // if best >= cur, skip
-    a.emit(addi(13, 15, 0));
-    a.emit(addi(14, 17, 0));
-    a.label("skip");
-    a.emit(addi(15, 15, 1));
-    a.emit(addi(18, 0, 10));
-    a.branch_to(|o| blt(15, 18, o), "loop");
-    // UART: 'D', '0'+argmax, '\n'
-    a.emit_all(&li32(20, map::UART_BASE));
-    a.emit(addi(21, 0, 'D' as i32));
-    a.emit(sw(20, 21, 0));
-    a.emit(addi(21, 13, '0' as i32));
-    a.emit(sw(20, 21, 0));
-    a.emit(addi(21, 0, '\n' as i32));
-    a.emit(sw(20, 21, 0));
-    // exit(argmax)
-    a.emit(addi(17, 0, 93));
-    a.emit(addi(10, 13, 0));
-    a.emit(ecall());
-    let fw = a.assemble();
-    println!("firmware: {} instructions", fw.len());
-
-    // ---- run a few samples ---------------------------------------------
-    let mut correct = 0;
-    let n = 50.min(test.len());
-    for i in 0..n {
-        let bytes: Vec<u8> = test.image_q(i).iter().map(|&v| v as u8).collect();
-        mcu.load_firmware(&fw);
-        mcu.bus.sram_write(in_addr, &bytes);
-        match mcu.run(100_000) {
-            RunExit::Exit(pred) => {
-                if pred == test.labels[i] as u32 {
-                    correct += 1;
-                }
-                if i < 5 {
-                    println!(
-                        "sample {i}: label {} -> UART {:?} ({} instret)",
-                        test.labels[i],
-                        mcu.bus.uart.tx_string().lines().last().unwrap_or(""),
-                        mcu.cpu.instret
-                    );
-                }
-            }
-            other => panic!("firmware crashed: {other:?}"),
+    // model + inputs: real artifacts when available, synthetic otherwise
+    let (model, pool, labels) = match (
+        artifacts::load_qmodel(&dir, "mnist_weights"),
+        nvmcu::datasets::load_mnist(&dir),
+    ) {
+        (Ok(model), Ok(test)) => {
+            let n = 50.min(test.len());
+            let pool: Vec<Vec<i8>> = (0..n).map(|i| test.image_q(i)).collect();
+            let labels: Vec<usize> = (0..n).map(|i| test.labels[i] as usize).collect();
+            (model, pool, Some(labels))
         }
+        _ => {
+            println!("(no artifacts found — serving a synthetic MNIST-shaped model)");
+            let model = nvmcu::datasets::synthetic_qmodel(&mut r, "synthetic-mnist", 784, 43, 10);
+            let pool = nvmcu::util::workload::random_inputs(&mut r, 32, 784);
+            (model, pool, None)
+        }
+    };
+
+    // program the model: EFLASH weights + SRAM descriptor table + the
+    // resident firmware image, all inside the MCU
+    let mut mcu = McuBackend::new(&cfg);
+    let h = mcu.program(&model)?;
+    let fw = mcu.firmware(h)?;
+    println!(
+        "firmware: {} instructions at {:#010x} | descriptor table {} words at {:#010x} | \
+         arena serves up to {} samples/run",
+        fw.words.len(),
+        fw.entry,
+        fw.table.words.len(),
+        fw.table.base,
+        fw.max_batch
+    );
+
+    // the oracle: the bit-exact software reference
+    let mut sw = ReferenceBackend::new();
+    let hs = sw.program(&model)?;
+
+    // one firmware run serves the whole batch (the core loops on-chip)
+    let outs = mcu.infer_batch(h, &pool)?;
+    let want = sw.infer_batch(hs, &pool)?;
+    assert_eq!(outs, want, "firmware path diverged from the software reference");
+    println!("bit-exact: {} samples match the software reference", outs.len());
+
+    if let Some(labels) = labels {
+        let correct = outs
+            .iter()
+            .zip(&labels)
+            .filter(|(logits, &label)| nvmcu::models::argmax_i8(logits) == label)
+            .count();
+        println!(
+            "firmware path accuracy on {} samples: {:.1}%",
+            outs.len(),
+            100.0 * correct as f64 / outs.len() as f64
+        );
     }
+
+    // the control-plane story (§2.2): a handful of host instructions
+    // per launch, while the NMCU flow control does all the addressing
+    let st = mcu.stats();
     println!(
-        "firmware path accuracy on {n} samples: {:.1}% | NMCU launches: {} | host instret/inference: {}",
-        100.0 * correct as f64 / n as f64,
-        mcu.launches,
-        mcu.cpu.instret
+        "host instret/inference: {:.0} | instret/MVM-launch: {:.1} | NMCU launches: {}",
+        mcu.instret() as f64 / outs.len() as f64,
+        mcu.instret() as f64 / mcu.launches().max(1) as f64,
+        mcu.launches()
     );
     println!(
-        "NMCU totals: {} EFLASH reads, {} MACs — all addressed by flow control, not the CPU",
-        mcu.nmcu.stats.eflash_reads, mcu.nmcu.stats.mac_ops
+        "NMCU totals: {} EFLASH reads, {} MACs, {} modeled cycles — all addressed by \
+         flow control, not the CPU",
+        st.eflash_reads, st.mac_ops, st.cycles
     );
+    println!("UART: {:?}", mcu.mcu().uart_output());
     Ok(())
 }

@@ -1,0 +1,68 @@
+//! Firmware-in-the-loop serving bench: the same MNIST-shaped model and
+//! a small CNN served by the direct chip backend (`NmcuBackend`) and as
+//! RV32I firmware on the full SoC (`McuBackend`) — quantifies what the
+//! control plane costs on top of the identical NMCU datapath, and pins
+//! the paper's §2.2 claim (a handful of host instructions per MVM
+//! launch) with an assertion.
+//!
+//!     cargo bench --bench mcu
+
+use nvmcu::artifacts::Shape;
+use nvmcu::config::ChipConfig;
+use nvmcu::engine::{Backend, McuBackend, NmcuBackend, ReferenceBackend};
+use nvmcu::util::bench::bench;
+use nvmcu::util::rng::Rng;
+use nvmcu::util::workload;
+use std::time::Duration;
+
+fn main() {
+    let tgt = Duration::from_millis(500);
+    let cfg = ChipConfig::new();
+    let mut r = Rng::new(11);
+    const BATCH: usize = 64;
+
+    let mlp = nvmcu::datasets::synthetic_qmodel(&mut r, "mnist-shaped", 784, 43, 10);
+    let cnn =
+        nvmcu::datasets::synthetic_cnn(&mut r, "cnn-small", Shape { c: 1, h: 8, w: 8 }, &[4], 4);
+
+    for model in [&mlp, &cnn] {
+        let pool = workload::random_inputs(&mut r, BATCH, model.input_len());
+
+        // bit-exactness gate before timing anything
+        let mut sw = ReferenceBackend::new();
+        let hs = sw.program(model).expect("reference program");
+        let want = sw.infer_batch(hs, &pool).expect("reference batch");
+
+        let mut chip = NmcuBackend::new(&cfg);
+        let hc = chip.program(model).expect("program (chip)");
+        assert_eq!(chip.infer_batch(hc, &pool).expect("chip"), want, "{}", model.name);
+        let t_chip = bench(&format!("{}: direct chip, batch {BATCH}", model.name), tgt, || {
+            std::hint::black_box(chip.infer_batch(hc, &pool).unwrap());
+        });
+
+        let mut mcu = McuBackend::new(&cfg);
+        let hm = mcu.program(model).expect("program (mcu)");
+        assert_eq!(mcu.infer_batch(hm, &pool).expect("mcu"), want, "{}", model.name);
+        mcu.reset_stats();
+        let launches0 = mcu.launches();
+        let t_mcu = bench(&format!("{}: firmware MCU, batch {BATCH}", model.name), tgt, || {
+            std::hint::black_box(mcu.infer_batch(hm, &pool).unwrap());
+        });
+
+        let launches = (mcu.launches() - launches0).max(1);
+        let instret_per_launch = mcu.instret() as f64 / launches as f64;
+        println!(
+            "  -> {:.0} inf/s direct | {:.0} inf/s firmware | host instret/launch {:.1}",
+            t_chip.throughput(BATCH as f64),
+            t_mcu.throughput(BATCH as f64),
+            instret_per_launch
+        );
+        // the §2.2 control-plane claim: launching an MVM costs a small
+        // constant number of host instructions, independent of its size
+        assert!(
+            instret_per_launch < 100.0,
+            "{}: control plane costs {instret_per_launch:.1} instret/launch",
+            model.name
+        );
+    }
+}

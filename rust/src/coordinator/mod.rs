@@ -44,6 +44,104 @@ impl PlannedOp {
             PlannedOp::Pool(_) => None,
         }
     }
+
+    /// The tagged-descriptor kind of this op
+    /// ([`crate::soc::desc_kind`]).
+    pub fn kind(&self) -> u32 {
+        match self {
+            PlannedOp::Mvm(_) => crate::soc::desc_kind::DENSE,
+            PlannedOp::Conv(_) => crate::soc::desc_kind::CONV,
+            PlannedOp::Pool(_) => crate::soc::desc_kind::POOL,
+        }
+    }
+
+    /// Serialize this op as a *tagged* SRAM descriptor (the
+    /// `OP_LAUNCH` wire format, `FIRMWARE.md` "SRAM descriptor
+    /// layout"): word 0 is the kind, weighted ops embed the classic
+    /// 8-word MVM descriptor at +4 with its bias pointer resolved to
+    /// `bias_at`, and conv/pool append their spatial geometry.
+    /// Weightless pool ops ignore `bias_at`.
+    pub fn encode_tagged(&self, bias_at: u32) -> Vec<u32> {
+        fn mvm_words(d: &LayerDesc, bias_at: u32) -> [u32; 8] {
+            [
+                d.first_row as u32,
+                d.k as u32,
+                d.n as u32,
+                bias_at,
+                d.requant.m0 as u32,
+                d.requant.shift,
+                d.requant.z_out as i32 as u32,
+                d.relu as u32,
+            ]
+        }
+        match self {
+            PlannedOp::Mvm(d) => {
+                let mut w = vec![crate::soc::desc_kind::DENSE];
+                w.extend(mvm_words(d, bias_at));
+                w
+            }
+            PlannedOp::Conv(cd) => {
+                let mut w = vec![crate::soc::desc_kind::CONV];
+                w.extend(mvm_words(&cd.mvm, bias_at));
+                w.extend([
+                    cd.kh as u32,
+                    cd.kw as u32,
+                    cd.stride as u32,
+                    cd.pad as u32,
+                    cd.in_shape.c as u32,
+                    cd.in_shape.h as u32,
+                    cd.in_shape.w as u32,
+                    cd.pad_value as i32 as u32,
+                ]);
+                w
+            }
+            PlannedOp::Pool(pd) => vec![
+                crate::soc::desc_kind::POOL,
+                pd.kh as u32,
+                pd.kw as u32,
+                pd.stride as u32,
+                pd.in_shape.c as u32,
+                pd.in_shape.h as u32,
+                pd.in_shape.w as u32,
+            ],
+        }
+    }
+}
+
+/// One op's location inside a serialized SRAM descriptor table.
+#[derive(Clone, Copy, Debug)]
+pub struct DescEntry {
+    /// tagged-descriptor kind ([`crate::soc::desc_kind`])
+    pub kind: u32,
+    /// SRAM address of the tagged descriptor (the `OP_LAUNCH` target)
+    pub tagged_addr: u32,
+    /// SRAM address of the embedded classic 8-word MVM descriptor —
+    /// the custom-0 `nmcu.mvm` target (`None` for conv/pool ops, which
+    /// launch through `OP_LAUNCH` only)
+    pub mvm_addr: Option<u32>,
+}
+
+/// A model's planned ops serialized into one contiguous SRAM word
+/// image: per op, the tagged descriptor immediately followed by its
+/// bias table. Built by [`ProgrammedModel::serialize_descriptors`];
+/// `soc::firmware` writes `words` at `base` and the firmware launches
+/// ops through `entries`.
+#[derive(Clone, Debug)]
+pub struct DescriptorTable {
+    /// SRAM address the image is laid out for (pointers inside `words`
+    /// are absolute, so the image must be written exactly there)
+    pub base: u32,
+    /// the serialized descriptor + bias words
+    pub words: Vec<u32>,
+    /// per-op launch addresses, in execution order
+    pub entries: Vec<DescEntry>,
+}
+
+impl DescriptorTable {
+    /// Bytes the serialized image occupies in SRAM.
+    pub fn len_bytes(&self) -> u32 {
+        4 * self.words.len() as u32
+    }
 }
 
 /// A model programmed into the weight memory.
@@ -90,10 +188,36 @@ impl ProgrammedModel {
         self.ops.get(i).and_then(|op| op.as_mvm())
     }
 
-    /// The dense MVM descriptors in execution order (firmware descriptor
-    /// tables; conv/pool ops are not firmware-launchable yet).
+    /// The dense MVM descriptors in execution order (single-layer
+    /// experiment paths; full-model firmware uses
+    /// [`ProgrammedModel::serialize_descriptors`], which also covers
+    /// conv/pool ops).
     pub fn mvm_descs(&self) -> impl Iterator<Item = &LayerDesc> {
         self.ops.iter().filter_map(|op| op.as_mvm())
+    }
+
+    /// Serialize every planned op (+ bias tables) into one contiguous
+    /// word image to be placed at SRAM address `base` — the descriptor
+    /// region the firmware walks (`FIRMWARE.md` "SRAM descriptor
+    /// layout").
+    pub fn serialize_descriptors(&self, base: u32) -> DescriptorTable {
+        let mut words: Vec<u32> = Vec::new();
+        let mut entries = Vec::new();
+        for op in &self.ops {
+            let kind = op.kind();
+            let tagged_addr = base + 4 * words.len() as u32;
+            let bias_at = tagged_addr + 4 * crate::soc::tagged_desc_words(kind) as u32;
+            words.extend(op.encode_tagged(bias_at));
+            if let Some(d) = op.weight_desc() {
+                words.extend(d.bias.iter().map(|&b| b as u32));
+            }
+            // only dense payloads are custom-0 launchable: a conv's
+            // embedded MVM run standalone would skip the im2col walk
+            let mvm_addr =
+                (kind == crate::soc::desc_kind::DENSE).then_some(tagged_addr + 4);
+            entries.push(DescEntry { kind, tagged_addr, mvm_addr });
+        }
+        DescriptorTable { base, words, entries }
     }
 }
 
@@ -129,176 +253,193 @@ impl Chip {
         }
     }
 
-    /// Program a quantized model into the EFLASH with full program-verify.
-    /// Failures (capacity, verify) are typed [`EngineError`]s so a serving
-    /// process can react instead of aborting. Capacity is checked for the
-    /// WHOLE model up front, so a `CapacityExhausted` error leaves the
-    /// bump allocator untouched and a smaller model can still be
-    /// programmed afterwards. (A mid-model `ProgramVerifyFailed` does
-    /// leave the already-programmed rows allocated — those cells are
-    /// physically worn and should not be reused without an erase.)
+    /// Program a quantized model into the EFLASH with full program-verify
+    /// (see [`program_model_into`], which this delegates to).
     pub fn program_model(&mut self, model: &QModel) -> Result<ProgrammedModel, EngineError> {
-        let lanes = self.cfg.nmcu.lanes_per_pe;
-        model.validate()?;
-        let shapes = model.shapes()?;
-        // NMCU geometry: a model that could never be inferred must not
-        // consume EFLASH rows (the bump allocator has no free).
-        let pp = self.cfg.nmcu.pingpong_capacity;
-        let in_cap = self.cfg.nmcu.input_capacity;
-        let act_cap = self.cfg.nmcu.act_capacity;
-        for (i, l) in model.layers.iter().enumerate() {
-            let (in_len, out_len) = (shapes[i].len(), shapes[i + 1].len());
-            match l.op {
-                QOp::Dense => {
-                    if l.n > pp {
-                        return Err(EngineError::BadDescriptor {
-                            reason: format!(
-                                "layer {}: n={} exceeds ping-pong half capacity {pp}",
-                                l.name, l.n
-                            ),
-                        });
-                    }
-                    // a dense layer reads the input buffer when it is
-                    // first or follows a conv/pool stage (re-staged
-                    // feature map); chained dense layers read the
-                    // ping-pong buffer, whose capacity the previous n
-                    // check already covers
-                    let staged =
-                        i == 0 || !matches!(model.layers[i - 1].op, QOp::Dense);
-                    if staged && l.k > in_cap {
-                        return Err(EngineError::BadDescriptor {
-                            reason: format!(
-                                "layer {}: k={} exceeds input buffer capacity {in_cap}",
-                                l.name, l.k
-                            ),
-                        });
-                    }
+        program_model_into(&self.cfg, &mut self.eflash, model)
+    }
+}
+
+/// Program a quantized model into `eflash` with full program-verify.
+/// Failures (capacity, verify) are typed [`EngineError`]s so a serving
+/// process can react instead of aborting. Capacity is checked for the
+/// WHOLE model up front, so a `CapacityExhausted` error leaves the
+/// bump allocator untouched and a smaller model can still be
+/// programmed afterwards. (A mid-model `ProgramVerifyFailed` does
+/// leave the already-programmed rows allocated — those cells are
+/// physically worn and should not be reused without an erase.)
+///
+/// This is a free function over any [`EflashMacro`] so both substrates
+/// share it: [`Chip::program_model`] and the firmware-in-the-loop
+/// `engine::McuBackend`, which programs models into the `soc::Mcu`'s
+/// own macro.
+pub fn program_model_into(
+    cfg: &ChipConfig,
+    eflash: &mut EflashMacro,
+    model: &QModel,
+) -> Result<ProgrammedModel, EngineError> {
+    let lanes = cfg.nmcu.lanes_per_pe;
+    model.validate()?;
+    let shapes = model.shapes()?;
+    // NMCU geometry: a model that could never be inferred must not
+    // consume EFLASH rows (the bump allocator has no free).
+    let pp = cfg.nmcu.pingpong_capacity;
+    let in_cap = cfg.nmcu.input_capacity;
+    let act_cap = cfg.nmcu.act_capacity;
+    for (i, l) in model.layers.iter().enumerate() {
+        let (in_len, out_len) = (shapes[i].len(), shapes[i + 1].len());
+        match l.op {
+            QOp::Dense => {
+                if l.n > pp {
+                    return Err(EngineError::BadDescriptor {
+                        reason: format!(
+                            "layer {}: n={} exceeds ping-pong half capacity {pp}",
+                            l.name, l.n
+                        ),
+                    });
                 }
-                QOp::Conv2D { .. } => {
-                    if l.n > pp {
-                        return Err(EngineError::BadDescriptor {
-                            reason: format!(
-                                "layer {}: cout={} exceeds ping-pong half capacity {pp}",
-                                l.name, l.n
-                            ),
-                        });
-                    }
-                    if l.k > in_cap {
-                        return Err(EngineError::BadDescriptor {
-                            reason: format!(
-                                "layer {}: im2col patch k={} exceeds input buffer \
-                                 capacity {in_cap}",
-                                l.name, l.k
-                            ),
-                        });
-                    }
-                    if in_len > act_cap || out_len > act_cap {
-                        return Err(EngineError::BadDescriptor {
-                            reason: format!(
-                                "layer {}: feature map (in {in_len}, out {out_len}) \
-                                 exceeds activation SRAM capacity {act_cap}",
-                                l.name
-                            ),
-                        });
-                    }
+                // a dense layer reads the input buffer when it is
+                // first or follows a conv/pool stage (re-staged
+                // feature map); chained dense layers read the
+                // ping-pong buffer, whose capacity the previous n
+                // check already covers
+                let staged =
+                    i == 0 || !matches!(model.layers[i - 1].op, QOp::Dense);
+                if staged && l.k > in_cap {
+                    return Err(EngineError::BadDescriptor {
+                        reason: format!(
+                            "layer {}: k={} exceeds input buffer capacity {in_cap}",
+                            l.name, l.k
+                        ),
+                    });
                 }
-                QOp::MaxPool2d { .. } => {
-                    if in_len > act_cap || out_len > act_cap {
-                        return Err(EngineError::BadDescriptor {
-                            reason: format!(
-                                "layer {}: feature map (in {in_len}, out {out_len}) \
-                                 exceeds activation SRAM capacity {act_cap}",
-                                l.name
-                            ),
-                        });
-                    }
+            }
+            QOp::Conv2D { .. } => {
+                if l.n > pp {
+                    return Err(EngineError::BadDescriptor {
+                        reason: format!(
+                            "layer {}: cout={} exceeds ping-pong half capacity {pp}",
+                            l.name, l.n
+                        ),
+                    });
+                }
+                if l.k > in_cap {
+                    return Err(EngineError::BadDescriptor {
+                        reason: format!(
+                            "layer {}: im2col patch k={} exceeds input buffer \
+                             capacity {in_cap}",
+                            l.name, l.k
+                        ),
+                    });
+                }
+                if in_len > act_cap || out_len > act_cap {
+                    return Err(EngineError::BadDescriptor {
+                        reason: format!(
+                            "layer {}: feature map (in {in_len}, out {out_len}) \
+                             exceeds activation SRAM capacity {act_cap}",
+                            l.name
+                        ),
+                    });
+                }
+            }
+            QOp::MaxPool2d { .. } => {
+                if in_len > act_cap || out_len > act_cap {
+                    return Err(EngineError::BadDescriptor {
+                        reason: format!(
+                            "layer {}: feature map (in {in_len}, out {out_len}) \
+                             exceeds activation SRAM capacity {act_cap}",
+                            l.name
+                        ),
+                    });
                 }
             }
         }
-        // build the row images of the weighted layers first and size the
-        // pre-check from them, so the capacity math has a single source
-        // of truth (layout_codes)
-        let images: Vec<Option<Vec<i8>>> = model
-            .layers
-            .iter()
-            .map(|l| match l.op {
-                QOp::MaxPool2d { .. } => None,
-                _ => Some(layout_codes(&l.codes, l.k, l.n, lanes)),
-            })
-            .collect();
-        let cpr = self.eflash.cells_per_read();
-        let rows_needed: usize = images
-            .iter()
-            .flatten()
-            .map(|img| img.len().div_ceil(cpr))
-            .sum();
-        if rows_needed > self.eflash.rows_free() {
-            return Err(EngineError::CapacityExhausted {
-                requested_rows: rows_needed,
-                rows_free: self.eflash.rows_free(),
-                what: model.name.clone(),
+    }
+    // build the row images of the weighted layers first and size the
+    // pre-check from them, so the capacity math has a single source
+    // of truth (layout_codes)
+    let images: Vec<Option<Vec<i8>>> = model
+        .layers
+        .iter()
+        .map(|l| match l.op {
+            QOp::MaxPool2d { .. } => None,
+            _ => Some(layout_codes(&l.codes, l.k, l.n, lanes)),
+        })
+        .collect();
+    let cpr = eflash.cells_per_read();
+    let rows_needed: usize = images
+        .iter()
+        .flatten()
+        .map(|img| img.len().div_ceil(cpr))
+        .sum();
+    if rows_needed > eflash.rows_free() {
+        return Err(EngineError::CapacityExhausted {
+            requested_rows: rows_needed,
+            rows_free: eflash.rows_free(),
+            what: model.name.clone(),
+        });
+    }
+    let mut pm = ProgrammedModel {
+        name: model.name.clone(),
+        ops: Vec::new(),
+        regions: Vec::new(),
+        reports: Vec::new(),
+        layer_codes: Vec::new(),
+        layer_images: Vec::new(),
+        input_shape: model.input_shape,
+        output_len: shapes.last().expect("shapes non-empty").len(),
+    };
+    for ((i, l), image) in model.layers.iter().enumerate().zip(images) {
+        let Some(image) = image else {
+            let QOp::MaxPool2d { kh, kw, stride } = l.op else {
+                unreachable!("only pool layers have no row image");
+            };
+            pm.ops.push(PlannedOp::Pool(PoolDesc { kh, kw, stride, in_shape: shapes[i] }));
+            continue;
+        };
+        let Some((region, report)) = eflash.program_region(&image) else {
+            // capacity was pre-checked for the whole model above, so
+            // this is an internal invariant violation, not bad input
+            unreachable!("EFLASH capacity pre-check missed layer {}", l.name);
+        };
+        if report.failed_cells > 0 {
+            return Err(EngineError::ProgramVerifyFailed {
+                layer: l.name.clone(),
+                failed_cells: report.failed_cells,
             });
         }
-        let mut pm = ProgrammedModel {
-            name: model.name.clone(),
-            ops: Vec::new(),
-            regions: Vec::new(),
-            reports: Vec::new(),
-            layer_codes: Vec::new(),
-            layer_images: Vec::new(),
-            input_shape: model.input_shape,
-            output_len: shapes.last().expect("shapes non-empty").len(),
+        let desc = LayerDesc {
+            first_row: region.first_row,
+            k: l.k,
+            n: l.n,
+            bias: l.bias.clone(),
+            requant: l.requant,
+            relu: l.relu,
         };
-        for ((i, l), image) in model.layers.iter().enumerate().zip(images) {
-            let Some(image) = image else {
-                let QOp::MaxPool2d { kh, kw, stride } = l.op else {
-                    unreachable!("only pool layers have no row image");
-                };
-                pm.ops.push(PlannedOp::Pool(PoolDesc { kh, kw, stride, in_shape: shapes[i] }));
-                continue;
-            };
-            let Some((region, report)) = self.eflash.program_region(&image) else {
-                // capacity was pre-checked for the whole model above, so
-                // this is an internal invariant violation, not bad input
-                unreachable!("EFLASH capacity pre-check missed layer {}", l.name);
-            };
-            if report.failed_cells > 0 {
-                return Err(EngineError::ProgramVerifyFailed {
-                    layer: l.name.clone(),
-                    failed_cells: report.failed_cells,
-                });
+        match l.op {
+            QOp::Dense => pm.ops.push(PlannedOp::Mvm(desc)),
+            QOp::Conv2D { kh, kw, stride, pad, .. } => {
+                pm.ops.push(PlannedOp::Conv(ConvDesc {
+                    mvm: desc,
+                    kh,
+                    kw,
+                    stride,
+                    pad,
+                    in_shape: shapes[i],
+                    pad_value: l.z_in,
+                }));
             }
-            let desc = LayerDesc {
-                first_row: region.first_row,
-                k: l.k,
-                n: l.n,
-                bias: l.bias.clone(),
-                requant: l.requant,
-                relu: l.relu,
-            };
-            match l.op {
-                QOp::Dense => pm.ops.push(PlannedOp::Mvm(desc)),
-                QOp::Conv2D { kh, kw, stride, pad, .. } => {
-                    pm.ops.push(PlannedOp::Conv(ConvDesc {
-                        mvm: desc,
-                        kh,
-                        kw,
-                        stride,
-                        pad,
-                        in_shape: shapes[i],
-                        pad_value: l.z_in,
-                    }));
-                }
-                QOp::MaxPool2d { .. } => unreachable!("pool layers handled above"),
-            }
-            pm.regions.push(region);
-            pm.reports.push(report);
-            pm.layer_codes.push(l.codes.clone());
-            pm.layer_images.push(image);
+            QOp::MaxPool2d { .. } => unreachable!("pool layers handled above"),
         }
-        Ok(pm)
+        pm.regions.push(region);
+        pm.reports.push(report);
+        pm.layer_codes.push(l.codes.clone());
+        pm.layer_images.push(image);
     }
+    Ok(pm)
+}
 
+impl Chip {
     /// Run one inference through all programmed layers (fully on-chip):
     /// dense layers chain through the ping-pong buffer exactly as
     /// before; conv/pool layers stream their feature maps through the

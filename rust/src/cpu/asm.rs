@@ -219,6 +219,34 @@ pub fn ebreak() -> u32 {
 pub fn rdinstret(rd: u32) -> u32 {
     0x73 | (rd << 7) | (0b010 << 12) | (0xC02 << 20)
 }
+/// Encode `rdcycle rd` (read the cycle counter; this core retires one
+/// instruction per cycle, so it aliases `rdinstret`).
+pub fn rdcycle(rd: u32) -> u32 {
+    0x73 | (rd << 7) | (0b010 << 12) | (0xC00 << 20)
+}
+
+// ---- standard pseudo-instructions (single-word expansions) ------------------
+
+/// `nop` (= `addi x0, x0, 0`).
+pub fn nop() -> u32 {
+    addi(0, 0, 0)
+}
+/// `mv rd, rs` (= `addi rd, rs, 0`).
+pub fn mv(rd: u32, rs: u32) -> u32 {
+    addi(rd, rs, 0)
+}
+/// `jr rs` (= `jalr x0, rs, 0`): indirect jump without link.
+pub fn jr(rs: u32) -> u32 {
+    jalr(0, rs, 0)
+}
+/// `seqz rd, rs` (= `sltiu rd, rs, 1`): rd = (rs == 0).
+pub fn seqz(rd: u32, rs: u32) -> u32 {
+    sltiu(rd, rs, 1)
+}
+/// `snez rd, rs` (= `sltu rd, x0, rs`): rd = (rs != 0).
+pub fn snez(rd: u32, rs: u32) -> u32 {
+    sltu(rd, 0, rs)
+}
 
 /// custom-0: launch the NMCU MVM with the descriptor pointer in rs1.
 pub fn nmcu_mvm(rd: u32, rs1: u32) -> u32 {
@@ -325,6 +353,17 @@ mod tests {
         assert_eq!(sw(1, 2, 0), 0x0020_A023);
         assert_eq!(ecall(), 0x0000_0073);
         assert_eq!(jal(0, 8), 0x0080_006F);
+    }
+
+    #[test]
+    fn pseudo_instructions_expand_to_base_encodings() {
+        assert_eq!(nop(), addi(0, 0, 0));
+        assert_eq!(mv(3, 7), addi(3, 7, 0));
+        assert_eq!(jr(1), jalr(0, 1, 0));
+        assert_eq!(seqz(2, 5), sltiu(2, 5, 1));
+        assert_eq!(snez(2, 5), sltu(2, 0, 5));
+        // rdcycle/rdinstret differ only in the CSR number
+        assert_eq!(rdcycle(4) ^ rdinstret(4), (0xC00 ^ 0xC02) << 20);
     }
 
     #[test]

@@ -1,0 +1,278 @@
+//! The firmware-in-the-loop [`Backend`]: every inference runs as RV32I
+//! firmware on the [`Mcu`] — the paper's actual control plane — instead
+//! of the host driving the NMCU model directly like [`super::NmcuBackend`]
+//! does.
+//!
+//! `program` moves the model into the MCU's own EFLASH
+//! ([`crate::coordinator::program_model_into`]), serializes its
+//! descriptors into SRAM, and installs a resident batch-serving
+//! firmware image ([`crate::soc::firmware`]). `infer`/`infer_batch`
+//! then only write inputs into the shared I/O arena, set the sample
+//! count, reset the core, and run — the firmware walks the descriptor
+//! table, launching every dense layer with the single custom-0
+//! `nmcu.mvm` instruction (paper §2.2) and conv/pool layers through the
+//! tagged `OP_LAUNCH` register, moving all I/O with the SoC DMA engine.
+//! Nothing is re-programmed between requests: EFLASH weights,
+//! descriptors, and firmware stay resident (zero-standby, §2.3).
+//!
+//! Faults the firmware detects (NMCU STATUS=2, rejected DMA), a wedged
+//! core (out of fuel), and illegal instructions all surface as typed
+//! [`EngineError`]s, and the MCU remains usable for the next request.
+
+use super::{lookup, Backend, EngineError, ModelHandle, ModelInfo, Result};
+use crate::artifacts::QModel;
+use crate::config::ChipConfig;
+use crate::coordinator::{program_model_into, ProgrammedModel};
+use crate::cpu::Mem;
+use crate::nmcu::NmcuStats;
+use crate::soc::firmware::{self, FirmwareImage};
+use crate::soc::{map, Mcu};
+
+/// One resident model: its EFLASH image plan plus the installed
+/// firmware + descriptor floor plan.
+struct ModelSlot {
+    pm: ProgrammedModel,
+    fw: FirmwareImage,
+}
+
+/// The firmware-in-the-loop [`Backend`] over one [`Mcu`] (see the
+/// module docs). Construct with [`McuBackend::new`]; use
+/// [`McuBackend::mcu`]/[`McuBackend::mcu_mut`] for device-level access
+/// (UART output, bake experiments, fault injection).
+pub struct McuBackend {
+    cfg: ChipConfig,
+    mcu: Mcu,
+    models: Vec<ModelSlot>,
+    /// static-SRAM bump cursor: where the next model's firmware goes
+    next_entry: u32,
+    /// test/diagnostic override of the per-run instruction budget
+    fuel_override: Option<u64>,
+    /// host instructions retired across all completed runs
+    instret_total: u64,
+}
+
+impl McuBackend {
+    /// Fabricate a fresh MCU (core + bus + NMCU + EFLASH) with `cfg`.
+    pub fn new(cfg: &ChipConfig) -> McuBackend {
+        McuBackend {
+            cfg: cfg.clone(),
+            mcu: Mcu::new(cfg),
+            models: Vec::new(),
+            next_entry: map::SRAM_BASE,
+            fuel_override: None,
+            instret_total: 0,
+        }
+    }
+
+    /// Device-level access to the MCU (UART log, power controller,
+    /// EFLASH bake).
+    pub fn mcu(&self) -> &Mcu {
+        &self.mcu
+    }
+
+    /// Mutable device-level access (bake experiments, fault injection
+    /// in tests — e.g. corrupting a descriptor word in SRAM).
+    pub fn mcu_mut(&mut self) -> &mut Mcu {
+        &mut self.mcu
+    }
+
+    /// The installed firmware image of a resident model (SRAM floor
+    /// plan: descriptor table, arena slots, staging buffers).
+    pub fn firmware(&self, handle: ModelHandle) -> Result<&FirmwareImage> {
+        lookup(&self.models, handle).map(|s| &s.fw)
+    }
+
+    /// The programmed image of a resident model.
+    pub fn model(&self, handle: ModelHandle) -> Result<&ProgrammedModel> {
+        lookup(&self.models, handle).map(|s| &s.pm)
+    }
+
+    /// Override the per-run instruction budget (`None` restores the
+    /// [`FirmwareImage::fuel`] default). Lets tests exercise the
+    /// out-of-fuel path deterministically.
+    pub fn set_fuel_override(&mut self, fuel: Option<u64>) {
+        self.fuel_override = fuel;
+    }
+
+    /// Host instructions retired across all completed firmware runs —
+    /// divide by [`McuBackend::launches`] for the paper's
+    /// instructions-per-MVM-launch control-plane figure.
+    pub fn instret(&self) -> u64 {
+        self.instret_total
+    }
+
+    /// NMCU launches serviced so far (custom-0 + OP_LAUNCH).
+    pub fn launches(&self) -> u64 {
+        self.mcu.launches
+    }
+
+    /// Run an arbitrary firmware blob on this SoC and decode its exit
+    /// like the serving path does (diagnostics and fault-path tests).
+    /// The words are loaded into the shared I/O arena — scratch space
+    /// that the next `infer` call is free to clobber — so resident
+    /// model images are untouched.
+    pub fn run_firmware(&mut self, words: &[u32], fuel: u64) -> Result<()> {
+        self.mcu.load_firmware_at(firmware::ARENA_BASE, words);
+        let exit = self.mcu.run(fuel);
+        self.instret_total += self.mcu.cpu.instret;
+        firmware::decode_exit(exit)
+    }
+}
+
+impl Backend for McuBackend {
+    fn name(&self) -> &'static str {
+        "mcu"
+    }
+
+    /// Program the model into the MCU's EFLASH, then install its
+    /// descriptor table + batch firmware in SRAM. (If firmware layout
+    /// fails after a successful EFLASH program, the consumed rows stay
+    /// allocated — like a mid-model program-verify failure.)
+    fn program(&mut self, model: &QModel) -> Result<ModelHandle> {
+        let pm = program_model_into(&self.cfg, &mut self.mcu.eflash, model)?;
+        let fw = firmware::build_model_firmware(&pm, self.next_entry)?;
+        fw.install(&mut self.mcu);
+        self.next_entry = fw.end;
+        self.models.push(ModelSlot { pm, fw });
+        Ok(ModelHandle::from_index(self.models.len() - 1))
+    }
+
+    fn infer(&mut self, handle: ModelHandle, x: &[i8]) -> Result<Vec<i8>> {
+        let xs = [x.to_vec()];
+        let mut out = self.infer_batch(handle, &xs)?;
+        Ok(out.pop().expect("one output per input"))
+    }
+
+    /// Serve the batch in resident-firmware runs of up to
+    /// [`FirmwareImage::max_batch`] samples: per chunk the host writes
+    /// the arena inputs and the sample count, resets the core to the
+    /// model's entry, and lets the firmware do everything else.
+    fn infer_batch(&mut self, handle: ModelHandle, xs: &[Vec<i8>]) -> Result<Vec<Vec<i8>>> {
+        let slot = lookup(&self.models, handle)?;
+        let fw = &slot.fw;
+        if let Some(bad) = xs.iter().find(|x| x.len() != fw.in_len) {
+            return Err(EngineError::InputSize { expected: fw.in_len, got: bad.len() });
+        }
+        let mut out: Vec<Vec<i8>> = Vec::with_capacity(xs.len());
+        for chunk in xs.chunks(fw.max_batch.max(1)) {
+            for (i, x) in chunk.iter().enumerate() {
+                let bytes: Vec<u8> = x.iter().map(|&v| v as u8).collect();
+                self.mcu.bus.sram_write(fw.in_base + i as u32 * fw.in_stride, &bytes);
+            }
+            self.mcu.bus.write32(fw.param_addr, chunk.len() as u32);
+            self.mcu.reset_to(fw.entry);
+            let fuel = self.fuel_override.unwrap_or_else(|| fw.fuel(chunk.len()));
+            let exit = self.mcu.run(fuel);
+            self.instret_total += self.mcu.cpu.instret;
+            firmware::decode_exit(exit)?;
+            for i in 0..chunk.len() {
+                let y: Vec<i8> = self
+                    .mcu
+                    .bus
+                    .sram_slice(fw.out_base + i as u32 * fw.out_stride, fw.out_len)
+                    .iter()
+                    .map(|&b| b as i8)
+                    .collect();
+                out.push(y);
+            }
+        }
+        Ok(out)
+    }
+
+    fn n_models(&self) -> usize {
+        self.models.len()
+    }
+
+    fn model_info(&self, handle: ModelHandle) -> Option<ModelInfo> {
+        self.models.get(handle.index()).map(|s| ModelInfo {
+            name: s.pm.name.clone(),
+            input_dim: s.pm.input_len(),
+            output_dim: s.pm.output_len,
+            n_layers: s.pm.ops.len(),
+        })
+    }
+
+    fn stats(&self) -> NmcuStats {
+        self.mcu.nmcu.stats
+    }
+
+    fn reset_stats(&mut self) {
+        self.mcu.nmcu.stats = NmcuStats::default();
+        self.instret_total = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::ReferenceBackend;
+    use crate::util::rng::Rng;
+
+    fn cfg() -> ChipConfig {
+        let mut c = ChipConfig::new();
+        c.eflash.capacity_bits = 1024 * 1024;
+        c
+    }
+
+    #[test]
+    fn firmware_backend_matches_reference_on_an_mlp() {
+        let cfg = cfg();
+        let mut r = Rng::new(7);
+        let model = crate::datasets::synthetic_qmodel(&mut r, "mcu-mlp", 96, 20, 8);
+        let mut mcu = McuBackend::new(&cfg);
+        let h = mcu.program(&model).unwrap();
+        let mut sw = ReferenceBackend::new();
+        let hs = sw.program(&model).unwrap();
+        let xs: Vec<Vec<i8>> = (0..5)
+            .map(|_| (0..96).map(|_| (r.below(256) as i32 - 128) as i8).collect())
+            .collect();
+        assert_eq!(
+            mcu.infer_batch(h, &xs).unwrap(),
+            sw.infer_batch(hs, &xs).unwrap(),
+            "firmware path diverged from the reference"
+        );
+        assert!(mcu.instret() > 0);
+        assert_eq!(mcu.launches(), 5 * 2, "one launch per layer per sample");
+    }
+
+    #[test]
+    fn multi_model_residency_keeps_images_apart() {
+        let cfg = cfg();
+        let mut r = Rng::new(8);
+        let m1 = crate::datasets::synthetic_qmodel(&mut r, "a", 64, 12, 4);
+        let m2 = crate::datasets::synthetic_qmodel(&mut r, "b", 32, 10, 3);
+        let mut mcu = McuBackend::new(&cfg);
+        let h1 = mcu.program(&m1).unwrap();
+        let h2 = mcu.program(&m2).unwrap();
+        assert_ne!(
+            mcu.firmware(h1).unwrap().entry,
+            mcu.firmware(h2).unwrap().entry,
+            "resident firmware images must not overlap"
+        );
+        let mut sw = ReferenceBackend::new();
+        let s1 = sw.program(&m1).unwrap();
+        let s2 = sw.program(&m2).unwrap();
+        for i in 0..4 {
+            let (mh, sh, k) = if i % 2 == 0 { (h1, s1, 64) } else { (h2, s2, 32) };
+            let x: Vec<i8> = (0..k).map(|_| (r.below(256) as i32 - 128) as i8).collect();
+            assert_eq!(
+                mcu.infer(mh, &x).unwrap(),
+                sw.infer(sh, &x).unwrap(),
+                "interleaved inference {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn input_size_and_handle_errors_are_typed() {
+        let cfg = cfg();
+        let mut r = Rng::new(9);
+        let model = crate::datasets::synthetic_qmodel(&mut r, "t", 40, 8, 3);
+        let mut mcu = McuBackend::new(&cfg);
+        let h = mcu.program(&model).unwrap();
+        let e = mcu.infer(h, &[0i8; 39]).unwrap_err();
+        assert!(matches!(e, EngineError::InputSize { expected: 40, got: 39 }), "{e:?}");
+        let e = mcu.infer(ModelHandle::from_index(9), &[0i8; 40]).unwrap_err();
+        assert!(matches!(e, EngineError::InvalidHandle { .. }), "{e:?}");
+    }
+}

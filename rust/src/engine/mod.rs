@@ -9,11 +9,15 @@
 //! substrate:
 //!
 //! - [`NmcuBackend`] — the chip simulator (EFLASH weight memory + NMCU),
+//! - [`McuBackend`] — the firmware-in-the-loop SoC: inference runs as
+//!   RV32I firmware on the full [`crate::soc::Mcu`] (CPU + bus + DMA +
+//!   NMCU), launching layers with the paper's custom-0 instruction,
 //! - [`ReferenceBackend`] — the bit-exact pure-software integer path,
 //! - `HloBackend` — the AOT-compiled HLO graphs via PJRT
 //!   (`--features pjrt`),
-//! - [`ShardedEngine`] — N replicated chips on worker threads, the
-//!   data-parallel throughput primitive (itself a [`Backend`]).
+//! - [`ShardedEngine`] — N replicated chips (or firmware-driven MCUs)
+//!   on worker threads, the data-parallel throughput primitive (itself
+//!   a [`Backend`]).
 //!
 //! On top of the batch primitive sits the serving layer:
 //! [`InferenceServer`] (see [`server`]) accepts independent
@@ -44,6 +48,7 @@
 //! let logits = engine.infer_batch(h, &batch).unwrap();
 //! ```
 
+mod mcu_backend;
 mod nmcu_backend;
 mod reference;
 pub mod server;
@@ -55,6 +60,7 @@ mod hlo;
 pub use crate::error::EngineError;
 #[cfg(feature = "pjrt")]
 pub use hlo::HloBackend;
+pub use mcu_backend::McuBackend;
 pub use nmcu_backend::NmcuBackend;
 pub use reference::ReferenceBackend;
 pub use server::{BatchPolicy, InferenceServer, Pending, ServerClient};
@@ -159,6 +165,9 @@ pub trait Backend: Send {
 pub enum BackendKind {
     /// The chip simulator ([`NmcuBackend`]).
     Nmcu,
+    /// The firmware-in-the-loop SoC: inference as RV32I firmware on the
+    /// full MCU ([`McuBackend`]).
+    Mcu,
     /// The pure-software integer reference ([`ReferenceBackend`]).
     Reference,
     /// The AOT HLO graphs via PJRT (`HloBackend`, `--features pjrt`).
@@ -171,10 +180,11 @@ impl std::str::FromStr for BackendKind {
     fn from_str(s: &str) -> std::result::Result<BackendKind, EngineError> {
         match s {
             "nmcu" | "chip" => Ok(BackendKind::Nmcu),
+            "mcu" | "soc" | "firmware" => Ok(BackendKind::Mcu),
             "reference" | "ref" | "sw" => Ok(BackendKind::Reference),
             "hlo" | "pjrt" => Ok(BackendKind::Hlo),
             other => Err(EngineError::InvalidConfig {
-                reason: format!("unknown backend `{other}` (expected nmcu|reference|hlo)"),
+                reason: format!("unknown backend `{other}` (expected nmcu|mcu|reference|hlo)"),
             }),
         }
     }
@@ -201,6 +211,15 @@ pub struct Engine {
     backend: Box<dyn Backend>,
 }
 
+impl std::fmt::Debug for Engine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Engine")
+            .field("backend", &self.backend.name())
+            .field("n_models", &self.backend.n_models())
+            .finish()
+    }
+}
+
 impl Engine {
     /// Wrap an already-constructed backend.
     pub fn new(backend: Box<dyn Backend>) -> Engine {
@@ -217,9 +236,22 @@ impl Engine {
         Engine::new(Box::new(ReferenceBackend::new()))
     }
 
+    /// Engine over the firmware-in-the-loop SoC: every inference runs
+    /// as RV32I firmware on a full [`crate::soc::Mcu`].
+    pub fn mcu(cfg: &ChipConfig) -> Engine {
+        Engine::new(Box::new(McuBackend::new(cfg)))
+    }
+
     /// Engine over `n_shards` replicated chips on worker threads.
     pub fn sharded(cfg: &ChipConfig, n_shards: usize) -> Result<Engine> {
         Ok(Engine::new(Box::new(ShardedEngine::new(cfg, n_shards)?)))
+    }
+
+    /// Engine over `n_shards` replicated firmware-driven MCUs — the
+    /// sharded fleet with the RV32I control plane in the loop on every
+    /// shard.
+    pub fn sharded_mcu(cfg: &ChipConfig, n_shards: usize) -> Result<Engine> {
+        Ok(Engine::new(Box::new(ShardedEngine::new_mcu(cfg, n_shards)?)))
     }
 
     /// Engine over the AOT HLO graphs via PJRT.
@@ -234,6 +266,7 @@ impl Engine {
     pub fn from_kind(kind: BackendKind, cfg: &ChipConfig, artifacts_dir: &Path) -> Result<Engine> {
         match kind {
             BackendKind::Nmcu => Ok(Engine::nmcu(cfg)),
+            BackendKind::Mcu => Ok(Engine::mcu(cfg)),
             BackendKind::Reference => Ok(Engine::reference()),
             #[cfg(feature = "pjrt")]
             BackendKind::Hlo => Engine::hlo(artifacts_dir),

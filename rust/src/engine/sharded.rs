@@ -1,60 +1,90 @@
-//! Data-parallel serving over N replicated chips. Each shard is a full
-//! [`NmcuBackend`] (its own EFLASH + NMCU, fabricated from the same
-//! `ChipConfig` and therefore bit-identical); `infer_batch` splits a
-//! batch into contiguous chunks and runs them on scoped worker threads,
-//! then merges the per-shard `NmcuStats`. This is the first real
-//! throughput-scaling primitive in the repo: the paper's chip is a
+//! Data-parallel serving over N replicated devices. Each shard is a
+//! full backend of the same kind — an [`NmcuBackend`] (its own EFLASH +
+//! NMCU) or a firmware-driven [`McuBackend`] (a whole SoC), fabricated
+//! from the same `ChipConfig` and therefore bit-identical;
+//! `infer_batch` splits a batch into contiguous chunks and runs them on
+//! scoped worker threads, then merges the per-shard `NmcuStats`. This
+//! is the repo's throughput-scaling primitive: the paper's chip is a
 //! single fixed-function device, and a rack of them serves traffic
 //! exactly like this — replicate the weights, fan out the requests.
 
-use super::{Backend, EngineError, ModelHandle, ModelInfo, NmcuBackend, Result};
+use super::{Backend, EngineError, McuBackend, ModelHandle, ModelInfo, NmcuBackend, Result};
 use crate::artifacts::QModel;
 use crate::config::ChipConfig;
 use crate::nmcu::NmcuStats;
 
-/// N replicated chips serving batches in parallel — the data-parallel
-/// [`Backend`] (see the module docs).
-pub struct ShardedEngine {
-    shards: Vec<NmcuBackend>,
+/// N replicated devices serving batches in parallel — the data-parallel
+/// [`Backend`] (see the module docs). Defaults to a fleet of direct
+/// chip simulators; `ShardedEngine<McuBackend>` puts the RV32I
+/// firmware control plane in the loop on every shard.
+pub struct ShardedEngine<B: Backend = NmcuBackend> {
+    shards: Vec<B>,
 }
 
-impl ShardedEngine {
+impl<B: Backend> std::fmt::Debug for ShardedEngine<B> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ShardedEngine")
+            .field("backend", &self.shards[0].name())
+            .field("n_shards", &self.shards.len())
+            .finish()
+    }
+}
+
+impl ShardedEngine<NmcuBackend> {
     /// Fabricate `n_shards` identically-seeded chips.
     pub fn new(cfg: &ChipConfig, n_shards: usize) -> Result<ShardedEngine> {
-        if n_shards == 0 {
+        ShardedEngine::from_shards((0..n_shards).map(|_| NmcuBackend::new(cfg)).collect())
+    }
+}
+
+impl ShardedEngine<McuBackend> {
+    /// Fabricate `n_shards` identically-seeded firmware-driven MCUs.
+    pub fn new_mcu(cfg: &ChipConfig, n_shards: usize) -> Result<ShardedEngine<McuBackend>> {
+        ShardedEngine::from_shards((0..n_shards).map(|_| McuBackend::new(cfg)).collect())
+    }
+}
+
+impl<B: Backend> ShardedEngine<B> {
+    /// Build a fleet from pre-constructed shards (ablations that
+    /// pre-configure each device). All shards must run the same
+    /// allocation sequence so handles agree.
+    pub fn from_shards(shards: Vec<B>) -> Result<ShardedEngine<B>> {
+        if shards.is_empty() {
             return Err(EngineError::InvalidConfig { reason: "n_shards must be >= 1".into() });
         }
-        Ok(ShardedEngine {
-            shards: (0..n_shards).map(|_| NmcuBackend::new(cfg)).collect(),
-        })
+        Ok(ShardedEngine { shards })
     }
 
-    /// Number of replicated chips in the fleet.
+    /// Number of replicated devices in the fleet.
     pub fn n_shards(&self) -> usize {
         self.shards.len()
     }
 
     /// Access one shard (per-shard stats, bake experiments).
-    pub fn shard(&self, i: usize) -> &NmcuBackend {
+    pub fn shard(&self, i: usize) -> &B {
         &self.shards[i]
     }
 
     /// Mutable access to one shard (bake experiments, fault injection).
-    pub fn shard_mut(&mut self, i: usize) -> &mut NmcuBackend {
+    pub fn shard_mut(&mut self, i: usize) -> &mut B {
         &mut self.shards[i]
     }
 }
 
-impl Backend for ShardedEngine {
+impl<B: Backend> Backend for ShardedEngine<B> {
     fn name(&self) -> &'static str {
-        "nmcu-sharded"
+        match self.shards[0].name() {
+            "mcu" => "mcu-sharded",
+            "nmcu" => "nmcu-sharded",
+            _ => "sharded",
+        }
     }
 
-    /// Replicate the model into every shard's EFLASH, programming the
-    /// shards concurrently (each pays the full ISPP program-verify cost,
-    /// so a serial loop would multiply fleet setup time by N). All
-    /// shards run the same allocation sequence, so they must agree on
-    /// the handle.
+    /// Replicate the model into every shard, programming the shards
+    /// concurrently (each pays the full ISPP program-verify cost, so a
+    /// serial loop would multiply fleet setup time by N). All shards
+    /// run the same allocation sequence, so they must agree on the
+    /// handle.
     fn program(&mut self, model: &QModel) -> Result<ModelHandle> {
         let mut results: Vec<Result<ModelHandle>> = Vec::new();
         std::thread::scope(|scope| {

@@ -34,12 +34,15 @@
 //!
 //! [`engine`] is the public serving surface: a [`engine::Backend`] trait
 //! (`program` / `infer` / `infer_batch` / `stats`, all returning typed
-//! [`engine::EngineError`]s) with three substrates — the chip simulator
-//! ([`engine::NmcuBackend`]), the bit-exact software reference
+//! [`engine::EngineError`]s) with four substrates — the chip simulator
+//! ([`engine::NmcuBackend`]), the firmware-in-the-loop SoC
+//! ([`engine::McuBackend`]: every inference runs as RV32I firmware on
+//! [`soc::Mcu`], launching layers with the paper's custom-0
+//! instruction; see `FIRMWARE.md`), the bit-exact software reference
 //! ([`engine::ReferenceBackend`]), and the AOT-HLO graphs via PJRT
 //! (`engine::HloBackend`, feature-gated) — plus
-//! [`engine::ShardedEngine`], which replicates the chip N ways and fans
-//! batches across worker threads.
+//! [`engine::ShardedEngine`], which replicates the chip (or the whole
+//! MCU) N ways and fans batches across worker threads.
 //!
 //! On top sits the dynamic-batching scheduler
 //! ([`engine::InferenceServer`]): single-sample requests in on a bounded

@@ -1,23 +1,32 @@
-//! DMA controller (paper Fig 1 lists a DMA block): simple single-channel
-//! mem-to-mem engine with a register file; copies execute synchronously
-//! and the cycle model charges one bus beat per byte.
+//! DMA controller (paper Fig 1 lists a DMA block next to the CPU): a
+//! simple single-channel mem-to-mem engine with a register file. Copies
+//! execute synchronously (the cycle model charges one bus beat per
+//! byte), and the engine moves word bursts: SRC/DST/LEN must be 4-byte
+//! aligned and in mapped memory, or the transfer is rejected and STATUS
+//! latches a fault instead of moving garbage.
 
-/// Register offsets within the DMA aperture.
+/// Register offsets within the DMA aperture (`map::DMA_BASE`).
 pub mod reg {
-    /// source address
+    /// source address (4-byte aligned, SRAM or boot flash)
     pub const SRC: u32 = 0x00;
-    /// destination address
+    /// destination address (4-byte aligned, SRAM only)
     pub const DST: u32 = 0x04;
-    /// transfer length [bytes]
+    /// transfer length [bytes] (multiple of 4)
     pub const LEN: u32 = 0x08;
-    /// write 1: start (copy completes immediately; STATUS reads done)
+    /// write 1: start (copy completes immediately in this model)
     pub const CTRL: u32 = 0x0C;
-    /// completion status (always 1 in the synchronous model)
+    /// completion status: 1 = done/idle, 2 = fault (misaligned or
+    /// unmapped transfer rejected; sticky until the next good transfer)
     pub const STATUS: u32 = 0x10;
 }
 
+/// STATUS value: the engine is idle / the last transfer completed.
+pub const ST_DONE: u32 = 1;
+/// STATUS value: the last transfer was rejected (misaligned/unmapped).
+pub const ST_FAULT: u32 = 2;
+
 /// The single-channel DMA engine and its register file.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct Dma {
     /// SRC register
     pub src: u32,
@@ -25,14 +34,24 @@ pub struct Dma {
     pub dst: u32,
     /// LEN register [bytes]
     pub len: u32,
+    /// STATUS register ([`ST_DONE`] or [`ST_FAULT`])
+    pub status: u32,
     /// lifetime bytes copied
     pub bytes_copied: u64,
     /// lifetime transfers started
     pub transfers: u64,
+    /// lifetime transfers rejected (misaligned or unmapped)
+    pub faults: u64,
+}
+
+impl Default for Dma {
+    fn default() -> Self {
+        Dma { src: 0, dst: 0, len: 0, status: ST_DONE, bytes_copied: 0, transfers: 0, faults: 0 }
+    }
 }
 
 impl Dma {
-    /// A quiesced DMA engine with zeroed registers.
+    /// A quiesced DMA engine with zeroed registers (STATUS reads done).
     pub fn new() -> Self {
         Dma::default()
     }
@@ -43,12 +62,14 @@ impl Dma {
             reg::SRC => self.src,
             reg::DST => self.dst,
             reg::LEN => self.len,
-            reg::STATUS => 1, // always done (synchronous model)
+            reg::STATUS => self.status,
             _ => 0,
         }
     }
 
-    /// Returns Some((src, dst, len)) when a copy should be performed.
+    /// Returns Some((src, dst, len)) when a copy should be attempted
+    /// (the bus validates ranges and calls [`Dma::note_copy`] or
+    /// [`Dma::note_fault`]).
     pub fn write32(&mut self, off: u32, v: u32) -> Option<(u32, u32, u32)> {
         match off {
             reg::SRC => self.src = v,
@@ -60,10 +81,24 @@ impl Dma {
         None
     }
 
+    /// True when the programmed transfer is word-aligned (the engine
+    /// moves 4-byte bursts; anything else is rejected).
+    pub fn aligned(src: u32, dst: u32, len: u32) -> bool {
+        (src | dst | len) & 3 == 0
+    }
+
     /// Account one completed copy in the lifetime statistics.
     pub fn note_copy(&mut self, len: u32) {
         self.bytes_copied += len as u64;
         self.transfers += 1;
+        self.status = ST_DONE;
+    }
+
+    /// Latch a rejected transfer in STATUS (sticky until the next good
+    /// transfer completes).
+    pub fn note_fault(&mut self) {
+        self.faults += 1;
+        self.status = ST_FAULT;
     }
 
     /// Bus cycles consumed by all transfers so far (1 beat/byte model).
@@ -88,12 +123,27 @@ mod tests {
         assert_eq!(d.bytes_copied, 64);
         assert_eq!(d.transfers, 1);
         assert_eq!(d.cycles(), 64);
-        assert_eq!(d.read32(reg::STATUS), 1);
+        assert_eq!(d.read32(reg::STATUS), ST_DONE);
     }
 
     #[test]
     fn ctrl_without_start_bit_does_nothing() {
         let mut d = Dma::new();
         assert!(d.write32(reg::CTRL, 0).is_none());
+    }
+
+    #[test]
+    fn alignment_check_and_fault_latch() {
+        assert!(Dma::aligned(0x1000_0000, 0x1000_0100, 64));
+        assert!(!Dma::aligned(0x1000_0001, 0x1000_0100, 64));
+        assert!(!Dma::aligned(0x1000_0000, 0x1000_0102, 64));
+        assert!(!Dma::aligned(0x1000_0000, 0x1000_0100, 5));
+        let mut d = Dma::new();
+        d.note_fault();
+        assert_eq!(d.read32(reg::STATUS), ST_FAULT);
+        assert_eq!(d.faults, 1);
+        // the fault is sticky until a good transfer completes
+        d.note_copy(4);
+        assert_eq!(d.read32(reg::STATUS), ST_DONE);
     }
 }

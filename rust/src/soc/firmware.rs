@@ -1,0 +1,472 @@
+//! Firmware builder: assembles the boot image that serves a programmed
+//! model *through the RV32I core* (paper §2.2 — the CPU is the control
+//! plane, the NMCU does the math).
+//!
+//! [`build_model_firmware`] takes a [`ProgrammedModel`], serializes its
+//! planned ops into the SRAM descriptor table
+//! ([`ProgrammedModel::serialize_descriptors`]), and assembles a
+//! firmware that loops over a batch of requests entirely on-core:
+//!
+//! 1. read `n_samples` from the parameter word,
+//! 2. per sample: DMA the input from the shared I/O arena into the
+//!    staging buffer (the SoC DMA engine, not host pokes), `BEGIN`, load
+//!    it into the NMCU (`INPUT_LOAD` for dense-first models, `ACT_LOAD`
+//!    for conv/pool-first), then launch every op — dense layers with the
+//!    paper's single custom-0 `nmcu.mvm` instruction, conv/pool layers
+//!    through the tagged `OP_LAUNCH` register — checking `STATUS` after
+//!    each,
+//! 3. store the result (`OUT_STORE`/`ACT_STORE`), DMA it back to the
+//!    arena, print a UART progress byte, and loop,
+//! 4. `exit(0)` on success, or `exit(code)` with a typed fault cause
+//!    ([`exit_code`]) the host maps to an [`EngineError`].
+//!
+//! The same resident image serves every subsequent request batch: the
+//! host only rewrites the arena inputs and the parameter word and
+//! resets the core to [`FirmwareImage::entry`] — the EFLASH weights and
+//! the descriptor table are never re-programmed (`FIRMWARE.md` walks
+//! through the whole flow).
+
+use super::{map, nmcu_reg, Mcu, RunExit};
+use crate::coordinator::{DescriptorTable, ProgrammedModel};
+use crate::cpu::asm::{add, addi, ecall, li32, lw, mv, nmcu_mvm, sw, Asm};
+use crate::cpu::Mem;
+use crate::error::EngineError;
+
+/// Firmware exit codes (`a0` at the final `ecall`): everything except
+/// [`exit_code::OK`] names the fault the firmware detected through a
+/// peripheral STATUS register. [`decode_exit`] maps them to typed
+/// [`EngineError`]s.
+pub mod exit_code {
+    /// clean exit: every sample of the batch completed
+    pub const OK: u32 = 0;
+    /// the input-side DMA transfer was rejected (DMA STATUS = 2)
+    pub const DMA_IN: u32 = 0x100;
+    /// the output-side DMA transfer was rejected (DMA STATUS = 2)
+    pub const DMA_OUT: u32 = 0x101;
+    /// the NMCU input/activation load faulted (NMCU STATUS = 2)
+    pub const NMCU_LOAD: u32 = 0x200;
+    /// the NMCU result store faulted (NMCU STATUS = 2)
+    pub const NMCU_STORE: u32 = 0x201;
+    /// an op launch faulted (NMCU STATUS = 2); the faulting op index is
+    /// added to this base
+    pub const NMCU_OP_BASE: u32 = 0x300;
+}
+
+/// First byte of the shared request I/O arena: the top half of SRAM is
+/// reserved for batch inputs/outputs (host-written samples in, firmware
+/// DMA-copied results out) and is shared by every resident model — one
+/// model runs at a time. The bottom half holds the static images
+/// (firmware, descriptor tables, staging buffers) of all models.
+pub const ARENA_BASE: u32 = map::SRAM_BASE + map::SRAM_SIZE / 2;
+/// One past the last arena byte.
+pub const ARENA_END: u32 = map::SRAM_BASE + map::SRAM_SIZE;
+
+/// SRAM bytes reserved for the assembled firmware of one model.
+const FW_SLOT_BYTES: u32 = 4 * FW_MAX_WORDS as u32;
+/// Instruction budget of one firmware image — also bounds every branch
+/// distance well inside the +-4 KB B-type range.
+const FW_MAX_WORDS: usize = 900;
+
+/// A model's complete firmware image and SRAM floor plan: what to write
+/// where ([`FirmwareImage::install`]), where the host puts inputs and
+/// reads outputs, and how many samples one firmware run can serve.
+#[derive(Clone, Debug)]
+pub struct FirmwareImage {
+    /// reset vector of this image (firmware words live here)
+    pub entry: u32,
+    /// the assembled firmware
+    pub words: Vec<u32>,
+    /// serialized descriptor table (written at `table.base`)
+    pub table: DescriptorTable,
+    /// one-word parameter block: the host writes `n_samples` here
+    /// before each run
+    pub param_addr: u32,
+    /// per-sample input staging buffer the firmware DMAs into
+    pub in_stage: u32,
+    /// per-sample output staging buffer the firmware DMAs out of
+    pub out_stage: u32,
+    /// exact input bytes per sample (the model's flattened input)
+    pub in_len: usize,
+    /// exact output bytes per sample
+    pub out_len: usize,
+    /// arena bytes per input slot (`in_len` rounded up to a DMA word)
+    pub in_stride: u32,
+    /// arena bytes per output slot (`out_len` rounded up)
+    pub out_stride: u32,
+    /// batch input arena: sample `i` at `in_base + i * in_stride`
+    pub in_base: u32,
+    /// batch output arena: result `i` at `out_base + i * out_stride`
+    pub out_base: u32,
+    /// samples one firmware run can serve (arena capacity)
+    pub max_batch: usize,
+    /// first static SRAM byte NOT used by this image (the next model's
+    /// `entry`)
+    pub end: u32,
+}
+
+fn align4(n: u32) -> u32 {
+    (n + 3) & !3
+}
+
+/// How the generated firmware launches dense MVMs: the paper's
+/// single custom-0 `nmcu.mvm` instruction (§2.2), or the equivalent
+/// MMIO sequence (`DESC_ADDR` + `CTRL`) — the fallback for a core
+/// without the custom instruction. Identical semantics, pinned by
+/// test; conv/pool ops always go through `OP_LAUNCH`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LaunchPlane {
+    /// one `nmcu.mvm rd, rs1` per dense layer (default)
+    Custom0,
+    /// `sw DESC_ADDR; sw CTRL` per dense layer
+    Mmio,
+}
+
+/// Build the batch-serving firmware for `pm`, with its static data
+/// (firmware, descriptor table, staging buffers) laid out from `entry`
+/// upward. Fails with a typed [`EngineError`] when the static region
+/// would run into the I/O arena or the model needs more staging than
+/// the arena can hold.
+///
+/// # Examples
+///
+/// ```
+/// use nvmcu::config::ChipConfig;
+/// use nvmcu::coordinator::program_model_into;
+/// use nvmcu::cpu::Mem;
+/// use nvmcu::soc::{firmware, map, Mcu, RunExit};
+/// use nvmcu::util::rng::Rng;
+///
+/// let cfg = ChipConfig::new();
+/// let mut mcu = Mcu::new(&cfg);
+/// let model = nvmcu::datasets::synthetic_qmodel(&mut Rng::new(1), "m", 16, 8, 4);
+/// let pm = program_model_into(&cfg, &mut mcu.eflash, &model).unwrap();
+///
+/// let fw = firmware::build_model_firmware(&pm, map::SRAM_BASE).unwrap();
+/// fw.install(&mut mcu);
+///
+/// // serve one request: input into the arena, n_samples = 1, run
+/// mcu.bus.sram_write(fw.in_base, &[0u8; 16]);
+/// mcu.bus.write32(fw.param_addr, 1);
+/// mcu.reset_to(fw.entry);
+/// assert_eq!(mcu.run(100_000), RunExit::Exit(firmware::exit_code::OK));
+/// let logits = mcu.bus.sram_slice(fw.out_base, fw.out_len).to_vec();
+/// assert_eq!(logits.len(), 4);
+/// ```
+pub fn build_model_firmware(
+    pm: &ProgrammedModel,
+    entry: u32,
+) -> Result<FirmwareImage, EngineError> {
+    build_model_firmware_via(pm, entry, LaunchPlane::Custom0)
+}
+
+/// [`build_model_firmware`] with an explicit dense-MVM
+/// [`LaunchPlane`] (custom-0 instruction vs. the MMIO CTRL fallback).
+pub fn build_model_firmware_via(
+    pm: &ProgrammedModel,
+    entry: u32,
+    plane: LaunchPlane,
+) -> Result<FirmwareImage, EngineError> {
+    let err = |reason: String| EngineError::Backend { backend: "mcu", reason };
+    if pm.ops.is_empty() {
+        return Err(err(format!("model {} has no planned ops", pm.name)));
+    }
+    let in_len = pm.input_len();
+    let out_len = pm.output_len;
+    let in_stride = align4(in_len as u32);
+    let out_stride = align4(out_len as u32);
+
+    // ---- static floor plan: firmware | descriptors | param | stages ----
+    let table_base = entry + FW_SLOT_BYTES;
+    let table = pm.serialize_descriptors(table_base);
+    let param_addr = table_base + align4(table.len_bytes());
+    let in_stage = param_addr + 4;
+    let out_stage = in_stage + in_stride;
+    let end = out_stage + out_stride;
+    if end > ARENA_BASE {
+        return Err(err(format!(
+            "static SRAM exhausted: model {} needs bytes up to {end:#x}, \
+             arena starts at {ARENA_BASE:#x}",
+            pm.name
+        )));
+    }
+
+    // ---- arena split: inputs first, outputs after ----------------------
+    let arena = ARENA_END - ARENA_BASE;
+    let max_batch = (arena / (in_stride + out_stride)) as usize;
+    if max_batch == 0 {
+        return Err(err(format!(
+            "model {} I/O ({in_stride}+{out_stride} bytes/sample) exceeds the \
+             {arena}-byte request arena",
+            pm.name
+        )));
+    }
+    let in_base = ARENA_BASE;
+    let out_base = ARENA_BASE + max_batch as u32 * in_stride;
+
+    // ---- assemble ------------------------------------------------------
+    // register plan: x5=NMCU_BASE x6=1 x7=DMA_BASE x8=UART_BASE
+    // x9/x16=scratch x13=2 (fault compare) x14=n_samples x15=i
+    // x19=op index x20=input cursor x21=output cursor
+    let first_is_dense = table.entries[0].kind == super::desc_kind::DENSE;
+    let last_is_dense =
+        table.entries.last().expect("ops non-empty").kind == super::desc_kind::DENSE;
+    let d = |off: u32| off as i32; // MMIO register offset as store imm
+
+    let mut a = Asm::new();
+    a.emit_all(&li32(5, map::NMCU_BASE));
+    a.emit(addi(6, 0, 1));
+    a.emit_all(&li32(7, map::DMA_BASE));
+    a.emit_all(&li32(8, map::UART_BASE));
+    a.emit(addi(13, 0, 2));
+    a.emit_all(&li32(9, param_addr));
+    a.emit(lw(14, 9, 0)); // n_samples
+    a.emit_all(&li32(20, in_base));
+    a.emit_all(&li32(21, out_base));
+    a.emit(addi(15, 0, 0));
+    a.branch_to(|o| crate::cpu::asm::beq(14, 0, o), "done");
+
+    a.label("sample");
+    // DMA the sample from the arena into the input staging buffer
+    a.emit(sw(7, 20, d(super::dma::reg::SRC)));
+    a.emit_all(&li32(9, in_stage));
+    a.emit(sw(7, 9, d(super::dma::reg::DST)));
+    a.emit_all(&li32(16, in_stride));
+    a.emit(sw(7, 16, d(super::dma::reg::LEN)));
+    a.emit(sw(7, 6, d(super::dma::reg::CTRL)));
+    a.emit(lw(16, 7, d(super::dma::reg::STATUS)));
+    a.branch_to(|o| crate::cpu::asm::beq(16, 13, o), "fault_dma_in");
+
+    // new inference: BEGIN, then hand the staged input to the NMCU
+    a.emit(sw(5, 6, d(nmcu_reg::BEGIN)));
+    a.emit_all(&li32(9, in_stage));
+    a.emit(sw(5, 9, d(nmcu_reg::INPUT_ADDR)));
+    a.emit_all(&li32(16, in_len as u32));
+    a.emit(sw(5, 16, d(nmcu_reg::INPUT_LEN)));
+    let load_reg = if first_is_dense { nmcu_reg::INPUT_LOAD } else { nmcu_reg::ACT_LOAD };
+    a.emit(sw(5, 6, d(load_reg)));
+    a.emit(lw(16, 5, d(nmcu_reg::STATUS)));
+    a.branch_to(|o| crate::cpu::asm::beq(16, 13, o), "fault_load");
+
+    // launch every planned op, checking STATUS after each
+    for (idx, e) in table.entries.iter().enumerate() {
+        a.emit(addi(19, 0, idx as i32));
+        if let Some(mvm) = e.mvm_addr {
+            match plane {
+                LaunchPlane::Custom0 => {
+                    // dense: the paper's one-instruction MVM launch
+                    a.emit_all(&li32(9, mvm));
+                    a.emit(nmcu_mvm(28, 9));
+                }
+                LaunchPlane::Mmio => {
+                    a.emit_all(&li32(9, mvm));
+                    a.emit(sw(5, 9, d(nmcu_reg::DESC_ADDR)));
+                    a.emit(sw(5, 6, d(nmcu_reg::CTRL)));
+                }
+            }
+        } else {
+            // conv/pool: tagged descriptor through OP_LAUNCH
+            a.emit_all(&li32(9, e.tagged_addr));
+            a.emit(sw(5, 9, d(nmcu_reg::DESC_ADDR)));
+            a.emit(sw(5, 6, d(nmcu_reg::OP_LAUNCH)));
+        }
+        a.emit(lw(16, 5, d(nmcu_reg::STATUS)));
+        a.branch_to(|o| crate::cpu::asm::beq(16, 13, o), "fault_op");
+    }
+
+    // store the result into the output staging buffer
+    a.emit_all(&li32(9, out_stage));
+    a.emit(sw(5, 9, d(nmcu_reg::OUT_ADDR)));
+    a.emit_all(&li32(16, out_len as u32));
+    a.emit(sw(5, 16, d(nmcu_reg::OUT_LEN)));
+    let store_reg = if last_is_dense { nmcu_reg::OUT_STORE } else { nmcu_reg::ACT_STORE };
+    a.emit(sw(5, 6, d(store_reg)));
+    a.emit(lw(16, 5, d(nmcu_reg::STATUS)));
+    a.branch_to(|o| crate::cpu::asm::beq(16, 13, o), "fault_store");
+
+    // DMA the result out to the arena
+    a.emit_all(&li32(9, out_stage));
+    a.emit(sw(7, 9, d(super::dma::reg::SRC)));
+    a.emit(sw(7, 21, d(super::dma::reg::DST)));
+    a.emit_all(&li32(16, out_stride));
+    a.emit(sw(7, 16, d(super::dma::reg::LEN)));
+    a.emit(sw(7, 6, d(super::dma::reg::CTRL)));
+    a.emit(lw(16, 7, d(super::dma::reg::STATUS)));
+    a.branch_to(|o| crate::cpu::asm::beq(16, 13, o), "fault_dma_out");
+
+    // progress byte + advance the cursors, next sample
+    a.emit(addi(16, 0, '.' as i32));
+    a.emit(sw(8, 16, d(super::uart::reg::TX)));
+    a.emit_all(&li32(9, in_stride));
+    a.emit(add(20, 20, 9));
+    a.emit_all(&li32(9, out_stride));
+    a.emit(add(21, 21, 9));
+    a.emit(addi(15, 15, 1));
+    a.branch_to(|o| crate::cpu::asm::blt(15, 14, o), "sample");
+
+    a.label("done");
+    a.emit(addi(16, 0, '\n' as i32));
+    a.emit(sw(8, 16, d(super::uart::reg::TX)));
+    a.emit(mv(10, 0)); // a0 = 0: clean exit
+    a.jump_to(0, "exit");
+
+    a.label("fault_dma_in");
+    a.emit_all(&li32(10, exit_code::DMA_IN));
+    a.jump_to(0, "exit");
+    a.label("fault_dma_out");
+    a.emit_all(&li32(10, exit_code::DMA_OUT));
+    a.jump_to(0, "exit");
+    a.label("fault_load");
+    a.emit_all(&li32(10, exit_code::NMCU_LOAD));
+    a.jump_to(0, "exit");
+    a.label("fault_store");
+    a.emit_all(&li32(10, exit_code::NMCU_STORE));
+    a.jump_to(0, "exit");
+    a.label("fault_op");
+    a.emit_all(&li32(16, exit_code::NMCU_OP_BASE));
+    a.emit(add(10, 16, 19));
+    a.label("exit");
+    a.emit(addi(17, 0, 93));
+    a.emit(ecall());
+
+    let words = a.assemble();
+    if words.len() > FW_MAX_WORDS {
+        return Err(err(format!(
+            "model {}: firmware is {} words, budget is {FW_MAX_WORDS}",
+            pm.name,
+            words.len()
+        )));
+    }
+
+    Ok(FirmwareImage {
+        entry,
+        words,
+        table,
+        param_addr,
+        in_stage,
+        out_stage,
+        in_len,
+        out_len,
+        in_stride,
+        out_stride,
+        in_base,
+        out_base,
+        max_batch,
+        end,
+    })
+}
+
+impl FirmwareImage {
+    /// Write the firmware and its descriptor table into the MCU's SRAM
+    /// (the boot-loader step; weights are already in EFLASH).
+    pub fn install(&self, mcu: &mut Mcu) {
+        for (i, &w) in self.words.iter().enumerate() {
+            mcu.bus.write32(self.entry + 4 * i as u32, w);
+        }
+        for (i, &w) in self.table.words.iter().enumerate() {
+            mcu.bus.write32(self.table.base + 4 * i as u32, w);
+        }
+    }
+
+    /// A generous instruction budget for one firmware run over
+    /// `n_samples` (the host watchdog passed to [`Mcu::run`]): the real
+    /// cost is ~50 + ~8/op instructions per sample, so this only trips
+    /// on a genuinely wedged core.
+    pub fn fuel(&self, n_samples: usize) -> u64 {
+        20_000 + n_samples as u64 * (4_000 + 64 * self.table.entries.len() as u64)
+    }
+}
+
+/// Map a firmware [`RunExit`] to what it means for the request: `Ok`
+/// for a clean [`exit_code::OK`] exit, a typed [`EngineError`]
+/// otherwise — this is how NMCU/DMA faults detected *by firmware*
+/// surface to the serving stack.
+pub fn decode_exit(exit: RunExit) -> Result<(), EngineError> {
+    let fail = |reason: String| Err(EngineError::Backend { backend: "mcu", reason });
+    match exit {
+        RunExit::Exit(code) if code == exit_code::OK => Ok(()),
+        RunExit::Exit(code) => fail(match code {
+            exit_code::DMA_IN => "firmware: input DMA transfer rejected (DMA STATUS=2)".into(),
+            exit_code::DMA_OUT => "firmware: output DMA transfer rejected (DMA STATUS=2)".into(),
+            exit_code::NMCU_LOAD => "firmware: NMCU input load faulted (STATUS=2)".into(),
+            exit_code::NMCU_STORE => "firmware: NMCU result store faulted (STATUS=2)".into(),
+            c if c >= exit_code::NMCU_OP_BASE => format!(
+                "firmware: NMCU fault (STATUS=2) at op {}",
+                c - exit_code::NMCU_OP_BASE
+            ),
+            c => format!("firmware exited with unknown code {c:#x}"),
+        }),
+        RunExit::Break => fail("firmware hit EBREAK".into()),
+        RunExit::OutOfFuel => {
+            fail("firmware exceeded its instruction budget (out of fuel)".into())
+        }
+        RunExit::Illegal { raw, pc } => {
+            fail(format!("illegal instruction {raw:#010x} at pc {pc:#010x}"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ChipConfig;
+    use crate::coordinator::program_model_into;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn firmware_serves_a_batch_and_prints_progress() {
+        let mut cfg = ChipConfig::new();
+        cfg.eflash.capacity_bits = 1024 * 1024;
+        let mut mcu = Mcu::new(&cfg);
+        let mut r = Rng::new(3);
+        let model = crate::datasets::synthetic_qmodel(&mut r, "fw", 64, 16, 6);
+        let pm = program_model_into(&cfg, &mut mcu.eflash, &model).unwrap();
+        let fw = build_model_firmware(&pm, map::SRAM_BASE).unwrap();
+        fw.install(&mut mcu);
+
+        let n = 3usize;
+        let xs: Vec<Vec<i8>> = (0..n)
+            .map(|_| (0..64).map(|_| (r.below(256) as i32 - 128) as i8).collect())
+            .collect();
+        for (i, x) in xs.iter().enumerate() {
+            let bytes: Vec<u8> = x.iter().map(|&v| v as u8).collect();
+            mcu.bus.sram_write(fw.in_base + i as u32 * fw.in_stride, &bytes);
+        }
+        mcu.bus.write32(fw.param_addr, n as u32);
+        mcu.reset_to(fw.entry);
+        let exit = mcu.run(fw.fuel(n));
+        assert!(decode_exit(exit).is_ok(), "{exit:?}");
+
+        // one launch per dense layer per sample
+        assert_eq!(mcu.launches, (n * pm.ops.len()) as u64);
+        // bit-exact against the software model
+        for (i, x) in xs.iter().enumerate() {
+            let got: Vec<i8> = mcu
+                .bus
+                .sram_slice(fw.out_base + i as u32 * fw.out_stride, fw.out_len)
+                .iter()
+                .map(|&b| b as i8)
+                .collect();
+            assert_eq!(got, crate::models::qmodel_forward(&model, x), "sample {i}");
+        }
+        // the UART saw one progress byte per sample
+        assert_eq!(mcu.uart_output(), "...\n");
+    }
+
+    #[test]
+    fn decode_exit_maps_every_fault_cause() {
+        assert!(decode_exit(RunExit::Exit(exit_code::OK)).is_ok());
+        for (code, needle) in [
+            (exit_code::DMA_IN, "input DMA"),
+            (exit_code::DMA_OUT, "output DMA"),
+            (exit_code::NMCU_LOAD, "input load"),
+            (exit_code::NMCU_STORE, "result store"),
+            (exit_code::NMCU_OP_BASE + 2, "at op 2"),
+        ] {
+            let e = decode_exit(RunExit::Exit(code)).unwrap_err();
+            assert!(e.to_string().contains(needle), "{code:#x}: {e}");
+        }
+        assert!(decode_exit(RunExit::OutOfFuel).is_err());
+        assert!(decode_exit(RunExit::Break).is_err());
+        assert!(decode_exit(RunExit::Illegal { raw: 0, pc: 0 }).is_err());
+    }
+}

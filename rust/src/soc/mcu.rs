@@ -3,22 +3,26 @@
 //! loop that services NMCU launches (from the custom-0 instruction or
 //! the MMIO CTRL register).
 
-use super::{map, Pending, SocBus, DESC_WORDS};
+use super::{desc_kind, map, tagged_desc_words, Pending, SocBus, DESC_WORDS};
 use crate::config::ChipConfig;
 use crate::cpu::{Cpu, Event, Mem};
 use crate::eflash::EflashMacro;
-use crate::nmcu::{LayerDesc, Nmcu, Requant};
+use crate::nmcu::{ConvDesc, LayerDesc, Nmcu, PoolDesc, Requant, Shape};
 
-/// Why `run` returned.
+/// Why `run` returned (the firmware execution outcomes the host — or
+/// `engine::McuBackend` — dispatches on).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum RunExit {
-    /// ECALL with a7=93: exit(a0)
+    /// ECALL with a7=93: exit(a0) — the firmware exit convention
+    /// (`soc::firmware` encodes success/fault causes in the code)
     Exit(u32),
-    /// EBREAK hit
+    /// EBREAK hit (a firmware breakpoint; no paper analogue — debug aid)
     Break,
-    /// step budget exhausted
+    /// step budget exhausted — the host's watchdog against runaway
+    /// firmware (the simulated core has no interrupt controller)
     OutOfFuel,
-    /// illegal instruction
+    /// illegal instruction — the RV32I core traps on an undecodable
+    /// word (e.g. corrupted firmware in SRAM)
     Illegal {
         /// the raw instruction word
         raw: u32,
@@ -27,7 +31,8 @@ pub enum RunExit {
     },
 }
 
-/// The complete microcontroller (core + bus + NMCU + weight EFLASH).
+/// The complete microcontroller (core + bus + NMCU + weight EFLASH —
+/// paper Fig 1's full block diagram).
 pub struct Mcu {
     /// the RV32I core
     pub cpu: Cpu,
@@ -37,7 +42,13 @@ pub struct Mcu {
     pub eflash: EflashMacro,
     /// the near-memory computing unit
     pub nmcu: Nmcu,
-    /// NMCU launches serviced (one per custom-0 / CTRL launch)
+    /// the NMCU activation SRAM contents as the launch path sees them:
+    /// the most recent feature map / layer output (conv and pool ops
+    /// read their input from here; `ACT_LOAD`/`ACT_STORE` move it over
+    /// the bus). Capacity-checked against `nmcu.act_capacity` by the
+    /// executing ops.
+    pub act: Vec<i8>,
+    /// NMCU launches serviced (one per custom-0 / CTRL / OP_LAUNCH)
     pub launches: u64,
 }
 
@@ -49,6 +60,7 @@ impl Mcu {
             bus: SocBus::new(&cfg.power),
             eflash: EflashMacro::new(cfg),
             nmcu: Nmcu::new(&cfg.nmcu),
+            act: Vec::new(),
             launches: 0,
         }
     }
@@ -60,16 +72,43 @@ impl Mcu {
             bus: SocBus::new(&cfg.power),
             eflash,
             nmcu: Nmcu::new(&cfg.nmcu),
+            act: Vec::new(),
             launches: 0,
         }
     }
 
     /// Load firmware words into SRAM at the reset vector.
     pub fn load_firmware(&mut self, words: &[u32]) {
+        self.load_firmware_at(map::SRAM_BASE, words);
+    }
+
+    /// Load firmware words at `entry` and reset the core there (the
+    /// multi-model path keeps one resident image per model and
+    /// re-enters them with [`Mcu::reset_to`]).
+    pub fn load_firmware_at(&mut self, entry: u32, words: &[u32]) {
         for (i, &w) in words.iter().enumerate() {
-            self.bus.write32(map::SRAM_BASE + (i as u32) * 4, w);
+            self.bus.write32(entry + (i as u32) * 4, w);
         }
-        self.cpu = Cpu::new(map::SRAM_BASE);
+        self.cpu = Cpu::new(entry);
+    }
+
+    /// Reset the core to `entry` without touching SRAM: re-enter a
+    /// resident firmware image for the next request (registers zeroed,
+    /// `instret` restarts — cumulative counts live in the caller).
+    pub fn reset_to(&mut self, entry: u32) {
+        self.cpu = Cpu::new(entry);
+    }
+
+    /// Firmware UART output captured so far, as lossy UTF-8. The
+    /// capture buffer is bounded ([`super::uart::TX_LOG_CAP`]): a
+    /// runaway firmware keeps only its most recent output.
+    pub fn uart_output(&self) -> String {
+        self.bus.uart.tx_string()
+    }
+
+    /// Drain the captured UART bytes (per-request firmware output).
+    pub fn take_uart_output(&mut self) -> Vec<u8> {
+        self.bus.uart.take_tx()
     }
 
     /// Read an MVM descriptor from SRAM (8 words):
@@ -130,6 +169,38 @@ impl Mcu {
         for p in pending {
             match p {
                 Pending::Launch { desc_addr } => self.launch(desc_addr),
+                Pending::OpLaunch { desc_addr } => self.op_launch(desc_addr),
+                Pending::ActLoad => {
+                    let addr = self.bus.nmcu_input_addr;
+                    let len = self.bus.nmcu_input_len as usize;
+                    // feature maps land in the activation SRAM; an
+                    // out-of-range request or one exceeding the SRAM is
+                    // a fault, not a panic or a silent truncation
+                    if len > self.nmcu.cfg.act_capacity || !self.bus.sram_in_range(addr, len) {
+                        self.bus.nmcu_status = 2;
+                    } else {
+                        self.act =
+                            self.bus.sram_slice(addr, len).iter().map(|&b| b as i8).collect();
+                        // the one input transfer a conv-first model pays
+                        self.nmcu.stats.bus_bytes += len as u64;
+                    }
+                }
+                Pending::ActStore => {
+                    let addr = self.bus.nmcu_out_addr;
+                    let len = self.bus.nmcu_out_len as usize;
+                    // like OutputStore: a faulted pipeline must not DMA
+                    // a stale feature map out as if it were a result
+                    if self.bus.nmcu_status == 2
+                        || len > self.act.len()
+                        || !self.bus.sram_in_range(addr, len)
+                    {
+                        self.bus.nmcu_status = 2;
+                    } else {
+                        let bytes: Vec<u8> = self.act[..len].iter().map(|&v| v as u8).collect();
+                        self.bus.sram_write(addr, &bytes);
+                        self.nmcu.stats.bus_bytes += len as u64;
+                    }
+                }
                 Pending::InputLoad => {
                     let addr = self.bus.nmcu_input_addr;
                     let len = self.bus.nmcu_input_len as usize;
@@ -188,13 +259,134 @@ impl Mcu {
             && self.bus.data_in_range(desc_addr, DESC_WORDS * 4)
             && {
                 let desc = self.read_descriptor(desc_addr);
-                self.nmcu.execute_layer(&mut self.eflash, &desc).is_ok()
+                match self.nmcu.execute_layer(&mut self.eflash, &desc) {
+                    Ok(out) => {
+                        // mirror the layer output into the activation
+                        // SRAM view so a following conv/pool op (or an
+                        // ACT_STORE) sees the current map
+                        self.act = out;
+                        true
+                    }
+                    Err(_) => false,
+                }
             };
         self.bus.nmcu_status = if ok { 1 } else { 2 };
         self.launches += 1;
     }
 
+    /// One *tagged* op launch ([`super::nmcu_reg::OP_LAUNCH`]): read the
+    /// kind word at `desc_addr`, decode the matching payload, and run
+    /// it on the NMCU. Dense payloads are the classic 8-word descriptor
+    /// at +4 (same execution as [`Mcu::launch`]); conv/pool payloads
+    /// read their input feature map from the activation SRAM ([`Mcu::act`])
+    /// and leave their output there. Faults report through STATUS with
+    /// the same sticky semantics as the dense launch.
+    fn op_launch(&mut self, desc_addr: u32) {
+        let ok = self.bus.nmcu_status != 2 && self.exec_tagged(desc_addr);
+        self.bus.nmcu_status = if ok { 1 } else { 2 };
+        self.launches += 1;
+    }
+
+    fn exec_tagged(&mut self, at: u32) -> bool {
+        if !self.bus.data_in_range(at, 4) {
+            return false;
+        }
+        let kind = self.bus.read32(at);
+        let words = tagged_desc_words(kind);
+        if words == 0 || !self.bus.data_in_range(at, words * 4) {
+            return false;
+        }
+        // payload words past the kind tag and (for weighted ops) the
+        // embedded 8-word MVM descriptor
+        let tail_base = match kind {
+            desc_kind::POOL => at + 4,
+            _ => at + 4 + (DESC_WORDS as u32) * 4,
+        };
+        let mut tail = [0u32; 8];
+        for (i, slot) in tail.iter_mut().enumerate() {
+            let a = tail_base.wrapping_add((i as u32) * 4);
+            if self.bus.data_in_range(a, 4) {
+                *slot = self.bus.read32(a);
+            }
+        }
+        match kind {
+            desc_kind::DENSE => {
+                let desc = self.read_descriptor(at + 4);
+                match self.nmcu.execute_layer(&mut self.eflash, &desc) {
+                    Ok(out) => {
+                        self.act = out;
+                        true
+                    }
+                    Err(_) => false,
+                }
+            }
+            desc_kind::CONV => {
+                let cd = ConvDesc {
+                    mvm: self.read_descriptor(at + 4),
+                    kh: tail[0] as usize,
+                    kw: tail[1] as usize,
+                    stride: tail[2] as usize,
+                    pad: tail[3] as usize,
+                    in_shape: Shape {
+                        c: tail[4] as usize,
+                        h: tail[5] as usize,
+                        w: tail[6] as usize,
+                    },
+                    pad_value: tail[7] as i32 as i8,
+                };
+                let x = std::mem::take(&mut self.act);
+                match self.nmcu.execute_conv(&mut self.eflash, &cd, &x) {
+                    Ok(out) => {
+                        self.act = out;
+                        true
+                    }
+                    Err(_) => {
+                        self.act = x;
+                        false
+                    }
+                }
+            }
+            desc_kind::POOL => {
+                let pd = PoolDesc {
+                    kh: tail[0] as usize,
+                    kw: tail[1] as usize,
+                    stride: tail[2] as usize,
+                    in_shape: Shape {
+                        c: tail[3] as usize,
+                        h: tail[4] as usize,
+                        w: tail[5] as usize,
+                    },
+                };
+                let x = std::mem::take(&mut self.act);
+                match self.nmcu.execute_pool(&pd, &x) {
+                    Ok(out) => {
+                        self.act = out;
+                        true
+                    }
+                    Err(_) => {
+                        self.act = x;
+                        false
+                    }
+                }
+            }
+            _ => false,
+        }
+    }
+
     /// Run until exit/illegal or `max_steps` instructions retire.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use nvmcu::config::ChipConfig;
+    /// use nvmcu::cpu::asm::{addi, ecall};
+    /// use nvmcu::soc::{Mcu, RunExit};
+    ///
+    /// let mut mcu = Mcu::new(&ChipConfig::new());
+    /// // exit(7): a7 = 93, a0 = 7, ecall — the firmware exit convention
+    /// mcu.load_firmware(&[addi(17, 0, 93), addi(10, 0, 7), ecall()]);
+    /// assert_eq!(mcu.run(100), RunExit::Exit(7));
+    /// ```
     pub fn run(&mut self, max_steps: u64) -> RunExit {
         for _ in 0..max_steps {
             let ev = self.cpu.step(&mut self.bus);

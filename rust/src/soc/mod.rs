@@ -1,78 +1,142 @@
 //! SoC fabric: the microcontroller around the NMCU (paper Fig 1) —
-//! memory map, SRAM, boot-code EFLASH, DMA, UART, power controller, and
-//! [`Mcu`], which ties the RV32I core to the NMCU + weight EFLASH.
+//! memory map, SRAM, boot-code EFLASH, DMA, UART, power controller,
+//! [`Mcu`] (the RV32I core tied to the NMCU + weight EFLASH), and the
+//! [`firmware`] builder that assembles boot images for it.
+//!
+//! The register map, SRAM descriptor layout, and boot flow are
+//! documented in `FIRMWARE.md` at the repository root.
 
 pub mod dma;
+pub mod firmware;
 pub mod mcu;
 pub mod power;
 pub mod uart;
 
+pub use firmware::{FirmwareImage, LaunchPlane};
 pub use mcu::{Mcu, RunExit};
 
 use crate::cpu::Mem;
 
-/// Memory map (word-aligned MMIO).
+/// Memory map (word-aligned MMIO). Paper Fig 1: the CPU, SRAM, code
+/// EFLASH, DMA, UART and power blocks share one system bus with the
+/// NMCU + weight EFLASH macro.
 pub mod map {
-    /// instruction/data SRAM (256 KB)
+    /// instruction/data SRAM (256 KB) — firmware, descriptors, and I/O
+    /// staging all live here (paper Fig 1 "SRAM")
     pub const SRAM_BASE: u32 = 0x1000_0000;
     /// SRAM size [bytes]
     pub const SRAM_SIZE: u32 = 256 * 1024;
-    /// 128 Kb boot/code EFLASH (16 KB, read-only to the core)
+    /// 128 Kb boot/code EFLASH (16 KB, read-only to the core) — the
+    /// paper's zero-standby code storage (Fig 1 "eFlash (code)")
     pub const BOOT_BASE: u32 = 0x2000_0000;
     /// boot EFLASH size [bytes]
     pub const BOOT_SIZE: u32 = 16 * 1024;
-    /// NMCU control/status registers
+    /// NMCU control/status registers (paper §2.2: the CPU launches MVMs
+    /// through this block or the custom-0 instruction)
     pub const NMCU_BASE: u32 = 0x4000_0000;
-    /// DMA controller
+    /// DMA controller (paper Fig 1 "DMA": bulk SRAM moves without CPU
+    /// load/store loops)
     pub const DMA_BASE: u32 = 0x5000_0000;
-    /// UART (TX only modelled)
+    /// UART (TX only modelled; paper Fig 1 lists UART/SPI/GPIO)
     pub const UART_BASE: u32 = 0x6000_0000;
-    /// power controller
+    /// power controller (paper §2.3: power gating, zero-standby weights)
     pub const PWR_BASE: u32 = 0x7000_0000;
 }
 
-/// NMCU register offsets (from NMCU_BASE).
+/// NMCU register offsets (from NMCU_BASE). The full map with
+/// read/write semantics is tabulated in `FIRMWARE.md`.
 pub mod nmcu_reg {
-    /// write 1: launch the MVM whose descriptor is at DESC_ADDR
+    /// write 1: launch the dense MVM whose 8-word descriptor is at
+    /// DESC_ADDR (the MMIO fallback for the custom-0 `nmcu.mvm`
+    /// instruction, paper §2.2)
     pub const CTRL: u32 = 0x00;
-    /// bit0: done
+    /// completion status: 0 = idle, 1 = done, 2 = fault (sticky until
+    /// the next BEGIN — see `Mcu::launch`)
     pub const STATUS: u32 = 0x04;
-    /// SRAM address of the MVM descriptor
+    /// SRAM address of the next descriptor (dense or tagged op)
     pub const DESC_ADDR: u32 = 0x08;
-    /// SRAM address + length of the int8 input vector
+    /// SRAM address of the int8 input vector / feature map
     pub const INPUT_ADDR: u32 = 0x0C;
     /// length of the int8 input vector [bytes]
     pub const INPUT_LEN: u32 = 0x10;
     /// write 1: DMA the input vector into the NMCU input buffer
+    /// (the "first input vector" bus transfer of §2.2)
     pub const INPUT_LOAD: u32 = 0x14;
-    /// SRAM address + length for reading back the ping-pong buffer
+    /// SRAM address for reading back results
     pub const OUT_ADDR: u32 = 0x18;
     /// read-back length [bytes]
     pub const OUT_LEN: u32 = 0x1C;
     /// write 1: DMA the current ping-pong read side out to SRAM
     pub const OUT_STORE: u32 = 0x20;
-    /// resets the fetch source to the input buffer (new inference)
+    /// write 1: reset the fetch source to the input buffer and clear a
+    /// sticky fault (new inference)
     pub const BEGIN: u32 = 0x24;
+    /// write 1: launch the *tagged* op descriptor at DESC_ADDR
+    /// (kind-dispatched dense/conv/pool — the CNN extension of the
+    /// paper's dense-only launch; see [`super::desc_kind`])
+    pub const OP_LAUNCH: u32 = 0x28;
+    /// write 1: DMA INPUT_ADDR/INPUT_LEN into the activation SRAM (the
+    /// feature-map load for conv/pool-first models)
+    pub const ACT_LOAD: u32 = 0x2C;
+    /// write 1: DMA the activation SRAM out to OUT_ADDR/OUT_LEN (the
+    /// feature-map store for conv/pool-last models)
+    pub const ACT_STORE: u32 = 0x30;
 }
 
 /// MVM descriptor layout in SRAM (8 consecutive words; see
-/// `Mcu::read_descriptor`).
+/// `Mcu::read_descriptor` and the table in `FIRMWARE.md`).
 pub const DESC_WORDS: usize = 8;
+
+/// Kind tags of the *tagged* op descriptors launched through
+/// [`nmcu_reg::OP_LAUNCH`]: word 0 of the descriptor selects how the
+/// following words are decoded (`FIRMWARE.md` tabulates all three
+/// layouts). The classic 8-word dense descriptor (paper §2.2) is the
+/// `DENSE` payload at offset +4, so `nmcu.mvm` can point straight at it.
+pub mod desc_kind {
+    /// dense MVM: words 1..9 are the classic 8-word descriptor
+    pub const DENSE: u32 = 0;
+    /// Conv2D: words 1..9 are the im2col MVM descriptor, words 9..17
+    /// are kh, kw, stride, pad, c, h, w, pad_value
+    pub const CONV: u32 = 1;
+    /// MaxPool2d: words 1..7 are kh, kw, stride, c, h, w
+    pub const POOL: u32 = 2;
+}
+
+/// Words occupied by a tagged descriptor of each kind.
+pub fn tagged_desc_words(kind: u32) -> usize {
+    match kind {
+        desc_kind::DENSE => 1 + DESC_WORDS,
+        desc_kind::CONV => 1 + DESC_WORDS + 8,
+        desc_kind::POOL => 1 + 6,
+        _ => 0,
+    }
+}
 
 /// Side effects MMIO writes queue for the MCU to execute after the
 /// current instruction retires (keeps the bus borrow-free).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Pending {
-    /// launch the MVM whose descriptor sits at `desc_addr`
+    /// launch the dense MVM whose 8-word descriptor sits at `desc_addr`
+    /// (custom-0 `nmcu.mvm` or the CTRL register, paper §2.2)
     Launch {
         /// SRAM address of the 8-word descriptor
+        desc_addr: u32,
+    },
+    /// launch the *tagged* op descriptor at `desc_addr`
+    /// (dense/conv/pool, dispatched on its kind word)
+    OpLaunch {
+        /// SRAM address of the tagged descriptor
         desc_addr: u32,
     },
     /// DMA the input vector into the NMCU input buffer
     InputLoad,
     /// DMA the ping-pong read side out to SRAM
     OutputStore,
-    /// reset the fetch source for a new inference
+    /// DMA INPUT_ADDR/INPUT_LEN into the activation SRAM
+    ActLoad,
+    /// DMA the activation SRAM out to OUT_ADDR/OUT_LEN
+    ActStore,
+    /// reset the fetch source for a new inference (clears faults)
     Begin,
 }
 
@@ -183,6 +247,25 @@ impl SocBus {
                         self.pending.push(Pending::Begin);
                     }
                 }
+                nmcu_reg::OP_LAUNCH => {
+                    if v & 1 != 0 {
+                        // same sticky-fault semantics as CTRL
+                        if self.nmcu_status != 2 {
+                            self.nmcu_status = 0;
+                        }
+                        self.pending.push(Pending::OpLaunch { desc_addr: self.nmcu_desc_addr });
+                    }
+                }
+                nmcu_reg::ACT_LOAD => {
+                    if v & 1 != 0 {
+                        self.pending.push(Pending::ActLoad);
+                    }
+                }
+                nmcu_reg::ACT_STORE => {
+                    if v & 1 != 0 {
+                        self.pending.push(Pending::ActStore);
+                    }
+                }
                 _ => {}
             },
             map::DMA_BASE => {
@@ -199,6 +282,16 @@ impl SocBus {
     }
 
     fn dma_copy(&mut self, src: u32, dst: u32, len: u32) {
+        // the engine moves word bursts between mapped memory: reject
+        // misaligned or unmapped transfers through STATUS instead of
+        // copying garbage (MMIO reads) or scribbling over peripherals
+        if !dma::Dma::aligned(src, dst, len)
+            || !self.data_in_range(src, len as usize)
+            || !self.sram_in_range(dst, len as usize)
+        {
+            self.dma.note_fault();
+            return;
+        }
         for i in 0..len {
             let b = self.read8(src + i);
             self.write8(dst + i, b);
@@ -338,12 +431,41 @@ mod tests {
     #[test]
     fn dma_mem_to_mem_copy() {
         let mut b = bus();
-        b.sram_write(map::SRAM_BASE, &[1, 2, 3, 4, 5]);
+        b.sram_write(map::SRAM_BASE, &[1, 2, 3, 4, 5, 6, 7, 8]);
+        b.write32(map::DMA_BASE + dma::reg::SRC, map::SRAM_BASE);
+        b.write32(map::DMA_BASE + dma::reg::DST, map::SRAM_BASE + 0x100);
+        b.write32(map::DMA_BASE + dma::reg::LEN, 8);
+        b.write32(map::DMA_BASE + dma::reg::CTRL, 1);
+        assert_eq!(b.sram_slice(map::SRAM_BASE + 0x100, 8), &[1, 2, 3, 4, 5, 6, 7, 8]);
+        assert_eq!(b.dma.bytes_copied, 8);
+        assert_eq!(b.read32(map::DMA_BASE + dma::reg::STATUS), dma::ST_DONE);
+    }
+
+    #[test]
+    fn dma_rejects_misaligned_and_unmapped_transfers() {
+        let mut b = bus();
+        b.sram_write(map::SRAM_BASE, &[9; 16]);
+        // misaligned length
         b.write32(map::DMA_BASE + dma::reg::SRC, map::SRAM_BASE);
         b.write32(map::DMA_BASE + dma::reg::DST, map::SRAM_BASE + 0x100);
         b.write32(map::DMA_BASE + dma::reg::LEN, 5);
         b.write32(map::DMA_BASE + dma::reg::CTRL, 1);
-        assert_eq!(b.sram_slice(map::SRAM_BASE + 0x100, 5), &[1, 2, 3, 4, 5]);
-        assert_eq!(b.dma.bytes_copied, 5);
+        assert_eq!(b.read32(map::DMA_BASE + dma::reg::STATUS), dma::ST_FAULT);
+        assert_eq!(b.sram_slice(map::SRAM_BASE + 0x100, 4), &[0; 4], "no partial copy");
+        // misaligned source address
+        b.write32(map::DMA_BASE + dma::reg::SRC, map::SRAM_BASE + 1);
+        b.write32(map::DMA_BASE + dma::reg::LEN, 4);
+        b.write32(map::DMA_BASE + dma::reg::CTRL, 1);
+        assert_eq!(b.read32(map::DMA_BASE + dma::reg::STATUS), dma::ST_FAULT);
+        // destination outside SRAM (a peripheral aperture)
+        b.write32(map::DMA_BASE + dma::reg::SRC, map::SRAM_BASE);
+        b.write32(map::DMA_BASE + dma::reg::DST, map::UART_BASE);
+        b.write32(map::DMA_BASE + dma::reg::CTRL, 1);
+        assert_eq!(b.read32(map::DMA_BASE + dma::reg::STATUS), dma::ST_FAULT);
+        assert_eq!(b.dma.faults, 3);
+        // a good transfer clears the latch
+        b.write32(map::DMA_BASE + dma::reg::DST, map::SRAM_BASE + 0x100);
+        b.write32(map::DMA_BASE + dma::reg::CTRL, 1);
+        assert_eq!(b.read32(map::DMA_BASE + dma::reg::STATUS), dma::ST_DONE);
     }
 }

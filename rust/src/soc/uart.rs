@@ -1,20 +1,30 @@
 //! UART peripheral (TX modelled; the paper's chip exposes UART/SPI/GPIO
-//! for sensor I/O). Firmware prints land in `tx_log` for the tests and
-//! examples to inspect.
+//! for sensor I/O, Fig 1). Firmware prints land in a **bounded** TX log
+//! so tests and examples can assert on firmware output without a
+//! chatty or runaway firmware growing the host heap: once the log is
+//! full the oldest bytes are gone and `dropped` counts what was lost.
 
-/// Register offsets within the UART aperture.
+/// Register offsets within the UART aperture (`map::UART_BASE`).
 pub mod reg {
-    /// write: transmit one byte
+    /// write: transmit one byte (low 8 bits)
     pub const TX: u32 = 0x00;
-    /// read: TX ready (always 1 in this model)
+    /// read: TX ready (always 1 — the model transmits instantly)
     pub const STATUS: u32 = 0x04;
 }
 
-/// The TX-only UART model.
+/// Capacity of the captured TX log [bytes]. Once the log is full the
+/// oldest 1 KB block is evicted (the host is a logic analyzer with
+/// finite memory, not an infinite tape).
+pub const TX_LOG_CAP: usize = 16 * 1024;
+
+/// The TX-only UART model with a bounded capture buffer.
 #[derive(Clone, Debug, Default)]
 pub struct Uart {
-    /// every byte firmware transmitted, in order
+    /// up to [`TX_LOG_CAP`] of the most recent bytes firmware
+    /// transmitted
     pub tx_log: Vec<u8>,
+    /// bytes evicted from the front of `tx_log` once it filled up
+    pub dropped: u64,
 }
 
 impl Uart {
@@ -31,16 +41,29 @@ impl Uart {
         }
     }
 
-    /// Write one 32-bit register (TX appends to the log).
+    /// Write one 32-bit register (TX appends to the bounded log).
     pub fn write32(&mut self, off: u32, v: u32) {
         if off == reg::TX {
+            if self.tx_log.len() >= TX_LOG_CAP {
+                // evict a whole block, not one byte: keeps per-TX cost
+                // amortized O(1) even for a runaway firmware
+                const EVICT: usize = 1024;
+                self.tx_log.drain(..EVICT);
+                self.dropped += EVICT as u64;
+            }
             self.tx_log.push(v as u8);
         }
     }
 
-    /// The TX log as lossy UTF-8 (firmware prints).
+    /// The captured TX bytes as lossy UTF-8 (firmware prints).
     pub fn tx_string(&self) -> String {
         String::from_utf8_lossy(&self.tx_log).into_owned()
+    }
+
+    /// Drain the captured TX bytes (per-request firmware output).
+    pub fn take_tx(&mut self) -> Vec<u8> {
+        self.dropped = 0;
+        std::mem::take(&mut self.tx_log)
     }
 }
 
@@ -56,5 +79,26 @@ mod tests {
         }
         assert_eq!(u.tx_string(), "ok\n");
         assert_eq!(u.read32(reg::STATUS), 1);
+        assert_eq!(u.take_tx(), b"ok\n");
+        assert!(u.tx_log.is_empty());
+    }
+
+    #[test]
+    fn log_is_bounded_and_keeps_the_newest_bytes() {
+        let mut u = Uart::new();
+        for i in 0..(TX_LOG_CAP + 10) {
+            u.write32(reg::TX, (i % 251) as u32);
+        }
+        // hitting the cap evicted one whole 1 KB block, then kept going
+        assert_eq!(u.tx_log.len(), TX_LOG_CAP - 1024 + 10);
+        assert_eq!(u.dropped, 1024);
+        // the front of the log is the 1025th byte written, not the 1st
+        assert_eq!(u.tx_log[0], (1024 % 251) as u8);
+        assert_eq!(*u.tx_log.last().unwrap(), ((TX_LOG_CAP + 9) % 251) as u8);
+        // the log never exceeds the cap no matter how much is written
+        for i in 0..(3 * TX_LOG_CAP) {
+            u.write32(reg::TX, (i % 251) as u32);
+        }
+        assert!(u.tx_log.len() <= TX_LOG_CAP);
     }
 }

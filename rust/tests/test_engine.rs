@@ -279,6 +279,8 @@ fn hlo_backend_unavailable_without_pjrt_feature() {
 #[test]
 fn backend_kind_parses() {
     assert_eq!("nmcu".parse::<BackendKind>().unwrap(), BackendKind::Nmcu);
+    assert_eq!("mcu".parse::<BackendKind>().unwrap(), BackendKind::Mcu);
+    assert_eq!("firmware".parse::<BackendKind>().unwrap(), BackendKind::Mcu);
     assert_eq!("reference".parse::<BackendKind>().unwrap(), BackendKind::Reference);
     assert_eq!("hlo".parse::<BackendKind>().unwrap(), BackendKind::Hlo);
     assert!("gpu".parse::<BackendKind>().is_err());

@@ -1,0 +1,179 @@
+//! Firmware fault paths of the `McuBackend`: illegal instructions,
+//! out-of-fuel mid-batch, NMCU STATUS=2 faults, and rejected DMA
+//! transfers must each surface as a *typed* `EngineError` — and the MCU
+//! must stay usable for the next request (no wedged state, no
+//! re-programming). Plus the control-plane equivalence pin: the
+//! custom-0 `nmcu.mvm` instruction and the MMIO CTRL fallback produce
+//! identical firmware results.
+
+use nvmcu::config::ChipConfig;
+use nvmcu::coordinator::program_model_into;
+use nvmcu::cpu::asm::{addi, beq, ecall, li32, lw, mv, sw, Asm};
+use nvmcu::cpu::Mem;
+use nvmcu::engine::{Backend, EngineError, McuBackend, ReferenceBackend};
+use nvmcu::soc::firmware::{
+    build_model_firmware, build_model_firmware_via, exit_code, LaunchPlane,
+};
+use nvmcu::soc::{dma, map, Mcu};
+use nvmcu::util::rng::Rng;
+
+fn cfg() -> ChipConfig {
+    let mut c = ChipConfig::new();
+    c.eflash.capacity_bits = 1024 * 1024;
+    c
+}
+
+fn rand_input(r: &mut Rng, k: usize) -> Vec<i8> {
+    (0..k).map(|_| (r.below(256) as i32 - 128) as i8).collect()
+}
+
+/// A backend with one resident MLP plus the reference oracle for it.
+fn backend_with_model(
+    seed: u64,
+) -> (McuBackend, nvmcu::engine::ModelHandle, ReferenceBackend, nvmcu::engine::ModelHandle, usize)
+{
+    let cfg = cfg();
+    let mut r = Rng::new(seed);
+    let model = nvmcu::datasets::synthetic_qmodel(&mut r, "fault-mlp", 80, 16, 5);
+    let mut mcu = McuBackend::new(&cfg);
+    let h = mcu.program(&model).expect("program (mcu)");
+    let mut oracle = ReferenceBackend::new();
+    let hs = oracle.program(&model).expect("program (reference)");
+    (mcu, h, oracle, hs, 80)
+}
+
+#[test]
+fn illegal_instruction_is_typed_and_mcu_recovers() {
+    let (mut mcu, h, mut oracle, hs, k) = backend_with_model(31);
+    let e = mcu.run_firmware(&[0xFFFF_FFFF], 100).unwrap_err();
+    assert!(matches!(e, EngineError::Backend { backend: "mcu", .. }), "{e:?}");
+    assert!(e.to_string().contains("illegal instruction"), "{e}");
+    // the MCU is not wedged: the resident model still serves bit-exact
+    let mut r = Rng::new(32);
+    let x = rand_input(&mut r, k);
+    assert_eq!(mcu.infer(h, &x).unwrap(), oracle.infer(hs, &x).unwrap());
+}
+
+#[test]
+fn out_of_fuel_mid_batch_is_typed_and_recoverable() {
+    let (mut mcu, h, mut oracle, hs, k) = backend_with_model(33);
+    let mut r = Rng::new(34);
+    let xs: Vec<Vec<i8>> = (0..6).map(|_| rand_input(&mut r, k)).collect();
+    // a budget far too small to finish the batch: the watchdog trips
+    mcu.set_fuel_override(Some(40));
+    let e = mcu.infer_batch(h, &xs).unwrap_err();
+    assert!(matches!(e, EngineError::Backend { backend: "mcu", .. }), "{e:?}");
+    assert!(e.to_string().contains("fuel"), "{e}");
+    // restore the default budget: the same batch completes bit-exact
+    mcu.set_fuel_override(None);
+    assert_eq!(mcu.infer_batch(h, &xs).unwrap(), oracle.infer_batch(hs, &xs).unwrap());
+}
+
+#[test]
+fn nmcu_fault_reports_the_op_index_and_mcu_recovers() {
+    let (mut mcu, h, mut oracle, hs, k) = backend_with_model(35);
+    let mut r = Rng::new(36);
+    let x = rand_input(&mut r, k);
+
+    // corrupt the SECOND layer's resident descriptor: its `n` word
+    // (offset +8 from the embedded MVM descriptor) becomes absurd, so
+    // the launch faults with STATUS=2 and the firmware exits with the
+    // op index encoded
+    let mvm_addr = mcu.firmware(h).unwrap().table.entries[1]
+        .mvm_addr
+        .expect("dense layer has a custom-0 descriptor");
+    let good_n = mcu.mcu_mut().bus.read32(mvm_addr + 8);
+    mcu.mcu_mut().bus.write32(mvm_addr + 8, 0x00FF_FFFF);
+
+    let e = mcu.infer(h, &x).unwrap_err();
+    assert!(matches!(e, EngineError::Backend { backend: "mcu", .. }), "{e:?}");
+    assert!(e.to_string().contains("at op 1"), "{e}");
+
+    // restore the descriptor word: the MCU serves again, bit-exact —
+    // nothing was re-programmed, the fault did not wedge the pipeline
+    mcu.mcu_mut().bus.write32(mvm_addr + 8, good_n);
+    assert_eq!(mcu.infer(h, &x).unwrap(), oracle.infer(hs, &x).unwrap());
+}
+
+#[test]
+fn dma_misalignment_is_rejected_and_typed() {
+    let (mut mcu, h, mut oracle, hs, k) = backend_with_model(37);
+
+    // firmware that programs a deliberately misaligned DMA transfer,
+    // then reports what the engine's STATUS register says — the same
+    // check-and-exit protocol the generated serving firmware uses
+    let mut a = Asm::new();
+    a.emit_all(&li32(5, map::DMA_BASE));
+    a.emit_all(&li32(9, map::SRAM_BASE + 1)); // misaligned source
+    a.emit(sw(5, 9, dma::reg::SRC as i32));
+    a.emit_all(&li32(9, map::SRAM_BASE + 0x100));
+    a.emit(sw(5, 9, dma::reg::DST as i32));
+    a.emit(addi(16, 0, 8));
+    a.emit(sw(5, 16, dma::reg::LEN as i32));
+    a.emit(addi(6, 0, 1));
+    a.emit(sw(5, 6, dma::reg::CTRL as i32));
+    a.emit(lw(16, 5, dma::reg::STATUS as i32));
+    a.emit(addi(13, 0, 2));
+    a.branch_to(|o| beq(16, 13, o), "fault");
+    a.emit(mv(10, 0)); // unexpectedly fine: exit(0)
+    a.jump_to(0, "exit");
+    a.label("fault");
+    a.emit_all(&li32(10, exit_code::DMA_IN));
+    a.label("exit");
+    a.emit(addi(17, 0, 93));
+    a.emit(ecall());
+
+    let e = mcu.run_firmware(&a.assemble(), 1_000).unwrap_err();
+    assert!(matches!(e, EngineError::Backend { backend: "mcu", .. }), "{e:?}");
+    assert!(e.to_string().contains("input DMA"), "{e}");
+    assert_eq!(mcu.mcu().bus.dma.faults, 1, "the engine latched the rejection");
+
+    // the MCU still serves (run_firmware only used arena scratch)
+    let mut r = Rng::new(38);
+    let x = rand_input(&mut r, k);
+    assert_eq!(mcu.infer(h, &x).unwrap(), oracle.infer(hs, &x).unwrap());
+}
+
+#[test]
+fn firmware_uart_output_is_captured_per_request() {
+    let (mut mcu, h, _, _, k) = backend_with_model(39);
+    let mut r = Rng::new(40);
+    let xs: Vec<Vec<i8>> = (0..4).map(|_| rand_input(&mut r, k)).collect();
+    mcu.infer_batch(h, &xs).unwrap();
+    // the serving firmware prints one progress byte per sample plus a
+    // final newline — captured in the MCU's bounded UART log
+    assert_eq!(mcu.mcu().uart_output(), "....\n");
+    assert_eq!(mcu.mcu_mut().take_uart_output(), b"....\n");
+    assert!(mcu.mcu().uart_output().is_empty(), "drained");
+}
+
+#[test]
+fn custom0_and_mmio_ctrl_firmware_are_bit_identical() {
+    let cfg = cfg();
+    let mut r = Rng::new(41);
+    let model = nvmcu::datasets::synthetic_qmodel(&mut r, "plane", 64, 12, 6);
+    let mut mcu = Mcu::new(&cfg);
+    let pm = program_model_into(&cfg, &mut mcu.eflash, &model).unwrap();
+
+    // two resident images of the same model: custom-0 launches vs the
+    // MMIO CTRL fallback
+    let fw_c0 = build_model_firmware(&pm, map::SRAM_BASE).unwrap();
+    let fw_mmio = build_model_firmware_via(&pm, fw_c0.end, LaunchPlane::Mmio).unwrap();
+    fw_c0.install(&mut mcu);
+    fw_mmio.install(&mut mcu);
+
+    let x = rand_input(&mut r, 64);
+    let bytes: Vec<u8> = x.iter().map(|&v| v as u8).collect();
+    let run = |fw: &nvmcu::soc::FirmwareImage, mcu: &mut Mcu| -> Vec<i8> {
+        mcu.bus.sram_write(fw.in_base, &bytes);
+        mcu.bus.write32(fw.param_addr, 1);
+        mcu.reset_to(fw.entry);
+        let exit = mcu.run(fw.fuel(1));
+        nvmcu::soc::firmware::decode_exit(exit).unwrap();
+        mcu.bus.sram_slice(fw.out_base, fw.out_len).iter().map(|&b| b as i8).collect()
+    };
+    let y_c0 = run(&fw_c0, &mut mcu);
+    let y_mmio = run(&fw_mmio, &mut mcu);
+    assert_eq!(y_c0, y_mmio, "launch planes diverged");
+    assert_eq!(y_c0, nvmcu::models::qmodel_forward(&model, &x), "vs software model");
+}

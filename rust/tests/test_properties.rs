@@ -12,7 +12,8 @@ use nvmcu::artifacts::{QLayer, QModel, Shape};
 use nvmcu::config::ChipConfig;
 use nvmcu::datasets::{conv_layer, dense_layer, synthetic_qmodel};
 use nvmcu::engine::{
-    Backend, BatchPolicy, InferenceServer, NmcuBackend, ReferenceBackend, ShardedEngine,
+    Backend, BatchPolicy, InferenceServer, McuBackend, NmcuBackend, ReferenceBackend,
+    ShardedEngine,
 };
 use nvmcu::util::prop_check;
 use nvmcu::util::rng::Rng;
@@ -151,6 +152,64 @@ fn mlp_bit_exact_across_all_serving_paths() {
             InferenceServer::start(Box::new(fleet), BatchPolicy::default()).expect("server");
         for (x, w) in xs.iter().zip(&want) {
             assert_eq!(&server.infer(hf, x.clone()).expect("scheduled"), w);
+        }
+        server.shutdown().expect("shutdown");
+    });
+}
+
+/// THE firmware acceptance property: dense MLPs and conv/pool CNNs
+/// served *through the RV32I core* (`McuBackend`: resident firmware,
+/// DMA-staged I/O, custom-0 + OP_LAUNCH launches) are bit-exact to the
+/// software reference across `infer`, `infer_batch`, a sharded MCU
+/// fleet, and the `InferenceServer` scheduler, for >= 25 random seeds.
+#[test]
+fn mcu_firmware_bit_exact_across_all_serving_paths_25_seeds() {
+    prop_check(25, |r| {
+        let cfg = small_cfg();
+        // alternate the workload family: dense MLPs and deep CNNs both
+        // ride the firmware path
+        let model = if r.chance(0.5) {
+            let k = 1 + r.below(200) as usize;
+            let h = 1 + r.below(20) as usize;
+            let c = 1 + r.below(8) as usize;
+            synthetic_qmodel(r, "fw-mlp", k, h, c)
+        } else {
+            rand_cnn(r, true)
+        };
+        model.validate().expect("generator emits valid models");
+        let k = model.input_len();
+        let batch = 1 + r.below(4) as usize;
+        let xs: Vec<Vec<i8>> = (0..batch).map(|_| rand_input(r, k)).collect();
+
+        // the oracle
+        let mut oracle = ReferenceBackend::new();
+        let ho = oracle.program(&model).expect("reference program");
+        let want: Vec<Vec<i8>> =
+            xs.iter().map(|x| oracle.infer(ho, x).expect("reference infer")).collect();
+
+        // single firmware-driven MCU: infer and infer_batch
+        let mut mcu = McuBackend::new(&cfg);
+        let hm = mcu.program(&model).expect("mcu program");
+        for (x, w) in xs.iter().zip(&want) {
+            assert_eq!(&mcu.infer(hm, x).expect("mcu infer"), w, "firmware infer path");
+        }
+        assert_eq!(
+            mcu.infer_batch(hm, &xs).expect("mcu batch"),
+            want,
+            "firmware infer_batch path"
+        );
+
+        // sharded fleet of MCUs, then the scheduler over that fleet
+        let mut fleet = ShardedEngine::new_mcu(&cfg, 2).expect("mcu fleet");
+        let hf = fleet.program(&model).expect("fleet program");
+        assert_eq!(fleet.infer_batch(hf, &xs).expect("fleet batch"), want, "sharded MCU path");
+
+        let policy = BatchPolicy { max_batch: 1 + r.below(4) as usize, ..Default::default() };
+        let server = InferenceServer::start(Box::new(fleet), policy).expect("server");
+        let pendings: Vec<_> =
+            xs.iter().map(|x| server.submit(hf, x.clone()).expect("submit")).collect();
+        for (p, w) in pendings.into_iter().zip(&want) {
+            assert_eq!(&p.wait().expect("scheduled result"), w, "server-over-MCU path");
         }
         server.shutdown().expect("shutdown");
     });

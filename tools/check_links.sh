@@ -1,0 +1,58 @@
+#!/bin/sh
+# Doc link checker (CI): fails when README.md / ARCHITECTURE.md /
+# FIRMWARE.md reference files that do not exist in the repo.
+#
+# Two classes of reference are checked:
+#   1. markdown links  [text](target)   — local targets must exist
+#   2. backticked repo paths like `rust/src/soc/firmware.rs` or
+#      `rust/tests/test_server.rs` — must exist (directories may be
+#      written with a trailing /)
+#
+# Usage: tools/check_links.sh [file...]   (defaults to the three docs)
+
+set -u
+cd "$(dirname "$0")/.." || exit 1
+
+files="${*:-README.md ARCHITECTURE.md FIRMWARE.md}"
+fail=0
+
+for f in $files; do
+    if [ ! -f "$f" ]; then
+        echo "MISSING DOC: $f"
+        fail=1
+        continue
+    fi
+
+    # 1. markdown link targets (skip http(s) and pure #anchors)
+    for target in $(grep -o '](\([^)]*\))' "$f" | sed 's/^](//; s/)$//'); do
+        case "$target" in
+            http://*|https://*|\#*) continue ;;
+        esac
+        path="${target%%#*}"
+        [ -z "$path" ] && continue
+        if [ ! -e "$path" ]; then
+            echo "$f: broken link -> $target"
+            fail=1
+        fi
+    done
+
+    # 2. backticked repo paths (heuristic: contains a / and starts with
+    #    a known top-level directory)
+    for path in $(grep -o '`[A-Za-z0-9_./-]*`' "$f" | tr -d '`'); do
+        case "$path" in
+            rust/*|examples/*|python/*|tools/*|.github/*) ;;
+            *) continue ;;
+        esac
+        p="${path%/}"
+        if [ ! -e "$p" ]; then
+            echo "$f: stale file reference -> $path"
+            fail=1
+        fi
+    done
+done
+
+if [ "$fail" -ne 0 ]; then
+    echo "check_links: FAILED"
+    exit 1
+fi
+echo "check_links: ok"

@@ -10,14 +10,18 @@ use nvmcu::config::ChipConfig;
 use nvmcu::engine::{Backend, NmcuBackend, ShardedEngine};
 use nvmcu::models::logical_macs;
 use nvmcu::util::bench::{bench, Table};
-use nvmcu::util::rng::Rng;
+use nvmcu::util::cli::Args;
+use nvmcu::util::rng::{seed_from_env, Rng};
 use nvmcu::util::workload;
 use std::time::Duration;
 
 fn main() {
+    let args = Args::parse(false);
+    let seed = args.opt_u64("seed", seed_from_env(11));
     let tgt = Duration::from_millis(400);
     let cfg = ChipConfig::new();
-    let mut r = Rng::new(11);
+    let mut r = Rng::new(seed);
+    println!("seed {seed} (replay with --seed {seed})");
 
     let cnn = nvmcu::datasets::synthetic_mnist_cnn(&mut r);
     let macs = logical_macs(&cnn);

@@ -12,12 +12,16 @@ use nvmcu::eflash::read::ReadMode;
 use nvmcu::engine::{Backend, NmcuBackend, ShardedEngine};
 use nvmcu::nmcu::pe::mac_lanes;
 use nvmcu::util::bench::bench;
-use nvmcu::util::rng::Rng;
+use nvmcu::util::cli::Args;
+use nvmcu::util::rng::{seed_from_env, Rng};
 use std::time::Duration;
 
 fn main() {
+    let args = Args::parse(false);
+    let seed = args.opt_u64("seed", seed_from_env(3));
     let tgt = Duration::from_millis(500);
-    let mut r = Rng::new(3);
+    let mut r = Rng::new(seed);
+    println!("seed {seed} (replay with --seed {seed})");
 
     // ---- L3 kernel primitives -------------------------------------------
     let x: Vec<i8> = (0..128).map(|_| (r.below(256) as i32 - 128) as i8).collect();

@@ -11,14 +11,18 @@ use nvmcu::artifacts::Shape;
 use nvmcu::config::ChipConfig;
 use nvmcu::engine::{Backend, McuBackend, NmcuBackend, ReferenceBackend};
 use nvmcu::util::bench::bench;
-use nvmcu::util::rng::Rng;
+use nvmcu::util::cli::Args;
+use nvmcu::util::rng::{seed_from_env, Rng};
 use nvmcu::util::workload;
 use std::time::Duration;
 
 fn main() {
+    let args = Args::parse(false);
+    let seed = args.opt_u64("seed", seed_from_env(11));
     let tgt = Duration::from_millis(500);
     let cfg = ChipConfig::new();
-    let mut r = Rng::new(11);
+    let mut r = Rng::new(seed);
+    println!("seed {seed} (replay with --seed {seed})");
     const BATCH: usize = 64;
 
     let mlp = nvmcu::datasets::synthetic_qmodel(&mut r, "mnist-shaped", 784, 43, 10);

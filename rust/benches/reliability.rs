@@ -1,0 +1,117 @@
+//! Reliability bench — what the self-healing loop costs and what it
+//! buys: the margin-scrub sweep itself, the serving overhead of
+//! scrubbing every batch (with the acceptance assertion that a fleet
+//! which scrubs but finds nothing serves bit-identically), the full
+//! detect → quarantine → repair → readmit turnaround after an injected
+//! fault, and a bake-soak leg tracking the scrub verdict against
+//! cumulative thermal aging.
+//!
+//!     cargo bench --bench reliability
+//!
+//! Deterministic in --seed (or NVMCU_SEED); the seed is printed so any
+//! reported number replays.
+
+use nvmcu::config::ChipConfig;
+use nvmcu::eflash::EflashMacro;
+use nvmcu::engine::{
+    Backend, Fault, FaultPlan, QuarantinePolicy, ScrubPolicy, ShardedEngine,
+};
+use nvmcu::reliability::{bake_soak, scrub_region};
+use nvmcu::util::bench::{bench, Table};
+use nvmcu::util::cli::Args;
+use nvmcu::util::rng::{seed_from_env, Rng};
+use nvmcu::util::workload;
+use std::time::Duration;
+
+const SHARDS: usize = 4;
+const BATCH: usize = 64;
+const DEFAULT_SEED: u64 = 7;
+
+fn main() {
+    let args = Args::parse(false);
+    let seed = args.opt_u64("seed", seed_from_env(DEFAULT_SEED));
+    let tgt = Duration::from_millis(400);
+    let cfg = ChipConfig::new();
+    let mut r = Rng::new(seed);
+    println!("seed {seed} (replay with --seed {seed})\n");
+
+    let model = nvmcu::datasets::synthetic_qmodel(&mut r, "mnist-shaped", 784, 43, 10);
+    let pool = workload::random_inputs(&mut r, BATCH, 784);
+
+    // ---- the scrub sweep itself -----------------------------------------
+    let mut fleet = ShardedEngine::new(&cfg, SHARDS).expect("fleet");
+    let h = fleet.program(&model).expect("program");
+    let policy = ScrubPolicy::default();
+    let cells = model.total_cells() * SHARDS;
+    let t_scrub = bench(&format!("margin scrub, {SHARDS} shards ({cells} cells)"), tgt, || {
+        let reports = fleet.scrub(&policy).expect("scrub");
+        assert!(reports.iter().all(|rep| rep.is_healthy()), "fresh fleet must scrub clean");
+    });
+    println!(
+        "  -> {:.1} Mcells/s scrubbed",
+        cells as f64 / t_scrub.per_iter_ns * 1e3
+    );
+
+    // ---- serving overhead of scrub-every-batch ---------------------------
+    let want = fleet.infer_batch(h, &pool).expect("plain batch");
+    let t_plain = bench(&format!("infer_batch {BATCH} (plain fleet)"), tgt, || {
+        std::hint::black_box(fleet.infer_batch(h, &pool).expect("plain"));
+    });
+    let mut healing = ShardedEngine::new(&cfg, SHARDS).expect("healing fleet");
+    let h2 = healing.program(&model).expect("program");
+    healing.enable_self_healing(QuarantinePolicy { scrub_every: 1, ..Default::default() });
+    let t_heal = bench(&format!("infer_batch {BATCH} (scrub every batch)"), tgt, || {
+        std::hint::black_box(healing.infer_batch(h2, &pool).expect("healing"));
+    });
+    // the acceptance property: a fleet that scrubs but finds nothing
+    // serves bit-identically to one that never scrubbed
+    assert_eq!(
+        healing.infer_batch(h2, &pool).expect("healing batch"),
+        want,
+        "scrubbing changed serving results"
+    );
+    println!(
+        "  -> scrub-every-batch overhead {:.1}% on top of plain fan-out",
+        100.0 * (t_heal.per_iter_ns / t_plain.per_iter_ns - 1.0)
+    );
+
+    // ---- full detect -> quarantine -> repair -> readmit turnaround -------
+    FaultPlan::new(seed ^ 0x5EED)
+        .with(Fault::Drift {
+            first_row: 0,
+            n_rows: 8,
+            hours: 160.0,
+            temp_c: 125.0,
+            severity: 12.0,
+        })
+        .inject(&mut healing.shard_mut(0).chip_mut().eflash);
+    let t0 = std::time::Instant::now();
+    let got = healing.infer_batch(h2, &pool).expect("healing batch under fault");
+    let turnaround = t0.elapsed();
+    assert_eq!(got, want, "fleet served corrupt outputs during the healing batch");
+    assert_eq!(healing.n_active(), SHARDS, "repaired shard was not readmitted");
+    let rs = healing.reliability_stats();
+    assert!(rs.quarantines >= 1 && rs.readmissions >= 1, "{}", rs.summary());
+    println!(
+        "detect+repair+readmit turnaround: {:.2} ms (one batch, served bit-exact throughout)",
+        turnaround.as_secs_f64() * 1e3
+    );
+    println!("  {}", rs.summary());
+
+    // ---- bake soak: scrub verdict vs cumulative aging ---------------------
+    let mut mac = EflashMacro::new(&cfg);
+    let codes: Vec<i8> = (0..8192).map(|_| (r.below(16) as i8) - 8).collect();
+    let (region, _) = mac.program_region(&codes).expect("program");
+    let mut t = Table::new(&["baked hours", "verdict", "exact %", "min margin mV"]);
+    bake_soak(&mut mac, 640.0, cfg.retention.bake_temp_c, 4, |mac, hours| {
+        let health = scrub_region(mac, &region, &codes, 0, &policy);
+        t.row(&[
+            format!("{hours:.0}"),
+            format!("{}", health.status),
+            format!("{:.2}", 100.0 * health.errors.exact_rate()),
+            format!("{:.1}", health.min_margin_v * 1e3),
+        ]);
+    });
+    println!("\nbake soak at {} C, 8192-cell region:", cfg.retention.bake_temp_c);
+    t.print();
+}

@@ -24,7 +24,8 @@ use nvmcu::engine::server::burst_trial;
 use nvmcu::engine::{Backend, BatchPolicy, NmcuBackend, ShardedEngine};
 use nvmcu::metrics::ServerStats;
 use nvmcu::util::bench::Table;
-use nvmcu::util::rng::Rng;
+use nvmcu::util::cli::Args;
+use nvmcu::util::rng::{seed_from_env, Rng};
 use nvmcu::util::workload;
 use std::time::Duration;
 
@@ -32,6 +33,7 @@ const N_REQ: usize = 384;
 const SHARDS: usize = 4;
 const MAX_BATCH: usize = 64;
 const ROUNDS: usize = 3;
+const DEFAULT_SEED: u64 = 3;
 
 /// Burst-submit the whole pool through a fresh server, wait for every
 /// completion, return the best wall time over `ROUNDS` rounds plus the
@@ -65,12 +67,15 @@ fn trial(
 }
 
 fn main() {
+    let args = Args::parse(false);
+    let seed = args.opt_u64("seed", seed_from_env(DEFAULT_SEED));
     let cfg = ChipConfig::new();
-    let mut r = Rng::new(3);
+    let mut r = Rng::new(seed);
     let model = synthetic_qmodel(&mut r, "mnist-shaped", 784, 43, 10);
     let pool = workload::random_inputs(&mut r, N_REQ, 784);
     println!(
-        "serving bench: {N_REQ}-request burst, MNIST-shaped model, best of {ROUNDS} rounds\n"
+        "serving bench: {N_REQ}-request burst, MNIST-shaped model, best of {ROUNDS} rounds \
+         (seed {seed}; replay with --seed {seed})\n"
     );
 
     let mut t = Table::new(&["mode", "req/s", "speedup", "mean batch", "p50 ms", "p99 ms"]);

@@ -11,6 +11,7 @@ use crate::eflash::program::ProgramReport;
 use crate::eflash::{EflashMacro, Region};
 use crate::error::EngineError;
 use crate::nmcu::{layout_codes, ConvDesc, LayerDesc, Nmcu, NmcuStats, PoolDesc, Shape};
+use crate::reliability::{scrub_region, HealthReport, ScrubPolicy};
 
 /// One planned layer execution: the typed [`QOp`] lowered against the
 /// chip's geometry (EFLASH rows allocated for weighted ops, shapes
@@ -459,7 +460,8 @@ impl Chip {
                         got: x_q.len(),
                     });
                 }
-                self.nmcu.stats.bus_bytes += x_q.len() as u64;
+                self.nmcu.stats.bus_bytes =
+                    self.nmcu.stats.bus_bytes.saturating_add(x_q.len() as u64);
             }
         }
         let mut act = x_q.to_vec();
@@ -471,7 +473,7 @@ impl Chip {
             };
         }
         // result readback over the bus
-        self.nmcu.stats.bus_bytes += act.len() as u64;
+        self.nmcu.stats.bus_bytes = self.nmcu.stats.bus_bytes.saturating_add(act.len() as u64);
         Ok(act)
     }
 
@@ -486,6 +488,56 @@ impl Chip {
     /// Unpowered bake (the paper's 125C retention stress).
     pub fn bake(&mut self, hours: f64, temp_c: f64) {
         self.eflash.bake(hours, temp_c);
+    }
+
+    /// Margin-scrub every programmed region of `pm` against the row
+    /// images it was programmed with, classifying each under `policy`
+    /// (see [`crate::reliability::scrub_region`]). Read-only with
+    /// respect to inference state: in the default cached read mode a
+    /// scrub consumes no RNG and touches no [`NmcuStats`] counter.
+    pub fn scrub(&mut self, pm: &ProgrammedModel, policy: &ScrubPolicy) -> HealthReport {
+        let regions = pm
+            .regions
+            .iter()
+            .zip(&pm.layer_images)
+            .enumerate()
+            .map(|(i, (region, image))| {
+                scrub_region(&mut self.eflash, region, image, i, policy)
+            })
+            .collect();
+        HealthReport { model: pm.name.clone(), regions }
+    }
+
+    /// Repair one region of `pm` in place: erase its rows and re-run
+    /// full ISPP program-verify from the retained row image (the golden
+    /// weights survive in `pm.layer_images`). Fails typed if the region
+    /// index is out of range or if program-verify cannot restore every
+    /// cell — e.g. a stuck word/bit line — in which case the chip must
+    /// stay out of rotation.
+    pub fn reprogram_region(
+        &mut self,
+        pm: &ProgrammedModel,
+        region_index: usize,
+    ) -> Result<ProgramReport, EngineError> {
+        let (Some(region), Some(image)) =
+            (pm.regions.get(region_index), pm.layer_images.get(region_index))
+        else {
+            return Err(EngineError::BadDescriptor {
+                reason: format!(
+                    "model {}: repair of region {region_index} out of range ({} regions)",
+                    pm.name,
+                    pm.regions.len()
+                ),
+            });
+        };
+        let report = self.eflash.reprogram_region(region, image);
+        if report.failed_cells > 0 {
+            return Err(EngineError::ProgramVerifyFailed {
+                layer: format!("{} region {region_index}", pm.name),
+                failed_cells: report.failed_cells,
+            });
+        }
+        Ok(report)
     }
 
     /// Cumulative NMCU execution statistics.

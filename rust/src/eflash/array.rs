@@ -29,6 +29,10 @@ pub struct EflashArray {
     efficiency: Vec<f32>,
     /// per-cell retention-loss multiplier (lognormal; includes fast tails)
     retention_factor: Vec<f32>,
+    /// stuck-at fault mask (fault injection): a pinned cell's Vt no
+    /// longer responds to program, erase, or drift. Lazily allocated —
+    /// `None` (the overwhelmingly common case) costs nothing.
+    pinned: Option<Box<[bool]>>,
     /// lifetime statistics: ISPP pulses applied
     pub total_program_pulses: u64,
     /// lifetime statistics: row reads performed
@@ -61,6 +65,7 @@ impl EflashArray {
             vt,
             efficiency,
             retention_factor,
+            pinned: None,
             total_program_pulses: 0,
             total_reads: 0,
             total_erases: 0,
@@ -116,48 +121,85 @@ impl EflashArray {
         self.retention_factor[cell]
     }
 
+    /// Pin a cell's Vt at `vt` (stuck word-line / bit-line fault
+    /// injection). A pinned cell no longer responds to program pulses,
+    /// erases, or [`shift_vt`](EflashArray::shift_vt) — exactly the
+    /// behaviour that makes a region unrepairable in the field, since
+    /// erase + reprogram cannot move it either.
+    pub fn pin_vt(&mut self, cell: usize, vt: f32) {
+        let n = self.vt.len();
+        let pins = self.pinned.get_or_insert_with(|| vec![false; n].into_boxed_slice());
+        pins[cell] = true;
+        self.vt[cell] = vt;
+    }
+
+    /// Is this cell pinned by an injected stuck-at fault?
+    #[inline]
+    pub fn is_pinned(&self, cell: usize) -> bool {
+        self.pinned.as_ref().is_some_and(|p| p[cell])
+    }
+
+    /// Number of cells pinned by injected stuck-at faults.
+    pub fn n_pinned(&self) -> usize {
+        self.pinned.as_ref().map_or(0, |p| p.iter().filter(|&&b| b).count())
+    }
+
     /// Apply one program pulse to a cell (FN tunneling, ISPP regime):
     /// Vt rises by ~step * cell_efficiency + noise. Saturates near the
-    /// physical ceiling set by the program voltage.
+    /// physical ceiling set by the program voltage. Pinned (stuck-at)
+    /// cells absorb the pulse without moving.
     #[inline]
     pub fn program_pulse(&mut self, cell: usize, rng: &mut Rng) {
         let step = self.cfg.ispp_step * self.efficiency[cell] as f64
             + rng.normal(0.0, self.cfg.ispp_noise_sigma);
-        // saturation: the tunnel field collapses as Vt approaches ~3.2 V,
-        // so injection stops entirely at the ceiling
-        let headroom = ((3.2 - self.vt[cell] as f64) / 3.2).clamp(0.0, 1.0);
-        self.vt[cell] = (self.vt[cell] as f64 + step.max(0.0) * headroom) as f32;
-        self.total_program_pulses += 1;
+        if !self.is_pinned(cell) {
+            // saturation: the tunnel field collapses as Vt approaches
+            // ~3.2 V, so injection stops entirely at the ceiling
+            let headroom = ((3.2 - self.vt[cell] as f64) / 3.2).clamp(0.0, 1.0);
+            self.vt[cell] = (self.vt[cell] as f64 + step.max(0.0) * headroom) as f32;
+        }
+        self.total_program_pulses = self.total_program_pulses.saturating_add(1);
     }
 
     /// Block erase: all cells return to the erased distribution (fresh
     /// lognormal-ish spread; erase is uniform enough at this abstraction).
+    /// Pinned cells keep their stuck Vt.
     pub fn erase_all(&mut self, rng: &mut Rng) {
-        for v in self.vt.iter_mut() {
-            *v = rng.normal(self.cfg.vt_erased_mean, self.cfg.vt_erased_sigma) as f32;
+        for (cell, v) in self.vt.iter_mut().enumerate() {
+            let fresh = rng.normal(self.cfg.vt_erased_mean, self.cfg.vt_erased_sigma) as f32;
+            if !self.pinned.as_ref().is_some_and(|p| p[cell]) {
+                *v = fresh;
+            }
         }
-        self.total_erases += 1;
+        self.total_erases = self.total_erases.saturating_add(1);
     }
 
-    /// Erase a single row (used by per-layer reprogramming).
+    /// Erase a single row (used by per-layer reprogramming). Pinned
+    /// cells keep their stuck Vt.
     pub fn erase_row(&mut self, addr: RowAddr, rng: &mut Rng) {
         let base = self.row_base(addr);
         for i in 0..self.cfg.cells_per_read {
-            self.vt[base + i] =
-                rng.normal(self.cfg.vt_erased_mean, self.cfg.vt_erased_sigma) as f32;
+            let fresh = rng.normal(self.cfg.vt_erased_mean, self.cfg.vt_erased_sigma) as f32;
+            if !self.is_pinned(base + i) {
+                self.vt[base + i] = fresh;
+            }
         }
-        self.total_erases += 1;
+        self.total_erases = self.total_erases.saturating_add(1);
     }
 
-    /// Directly perturb a cell's Vt (retention model hook).
+    /// Directly perturb a cell's Vt (retention model and fault-injection
+    /// hook). Pinned cells do not move.
     #[inline]
     pub fn shift_vt(&mut self, cell: usize, delta: f64) {
+        if self.is_pinned(cell) {
+            return;
+        }
         self.vt[cell] = (self.vt[cell] as f64 + delta) as f32;
     }
 
     /// Count one row read in the lifetime statistics.
     pub fn note_read(&mut self) {
-        self.total_reads += 1;
+        self.total_reads = self.total_reads.saturating_add(1);
     }
 }
 
@@ -255,6 +297,29 @@ mod tests {
         a.erase_row(addr, &mut rng);
         assert!(a.vt(base) < 1.1);
         assert_eq!(a.vt(base - 1), outside_before);
+    }
+
+    #[test]
+    fn pinned_cells_survive_program_erase_and_drift() {
+        let cfg = small_cfg();
+        let mut a = mk(&cfg);
+        let mut rng = Rng::new(6);
+        assert_eq!(a.n_pinned(), 0);
+        a.pin_vt(42, 1.77);
+        assert!(a.is_pinned(42) && !a.is_pinned(41));
+        assert_eq!(a.n_pinned(), 1);
+        for _ in 0..50 {
+            a.program_pulse(42, &mut rng);
+        }
+        assert_eq!(a.vt(42), 1.77, "program moved a pinned cell");
+        a.shift_vt(42, -0.5);
+        assert_eq!(a.vt(42), 1.77, "shift_vt moved a pinned cell");
+        a.erase_all(&mut rng);
+        assert_eq!(a.vt(42), 1.77, "erase_all moved a pinned cell");
+        a.erase_row(a.row_addr(42 / cfg.cells_per_read), &mut rng);
+        assert_eq!(a.vt(42), 1.77, "erase_row moved a pinned cell");
+        // unpinned neighbours still behave normally
+        assert!(a.vt(41) < 1.1);
     }
 
     #[test]

@@ -193,6 +193,40 @@ impl EflashMacro {
         self.cache_valid = false;
     }
 
+    /// Drop the decode cache so the next read re-senses the array. The
+    /// fault-injection hook: anything that perturbs Vt behind the
+    /// macro's back ([`crate::reliability::FaultPlan::inject`]) must
+    /// call this, or Cached-mode reads keep serving the stale decode.
+    pub fn invalidate_cache(&mut self) {
+        self.cache_valid = false;
+    }
+
+    /// Erase and reprogram an already-allocated region in place from its
+    /// original row `image` (in-field repair). The bump allocator has no
+    /// free list, so repair reuses the region's own rows; full ISPP
+    /// program-verify runs again and the fresh report is returned —
+    /// `failed_cells > 0` means the rows hold unrepairable (e.g.
+    /// stuck-at) cells and the region must stay out of service.
+    pub fn reprogram_region(&mut self, region: &Region, image: &[i8]) -> ProgramReport {
+        assert_eq!(image.len(), region.n_codes, "repair image does not match the region");
+        let rows: Vec<RowAddr> = (region.first_row..region.first_row + region.n_rows)
+            .map(|r| self.array.row_addr(r))
+            .collect();
+        for &addr in &rows {
+            self.array.erase_row(addr, &mut self.rng);
+        }
+        let report = program::program_rows(
+            &mut self.array,
+            &rows,
+            image,
+            self.mapping,
+            &self.ladders,
+            &mut self.rng,
+        );
+        self.cache_valid = false;
+        report
+    }
+
     /// State-occupancy histogram of a region (Fig 6): counts per decoded
     /// state 0..16.
     pub fn state_histogram(&mut self, region: &Region) -> [u64; 16] {
@@ -336,6 +370,22 @@ mod tests {
         for (s, &c) in h.iter().enumerate() {
             assert!(c > 40, "state {s}: {c}");
         }
+    }
+
+    #[test]
+    fn reprogram_region_restores_exact_decode_in_place() {
+        let cfg = chip();
+        let mut mac = EflashMacro::new(&cfg);
+        let codes: Vec<i8> = (0..2000).map(|i| ((i * 7 % 16) as i8) - 8).collect();
+        let (region, _) = mac.program_region(&codes).unwrap();
+        // age the array until some cells decode wrong, then repair
+        mac.bake(340.0, 125.0);
+        let rows_free = mac.rows_free();
+        let rep = mac.reprogram_region(&region, &codes);
+        assert_eq!(rep.failed_cells, 0);
+        assert_eq!(mac.rows_free(), rows_free, "repair must not allocate rows");
+        let e = mac.decode_errors(&region, &codes);
+        assert_eq!(e.exact, 2000, "repair left decode errors: {e:?}");
     }
 
     #[test]

@@ -58,13 +58,14 @@ mod sharded;
 mod hlo;
 
 pub use crate::error::EngineError;
+pub use crate::reliability::{Fault, FaultPlan, HealthReport, HealthStatus, ScrubPolicy};
 #[cfg(feature = "pjrt")]
 pub use hlo::HloBackend;
 pub use mcu_backend::McuBackend;
 pub use nmcu_backend::NmcuBackend;
 pub use reference::ReferenceBackend;
 pub use server::{BatchPolicy, InferenceServer, Pending, ServerClient};
-pub use sharded::ShardedEngine;
+pub use sharded::{QuarantinePolicy, ShardState, ShardedEngine};
 
 use crate::artifacts::QModel;
 use crate::config::ChipConfig;
@@ -158,6 +159,43 @@ pub trait Backend: Send {
 
     /// Zero the statistics counters.
     fn reset_stats(&mut self);
+
+    /// Margin-scrub every resident model's weight memory and classify
+    /// each programmed region under `policy`, one [`HealthReport`] per
+    /// model. Backends without physical weight memory (the software
+    /// reference, HLO) have nothing to drift and report nothing.
+    fn scrub(&mut self, policy: &ScrubPolicy) -> Result<Vec<HealthReport>> {
+        let _ = policy;
+        Ok(Vec::new())
+    }
+
+    /// Repair every region the scrubber flags (erase + full ISPP
+    /// program-verify from the retained golden weights), then rescrub
+    /// and return the post-repair reports. Fails typed
+    /// ([`EngineError::ProgramVerifyFailed`]) when a region cannot be
+    /// restored — e.g. a stuck word/bit line. No-op on backends without
+    /// physical weight memory.
+    fn repair(&mut self, policy: &ScrubPolicy) -> Result<Vec<HealthReport>> {
+        let _ = policy;
+        Ok(Vec::new())
+    }
+
+    /// Probe every resident model with `probes` deterministic inputs
+    /// (derived from `seed`) and compare against the retained golden
+    /// weights' software forward pass. `Ok(true)` iff every probe is
+    /// bit-exact — the readmission gate after a repair. Backends that
+    /// *are* the reference trivially pass.
+    fn verify_golden(&mut self, probes: usize, seed: u64) -> Result<bool> {
+        let _ = (probes, seed);
+        Ok(true)
+    }
+
+    /// Current serving health: `Ok(())` at full capacity,
+    /// [`EngineError::Degraded`] when shards are out of rotation. A
+    /// single-substrate backend is always at full capacity.
+    fn health(&self) -> Result<()> {
+        Ok(())
+    }
 }
 
 /// Which backend an [`Engine`] should run on (CLI `--backend`).

@@ -8,25 +8,32 @@ use super::{lookup, Backend, EngineError, ModelHandle, ModelInfo, Result};
 use crate::artifacts::QModel;
 use crate::config::ChipConfig;
 use crate::coordinator::{Chip, ProgrammedModel};
+use crate::models::qmodel_forward;
 use crate::nmcu::NmcuStats;
+use crate::reliability::{HealthReport, HealthStatus, ScrubPolicy};
+use crate::util::rng::Rng;
 
 /// The chip-simulator [`Backend`]: one [`Chip`] plus the registry of
-/// models programmed into its EFLASH.
+/// models programmed into its EFLASH. The backend retains each model's
+/// quantized artifact as *golden weights* — the repair source and the
+/// bit-exactness oracle of the self-healing loop.
 pub struct NmcuBackend {
     chip: Chip,
     models: Vec<ProgrammedModel>,
+    /// golden copies of the programmed artifacts, parallel to `models`
+    golden: Vec<QModel>,
 }
 
 impl NmcuBackend {
     /// Fabricate a fresh chip with `cfg`.
     pub fn new(cfg: &ChipConfig) -> NmcuBackend {
-        NmcuBackend { chip: Chip::new(cfg), models: Vec::new() }
+        NmcuBackend { chip: Chip::new(cfg), models: Vec::new(), golden: Vec::new() }
     }
 
     /// Wrap an existing chip (ablations that pre-configure the EFLASH:
     /// state mapping, VRD ceiling, read mode, ...).
     pub fn from_chip(chip: Chip) -> NmcuBackend {
-        NmcuBackend { chip, models: Vec::new() }
+        NmcuBackend { chip, models: Vec::new(), golden: Vec::new() }
     }
 
     /// Direct access to the underlying chip (bake experiments, Vt
@@ -66,6 +73,7 @@ impl Backend for NmcuBackend {
     fn program(&mut self, model: &QModel) -> Result<ModelHandle> {
         let pm = self.chip.program_model(model)?;
         self.models.push(pm);
+        self.golden.push(model.clone());
         Ok(ModelHandle::from_index(self.models.len() - 1))
     }
 
@@ -99,5 +107,42 @@ impl Backend for NmcuBackend {
 
     fn reset_stats(&mut self) {
         self.chip.reset_stats();
+    }
+
+    fn scrub(&mut self, policy: &ScrubPolicy) -> Result<Vec<HealthReport>> {
+        Ok(self.models.iter().map(|pm| self.chip.scrub(pm, policy)).collect())
+    }
+
+    fn repair(&mut self, policy: &ScrubPolicy) -> Result<Vec<HealthReport>> {
+        // erase + reprogram every region the scrubber flags, from the
+        // row images retained at program time, then rescrub so the
+        // caller sees the post-repair state
+        let mut reports = Vec::with_capacity(self.models.len());
+        for pm in &self.models {
+            let before = self.chip.scrub(pm, policy);
+            for region in &before.regions {
+                if region.status != HealthStatus::Healthy {
+                    self.chip.reprogram_region(pm, region.region_index)?;
+                }
+            }
+            reports.push(self.chip.scrub(pm, policy));
+        }
+        Ok(reports)
+    }
+
+    fn verify_golden(&mut self, probes: usize, seed: u64) -> Result<bool> {
+        for (i, (pm, golden)) in self.models.iter().zip(&self.golden).enumerate() {
+            // per-model probe stream: deterministic in (seed, registry
+            // index), independent of how many probes other models took
+            let mut r = Rng::new(seed).fork(i as u64);
+            for _ in 0..probes {
+                let x: Vec<i8> =
+                    (0..pm.input_len()).map(|_| (r.below(256) as i32 - 128) as i8).collect();
+                if self.chip.infer(pm, &x)? != qmodel_forward(golden, &x) {
+                    return Ok(false);
+                }
+            }
+        }
+        Ok(true)
     }
 }

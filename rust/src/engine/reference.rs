@@ -68,10 +68,12 @@ impl Backend for ReferenceBackend {
         // padded-lane MACs (k rounded up to the 128-lane read width)
         // because its energy model is built on them — compare mac_ops
         // across backends only with that distinction in mind.
-        self.stats.bus_bytes += (x.len() + out.len()) as u64;
-        self.stats.mac_ops += m.macs;
-        self.stats.writebacks += m.writebacks;
-        self.stats.layers_run += m.model.layers.len() as u64;
+        self.stats.bus_bytes =
+            self.stats.bus_bytes.saturating_add((x.len() + out.len()) as u64);
+        self.stats.mac_ops = self.stats.mac_ops.saturating_add(m.macs);
+        self.stats.writebacks = self.stats.writebacks.saturating_add(m.writebacks);
+        self.stats.layers_run =
+            self.stats.layers_run.saturating_add(m.model.layers.len() as u64);
         Ok(out)
     }
 

@@ -685,4 +685,9 @@ fn execute_batch(backend: &mut dyn Backend, batch: MicroBatch, shared: &Shared) 
         }
         Err(err) => fail_batch(valid, &err, shared),
     }
+    // degraded-health visibility: a self-healing fleet with shards out
+    // of rotation keeps serving — surface it as a counter, not an error
+    if let Err(EngineError::Degraded { .. }) = backend.health() {
+        shared.meter().note_degraded();
+    }
 }

@@ -7,11 +7,80 @@
 //! is the repo's throughput-scaling primitive: the paper's chip is a
 //! single fixed-function device, and a rack of them serves traffic
 //! exactly like this — replicate the weights, fan out the requests.
+//!
+//! ## Self-healing
+//!
+//! With [`ShardedEngine::enable_self_healing`] the fleet also runs the
+//! reliability loop (see [`crate::reliability`]): every
+//! [`QuarantinePolicy::scrub_every`] batches the active shards are
+//! margin-scrubbed *before* they serve, a shard whose scrub comes back
+//! [`crate::reliability::HealthStatus::Failed`] is pulled from rotation
+//! (quarantined), and while the remaining shards keep serving, one
+//! quarantined shard at a time repairs in the background on its own
+//! worker thread — erase + reprogram from golden weights, rescrub, and
+//! a bit-exact [`Backend::verify_golden`] probe — before being
+//! readmitted. Shards that exhaust
+//! [`QuarantinePolicy::max_repair_attempts`] (physically stuck cells)
+//! are marked dead and stay out of rotation. [`Backend::health`]
+//! reports reduced capacity as a typed
+//! [`crate::error::EngineError::Degraded`] observation; serving only
+//! fails once *zero* shards remain active.
+//!
+//! A fleet that scrubs but never finds a fault serves bit- and
+//! stats-identically to one that never scrubbed: in the default cached
+//! read mode a scrub consumes no RNG and touches no
+//! [`NmcuStats`] counter.
 
 use super::{Backend, EngineError, McuBackend, ModelHandle, ModelInfo, NmcuBackend, Result};
 use crate::artifacts::QModel;
 use crate::config::ChipConfig;
+use crate::metrics::reliability::{ReliabilityMeter, ReliabilityStats};
 use crate::nmcu::NmcuStats;
+use crate::reliability::{HealthReport, HealthStatus, ScrubPolicy};
+
+/// When and how a self-healing fleet scrubs, quarantines, repairs, and
+/// readmits its shards (see the [module docs](self)).
+#[derive(Clone, Debug)]
+pub struct QuarantinePolicy {
+    /// thresholds the margin scrubber classifies regions under
+    pub scrub: ScrubPolicy,
+    /// scrub the active shards every N batches (1 = before every batch;
+    /// larger values trade detection latency for scrub overhead)
+    pub scrub_every: u64,
+    /// bit-exact probes a repaired shard must pass before readmission
+    pub verify_probes: usize,
+    /// seed of the deterministic readmission probe stream
+    pub verify_seed: u64,
+    /// repair attempts before a shard is declared dead (stuck cells
+    /// fail program-verify every time — give up and serve without it)
+    pub max_repair_attempts: u32,
+}
+
+impl Default for QuarantinePolicy {
+    fn default() -> QuarantinePolicy {
+        QuarantinePolicy {
+            scrub: ScrubPolicy::default(),
+            scrub_every: 8,
+            verify_probes: 4,
+            verify_seed: 2718,
+            max_repair_attempts: 3,
+        }
+    }
+}
+
+/// Rotation state of one shard in a self-healing fleet.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardState {
+    /// in rotation, serving batches
+    Active,
+    /// out of rotation, awaiting/undergoing background repair
+    Quarantined {
+        /// repair attempts already spent on this shard
+        attempts: u32,
+    },
+    /// permanently out of rotation (repairs exhausted)
+    Dead,
+}
 
 /// N replicated devices serving batches in parallel — the data-parallel
 /// [`Backend`] (see the module docs). Defaults to a fleet of direct
@@ -19,6 +88,18 @@ use crate::nmcu::NmcuStats;
 /// firmware control plane in the loop on every shard.
 pub struct ShardedEngine<B: Backend = NmcuBackend> {
     shards: Vec<B>,
+    /// rotation state, parallel to `shards` (all Active until a
+    /// quarantine policy is enabled and a scrub fails a shard)
+    states: Vec<ShardState>,
+    /// the self-healing policy, when enabled
+    self_heal: Option<QuarantinePolicy>,
+    /// batches served (the self-healing clock: scrub cadence and
+    /// detection-latency accounting both count in batches)
+    batches: u64,
+    /// per-shard batch index of the last clean scrub, parallel to
+    /// `shards`
+    last_clean_scrub: Vec<u64>,
+    meter: ReliabilityMeter,
 }
 
 impl<B: Backend> std::fmt::Debug for ShardedEngine<B> {
@@ -26,6 +107,8 @@ impl<B: Backend> std::fmt::Debug for ShardedEngine<B> {
         f.debug_struct("ShardedEngine")
             .field("backend", &self.shards[0].name())
             .field("n_shards", &self.shards.len())
+            .field("n_active", &self.n_active())
+            .field("self_heal", &self.self_heal.is_some())
             .finish()
     }
 }
@@ -52,7 +135,15 @@ impl<B: Backend> ShardedEngine<B> {
         if shards.is_empty() {
             return Err(EngineError::InvalidConfig { reason: "n_shards must be >= 1".into() });
         }
-        Ok(ShardedEngine { shards })
+        let n = shards.len();
+        Ok(ShardedEngine {
+            shards,
+            states: vec![ShardState::Active; n],
+            self_heal: None,
+            batches: 0,
+            last_clean_scrub: vec![0; n],
+            meter: ReliabilityMeter::new(),
+        })
     }
 
     /// Number of replicated devices in the fleet.
@@ -68,6 +159,175 @@ impl<B: Backend> ShardedEngine<B> {
     /// Mutable access to one shard (bake experiments, fault injection).
     pub fn shard_mut(&mut self, i: usize) -> &mut B {
         &mut self.shards[i]
+    }
+
+    /// Turn on the self-healing loop (see the [module docs](self)).
+    pub fn enable_self_healing(&mut self, policy: QuarantinePolicy) {
+        self.self_heal = Some(policy);
+    }
+
+    /// Rotation state of one shard.
+    pub fn shard_state(&self, i: usize) -> ShardState {
+        self.states[i]
+    }
+
+    /// Shards currently in rotation.
+    pub fn n_active(&self) -> usize {
+        self.states.iter().filter(|s| **s == ShardState::Active).count()
+    }
+
+    /// Indices of the shards currently quarantined for repair.
+    pub fn quarantined(&self) -> Vec<usize> {
+        self.states
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| matches!(s, ShardState::Quarantined { .. }))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Indices of the shards declared dead (repairs exhausted).
+    pub fn dead(&self) -> Vec<usize> {
+        self.states
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| **s == ShardState::Dead)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Snapshot of the fleet's reliability counters (scrubs,
+    /// quarantines, repairs, readmissions, margin histogram).
+    pub fn reliability_stats(&self) -> ReliabilityStats {
+        self.meter.snapshot()
+    }
+
+    /// Scrub every active shard in parallel and update rotation states:
+    /// a shard whose report comes back Failed is quarantined; a clean
+    /// shard's detection-latency clock resets.
+    fn scrub_active_shards(&mut self, policy: &QuarantinePolicy) -> Result<()> {
+        let mut scrubbed: Vec<(usize, Result<Vec<HealthReport>>)> = Vec::new();
+        std::thread::scope(|scope| {
+            let mut workers = Vec::new();
+            for (i, (shard, state)) in
+                self.shards.iter_mut().zip(&self.states).enumerate()
+            {
+                if *state == ShardState::Active {
+                    let p = &policy.scrub;
+                    workers.push((i, scope.spawn(move || shard.scrub(p))));
+                }
+            }
+            for (i, worker) in workers {
+                scrubbed.push((
+                    i,
+                    worker
+                        .join()
+                        .unwrap_or_else(|_| Err(EngineError::WorkerPanicked { shard: i })),
+                ));
+            }
+        });
+        for (i, result) in scrubbed {
+            let reports = result?;
+            self.meter.note_scrub(&reports);
+            if reports.iter().any(|r| r.worst() == HealthStatus::Failed) {
+                self.states[i] = ShardState::Quarantined { attempts: 0 };
+                self.meter.note_quarantine(self.batches - self.last_clean_scrub[i]);
+            } else {
+                self.last_clean_scrub[i] = self.batches;
+            }
+        }
+        Ok(())
+    }
+
+    /// The self-healing batch path: scrub on cadence, fan the batch
+    /// over the active shards, and — concurrently, on its own worker —
+    /// repair + re-verify one quarantined shard.
+    fn infer_batch_self_healing(
+        &mut self,
+        handle: ModelHandle,
+        xs: &[Vec<i8>],
+        policy: &QuarantinePolicy,
+    ) -> Result<Vec<Vec<i8>>> {
+        self.batches = self.batches.saturating_add(1);
+        if self.batches % policy.scrub_every.max(1) == 0 {
+            self.scrub_active_shards(policy)?;
+        }
+        let total = self.shards.len();
+        let mut active: Vec<&mut B> = Vec::new();
+        let mut repair: Option<(usize, &mut B)> = None;
+        for (i, (shard, state)) in self.shards.iter_mut().zip(&self.states).enumerate() {
+            match state {
+                ShardState::Active => active.push(shard),
+                ShardState::Quarantined { .. } if repair.is_none() => {
+                    repair = Some((i, shard));
+                }
+                _ => {}
+            }
+        }
+        if active.is_empty() {
+            return Err(EngineError::Degraded { active: 0, total });
+        }
+        let per_shard = xs.len().div_ceil(active.len());
+        let mut results: Vec<Result<Vec<Vec<i8>>>> = Vec::new();
+        let mut repair_outcome: Option<(usize, Result<bool>)> = None;
+        std::thread::scope(|scope| {
+            let mut workers = Vec::new();
+            for (shard, chunk) in active.into_iter().zip(xs.chunks(per_shard)) {
+                workers.push(scope.spawn(move || shard.infer_batch(handle, chunk)));
+            }
+            // background repair: one quarantined shard heals while the
+            // rest of the fleet serves the batch
+            let repair_worker = repair.map(|(i, shard)| {
+                (
+                    i,
+                    scope.spawn(move || -> Result<bool> {
+                        let reports = shard.repair(&policy.scrub)?;
+                        if reports.iter().any(|r| !r.is_healthy()) {
+                            return Ok(false);
+                        }
+                        shard.verify_golden(policy.verify_probes, policy.verify_seed)
+                    }),
+                )
+            });
+            for (i, worker) in workers.into_iter().enumerate() {
+                results.push(
+                    worker
+                        .join()
+                        .unwrap_or_else(|_| Err(EngineError::WorkerPanicked { shard: i })),
+                );
+            }
+            if let Some((i, worker)) = repair_worker {
+                repair_outcome = Some((
+                    i,
+                    worker
+                        .join()
+                        .unwrap_or_else(|_| Err(EngineError::WorkerPanicked { shard: i })),
+                ));
+            }
+        });
+        if let Some((i, outcome)) = repair_outcome {
+            // a typed repair error (stuck cells failing program-verify)
+            // is a failed attempt, not a serving failure
+            let ok = matches!(outcome, Ok(true));
+            self.meter.note_repair(ok);
+            if ok {
+                self.states[i] = ShardState::Active;
+                self.last_clean_scrub[i] = self.batches;
+                self.meter.note_readmission();
+            } else if let ShardState::Quarantined { attempts } = self.states[i] {
+                let attempts = attempts.saturating_add(1);
+                self.states[i] = if attempts >= policy.max_repair_attempts {
+                    ShardState::Dead
+                } else {
+                    ShardState::Quarantined { attempts }
+                };
+            }
+        }
+        let mut out = Vec::with_capacity(xs.len());
+        for r in results {
+            out.extend(r?);
+        }
+        Ok(out)
     }
 }
 
@@ -119,13 +379,27 @@ impl<B: Backend> Backend for ShardedEngine<B> {
         Ok(handle.expect("n_shards >= 1"))
     }
 
-    /// Single samples run on shard 0 (no fan-out to pay for).
+    /// Single samples run on the first active shard (no fan-out to pay
+    /// for); fails [`EngineError::Degraded`] once no shard is left in
+    /// rotation.
     fn infer(&mut self, handle: ModelHandle, x: &[i8]) -> Result<Vec<i8>> {
-        self.shards[0].infer(handle, x)
+        let total = self.shards.len();
+        match self
+            .shards
+            .iter_mut()
+            .zip(&self.states)
+            .find(|(_, state)| **state == ShardState::Active)
+        {
+            Some((shard, _)) => shard.infer(handle, x),
+            None => Err(EngineError::Degraded { active: 0, total }),
+        }
     }
 
     /// Fan the batch across the shards on scoped worker threads and
-    /// reassemble the outputs in request order.
+    /// reassemble the outputs in request order. With self-healing
+    /// enabled the fan-out covers only the active shards, scrubs run on
+    /// cadence before serving, and one quarantined shard repairs in the
+    /// background (see the [module docs](self)).
     fn infer_batch(&mut self, handle: ModelHandle, xs: &[Vec<i8>]) -> Result<Vec<Vec<i8>>> {
         if xs.is_empty() {
             // still validate the handle, like every other Backend method
@@ -136,6 +410,9 @@ impl<B: Backend> Backend for ShardedEngine<B> {
                     n_models: self.shards[0].n_models(),
                 }),
             };
+        }
+        if let Some(policy) = self.self_heal.clone() {
+            return self.infer_batch_self_healing(handle, xs, &policy);
         }
         let per_shard = xs.len().div_ceil(self.shards.len());
         let mut results: Vec<Result<Vec<Vec<i8>>>> = Vec::new();
@@ -178,5 +455,44 @@ impl<B: Backend> Backend for ShardedEngine<B> {
         for shard in &mut self.shards {
             shard.reset_stats();
         }
+    }
+
+    /// Scrub every shard (active or not), concatenating the per-shard
+    /// reports in shard order.
+    fn scrub(&mut self, policy: &ScrubPolicy) -> Result<Vec<HealthReport>> {
+        let mut out = Vec::new();
+        for shard in &mut self.shards {
+            out.extend(shard.scrub(policy)?);
+        }
+        Ok(out)
+    }
+
+    /// Repair every shard, concatenating the post-repair reports in
+    /// shard order.
+    fn repair(&mut self, policy: &ScrubPolicy) -> Result<Vec<HealthReport>> {
+        let mut out = Vec::new();
+        for shard in &mut self.shards {
+            out.extend(shard.repair(policy)?);
+        }
+        Ok(out)
+    }
+
+    /// True iff every shard passes its golden-weight probes.
+    fn verify_golden(&mut self, probes: usize, seed: u64) -> Result<bool> {
+        for shard in &mut self.shards {
+            if !shard.verify_golden(probes, seed)? {
+                return Ok(false);
+            }
+        }
+        Ok(true)
+    }
+
+    /// [`EngineError::Degraded`] while any shard is out of rotation.
+    fn health(&self) -> Result<()> {
+        let active = self.n_active();
+        if active < self.shards.len() {
+            return Err(EngineError::Degraded { active, total: self.shards.len() });
+        }
+        Ok(())
     }
 }

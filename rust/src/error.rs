@@ -81,6 +81,17 @@ pub enum EngineError {
         /// configured admission-queue capacity that was exceeded
         depth: usize,
     },
+    /// The fleet is serving in degraded mode: one or more shards are out
+    /// of rotation (quarantined for repair, or permanently failed).
+    /// With `active > 0` this is a *health observation*, not a request
+    /// failure — requests keep completing on the remaining shards; with
+    /// `active == 0` it is returned from `infer`/`infer_batch` itself.
+    Degraded {
+        /// shards currently in rotation
+        active: usize,
+        /// total shards in the fleet
+        total: usize,
+    },
     /// The request was submitted to (or was in flight on) a server that
     /// has shut down.
     ServerStopped,
@@ -124,6 +135,9 @@ impl fmt::Display for EngineError {
             EngineError::QueueFull { depth } => {
                 write!(f, "admission queue full (capacity {depth}) — retry later")
             }
+            EngineError::Degraded { active, total } => {
+                write!(f, "fleet degraded: {active}/{total} shards in rotation")
+            }
             EngineError::ServerStopped => write!(f, "inference server has shut down"),
             EngineError::Timeout { waited } => {
                 write!(f, "request not completed within {waited:?} (still in flight)")
@@ -149,6 +163,8 @@ mod tests {
         assert!(s.contains("mnist_mlp.fc1") && s.contains("40") && s.contains("8"));
         assert!(EngineError::InputSize { expected: 784, got: 10 }.to_string().contains("784"));
         assert!(EngineError::QueueFull { depth: 64 }.to_string().contains("64"));
+        let d = EngineError::Degraded { active: 3, total: 4 };
+        assert!(d.to_string().contains("3/4"), "{d}");
         assert!(EngineError::ServerStopped.to_string().contains("shut down"));
         let t = EngineError::Timeout { waited: std::time::Duration::from_secs(5) };
         assert!(t.to_string().contains("still in flight"), "{t}");

@@ -61,6 +61,18 @@
 //!                                          let ys = e.infer_batch(h, &batch)?;
 //! ```
 //!
+//! ## Reliability
+//!
+//! [`reliability`] closes the in-field loop the paper's retention claim
+//! implies: deterministic [`reliability::FaultPlan`]s perturb the EFLASH
+//! Vt state (drift, read noise, stuck lines, sense offsets), the margin
+//! scrubber classifies programmed regions with the extended verify
+//! ladders, and [`engine::ShardedEngine::enable_self_healing`]
+//! quarantines a failing shard, repairs it from retained golden weights,
+//! re-verifies it bit-exact, and readmits it while the fleet keeps
+//! serving ([`error::EngineError::Degraded`] reports the reduced
+//! capacity; [`metrics::ReliabilityStats`] counts the loop).
+//!
 //! `Chip::program_model`/`Chip::infer` still exist for device-level
 //! experiments (bake, Vt histograms, ablations) but are now fallible;
 //! serving code should go through [`engine::Engine`], a
@@ -82,6 +94,7 @@ pub mod error;
 pub mod metrics;
 pub mod models;
 pub mod nmcu;
+pub mod reliability;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod soc;

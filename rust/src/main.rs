@@ -21,6 +21,13 @@
 //!               launches) vs the direct chip backend: cycles/inference
 //!               and instructions-per-MVM-launch (--requests <n>,
 //!               --quick)
+//!   bench-reliability
+//!               self-healing soak: a sharded fleet serves rounds of
+//!               requests while a seeded fault plan damages one shard —
+//!               reports quarantine/repair/readmission counters and
+//!               asserts every served output stayed bit-exact
+//!               (--shards <n>, --requests <n>, --rounds <n>,
+//!               --severity <x>, --scrub-every <n>, --quick)
 //!   pump        charge pump transient only
 //!   retention   bake-time sweep of decode errors + accuracy
 //!   info        chip configuration summary
@@ -35,14 +42,14 @@ use nvmcu::config::ChipConfig;
 use nvmcu::coordinator::{experiments, Chip};
 use nvmcu::eflash::mapping::StateMapping;
 use nvmcu::engine::{
-    Backend, BackendKind, BatchPolicy, Engine, InferenceServer, McuBackend, NmcuBackend,
-    ReferenceBackend, ShardedEngine,
+    Backend, BackendKind, BatchPolicy, Engine, Fault, FaultPlan, InferenceServer, McuBackend,
+    NmcuBackend, QuarantinePolicy, ReferenceBackend, ShardedEngine,
 };
 use nvmcu::metrics;
 use nvmcu::metrics::ServerStats;
 use nvmcu::util::bench::Table;
 use nvmcu::util::cli::Args;
-use nvmcu::util::rng::Rng;
+use nvmcu::util::rng::{seed_from_env, Rng};
 use nvmcu::util::workload;
 use std::time::{Duration, Instant};
 
@@ -80,6 +87,7 @@ fn main() {
         "bench-serve" => cmd_bench_serve(&args),
         "bench-conv" => cmd_bench_conv(&args),
         "bench-mcu" => cmd_bench_mcu(&args),
+        "bench-reliability" => cmd_bench_reliability(&args),
         "pump" => cmd_pump(&args),
         "retention" => cmd_retention(&args),
         "info" => cmd_info(&args),
@@ -87,14 +95,16 @@ fn main() {
             println!(
                 "nvmcu — 28nm AI microcontroller with 4-bits/cell EFLASH (reproduction)\n\
                  usage: nvmcu <table1|table2|fig5|fig6|infer|serve|bench-serve|bench-conv\
-                 |bench-mcu|pump|retention|info> [options]\n\
+                 |bench-mcu|bench-reliability|pump|retention|info> [options]\n\
                  options: --config <json> --set k=v[,k=v] --artifacts <dir> --seed <n>\n\
                  infer:   --backend nmcu|mcu|reference|hlo --batch <n> --shards <n> --index <i>\n\
                  serve:   --backend --shards --requests <n> --rate <req/s> --max-batch <n>\n\
                  \x20        --max-wait-us <us> --queue-depth <n>\n\
                  bench-serve: --requests <n> --shards <n> --max-batch <n>\n\
                  bench-conv:  --requests <n> --shards <n> --quick\n\
-                 bench-mcu:   --requests <n> --quick"
+                 bench-mcu:   --requests <n> --quick\n\
+                 bench-reliability: --shards <n> --requests <n> --rounds <n> --severity <x>\n\
+                 \x20        --scrub-every <n> --quick"
             );
         }
     }
@@ -680,6 +690,100 @@ fn cmd_bench_mcu(args: &Args) {
         "\nNMCU cycles/inference match between the two rows by construction (same flow \
          control, same datapath); the firmware rows add only the RV32I control plane — \
          a handful of instructions per MVM launch, the paper's §2.2 claim."
+    );
+}
+
+/// Self-healing soak: a sharded fleet serves `rounds` request rounds
+/// while a seeded [`FaultPlan`] damages one shard mid-run. The fleet
+/// must quarantine the damaged shard, repair it from golden weights in
+/// the background, re-verify it bit-exact, and readmit it — and every
+/// output served along the way must equal the software reference
+/// (deterministic in --seed; the seed is printed for replay).
+///
+///   --shards <n>       fleet size (default 4; 2 with --quick)
+///   --requests <n>     requests per round (default 64; 16 with --quick)
+///   --rounds <n>       soak rounds (default 16; 6 with --quick)
+///   --severity <x>     drift severity multiplier (default 12)
+///   --scrub-every <n>  scrub cadence in batches (default 1)
+///   --quick            tiny shapes — the CI smoke configuration
+fn cmd_bench_reliability(args: &Args) {
+    let cfg = chip_config(args);
+    let quick = args.flag("quick");
+    let shards = args.opt_usize("shards", if quick { 2 } else { 4 }).max(2);
+    let n_req = args.opt_usize("requests", if quick { 16 } else { 64 }).max(1);
+    let rounds = args.opt_usize("rounds", if quick { 6 } else { 16 }).max(3);
+    let severity = args.opt_f64("severity", 12.0);
+    let scrub_every = args.opt_u64("scrub-every", 1).max(1);
+    let seed = args.opt_u64("seed", seed_from_env(cfg.seed));
+    let mut r = Rng::new(seed);
+    let model = if quick {
+        nvmcu::datasets::synthetic_qmodel(&mut r, "mlp-quick", 128, 16, 8)
+    } else {
+        synthetic_model(&mut r)
+    };
+    println!(
+        "bench-reliability: {shards}-shard fleet, {rounds} rounds x {n_req} requests, \
+         drift severity {severity} into shard 0 (seed {seed}; replay with --seed {seed})\n"
+    );
+
+    let mut sw = ReferenceBackend::new();
+    let hs = sw.program(&model).expect("reference program");
+    let mut fleet = ShardedEngine::new(&cfg, shards).expect("fleet");
+    let h = fleet.program(&model).expect("fleet program");
+    fleet.enable_self_healing(QuarantinePolicy {
+        scrub_every,
+        verify_seed: seed,
+        ..Default::default()
+    });
+
+    let fault_round = rounds / 3;
+    let mut exact = 0usize;
+    let mut total = 0usize;
+    let mut t = Table::new(&["round", "event", "active", "quarantined", "dead", "bit-exact"]);
+    for round in 0..rounds {
+        let mut event = "-";
+        if round == fault_round {
+            // localized accelerated charge loss over the first rows of
+            // shard 0's weight region — the recoverable fault class
+            FaultPlan::new(seed ^ 0xFA)
+                .with(Fault::Drift {
+                    first_row: 0,
+                    n_rows: 8,
+                    hours: 160.0,
+                    temp_c: 125.0,
+                    severity,
+                })
+                .inject(&mut fleet.shard_mut(0).chip_mut().eflash);
+            event = "fault injected (shard 0)";
+        }
+        let pool = workload::random_inputs(&mut r, n_req, model.input_len());
+        let want = sw.infer_batch(hs, &pool).expect("reference batch");
+        let got = fleet.infer_batch(h, &pool).expect("fleet batch");
+        let ok = got.iter().zip(&want).filter(|(g, w)| g == w).count();
+        exact += ok;
+        total += n_req;
+        t.row(&[
+            format!("{round}"),
+            event.into(),
+            format!("{}", fleet.n_active()),
+            format!("{:?}", fleet.quarantined()),
+            format!("{:?}", fleet.dead()),
+            format!("{ok}/{n_req}"),
+        ]);
+    }
+    t.print();
+    let rs = fleet.reliability_stats();
+    println!("\n{}", rs.summary());
+
+    // the acceptance properties the soak must uphold
+    assert_eq!(exact, total, "a served output diverged from the software reference");
+    assert!(rs.quarantines >= 1, "the damaged shard was never quarantined");
+    assert!(rs.readmissions >= 1, "the damaged shard was never repaired + readmitted");
+    assert_eq!(fleet.n_active(), shards, "fleet did not return to full strength");
+    println!(
+        "soak passed: {total}/{total} outputs bit-exact, detection latency \
+         {:.1} batches, fleet back to {shards}/{shards} shards",
+        rs.mean_detection_latency_batches
     );
 }
 

@@ -1,6 +1,7 @@
 //! Energy / latency / standby-power models, the Table 2 comparison
 //! framework, and the serving-side observability types
-//! ([`ServerStats`], [`ServingMeter`] — see [`serving`]).
+//! ([`ServerStats`], [`ServingMeter`] — see [`serving`];
+//! [`ReliabilityStats`] for the self-healing loop — see [`reliability`]).
 //!
 //! Absolute joules are 28 nm-LP *estimates* (constants in
 //! `config::PowerConfig`, sources documented there and in ARCHITECTURE.md);
@@ -10,8 +11,10 @@
 //! no extra process steps, and near-memory compute (no weight movement
 //! over the bus).
 
+pub mod reliability;
 pub mod serving;
 
+pub use reliability::{ReliabilityMeter, ReliabilityStats};
 pub use serving::{ServerStats, ServingMeter};
 
 use crate::config::{ChipConfig, PowerConfig};

@@ -1,0 +1,226 @@
+//! Reliability-side observability: what the scrubber found and what the
+//! self-healing loop did about it.
+//!
+//! [`ReliabilityMeter`] is the accumulator the fleet writes into
+//! (scrub sweeps, quarantines, repairs, readmissions, margin samples);
+//! [`ReliabilityStats`] is the immutable snapshot handed to callers —
+//! the third leg of the observability stool next to the device counters
+//! ([`crate::nmcu::NmcuStats`]) and the scheduler metrics
+//! ([`super::ServerStats`]).
+//!
+//! All counters saturate: a soak run must degrade its statistics before
+//! it degrades the process.
+
+use crate::reliability::{HealthReport, HealthStatus};
+use crate::util::stats::Histogram;
+
+/// Range and resolution of the retained margin histogram: worst-case
+/// region margins land in [0, 50) mV at 1 mV resolution (the ladder
+/// step is ~100 mV, so a healthy region's worst cell sits near 25 mV).
+const MARGIN_HIST_MAX_V: f64 = 0.050;
+const MARGIN_HIST_BINS: usize = 50;
+
+/// Accumulator for reliability events (see the [module docs](self)).
+#[derive(Clone, Debug)]
+pub struct ReliabilityMeter {
+    scrubs: u64,
+    regions_scrubbed: u64,
+    regions_marginal: u64,
+    regions_failed: u64,
+    quarantines: u64,
+    repairs_attempted: u64,
+    repairs_failed: u64,
+    readmissions: u64,
+    margin_hist: Histogram,
+    /// summed fault-detection latency [batches between the last clean
+    /// scrub of a shard and the scrub that flagged it]
+    detection_latency_sum: u64,
+    detections: u64,
+}
+
+impl Default for ReliabilityMeter {
+    fn default() -> ReliabilityMeter {
+        ReliabilityMeter::new()
+    }
+}
+
+impl ReliabilityMeter {
+    /// An empty meter.
+    pub fn new() -> ReliabilityMeter {
+        ReliabilityMeter {
+            scrubs: 0,
+            regions_scrubbed: 0,
+            regions_marginal: 0,
+            regions_failed: 0,
+            quarantines: 0,
+            repairs_attempted: 0,
+            repairs_failed: 0,
+            readmissions: 0,
+            margin_hist: Histogram::new(0.0, MARGIN_HIST_MAX_V, MARGIN_HIST_BINS),
+            detection_latency_sum: 0,
+            detections: 0,
+        }
+    }
+
+    /// Record one scrub sweep's reports (one call per swept chip).
+    pub fn note_scrub(&mut self, reports: &[HealthReport]) {
+        self.scrubs = self.scrubs.saturating_add(1);
+        for report in reports {
+            for region in &report.regions {
+                self.regions_scrubbed = self.regions_scrubbed.saturating_add(1);
+                match region.status {
+                    HealthStatus::Healthy => {}
+                    HealthStatus::Marginal => {
+                        self.regions_marginal = self.regions_marginal.saturating_add(1)
+                    }
+                    HealthStatus::Failed => {
+                        self.regions_failed = self.regions_failed.saturating_add(1)
+                    }
+                }
+                if region.min_margin_v.is_finite() {
+                    self.margin_hist.add(region.min_margin_v);
+                }
+            }
+        }
+    }
+
+    /// Record one shard quarantine, with the fault-detection latency in
+    /// served batches (batches between the shard's last clean scrub and
+    /// the scrub that flagged it — bounded by the scrub cadence).
+    pub fn note_quarantine(&mut self, detection_latency_batches: u64) {
+        self.quarantines = self.quarantines.saturating_add(1);
+        self.detection_latency_sum =
+            self.detection_latency_sum.saturating_add(detection_latency_batches);
+        self.detections = self.detections.saturating_add(1);
+    }
+
+    /// Record one repair attempt and whether it brought the shard back
+    /// to a verifiably healthy state.
+    pub fn note_repair(&mut self, ok: bool) {
+        self.repairs_attempted = self.repairs_attempted.saturating_add(1);
+        if !ok {
+            self.repairs_failed = self.repairs_failed.saturating_add(1);
+        }
+    }
+
+    /// Record one shard readmission (repair + bit-exact verify passed).
+    pub fn note_readmission(&mut self) {
+        self.readmissions = self.readmissions.saturating_add(1);
+    }
+
+    /// Freeze a snapshot.
+    pub fn snapshot(&self) -> ReliabilityStats {
+        ReliabilityStats {
+            scrubs: self.scrubs,
+            regions_scrubbed: self.regions_scrubbed,
+            regions_marginal: self.regions_marginal,
+            regions_failed: self.regions_failed,
+            quarantines: self.quarantines,
+            repairs_attempted: self.repairs_attempted,
+            repairs_failed: self.repairs_failed,
+            readmissions: self.readmissions,
+            margin_hist: self.margin_hist.clone(),
+            mean_detection_latency_batches: if self.detections == 0 {
+                f64::NAN
+            } else {
+                self.detection_latency_sum as f64 / self.detections as f64
+            },
+        }
+    }
+}
+
+/// Point-in-time reliability snapshot of a self-healing fleet.
+#[derive(Clone, Debug)]
+pub struct ReliabilityStats {
+    /// scrub sweeps performed
+    pub scrubs: u64,
+    /// regions examined across all sweeps
+    pub regions_scrubbed: u64,
+    /// region verdicts that came back Marginal
+    pub regions_marginal: u64,
+    /// region verdicts that came back Failed
+    pub regions_failed: u64,
+    /// shards pulled from rotation
+    pub quarantines: u64,
+    /// repair attempts (reprogram + rescrub) across all shards
+    pub repairs_attempted: u64,
+    /// repair attempts that did not restore health
+    pub repairs_failed: u64,
+    /// shards repaired, re-verified bit-exact, and returned to rotation
+    pub readmissions: u64,
+    /// histogram of per-region worst-case margins [V] over all scrubs
+    pub margin_hist: Histogram,
+    /// mean batches between a shard's last clean scrub and the scrub
+    /// that flagged it (`NaN` until the first detection)
+    pub mean_detection_latency_batches: f64,
+}
+
+impl ReliabilityStats {
+    /// One-line human summary (the CLI soak mode prints this).
+    pub fn summary(&self) -> String {
+        format!(
+            "scrubs {} ({} regions: {} marginal, {} failed) | \
+             quarantines {} | repairs {} ({} failed) | readmissions {} | \
+             detection latency {:.1} batches",
+            self.scrubs,
+            self.regions_scrubbed,
+            self.regions_marginal,
+            self.regions_failed,
+            self.quarantines,
+            self.repairs_attempted,
+            self.repairs_failed,
+            self.readmissions,
+            self.mean_detection_latency_batches,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eflash::DecodeErrors;
+    use crate::reliability::RegionHealth;
+
+    fn report(status: HealthStatus, margin: f64) -> HealthReport {
+        HealthReport {
+            model: "m".into(),
+            regions: vec![RegionHealth {
+                region_index: 0,
+                status,
+                errors: DecodeErrors::default(),
+                min_margin_v: margin,
+            }],
+        }
+    }
+
+    #[test]
+    fn meter_counts_and_summary() {
+        let mut m = ReliabilityMeter::new();
+        m.note_scrub(&[report(HealthStatus::Healthy, 0.025)]);
+        m.note_scrub(&[report(HealthStatus::Failed, 0.001)]);
+        m.note_quarantine(4);
+        m.note_repair(false);
+        m.note_repair(true);
+        m.note_readmission();
+        let s = m.snapshot();
+        assert_eq!(s.scrubs, 2);
+        assert_eq!(s.regions_scrubbed, 2);
+        assert_eq!(s.regions_failed, 1);
+        assert_eq!(s.quarantines, 1);
+        assert_eq!(s.repairs_attempted, 2);
+        assert_eq!(s.repairs_failed, 1);
+        assert_eq!(s.readmissions, 1);
+        assert!((s.mean_detection_latency_batches - 4.0).abs() < 1e-12);
+        assert_eq!(s.margin_hist.total(), 2);
+        let line = s.summary();
+        assert!(line.contains("quarantines 1") && line.contains("readmissions 1"), "{line}");
+    }
+
+    #[test]
+    fn empty_meter_is_sane() {
+        let s = ReliabilityMeter::new().snapshot();
+        assert_eq!(s.scrubs, 0);
+        assert!(s.mean_detection_latency_batches.is_nan());
+        assert!(s.summary().contains("scrubs 0"));
+    }
+}

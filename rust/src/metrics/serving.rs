@@ -56,6 +56,9 @@ pub struct ServingMeter {
     failed: u64,
     /// total requests completed (ok or err)
     completed: u64,
+    /// batches served while the fleet reported
+    /// [`crate::error::EngineError::Degraded`] health
+    degraded: u64,
 }
 
 impl ServingMeter {
@@ -69,6 +72,7 @@ impl ServingMeter {
             cursor: 0,
             failed: 0,
             completed: 0,
+            degraded: 0,
         }
     }
 
@@ -77,7 +81,8 @@ impl ServingMeter {
     /// the scheduler never forms one).
     pub fn record_batch(&mut self, size: usize) {
         let top = self.batch_hist.len() - 1;
-        self.batch_hist[size.min(top)] += 1;
+        let bucket = &mut self.batch_hist[size.min(top)];
+        *bucket = bucket.saturating_add(1);
     }
 
     /// Record one completed request: queue-entry to completion latency,
@@ -85,14 +90,21 @@ impl ServingMeter {
     pub fn record_completion(&mut self, latency_ms: f64, ok: bool) {
         self.record_latency_ms(latency_ms);
         if !ok {
-            self.failed += 1;
+            self.failed = self.failed.saturating_add(1);
         }
+    }
+
+    /// Record one batch served while the backend reported degraded
+    /// health (shards out of rotation — see
+    /// [`crate::error::EngineError::Degraded`]).
+    pub fn note_degraded(&mut self) {
+        self.degraded = self.degraded.saturating_add(1);
     }
 
     /// Record one request latency [ms] (ring buffer of the most recent
     /// [`LATENCY_WINDOW`] samples).
     pub fn record_latency_ms(&mut self, ms: f64) {
-        self.completed += 1;
+        self.completed = self.completed.saturating_add(1);
         if self.latencies_ms.len() < LATENCY_WINDOW {
             self.latencies_ms.push(ms);
         } else {
@@ -113,6 +125,7 @@ impl ServingMeter {
             rejected,
             completed: self.completed,
             failed: self.failed,
+            degraded: self.degraded,
             batches: self.batch_hist.iter().sum(),
             queue_depth,
             batch_hist: self.batch_hist.clone(),
@@ -137,6 +150,9 @@ pub struct ServerStats {
     pub completed: u64,
     /// completed requests whose result was a typed error
     pub failed: u64,
+    /// batches served while the fleet reported degraded health
+    /// (shards quarantined or dead — the server kept going)
+    pub degraded: u64,
     /// micro-batches dispatched to the backend
     pub batches: u64,
     /// requests waiting right now: admitted (bounded queue + per-model
@@ -174,7 +190,7 @@ impl ServerStats {
     pub fn summary(&self) -> String {
         format!(
             "submitted {} | rejected {} | completed {} ({} failed) | \
-             {} batches (mean {:.1}, max {}) | queue {} | \
+             {} batches (mean {:.1}, max {}, {} degraded) | queue {} | \
              latency p50 {:.2} ms p95 {:.2} ms p99 {:.2} ms",
             self.submitted,
             self.rejected,
@@ -183,6 +199,7 @@ impl ServerStats {
             self.batches,
             self.mean_batch(),
             self.max_batch_seen(),
+            self.degraded,
             self.queue_depth,
             self.p50_ms,
             self.p95_ms,
@@ -268,9 +285,12 @@ mod tests {
         let mut m = ServingMeter::new(2);
         m.record_completion(5.0, false);
         m.record_completion(5.0, true);
+        m.note_degraded();
         let s = m.snapshot(2, 1, 0);
         assert_eq!(s.failed, 1);
         assert_eq!(s.completed, 2);
         assert_eq!(s.rejected, 1);
+        assert_eq!(s.degraded, 1);
+        assert!(s.summary().contains("1 degraded"), "{}", s.summary());
     }
 }

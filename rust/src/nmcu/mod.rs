@@ -295,13 +295,15 @@ pub struct NmcuStats {
 
 impl NmcuStats {
     /// Accumulate another counter set into this one (shard merging).
+    /// Saturating, like every stats counter in the crate: a soak run
+    /// must never panic or wrap because its counters grew too large.
     pub fn add(&mut self, o: &NmcuStats) {
-        self.eflash_reads += o.eflash_reads;
-        self.mac_ops += o.mac_ops;
-        self.writebacks += o.writebacks;
-        self.cycles += o.cycles;
-        self.bus_bytes += o.bus_bytes;
-        self.layers_run += o.layers_run;
+        self.eflash_reads = self.eflash_reads.saturating_add(o.eflash_reads);
+        self.mac_ops = self.mac_ops.saturating_add(o.mac_ops);
+        self.writebacks = self.writebacks.saturating_add(o.writebacks);
+        self.cycles = self.cycles.saturating_add(o.cycles);
+        self.bus_bytes = self.bus_bytes.saturating_add(o.bus_bytes);
+        self.layers_run = self.layers_run.saturating_add(o.layers_run);
     }
 }
 
@@ -348,7 +350,7 @@ impl Nmcu {
         // pad lanes past the logical end contribute x=0 ("real" zero is
         // handled by the folded bias, padded EFLASH cells see x=0)
         self.fetcher.load_input(x_q, 0);
-        self.stats.bus_bytes += x_q.len() as u64;
+        self.stats.bus_bytes = self.stats.bus_bytes.saturating_add(x_q.len() as u64);
         Ok(())
     }
 
@@ -392,7 +394,7 @@ impl Nmcu {
         // subsequent layers read from the ping-pong buffer
         self.fetcher.source = FetchSource::PingPong;
         self.fetcher.pad = 0;
-        self.stats.layers_run += 1;
+        self.stats.layers_run = self.stats.layers_run.saturating_add(1);
         Ok(out)
     }
 
@@ -472,16 +474,17 @@ impl Nmcu {
                         &self.row_buf
                     }
                 };
-                self.stats.eflash_reads += 1;
-                self.stats.cycles += self.cfg.read_latency_cycles;
+                self.stats.eflash_reads = self.stats.eflash_reads.saturating_add(1);
+                self.stats.cycles =
+                    self.stats.cycles.saturating_add(self.cfg.read_latency_cycles);
                 // PE0: even column, PE1: odd column — same input slice
                 acc0 = self.pes[0].accumulate(acc0, &self.x_buf, &row_data[..lanes]);
-                self.stats.mac_ops += lanes as u64;
+                self.stats.mac_ops = self.stats.mac_ops.saturating_add(lanes as u64);
                 if 2 * p + 1 < desc.n {
                     acc1 = self.pes[1].accumulate(acc1, &self.x_buf, &row_data[lanes..]);
-                    self.stats.mac_ops += lanes as u64;
+                    self.stats.mac_ops = self.stats.mac_ops.saturating_add(lanes as u64);
                 }
-                self.stats.cycles += self.cfg.mac_cycles;
+                self.stats.cycles = self.stats.cycles.saturating_add(self.cfg.mac_cycles);
             }
             // requantize + write back
             let mut q0 = requantize(acc0, desc.requant);
@@ -489,16 +492,17 @@ impl Nmcu {
                 q0 = quant::relu_q(q0, desc.requant.z_out);
             }
             out[2 * p] = q0;
-            self.stats.writebacks += 1;
-            self.stats.cycles += self.cfg.writeback_cycles;
+            self.stats.writebacks = self.stats.writebacks.saturating_add(1);
+            self.stats.cycles = self.stats.cycles.saturating_add(self.cfg.writeback_cycles);
             if 2 * p + 1 < desc.n {
                 let mut q1 = requantize(acc1, desc.requant);
                 if desc.relu {
                     q1 = quant::relu_q(q1, desc.requant.z_out);
                 }
                 out[2 * p + 1] = q1;
-                self.stats.writebacks += 1;
-                self.stats.cycles += self.cfg.writeback_cycles;
+                self.stats.writebacks = self.stats.writebacks.saturating_add(1);
+                self.stats.cycles =
+                    self.stats.cycles.saturating_add(self.cfg.writeback_cycles);
             }
         }
     }
@@ -600,7 +604,7 @@ impl Nmcu {
         if out.len() <= self.fetcher.input.len() {
             self.fetcher.load_input(&out, 0);
         }
-        self.stats.layers_run += 1;
+        self.stats.layers_run = self.stats.layers_run.saturating_add(1);
         Ok(out)
     }
 
@@ -640,10 +644,12 @@ impl Nmcu {
             self.pingpong.note_read(x.len());
         }
         let out = maxpool2d(x, pd.in_shape, pd.kh, pd.kw, pd.stride);
-        self.stats.writebacks += out.len() as u64;
-        self.stats.cycles += out.len() as u64 * (pd.kh * pd.kw) as u64
-            + out.len() as u64 * self.cfg.writeback_cycles;
-        self.stats.layers_run += 1;
+        self.stats.writebacks = self.stats.writebacks.saturating_add(out.len() as u64);
+        self.stats.cycles = self.stats.cycles.saturating_add(
+            out.len() as u64 * (pd.kh * pd.kw) as u64
+                + out.len() as u64 * self.cfg.writeback_cycles,
+        );
+        self.stats.layers_run = self.stats.layers_run.saturating_add(1);
         // stage for a following dense head, like execute_conv
         if out.len() <= self.fetcher.input.len() {
             self.fetcher.load_input(&out, 0);
@@ -653,7 +659,7 @@ impl Nmcu {
 
     /// Read the final result back over the bus (counted).
     pub fn read_output(&mut self, n: usize) -> Vec<i8> {
-        self.stats.bus_bytes += n as u64;
+        self.stats.bus_bytes = self.stats.bus_bytes.saturating_add(n as u64);
         self.pingpong.read_side()[..n].to_vec()
     }
 

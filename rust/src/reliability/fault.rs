@@ -1,0 +1,353 @@
+//! Deterministic in-field fault injection for the EFLASH weight memory.
+//!
+//! A [`FaultPlan`] is a seedable list of physical fault mechanisms that
+//! perturbs a macro's state *in place*, through the same hooks the
+//! device model itself uses — so an injected fault is indistinguishable
+//! from a real one to everything downstream (decode cache, scrubber,
+//! serving stack). Every mechanism maps to a failure mode the paper's
+//! reliability story has to survive:
+//!
+//! - [`Fault::Drift`] — localized accelerated charge loss, reusing the
+//!   stretched-exponential retention model ([`crate::eflash::retention`])
+//!   with a severity multiplier and per-cell lognormal jitter. This is
+//!   the *recoverable* class: erase + reprogram restores the region.
+//! - [`Fault::ReadNoise`] — a degraded sense-amp chain (higher
+//!   `read_noise_sigma` on every subsequent sense pass).
+//! - [`Fault::StuckRow`] / [`Fault::StuckBitLine`] — shorted word lines
+//!   / bit lines pin whole rows or one lane of a bank at a fixed Vt.
+//!   *Unrecoverable*: pinned cells ignore erase and program, so repair
+//!   fails program-verify exactly like a genuinely broken die.
+//! - [`Fault::SenseOffset`] — a bank-wide sense-amp offset, modelled as
+//!   a uniform input-referred Vt shift.
+//! - [`Fault::Bake`] — whole-array thermal aging (the time-accelerated
+//!   component of a soak plan).
+//!
+//! Same seed, same plan, same macro state → bit-identical fault
+//! pattern, so any soak failure replays from its printed seed.
+
+use crate::eflash::retention;
+use crate::eflash::EflashMacro;
+use crate::util::rng::Rng;
+
+/// One physical fault mechanism (see the [module docs](self)).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Fault {
+    /// Localized accelerated retention loss over `n_rows` rows starting
+    /// at `first_row`: each cell loses `severity ×` the nominal
+    /// stretched-exponential charge loss of `hours` at `temp_c`
+    /// (Arrhenius-scaled), jittered per cell. Recoverable by repair.
+    Drift {
+        /// first flat row affected
+        first_row: usize,
+        /// consecutive rows affected
+        n_rows: usize,
+        /// equivalent unpowered-bake duration [h]
+        hours: f64,
+        /// equivalent bake temperature [°C]
+        temp_c: f64,
+        /// loss multiplier on top of the nominal retention model
+        /// (`1.0` = exactly the tau model; ~10 produces multi-state
+        /// decode errors a scrub must flag)
+        severity: f64,
+    },
+    /// Degraded sense amplifiers: every subsequent sense pass draws
+    /// read noise with this sigma [V] instead of the fabricated one.
+    ReadNoise {
+        /// new read-noise sigma [V]
+        sigma: f64,
+    },
+    /// A stuck word line: every cell of the flat row pins at `vt`.
+    StuckRow {
+        /// flat row index
+        flat_row: usize,
+        /// stuck threshold voltage [V]
+        vt: f32,
+    },
+    /// A stuck bit line: cell `lane` of every row in `bank` pins at `vt`.
+    StuckBitLine {
+        /// bank index
+        bank: usize,
+        /// lane (cell offset within the row, `0..cells_per_read`)
+        lane: usize,
+        /// stuck threshold voltage [V]
+        vt: f32,
+    },
+    /// A bank-wide sense-amp offset, input-referred: every cell of the
+    /// bank shifts by `delta` volts as seen by the ladders.
+    SenseOffset {
+        /// bank index
+        bank: usize,
+        /// input-referred offset [V] (negative = reads low)
+        delta: f64,
+    },
+    /// Whole-array unpowered bake (time-accelerated aging as part of a
+    /// plan, same model as [`EflashMacro::bake`]).
+    Bake {
+        /// bake duration [h]
+        hours: f64,
+        /// bake temperature [°C]
+        temp_c: f64,
+    },
+}
+
+/// Per-cell lognormal jitter sigma of [`Fault::Drift`] (on top of the
+/// fabricated retention factors) — keeps injected drift from being an
+/// implausibly uniform shift.
+const DRIFT_JITTER_SIGMA: f64 = 0.25;
+
+/// A deterministic, seedable fault-injection plan.
+///
+/// ```
+/// use nvmcu::config::ChipConfig;
+/// use nvmcu::eflash::EflashMacro;
+/// use nvmcu::reliability::{Fault, FaultPlan};
+///
+/// let cfg = ChipConfig { eflash: nvmcu::config::EflashConfig {
+///     capacity_bits: 256 * 1024, ..Default::default() }, ..ChipConfig::new() };
+/// let codes: Vec<i8> = (0..2000).map(|i| ((i % 16) as i8) - 8).collect();
+///
+/// let run = |seed| {
+///     let mut mac = EflashMacro::new(&cfg);
+///     let (region, _) = mac.program_region(&codes).unwrap();
+///     FaultPlan::new(seed)
+///         .with(Fault::Drift { first_row: region.first_row, n_rows: 4,
+///                              hours: 160.0, temp_c: 125.0, severity: 8.0 })
+///         .inject(&mut mac);
+///     mac.decode_errors(&region, &codes).exact
+/// };
+/// assert_eq!(run(7), run(7)); // same seed, same damage
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// seed of the plan's private RNG stream (drift jitter)
+    pub seed: u64,
+    /// the faults, applied in order
+    pub faults: Vec<Fault>,
+}
+
+impl FaultPlan {
+    /// An empty plan with the given seed.
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan { seed, faults: Vec::new() }
+    }
+
+    /// Append one fault (builder style).
+    pub fn with(mut self, fault: Fault) -> FaultPlan {
+        self.faults.push(fault);
+        self
+    }
+
+    /// Does the plan inject anything at all?
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// Apply every fault to `mac` in order, then invalidate its decode
+    /// cache so the damage is visible through the next read. Uses a
+    /// private RNG stream seeded from `self.seed` — the macro's own RNG
+    /// is never touched, so a plan that injects nothing leaves the
+    /// macro's future behaviour bit-identical.
+    pub fn inject(&self, mac: &mut EflashMacro) {
+        if self.is_empty() {
+            return;
+        }
+        let mut rng = Rng::new(self.seed);
+        for fault in &self.faults {
+            apply(fault, mac, &mut rng);
+        }
+        mac.invalidate_cache();
+    }
+}
+
+fn apply(fault: &Fault, mac: &mut EflashMacro, rng: &mut Rng) {
+    let cpr = mac.cells_per_read();
+    match *fault {
+        Fault::Drift { first_row, n_rows, hours, temp_c, severity } => {
+            let base_loss = retention::loss_fraction(&mac.cfg.retention, hours, temp_c);
+            let vt_erased = mac.array.cfg.vt_erased_mean;
+            let last = (first_row + n_rows) * cpr;
+            for cell in (first_row * cpr)..last.min(mac.array.n_cells()) {
+                let jitter = rng.lognormal(0.0, DRIFT_JITTER_SIGMA);
+                let charge = mac.array.vt(cell) as f64 - vt_erased;
+                if charge <= 0.0 {
+                    continue;
+                }
+                let loss = charge
+                    * base_loss
+                    * mac.array.retention_factor(cell) as f64
+                    * severity
+                    * jitter;
+                mac.array.shift_vt(cell, -loss.min(charge));
+            }
+        }
+        Fault::ReadNoise { sigma } => {
+            mac.cfg.eflash.read_noise_sigma = sigma;
+        }
+        Fault::StuckRow { flat_row, vt } => {
+            let addr = mac.array.row_addr(flat_row);
+            let base = mac.array.row_base(addr);
+            for i in 0..cpr {
+                mac.array.pin_vt(base + i, vt);
+            }
+        }
+        Fault::StuckBitLine { bank, lane, vt } => {
+            for row in 0..mac.array.rows_per_bank() {
+                let base = mac
+                    .array
+                    .row_base(crate::eflash::array::RowAddr { bank, row });
+                mac.array.pin_vt(base + lane, vt);
+            }
+        }
+        Fault::SenseOffset { bank, delta } => {
+            let rpb = mac.array.rows_per_bank();
+            for row in 0..rpb {
+                let base = mac
+                    .array
+                    .row_base(crate::eflash::array::RowAddr { bank, row });
+                for i in 0..cpr {
+                    mac.array.shift_vt(base + i, delta);
+                }
+            }
+        }
+        Fault::Bake { hours, temp_c } => {
+            mac.bake(hours, temp_c);
+        }
+    }
+}
+
+/// Time-accelerated soak driver: bake the macro in `steps` equal slices
+/// totalling `hours` at `temp_c`, invoking `observe` after each slice
+/// with the cumulative baked hours. Soak loops interleave scrubs with
+/// the slices to measure fault-detection latency against aging instead
+/// of one opaque end-state.
+pub fn bake_soak(
+    mac: &mut EflashMacro,
+    hours: f64,
+    temp_c: f64,
+    steps: usize,
+    mut observe: impl FnMut(&mut EflashMacro, f64),
+) {
+    let steps = steps.max(1);
+    let slice = hours / steps as f64;
+    for k in 1..=steps {
+        mac.bake(slice, temp_c);
+        observe(mac, slice * k as f64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ChipConfig, EflashConfig};
+
+    fn chip() -> ChipConfig {
+        ChipConfig {
+            eflash: EflashConfig { capacity_bits: 256 * 1024, ..Default::default() },
+            ..ChipConfig::new()
+        }
+    }
+
+    fn programmed() -> (EflashMacro, crate::eflash::Region, Vec<i8>) {
+        let mut mac = EflashMacro::new(&chip());
+        let codes: Vec<i8> = (0..4000).map(|i| ((i * 3 % 16) as i8) - 8).collect();
+        let (region, rep) = mac.program_region(&codes).unwrap();
+        assert_eq!(rep.failed_cells, 0);
+        (mac, region, codes)
+    }
+
+    #[test]
+    fn empty_plan_changes_nothing() {
+        let (mut mac, region, codes) = programmed();
+        FaultPlan::new(1).inject(&mut mac);
+        let e = mac.decode_errors(&region, &codes);
+        assert_eq!(e.exact, codes.len() as u64);
+    }
+
+    #[test]
+    fn drift_is_localized_and_deterministic() {
+        let damage = |seed| {
+            let (mut mac, region, codes) = programmed();
+            FaultPlan::new(seed)
+                .with(Fault::Drift {
+                    first_row: region.first_row,
+                    n_rows: 4,
+                    hours: 160.0,
+                    temp_c: 125.0,
+                    severity: 10.0,
+                })
+                .inject(&mut mac);
+            let e = mac.decode_errors(&region, &codes);
+            // rows past the drifted span must be untouched: check the
+            // tail cells decode exactly
+            let cpr = mac.cells_per_read();
+            let tail = &codes[4 * cpr..];
+            let tail_errs = {
+                let mut buf = vec![0i8; cpr];
+                let mut errs = 0;
+                for (i, &want) in tail.iter().enumerate() {
+                    if i % cpr == 0 {
+                        mac.read_row(region.first_row + 4 + i / cpr, &mut buf);
+                    }
+                    if buf[i % cpr] != want {
+                        errs += 1;
+                    }
+                }
+                errs
+            };
+            assert_eq!(tail_errs, 0, "drift leaked past its rows");
+            (e.exact, e.off_by_one, e.worse)
+        };
+        let a = damage(9);
+        assert_eq!(a, damage(9), "same seed must reproduce the damage");
+        assert!(a.2 > 0, "severity 10 should cause multi-LSB errors: {a:?}");
+    }
+
+    #[test]
+    fn stuck_row_survives_reprogram() {
+        let (mut mac, region, codes) = programmed();
+        FaultPlan::new(3)
+            .with(Fault::StuckRow { flat_row: region.first_row, vt: 0.9 })
+            .inject(&mut mac);
+        let rep = mac.reprogram_region(&region, &codes);
+        assert!(rep.failed_cells > 0, "stuck row must fail program-verify");
+    }
+
+    #[test]
+    fn stuck_bit_line_pins_one_lane_per_row() {
+        let (mut mac, _region, _codes) = programmed();
+        let before = mac.array.n_pinned();
+        FaultPlan::new(4)
+            .with(Fault::StuckBitLine { bank: 0, lane: 17, vt: 2.4 })
+            .inject(&mut mac);
+        assert_eq!(mac.array.n_pinned() - before, mac.array.rows_per_bank());
+    }
+
+    #[test]
+    fn read_noise_fault_degrades_future_senses() {
+        let (mut mac, region, codes) = programmed();
+        FaultPlan::new(5).with(Fault::ReadNoise { sigma: 0.08 }).inject(&mut mac);
+        let e = mac.decode_errors(&region, &codes);
+        assert!(
+            e.exact < codes.len() as u64,
+            "80 mV read noise should flip marginal cells: {e:?}"
+        );
+    }
+
+    #[test]
+    fn sense_offset_shifts_decodes_one_way() {
+        let (mut mac, region, codes) = programmed();
+        // a full negative ladder step: programmed states read one state low
+        let step = mac.ladders.step();
+        FaultPlan::new(6).with(Fault::SenseOffset { bank: 0, delta: -step }).inject(&mut mac);
+        let e = mac.decode_errors(&region, &codes);
+        assert!(e.off_by_one + e.worse > codes.len() as u64 / 2, "{e:?}");
+    }
+
+    #[test]
+    fn bake_soak_observes_each_slice() {
+        let (mut mac, _region, _codes) = programmed();
+        let mut seen = Vec::new();
+        bake_soak(&mut mac, 160.0, 125.0, 4, |_, h| seen.push(h));
+        assert_eq!(seen, vec![40.0, 80.0, 120.0, 160.0]);
+    }
+}

@@ -1,0 +1,33 @@
+//! In-field reliability: fault injection, margin health monitoring, and
+//! the policies behind self-healing sharded serving.
+//!
+//! The paper's central claim is not speed but *reliability* — 16-state
+//! margins held by extended verify levels, accuracy retained after a
+//! 160 h unpowered 125 °C bake. This subsystem closes the loop from
+//! cell-level faults to fleet-level recovery:
+//!
+//! 1. **Inject** ([`fault`]): a deterministic, seedable [`FaultPlan`]
+//!    perturbs a macro's Vt state in place — accelerated drift (reusing
+//!    the retention tau model), read noise, stuck word/bit lines,
+//!    sense-amp offsets — plus a time-accelerated [`bake_soak`] driver.
+//! 2. **Detect** ([`scrub`]): the margin scrubber sweeps programmed
+//!    regions with the extended verify ladders and classifies each
+//!    [`HealthStatus::Healthy`] / [`HealthStatus::Marginal`] /
+//!    [`HealthStatus::Failed`], rolled up into per-chip
+//!    [`HealthReport`]s.
+//! 3. **Heal** (`engine`): [`crate::coordinator::Chip::scrub`] and
+//!    [`crate::coordinator::Chip::reprogram_region`] repair a chip from
+//!    its retained golden weights, and
+//!    [`crate::engine::ShardedEngine::enable_self_healing`] quarantines
+//!    a failing shard, repairs it in the background, re-verifies it
+//!    bit-exact, and readmits it — while the fleet keeps serving with
+//!    typed [`crate::error::EngineError::Degraded`] visibility.
+//!
+//! Observability for all three stages lives in
+//! [`crate::metrics::reliability`].
+
+pub mod fault;
+pub mod scrub;
+
+pub use fault::{bake_soak, Fault, FaultPlan};
+pub use scrub::{scrub_region, HealthReport, HealthStatus, RegionHealth, ScrubPolicy};

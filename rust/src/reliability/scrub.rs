@@ -1,0 +1,261 @@
+//! The margin scrubber: in-field health monitoring of programmed EFLASH
+//! regions.
+//!
+//! A scrub sweeps a region with the extended verify ladders
+//! ([`crate::eflash::levels::Ladders`]): it compares what the sense
+//! chain decodes against the row image that was programmed
+//! ([`crate::eflash::EflashMacro::decode_errors`]) and measures every
+//! cell's Vt distance to its nearest read-reference boundary — the same
+//! margin the paper's "carefully determined 15 verify read reference
+//! levels" exist to protect. Each region classifies as:
+//!
+//! - [`HealthStatus::Healthy`] — every cell decodes exactly and clears
+//!   the policy's margin floor;
+//! - [`HealthStatus::Marginal`] — still below the failure thresholds,
+//!   but cells have started decoding wrong or sit too close to a
+//!   boundary (the "schedule a repair soon" state);
+//! - [`HealthStatus::Failed`] — multi-LSB errors or a raw error rate
+//!   past the policy threshold: the region's weights are corrupt and
+//!   the chip must leave rotation.
+//!
+//! Scrubbing reads through the macro's normal read path. In the default
+//! `Cached` read mode a scrub consumes no RNG and touches no
+//! [`crate::nmcu::NmcuStats`] counter (only the array's lifetime read
+//! count), so a fleet that scrubs but finds nothing serves bit- and
+//! stats-identically to one that never scrubbed.
+
+use crate::eflash::levels::Ladders;
+use crate::eflash::{DecodeErrors, EflashMacro, Region};
+
+/// Thresholds that turn raw scrub measurements into a
+/// [`HealthStatus`]. The defaults are conservative: any decode error
+/// makes a region at least Marginal, and a handful of multi-LSB errors
+/// fails it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ScrubPolicy {
+    /// minimum Vt distance [V] from any in-use cell to its nearest
+    /// read-reference boundary before the region counts as Marginal
+    pub margin_floor_v: f64,
+    /// fraction of cells decoding wrong (any magnitude) at which the
+    /// region counts as Failed. The default tolerates the ±1-LSB drift
+    /// a nominal 160 h bake causes (the adjacent-unit mapping absorbs
+    /// it — the paper's accuracy-retention claim), so ordinary aging
+    /// reads Marginal, not Failed.
+    pub failed_error_rate: f64,
+    /// fraction of cells off by two or more LSB at which the region
+    /// counts as Failed (multi-state errors defeat the adjacent-unit
+    /// mapping's graceful degradation, so the tolerance is small)
+    pub failed_worse_rate: f64,
+}
+
+impl Default for ScrubPolicy {
+    fn default() -> ScrubPolicy {
+        ScrubPolicy {
+            margin_floor_v: 0.015,
+            failed_error_rate: 0.25,
+            failed_worse_rate: 0.01,
+        }
+    }
+}
+
+/// Scrub verdict for one region (ordered: worse verdicts compare
+/// greater).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum HealthStatus {
+    /// exact decode everywhere, margins above the floor
+    Healthy,
+    /// decode errors or thin margins, below the failure thresholds
+    Marginal,
+    /// corrupt weights: pull the chip from rotation and repair
+    Failed,
+}
+
+impl std::fmt::Display for HealthStatus {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            HealthStatus::Healthy => "healthy",
+            HealthStatus::Marginal => "marginal",
+            HealthStatus::Failed => "FAILED",
+        })
+    }
+}
+
+/// Scrub result of one programmed region.
+#[derive(Clone, Debug)]
+pub struct RegionHealth {
+    /// index of the region in its model's programmed-region list
+    pub region_index: usize,
+    /// the verdict under the scrub policy
+    pub status: HealthStatus,
+    /// raw decode-vs-image error tally
+    pub errors: DecodeErrors,
+    /// worst-case Vt distance of any in-use cell to a read boundary [V]
+    pub min_margin_v: f64,
+}
+
+/// Per-chip scrub report: one [`RegionHealth`] per programmed region of
+/// one resident model.
+#[derive(Clone, Debug)]
+pub struct HealthReport {
+    /// name of the scrubbed model
+    pub model: String,
+    /// per-region verdicts, in region order
+    pub regions: Vec<RegionHealth>,
+}
+
+impl HealthReport {
+    /// The worst verdict across the report ([`HealthStatus::Healthy`]
+    /// for an empty report).
+    pub fn worst(&self) -> HealthStatus {
+        self.regions.iter().map(|r| r.status).max().unwrap_or(HealthStatus::Healthy)
+    }
+
+    /// Is every region healthy?
+    pub fn is_healthy(&self) -> bool {
+        self.worst() == HealthStatus::Healthy
+    }
+
+    /// Number of regions classified Failed.
+    pub fn n_failed(&self) -> usize {
+        self.regions.iter().filter(|r| r.status == HealthStatus::Failed).count()
+    }
+
+    /// Number of regions classified Marginal.
+    pub fn n_marginal(&self) -> usize {
+        self.regions.iter().filter(|r| r.status == HealthStatus::Marginal).count()
+    }
+
+    /// One-line human summary (`model: 3 regions, 1 marginal, 0 failed,
+    /// min margin 23.1 mV`).
+    pub fn summary(&self) -> String {
+        let min_margin =
+            self.regions.iter().map(|r| r.min_margin_v).fold(f64::INFINITY, f64::min);
+        format!(
+            "{}: {} regions, {} marginal, {} failed, min margin {:.1} mV",
+            self.model,
+            self.regions.len(),
+            self.n_marginal(),
+            self.n_failed(),
+            if min_margin.is_finite() { min_margin * 1e3 } else { f64::NAN },
+        )
+    }
+}
+
+/// Vt distance of one cell to its nearest read-reference boundary [V].
+fn cell_margin(ladders: &Ladders, vt: f64) -> f64 {
+    ladders.read_ref.iter().map(|&r| (vt - r).abs()).fold(f64::INFINITY, f64::min)
+}
+
+/// Scrub one region against the row `image` that was programmed into
+/// it: decode-compare through the normal read path, then measure the
+/// worst cell margin directly on the Vt state (what an extended-verify
+/// margin read implements).
+pub fn scrub_region(
+    mac: &mut EflashMacro,
+    region: &Region,
+    image: &[i8],
+    region_index: usize,
+    policy: &ScrubPolicy,
+) -> RegionHealth {
+    let errors = mac.decode_errors(region, image);
+    let cpr = mac.cells_per_read();
+    let mut min_margin_v = f64::INFINITY;
+    for r in 0..region.n_rows {
+        let addr = mac.array.row_addr(region.first_row + r);
+        let row = mac.array.vt_row(addr);
+        let n = if r == region.n_rows - 1 && region.n_codes % cpr != 0 {
+            region.n_codes % cpr
+        } else {
+            cpr
+        };
+        for &vt in &row[..n] {
+            min_margin_v = min_margin_v.min(cell_margin(&mac.ladders, vt as f64));
+        }
+    }
+    let error_rate = 1.0 - errors.exact_rate();
+    let worse_rate = errors.worse as f64 / errors.total.max(1) as f64;
+    let status = if worse_rate > policy.failed_worse_rate
+        || error_rate > policy.failed_error_rate
+    {
+        HealthStatus::Failed
+    } else if errors.exact != errors.total || min_margin_v < policy.margin_floor_v {
+        HealthStatus::Marginal
+    } else {
+        HealthStatus::Healthy
+    };
+    RegionHealth { region_index, status, errors, min_margin_v }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ChipConfig, EflashConfig};
+
+    fn chip() -> ChipConfig {
+        ChipConfig {
+            eflash: EflashConfig { capacity_bits: 256 * 1024, ..Default::default() },
+            ..ChipConfig::new()
+        }
+    }
+
+    fn programmed() -> (EflashMacro, Region, Vec<i8>) {
+        let mut mac = EflashMacro::new(&chip());
+        let codes: Vec<i8> = (0..4000).map(|i| ((i * 3 % 16) as i8) - 8).collect();
+        let (region, _) = mac.program_region(&codes).unwrap();
+        (mac, region, codes)
+    }
+
+    #[test]
+    fn fresh_region_is_healthy() {
+        let (mut mac, region, codes) = programmed();
+        let h = scrub_region(&mut mac, &region, &codes, 0, &ScrubPolicy::default());
+        assert_eq!(h.status, HealthStatus::Healthy, "{h:?}");
+        assert_eq!(h.errors.exact, codes.len() as u64);
+        assert!(h.min_margin_v > 0.0 && h.min_margin_v.is_finite());
+    }
+
+    #[test]
+    fn light_bake_is_marginal_heavy_drift_is_failed() {
+        let policy = ScrubPolicy::default();
+        let (mut mac, region, codes) = programmed();
+        mac.bake(160.0, 125.0);
+        let h = scrub_region(&mut mac, &region, &codes, 0, &policy);
+        assert_eq!(h.status, HealthStatus::Marginal, "{:?}", h.errors);
+
+        let (mut mac2, region2, codes2) = programmed();
+        crate::reliability::FaultPlan::new(11)
+            .with(crate::reliability::Fault::Drift {
+                first_row: region2.first_row,
+                n_rows: region2.n_rows,
+                hours: 160.0,
+                temp_c: 125.0,
+                severity: 12.0,
+            })
+            .inject(&mut mac2);
+        let h2 = scrub_region(&mut mac2, &region2, &codes2, 0, &policy);
+        assert_eq!(h2.status, HealthStatus::Failed, "{:?}", h2.errors);
+    }
+
+    #[test]
+    fn report_rollups() {
+        let healthy = RegionHealth {
+            region_index: 0,
+            status: HealthStatus::Healthy,
+            errors: DecodeErrors::default(),
+            min_margin_v: 0.03,
+        };
+        let failed = RegionHealth { status: HealthStatus::Failed, ..healthy.clone() };
+        let report = HealthReport {
+            model: "m".into(),
+            regions: vec![healthy.clone(), failed],
+        };
+        assert_eq!(report.worst(), HealthStatus::Failed);
+        assert!(!report.is_healthy());
+        assert_eq!(report.n_failed(), 1);
+        assert!(report.summary().contains("1 failed"), "{}", report.summary());
+        let empty = HealthReport { model: "e".into(), regions: vec![] };
+        assert!(empty.is_healthy());
+        assert_eq!(HealthReport { model: "h".into(), regions: vec![healthy] }.worst(),
+                   HealthStatus::Healthy);
+    }
+}

@@ -6,6 +6,15 @@
 //! in `eflash/` and `analog/` takes an explicit `Rng` so experiments are
 //! reproducible from a single seed.
 
+/// The seed a bench or stress run should use: the `NVMCU_SEED`
+/// environment variable when set (and parseable as u64), else
+/// `default`. Benches print the seed they ran with and accept
+/// `--seed`, so any reported number — however it was chosen — replays
+/// the exact same run.
+pub fn seed_from_env(default: u64) -> u64 {
+    std::env::var("NVMCU_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
 /// xoshiro256++ — 256-bit state, excellent statistical quality, trivially
 /// seedable via splitmix64.
 #[derive(Clone, Debug)]

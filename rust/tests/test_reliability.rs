@@ -1,0 +1,359 @@
+//! Reliability-subsystem acceptance suite: fault injection → margin
+//! scrub → quarantine → background repair → bit-exact readmission,
+//! end-to-end through the serving stack. The two properties ISSUE 6
+//! pins:
+//!
+//! 1. Under an injected fault plan, a 4-shard [`ShardedEngine`] behind
+//!    an [`InferenceServer`] quarantines the faulty shard, repairs and
+//!    readmits it, and **every completed request stays bit-exact**
+//!    against [`ReferenceBackend`].
+//! 2. With no faults injected, the self-healing loop is invisible:
+//!    serving results and [`Backend::stats`] are identical to a fleet
+//!    that never scrubbed.
+
+use nvmcu::config::ChipConfig;
+use nvmcu::datasets::synthetic_qmodel;
+use nvmcu::engine::{
+    Backend, BatchPolicy, EngineError, Fault, FaultPlan, InferenceServer, NmcuBackend,
+    QuarantinePolicy, ReferenceBackend, ScrubPolicy, ShardState, ShardedEngine,
+};
+use nvmcu::util::prop_check;
+use nvmcu::util::rng::{seed_from_env, Rng};
+use nvmcu::util::workload;
+
+fn small_cfg() -> ChipConfig {
+    let mut c = ChipConfig::new();
+    // 32K cells: every test model fits, and fabricating 4-shard fleets
+    // per seed stays cheap
+    c.eflash.capacity_bits = 128 * 1024;
+    c
+}
+
+/// Accelerated charge loss over the first rows of a shard's weight
+/// region — the recoverable fault class (severity 12 ⇒ Failed verdict).
+fn drift_fault(seed: u64) -> FaultPlan {
+    FaultPlan::new(seed).with(Fault::Drift {
+        first_row: 0,
+        n_rows: 4,
+        hours: 160.0,
+        temp_c: 125.0,
+        severity: 12.0,
+    })
+}
+
+/// THE acceptance property: a fault-injected 4-shard fleet behind the
+/// dynamic-batching server quarantines, repairs, and readmits the
+/// faulty shard while every completed request stays bit-exact against
+/// the software reference.
+#[test]
+fn server_over_faulty_fleet_serves_bit_exact_and_heals() {
+    let cfg = small_cfg();
+    let seed = seed_from_env(61);
+    let mut r = Rng::new(seed);
+    let model = synthetic_qmodel(&mut r, "acceptance", 128, 16, 8);
+
+    let mut oracle = ReferenceBackend::new();
+    let ho = oracle.program(&model).expect("reference program");
+
+    let mut fleet = ShardedEngine::new(&cfg, 4).expect("fleet");
+    let h = fleet.program(&model).expect("fleet program");
+    // damage shard 1 BEFORE any serving: the pre-batch scrub must catch
+    // it before the corrupt shard ever serves a request
+    drift_fault(seed ^ 0xD1F7).inject(&mut fleet.shard_mut(1).chip_mut().eflash);
+    fleet.enable_self_healing(QuarantinePolicy {
+        scrub_every: 1,
+        verify_seed: seed,
+        ..Default::default()
+    });
+
+    let policy = BatchPolicy { max_batch: 8, ..Default::default() };
+    let server = InferenceServer::start(Box::new(fleet), policy).expect("server");
+    let xs = workload::random_inputs(&mut r, 48, 128);
+    let pendings: Vec<_> =
+        xs.iter().map(|x| server.submit(h, x.clone()).expect("submit")).collect();
+    for (i, (p, x)) in pendings.into_iter().zip(&xs).enumerate() {
+        assert_eq!(
+            p.wait().expect("completion"),
+            oracle.infer(ho, x).expect("reference"),
+            "request {i} diverged from the reference"
+        );
+    }
+
+    // the fleet must be back at full strength: quarantine + repair +
+    // readmission all happened behind the serving traffic
+    let mut backend = server.shutdown().expect("shutdown");
+    assert!(backend.health().is_ok(), "fleet not back at full strength");
+    assert!(backend.verify_golden(3, seed).expect("verify"), "fleet not bit-exact after repair");
+    let reports = backend.scrub(&ScrubPolicy::default()).expect("scrub");
+    assert!(
+        reports.iter().all(|rep| rep.is_healthy()),
+        "a region is still unhealthy after repair"
+    );
+}
+
+/// An unrepairable shard keeps the fleet in a degraded-but-serving
+/// state, and the server surfaces it through the `degraded` counter.
+#[test]
+fn server_counts_degraded_batches_for_stuck_shard() {
+    let cfg = small_cfg();
+    let seed = seed_from_env(62);
+    let mut r = Rng::new(seed);
+    let model = synthetic_qmodel(&mut r, "stuck", 128, 16, 8);
+
+    let mut oracle = ReferenceBackend::new();
+    let ho = oracle.program(&model).expect("reference program");
+
+    let mut fleet = ShardedEngine::new(&cfg, 4).expect("fleet");
+    let h = fleet.program(&model).expect("fleet program");
+    // a stuck word line: pinned cells ignore reprogramming, so every
+    // repair attempt fails program-verify
+    FaultPlan::new(seed)
+        .with(Fault::StuckRow { flat_row: 0, vt: 2.4 })
+        .inject(&mut fleet.shard_mut(0).chip_mut().eflash);
+    fleet.enable_self_healing(QuarantinePolicy { scrub_every: 1, ..Default::default() });
+
+    let policy = BatchPolicy { max_batch: 8, ..Default::default() };
+    let server = InferenceServer::start(Box::new(fleet), policy).expect("server");
+    let xs = workload::random_inputs(&mut r, 48, 128);
+    let pendings: Vec<_> =
+        xs.iter().map(|x| server.submit(h, x.clone()).expect("submit")).collect();
+    for (p, x) in pendings.into_iter().zip(&xs) {
+        assert_eq!(
+            p.wait().expect("completion"),
+            oracle.infer(ho, x).expect("reference"),
+            "a degraded fleet must still serve bit-exact"
+        );
+    }
+    let stats = server.stats();
+    assert!(stats.degraded > 0, "degraded batches not surfaced: {}", stats.summary());
+
+    let backend = server.shutdown().expect("shutdown");
+    match backend.health() {
+        Err(EngineError::Degraded { active, total }) => {
+            assert_eq!((active, total), (3, 4));
+        }
+        other => panic!("expected Degraded {{3, 4}}, got {other:?}"),
+    }
+}
+
+/// Direct fleet view of one heal cycle: the reliability counters record
+/// exactly one quarantine, one successful repair, one readmission —
+/// detected within one batch at scrub-every-batch cadence.
+#[test]
+fn fleet_counters_record_one_heal_cycle() {
+    let cfg = small_cfg();
+    let seed = seed_from_env(63);
+    let mut r = Rng::new(seed);
+    let model = synthetic_qmodel(&mut r, "cycle", 128, 16, 8);
+
+    let mut fleet = ShardedEngine::new(&cfg, 4).expect("fleet");
+    let h = fleet.program(&model).expect("program");
+    drift_fault(seed).inject(&mut fleet.shard_mut(2).chip_mut().eflash);
+    fleet.enable_self_healing(QuarantinePolicy { scrub_every: 1, ..Default::default() });
+
+    let xs = workload::random_inputs(&mut r, 16, 128);
+    let want: Vec<Vec<i8>> =
+        xs.iter().map(|x| nvmcu::models::qmodel_forward(&model, x)).collect();
+    assert_eq!(fleet.infer_batch(h, &xs).expect("batch"), want);
+
+    assert_eq!(fleet.shard_state(2), ShardState::Active, "shard 2 not readmitted");
+    assert_eq!(fleet.n_active(), 4);
+    let rs = fleet.reliability_stats();
+    assert_eq!(rs.quarantines, 1, "{}", rs.summary());
+    assert_eq!(rs.repairs_attempted, 1, "{}", rs.summary());
+    assert_eq!(rs.repairs_failed, 0, "{}", rs.summary());
+    assert_eq!(rs.readmissions, 1, "{}", rs.summary());
+    assert!(rs.regions_failed >= 1, "{}", rs.summary());
+    assert!(
+        (rs.mean_detection_latency_batches - 1.0).abs() < 1e-12,
+        "scrub-every-batch must detect within one batch: {}",
+        rs.summary()
+    );
+}
+
+/// A stuck shard burns its repair attempts one batch at a time, is
+/// declared dead, and the fleet keeps serving bit-exact on the rest.
+#[test]
+fn stuck_shard_exhausts_repairs_and_dies() {
+    let cfg = small_cfg();
+    let seed = seed_from_env(64);
+    let mut r = Rng::new(seed);
+    let model = synthetic_qmodel(&mut r, "dead-shard", 128, 16, 8);
+
+    let mut fleet = ShardedEngine::new(&cfg, 4).expect("fleet");
+    let h = fleet.program(&model).expect("program");
+    FaultPlan::new(seed)
+        .with(Fault::StuckRow { flat_row: 0, vt: 2.4 })
+        .inject(&mut fleet.shard_mut(1).chip_mut().eflash);
+    fleet.enable_self_healing(QuarantinePolicy {
+        scrub_every: 1,
+        max_repair_attempts: 3,
+        ..Default::default()
+    });
+
+    let mut states = Vec::new();
+    for _ in 0..4 {
+        let xs = workload::random_inputs(&mut r, 8, 128);
+        let want: Vec<Vec<i8>> =
+            xs.iter().map(|x| nvmcu::models::qmodel_forward(&model, x)).collect();
+        assert_eq!(fleet.infer_batch(h, &xs).expect("batch"), want);
+        states.push(fleet.shard_state(1));
+    }
+    assert_eq!(
+        states,
+        vec![
+            ShardState::Quarantined { attempts: 1 },
+            ShardState::Quarantined { attempts: 2 },
+            ShardState::Dead,
+            ShardState::Dead,
+        ],
+        "quarantine must escalate to dead as repairs fail"
+    );
+    assert_eq!(fleet.dead(), vec![1]);
+    assert_eq!(fleet.n_active(), 3);
+    let rs = fleet.reliability_stats();
+    assert_eq!(rs.repairs_attempted, 3, "{}", rs.summary());
+    assert_eq!(rs.repairs_failed, 3, "{}", rs.summary());
+    assert_eq!(rs.readmissions, 0, "{}", rs.summary());
+    match fleet.health() {
+        Err(EngineError::Degraded { active: 3, total: 4 }) => {}
+        other => panic!("expected Degraded {{3, 4}}, got {other:?}"),
+    }
+}
+
+/// With no faults, the self-healing loop is invisible: a fleet that
+/// scrubs every batch produces the same outputs AND the same device
+/// stats as one that never scrubbed.
+#[test]
+fn no_fault_scrubbing_leaves_results_and_stats_identical() {
+    let cfg = small_cfg();
+    let seed = seed_from_env(65);
+    let mut r = Rng::new(seed);
+    let model = synthetic_qmodel(&mut r, "invisible", 128, 16, 8);
+
+    let mut plain = ShardedEngine::new(&cfg, 4).expect("plain fleet");
+    let hp = plain.program(&model).expect("program");
+    let mut healing = ShardedEngine::new(&cfg, 4).expect("healing fleet");
+    let hh = healing.program(&model).expect("program");
+    healing.enable_self_healing(QuarantinePolicy { scrub_every: 1, ..Default::default() });
+    assert_eq!(hp, hh, "identical allocation sequences must agree on handles");
+
+    for _ in 0..3 {
+        let xs = workload::random_inputs(&mut r, 16, 128);
+        assert_eq!(
+            plain.infer_batch(hp, &xs).expect("plain"),
+            healing.infer_batch(hh, &xs).expect("healing"),
+            "scrubbing changed serving results"
+        );
+    }
+    assert_eq!(plain.stats(), healing.stats(), "scrubbing touched the device stats");
+
+    let rs = healing.reliability_stats();
+    assert!(rs.scrubs >= 3, "{}", rs.summary());
+    assert_eq!(rs.quarantines, 0, "{}", rs.summary());
+    assert_eq!(rs.regions_failed, 0, "{}", rs.summary());
+}
+
+/// Detection latency is bounded by (and here exactly equals) the scrub
+/// cadence: a fault injected right after a clean scrub goes undetected
+/// for `scrub_every` batches, then the flagging scrub reports the gap.
+#[test]
+fn detection_latency_equals_scrub_cadence() {
+    let cfg = small_cfg();
+    let seed = seed_from_env(66);
+    let mut r = Rng::new(seed);
+    let model = synthetic_qmodel(&mut r, "latency", 128, 16, 8);
+
+    let mut fleet = ShardedEngine::new(&cfg, 2).expect("fleet");
+    let h = fleet.program(&model).expect("program");
+    fleet.enable_self_healing(QuarantinePolicy { scrub_every: 4, ..Default::default() });
+
+    let xs = workload::random_inputs(&mut r, 8, 128);
+    // batches 1..=4: clean; the batch-4 scrub resets the latency clock
+    for _ in 0..4 {
+        fleet.infer_batch(h, &xs).expect("clean batch");
+    }
+    drift_fault(seed).inject(&mut fleet.shard_mut(0).chip_mut().eflash);
+    // batches 5..=8: fault latent until the batch-8 scrub flags it
+    // (outputs may diverge in this window — that is the latency trade)
+    for _ in 0..4 {
+        fleet.infer_batch(h, &xs).expect("latent batch");
+    }
+    let rs = fleet.reliability_stats();
+    assert_eq!(rs.quarantines, 1, "{}", rs.summary());
+    assert!(
+        (rs.mean_detection_latency_batches - 4.0).abs() < 1e-12,
+        "latency should equal the cadence: {}",
+        rs.summary()
+    );
+}
+
+/// Randomized property: across seeds, models, fleet sizes, and damaged
+/// shards, a drift-faulted self-healing fleet serves bit-exact and
+/// returns to full strength.
+#[test]
+fn healing_stays_bit_exact_across_seeds() {
+    let cfg = small_cfg();
+    prop_check(10, |r| {
+        let k = 32 + r.below(64) as usize;
+        let hidden = 8 + r.below(12) as usize;
+        let out = 4 + r.below(6) as usize;
+        let model = synthetic_qmodel(r, "prop-heal", k, hidden, out);
+        let n_shards = 2 + r.below(3) as usize;
+        let victim = r.below(n_shards as u64) as usize;
+        let severity = 10.0 + r.f64() * 8.0;
+
+        let mut fleet = ShardedEngine::new(&cfg, n_shards).expect("fleet");
+        let h = fleet.program(&model).expect("program");
+        FaultPlan::new(r.next_u64())
+            .with(Fault::Drift {
+                first_row: 0,
+                n_rows: 4,
+                hours: 160.0,
+                temp_c: 125.0,
+                severity,
+            })
+            .inject(&mut fleet.shard_mut(victim).chip_mut().eflash);
+        fleet.enable_self_healing(QuarantinePolicy { scrub_every: 1, ..Default::default() });
+
+        for _ in 0..2 {
+            let xs = workload::random_inputs(r, 1 + r.below(12) as usize, k);
+            let want: Vec<Vec<i8>> =
+                xs.iter().map(|x| nvmcu::models::qmodel_forward(&model, x)).collect();
+            assert_eq!(fleet.infer_batch(h, &xs).expect("batch"), want);
+        }
+        // severity >= 10 always fails the scrub, so the victim must have
+        // gone through a full heal cycle and be back in rotation
+        assert_eq!(fleet.n_active(), n_shards);
+        let rs = fleet.reliability_stats();
+        assert!(rs.quarantines >= 1 && rs.readmissions >= 1, "{}", rs.summary());
+    });
+}
+
+/// `NmcuBackend` (a single chip) also carries the reliability surface:
+/// scrub finds the damage, repair restores it, verify_golden proves the
+/// restored weights serve bit-exact.
+#[test]
+fn single_chip_scrub_repair_verify_roundtrip() {
+    let cfg = small_cfg();
+    let seed = seed_from_env(67);
+    let mut r = Rng::new(seed);
+    let model = synthetic_qmodel(&mut r, "single", 128, 16, 8);
+
+    let mut chip = NmcuBackend::new(&cfg);
+    chip.program(&model).expect("program");
+    let policy = ScrubPolicy::default();
+    assert!(chip.scrub(&policy).expect("scrub").iter().all(|rep| rep.is_healthy()));
+
+    drift_fault(seed).inject(&mut chip.chip_mut().eflash);
+    let reports = chip.scrub(&policy).expect("scrub after fault");
+    assert!(
+        reports.iter().any(|rep| rep.n_failed() > 0),
+        "scrub missed injected damage: {:?}",
+        reports.iter().map(|rep| rep.summary()).collect::<Vec<_>>()
+    );
+
+    let repaired = chip.repair(&policy).expect("repair");
+    assert!(repaired.iter().all(|rep| rep.is_healthy()), "repair left damage behind");
+    assert!(chip.verify_golden(4, seed).expect("verify"), "repaired chip not bit-exact");
+}

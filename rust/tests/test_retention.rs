@@ -4,13 +4,20 @@
 //! consistently (same stretched-exponential loss at the translated
 //! time), and baking a programmed chip degrades its weight decode
 //! monotonically — longer bakes never *improve* the decode-error count.
+//! The reliability-subsystem interplay rides here too: bake + fault
+//! plans versus the margin scrubber, and repair restoring bit-exact
+//! inference across seeds.
 
 use nvmcu::config::{ChipConfig, RetentionConfig};
 use nvmcu::coordinator::experiments::decode_errors_all;
+use nvmcu::coordinator::Chip;
 use nvmcu::datasets::synthetic_qmodel;
 use nvmcu::eflash::retention::{equivalent_hours, loss_fraction, tau_hours};
 use nvmcu::engine::{Backend, NmcuBackend};
-use nvmcu::util::rng::Rng;
+use nvmcu::reliability::{bake_soak, scrub_region, Fault, FaultPlan, HealthStatus, ScrubPolicy};
+use nvmcu::util::prop_check;
+use nvmcu::util::rng::{seed_from_env, Rng};
+use nvmcu::util::workload;
 
 #[test]
 fn loss_fraction_monotonic_in_hours() {
@@ -137,4 +144,145 @@ fn bake_160h_errors_are_unit_dominated() {
         (e.worse as f64) < 0.05 * (e.off_by_one as f64) + 5.0,
         "multi-state decode errors too common after 160 h: {e:?}"
     );
+}
+
+/// Fault-plan ↔ retention interplay: after the nominal 160 h bake PLUS
+/// a severity-12 drift fault confined to layer 0's rows, the scrub
+/// flags exactly the over-threshold region — layer 0 Failed, layer 1
+/// at most Marginal. Ordinary aging alone must never read Failed, or
+/// the self-healing loop would pull every honestly-aged chip from
+/// rotation and defeat the paper's accuracy-retention claim.
+#[test]
+fn bake_then_scrub_flags_exactly_the_over_threshold_region() {
+    let mut cfg = ChipConfig::new();
+    cfg.eflash.capacity_bits = 256 * 1024;
+    let mut r = Rng::new(seed_from_env(406));
+    let model = synthetic_qmodel(&mut r, "scrub-model", 256, 24, 8);
+    let mut backend = NmcuBackend::new(&cfg);
+    backend.program(&model).expect("program");
+
+    backend.chip_mut().bake(160.0, cfg.retention.bake_temp_c);
+    FaultPlan::new(7)
+        .with(Fault::Drift {
+            first_row: 0,
+            n_rows: 4,
+            hours: 160.0,
+            temp_c: 125.0,
+            severity: 12.0,
+        })
+        .inject(&mut backend.chip_mut().eflash);
+
+    let reports = backend.scrub(&ScrubPolicy::default()).expect("scrub");
+    assert_eq!(reports.len(), 1, "one resident model, one report");
+    let regions = &reports[0].regions;
+    assert_eq!(regions.len(), 2, "two dense layers, two regions");
+    assert_eq!(
+        regions[0].status,
+        HealthStatus::Failed,
+        "the drifted region must fail: {:?}",
+        regions[0].errors
+    );
+    assert_ne!(
+        regions[1].status,
+        HealthStatus::Failed,
+        "ordinary 160 h aging must not fail a region: {:?}",
+        regions[1].errors
+    );
+}
+
+/// Repair restores bit-exact inference: across 25 seeds, a chip whose
+/// weights were damaged by nominal aging plus a random-severity drift
+/// fault serves exactly like the golden model again after
+/// [`Backend::repair`].
+#[test]
+fn repair_restores_bit_exact_inference_across_seeds() {
+    let mut cfg = ChipConfig::new();
+    cfg.eflash.capacity_bits = 128 * 1024;
+    prop_check(25, |r| {
+        let k = 32 + r.below(96) as usize;
+        let hidden = 8 + r.below(16) as usize;
+        let model = synthetic_qmodel(r, "repair-model", k, hidden, 6);
+        let mut backend = NmcuBackend::new(&cfg);
+        let h = backend.program(&model).expect("program");
+
+        backend.chip_mut().bake(160.0, cfg.retention.bake_temp_c);
+        FaultPlan::new(r.next_u64())
+            .with(Fault::Drift {
+                first_row: 0,
+                n_rows: 2,
+                hours: 160.0,
+                temp_c: 125.0,
+                severity: 10.0 + r.f64() * 8.0,
+            })
+            .inject(&mut backend.chip_mut().eflash);
+
+        let reports = backend.repair(&ScrubPolicy::default()).expect("repair");
+        assert!(
+            reports.iter().all(|rep| rep.is_healthy()),
+            "repair left damage: {:?}",
+            reports.iter().map(|rep| rep.summary()).collect::<Vec<_>>()
+        );
+        for x in workload::random_inputs(r, 4, k) {
+            assert_eq!(
+                backend.infer(h, &x).expect("infer"),
+                nvmcu::models::qmodel_forward(&model, &x),
+                "repaired chip diverged from the golden model"
+            );
+        }
+    });
+}
+
+/// Nightly soak: drive a 2000 h equivalent bake through the
+/// [`bake_soak`] slicer, scrubbing after every slice — the verdict can
+/// only worsen with cumulative aging — then repair every degraded
+/// region and verify the chip serves bit-exact again.
+#[test]
+#[ignore = "long soak — run with `cargo test --release -- --ignored` (nightly CI)"]
+fn long_bake_soak_scrub_then_repair_roundtrip() {
+    let mut cfg = ChipConfig::new();
+    cfg.eflash.capacity_bits = 256 * 1024;
+    let mut r = Rng::new(seed_from_env(407));
+    let model = synthetic_qmodel(&mut r, "soak-model", 256, 24, 8);
+    let mut chip = Chip::new(&cfg);
+    let pm = chip.program_model(&model).expect("program");
+    let policy = ScrubPolicy::default();
+
+    // the observe hook borrows the macro, so scrub with cloned region
+    // metadata inside the slices
+    let regions = pm.regions.clone();
+    let images = pm.layer_images.clone();
+    let mut worsts = Vec::new();
+    bake_soak(&mut chip.eflash, 2000.0, cfg.retention.bake_temp_c, 8, |mac, _hours| {
+        let worst = regions
+            .iter()
+            .zip(&images)
+            .enumerate()
+            .map(|(i, (region, image))| scrub_region(mac, region, image, i, &policy).status)
+            .max()
+            .expect("model has regions");
+        worsts.push(worst);
+    });
+    assert_eq!(worsts.len(), 8, "one scrub per soak slice");
+    assert!(
+        worsts.windows(2).all(|w| w[0] <= w[1]),
+        "scrub verdict improved during the soak: {worsts:?}"
+    );
+    assert!(
+        *worsts.last().expect("8 slices") >= HealthStatus::Marginal,
+        "a 2000 h bake left no scrub-visible trace: {worsts:?}"
+    );
+
+    // heal: reprogram every degraded region from golden weights
+    let report = chip.scrub(&pm, &policy);
+    for region in report.regions.iter().filter(|rh| rh.status != HealthStatus::Healthy) {
+        chip.reprogram_region(&pm, region.region_index).expect("repair");
+    }
+    assert!(chip.scrub(&pm, &policy).is_healthy(), "repair left damage behind");
+    for x in workload::random_inputs(&mut r, 8, model.input_len()) {
+        assert_eq!(
+            chip.infer(&pm, &x).expect("infer"),
+            nvmcu::models::qmodel_forward(&model, &x),
+            "repaired chip diverged from the golden model"
+        );
+    }
 }

@@ -1,13 +1,15 @@
 //! Dynamic-batching serving demo: two models resident in one EFLASH,
 //! served concurrently through the [`InferenceServer`] scheduler —
-//! coalescing, per-model routing, typed backpressure, and the stats
-//! surface. Self-contained (no artifacts needed).
+//! coalescing, per-model routing, typed backpressure, the stats
+//! surface, and the cross-stack trace/attribution rollup (TRACING.md).
+//! Self-contained (no artifacts needed).
 //!
 //!     cargo run --release --example serving
 
 use nvmcu::config::ChipConfig;
 use nvmcu::datasets::synthetic_qmodel;
 use nvmcu::engine::{Backend, BatchPolicy, EngineError, InferenceServer, NmcuBackend};
+use nvmcu::trace::Tracer;
 use nvmcu::util::rng::Rng;
 use nvmcu::util::workload;
 use std::time::Duration;
@@ -21,6 +23,10 @@ fn main() {
     let classifier = synthetic_qmodel(&mut r, "classifier", 256, 32, 10);
     let detector = synthetic_qmodel(&mut r, "detector", 128, 16, 2);
     let mut backend = NmcuBackend::new(&cfg);
+    // a tracer attached before serving records every span — scheduler
+    // admissions down to individual EFLASH read bursts (TRACING.md)
+    let tracer = Tracer::new(&cfg.power);
+    backend.set_tracer(Some(tracer.clone()));
     let h_cls = backend.program(&classifier).expect("program classifier");
     let h_det = backend.program(&detector).expect("program detector");
     println!("programmed {} and {} into one EFLASH", classifier.name, detector.name);
@@ -87,4 +93,14 @@ fn main() {
          (queue_depth 4)"
     );
     println!("final: {}", server.stats().summary());
+
+    // 5. the trace survives both server generations (it rides the
+    //    backend): roll it up into exact cycle/energy attribution
+    println!(
+        "\ntrace: {} events ({} dropped) across {} rings",
+        tracer.len(),
+        tracer.dropped(),
+        tracer.rings().len()
+    );
+    println!("{}", tracer.attribution().summary());
 }

@@ -22,6 +22,7 @@ fn main() {
     let cfg = ChipConfig::new();
     let mut r = Rng::new(seed);
     println!("seed {seed} (replay with --seed {seed})");
+    println!("trace: add --trace-out <file> for a Chrome trace of the CNN latency section");
 
     let cnn = nvmcu::datasets::synthetic_mnist_cnn(&mut r);
     let macs = logical_macs(&cnn);
@@ -41,6 +42,8 @@ fn main() {
 
     // ---- single-sample latency ------------------------------------------
     let mut nb = NmcuBackend::new(&cfg);
+    let tracer = args.opt("trace-out").map(|_| nvmcu::trace::Tracer::new(&cfg.power));
+    nb.set_tracer(tracer.clone());
     let hn = nb.program(&cnn).expect("program CNN");
     let x = probe.clone();
     let t_conv = bench("CNN inference (1 chip)", tgt, || {
@@ -91,4 +94,14 @@ fn main() {
         "\nthe fleet speedup applies to conv exactly as to dense — the scheduler and \
          sharding layers never look inside the operator."
     );
+
+    if let (Some(t), Some(path)) = (&tracer, args.opt("trace-out")) {
+        std::fs::write(path, t.export_chrome_json()).expect("write trace");
+        println!(
+            "trace: {} events ({} dropped) -> {path} (chrome://tracing / ui.perfetto.dev)",
+            t.len(),
+            t.dropped()
+        );
+        println!("{}", t.attribution().summary());
+    }
 }

@@ -22,6 +22,7 @@ fn main() {
     let tgt = Duration::from_millis(500);
     let mut r = Rng::new(seed);
     println!("seed {seed} (replay with --seed {seed})");
+    println!("trace: add --trace-out <file> for a Chrome trace of the serving section");
 
     // ---- L3 kernel primitives -------------------------------------------
     let x: Vec<i8> = (0..128).map(|_| (r.below(256) as i32 - 128) as i8).collect();
@@ -100,6 +101,8 @@ fn main() {
         .map(|_| (0..784).map(|_| (r.below(256) as i32 - 128) as i8).collect())
         .collect();
     let mut single = NmcuBackend::new(&cfg);
+    let tracer = args.opt("trace-out").map(|_| nvmcu::trace::Tracer::new(&cfg.power));
+    single.set_tracer(tracer.clone());
     let h1 = single.program(&model).unwrap();
     let t_single = bench("engine infer_batch 256 imgs (1 chip)", tgt, || {
         std::hint::black_box(single.infer_batch(h1, &batch).unwrap());
@@ -137,4 +140,14 @@ fn main() {
         std::hint::black_box(mcu.run(10_000));
     });
     println!("  -> {:.0} MIPS", 2.0 * 2047.0 / (t.per_iter_ns / 1000.0));
+
+    if let (Some(t), Some(path)) = (&tracer, args.opt("trace-out")) {
+        std::fs::write(path, t.export_chrome_json()).expect("write trace");
+        println!(
+            "trace: {} events ({} dropped) -> {path} (chrome://tracing / ui.perfetto.dev)",
+            t.len(),
+            t.dropped()
+        );
+        println!("{}", t.attribution().summary());
+    }
 }

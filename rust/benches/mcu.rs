@@ -23,7 +23,9 @@ fn main() {
     let cfg = ChipConfig::new();
     let mut r = Rng::new(seed);
     println!("seed {seed} (replay with --seed {seed})");
+    println!("trace: add --trace-out <file> for a Chrome trace of the firmware runs");
     const BATCH: usize = 64;
+    let tracer = args.opt("trace-out").map(|_| nvmcu::trace::Tracer::new(&cfg.power));
 
     let mlp = nvmcu::datasets::synthetic_qmodel(&mut r, "mnist-shaped", 784, 43, 10);
     let cnn =
@@ -45,6 +47,7 @@ fn main() {
         });
 
         let mut mcu = McuBackend::new(&cfg);
+        mcu.set_tracer(tracer.clone());
         let hm = mcu.program(model).expect("program (mcu)");
         assert_eq!(mcu.infer_batch(hm, &pool).expect("mcu"), want, "{}", model.name);
         mcu.reset_stats();
@@ -68,5 +71,15 @@ fn main() {
             "{}: control plane costs {instret_per_launch:.1} instret/launch",
             model.name
         );
+    }
+
+    if let (Some(t), Some(path)) = (&tracer, args.opt("trace-out")) {
+        std::fs::write(path, t.export_chrome_json()).expect("write trace");
+        println!(
+            "trace: {} events ({} dropped) -> {path} (chrome://tracing / ui.perfetto.dev)",
+            t.len(),
+            t.dropped()
+        );
+        println!("{}", t.attribution().summary());
     }
 }

@@ -33,7 +33,8 @@ fn main() {
     let tgt = Duration::from_millis(400);
     let cfg = ChipConfig::new();
     let mut r = Rng::new(seed);
-    println!("seed {seed} (replay with --seed {seed})\n");
+    println!("seed {seed} (replay with --seed {seed})");
+    println!("trace: add --trace-out <file> for a Chrome trace of the self-healing fleet\n");
 
     let model = nvmcu::datasets::synthetic_qmodel(&mut r, "mnist-shaped", 784, 43, 10);
     let pool = workload::random_inputs(&mut r, BATCH, 784);
@@ -97,6 +98,22 @@ fn main() {
         turnaround.as_secs_f64() * 1e3
     );
     println!("  {}", rs.summary());
+
+    // traced replay of the healed fleet (outside the timed sections, so
+    // the export never skews the turnaround number above)
+    if let Some(path) = args.opt("trace-out") {
+        let tracer = nvmcu::trace::Tracer::new(&cfg.power);
+        healing.set_tracer(Some(tracer.clone()));
+        let replay = healing.infer_batch(h2, &pool).expect("traced replay");
+        assert_eq!(replay, want, "traced replay diverged from the plain fleet");
+        std::fs::write(path, tracer.export_chrome_json()).expect("write trace");
+        println!(
+            "trace: {} events ({} dropped) -> {path} (chrome://tracing / ui.perfetto.dev)",
+            tracer.len(),
+            tracer.dropped()
+        );
+        println!("{}", tracer.attribution().summary());
+    }
 
     // ---- bake soak: scrub verdict vs cumulative aging ---------------------
     let mut mac = EflashMacro::new(&cfg);

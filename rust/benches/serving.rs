@@ -75,8 +75,9 @@ fn main() {
     let pool = workload::random_inputs(&mut r, N_REQ, 784);
     println!(
         "serving bench: {N_REQ}-request burst, MNIST-shaped model, best of {ROUNDS} rounds \
-         (seed {seed}; replay with --seed {seed})\n"
+         (seed {seed}; replay with --seed {seed})"
     );
+    println!("trace: add --trace-out <file> for a Chrome trace of a coalesced sharded burst\n");
 
     let mut t = Table::new(&["mode", "req/s", "speedup", "mean batch", "p50 ms", "p99 ms"]);
     let mut rps = Vec::new();
@@ -121,4 +122,27 @@ fn main() {
         rps[3] / rps[0],
         rps[2] / rps[0]
     );
+
+    // traced replay of the headline configuration (outside the timed
+    // rounds, so the export never skews the numbers above)
+    if let Some(path) = args.opt("trace-out") {
+        let tracer = nvmcu::trace::Tracer::new(&cfg.power);
+        let mut backend: Box<dyn Backend> =
+            Box::new(ShardedEngine::new(&cfg, SHARDS).expect("shards"));
+        backend.set_tracer(Some(tracer.clone()));
+        let h = backend.program(&model).expect("program");
+        let policy = BatchPolicy {
+            max_batch: MAX_BATCH,
+            max_wait: Duration::from_micros(200),
+            queue_depth: pool.len(),
+        };
+        let _ = burst_trial(backend, policy, h, &pool);
+        std::fs::write(path, tracer.export_chrome_json()).expect("write trace");
+        println!(
+            "trace: {} events ({} dropped) -> {path} (chrome://tracing / ui.perfetto.dev)",
+            tracer.len(),
+            tracer.dropped()
+        );
+        println!("{}", tracer.attribution().summary());
+    }
 }

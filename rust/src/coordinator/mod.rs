@@ -12,6 +12,7 @@ use crate::eflash::{EflashMacro, Region};
 use crate::error::EngineError;
 use crate::nmcu::{layout_codes, ConvDesc, LayerDesc, Nmcu, NmcuStats, PoolDesc, Shape};
 use crate::reliability::{scrub_region, HealthReport, ScrubPolicy};
+use crate::trace::TraceSink;
 
 /// One planned layer execution: the typed [`QOp`] lowered against the
 /// chip's geometry (EFLASH rows allocated for weighted ops, shapes
@@ -233,6 +234,8 @@ pub struct Chip {
     pub eflash: EflashMacro,
     /// the near-memory computing unit
     pub nmcu: Nmcu,
+    /// trace sink shared with the NMCU (`None` = tracing disabled)
+    sink: Option<TraceSink>,
 }
 
 impl Chip {
@@ -242,6 +245,7 @@ impl Chip {
             cfg: cfg.clone(),
             eflash: EflashMacro::new(cfg),
             nmcu: Nmcu::new(&cfg.nmcu),
+            sink: None,
         }
     }
 
@@ -251,7 +255,17 @@ impl Chip {
             cfg: cfg.clone(),
             eflash: EflashMacro::with_vrd_limit(cfg, vrd_max),
             nmcu: Nmcu::new(&cfg.nmcu),
+            sink: None,
         }
+    }
+
+    /// Attach (or with `None` detach) one trace sink shared by the chip
+    /// facade and its NMCU: inference spans, per-op spans, EFLASH burst
+    /// and DMA instants all interleave on the same track. Tracing never
+    /// changes results, [`NmcuStats`], or RNG consumption.
+    pub fn set_trace_sink(&mut self, sink: Option<TraceSink>) {
+        self.nmcu.set_trace_sink(sink.clone());
+        self.sink = sink;
     }
 
     /// Program a quantized model into the EFLASH with full program-verify
@@ -447,6 +461,10 @@ impl Chip {
     /// activation SRAM (gathers cost no bus traffic). The input crosses
     /// the bus once, the output once.
     pub fn infer(&mut self, pm: &ProgrammedModel, x_q: &[i8]) -> Result<Vec<i8>, EngineError> {
+        let sink = self.sink.clone();
+        let _span = sink
+            .as_ref()
+            .map(|s| s.span("chip", "infer", vec![("ops", pm.ops.len().into())]));
         self.nmcu.begin_inference();
         match pm.ops.first() {
             Some(PlannedOp::Mvm(_)) | None => self.nmcu.load_input(x_q)?,
@@ -462,6 +480,10 @@ impl Chip {
                 }
                 self.nmcu.stats.bus_bytes =
                     self.nmcu.stats.bus_bytes.saturating_add(x_q.len() as u64);
+                if let Some(s) = &sink {
+                    s.note_bus(x_q.len() as u64);
+                    s.instant("chip", "dma_in", vec![("bytes", x_q.len().into())]);
+                }
             }
         }
         let mut act = x_q.to_vec();
@@ -474,6 +496,10 @@ impl Chip {
         }
         // result readback over the bus
         self.nmcu.stats.bus_bytes = self.nmcu.stats.bus_bytes.saturating_add(act.len() as u64);
+        if let Some(s) = &sink {
+            s.note_bus(act.len() as u64);
+            s.instant("chip", "dma_out", vec![("bytes", act.len().into())]);
+        }
         Ok(act)
     }
 

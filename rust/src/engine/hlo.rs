@@ -10,6 +10,7 @@ use super::{lookup, Backend, EngineError, ModelHandle, ModelInfo, Result, AOT_BA
 use crate::artifacts::QModel;
 use crate::nmcu::NmcuStats;
 use crate::runtime::{HloExecutable, Runtime};
+use crate::trace::{TraceSink, Tracer};
 use std::path::{Path, PathBuf};
 
 struct HloModel {
@@ -34,6 +35,8 @@ pub struct HloBackend {
     dir: PathBuf,
     models: Vec<HloModel>,
     stats: NmcuStats,
+    tracer: Option<Tracer>,
+    sink: Option<TraceSink>,
 }
 
 fn backend_err(e: anyhow::Error) -> EngineError {
@@ -73,6 +76,8 @@ impl HloBackend {
             dir: dir.to_path_buf(),
             models: Vec::new(),
             stats: NmcuStats::default(),
+            tracer: None,
+            sink: None,
         })
     }
 
@@ -140,6 +145,13 @@ impl Backend for HloBackend {
         if x.len() != m.input_dim {
             return Err(EngineError::InputSize { expected: m.input_dim, got: x.len() });
         }
+        let _span = self
+            .sink
+            .as_ref()
+            .map(|s| s.span("hlo", "infer", vec![("layers", (m.n_layers as usize).into())]));
+        if let Some(s) = &self.sink {
+            s.note_bus((x.len() + m.output_dim) as u64);
+        }
         let out = run_b1(m, x)?;
         self.stats.bus_bytes += (x.len() + out.len()) as u64;
         self.stats.layers_run += m.n_layers;
@@ -156,6 +168,13 @@ impl Backend for HloBackend {
         let (k, n_out) = (m.input_dim, m.output_dim);
         if let Some(bad) = xs.iter().find(|x| x.len() != k) {
             return Err(EngineError::InputSize { expected: k, got: bad.len() });
+        }
+        let _span = self
+            .sink
+            .as_ref()
+            .map(|s| s.span("hlo", "infer_batch", vec![("n", xs.len().into())]));
+        if let Some(s) = &self.sink {
+            s.note_bus((xs.len() * (k + n_out)) as u64);
         }
         let mut out = Vec::with_capacity(xs.len());
         match &m.batch_exe {
@@ -207,5 +226,14 @@ impl Backend for HloBackend {
 
     fn reset_stats(&mut self) {
         self.stats = NmcuStats::default();
+    }
+
+    fn set_tracer(&mut self, tracer: Option<Tracer>) {
+        self.sink = tracer.as_ref().map(|t| t.sink("hlo"));
+        self.tracer = tracer;
+    }
+
+    fn trace(&self) -> Option<Tracer> {
+        self.tracer.clone()
     }
 }

@@ -27,6 +27,7 @@ use crate::cpu::Mem;
 use crate::nmcu::NmcuStats;
 use crate::soc::firmware::{self, FirmwareImage};
 use crate::soc::{map, Mcu};
+use crate::trace::{TraceSink, Tracer};
 
 /// One resident model: its EFLASH image plan plus the installed
 /// firmware + descriptor floor plan.
@@ -49,6 +50,11 @@ pub struct McuBackend {
     fuel_override: Option<u64>,
     /// host instructions retired across all completed runs
     instret_total: u64,
+    /// the tracer attached via [`Backend::set_tracer`], if any
+    tracer: Option<Tracer>,
+    /// ring shared with the MCU: firmware-run spans wrap the firmware
+    /// step markers and the NMCU op spans on one track
+    sink: Option<TraceSink>,
 }
 
 impl McuBackend {
@@ -61,6 +67,8 @@ impl McuBackend {
             next_entry: map::SRAM_BASE,
             fuel_override: None,
             instret_total: 0,
+            tracer: None,
+            sink: None,
         }
     }
 
@@ -155,6 +163,10 @@ impl Backend for McuBackend {
         }
         let mut out: Vec<Vec<i8>> = Vec::with_capacity(xs.len());
         for chunk in xs.chunks(fw.max_batch.max(1)) {
+            let mut span = self
+                .sink
+                .as_ref()
+                .map(|s| s.span("mcu", "fw_run", vec![("n", chunk.len().into())]));
             for (i, x) in chunk.iter().enumerate() {
                 let bytes: Vec<u8> = x.iter().map(|&v| v as u8).collect();
                 self.mcu.bus.sram_write(fw.in_base + i as u32 * fw.in_stride, &bytes);
@@ -164,6 +176,10 @@ impl Backend for McuBackend {
             let fuel = self.fuel_override.unwrap_or_else(|| fw.fuel(chunk.len()));
             let exit = self.mcu.run(fuel);
             self.instret_total += self.mcu.cpu.instret;
+            if let Some(g) = span.as_mut() {
+                g.arg("instret", self.mcu.cpu.instret);
+            }
+            drop(span);
             firmware::decode_exit(exit)?;
             for i in 0..chunk.len() {
                 let y: Vec<i8> = self
@@ -199,6 +215,19 @@ impl Backend for McuBackend {
     fn reset_stats(&mut self) {
         self.mcu.nmcu.stats = NmcuStats::default();
         self.instret_total = 0;
+    }
+
+    fn set_tracer(&mut self, tracer: Option<Tracer>) {
+        // one "mcu" ring shared by the backend, the SoC, and its NMCU,
+        // so firmware-run spans wrap the BEGIN/OP_LAUNCH/STATUS markers
+        // and the op spans they trigger on a single track
+        self.sink = tracer.as_ref().map(|t| t.sink("mcu"));
+        self.mcu.set_trace_sink(self.sink.clone());
+        self.tracer = tracer;
+    }
+
+    fn trace(&self) -> Option<Tracer> {
+        self.tracer.clone()
     }
 }
 

@@ -70,6 +70,7 @@ pub use sharded::{QuarantinePolicy, ShardState, ShardedEngine};
 use crate::artifacts::QModel;
 use crate::config::ChipConfig;
 use crate::nmcu::NmcuStats;
+use crate::trace::Tracer;
 use std::path::Path;
 
 /// Engine results carry typed [`EngineError`]s.
@@ -195,6 +196,24 @@ pub trait Backend: Send {
     /// single-substrate backend is always at full capacity.
     fn health(&self) -> Result<()> {
         Ok(())
+    }
+
+    /// Attach (or with `None`, detach) a [`Tracer`]: the backend
+    /// registers span rings for its components and emits typed events on
+    /// every subsequent inference. Tracing is an observability overlay —
+    /// it must not change results, [`NmcuStats`], or RNG consumption
+    /// (pinned by the 25-seed invariance property in
+    /// `rust/tests/test_properties.rs`). The default ignores the tracer:
+    /// a backend without instrumentation simply produces no events.
+    fn set_tracer(&mut self, tracer: Option<Tracer>) {
+        let _ = tracer;
+    }
+
+    /// The tracer attached via [`Backend::set_tracer`], if any — how the
+    /// [`InferenceServer`] discovers the trace to add its own
+    /// admit/coalesce/dispatch spans and per-request attribution to.
+    fn trace(&self) -> Option<Tracer> {
+        None
     }
 }
 
@@ -374,5 +393,16 @@ impl Engine {
     /// Zero the backend's statistics counters.
     pub fn reset_stats(&mut self) {
         self.backend.reset_stats();
+    }
+
+    /// Attach (or detach) a [`Tracer`] to the underlying backend (see
+    /// [`Backend::set_tracer`]).
+    pub fn set_tracer(&mut self, tracer: Option<Tracer>) {
+        self.backend.set_tracer(tracer);
+    }
+
+    /// The tracer attached to the underlying backend, if any.
+    pub fn trace(&self) -> Option<Tracer> {
+        self.backend.trace()
     }
 }

@@ -11,6 +11,7 @@ use crate::coordinator::{Chip, ProgrammedModel};
 use crate::models::qmodel_forward;
 use crate::nmcu::NmcuStats;
 use crate::reliability::{HealthReport, HealthStatus, ScrubPolicy};
+use crate::trace::Tracer;
 use crate::util::rng::Rng;
 
 /// The chip-simulator [`Backend`]: one [`Chip`] plus the registry of
@@ -22,18 +23,20 @@ pub struct NmcuBackend {
     models: Vec<ProgrammedModel>,
     /// golden copies of the programmed artifacts, parallel to `models`
     golden: Vec<QModel>,
+    /// the tracer attached via [`Backend::set_tracer`], if any
+    tracer: Option<Tracer>,
 }
 
 impl NmcuBackend {
     /// Fabricate a fresh chip with `cfg`.
     pub fn new(cfg: &ChipConfig) -> NmcuBackend {
-        NmcuBackend { chip: Chip::new(cfg), models: Vec::new(), golden: Vec::new() }
+        NmcuBackend::from_chip(Chip::new(cfg))
     }
 
     /// Wrap an existing chip (ablations that pre-configure the EFLASH:
     /// state mapping, VRD ceiling, read mode, ...).
     pub fn from_chip(chip: Chip) -> NmcuBackend {
-        NmcuBackend { chip, models: Vec::new(), golden: Vec::new() }
+        NmcuBackend { chip, models: Vec::new(), golden: Vec::new(), tracer: None }
     }
 
     /// Direct access to the underlying chip (bake experiments, Vt
@@ -144,5 +147,16 @@ impl Backend for NmcuBackend {
             }
         }
         Ok(true)
+    }
+
+    fn set_tracer(&mut self, tracer: Option<Tracer>) {
+        // one "chip" ring shared by the facade and its NMCU: inference
+        // spans wrap the per-op spans on a single track
+        self.chip.set_trace_sink(tracer.as_ref().map(|t| t.sink("chip")));
+        self.tracer = tracer;
+    }
+
+    fn trace(&self) -> Option<Tracer> {
+        self.tracer.clone()
     }
 }

@@ -7,6 +7,7 @@ use super::{lookup, Backend, EngineError, ModelHandle, ModelInfo, Result};
 use crate::artifacts::QModel;
 use crate::models::{logical_macs, qmodel_forward};
 use crate::nmcu::NmcuStats;
+use crate::trace::{TraceSink, Tracer};
 
 /// A resident model plus the per-inference accounting computed once at
 /// program time (shape propagation is validated there, so serving never
@@ -26,6 +27,8 @@ struct RefModel {
 pub struct ReferenceBackend {
     models: Vec<RefModel>,
     stats: NmcuStats,
+    tracer: Option<Tracer>,
+    sink: Option<TraceSink>,
 }
 
 impl ReferenceBackend {
@@ -60,6 +63,13 @@ impl Backend for ReferenceBackend {
         // uniform Backend contract: exact (flattened) input dimension
         if x.len() != m.input_len {
             return Err(EngineError::InputSize { expected: m.input_len, got: x.len() });
+        }
+        let _span = self
+            .sink
+            .as_ref()
+            .map(|s| s.span("reference", "infer", vec![("layers", m.model.layers.len().into())]));
+        if let Some(s) = &self.sink {
+            s.note_bus((x.len() + m.output_len) as u64);
         }
         let out = qmodel_forward(&m.model, x);
         // bookkeeping: bus bytes = model input + output, like the NMCU.
@@ -96,5 +106,14 @@ impl Backend for ReferenceBackend {
 
     fn reset_stats(&mut self) {
         self.stats = NmcuStats::default();
+    }
+
+    fn set_tracer(&mut self, tracer: Option<Tracer>) {
+        self.sink = tracer.as_ref().map(|t| t.sink("reference"));
+        self.tracer = tracer;
+    }
+
+    fn trace(&self) -> Option<Tracer> {
+        self.tracer.clone()
     }
 }

@@ -82,6 +82,7 @@
 
 use super::{Backend, EngineError, ModelHandle, Result};
 use crate::metrics::{ServerStats, ServingMeter};
+use crate::trace::{TraceSink, Tracer};
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, SyncSender, TryRecvError, TrySendError};
@@ -184,16 +185,26 @@ struct Shared {
     /// shutdown requested — the scheduler drains and exits
     stop: AtomicBool,
     meter: Mutex<ServingMeter>,
+    /// the tracer the backend carried into [`InferenceServer::start`],
+    /// if any: each server thread opens its own ring from it, and
+    /// `snapshot` reads the attribution rollup
+    tracer: Option<Tracer>,
+    /// admission-side ring, shared by every [`ServerClient`] clone —
+    /// the one deliberately contended sink (admissions are rare and
+    /// cheap relative to the per-op writes inside the backend)
+    admit_sink: Option<TraceSink>,
 }
 
 impl Shared {
-    fn new(max_batch: usize) -> Shared {
+    fn new(max_batch: usize, tracer: Option<Tracer>) -> Shared {
         Shared {
             submitted: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
             queued: AtomicUsize::new(0),
             stop: AtomicBool::new(false),
             meter: Mutex::new(ServingMeter::new(max_batch)),
+            admit_sink: tracer.as_ref().map(|t| t.sink("admit")),
+            tracer,
         }
     }
 
@@ -208,11 +219,13 @@ impl Shared {
         // the latency window and build the snapshot OUTSIDE it — stats
         // polling must never stall the dispatch hot path
         let meter = self.meter().clone();
-        meter.snapshot(
+        let mut stats = meter.snapshot(
             self.submitted.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
             self.queued.load(Ordering::Relaxed),
-        )
+        );
+        stats.attribution = self.tracer.as_ref().map(|t| t.attribution());
+        stats
     }
 }
 
@@ -274,11 +287,17 @@ impl ServerClient {
         match self.tx.try_send(req) {
             Ok(()) => {
                 self.shared.submitted.fetch_add(1, Ordering::Relaxed);
+                if let Some(s) = &self.shared.admit_sink {
+                    s.instant("server", "admit", vec![("model", handle.index().into())]);
+                }
                 Ok(Pending { rx })
             }
             Err(TrySendError::Full(_)) => {
                 self.shared.queued.fetch_sub(1, Ordering::Relaxed);
                 self.shared.rejected.fetch_add(1, Ordering::Relaxed);
+                if let Some(s) = &self.shared.admit_sink {
+                    s.instant("server", "reject", vec![("model", handle.index().into())]);
+                }
                 Err(EngineError::QueueFull { depth: self.depth })
             }
             Err(TrySendError::Disconnected(_)) => {
@@ -351,7 +370,11 @@ impl InferenceServer {
     /// (`max_batch == 0` or `queue_depth == 0`).
     pub fn start(backend: Box<dyn Backend>, policy: BatchPolicy) -> Result<InferenceServer> {
         policy.validate()?;
-        let shared = Arc::new(Shared::new(policy.max_batch));
+        // tracing rides in on the backend: attach a Tracer with
+        // Backend::set_tracer BEFORE start and the server discovers it
+        // here — admit/coalesce/dispatch events join the same trace as
+        // the device-level spans, and stats() carries the rollup
+        let shared = Arc::new(Shared::new(policy.max_batch, backend.trace()));
         let (tx, rx) = mpsc::sync_channel::<Request>(policy.queue_depth);
         // rendezvous channel: the dispatch thread takes the next batch
         // the instant it finishes the current one (the ping-pong handoff)
@@ -489,6 +512,8 @@ fn run_scheduler(
     let mut pending: PendingQueues = BTreeMap::new();
     let mut open = true; // admission senders still connected
     let mut dispatcher_gone = false;
+    // the scheduler's own ring: coalescing decisions, written only here
+    let sink = shared.tracer.as_ref().map(|t| t.sink("scheduler"));
 
     'main: while open || !pending.is_empty() {
         // 1. drain everything already admitted into the per-model queues
@@ -515,6 +540,9 @@ fn run_scheduler(
             // the gauge tracks waiting requests: these now leave the
             // coalescing queues for the dispatcher
             shared.queued.fetch_sub(take, Ordering::Relaxed);
+            if let Some(s) = &sink {
+                s.instant("server", "coalesce", vec![("model", key.into()), ("n", take.into())]);
+            }
             let batch = MicroBatch { handle: ModelHandle::from_index(key), requests };
             // rendezvous: blocks while the dispatcher is busy, which is
             // exactly when arrivals should keep coalescing behind us
@@ -634,8 +662,11 @@ fn run_dispatcher(
     batch_rx: Receiver<MicroBatch>,
     shared: Arc<Shared>,
 ) -> Box<dyn Backend> {
+    // the dispatcher's own ring: one span per executed micro-batch,
+    // written only from this thread
+    let sink = shared.tracer.as_ref().map(|t| t.sink("dispatch"));
     while let Ok(batch) = batch_rx.recv() {
-        execute_batch(backend.as_mut(), batch, &shared);
+        execute_batch(backend.as_mut(), batch, &shared, sink.as_ref());
     }
     // channel closed: the scheduler exited; hand the backend back
     backend
@@ -644,7 +675,12 @@ fn run_dispatcher(
 /// Run one micro-batch. Per-request validation happens here (against the
 /// backend's own model metadata) so one malformed request gets its own
 /// typed error instead of poisoning its batch-mates.
-fn execute_batch(backend: &mut dyn Backend, batch: MicroBatch, shared: &Shared) {
+fn execute_batch(
+    backend: &mut dyn Backend,
+    batch: MicroBatch,
+    shared: &Shared,
+    sink: Option<&TraceSink>,
+) {
     let info = match backend.model_info(batch.handle) {
         Some(info) => info,
         None => {
@@ -668,6 +704,20 @@ fn execute_batch(backend: &mut dyn Backend, batch: MicroBatch, shared: &Shared) 
 
     let xs: Vec<Vec<i8>> = valid.iter_mut().map(|r| std::mem::take(&mut r.input)).collect();
     shared.meter().record_batch(xs.len());
+    let _span = sink.map(|s| {
+        s.span(
+            "server",
+            "dispatch",
+            vec![("model", batch.handle.index().into()), ("n", xs.len().into())],
+        )
+    });
+    if let Some(s) = sink {
+        // queue wait is admission -> dispatch, priced per request so the
+        // rollup's mean weights a request in a big batch like any other
+        for req in &valid {
+            s.note_request(req.enqueued.elapsed(), xs.len());
+        }
+    }
     match backend.infer_batch(batch.handle, &xs) {
         Ok(outputs) => {
             // one meter lock for the whole batch, and record before

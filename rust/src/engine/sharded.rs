@@ -37,6 +37,7 @@ use crate::config::ChipConfig;
 use crate::metrics::reliability::{ReliabilityMeter, ReliabilityStats};
 use crate::nmcu::NmcuStats;
 use crate::reliability::{HealthReport, HealthStatus, ScrubPolicy};
+use crate::trace::{TraceSink, Tracer};
 
 /// When and how a self-healing fleet scrubs, quarantines, repairs, and
 /// readmits its shards (see the [module docs](self)).
@@ -100,6 +101,12 @@ pub struct ShardedEngine<B: Backend = NmcuBackend> {
     /// `shards`
     last_clean_scrub: Vec<u64>,
     meter: ReliabilityMeter,
+    /// the tracer attached via [`Backend::set_tracer`], if any
+    /// (forwarded to every shard, which each open their own ring)
+    tracer: Option<Tracer>,
+    /// the coordinator's own ring: fan-out spans and reliability
+    /// instants, written only from the calling thread
+    sink: Option<TraceSink>,
 }
 
 impl<B: Backend> std::fmt::Debug for ShardedEngine<B> {
@@ -143,6 +150,8 @@ impl<B: Backend> ShardedEngine<B> {
             batches: 0,
             last_clean_scrub: vec![0; n],
             meter: ReliabilityMeter::new(),
+            tracer: None,
+            sink: None,
         })
     }
 
@@ -229,9 +238,25 @@ impl<B: Backend> ShardedEngine<B> {
         for (i, result) in scrubbed {
             let reports = result?;
             self.meter.note_scrub(&reports);
-            if reports.iter().any(|r| r.worst() == HealthStatus::Failed) {
+            let failed = reports.iter().any(|r| r.worst() == HealthStatus::Failed);
+            if let Some(s) = &self.sink {
+                s.instant(
+                    "reliability",
+                    "scrub",
+                    vec![("shard", i.into()), ("failed", u64::from(failed).into())],
+                );
+            }
+            if failed {
+                let latency = self.batches - self.last_clean_scrub[i];
                 self.states[i] = ShardState::Quarantined { attempts: 0 };
-                self.meter.note_quarantine(self.batches - self.last_clean_scrub[i]);
+                self.meter.note_quarantine(latency);
+                if let Some(s) = &self.sink {
+                    s.instant(
+                        "reliability",
+                        "quarantine",
+                        vec![("shard", i.into()), ("latency_batches", latency.into())],
+                    );
+                }
             } else {
                 self.last_clean_scrub[i] = self.batches;
             }
@@ -268,6 +293,13 @@ impl<B: Backend> ShardedEngine<B> {
             return Err(EngineError::Degraded { active: 0, total });
         }
         let per_shard = xs.len().div_ceil(active.len());
+        let _span = self.sink.as_ref().map(|s| {
+            s.span(
+                "sharded",
+                "fan_out",
+                vec![("n", xs.len().into()), ("active", active.len().into())],
+            )
+        });
         let mut results: Vec<Result<Vec<Vec<i8>>>> = Vec::new();
         let mut repair_outcome: Option<(usize, Result<bool>)> = None;
         std::thread::scope(|scope| {
@@ -310,10 +342,17 @@ impl<B: Backend> ShardedEngine<B> {
             // is a failed attempt, not a serving failure
             let ok = matches!(outcome, Ok(true));
             self.meter.note_repair(ok);
+            if let Some(s) = &self.sink {
+                let name = if ok { "repair_ok" } else { "repair_fail" };
+                s.instant("reliability", name, vec![("shard", i.into())]);
+            }
             if ok {
                 self.states[i] = ShardState::Active;
                 self.last_clean_scrub[i] = self.batches;
                 self.meter.note_readmission();
+                if let Some(s) = &self.sink {
+                    s.instant("reliability", "readmit", vec![("shard", i.into())]);
+                }
             } else if let ShardState::Quarantined { attempts } = self.states[i] {
                 let attempts = attempts.saturating_add(1);
                 self.states[i] = if attempts >= policy.max_repair_attempts {
@@ -321,6 +360,11 @@ impl<B: Backend> ShardedEngine<B> {
                 } else {
                     ShardState::Quarantined { attempts }
                 };
+                if self.states[i] == ShardState::Dead {
+                    if let Some(s) = &self.sink {
+                        s.instant("reliability", "dead", vec![("shard", i.into())]);
+                    }
+                }
             }
         }
         let mut out = Vec::with_capacity(xs.len());
@@ -415,6 +459,13 @@ impl<B: Backend> Backend for ShardedEngine<B> {
             return self.infer_batch_self_healing(handle, xs, &policy);
         }
         let per_shard = xs.len().div_ceil(self.shards.len());
+        let _span = self.sink.as_ref().map(|s| {
+            s.span(
+                "sharded",
+                "fan_out",
+                vec![("n", xs.len().into()), ("active", self.shards.len().into())],
+            )
+        });
         let mut results: Vec<Result<Vec<Vec<i8>>>> = Vec::new();
         std::thread::scope(|scope| {
             let mut workers = Vec::new();
@@ -485,6 +536,22 @@ impl<B: Backend> Backend for ShardedEngine<B> {
             }
         }
         Ok(true)
+    }
+
+    /// Attach the tracer to the whole fleet: every shard opens its own
+    /// ring (single-writer even across the fan-out worker threads), and
+    /// the coordinator keeps a "sharded" ring for fan-out spans and
+    /// reliability instants, written only from the calling thread.
+    fn set_tracer(&mut self, tracer: Option<Tracer>) {
+        for shard in &mut self.shards {
+            shard.set_tracer(tracer.clone());
+        }
+        self.sink = tracer.as_ref().map(|t| t.sink("sharded"));
+        self.tracer = tracer;
+    }
+
+    fn trace(&self) -> Option<Tracer> {
+        self.tracer.clone()
     }
 
     /// [`EngineError::Degraded`] while any shard is out of rotation.

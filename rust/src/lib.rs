@@ -98,4 +98,5 @@ pub mod reliability;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod soc;
+pub mod trace;
 pub mod util;

@@ -34,6 +34,12 @@
 //!
 //! Global options: --config <file.json>, --set section.key=value (comma
 //! separated list), --artifacts <dir>, --seed <n>.
+//!
+//! `infer`, `serve`, and every `bench-*` mode also take
+//! `--trace-out <file>`: attach the cross-stack tracer
+//! ([`nvmcu::trace`]), write the run as Chrome trace-event JSON to
+//! `<file>` (load it in chrome://tracing or ui.perfetto.dev), and print
+//! the cycle/energy attribution rollup.
 
 use nvmcu::analog::{ChargePump, DriverKind, PumpMode, WlDriver, WlOp};
 use nvmcu::artifacts;
@@ -47,6 +53,7 @@ use nvmcu::engine::{
 };
 use nvmcu::metrics;
 use nvmcu::metrics::ServerStats;
+use nvmcu::trace::Tracer;
 use nvmcu::util::bench::Table;
 use nvmcu::util::cli::Args;
 use nvmcu::util::rng::{seed_from_env, Rng};
@@ -74,6 +81,31 @@ fn art_dir(args: &Args) -> std::path::PathBuf {
     args.opt("artifacts").map(Into::into).unwrap_or_else(artifacts::artifacts_dir)
 }
 
+/// A [`Tracer`] when `--trace-out <file>` was passed, else `None`.
+/// Attach it to the backend with `set_tracer`, run the workload, then
+/// call [`finish_trace`] to write the file and print the rollup.
+fn trace_from_args(args: &Args, cfg: &ChipConfig) -> Option<Tracer> {
+    args.opt("trace-out").map(|_| Tracer::new(&cfg.power))
+}
+
+/// Export the trace where `--trace-out` asked and print the
+/// cycle/energy attribution rollup. No-op without the flag.
+fn finish_trace(args: &Args, tracer: &Option<Tracer>) {
+    let (Some(t), Some(path)) = (tracer, args.opt("trace-out")) else { return };
+    match std::fs::write(path, t.export_chrome_json()) {
+        Ok(()) => {
+            println!(
+                "trace: {} events ({} dropped) -> {path} \
+                 (load in chrome://tracing or ui.perfetto.dev)",
+                t.len(),
+                t.dropped()
+            );
+            println!("{}", t.attribution().summary());
+        }
+        Err(e) => eprintln!("trace: failed to write {path}: {e}"),
+    }
+}
+
 fn main() {
     let args = Args::parse(true);
     let cmd = args.subcommand.clone().unwrap_or_else(|| "help".into());
@@ -97,6 +129,8 @@ fn main() {
                  usage: nvmcu <table1|table2|fig5|fig6|infer|serve|bench-serve|bench-conv\
                  |bench-mcu|bench-reliability|pump|retention|info> [options]\n\
                  options: --config <json> --set k=v[,k=v] --artifacts <dir> --seed <n>\n\
+                 \x20        --trace-out <file> (infer/serve/bench-*: write a Chrome trace\n\
+                 \x20        + attribution rollup)\n\
                  infer:   --backend nmcu|mcu|reference|hlo --batch <n> --shards <n> --index <i>\n\
                  serve:   --backend --shards --requests <n> --rate <req/s> --max-batch <n>\n\
                  \x20        --max-wait-us <us> --queue-depth <n>\n\
@@ -272,6 +306,9 @@ fn cmd_infer(args: &Args) {
         Engine::from_kind(kind, &cfg, &dir).unwrap_or_else(|e| fail(e))
     };
 
+    let tracer = trace_from_args(args, &cfg);
+    engine.set_tracer(tracer.clone());
+
     let h = engine.program(&inputs.mnist_model).unwrap_or_else(|e| fail(e));
     let n = inputs.mnist_test.len();
     let xs: Vec<Vec<i8>> =
@@ -322,6 +359,7 @@ fn cmd_infer(args: &Args) {
             st.bus_bytes as f64 / per
         );
     }
+    finish_trace(args, &tracer);
 }
 
 /// The MNIST-shaped synthetic model (784 -> 43 -> 10) used by `serve`
@@ -401,6 +439,9 @@ fn cmd_serve(args: &Args) {
         Engine::from_kind(kind, &cfg, &dir).unwrap_or_else(|e| fail(e))
     };
     let backend_name = engine.backend_name();
+    // the server discovers the tracer through Backend::trace at start
+    let tracer = trace_from_args(args, &cfg);
+    engine.set_tracer(tracer.clone());
     let h = engine.program(&model).unwrap_or_else(|e| fail(e));
     let server =
         InferenceServer::start(engine.into_backend(), policy).unwrap_or_else(|e| fail(e));
@@ -456,6 +497,7 @@ fn cmd_serve(args: &Args) {
             metrics::nmcu_latency_s(&st, &cfg) * 1e6 / ok as f64
         );
     }
+    finish_trace(args, &tracer);
 }
 
 /// One bench-serve trial: burst-submit `pool` through an
@@ -467,12 +509,14 @@ fn run_serving_trial(
     pool: &[Vec<i8>],
     n_shards: usize,
     max_batch: usize,
+    tracer: Option<&Tracer>,
 ) -> (Duration, ServerStats) {
     let mut backend: Box<dyn Backend> = if n_shards > 1 {
         Box::new(ShardedEngine::new(cfg, n_shards).expect("shards"))
     } else {
         Box::new(NmcuBackend::new(cfg))
     };
+    backend.set_tracer(tracer.cloned());
     let h = backend.program(model).expect("program");
     let policy = BatchPolicy {
         max_batch,
@@ -512,9 +556,11 @@ fn cmd_bench_serve(args: &Args) {
     let mut t = Table::new(&[
         "mode", "req/s", "speedup", "mean batch", "p50 ms", "p95 ms", "p99 ms",
     ]);
+    let tracer = trace_from_args(args, &cfg);
     let mut baseline_rps = 0.0f64;
     for (label, n_shards, mb) in &modes {
-        let (wall, stats) = run_serving_trial(&cfg, &model, &pool, *n_shards, *mb);
+        let (wall, stats) =
+            run_serving_trial(&cfg, &model, &pool, *n_shards, *mb, tracer.as_ref());
         let rps = n_req as f64 / wall.as_secs_f64().max(1e-12);
         if baseline_rps == 0.0 {
             baseline_rps = rps;
@@ -534,6 +580,7 @@ fn cmd_bench_serve(args: &Args) {
         "\ncoalescing is what unlocks the fleet: batch=1 keeps {shards} shards \
          as idle as 1 chip; micro-batches fan across all of them."
     );
+    finish_trace(args, &tracer);
 }
 
 /// Conv2D workload bench: serve the synthetic CNN and a dense MLP with
@@ -578,6 +625,7 @@ fn cmd_bench_conv(args: &Args) {
     nvmcu::engine::assert_chip_matches_reference(&cfg, &cnn, &probe);
 
     let pool = workload::random_inputs(&mut r, n_req, k);
+    let tracer = trace_from_args(args, &cfg);
     let mut t = Table::new(&["model", "backend", "req/s", "eflash reads/inf", "p. MACs/inf"]);
     for (model, label) in [(&cnn, "conv"), (&mlp, "dense-eq")] {
         for n_shards in [1usize, shards] {
@@ -586,6 +634,7 @@ fn cmd_bench_conv(args: &Args) {
             } else {
                 Box::new(NmcuBackend::new(&cfg))
             };
+            backend.set_tracer(tracer.clone());
             let h = backend.program(model).expect("program");
             backend.reset_stats();
             let t0 = Instant::now();
@@ -609,6 +658,7 @@ fn cmd_bench_conv(args: &Args) {
          show the same sharded scaling applies to both.",
         cnn.total_cells()
     );
+    finish_trace(args, &tracer);
 }
 
 /// Firmware-in-the-loop bench: the same workloads served by the direct
@@ -639,6 +689,7 @@ fn cmd_bench_mcu(args: &Args) {
         4,
     );
     println!("bench-mcu: firmware-in-the-loop serving vs direct chip, batch {n_req}\n");
+    let tracer = trace_from_args(args, &cfg);
     let mut t = Table::new(&[
         "model", "backend", "req/s", "NMCU cycles/inf", "instret/inf", "instret/launch",
     ]);
@@ -651,6 +702,7 @@ fn cmd_bench_mcu(args: &Args) {
             pool.iter().map(|x| sw.infer(hs, x).expect("reference infer")).collect();
 
         let mut chip = NmcuBackend::new(&cfg);
+        chip.set_tracer(tracer.clone());
         let h = chip.program(model).expect("program (chip)");
         chip.reset_stats();
         let t0 = Instant::now();
@@ -668,6 +720,7 @@ fn cmd_bench_mcu(args: &Args) {
         ]);
 
         let mut mcu = McuBackend::new(&cfg);
+        mcu.set_tracer(tracer.clone());
         let h = mcu.program(model).expect("program (mcu)");
         mcu.reset_stats();
         let t0 = Instant::now();
@@ -691,6 +744,7 @@ fn cmd_bench_mcu(args: &Args) {
          control, same datapath); the firmware rows add only the RV32I control plane — \
          a handful of instructions per MVM launch, the paper's §2.2 claim."
     );
+    finish_trace(args, &tracer);
 }
 
 /// Self-healing soak: a sharded fleet serves `rounds` request rounds
@@ -729,6 +783,8 @@ fn cmd_bench_reliability(args: &Args) {
     let mut sw = ReferenceBackend::new();
     let hs = sw.program(&model).expect("reference program");
     let mut fleet = ShardedEngine::new(&cfg, shards).expect("fleet");
+    let tracer = trace_from_args(args, &cfg);
+    fleet.set_tracer(tracer.clone());
     let h = fleet.program(&model).expect("fleet program");
     fleet.enable_self_healing(QuarantinePolicy {
         scrub_every,
@@ -785,6 +841,7 @@ fn cmd_bench_reliability(args: &Args) {
          {:.1} batches, fleet back to {shards}/{shards} shards",
         rs.mean_detection_latency_batches
     );
+    finish_trace(args, &tracer);
 }
 
 fn cmd_pump(args: &Args) {

@@ -27,6 +27,7 @@
 //! assert!(stats.p50_ms <= stats.p95_ms && stats.p95_ms <= stats.p99_ms);
 //! ```
 
+use crate::trace::Attribution;
 use crate::util::stats::percentile_of_sorted;
 
 /// Cap on retained latency samples: the percentile window covers the
@@ -132,6 +133,7 @@ impl ServingMeter {
             p50_ms: percentile_of_sorted(&sorted, 50.0),
             p95_ms: percentile_of_sorted(&sorted, 95.0),
             p99_ms: percentile_of_sorted(&sorted, 99.0),
+            attribution: None,
         }
     }
 }
@@ -167,6 +169,10 @@ pub struct ServerStats {
     pub p95_ms: f64,
     /// 99th-percentile request latency [ms]
     pub p99_ms: f64,
+    /// cycle/energy rollup from the attached tracer, when the backend
+    /// handed into [`crate::engine::InferenceServer::start`] carried one
+    /// (see [`crate::trace`]); `None` on an untraced server
+    pub attribution: Option<Attribution>,
 }
 
 impl ServerStats {
@@ -186,9 +192,10 @@ impl ServerStats {
         self.batch_hist.iter().rposition(|&c| c > 0).unwrap_or(0)
     }
 
-    /// One-line human summary (the `serve` CLI prints this).
+    /// One-line human summary (the `serve` CLI prints this). A traced
+    /// server appends the attribution rollup on a second line.
     pub fn summary(&self) -> String {
-        format!(
+        let mut line = format!(
             "submitted {} | rejected {} | completed {} ({} failed) | \
              {} batches (mean {:.1}, max {}, {} degraded) | queue {} | \
              latency p50 {:.2} ms p95 {:.2} ms p99 {:.2} ms",
@@ -204,7 +211,19 @@ impl ServerStats {
             self.p50_ms,
             self.p95_ms,
             self.p99_ms,
-        )
+        );
+        if let Some(a) = &self.attribution {
+            line.push_str(&format!(
+                "\ntraced: {} device cycles | {:.3} uJ | {} bus bytes | \
+                 mean queue wait {:.3} ms | mean dispatched batch {:.1}",
+                a.total_cycles(),
+                a.total_energy_pj() / 1e6,
+                a.bus_bytes,
+                a.queue_wait.as_secs_f64() * 1e3,
+                a.batch_size,
+            ));
+        }
+        line
     }
 }
 

@@ -14,6 +14,7 @@ pub mod quant;
 
 use crate::eflash::EflashMacro;
 use crate::error::EngineError;
+use crate::trace::{stats_delta, ArgValue, TraceSink};
 pub use buffer::{FetchSource, Fetcher, PingPong};
 pub use pe::Pe;
 pub use quant::{requantize, Requant};
@@ -323,6 +324,10 @@ pub struct Nmcu {
     row_buf: Vec<i8>,
     /// scratch input slice
     x_buf: Vec<i8>,
+    /// trace sink (`None` = tracing disabled, the zero-cost path)
+    sink: Option<TraceSink>,
+    /// per-inference operator index (reset by [`Nmcu::begin_inference`])
+    op_seq: u64,
 }
 
 impl Nmcu {
@@ -336,7 +341,51 @@ impl Nmcu {
             stats: NmcuStats::default(),
             row_buf: vec![0; cfg.pes_per_macro * cfg.lanes_per_pe],
             x_buf: vec![0; cfg.lanes_per_pe],
+            sink: None,
+            op_seq: 0,
         }
+    }
+
+    /// Attach (or with `None` detach) the sink this unit emits op spans,
+    /// EFLASH-burst instants, and DMA events through. An attached sink
+    /// never changes results, `stats`, or RNG consumption — tracing is a
+    /// pure observability overlay (pinned by the trace-invariance
+    /// property in `rust/tests/test_properties.rs`).
+    pub fn set_trace_sink(&mut self, sink: Option<TraceSink>) {
+        self.sink = sink;
+    }
+
+    /// Tracing shim around one operator: opens a span, runs `body`, and
+    /// attributes the operator's exact counter delta (a before/after
+    /// snapshot of `stats` — the same counters the aggregate reports, so
+    /// attributed cycles sum to `stats.cycles` as an identity) to the
+    /// label `op{seq}:{kind}`. With no sink attached the cost is one
+    /// branch and a `u64` increment.
+    fn traced_op<F>(
+        &mut self,
+        kind: &'static str,
+        mut begin_args: Vec<(&'static str, ArgValue)>,
+        body: F,
+    ) -> Result<Vec<i8>, EngineError>
+    where
+        F: FnOnce(&mut Self) -> Result<Vec<i8>, EngineError>,
+    {
+        let op = self.op_seq;
+        self.op_seq += 1;
+        let Some(sink) = self.sink.clone() else {
+            return body(self);
+        };
+        begin_args.insert(0, ("op", op.into()));
+        let mut span = sink.span("nmcu", kind, begin_args);
+        let before = self.stats;
+        let result = body(self);
+        let delta = stats_delta(&before, &self.stats);
+        sink.note_op(op, kind, &delta);
+        span.arg("cycles", delta.cycles);
+        span.arg("eflash_reads", delta.eflash_reads);
+        span.arg("mac_ops", delta.mac_ops);
+        span.arg("writebacks", delta.writebacks);
+        result
     }
 
     /// Host-side input load (counted as bus traffic — the ONLY activation
@@ -351,6 +400,10 @@ impl Nmcu {
         // handled by the folded bias, padded EFLASH cells see x=0)
         self.fetcher.load_input(x_q, 0);
         self.stats.bus_bytes = self.stats.bus_bytes.saturating_add(x_q.len() as u64);
+        if let Some(s) = &self.sink {
+            s.note_bus(x_q.len() as u64);
+            s.instant("nmcu", "dma_in", vec![("bytes", x_q.len().into())]);
+        }
         Ok(())
     }
 
@@ -362,6 +415,16 @@ impl Nmcu {
     /// — the NMCU must never abort a serving process on bad input (the
     /// firmware path reports it through the status register instead).
     pub fn execute_layer(
+        &mut self,
+        eflash: &mut EflashMacro,
+        desc: &LayerDesc,
+    ) -> Result<Vec<i8>, EngineError> {
+        self.traced_op("dense", vec![("k", desc.k.into()), ("n", desc.n.into())], |nm| {
+            nm.execute_layer_impl(eflash, desc)
+        })
+    }
+
+    fn execute_layer_impl(
         &mut self,
         eflash: &mut EflashMacro,
         desc: &LayerDesc,
@@ -505,6 +568,15 @@ impl Nmcu {
                     self.stats.cycles.saturating_add(self.cfg.writeback_cycles);
             }
         }
+        if let Some(s) = &self.sink {
+            // one burst per launch: the flow control streams
+            // pairs x k_tiles row reads back-to-back off the 256-cell port
+            s.instant(
+                "nmcu",
+                "eflash_burst",
+                vec![("reads", (pairs * k_tiles).into()), ("cols", desc.n.into())],
+            );
+        }
     }
 
     /// Run one Conv2D layer as im2col-lowered MVMs over the
@@ -520,6 +592,21 @@ impl Nmcu {
     /// (bit-exact flatten); program-time validation guarantees the
     /// staging fits whenever a dense layer follows.
     pub fn execute_conv(
+        &mut self,
+        eflash: &mut EflashMacro,
+        cd: &ConvDesc,
+        x: &[i8],
+    ) -> Result<Vec<i8>, EngineError> {
+        let begin = vec![
+            ("k", cd.mvm.k.into()),
+            ("cout", cd.mvm.n.into()),
+            ("kh", cd.kh.into()),
+            ("kw", cd.kw.into()),
+        ];
+        self.traced_op("conv", begin, |nm| nm.execute_conv_impl(eflash, cd, x))
+    }
+
+    fn execute_conv_impl(
         &mut self,
         eflash: &mut EflashMacro,
         cd: &ConvDesc,
@@ -612,6 +699,12 @@ impl Nmcu {
     /// maxima over the activation SRAM, no EFLASH traffic, one modeled
     /// cycle per window tap plus the write-back cost per output.
     pub fn execute_pool(&mut self, pd: &PoolDesc, x: &[i8]) -> Result<Vec<i8>, EngineError> {
+        self.traced_op("pool", vec![("kh", pd.kh.into()), ("kw", pd.kw.into())], |nm| {
+            nm.execute_pool_impl(pd, x)
+        })
+    }
+
+    fn execute_pool_impl(&mut self, pd: &PoolDesc, x: &[i8]) -> Result<Vec<i8>, EngineError> {
         if x.len() != pd.in_shape.len() {
             return Err(EngineError::BadDescriptor {
                 reason: format!(
@@ -660,13 +753,19 @@ impl Nmcu {
     /// Read the final result back over the bus (counted).
     pub fn read_output(&mut self, n: usize) -> Vec<i8> {
         self.stats.bus_bytes = self.stats.bus_bytes.saturating_add(n as u64);
+        if let Some(s) = &self.sink {
+            s.note_bus(n as u64);
+            s.instant("nmcu", "dma_out", vec![("bytes", n.into())]);
+        }
         self.pingpong.read_side()[..n].to_vec()
     }
 
-    /// Reset per-inference state (buffers + fetch source, not counters).
+    /// Reset per-inference state (buffers + fetch source + the traced
+    /// operator index, not counters).
     pub fn begin_inference(&mut self) {
         self.fetcher.source = FetchSource::InputBuffer;
         self.fetcher.pad = 0;
+        self.op_seq = 0;
     }
 
     /// Wall-clock estimate at the configured NMCU clock.

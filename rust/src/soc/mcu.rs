@@ -8,6 +8,7 @@ use crate::config::ChipConfig;
 use crate::cpu::{Cpu, Event, Mem};
 use crate::eflash::EflashMacro;
 use crate::nmcu::{ConvDesc, LayerDesc, Nmcu, PoolDesc, Requant, Shape};
+use crate::trace::TraceSink;
 
 /// Why `run` returned (the firmware execution outcomes the host — or
 /// `engine::McuBackend` — dispatches on).
@@ -50,6 +51,10 @@ pub struct Mcu {
     pub act: Vec<i8>,
     /// NMCU launches serviced (one per custom-0 / CTRL / OP_LAUNCH)
     pub launches: u64,
+    /// trace ring shared with the host backend and the NMCU (see
+    /// [`crate::trace`]): firmware step markers and DMA instants land
+    /// on the same track as the op spans they trigger
+    sink: Option<TraceSink>,
 }
 
 impl Mcu {
@@ -62,6 +67,7 @@ impl Mcu {
             nmcu: Nmcu::new(&cfg.nmcu),
             act: Vec::new(),
             launches: 0,
+            sink: None,
         }
     }
 
@@ -74,7 +80,17 @@ impl Mcu {
             nmcu: Nmcu::new(&cfg.nmcu),
             act: Vec::new(),
             launches: 0,
+            sink: None,
         }
+    }
+
+    /// Attach (or detach, with `None`) a trace sink. The same sink is
+    /// forwarded to the NMCU, so firmware step markers and DMA instants
+    /// interleave with the op spans they trigger on a single track.
+    /// Tracing never changes execution — see [`crate::trace`].
+    pub fn set_trace_sink(&mut self, sink: Option<TraceSink>) {
+        self.nmcu.set_trace_sink(sink.clone());
+        self.sink = sink;
     }
 
     /// Load firmware words into SRAM at the reset vector.
@@ -178,11 +194,18 @@ impl Mcu {
                     // a fault, not a panic or a silent truncation
                     if len > self.nmcu.cfg.act_capacity || !self.bus.sram_in_range(addr, len) {
                         self.bus.nmcu_status = 2;
+                        if let Some(s) = &self.sink {
+                            s.instant("soc", "fw_fault", vec![("cause", "act_load".into())]);
+                        }
                     } else {
                         self.act =
                             self.bus.sram_slice(addr, len).iter().map(|&b| b as i8).collect();
                         // the one input transfer a conv-first model pays
                         self.nmcu.stats.bus_bytes += len as u64;
+                        if let Some(s) = &self.sink {
+                            s.note_bus(len as u64);
+                            s.instant("soc", "dma_act_load", vec![("bytes", len.into())]);
+                        }
                     }
                 }
                 Pending::ActStore => {
@@ -195,10 +218,17 @@ impl Mcu {
                         || !self.bus.sram_in_range(addr, len)
                     {
                         self.bus.nmcu_status = 2;
+                        if let Some(s) = &self.sink {
+                            s.instant("soc", "fw_fault", vec![("cause", "act_store".into())]);
+                        }
                     } else {
                         let bytes: Vec<u8> = self.act[..len].iter().map(|&v| v as u8).collect();
                         self.bus.sram_write(addr, &bytes);
                         self.nmcu.stats.bus_bytes += len as u64;
+                        if let Some(s) = &self.sink {
+                            s.note_bus(len as u64);
+                            s.instant("soc", "dma_act_store", vec![("bytes", len.into())]);
+                        }
                     }
                 }
                 Pending::InputLoad => {
@@ -208,6 +238,9 @@ impl Mcu {
                     // a fault, not a slice panic
                     if !self.bus.sram_in_range(addr, len) {
                         self.bus.nmcu_status = 2;
+                        if let Some(s) = &self.sink {
+                            s.instant("soc", "fw_fault", vec![("cause", "input_load".into())]);
+                        }
                     } else {
                         let bytes: Vec<i8> = self
                             .bus
@@ -215,8 +248,17 @@ impl Mcu {
                             .iter()
                             .map(|&b| b as i8)
                             .collect();
+                        // (bus bytes + the dma_in instant come from
+                        // Nmcu::load_input itself — same shared sink)
                         if self.nmcu.load_input(&bytes).is_err() {
                             self.bus.nmcu_status = 2;
+                            if let Some(s) = &self.sink {
+                                s.instant(
+                                    "soc",
+                                    "fw_fault",
+                                    vec![("cause", "input_load".into())],
+                                );
+                            }
                         }
                     }
                 }
@@ -230,7 +272,12 @@ impl Mcu {
                         || !self.bus.sram_in_range(addr, len)
                     {
                         self.bus.nmcu_status = 2;
+                        if let Some(s) = &self.sink {
+                            s.instant("soc", "fw_fault", vec![("cause", "output_store".into())]);
+                        }
                     } else {
+                        // (bus bytes + the dma_out instant come from
+                        // Nmcu::read_output itself — same shared sink)
                         let out = self.nmcu.read_output(len);
                         let bytes: Vec<u8> = out.iter().map(|&v| v as u8).collect();
                         self.bus.sram_write(addr, &bytes);
@@ -240,6 +287,9 @@ impl Mcu {
                     self.nmcu.begin_inference();
                     // a new inference clears any sticky fault status
                     self.bus.nmcu_status = 0;
+                    if let Some(s) = &self.sink {
+                        s.instant("soc", "fw_begin", vec![]);
+                    }
                 }
             }
         }
@@ -255,6 +305,9 @@ impl Mcu {
     /// pipeline would compute on stale buffer contents, so it skips the
     /// MVM entirely and reports the fault again.
     fn launch(&mut self, desc_addr: u32) {
+        if let Some(s) = &self.sink {
+            s.instant("soc", "fw_launch", vec![("desc", u64::from(desc_addr).into())]);
+        }
         let ok = self.bus.nmcu_status != 2
             && self.bus.data_in_range(desc_addr, DESC_WORDS * 4)
             && {
@@ -272,6 +325,12 @@ impl Mcu {
             };
         self.bus.nmcu_status = if ok { 1 } else { 2 };
         self.launches += 1;
+        if let Some(s) = &self.sink {
+            if !ok {
+                s.instant("soc", "fw_fault", vec![("cause", "launch".into())]);
+            }
+            s.instant("soc", "fw_status", vec![("status", u64::from(self.bus.nmcu_status).into())]);
+        }
     }
 
     /// One *tagged* op launch ([`super::nmcu_reg::OP_LAUNCH`]): read the
@@ -282,9 +341,18 @@ impl Mcu {
     /// and leave their output there. Faults report through STATUS with
     /// the same sticky semantics as the dense launch.
     fn op_launch(&mut self, desc_addr: u32) {
+        if let Some(s) = &self.sink {
+            s.instant("soc", "fw_op_launch", vec![("desc", u64::from(desc_addr).into())]);
+        }
         let ok = self.bus.nmcu_status != 2 && self.exec_tagged(desc_addr);
         self.bus.nmcu_status = if ok { 1 } else { 2 };
         self.launches += 1;
+        if let Some(s) = &self.sink {
+            if !ok {
+                s.instant("soc", "fw_fault", vec![("cause", "op_launch".into())]);
+            }
+            s.instant("soc", "fw_status", vec![("status", u64::from(self.bus.nmcu_status).into())]);
+        }
     }
 
     fn exec_tagged(&mut self, at: u32) -> bool {

@@ -1,0 +1,724 @@
+//! # Cross-stack inference tracing and attribution
+//!
+//! The paper's headline claims are *measured* quantities — per-inference
+//! latency, energy, and utilization of the tightly coupled EFLASH/NMCU
+//! datapath (Fig 5/6, Table 1/2). The aggregate counters
+//! ([`NmcuStats`], `ServerStats`) answer "how much in total"; this
+//! module answers "where did it go": which layer burned the cycles,
+//! which op paid the EFLASH read bursts, how long a request waited in
+//! the admission queue before its micro-batch dispatched.
+//!
+//! ## Design
+//!
+//! A [`Tracer`] is a cheap cloneable handle shared by every component of
+//! one serving stack (chip, MCU, shards, scheduler). Each component
+//! registers its own bounded **span ring** ([`TraceSink`]) and is the
+//! only writer to it — the hot path takes an uncontended per-ring lock
+//! (a single atomic on every sane platform), so concurrently serving
+//! shards never contend with each other. Rings are bounded like the
+//! UART TX log ([`crate::soc::uart::TX_LOG_CAP`]): once a ring is full
+//! new events are counted in `dropped` instead of growing the host heap.
+//!
+//! Tracing is **zero-cost when disabled**: components hold an
+//! `Option<TraceSink>` that defaults to `None`, so the untraced hot path
+//! pays one branch per *operator* (not per MAC). Attaching a tracer
+//! never touches an [`NmcuStats`] counter and never consumes RNG — the
+//! same invariance contract the scrubber honors ([`crate::coordinator::Chip::scrub`]),
+//! pinned by the 25-seed property in `rust/tests/test_properties.rs`.
+//!
+//! ## Attribution
+//!
+//! Per-op spans carry the *exact* [`NmcuStats`] delta their op produced
+//! (captured as a before/after snapshot of the counters the datapath
+//! already maintains), so the per-op cycle attribution sums to
+//! `NmcuStats::cycles` as an identity, and per-op energy reuses the same
+//! [`PowerConfig`] constants as [`crate::metrics::nmcu_energy`]. The
+//! roll-up is an [`Attribution`] — surfaced through
+//! `Backend::trace()`, `ServerStats::attribution`, and the
+//! `--trace-out <file>` CLI flag.
+//!
+//! ## Export
+//!
+//! [`Tracer::export_chrome_json`] writes the Chrome `trace_event` JSON
+//! array format: load it in `chrome://tracing` or
+//! <https://ui.perfetto.dev>. Each ring renders as one named track;
+//! spans nest, instants mark firmware steps / DMA transfers / reliability
+//! events. [`Tracer::outline`] renders the timestamp-free event tree the
+//! golden-trace snapshot test pins.
+
+use crate::config::PowerConfig;
+use crate::metrics::nmcu_energy;
+use crate::nmcu::NmcuStats;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+/// Default per-ring event capacity. A full MNIST CNN inference emits a
+/// few thousand events; 64 Ki events per component track keeps a long
+/// serving soak's memory bounded while holding several hundred traced
+/// inferences.
+pub const DEFAULT_RING_CAPACITY: usize = 64 * 1024;
+
+/// The record kind of one [`TraceEvent`] (maps onto Chrome `trace_event`
+/// phases).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// A span opened (Chrome `"B"`).
+    Begin,
+    /// A span closed (Chrome `"E"`).
+    End,
+    /// A point event (Chrome `"i"`).
+    Instant,
+}
+
+/// One argument value attached to a [`TraceEvent`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum ArgValue {
+    /// An unsigned counter (cycles, bytes, indices).
+    U64(u64),
+    /// A float (durations, energies).
+    F64(f64),
+    /// A label.
+    Str(String),
+}
+
+impl ArgValue {
+    fn to_json(&self) -> Json {
+        match self {
+            ArgValue::U64(v) if *v <= i64::MAX as u64 => Json::Int(*v as i64),
+            ArgValue::U64(v) => Json::Num(*v as f64),
+            ArgValue::F64(v) => Json::Num(*v),
+            ArgValue::Str(s) => Json::Str(s.clone()),
+        }
+    }
+}
+
+impl std::fmt::Display for ArgValue {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ArgValue::U64(v) => write!(f, "{v}"),
+            ArgValue::F64(v) => write!(f, "{v:.3}"),
+            ArgValue::Str(s) => write!(f, "{s}"),
+        }
+    }
+}
+
+impl From<u64> for ArgValue {
+    fn from(v: u64) -> ArgValue {
+        ArgValue::U64(v)
+    }
+}
+
+impl From<usize> for ArgValue {
+    fn from(v: usize) -> ArgValue {
+        ArgValue::U64(v as u64)
+    }
+}
+
+impl From<f64> for ArgValue {
+    fn from(v: f64) -> ArgValue {
+        ArgValue::F64(v)
+    }
+}
+
+impl From<&str> for ArgValue {
+    fn from(v: &str) -> ArgValue {
+        ArgValue::Str(v.to_string())
+    }
+}
+
+/// One recorded event. Names and categories are static labels; all
+/// variable data rides in `args` so the golden-trace outline stays
+/// stable across runs.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    /// Begin / End / Instant.
+    pub phase: Phase,
+    /// Event name (e.g. `"dense"`, `"dispatch"`, `"fw_begin"`).
+    pub name: &'static str,
+    /// Category — which layer of the stack emitted it (e.g. `"nmcu"`,
+    /// `"server"`, `"soc"`, `"reliability"`).
+    pub cat: &'static str,
+    /// Microseconds since the tracer's epoch.
+    pub ts_us: f64,
+    /// Key/value payload. Keys ending in `_us`/`_ms` are treated as
+    /// wall-clock-dependent and excluded from [`Tracer::outline`].
+    pub args: Vec<(&'static str, ArgValue)>,
+}
+
+struct RingBuf {
+    events: Vec<TraceEvent>,
+    dropped: u64,
+}
+
+struct Ring {
+    /// Stable display id (the Chrome `tid`); allocation order.
+    id: u64,
+    label: String,
+    buf: Mutex<RingBuf>,
+}
+
+/// A read-only copy of one component's span ring (tests, tooling).
+#[derive(Clone, Debug)]
+pub struct RingSnapshot {
+    /// The ring's display id (Chrome `tid`).
+    pub id: u64,
+    /// The component label the sink was registered with.
+    pub label: String,
+    /// The retained events, in emission order.
+    pub events: Vec<TraceEvent>,
+    /// Events discarded after the ring filled (the oldest events are
+    /// retained — a trace's head carries the nesting context).
+    pub dropped: u64,
+}
+
+#[derive(Default)]
+struct Agg {
+    cycles_by_op: BTreeMap<String, u64>,
+    energy_by_layer: BTreeMap<String, f64>,
+    bus_bytes: u64,
+    queue_wait_us_sum: f64,
+    requests: u64,
+    batch_size_sum: u64,
+}
+
+struct Inner {
+    epoch: Instant,
+    capacity: usize,
+    power: PowerConfig,
+    rings: Mutex<Vec<Arc<Ring>>>,
+    next_id: AtomicU64,
+    agg: Mutex<Agg>,
+}
+
+/// Recover from a poisoned lock: a panicking traced thread must not
+/// wedge the exporter (the data is append-only counters/events, always
+/// structurally valid).
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// The per-request / per-inference cost roll-up: where the cycles and
+/// energy of the aggregate counters actually went. Produced by
+/// [`Tracer::attribution`]; surfaced through `Backend::trace()`,
+/// `ServerStats::attribution`, and `--trace-out`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Attribution {
+    /// Modeled NMCU cycles per op label (`"op{i}:{kind}"`, e.g.
+    /// `"op0:conv"`). Sums **exactly** to the `NmcuStats::cycles` the
+    /// traced components accumulated — the per-op deltas are snapshots
+    /// of the same counters, not a parallel model.
+    pub cycles_by_op: BTreeMap<String, u64>,
+    /// Modeled energy \[pJ\] per op label, priced with the same
+    /// [`PowerConfig`] constants as [`crate::metrics::nmcu_energy`]
+    /// (MAC + EFLASH read + writeback; bus energy is cross-layer and
+    /// tracked via [`Attribution::bus_bytes`]).
+    pub energy_by_layer: BTreeMap<String, f64>,
+    /// Bus bytes moved (input DMA, activation round-trips, output
+    /// readback) — matches the `NmcuStats::bus_bytes` delta.
+    pub bus_bytes: u64,
+    /// Mean admission-to-dispatch wait across served requests (zero
+    /// outside the `InferenceServer` path).
+    pub queue_wait: Duration,
+    /// Mean micro-batch size the served requests rode in (zero outside
+    /// the server path).
+    pub batch_size: f64,
+}
+
+impl Attribution {
+    /// Total attributed NMCU cycles (the sum of [`Attribution::cycles_by_op`]).
+    pub fn total_cycles(&self) -> u64 {
+        self.cycles_by_op.values().sum()
+    }
+
+    /// Total attributed op energy \[pJ\] (excludes bus transfer energy,
+    /// which is `bus_bytes * PowerConfig::bus_byte_pj`).
+    pub fn total_energy_pj(&self) -> f64 {
+        self.energy_by_layer.values().sum()
+    }
+
+    /// One-paragraph human summary (CLI `--trace-out` output).
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "attribution: {} cycles, {:.2} uJ op energy, {} bus bytes",
+            self.total_cycles(),
+            self.total_energy_pj() / 1e6,
+            self.bus_bytes
+        );
+        if self.requests_seen() {
+            s.push_str(&format!(
+                ", mean queue wait {:.2} ms, mean batch {:.1}",
+                self.queue_wait.as_secs_f64() * 1e3,
+                self.batch_size
+            ));
+        }
+        for (op, cyc) in &self.cycles_by_op {
+            let pj = self.energy_by_layer.get(op).copied().unwrap_or(0.0);
+            s.push_str(&format!("\n  {op}: {cyc} cycles, {:.2} nJ", pj / 1e3));
+        }
+        s
+    }
+
+    fn requests_seen(&self) -> bool {
+        self.batch_size > 0.0
+    }
+}
+
+/// The shared tracing handle: one per serving stack, cloned into every
+/// component that participates. Cloning is cheap (an `Arc` bump); all
+/// clones feed the same trace.
+#[derive(Clone)]
+pub struct Tracer {
+    inner: Arc<Inner>,
+}
+
+impl std::fmt::Debug for Tracer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Tracer")
+            .field("rings", &lock(&self.inner.rings).len())
+            .field("events", &self.len())
+            .field("dropped", &self.dropped())
+            .finish()
+    }
+}
+
+impl Tracer {
+    /// A tracer pricing per-op energy with `power` (pass the same
+    /// [`crate::config::ChipConfig::power`] the chip runs with, so
+    /// attribution and [`crate::metrics::nmcu_energy`] agree exactly).
+    pub fn new(power: &PowerConfig) -> Tracer {
+        Tracer::with_capacity(power, DEFAULT_RING_CAPACITY)
+    }
+
+    /// A tracer with a custom per-ring event capacity (tests exercise
+    /// the bounded-ring drop accounting with tiny capacities).
+    pub fn with_capacity(power: &PowerConfig, capacity: usize) -> Tracer {
+        Tracer {
+            inner: Arc::new(Inner {
+                epoch: Instant::now(),
+                capacity: capacity.max(1),
+                power: power.clone(),
+                rings: Mutex::new(Vec::new()),
+                next_id: AtomicU64::new(1),
+                agg: Mutex::new(Agg::default()),
+            }),
+        }
+    }
+
+    /// Register a new span ring for one component and return its sink.
+    /// The component should be the ring's only writer (that is what
+    /// keeps the hot path uncontended); the label names the track in
+    /// the exported trace.
+    pub fn sink(&self, label: &str) -> TraceSink {
+        let ring = Arc::new(Ring {
+            id: self.inner.next_id.fetch_add(1, Ordering::Relaxed),
+            label: label.to_string(),
+            buf: Mutex::new(RingBuf { events: Vec::new(), dropped: 0 }),
+        });
+        lock(&self.inner.rings).push(ring.clone());
+        TraceSink { ring, inner: self.inner.clone() }
+    }
+
+    /// Total events currently retained across all rings.
+    pub fn len(&self) -> usize {
+        let rings = lock(&self.inner.rings).clone();
+        rings.iter().map(|r| lock(&r.buf).events.len()).sum()
+    }
+
+    /// True when no events have been retained yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total events dropped across all rings after they filled. The
+    /// counter is exact: every event that did not make it into a ring is
+    /// counted here (the stress suite pins this against a known
+    /// overflow).
+    pub fn dropped(&self) -> u64 {
+        let rings = lock(&self.inner.rings).clone();
+        rings.iter().map(|r| lock(&r.buf).dropped).sum()
+    }
+
+    /// Read-only copies of every ring, in registration order.
+    pub fn rings(&self) -> Vec<RingSnapshot> {
+        let rings = lock(&self.inner.rings).clone();
+        rings
+            .iter()
+            .map(|r| {
+                let buf = lock(&r.buf);
+                RingSnapshot {
+                    id: r.id,
+                    label: r.label.clone(),
+                    events: buf.events.clone(),
+                    dropped: buf.dropped,
+                }
+            })
+            .collect()
+    }
+
+    /// The cost roll-up accumulated so far (see [`Attribution`]).
+    pub fn attribution(&self) -> Attribution {
+        let agg = lock(&self.inner.agg);
+        Attribution {
+            cycles_by_op: agg.cycles_by_op.clone(),
+            energy_by_layer: agg.energy_by_layer.clone(),
+            bus_bytes: agg.bus_bytes,
+            queue_wait: if agg.requests > 0 {
+                Duration::from_secs_f64(agg.queue_wait_us_sum / agg.requests as f64 / 1e6)
+            } else {
+                Duration::ZERO
+            },
+            batch_size: if agg.requests > 0 {
+                agg.batch_size_sum as f64 / agg.requests as f64
+            } else {
+                0.0
+            },
+        }
+    }
+
+    /// Export the whole trace as a Chrome `trace_event` JSON array —
+    /// load the file in `chrome://tracing` or <https://ui.perfetto.dev>.
+    /// Each ring becomes one named thread track; spans left open (their
+    /// `End` fell to a full ring, or a guard is still live) are closed
+    /// at the ring's last timestamp so the export is always well-formed.
+    pub fn export_chrome_json(&self) -> String {
+        let mut out: Vec<Json> = Vec::new();
+        let mut meta = BTreeMap::new();
+        meta.insert("name".to_string(), Json::Str("process_name".into()));
+        meta.insert("ph".to_string(), Json::Str("M".into()));
+        meta.insert("pid".to_string(), Json::Int(1));
+        let mut args = BTreeMap::new();
+        args.insert("name".to_string(), Json::Str("nvmcu".into()));
+        meta.insert("args".to_string(), Json::Obj(args));
+        out.push(Json::Obj(meta));
+
+        for ring in self.rings() {
+            let mut m = BTreeMap::new();
+            m.insert("name".to_string(), Json::Str("thread_name".into()));
+            m.insert("ph".to_string(), Json::Str("M".into()));
+            m.insert("pid".to_string(), Json::Int(1));
+            m.insert("tid".to_string(), Json::Int(ring.id as i64));
+            let mut args = BTreeMap::new();
+            args.insert("name".to_string(), Json::Str(ring.label.clone()));
+            m.insert("args".to_string(), Json::Obj(args));
+            out.push(Json::Obj(m));
+
+            let mut open: Vec<(&'static str, &'static str)> = Vec::new();
+            let mut last_ts = 0.0f64;
+            for ev in &ring.events {
+                last_ts = last_ts.max(ev.ts_us);
+                match ev.phase {
+                    Phase::Begin => open.push((ev.name, ev.cat)),
+                    Phase::End => {
+                        open.pop();
+                    }
+                    Phase::Instant => {}
+                }
+                out.push(event_json(ev, ring.id));
+            }
+            // auto-close spans whose End never landed in the ring
+            while let Some((name, cat)) = open.pop() {
+                let ev = TraceEvent {
+                    phase: Phase::End,
+                    name,
+                    cat,
+                    ts_us: last_ts,
+                    args: Vec::new(),
+                };
+                out.push(event_json(&ev, ring.id));
+            }
+        }
+        Json::Arr(out).to_string()
+    }
+
+    /// Render the timestamp-free event tree: per ring, every event in
+    /// emission order, indented by span depth, with wall-clock-dependent
+    /// args (`*_us`/`*_ms` keys) elided. This is what the golden-trace
+    /// snapshot test pins — the *sequence and nesting* of a fixed-seed
+    /// inference is deterministic even though timestamps are not.
+    pub fn outline(&self) -> String {
+        let mut out = String::new();
+        for ring in self.rings() {
+            out.push_str(&format!("ring {} \"{}\"\n", ring.id, ring.label));
+            if ring.dropped > 0 {
+                out.push_str(&format!("  ({} events dropped)\n", ring.dropped));
+            }
+            let mut depth = 0usize;
+            for ev in &ring.events {
+                let (marker, d) = match ev.phase {
+                    Phase::Begin => {
+                        depth += 1;
+                        (">", depth)
+                    }
+                    Phase::End => {
+                        let d = depth;
+                        depth = depth.saturating_sub(1);
+                        ("<", d)
+                    }
+                    Phase::Instant => (".", depth + 1),
+                };
+                out.push_str(&"  ".repeat(d));
+                out.push_str(marker);
+                out.push(' ');
+                out.push_str(ev.name);
+                for (k, v) in &ev.args {
+                    if k.ends_with("_us") || k.ends_with("_ms") {
+                        continue;
+                    }
+                    out.push_str(&format!(" {k}={v}"));
+                }
+                out.push('\n');
+            }
+        }
+        out
+    }
+}
+
+fn event_json(ev: &TraceEvent, tid: u64) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("name".to_string(), Json::Str(ev.name.to_string()));
+    m.insert("cat".to_string(), Json::Str(ev.cat.to_string()));
+    let ph = match ev.phase {
+        Phase::Begin => "B",
+        Phase::End => "E",
+        Phase::Instant => "i",
+    };
+    m.insert("ph".to_string(), Json::Str(ph.to_string()));
+    if ev.phase == Phase::Instant {
+        m.insert("s".to_string(), Json::Str("t".to_string()));
+    }
+    m.insert("pid".to_string(), Json::Int(1));
+    m.insert("tid".to_string(), Json::Int(tid as i64));
+    m.insert("ts".to_string(), Json::Num(ev.ts_us));
+    if !ev.args.is_empty() {
+        let mut args = BTreeMap::new();
+        for (k, v) in &ev.args {
+            args.insert(k.to_string(), v.to_json());
+        }
+        m.insert("args".to_string(), Json::Obj(args));
+    }
+    Json::Obj(m)
+}
+
+/// One component's handle into the trace: a bounded span ring the
+/// component alone writes, plus access to the shared attribution
+/// accumulator. Cloning shares the same ring (used when a component
+/// hands its sink to a sub-component so their events interleave on one
+/// track, e.g. [`crate::soc::Mcu`] and its NMCU).
+#[derive(Clone)]
+pub struct TraceSink {
+    ring: Arc<Ring>,
+    inner: Arc<Inner>,
+}
+
+impl std::fmt::Debug for TraceSink {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TraceSink").field("ring", &self.ring.label).finish()
+    }
+}
+
+impl TraceSink {
+    fn push(&self, phase: Phase, cat: &'static str, name: &'static str, args: Vec<(&'static str, ArgValue)>) {
+        let ts_us = self.inner.epoch.elapsed().as_secs_f64() * 1e6;
+        let mut buf = lock(&self.ring.buf);
+        if buf.events.len() >= self.inner.capacity {
+            // keep the oldest events: the head of a trace carries the
+            // nesting context (the UART log keeps the newest instead —
+            // there the latest firmware output matters most)
+            buf.dropped = buf.dropped.saturating_add(1);
+            return;
+        }
+        buf.events.push(TraceEvent { phase, name, cat, ts_us, args });
+    }
+
+    /// Emit a point event.
+    pub fn instant(&self, cat: &'static str, name: &'static str, args: Vec<(&'static str, ArgValue)>) {
+        self.push(Phase::Instant, cat, name, args);
+    }
+
+    /// Open a span; the returned guard closes it on drop. Args attached
+    /// to the guard ([`SpanGuard::arg`]) land on the closing event —
+    /// that is where per-op counter deltas go, since they are only known
+    /// after the op ran.
+    #[must_use = "the span closes when the guard drops"]
+    pub fn span(&self, cat: &'static str, name: &'static str, args: Vec<(&'static str, ArgValue)>) -> SpanGuard {
+        self.push(Phase::Begin, cat, name, args);
+        SpanGuard { sink: self.clone(), cat, name, end_args: Vec::new() }
+    }
+
+    /// Attribute one executed op: `delta` is the exact [`NmcuStats`]
+    /// change the op produced. Cycles accumulate under the op label;
+    /// energy is priced with the tracer's [`PowerConfig`] — identically
+    /// to [`crate::metrics::nmcu_energy`], so attributed totals match
+    /// the aggregate counters bit-for-bit (cycles) / term-for-term
+    /// (energy).
+    pub fn note_op(&self, index: u64, kind: &str, delta: &NmcuStats) {
+        let label = format!("op{index}:{kind}");
+        let e = nmcu_energy(delta, &self.inner.power);
+        let op_pj = e.mac_pj + e.eflash_read_pj + e.writeback_pj;
+        let mut agg = lock(&self.inner.agg);
+        *agg.cycles_by_op.entry(label.clone()).or_insert(0) += delta.cycles;
+        *agg.energy_by_layer.entry(label).or_insert(0.0) += op_pj;
+        agg.bus_bytes = agg.bus_bytes.saturating_add(delta.bus_bytes);
+    }
+
+    /// Attribute bus traffic that happens *outside* any op (input DMA,
+    /// activation round-trips, output readback). Call sites mirror every
+    /// `NmcuStats::bus_bytes` increment outside `execute_*`, which is
+    /// what keeps [`Attribution::bus_bytes`] equal to the aggregate.
+    pub fn note_bus(&self, bytes: u64) {
+        let mut agg = lock(&self.inner.agg);
+        agg.bus_bytes = agg.bus_bytes.saturating_add(bytes);
+    }
+
+    /// Attribute one served request: its admission-to-dispatch wait and
+    /// the micro-batch size it rode in (the `InferenceServer` dispatcher
+    /// calls this once per request at dispatch time).
+    pub fn note_request(&self, queue_wait: Duration, batch_size: usize) {
+        let mut agg = lock(&self.inner.agg);
+        agg.queue_wait_us_sum += queue_wait.as_secs_f64() * 1e6;
+        agg.requests = agg.requests.saturating_add(1);
+        agg.batch_size_sum = agg.batch_size_sum.saturating_add(batch_size as u64);
+    }
+}
+
+/// Closes its span when dropped; late args land on the closing event.
+pub struct SpanGuard {
+    sink: TraceSink,
+    cat: &'static str,
+    name: &'static str,
+    end_args: Vec<(&'static str, ArgValue)>,
+}
+
+impl SpanGuard {
+    /// Attach an argument to the closing event (counter deltas, result
+    /// sizes — anything only known after the span's work ran).
+    pub fn arg(&mut self, key: &'static str, value: impl Into<ArgValue>) {
+        self.end_args.push((key, value.into()));
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        self.sink.push(Phase::End, self.cat, self.name, std::mem::take(&mut self.end_args));
+    }
+}
+
+/// The difference between two [`NmcuStats`] snapshots — the cost of the
+/// work executed between them (all counters are monotonic).
+pub fn stats_delta(before: &NmcuStats, after: &NmcuStats) -> NmcuStats {
+    NmcuStats {
+        eflash_reads: after.eflash_reads - before.eflash_reads,
+        mac_ops: after.mac_ops - before.mac_ops,
+        writebacks: after.writebacks - before.writebacks,
+        cycles: after.cycles - before.cycles,
+        bus_bytes: after.bus_bytes - before.bus_bytes,
+        layers_run: after.layers_run - before.layers_run,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn power() -> PowerConfig {
+        PowerConfig::default()
+    }
+
+    #[test]
+    fn spans_nest_and_export_parses() {
+        let t = Tracer::new(&power());
+        let s = t.sink("chip");
+        {
+            let mut g = s.span("chip", "infer", vec![("model", 0u64.into())]);
+            s.instant("nmcu", "dma_in", vec![("bytes", 784u64.into())]);
+            g.arg("cycles", 123u64);
+        }
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.dropped(), 0);
+        let json = t.export_chrome_json();
+        let parsed = Json::parse(&json).expect("chrome export must be valid JSON");
+        // 2 metadata records + 3 events
+        assert_eq!(parsed.as_arr().unwrap().len(), 5);
+        let outline = t.outline();
+        assert!(outline.contains("> infer model=0"), "{outline}");
+        assert!(outline.contains(". dma_in bytes=784"), "{outline}");
+        assert!(outline.contains("< infer cycles=123"), "{outline}");
+    }
+
+    #[test]
+    fn ring_is_bounded_and_counts_drops_exactly() {
+        let t = Tracer::with_capacity(&power(), 8);
+        let s = t.sink("x");
+        for _ in 0..20 {
+            s.instant("t", "tick", Vec::new());
+        }
+        assert_eq!(t.len(), 8);
+        assert_eq!(t.dropped(), 12);
+        // a full ring still exports well-formed JSON
+        Json::parse(&t.export_chrome_json()).expect("full ring export parses");
+    }
+
+    #[test]
+    fn unclosed_spans_are_closed_at_export() {
+        let t = Tracer::new(&power());
+        let s = t.sink("x");
+        let _g = s.span("t", "open", Vec::new());
+        let json = t.export_chrome_json();
+        let parsed = Json::parse(&json).unwrap();
+        let arr = parsed.as_arr().unwrap();
+        let ends = arr.iter().filter(|e| e.get("ph").and_then(Json::as_str) == Some("E")).count();
+        assert_eq!(ends, 1, "export must auto-close the open span");
+        drop(_g);
+    }
+
+    #[test]
+    fn attribution_prices_ops_like_nmcu_energy() {
+        let t = Tracer::new(&power());
+        let s = t.sink("chip");
+        let delta = NmcuStats {
+            eflash_reads: 154,
+            mac_ops: 784 * 43,
+            writebacks: 43,
+            cycles: 1000,
+            bus_bytes: 0,
+            layers_run: 1,
+        };
+        s.note_op(0, "dense", &delta);
+        s.note_op(0, "dense", &delta); // second sample accumulates
+        s.note_bus(784 + 43);
+        s.note_request(Duration::from_micros(500), 4);
+        let a = t.attribution();
+        assert_eq!(a.cycles_by_op["op0:dense"], 2000);
+        assert_eq!(a.total_cycles(), 2000);
+        let e = nmcu_energy(&delta, &power());
+        let want = 2.0 * (e.mac_pj + e.eflash_read_pj + e.writeback_pj);
+        assert!((a.energy_by_layer["op0:dense"] - want).abs() < 1e-9);
+        assert_eq!(a.bus_bytes, 784 + 43);
+        assert_eq!(a.queue_wait, Duration::from_micros(500));
+        assert!((a.batch_size - 4.0).abs() < 1e-12);
+        assert!(a.summary().contains("op0:dense"));
+    }
+
+    #[test]
+    fn outline_elides_wall_clock_args() {
+        let t = Tracer::new(&power());
+        let s = t.sink("srv");
+        s.instant("server", "dispatch", vec![("n", 8u64.into()), ("wait_us", 123.4.into())]);
+        let o = t.outline();
+        assert!(o.contains("dispatch n=8"), "{o}");
+        assert!(!o.contains("wait_us"), "{o}");
+    }
+
+    #[test]
+    fn clones_share_one_trace() {
+        let t = Tracer::new(&power());
+        let t2 = t.clone();
+        let s = t2.sink("a");
+        s.instant("t", "tick", Vec::new());
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.rings()[0].label, "a");
+    }
+}

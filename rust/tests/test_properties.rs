@@ -15,6 +15,9 @@ use nvmcu::engine::{
     Backend, BatchPolicy, InferenceServer, McuBackend, NmcuBackend, ReferenceBackend,
     ShardedEngine,
 };
+use nvmcu::metrics::nmcu_energy;
+use nvmcu::nmcu::NmcuStats;
+use nvmcu::trace::Tracer;
 use nvmcu::util::prop_check;
 use nvmcu::util::rng::{seed_from_env, Rng};
 
@@ -212,6 +215,118 @@ fn mcu_firmware_bit_exact_across_all_serving_paths_25_seeds() {
             assert_eq!(&p.wait().expect("scheduled result"), w, "server-over-MCU path");
         }
         server.shutdown().expect("shutdown");
+    });
+}
+
+/// The attribution rollup is a *view* of the aggregate counters, never
+/// a parallel cost model: attributed cycles and bus bytes equal the
+/// `NmcuStats` counters exactly (both are u64 snapshots of the same
+/// state), and attributed op energy equals the same counters priced by
+/// [`nmcu_energy`] up to float association order.
+fn assert_attribution_matches(tracer: &Tracer, stats: &NmcuStats, cfg: &ChipConfig) {
+    let a = tracer.attribution();
+    assert_eq!(a.total_cycles(), stats.cycles, "attributed cycles == aggregate cycles");
+    assert_eq!(a.bus_bytes, stats.bus_bytes, "attributed bus bytes == aggregate bus bytes");
+    let e = nmcu_energy(stats, &cfg.power);
+    let want = e.mac_pj + e.eflash_read_pj + e.writeback_pj;
+    let got = a.total_energy_pj();
+    assert!(
+        (got - want).abs() <= 1e-9 * want.max(1.0),
+        "attributed op energy {got} pJ != priced counters {want} pJ"
+    );
+}
+
+/// THE tracing acceptance property: attaching a tracer changes NOTHING.
+/// For 25 random seeds and every execution path — `NmcuBackend` infer
+/// and `infer_batch`, a sharded fleet, the firmware-driven `McuBackend`,
+/// and the `InferenceServer` scheduler — a traced run produces outputs
+/// AND `NmcuStats` counters bit-identical to an untraced run of the
+/// same call sequence, and the tracer's attribution rollup equals the
+/// aggregate counters exactly (cycles, bus bytes) or to float
+/// association order (energy).
+#[test]
+fn tracing_changes_nothing_25_seeds() {
+    prop_check(25, |r| {
+        let cfg = small_cfg();
+        let model = if r.chance(0.5) {
+            let k = 1 + r.below(120) as usize;
+            let h = 1 + r.below(12) as usize;
+            let c = 1 + r.below(6) as usize;
+            synthetic_qmodel(r, "trace-mlp", k, h, c)
+        } else {
+            rand_cnn(r, false)
+        };
+        model.validate().expect("generator emits valid models");
+        let k = model.input_len();
+        let batch = 1 + r.below(3) as usize;
+        let xs: Vec<Vec<i8>> = (0..batch).map(|_| rand_input(r, k)).collect();
+
+        // NmcuBackend: identical call sequence, with and without a tracer
+        let mut plain = NmcuBackend::new(&cfg);
+        let hp = plain.program(&model).expect("plain program");
+        let mut want: Vec<Vec<i8>> =
+            xs.iter().map(|x| plain.infer(hp, x).expect("plain infer")).collect();
+        want.extend(plain.infer_batch(hp, &xs).expect("plain batch"));
+
+        let mut traced = NmcuBackend::new(&cfg);
+        let tracer = Tracer::new(&cfg.power);
+        traced.set_tracer(Some(tracer.clone()));
+        let ht = traced.program(&model).expect("traced program");
+        let mut got: Vec<Vec<i8>> =
+            xs.iter().map(|x| traced.infer(ht, x).expect("traced infer")).collect();
+        got.extend(traced.infer_batch(ht, &xs).expect("traced batch"));
+        assert_eq!(got, want, "tracing changed an NmcuBackend output");
+        assert_eq!(traced.stats(), plain.stats(), "tracing changed NmcuBackend counters");
+        assert_attribution_matches(&tracer, &traced.stats(), &cfg);
+
+        // sharded fleet
+        let n_shards = 2 + r.below(2) as usize;
+        let mut plain_fleet = ShardedEngine::new(&cfg, n_shards).expect("plain fleet");
+        let hf = plain_fleet.program(&model).expect("fleet program");
+        let fleet_want = plain_fleet.infer_batch(hf, &xs).expect("plain fleet batch");
+
+        let mut fleet = ShardedEngine::new(&cfg, n_shards).expect("traced fleet");
+        let fleet_tracer = Tracer::new(&cfg.power);
+        fleet.set_tracer(Some(fleet_tracer.clone()));
+        let hf2 = fleet.program(&model).expect("fleet program");
+        assert_eq!(
+            fleet.infer_batch(hf2, &xs).expect("traced fleet batch"),
+            fleet_want,
+            "tracing changed a sharded output"
+        );
+        assert_eq!(fleet.stats(), plain_fleet.stats(), "tracing changed fleet counters");
+        assert_attribution_matches(&fleet_tracer, &fleet.stats(), &cfg);
+
+        // firmware-driven MCU
+        let mut plain_mcu = McuBackend::new(&cfg);
+        let hm = plain_mcu.program(&model).expect("mcu program");
+        let mcu_want = plain_mcu.infer_batch(hm, &xs).expect("plain mcu batch");
+
+        let mut mcu = McuBackend::new(&cfg);
+        let mcu_tracer = Tracer::new(&cfg.power);
+        mcu.set_tracer(Some(mcu_tracer.clone()));
+        let hm2 = mcu.program(&model).expect("mcu program");
+        assert_eq!(
+            mcu.infer_batch(hm2, &xs).expect("traced mcu batch"),
+            mcu_want,
+            "tracing changed a firmware-path output"
+        );
+        assert_eq!(mcu.stats(), plain_mcu.stats(), "tracing changed MCU counters");
+        assert_attribution_matches(&mcu_tracer, &mcu.stats(), &cfg);
+
+        // the scheduler over a traced fleet: batching is timing-dependent
+        // (nondeterministic coalescing), but per-sample device work is
+        // additive, so outputs AND final counters must still match the
+        // direct traced run above
+        let server =
+            InferenceServer::start(Box::new(fleet), BatchPolicy::default()).expect("server");
+        let pendings: Vec<_> =
+            xs.iter().map(|x| server.submit(hf2, x.clone()).expect("submit")).collect();
+        for (p, w) in pendings.into_iter().zip(&fleet_want) {
+            assert_eq!(&p.wait().expect("scheduled result"), w, "traced server path");
+        }
+        let backend = server.shutdown().expect("shutdown returns the backend");
+        assert_attribution_matches(&fleet_tracer, &backend.stats(), &cfg);
     });
 }
 

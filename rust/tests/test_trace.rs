@@ -1,0 +1,470 @@
+//! Tracing subsystem integration tests: the golden-trace snapshot (the
+//! event sequence of a fixed MLP + CNN inference is pinned, timestamps
+//! and counter values are not) and the 8-thread `InferenceServer`
+//! concurrency stress suite (queue-full admission, `wait_timeout`
+//! expiry, shutdown-drain while tracing — no lost completions, no
+//! dropped-span undercount, always a well-formed Chrome export).
+//!
+//! Regenerate the golden snapshot after an intentional instrumentation
+//! change with:
+//!
+//!     NVMCU_REGEN_GOLDEN=1 cargo test --test test_trace golden
+
+use nvmcu::artifacts::{QLayer, QModel, QOp, Shape};
+use nvmcu::config::ChipConfig;
+use nvmcu::engine::{
+    Backend, BatchPolicy, EngineError, InferenceServer, NmcuBackend, Pending,
+};
+use nvmcu::nmcu::Requant;
+use nvmcu::trace::{Phase, Tracer};
+use nvmcu::util::json::Json;
+use std::time::Duration;
+
+fn small_cfg() -> ChipConfig {
+    let mut c = ChipConfig::new();
+    c.eflash.capacity_bits = 128 * 1024;
+    c
+}
+
+/// A fixed dense layer: weights/bias are constant because the snapshot
+/// pins event *structure*, not arithmetic (that is the property suite's
+/// job).
+fn dense(k: usize, n: usize) -> QLayer {
+    QLayer {
+        name: "fc".into(),
+        k,
+        n,
+        relu: false,
+        codes: vec![1i8; k * n],
+        bias: vec![0; n],
+        requant: Requant { m0: 1 << 30, shift: 30, z_out: 0 },
+        z_in: 0,
+        s_in: 1.0,
+        s_w: 1.0,
+        s_out: 1.0,
+        op: QOp::Dense,
+    }
+}
+
+/// A fixed Conv2D layer (im2col weight matrix of ones).
+fn conv(cin: usize, cout: usize, kh: usize, kw: usize, stride: usize, pad: usize) -> QLayer {
+    let k = cin * kh * kw;
+    QLayer {
+        name: "conv".into(),
+        k,
+        n: cout,
+        relu: false,
+        codes: vec![1i8; k * cout],
+        bias: vec![0; cout],
+        requant: Requant { m0: 1 << 30, shift: 30, z_out: 0 },
+        z_in: 0,
+        s_in: 1.0,
+        s_w: 1.0,
+        s_out: 1.0,
+        op: QOp::Conv2D { kh, kw, cin, cout, stride, pad },
+    }
+}
+
+/// Arg keys whose VALUES are part of the pinned structure (shapes, op
+/// indices, byte counts — all functions of the model geometry alone).
+/// Every other key is pinned by NAME only: counter values (cycles,
+/// reads) belong to the cost model, and the snapshot must not break
+/// when a power/latency constant is retuned.
+const VALUE_KEYS: &[&str] = &["op", "k", "n", "cout", "kh", "kw", "bytes", "cols", "ops", "model"];
+
+/// Timestamp-free, counter-free rendering of the trace: ring labels,
+/// event order, span nesting, and the geometry args of every event.
+fn structural_outline(t: &Tracer) -> String {
+    let mut out = String::new();
+    for ring in t.rings() {
+        out.push_str(&format!("ring \"{}\"\n", ring.label));
+        let mut depth = 0usize;
+        for ev in &ring.events {
+            let (marker, d) = match ev.phase {
+                Phase::Begin => {
+                    depth += 1;
+                    (">", depth)
+                }
+                Phase::End => {
+                    let d = depth;
+                    depth = depth.saturating_sub(1);
+                    ("<", d)
+                }
+                Phase::Instant => (".", depth + 1),
+            };
+            out.push_str(&"  ".repeat(d));
+            out.push_str(marker);
+            out.push(' ');
+            out.push_str(ev.name);
+            for (key, value) in &ev.args {
+                if VALUE_KEYS.contains(key) {
+                    out.push_str(&format!(" {key}={value}"));
+                } else {
+                    out.push_str(&format!(" {key}"));
+                }
+            }
+            out.push('\n');
+        }
+    }
+    out
+}
+
+/// The export must always parse as a JSON array, and — when no ring
+/// overflowed — every ring must hold balanced Begin/End pairs once all
+/// guards have dropped.
+fn assert_trace_well_formed(t: &Tracer) {
+    let parsed = Json::parse(&t.export_chrome_json()).expect("chrome export parses");
+    assert!(!parsed.as_arr().expect("export is an array").is_empty());
+    if t.dropped() == 0 {
+        for ring in t.rings() {
+            let begins = ring.events.iter().filter(|e| e.phase == Phase::Begin).count();
+            let ends = ring.events.iter().filter(|e| e.phase == Phase::End).count();
+            assert_eq!(
+                begins, ends,
+                "ring \"{}\": {begins} Begin vs {ends} End with no drops",
+                ring.label
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// golden-trace snapshot
+// ---------------------------------------------------------------------------
+
+/// THE golden snapshot: one fixed MLP inference and one fixed CNN
+/// inference on a traced `NmcuBackend` emit exactly the event sequence
+/// in `golden/trace_mlp_cnn.txt` — same names, same nesting, same op
+/// order, same geometry args. Timestamps and cost counters are
+/// deliberately not pinned. Regen:
+/// `NVMCU_REGEN_GOLDEN=1 cargo test --test test_trace golden`.
+#[test]
+fn golden_trace_snapshot_mlp_and_cnn() {
+    let cfg = small_cfg();
+    let mut backend = NmcuBackend::new(&cfg);
+    let tracer = Tracer::new(&cfg.power);
+    backend.set_tracer(Some(tracer.clone()));
+
+    let mlp = QModel::mlp("golden-mlp", vec![dense(4, 3), dense(3, 2)]);
+    let cnn = QModel::cnn(
+        "golden-cnn",
+        Shape { c: 1, h: 4, w: 4 },
+        vec![conv(1, 2, 2, 2, 2, 0), QLayer::maxpool("pool", 2, 2, 2), dense(2, 2)],
+    );
+    let hm = backend.program(&mlp).expect("program mlp");
+    let hc = backend.program(&cnn).expect("program cnn");
+    backend.infer(hm, &[1, 2, 3, 4]).expect("mlp inference");
+    backend.infer(hc, &[1i8; 16]).expect("cnn inference");
+
+    let got = structural_outline(&tracer);
+    if std::env::var_os("NVMCU_REGEN_GOLDEN").is_some() {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("rust/tests/golden/trace_mlp_cnn.txt");
+        std::fs::write(&path, &got).expect("write golden snapshot");
+        eprintln!("regenerated {}", path.display());
+        return;
+    }
+    let want = include_str!("golden/trace_mlp_cnn.txt");
+    assert_eq!(
+        got, want,
+        "trace structure drifted from the golden snapshot; if the change is \
+         intentional, regenerate with \
+         NVMCU_REGEN_GOLDEN=1 cargo test --test test_trace golden"
+    );
+    assert_eq!(tracer.dropped(), 0);
+    assert_trace_well_formed(&tracer);
+}
+
+// ---------------------------------------------------------------------------
+// bounded rings
+// ---------------------------------------------------------------------------
+
+/// Drop accounting is exact: the same deterministic workload emits the
+/// same event count, so a tiny ring must retain exactly `capacity`
+/// events and count every other one dropped — no undercount.
+#[test]
+fn tiny_ring_drop_accounting_is_exact() {
+    let cfg = small_cfg();
+    let mlp = QModel::mlp("drop-mlp", vec![dense(8, 4), dense(4, 2)]);
+    let x = vec![3i8; 8];
+
+    // reference run: learn the workload's total event count
+    let mut full = NmcuBackend::new(&cfg);
+    let t_full = Tracer::new(&cfg.power);
+    full.set_tracer(Some(t_full.clone()));
+    let h = full.program(&mlp).expect("program");
+    for _ in 0..50 {
+        full.infer(h, &x).expect("infer");
+    }
+    let total = t_full.len();
+    assert_eq!(t_full.dropped(), 0, "default capacity must hold this workload");
+
+    // tiny-ring run of the identical workload
+    let capacity = 16;
+    assert!(total > capacity, "workload must overflow the tiny ring");
+    let mut tiny = NmcuBackend::new(&cfg);
+    let t_tiny = Tracer::with_capacity(&cfg.power, capacity);
+    tiny.set_tracer(Some(t_tiny.clone()));
+    let h = tiny.program(&mlp).expect("program");
+    for _ in 0..50 {
+        tiny.infer(h, &x).expect("infer");
+    }
+    assert_eq!(t_tiny.len(), capacity, "ring must stay bounded at capacity");
+    assert_eq!(
+        t_tiny.len() + t_tiny.dropped() as usize,
+        total,
+        "every emitted event is either retained or counted dropped"
+    );
+    // the head of the trace is retained, and the export still parses
+    assert_eq!(t_tiny.rings()[0].events[0].name, "infer");
+    Json::parse(&t_tiny.export_chrome_json()).expect("overflowed export parses");
+}
+
+// ---------------------------------------------------------------------------
+// server concurrency stress
+// ---------------------------------------------------------------------------
+
+fn stress_model() -> QModel {
+    QModel::mlp("stress-mlp", vec![dense(64, 16), dense(16, 4)])
+}
+
+/// 8 producer threads hammer a small-queue server while a tracer is
+/// attached: every accepted request completes with the right answer
+/// (none lost, none wrong), the admission counters reconcile exactly
+/// with the per-thread tallies, the attribution rollup is populated,
+/// and the trace stays well-formed with zero drops.
+#[test]
+fn stress_8_threads_no_lost_completions_while_tracing() {
+    const THREADS: usize = 8;
+    const PER_THREAD: usize = 200;
+    let cfg = small_cfg();
+    let mut backend = NmcuBackend::new(&cfg);
+    let tracer = Tracer::new(&cfg.power);
+    backend.set_tracer(Some(tracer.clone()));
+    let model = stress_model();
+    let h = backend.program(&model).expect("program");
+    let x = vec![5i8; 64];
+    let want = backend.infer(h, &x).expect("oracle inference");
+
+    let policy = BatchPolicy {
+        max_batch: 4,
+        max_wait: Duration::ZERO, // greedy flush: drain as fast as possible
+        queue_depth: 4,           // small on purpose: admission contention
+    };
+    let server = InferenceServer::start(Box::new(backend), policy).expect("start");
+
+    let mut accepted_total = 0u64;
+    let mut rejected_total = 0u64;
+    std::thread::scope(|scope| {
+        let mut workers = Vec::new();
+        for _ in 0..THREADS {
+            let client = server.client();
+            let (x, want) = (&x, &want);
+            workers.push(scope.spawn(move || {
+                let mut pendings: Vec<Pending> = Vec::new();
+                let mut rejected = 0u64;
+                for _ in 0..PER_THREAD {
+                    match client.submit(h, x.clone()) {
+                        Ok(p) => pendings.push(p),
+                        Err(EngineError::QueueFull { .. }) => rejected += 1,
+                        Err(e) => panic!("unexpected submit error: {e}"),
+                    }
+                }
+                let accepted = pendings.len() as u64;
+                for p in pendings {
+                    let out = p.wait().expect("accepted request must complete");
+                    assert_eq!(&out, want, "completion delivered a wrong result");
+                }
+                (accepted, rejected)
+            }));
+        }
+        for w in workers {
+            let (accepted, rejected) = w.join().expect("producer panicked");
+            accepted_total += accepted;
+            rejected_total += rejected;
+        }
+    });
+
+    assert_eq!(accepted_total + rejected_total, (THREADS * PER_THREAD) as u64);
+    let stats = server.stats();
+    assert_eq!(stats.submitted, accepted_total, "admission counter reconciles");
+    assert_eq!(stats.rejected, rejected_total, "rejection counter reconciles");
+    assert_eq!(stats.completed, accepted_total, "no completion was lost");
+    assert_eq!(stats.failed, 0);
+    assert_eq!(stats.queue_depth, 0, "nothing left waiting after all waits returned");
+    let attribution = stats.attribution.expect("traced server reports attribution");
+    assert!(attribution.batch_size >= 1.0, "dispatched batches carry >= 1 request");
+    assert_eq!(
+        attribution.cycles_by_op.len(),
+        2,
+        "two dense ops attributed: {:?}",
+        attribution.cycles_by_op
+    );
+    server.shutdown().expect("shutdown");
+
+    // trace integrity, after every thread (and every span guard) is done
+    assert_eq!(tracer.dropped(), 0, "default rings must hold this workload");
+    assert_trace_well_formed(&tracer);
+    let labels: Vec<String> = tracer.rings().into_iter().map(|r| r.label).collect();
+    for expected in ["chip", "admit", "scheduler", "dispatch"] {
+        assert!(labels.iter().any(|l| l == expected), "missing ring {expected}: {labels:?}");
+    }
+    let admits = tracer
+        .rings()
+        .into_iter()
+        .filter(|r| r.label == "admit")
+        .flat_map(|r| r.events)
+        .filter(|e| e.name == "admit")
+        .count() as u64;
+    assert_eq!(admits, accepted_total, "one admit instant per accepted request");
+}
+
+/// Deterministic queue-full: with a rendezvous-blocked scheduler (the
+/// dispatcher is busy with the first inference) and `queue_depth` 2, a
+/// burst of 16 immediate submissions must see typed `QueueFull`
+/// backpressure, and every rejection must emit a `reject` instant.
+#[test]
+fn queue_full_is_typed_and_traced() {
+    let cfg = small_cfg();
+    let mut backend = NmcuBackend::new(&cfg);
+    let tracer = Tracer::new(&cfg.power);
+    backend.set_tracer(Some(tracer.clone()));
+    // big enough that one inference far outlasts the submission burst
+    let model = QModel::mlp("big-mlp", vec![dense(256, 64), dense(64, 8)]);
+    let h = backend.program(&model).expect("program");
+    let x = vec![1i8; 256];
+
+    let policy =
+        BatchPolicy { max_batch: 1, max_wait: Duration::ZERO, queue_depth: 2 };
+    let server = InferenceServer::start(Box::new(backend), policy).expect("start");
+    let mut pendings = Vec::new();
+    let mut rejected = 0u64;
+    for _ in 0..16 {
+        match server.submit(h, x.clone()) {
+            Ok(p) => pendings.push(p),
+            Err(EngineError::QueueFull { depth }) => {
+                assert_eq!(depth, 2, "error carries the configured depth");
+                rejected += 1;
+            }
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+    assert!(rejected > 0, "16-deep burst against queue_depth 2 must shed load");
+    for p in pendings {
+        p.wait().expect("accepted request completes");
+    }
+    let stats = server.stats();
+    assert_eq!(stats.rejected, rejected);
+    server.shutdown().expect("shutdown");
+
+    let rejects = tracer
+        .rings()
+        .into_iter()
+        .filter(|r| r.label == "admit")
+        .flat_map(|r| r.events)
+        .filter(|e| e.name == "reject")
+        .count() as u64;
+    assert_eq!(rejects, rejected, "one reject instant per shed request");
+    assert_trace_well_formed(&tracer);
+}
+
+/// `wait_timeout` expiry: a lone request held back by a long `max_wait`
+/// coalescing window times out on the caller's side with a typed error;
+/// the request itself still drains at shutdown and the trace records
+/// its admission and (drain-flush) coalesce.
+#[test]
+fn wait_timeout_expires_then_request_drains_at_shutdown() {
+    let cfg = small_cfg();
+    let mut backend = NmcuBackend::new(&cfg);
+    let tracer = Tracer::new(&cfg.power);
+    backend.set_tracer(Some(tracer.clone()));
+    let h = backend.program(&stress_model()).expect("program");
+
+    // a lone request cannot dispatch before max_wait (batch of 1 < 64)
+    let policy = BatchPolicy {
+        max_batch: 64,
+        max_wait: Duration::from_millis(500),
+        queue_depth: 8,
+    };
+    let server = InferenceServer::start(Box::new(backend), policy).expect("start");
+    let p = server.submit(h, vec![2i8; 64]).expect("submit");
+    match p.wait_timeout(Duration::from_millis(10)) {
+        Err(EngineError::Timeout { waited }) => {
+            assert_eq!(waited, Duration::from_millis(10))
+        }
+        other => panic!("expected Timeout, got {other:?}"),
+    }
+    // shutdown drains the still-queued request (its result channel is
+    // gone — the scheduler must not hang or panic on that)
+    server.shutdown().expect("shutdown drains the abandoned request");
+
+    let events: Vec<String> = tracer
+        .rings()
+        .into_iter()
+        .flat_map(|r| r.events)
+        .map(|e| e.name.to_string())
+        .collect();
+    assert!(events.iter().any(|n| n == "admit"), "admission traced: {events:?}");
+    assert!(
+        events.iter().any(|n| n == "coalesce"),
+        "drain-flush coalesce traced: {events:?}"
+    );
+    assert_trace_well_formed(&tracer);
+}
+
+/// Shutdown-drain under fire: producers keep submitting while the
+/// server shuts down. Every accepted request must resolve — with a
+/// result or with typed `ServerStopped`/`WorkerPanicked` — within a
+/// bounded wait (a hang here is a lost completion), and the trace must
+/// still be well-formed afterwards.
+#[test]
+fn shutdown_drains_inflight_requests_under_concurrent_submission() {
+    const PRODUCERS: usize = 8;
+    let cfg = small_cfg();
+    let mut backend = NmcuBackend::new(&cfg);
+    let tracer = Tracer::new(&cfg.power);
+    backend.set_tracer(Some(tracer.clone()));
+    let h = backend.program(&stress_model()).expect("program");
+    let x = vec![7i8; 64];
+    let want = backend.infer(h, &x).expect("oracle inference");
+
+    let policy = BatchPolicy {
+        max_batch: 8,
+        max_wait: Duration::from_millis(1),
+        queue_depth: 64,
+    };
+    let server = InferenceServer::start(Box::new(backend), policy).expect("start");
+    std::thread::scope(|scope| {
+        let mut workers = Vec::new();
+        for _ in 0..PRODUCERS {
+            let client = server.client();
+            let (x, want) = (&x, &want);
+            workers.push(scope.spawn(move || {
+                let mut pendings: Vec<Pending> = Vec::new();
+                for _ in 0..10_000 {
+                    match client.submit(h, x.clone()) {
+                        Ok(p) => pendings.push(p),
+                        Err(EngineError::QueueFull { .. }) => continue,
+                        Err(EngineError::ServerStopped) => break,
+                        Err(e) => panic!("unexpected submit error: {e}"),
+                    }
+                }
+                for p in pendings {
+                    match p.wait_timeout(Duration::from_secs(20)) {
+                        Ok(out) => assert_eq!(&out, want),
+                        Err(EngineError::ServerStopped)
+                        | Err(EngineError::WorkerPanicked { .. }) => {}
+                        Err(e) => panic!("accepted request neither served nor failed: {e}"),
+                    }
+                }
+            }));
+        }
+        // let the producers build up in-flight work, then pull the plug
+        std::thread::sleep(Duration::from_millis(5));
+        server.shutdown().expect("shutdown while producers are racing");
+        for w in workers {
+            w.join().expect("producer panicked");
+        }
+    });
+    assert_trace_well_formed(&tracer);
+}

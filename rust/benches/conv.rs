@@ -23,6 +23,9 @@ fn main() {
     let mut r = Rng::new(seed);
     println!("seed {seed} (replay with --seed {seed})");
     println!("trace: add --trace-out <file> for a Chrome trace of the CNN latency section");
+    // --report-out <file>: machine-readable report for `nvmcu bench-compare`
+    let mut report =
+        args.opt("report-out").map(|_| nvmcu::metrics::BenchReport::new("conv", seed));
 
     let cnn = nvmcu::datasets::synthetic_mnist_cnn(&mut r);
     let macs = logical_macs(&cnn);
@@ -60,6 +63,10 @@ fn main() {
         t_dense.per_iter_ns / 1000.0,
         t_conv.per_iter_ns / t_dense.per_iter_ns
     );
+    if let Some(rep) = report.as_mut() {
+        rep.push_timing(&t_conv, &[("macs_per_s", t_conv.throughput(macs as f64))]);
+        rep.push_timing(&t_dense, &[("macs_per_s", t_dense.throughput(macs as f64))]);
+    }
 
     // ---- batched serving: single chip vs 4-shard fleet -------------------
     const BATCH: usize = 64;
@@ -87,6 +94,15 @@ fn main() {
                 format!("{:.0}", t.throughput(BATCH as f64)),
                 format!("{reads_per_inf:.0}"),
             ]);
+            if let Some(rep) = report.as_mut() {
+                rep.push_timing(
+                    &t,
+                    &[
+                        ("inf_per_s", t.throughput(BATCH as f64)),
+                        ("eflash_reads_per_inference", reads_per_inf),
+                    ],
+                );
+            }
         }
     }
     table.print();
@@ -94,6 +110,11 @@ fn main() {
         "\nthe fleet speedup applies to conv exactly as to dense — the scheduler and \
          sharding layers never look inside the operator."
     );
+
+    if let (Some(rep), Some(path)) = (&report, args.opt("report-out")) {
+        rep.save(std::path::Path::new(path)).expect("write report");
+        println!("report: {} cases -> {path}", rep.results.len());
+    }
 
     if let (Some(t), Some(path)) = (&tracer, args.opt("trace-out")) {
         std::fs::write(path, t.export_chrome_json()).expect("write trace");

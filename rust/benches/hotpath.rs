@@ -5,6 +5,10 @@
 //! optimization (EXPERIMENTS.md §Perf records the history).
 //!
 //!     cargo bench --bench hotpath
+//!     cargo bench --bench hotpath -- --report-out BENCH_hotpath.json
+//!
+//! `--report-out <file>` additionally writes every timing as a
+//! machine-readable report for `nvmcu bench-compare`.
 
 use nvmcu::config::ChipConfig;
 use nvmcu::coordinator::Chip;
@@ -23,6 +27,10 @@ fn main() {
     let mut r = Rng::new(seed);
     println!("seed {seed} (replay with --seed {seed})");
     println!("trace: add --trace-out <file> for a Chrome trace of the serving section");
+    // --report-out <file>: dump every timing as a machine-readable
+    // BENCH_hotpath-style report (see nvmcu::metrics::bench_report)
+    let mut report =
+        args.opt("report-out").map(|_| nvmcu::metrics::BenchReport::new("hotpath", seed));
 
     // ---- L3 kernel primitives -------------------------------------------
     let x: Vec<i8> = (0..128).map(|_| (r.below(256) as i32 - 128) as i8).collect();
@@ -34,6 +42,9 @@ fn main() {
         "  -> {:.2} GMAC/s per PE thread",
         128.0 / t.per_iter_ns
     );
+    if let Some(rep) = report.as_mut() {
+        rep.push_timing(&t, &[("macs_per_s", t.throughput(128.0))]);
+    }
 
     // ---- EFLASH read path --------------------------------------------------
     let cfg = ChipConfig::new();
@@ -41,14 +52,18 @@ fn main() {
     let codes: Vec<i8> = (0..256 * 64).map(|_| (r.below(16) as i8) - 8).collect();
     let (region, _) = chip.eflash.program_region(&codes).unwrap();
     let mut buf = vec![0i8; 256];
-    bench("eflash read_row cached (256 cells)", tgt, || {
+    let t_cached = bench("eflash read_row cached (256 cells)", tgt, || {
         std::hint::black_box(chip.eflash.read_row(region.first_row, &mut buf));
     });
     chip.eflash.read_mode = ReadMode::Resample;
-    bench("eflash read_row resample (256 cells)", tgt, || {
+    let t_resample = bench("eflash read_row resample (256 cells)", tgt, || {
         std::hint::black_box(chip.eflash.read_row(region.first_row, &mut buf));
     });
     chip.eflash.read_mode = ReadMode::Cached;
+    if let Some(rep) = report.as_mut() {
+        rep.push_timing(&t_cached, &[("cells_per_s", t_cached.throughput(256.0))]);
+        rep.push_timing(&t_resample, &[("cells_per_s", t_resample.throughput(256.0))]);
+    }
 
     // ---- one NMCU layer and a full inference --------------------------------
     use nvmcu::artifacts::{QLayer, QModel, QOp};
@@ -88,11 +103,24 @@ fn main() {
         1e9 / t2.per_iter_ns,
         (784.0 * 43.0 + 43.0 * 10.0) / t2.per_iter_ns
     );
+    if let Some(rep) = report.as_mut() {
+        rep.push_timing(&t1, &[]);
+        rep.push_timing(
+            &t2,
+            &[
+                ("inf_per_s", t2.throughput(1.0)),
+                ("macs_per_s", t2.throughput(784.0 * 43.0 + 43.0 * 10.0)),
+            ],
+        );
+    }
 
     // ---- software reference for comparison ----------------------------------
-    bench("rust integer reference (same model)", tgt, || {
+    let t_ref = bench("rust integer reference (same model)", tgt, || {
         std::hint::black_box(nvmcu::models::qmodel_forward(&model, &x784));
     });
+    if let Some(rep) = report.as_mut() {
+        rep.push_timing(&t_ref, &[("inf_per_s", t_ref.throughput(1.0))]);
+    }
 
     // ---- engine serving path: batched single chip vs sharded fleet ----------
     const BATCH: usize = 256;
@@ -118,6 +146,10 @@ fn main() {
         t_fleet.throughput(BATCH as f64),
         t_single.per_iter_ns / t_fleet.per_iter_ns
     );
+    if let Some(rep) = report.as_mut() {
+        rep.push_timing(&t_single, &[("inf_per_s", t_single.throughput(BATCH as f64))]);
+        rep.push_timing(&t_fleet, &[("inf_per_s", t_fleet.throughput(BATCH as f64))]);
+    }
 
     // ---- RV32I interpreter ---------------------------------------------------
     use nvmcu::cpu::asm::*;
@@ -140,6 +172,14 @@ fn main() {
         std::hint::black_box(mcu.run(10_000));
     });
     println!("  -> {:.0} MIPS", 2.0 * 2047.0 / (t.per_iter_ns / 1000.0));
+    if let Some(rep) = report.as_mut() {
+        rep.push_timing(&t, &[("instructions_per_s", t.throughput(2.0 * 2047.0))]);
+    }
+
+    if let (Some(rep), Some(path)) = (&report, args.opt("report-out")) {
+        rep.save(std::path::Path::new(path)).expect("write report");
+        println!("report: {} cases -> {path}", rep.results.len());
+    }
 
     if let (Some(t), Some(path)) = (&tracer, args.opt("trace-out")) {
         std::fs::write(path, t.export_chrome_json()).expect("write trace");

@@ -26,6 +26,9 @@ fn main() {
     println!("trace: add --trace-out <file> for a Chrome trace of the firmware runs");
     const BATCH: usize = 64;
     let tracer = args.opt("trace-out").map(|_| nvmcu::trace::Tracer::new(&cfg.power));
+    // --report-out <file>: machine-readable report for `nvmcu bench-compare`
+    let mut report =
+        args.opt("report-out").map(|_| nvmcu::metrics::BenchReport::new("mcu", seed));
 
     let mlp = nvmcu::datasets::synthetic_qmodel(&mut r, "mnist-shaped", 784, 43, 10);
     let cnn =
@@ -71,6 +74,21 @@ fn main() {
             "{}: control plane costs {instret_per_launch:.1} instret/launch",
             model.name
         );
+        if let Some(rep) = report.as_mut() {
+            rep.push_timing(&t_chip, &[("inf_per_s", t_chip.throughput(BATCH as f64))]);
+            rep.push_timing(
+                &t_mcu,
+                &[
+                    ("inf_per_s", t_mcu.throughput(BATCH as f64)),
+                    ("instret_per_launch", instret_per_launch),
+                ],
+            );
+        }
+    }
+
+    if let (Some(rep), Some(path)) = (&report, args.opt("report-out")) {
+        rep.save(std::path::Path::new(path)).expect("write report");
+        println!("report: {} cases -> {path}", rep.results.len());
     }
 
     if let (Some(t), Some(path)) = (&tracer, args.opt("trace-out")) {

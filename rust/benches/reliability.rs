@@ -35,6 +35,9 @@ fn main() {
     let mut r = Rng::new(seed);
     println!("seed {seed} (replay with --seed {seed})");
     println!("trace: add --trace-out <file> for a Chrome trace of the self-healing fleet\n");
+    // --report-out <file>: machine-readable report for `nvmcu bench-compare`
+    let mut report =
+        args.opt("report-out").map(|_| nvmcu::metrics::BenchReport::new("reliability", seed));
 
     let model = nvmcu::datasets::synthetic_qmodel(&mut r, "mnist-shaped", 784, 43, 10);
     let pool = workload::random_inputs(&mut r, BATCH, 784);
@@ -52,6 +55,9 @@ fn main() {
         "  -> {:.1} Mcells/s scrubbed",
         cells as f64 / t_scrub.per_iter_ns * 1e3
     );
+    if let Some(rep) = report.as_mut() {
+        rep.push_timing(&t_scrub, &[("cells_per_s", t_scrub.throughput(cells as f64))]);
+    }
 
     // ---- serving overhead of scrub-every-batch ---------------------------
     let want = fleet.infer_batch(h, &pool).expect("plain batch");
@@ -75,6 +81,16 @@ fn main() {
         "  -> scrub-every-batch overhead {:.1}% on top of plain fan-out",
         100.0 * (t_heal.per_iter_ns / t_plain.per_iter_ns - 1.0)
     );
+    if let Some(rep) = report.as_mut() {
+        rep.push_timing(&t_plain, &[("inf_per_s", t_plain.throughput(BATCH as f64))]);
+        rep.push_timing(
+            &t_heal,
+            &[
+                ("inf_per_s", t_heal.throughput(BATCH as f64)),
+                ("scrub_overhead_pct", 100.0 * (t_heal.per_iter_ns / t_plain.per_iter_ns - 1.0)),
+            ],
+        );
+    }
 
     // ---- full detect -> quarantine -> repair -> readmit turnaround -------
     FaultPlan::new(seed ^ 0x5EED)
@@ -98,6 +114,13 @@ fn main() {
         turnaround.as_secs_f64() * 1e3
     );
     println!("  {}", rs.summary());
+    if let Some(rep) = report.as_mut() {
+        rep.push_case(
+            "detect+repair+readmit turnaround (one batch)",
+            turnaround.as_nanos() as f64,
+            &[],
+        );
+    }
 
     // traced replay of the healed fleet (outside the timed sections, so
     // the export never skews the turnaround number above)
@@ -131,4 +154,9 @@ fn main() {
     });
     println!("\nbake soak at {} C, 8192-cell region:", cfg.retention.bake_temp_c);
     t.print();
+
+    if let (Some(rep), Some(path)) = (&report, args.opt("report-out")) {
+        rep.save(std::path::Path::new(path)).expect("write report");
+        println!("report: {} cases -> {path}", rep.results.len());
+    }
 }

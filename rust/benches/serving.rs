@@ -78,6 +78,9 @@ fn main() {
          (seed {seed}; replay with --seed {seed})"
     );
     println!("trace: add --trace-out <file> for a Chrome trace of a coalesced sharded burst\n");
+    // --report-out <file>: machine-readable report for `nvmcu bench-compare`
+    let mut report =
+        args.opt("report-out").map(|_| nvmcu::metrics::BenchReport::new("serving", seed));
 
     let mut t = Table::new(&["mode", "req/s", "speedup", "mean batch", "p50 ms", "p99 ms"]);
     let mut rps = Vec::new();
@@ -99,6 +102,19 @@ fn main() {
             format!("{:.2}", stats.p50_ms),
             format!("{:.2}", stats.p99_ms),
         ]);
+        if let Some(rep) = report.as_mut() {
+            rep.push_case(
+                label,
+                wall.as_nanos() as f64 / N_REQ as f64,
+                &[
+                    ("req_per_s", this_rps),
+                    ("mean_batch", stats.mean_batch()),
+                    ("p50_ms", stats.p50_ms),
+                    ("p95_ms", stats.p95_ms),
+                    ("p99_ms", stats.p99_ms),
+                ],
+            );
+        }
     }
     t.print();
 
@@ -122,6 +138,11 @@ fn main() {
         rps[3] / rps[0],
         rps[2] / rps[0]
     );
+
+    if let (Some(rep), Some(path)) = (&report, args.opt("report-out")) {
+        rep.save(std::path::Path::new(path)).expect("write report");
+        println!("report: {} cases -> {path}", rep.results.len());
+    }
 
     // traced replay of the headline configuration (outside the timed
     // rounds, so the export never skews the numbers above)

@@ -113,6 +113,26 @@ fn main() {
 
     let overhead_dis = (min_dis - min_base) / min_base;
     let overhead_ena = (min_ena - min_base) / min_base;
+    // --report-out <file>: machine-readable report for `nvmcu bench-compare`
+    if let Some(path) = args.opt("report-out") {
+        let mut rep = nvmcu::metrics::BenchReport::new("trace", seed);
+        rep.push_case("infer_batch baseline (no tracer)", min_base, &[]);
+        rep.push_case(
+            "infer_batch disabled tracing",
+            min_dis,
+            &[("disabled_overhead_pct", overhead_dis * 100.0)],
+        );
+        rep.push_case(
+            "infer_batch enabled tracing",
+            min_ena,
+            &[
+                ("enabled_overhead_pct", overhead_ena * 100.0),
+                ("events_per_s", events_per_iter / (min_ena * 1e-9)),
+            ],
+        );
+        rep.save(std::path::Path::new(path)).expect("write report");
+        println!("report: {} cases -> {path}", rep.results.len());
+    }
     println!(
         "baseline  {:>12.1} ns/iter (no tracer ever attached)",
         min_base

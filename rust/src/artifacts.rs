@@ -363,6 +363,29 @@ pub fn load_qmodel(dir: &Path, base: &str) -> Result<QModel> {
                 i32::from_le_bytes(bin[b_off + 4 * i..b_off + 4 * i + 4].try_into().unwrap())
             })
             .collect();
+        let op = parse_op(l)?;
+        // Range-check the requant params on the RAW i64 values before the
+        // narrowing casts: a corrupt artifact (a denormal multiplier, a
+        // shift of 0 — release-mode UB in the old rounding_rshift — or a
+        // value that would wrap the cast) must be a typed load error, not
+        // silently corrupted outputs. Weightless pool layers never read
+        // their placeholder requant, so they are exempt.
+        let (m0, shift, z_out) = (l.i64("m0"), l.i64("shift"), l.i64("z_out"));
+        if !matches!(op, QOp::MaxPool2d { .. }) {
+            if !(i64::from(i8::MIN)..=i64::from(i8::MAX)).contains(&z_out) {
+                bail!("layer {}: requant z_out={z_out} outside i8", l.str("name"));
+            }
+            if m0 > i64::from(i32::MAX) || shift < 0 || shift > i64::from(u32::MAX) {
+                bail!(
+                    "layer {}: requant (m0={m0}, shift={shift}) outside its field range",
+                    l.str("name")
+                );
+            }
+            let rq = Requant { m0: m0 as i32, shift: shift as u32, z_out: z_out as i8 };
+            if let Err(e) = rq.validate() {
+                bail!("layer {}: {e}", l.str("name"));
+            }
+        }
         layers.push(QLayer {
             name: l.str("name").to_string(),
             k,
@@ -370,16 +393,12 @@ pub fn load_qmodel(dir: &Path, base: &str) -> Result<QModel> {
             relu: l.bool("relu"),
             codes,
             bias,
-            requant: Requant {
-                m0: l.i64("m0") as i32,
-                shift: l.i64("shift") as u32,
-                z_out: l.i64("z_out") as i8,
-            },
+            requant: Requant { m0: m0 as i32, shift: shift as u32, z_out: z_out as i8 },
             z_in: l.i64("z_in") as i8,
             s_in: l.f64("s_in"),
             s_w: l.f64("s_w"),
             s_out: l.f64("s_out"),
-            op: parse_op(l)?,
+            op,
         });
     }
     let input_shape = match j.get("input_shape") {
@@ -522,6 +541,49 @@ mod tests {
 
     // full loader round-trips are exercised by rust/tests/test_bitexact.rs
     // once artifacts exist
+
+    /// Write a one-layer (k=4, n=2) artifact pair with the given raw
+    /// requant values, in the exact format python/compile/export.py emits.
+    fn write_tiny_artifact(dir: &Path, m0: i64, shift: i64) {
+        std::fs::create_dir_all(dir).unwrap();
+        let mut bin = pack_int4(&[1i8; 8]);
+        for b in [7i32, -7] {
+            bin.extend_from_slice(&b.to_le_bytes());
+        }
+        std::fs::write(dir.join("tiny.bin"), &bin).unwrap();
+        let meta = format!(
+            "{{\"model\":\"tiny\",\"bin\":\"tiny.bin\",\"layers\":[{{\
+             \"name\":\"fc\",\"k\":4,\"n\":2,\"relu\":false,\
+             \"m0\":{m0},\"shift\":{shift},\"z_out\":0,\"z_in\":0,\
+             \"s_in\":1.0,\"s_w\":1.0,\"s_out\":1.0,\
+             \"w_offset\":0,\"w_bytes\":4,\"b_offset\":4,\"b_bytes\":8}}]}}"
+        );
+        std::fs::write(dir.join("tiny.json"), meta).unwrap();
+    }
+
+    #[test]
+    fn malformed_requant_is_a_typed_load_error() {
+        let dir =
+            std::env::temp_dir().join(format!("nvmcu_requant_load_{}", std::process::id()));
+        // a normalized multiplier loads fine
+        write_tiny_artifact(&dir, 1 << 30, 35);
+        let m = load_qmodel(&dir, "tiny").expect("valid artifact loads");
+        assert_eq!(m.layers[0].requant.m0, 1 << 30);
+        assert_eq!(m.layers[0].requant.shift, 35);
+        assert_eq!(m.layers[0].bias, vec![7, -7]);
+        // shift == 0 (release-mode UB in the old rounding_rshift) is rejected
+        write_tiny_artifact(&dir, 1 << 30, 0);
+        let e = load_qmodel(&dir, "tiny").expect_err("shift=0 must not load");
+        assert!(format!("{e:#}").contains("shift"), "{e:#}");
+        // a denormal mantissa is rejected
+        write_tiny_artifact(&dir, (1 << 30) - 1, 35);
+        let e = load_qmodel(&dir, "tiny").expect_err("denormal m0 must not load");
+        assert!(format!("{e:#}").contains("m0"), "{e:#}");
+        // a multiplier that would wrap the i32 cast is rejected
+        write_tiny_artifact(&dir, 1 << 40, 35);
+        assert!(load_qmodel(&dir, "tiny").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
 
     fn conv_layer(name: &str, cin: usize, cout: usize, kh: usize, kw: usize, pad: usize) -> QLayer {
         let k = cin * kh * kw;

@@ -106,7 +106,14 @@ impl Backend for HloBackend {
                 ),
             });
         }
-        let first = &model.layers[0];
+        // validate() rejects empty models, but this backend must not
+        // lean on a panic for that: surface a typed error instead
+        let (Some(first), Some(last)) = (model.layers.first(), model.layers.last()) else {
+            return Err(EngineError::Backend {
+                backend: "hlo",
+                reason: format!("{}: model has no layers", model.name),
+            });
+        };
         let exe = self
             .rt
             .load(&self.dir.join(format!("{}_b1.hlo.txt", model.name)))
@@ -133,7 +140,7 @@ impl Backend for HloBackend {
             exe,
             batch_exe,
             input_dim: first.k,
-            output_dim: model.layers.last().unwrap().n,
+            output_dim: last.n,
             n_layers: model.layers.len() as u64,
             macs_per_inference: model.layers.iter().map(|l| (l.k * l.n) as u64).sum(),
         });

@@ -89,10 +89,15 @@ pub mod coordinator;
 pub mod cpu;
 pub mod datasets;
 pub mod eflash;
+// the serving path must never panic on a fallible lookup — a request
+// that can fail returns a typed EngineError (clippy.toml allows
+// unwrap/expect back in #[cfg(test)] code)
+#[deny(clippy::unwrap_used)]
 pub mod engine;
 pub mod error;
 pub mod metrics;
 pub mod models;
+#[deny(clippy::unwrap_used)]
 pub mod nmcu;
 pub mod reliability;
 #[cfg(feature = "pjrt")]

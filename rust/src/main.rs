@@ -28,6 +28,17 @@
 //!               asserts every served output stayed bit-exact
 //!               (--shards <n>, --requests <n>, --rounds <n>,
 //!               --severity <x>, --scrub-every <n>, --quick)
+//!   bench-report
+//!               run the perf-report suite in-process and write one
+//!               machine-readable `BENCH_<name>.json` per bench family
+//!               (hotpath, conv, mcu, serving, reliability, trace) with
+//!               timings, derived metrics, seed and git revision
+//!               (--out-dir <dir>, --quick, --seed <n>)
+//!   bench-compare
+//!               diff `BENCH_*.json` reports against a committed
+//!               baseline directory and flag regressions past a
+//!               threshold (--baseline <dir>, --current <dir>,
+//!               --threshold <pct>, --enforce)
 //!   pump        charge pump transient only
 //!   retention   bake-time sweep of decode errors + accuracy
 //!   info        chip configuration summary
@@ -49,12 +60,12 @@ use nvmcu::coordinator::{experiments, Chip};
 use nvmcu::eflash::mapping::StateMapping;
 use nvmcu::engine::{
     Backend, BackendKind, BatchPolicy, Engine, Fault, FaultPlan, InferenceServer, McuBackend,
-    NmcuBackend, QuarantinePolicy, ReferenceBackend, ShardedEngine,
+    NmcuBackend, QuarantinePolicy, ReferenceBackend, ScrubPolicy, ShardedEngine,
 };
 use nvmcu::metrics;
-use nvmcu::metrics::ServerStats;
+use nvmcu::metrics::{BenchReport, ServerStats};
 use nvmcu::trace::Tracer;
-use nvmcu::util::bench::Table;
+use nvmcu::util::bench::{bench, Table};
 use nvmcu::util::cli::Args;
 use nvmcu::util::rng::{seed_from_env, Rng};
 use nvmcu::util::workload;
@@ -120,6 +131,8 @@ fn main() {
         "bench-conv" => cmd_bench_conv(&args),
         "bench-mcu" => cmd_bench_mcu(&args),
         "bench-reliability" => cmd_bench_reliability(&args),
+        "bench-report" => cmd_bench_report(&args),
+        "bench-compare" => cmd_bench_compare(&args),
         "pump" => cmd_pump(&args),
         "retention" => cmd_retention(&args),
         "info" => cmd_info(&args),
@@ -127,7 +140,8 @@ fn main() {
             println!(
                 "nvmcu — 28nm AI microcontroller with 4-bits/cell EFLASH (reproduction)\n\
                  usage: nvmcu <table1|table2|fig5|fig6|infer|serve|bench-serve|bench-conv\
-                 |bench-mcu|bench-reliability|pump|retention|info> [options]\n\
+                 |bench-mcu|bench-reliability|bench-report|bench-compare|pump|retention|info> \
+                 [options]\n\
                  options: --config <json> --set k=v[,k=v] --artifacts <dir> --seed <n>\n\
                  \x20        --trace-out <file> (infer/serve/bench-*: write a Chrome trace\n\
                  \x20        + attribution rollup)\n\
@@ -138,7 +152,9 @@ fn main() {
                  bench-conv:  --requests <n> --shards <n> --quick\n\
                  bench-mcu:   --requests <n> --quick\n\
                  bench-reliability: --shards <n> --requests <n> --rounds <n> --severity <x>\n\
-                 \x20        --scrub-every <n> --quick"
+                 \x20        --scrub-every <n> --quick\n\
+                 bench-report:  --out-dir <dir> --quick --seed <n>\n\
+                 bench-compare: --baseline <dir> --current <dir> --threshold <pct> --enforce"
             );
         }
     }
@@ -842,6 +858,305 @@ fn cmd_bench_reliability(args: &Args) {
         rs.mean_detection_latency_batches
     );
     finish_trace(args, &tracer);
+}
+
+/// One `BENCH_hotpath.json`: the MAC kernel and the end-to-end
+/// MNIST-shaped inference, with the deterministic cycle-model metrics
+/// (`cycles_per_inference`, `eflash_reads_per_inference`) that the
+/// committed baseline pins exactly.
+fn report_hotpath(cfg: &ChipConfig, seed: u64, tgt: Duration) -> BenchReport {
+    use nvmcu::nmcu::pe::mac_lanes;
+    let mut rep = BenchReport::new("hotpath", seed);
+    let mut r = Rng::new(seed);
+    let x: Vec<i8> = (0..128).map(|_| (r.below(256) as i32 - 128) as i8).collect();
+    let w: Vec<i8> = (0..128).map(|_| (r.below(16) as i8) - 8).collect();
+    let t = bench("mac_lanes 128 (one PE-read)", tgt, || {
+        std::hint::black_box(mac_lanes(std::hint::black_box(&x), std::hint::black_box(&w)));
+    });
+    rep.push_timing(&t, &[("macs_per_s", t.throughput(128.0))]);
+
+    let model = nvmcu::datasets::synthetic_qmodel(&mut r, "mnist-shaped", 784, 43, 10);
+    let mut backend = NmcuBackend::new(cfg);
+    let h = backend.program(&model).expect("program");
+    let x784: Vec<i8> = (0..784).map(|_| (r.below(256) as i32 - 128) as i8).collect();
+    backend.reset_stats();
+    let _ = backend.infer(h, &x784).expect("infer");
+    let st = backend.stats();
+    let t = bench("full MNIST-shaped inference (2 layers)", tgt, || {
+        std::hint::black_box(backend.infer(h, &x784).expect("infer"));
+    });
+    let macs = (784 * 43 + 43 * 10) as f64;
+    rep.push_timing(
+        &t,
+        &[
+            ("inf_per_s", t.throughput(1.0)),
+            ("macs_per_s", t.throughput(macs)),
+            ("cycles_per_inference", st.cycles as f64),
+            ("eflash_reads_per_inference", st.eflash_reads as f64),
+        ],
+    );
+    rep
+}
+
+/// One `BENCH_conv.json`: the quick synthetic CNN through `infer_batch`.
+fn report_conv(cfg: &ChipConfig, seed: u64, tgt: Duration) -> BenchReport {
+    let mut rep = BenchReport::new("conv", seed);
+    let mut r = Rng::new(seed);
+    let cnn = nvmcu::datasets::synthetic_cnn(
+        &mut r,
+        "cnn-quick",
+        nvmcu::artifacts::Shape { c: 1, h: 8, w: 8 },
+        &[4, 8],
+        4,
+    );
+    let pool = workload::random_inputs(&mut r, 8, cnn.input_len());
+    let n = pool.len() as f64;
+    let mut backend = NmcuBackend::new(cfg);
+    let h = backend.program(&cnn).expect("program");
+    backend.reset_stats();
+    let outs = backend.infer_batch(h, &pool).expect("conv batch");
+    assert_eq!(outs.len(), pool.len());
+    let st = backend.stats();
+    let t = bench("conv infer_batch 8 (1 chip)", tgt, || {
+        std::hint::black_box(backend.infer_batch(h, &pool).expect("conv batch"));
+    });
+    rep.push_timing(
+        &t,
+        &[
+            ("inf_per_s", t.throughput(n)),
+            ("eflash_reads_per_inference", st.eflash_reads as f64 / n),
+            ("macs_per_inference", st.mac_ops as f64 / n),
+        ],
+    );
+    rep
+}
+
+/// One `BENCH_mcu.json`: firmware-in-the-loop serving, with the paper's
+/// §2.2 control-plane metric (host instructions per MVM launch).
+fn report_mcu(cfg: &ChipConfig, seed: u64, tgt: Duration) -> BenchReport {
+    let mut rep = BenchReport::new("mcu", seed);
+    let mut r = Rng::new(seed);
+    let model = nvmcu::datasets::synthetic_qmodel(&mut r, "mlp-quick", 128, 16, 8);
+    let pool = workload::random_inputs(&mut r, 8, 128);
+    let n = pool.len() as f64;
+    let mut mcu = McuBackend::new(cfg);
+    let h = mcu.program(&model).expect("program (mcu)");
+    mcu.reset_stats();
+    let outs = mcu.infer_batch(h, &pool).expect("mcu batch");
+    assert_eq!(outs.len(), pool.len());
+    let st = mcu.stats();
+    let instret = mcu.instret() as f64;
+    let launches = mcu.launches().max(1) as f64;
+    let t = bench("mcu firmware infer_batch 8", tgt, || {
+        std::hint::black_box(mcu.infer_batch(h, &pool).expect("mcu batch"));
+    });
+    rep.push_timing(
+        &t,
+        &[
+            ("inf_per_s", t.throughput(n)),
+            ("nmcu_cycles_per_inference", st.cycles as f64 / n),
+            ("instret_per_inference", instret / n),
+            ("instret_per_launch", instret / launches),
+        ],
+    );
+    rep
+}
+
+/// One `BENCH_serving.json`: the burst workload under batch=1 and under
+/// coalesced + sharded scheduling (one trial each — wall time per
+/// request is the `per_iter_ns`).
+fn report_serving(cfg: &ChipConfig, seed: u64) -> BenchReport {
+    let mut rep = BenchReport::new("serving", seed);
+    let mut r = Rng::new(seed);
+    let model = synthetic_model(&mut r);
+    let n_req = 96;
+    let pool = workload::random_inputs(&mut r, n_req, 784);
+    for (case, shards, max_batch) in
+        [("batch=1, 1 chip", 1usize, 1usize), ("coalesced<=32, 2 shards", 2, 32)]
+    {
+        let (wall, stats) = run_serving_trial(cfg, &model, &pool, shards, max_batch, None);
+        rep.push_case(
+            case,
+            wall.as_nanos() as f64 / n_req as f64,
+            &[
+                ("req_per_s", n_req as f64 / wall.as_secs_f64().max(1e-12)),
+                ("mean_batch", stats.mean_batch()),
+                ("p50_ms", stats.p50_ms),
+                ("p95_ms", stats.p95_ms),
+                ("p99_ms", stats.p99_ms),
+            ],
+        );
+    }
+    rep
+}
+
+/// One `BENCH_reliability.json`: the margin-scrub sweep rate.
+fn report_reliability(cfg: &ChipConfig, seed: u64, tgt: Duration) -> BenchReport {
+    let mut rep = BenchReport::new("reliability", seed);
+    let mut r = Rng::new(seed);
+    let model = nvmcu::datasets::synthetic_qmodel(&mut r, "mlp-quick", 128, 16, 8);
+    let mut fleet = ShardedEngine::new(cfg, 2).expect("fleet");
+    let _h = fleet.program(&model).expect("fleet program");
+    let policy = ScrubPolicy::default();
+    let cells = (model.total_cells() * 2) as f64;
+    let t = bench("margin scrub, 2 shards", tgt, || {
+        let health = fleet.scrub(&policy).expect("scrub");
+        assert!(health.iter().all(|h| h.is_healthy()), "fresh fleet must scrub clean");
+    });
+    rep.push_timing(&t, &[("cells_per_s", t.throughput(cells))]);
+    rep
+}
+
+/// One `BENCH_trace.json`: the compiled-in-but-disabled tracing cost on
+/// the serving path (the full gate lives in `cargo bench --bench trace`;
+/// this records the same delta for trend tracking).
+fn report_trace(cfg: &ChipConfig, seed: u64, tgt: Duration) -> BenchReport {
+    let mut rep = BenchReport::new("trace", seed);
+    let mut r = Rng::new(seed);
+    let model = nvmcu::datasets::synthetic_qmodel(&mut r, "trace-shaped", 128, 64, 10);
+    let batch = workload::random_inputs(&mut r, 8, 128);
+    let mut base = NmcuBackend::new(cfg);
+    let hb = base.program(&model).expect("program (baseline)");
+    let mut disabled = NmcuBackend::new(cfg);
+    let hd = disabled.program(&model).expect("program (disabled)");
+    let tracer = Tracer::new(&cfg.power);
+    disabled.set_tracer(Some(tracer.clone()));
+    disabled.set_tracer(None); // detach: back to the None fast path
+    let t_base = bench("trace baseline infer_batch 8", tgt, || {
+        std::hint::black_box(base.infer_batch(hb, &batch).expect("baseline batch"));
+    });
+    let t_dis = bench("trace disabled infer_batch 8", tgt, || {
+        std::hint::black_box(disabled.infer_batch(hd, &batch).expect("disabled batch"));
+    });
+    rep.push_timing(
+        &t_dis,
+        &[("disabled_overhead_pct", 100.0 * (t_dis.per_iter_ns / t_base.per_iter_ns - 1.0))],
+    );
+    rep
+}
+
+/// Run the perf-report suite in-process and write one machine-readable
+/// `BENCH_<name>.json` per bench family. The workloads are the CI-smoke
+/// shapes (the standalone `cargo bench` binaries remain the full-depth
+/// instruments; they emit the same reports via `--report-out`).
+///
+///   --out-dir <dir>   where the reports go (default `.`)
+///   --quick           shorter timing target per case — the CI smoke
+///   --seed <n>        RNG seed (default NVMCU_SEED or config seed)
+fn cmd_bench_report(args: &Args) {
+    let cfg = chip_config(args);
+    let quick = args.flag("quick");
+    let seed = args.opt_u64("seed", seed_from_env(cfg.seed));
+    let out_dir = std::path::PathBuf::from(args.opt_or("out-dir", "."));
+    std::fs::create_dir_all(&out_dir)
+        .unwrap_or_else(|e| panic!("--out-dir {}: {e}", out_dir.display()));
+    let tgt = Duration::from_millis(if quick { 60 } else { 400 });
+    println!(
+        "bench-report: seed {seed}, ~{} ms/case -> {} (replay with --seed {seed})\n",
+        tgt.as_millis(),
+        out_dir.display()
+    );
+    let reports = [
+        report_hotpath(&cfg, seed, tgt),
+        report_conv(&cfg, seed, tgt),
+        report_mcu(&cfg, seed, tgt),
+        report_serving(&cfg, seed),
+        report_reliability(&cfg, seed, tgt),
+        report_trace(&cfg, seed, tgt),
+    ];
+    println!();
+    for rep in &reports {
+        let path = out_dir.join(rep.file_name());
+        rep.save(&path).unwrap_or_else(|e| panic!("write {}: {e}", path.display()));
+        println!("wrote {} ({} cases)", path.display(), rep.results.len());
+    }
+}
+
+/// Diff `BENCH_*.json` reports against a committed baseline directory.
+/// Warn-only by default (PR CI); `--enforce` exits non-zero on any
+/// regression past the threshold (nightly soak). A missing baseline or
+/// a case with no counterpart is informative, never fatal — otherwise
+/// adding a bench would brick CI.
+///
+///   --baseline <dir>   committed baselines (default rust/benches/baselines)
+///   --current <dir>    freshly generated reports (default `.`)
+///   --threshold <pct>  allowed slowdown before a series counts as a
+///                      regression (default 10)
+///   --enforce          fail (exit 1) on regression instead of warning
+fn cmd_bench_compare(args: &Args) {
+    let baseline_dir =
+        std::path::PathBuf::from(args.opt_or("baseline", "rust/benches/baselines"));
+    let current_dir = std::path::PathBuf::from(args.opt_or("current", "."));
+    let threshold = args.opt_f64("threshold", 10.0);
+    let enforce = args.flag("enforce");
+
+    let mut names: Vec<String> = match std::fs::read_dir(&current_dir) {
+        Ok(entries) => entries
+            .filter_map(|e| e.ok())
+            .filter_map(|e| e.file_name().into_string().ok())
+            .filter(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+            .collect(),
+        Err(e) => {
+            eprintln!("bench-compare: cannot read --current {}: {e}", current_dir.display());
+            std::process::exit(1);
+        }
+    };
+    names.sort();
+    if names.is_empty() {
+        eprintln!("bench-compare: no BENCH_*.json in {}", current_dir.display());
+        std::process::exit(if enforce { 1 } else { 0 });
+    }
+
+    let mut compared = 0usize;
+    let mut failed = false;
+    for name in &names {
+        let cur = match BenchReport::load(&current_dir.join(name)) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("skipping {name}: {e}");
+                continue;
+            }
+        };
+        let base_path = baseline_dir.join(name);
+        if !base_path.exists() {
+            println!("{name}: no baseline at {} (new bench — informative)", base_path.display());
+            continue;
+        }
+        let base = match BenchReport::load(&base_path) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("skipping {name}: unreadable baseline: {e}");
+                continue;
+            }
+        };
+        let cmp = metrics::bench_report::compare(&base, &cur, threshold);
+        compared += 1;
+        println!(
+            "{name}: baseline rev {} (seed {}) vs current rev {} (seed {}), threshold {threshold}%",
+            base.git_rev, base.seed, cur.git_rev, cur.seed
+        );
+        print!("{}", cmp.summary());
+        if cmp.regressed() {
+            failed = true;
+        }
+    }
+    if compared == 0 {
+        println!("bench-compare: nothing compared (no matching baselines yet)");
+        if enforce {
+            eprintln!("bench-compare: --enforce with nothing to compare — wiring error?");
+            std::process::exit(1);
+        }
+        return;
+    }
+    if failed {
+        if enforce {
+            eprintln!("bench-compare: regression past {threshold}% (enforced)");
+            std::process::exit(1);
+        }
+        println!("bench-compare: regressions detected (warn-only; pass --enforce to fail)");
+    } else {
+        println!("bench-compare: {compared} report(s) within {threshold}% of baseline");
+    }
 }
 
 fn cmd_pump(args: &Args) {

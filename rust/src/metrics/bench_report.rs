@@ -1,0 +1,482 @@
+//! Machine-readable perf-regression reports.
+//!
+//! Every perf bench can emit a versioned `BENCH_<name>.json` describing
+//! what it measured — per-case wall timings from [`crate::util::bench`]
+//! plus derived metrics (throughput, cycles/inference, MACs/s, latency
+//! percentiles) — stamped with the seed and git revision that produced
+//! it. [`compare`] diffs a fresh report against a committed baseline and
+//! flags regressions past a threshold, which is what turns "the hot path
+//! feels fast" into a tracked, CI-gated artifact (ROADMAP north-star:
+//! *fast as the hardware allows* must be falsifiable).
+//!
+//! Direction convention: `per_iter_ns` and any metric are
+//! lower-is-better, **except** metrics whose name contains `per_s` or
+//! starts with `throughput`, which are higher-is-better. Deterministic
+//! device-model metrics (e.g. `cycles_per_inference`) compare exactly;
+//! wall-clock numbers carry measurement noise, which the caller absorbs
+//! via the threshold.
+//!
+//! A baseline may be committed with `"provisional": true` — e.g. when it
+//! was produced on a machine other than the CI runner, or holds only
+//! hand-computed deterministic metrics. Comparisons against a
+//! provisional baseline report deltas but never fail.
+
+use crate::util::bench::Timing;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Version of the `BENCH_*.json` schema this module reads and writes.
+/// Bump on any breaking field change; the loader rejects other versions
+/// so a stale baseline fails loudly instead of comparing garbage.
+pub const SCHEMA_VERSION: i64 = 1;
+
+/// One measured benchmark case inside a report.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchResult {
+    /// case name (stable across runs — it is the comparison key)
+    pub name: String,
+    /// mean wall time per iteration [ns]
+    pub per_iter_ns: f64,
+    /// standard deviation across measurement batches [ns]
+    pub sigma_ns: f64,
+    /// iterations measured
+    pub iters: u64,
+    /// derived metrics, keyed by stable names (see the module docs for
+    /// the direction convention)
+    pub metrics: BTreeMap<String, f64>,
+}
+
+/// A full `BENCH_<name>.json` document.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchReport {
+    /// schema version ([`SCHEMA_VERSION`] when written by this build)
+    pub schema_version: i64,
+    /// bench name (`hotpath`, `conv`, `mcu`, `serving`, `reliability`,
+    /// `trace`); the file name is `BENCH_<name>.json`
+    pub name: String,
+    /// RNG seed the bench ran with (replay: `--seed <seed>`)
+    pub seed: u64,
+    /// git revision that produced the report (best-effort; `unknown`
+    /// outside a work tree)
+    pub git_rev: String,
+    /// true when the numbers were not produced by the canonical flow on
+    /// the comparing machine — comparisons warn but never fail
+    pub provisional: bool,
+    /// the measured cases
+    pub results: Vec<BenchResult>,
+}
+
+/// Best-effort git revision: `$NVMCU_GIT_REV` if set (CI exports it),
+/// else `git rev-parse --short HEAD`, else `"unknown"`.
+pub fn git_rev() -> String {
+    if let Ok(rev) = std::env::var("NVMCU_GIT_REV") {
+        if !rev.is_empty() {
+            return rev;
+        }
+    }
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+impl BenchReport {
+    /// An empty report for bench `name` run with `seed`, stamped with
+    /// the current git revision.
+    pub fn new(name: &str, seed: u64) -> BenchReport {
+        BenchReport {
+            schema_version: SCHEMA_VERSION,
+            name: name.to_string(),
+            seed,
+            git_rev: git_rev(),
+            provisional: false,
+            results: Vec::new(),
+        }
+    }
+
+    /// Append one harness timing plus its derived metrics.
+    pub fn push_timing(&mut self, t: &Timing, metrics: &[(&str, f64)]) {
+        self.results.push(BenchResult {
+            name: t.name.clone(),
+            per_iter_ns: t.per_iter_ns,
+            sigma_ns: t.sigma_ns,
+            iters: t.iters,
+            metrics: metrics.iter().map(|&(k, v)| (k.to_string(), v)).collect(),
+        });
+    }
+
+    /// Append a case measured outside the harness (manual timing loops).
+    pub fn push_case(&mut self, name: &str, per_iter_ns: f64, metrics: &[(&str, f64)]) {
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            per_iter_ns,
+            sigma_ns: 0.0,
+            iters: 1,
+            metrics: metrics.iter().map(|&(k, v)| (k.to_string(), v)).collect(),
+        });
+    }
+
+    /// The canonical file name, `BENCH_<name>.json`.
+    pub fn file_name(&self) -> String {
+        format!("BENCH_{}.json", self.name)
+    }
+
+    /// Serialize to the versioned JSON document.
+    pub fn to_json(&self) -> Json {
+        let results: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                let metrics: BTreeMap<String, Json> =
+                    r.metrics.iter().map(|(k, &v)| (k.clone(), Json::Num(v))).collect();
+                let mut o = BTreeMap::new();
+                o.insert("name".to_string(), Json::Str(r.name.clone()));
+                o.insert("per_iter_ns".to_string(), Json::Num(r.per_iter_ns));
+                o.insert("sigma_ns".to_string(), Json::Num(r.sigma_ns));
+                o.insert("iters".to_string(), Json::Int(r.iters as i64));
+                o.insert("metrics".to_string(), Json::Obj(metrics));
+                Json::Obj(o)
+            })
+            .collect();
+        let mut o = BTreeMap::new();
+        o.insert("schema_version".to_string(), Json::Int(self.schema_version));
+        o.insert("name".to_string(), Json::Str(self.name.clone()));
+        o.insert("seed".to_string(), Json::Int(self.seed as i64));
+        o.insert("git_rev".to_string(), Json::Str(self.git_rev.clone()));
+        o.insert("provisional".to_string(), Json::Bool(self.provisional));
+        o.insert("results".to_string(), Json::Arr(results));
+        Json::Obj(o)
+    }
+
+    /// Parse a report from JSON text. Never panics: a malformed or
+    /// wrong-version document is an error message, because the
+    /// comparator must stay usable against hand-edited baselines.
+    pub fn parse(text: &str) -> Result<BenchReport, String> {
+        let j = Json::parse(text).map_err(|e| e.to_string())?;
+        let field = |key: &str| j.get(key).ok_or_else(|| format!("missing field `{key}`"));
+        let version = field("schema_version")?
+            .as_i64()
+            .ok_or_else(|| "schema_version must be an integer".to_string())?;
+        if version != SCHEMA_VERSION {
+            return Err(format!(
+                "unsupported schema_version {version} (this build reads {SCHEMA_VERSION})"
+            ));
+        }
+        let name = field("name")?.as_str().ok_or("name must be a string")?.to_string();
+        let seed = field("seed")?.as_i64().ok_or("seed must be an integer")?;
+        let git = field("git_rev")?.as_str().ok_or("git_rev must be a string")?.to_string();
+        let provisional =
+            field("provisional")?.as_bool().ok_or("provisional must be a bool")?;
+        let mut results = Vec::new();
+        for (i, r) in
+            field("results")?.as_arr().ok_or("results must be an array")?.iter().enumerate()
+        {
+            let rfield =
+                |key: &str| r.get(key).ok_or_else(|| format!("result {i}: missing `{key}`"));
+            let mut metrics = BTreeMap::new();
+            if let Json::Obj(m) = rfield("metrics")? {
+                for (k, v) in m {
+                    let v = v
+                        .as_f64()
+                        .ok_or_else(|| format!("result {i}: metric `{k}` must be numeric"))?;
+                    metrics.insert(k.clone(), v);
+                }
+            } else {
+                return Err(format!("result {i}: metrics must be an object"));
+            }
+            results.push(BenchResult {
+                name: rfield("name")?
+                    .as_str()
+                    .ok_or_else(|| format!("result {i}: name must be a string"))?
+                    .to_string(),
+                per_iter_ns: rfield("per_iter_ns")?
+                    .as_f64()
+                    .ok_or_else(|| format!("result {i}: per_iter_ns must be numeric"))?,
+                sigma_ns: rfield("sigma_ns")?
+                    .as_f64()
+                    .ok_or_else(|| format!("result {i}: sigma_ns must be numeric"))?,
+                iters: rfield("iters")?
+                    .as_i64()
+                    .ok_or_else(|| format!("result {i}: iters must be an integer"))?
+                    .max(0) as u64,
+                metrics,
+            });
+        }
+        Ok(BenchReport {
+            schema_version: version,
+            name,
+            seed: seed.max(0) as u64,
+            git_rev: git,
+            provisional,
+            results,
+        })
+    }
+
+    /// Write the report to `path` (pretty enough for diffs: one line —
+    /// the sorted-key serializer keeps the text deterministic).
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))
+    }
+
+    /// Load a report from a file; IO and parse failures are messages.
+    pub fn load(path: &Path) -> Result<BenchReport, String> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        Self::parse(&text).map_err(|e| format!("{}: {e}", path.display()))
+    }
+}
+
+/// One compared series (a case's `per_iter_ns` or one of its metrics).
+#[derive(Clone, Debug)]
+pub struct MetricDelta {
+    /// the case the series belongs to
+    pub case: String,
+    /// series name (`per_iter_ns` or the metric key)
+    pub metric: String,
+    /// baseline value
+    pub baseline: f64,
+    /// current value
+    pub current: f64,
+    /// signed change in percent (positive = current larger)
+    pub change_pct: f64,
+    /// true when the change exceeds the threshold in the worse direction
+    pub regressed: bool,
+}
+
+/// The outcome of diffing a current report against a baseline.
+#[derive(Clone, Debug)]
+pub struct Comparison {
+    /// bench name compared
+    pub bench: String,
+    /// the baseline was marked provisional — deltas are informational
+    /// and [`Comparison::regressed`] always reports false
+    pub provisional: bool,
+    /// every series present in both reports
+    pub deltas: Vec<MetricDelta>,
+    /// cases in the baseline with no counterpart in the current run
+    pub missing_in_current: Vec<String>,
+    /// cases in the current run with no committed baseline yet
+    pub missing_in_baseline: Vec<String>,
+}
+
+impl Comparison {
+    /// True when any non-provisional series regressed past the threshold.
+    pub fn regressed(&self) -> bool {
+        !self.provisional && self.deltas.iter().any(|d| d.regressed)
+    }
+
+    /// Human-readable multi-line summary (the CLI prints this).
+    pub fn summary(&self) -> String {
+        let mut out = String::new();
+        for d in &self.deltas {
+            let tag = if d.regressed { "REGRESSED" } else { "ok" };
+            out.push_str(&format!(
+                "  {:<9} {} / {}: {:.4} -> {:.4} ({:+.2}%)\n",
+                tag, d.case, d.metric, d.baseline, d.current, d.change_pct
+            ));
+        }
+        for name in &self.missing_in_current {
+            out.push_str(&format!("  missing   {name}: in baseline, not measured now\n"));
+        }
+        for name in &self.missing_in_baseline {
+            out.push_str(&format!("  new       {name}: no baseline yet\n"));
+        }
+        if self.provisional {
+            out.push_str("  (baseline is provisional — deltas are informational only)\n");
+        }
+        out
+    }
+}
+
+/// True for series where larger values mean better performance (see the
+/// module docs for the convention).
+fn higher_is_better(metric: &str) -> bool {
+    metric.contains("per_s") || metric.starts_with("throughput")
+}
+
+/// Signed percent change and regression verdict for one series. A zero
+/// baseline value is a placeholder ("never measured" — e.g. the
+/// hand-written provisional baseline's wall-clock fields): the delta is
+/// reported as infinite but never counts as a regression, because a
+/// relative change against nothing is not actionable.
+fn delta(case: &str, metric: &str, baseline: f64, current: f64, threshold_pct: f64) -> MetricDelta {
+    let change_pct = if baseline != 0.0 {
+        (current - baseline) / baseline.abs() * 100.0
+    } else if current == 0.0 {
+        0.0
+    } else {
+        f64::INFINITY * current.signum()
+    };
+    let worse = if higher_is_better(metric) { -change_pct } else { change_pct };
+    MetricDelta {
+        case: case.to_string(),
+        metric: metric.to_string(),
+        baseline,
+        current,
+        change_pct,
+        regressed: worse.is_finite() && worse > threshold_pct,
+    }
+}
+
+/// Diff `current` against `baseline`: every series present in both is
+/// compared with `threshold_pct` headroom (wall-clock noise); cases
+/// present on only one side are reported, not failed — a renamed or
+/// newly-added case must not brick CI.
+pub fn compare(baseline: &BenchReport, current: &BenchReport, threshold_pct: f64) -> Comparison {
+    let mut cmp = Comparison {
+        bench: current.name.clone(),
+        provisional: baseline.provisional,
+        deltas: Vec::new(),
+        missing_in_current: Vec::new(),
+        missing_in_baseline: Vec::new(),
+    };
+    for b in &baseline.results {
+        let Some(c) = current.results.iter().find(|c| c.name == b.name) else {
+            cmp.missing_in_current.push(b.name.clone());
+            continue;
+        };
+        cmp.deltas.push(delta(
+            &b.name,
+            "per_iter_ns",
+            b.per_iter_ns,
+            c.per_iter_ns,
+            threshold_pct,
+        ));
+        for (k, &bv) in &b.metrics {
+            if let Some(&cv) = c.metrics.get(k) {
+                cmp.deltas.push(delta(&b.name, k, bv, cv, threshold_pct));
+            }
+        }
+    }
+    for c in &current.results {
+        if !baseline.results.iter().any(|b| b.name == c.name) {
+            cmp.missing_in_baseline.push(c.name.clone());
+        }
+    }
+    cmp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(name: &str, cases: &[(&str, f64, &[(&str, f64)])]) -> BenchReport {
+        let mut r = BenchReport::new(name, 3);
+        for &(case, ns, metrics) in cases {
+            r.push_case(case, ns, metrics);
+        }
+        r
+    }
+
+    #[test]
+    fn golden_schema_roundtrip_and_field_stability() {
+        let mut r = report("hotpath", &[("mvm", 1234.5, &[("macs_per_s", 2.5e9)])]);
+        r.git_rev = "abc1234".into();
+        let text = r.to_json().to_string();
+        // field-stability pin: these exact keys are the v1 schema — CI
+        // artifacts and committed baselines depend on them
+        for key in [
+            "\"schema_version\":1",
+            "\"name\":\"hotpath\"",
+            "\"seed\":3",
+            "\"git_rev\":\"abc1234\"",
+            "\"provisional\":false",
+            "\"results\":",
+            "\"per_iter_ns\":1234.5",
+            "\"sigma_ns\":0",
+            "\"iters\":1",
+            "\"metrics\":{\"macs_per_s\":2500000000}",
+        ] {
+            assert!(text.contains(key), "schema drifted: `{key}` not in {text}");
+        }
+        let back = BenchReport::parse(&text).expect("round-trip");
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_without_panicking() {
+        assert!(BenchReport::parse("{").is_err());
+        assert!(BenchReport::parse("{}").unwrap_err().contains("schema_version"));
+        let wrong_version = r#"{"schema_version": 99, "name": "x", "seed": 0,
+            "git_rev": "g", "provisional": false, "results": []}"#;
+        assert!(BenchReport::parse(wrong_version).unwrap_err().contains("99"));
+        let bad_result = r#"{"schema_version": 1, "name": "x", "seed": 0,
+            "git_rev": "g", "provisional": false,
+            "results": [{"name": "c", "per_iter_ns": "oops",
+                         "sigma_ns": 0, "iters": 1, "metrics": {}}]}"#;
+        assert!(BenchReport::parse(bad_result).unwrap_err().contains("per_iter_ns"));
+    }
+
+    #[test]
+    fn improvement_passes_regression_fails() {
+        let base = report("hotpath", &[("mvm", 1000.0, &[("macs_per_s", 1e9)])]);
+        // 20% faster and higher throughput: no regression
+        let faster = report("hotpath", &[("mvm", 800.0, &[("macs_per_s", 1.25e9)])]);
+        assert!(!compare(&base, &faster, 5.0).regressed());
+        // 20% slower: regression past a 5% threshold
+        let slower = report("hotpath", &[("mvm", 1200.0, &[("macs_per_s", 1e9)])]);
+        let cmp = compare(&base, &slower, 5.0);
+        assert!(cmp.regressed());
+        assert!(cmp.summary().contains("REGRESSED"), "{}", cmp.summary());
+        // ...but inside the threshold it passes
+        let noise = report("hotpath", &[("mvm", 1030.0, &[("macs_per_s", 1e9)])]);
+        assert!(!compare(&base, &noise, 5.0).regressed());
+        // throughput direction: a DROP in a per_s metric is the regression
+        let slow_tp = report("hotpath", &[("mvm", 1000.0, &[("macs_per_s", 0.5e9)])]);
+        assert!(compare(&base, &slow_tp, 5.0).regressed());
+    }
+
+    #[test]
+    fn zero_baseline_is_a_placeholder_not_a_regression() {
+        // the committed provisional baseline carries per_iter_ns: 0 for
+        // wall-clock fields it never measured — only its deterministic
+        // metrics gate
+        let base = report("hotpath", &[("mvm", 0.0, &[("cycles_per_inference", 901.0)])]);
+        let same = report("hotpath", &[("mvm", 5000.0, &[("cycles_per_inference", 901.0)])]);
+        assert!(!compare(&base, &same, 5.0).regressed());
+        let drift = report("hotpath", &[("mvm", 5000.0, &[("cycles_per_inference", 1200.0)])]);
+        assert!(compare(&base, &drift, 5.0).regressed());
+    }
+
+    #[test]
+    fn provisional_baseline_warns_but_never_fails() {
+        let mut base = report("hotpath", &[("mvm", 1000.0, &[])]);
+        base.provisional = true;
+        let much_slower = report("hotpath", &[("mvm", 9000.0, &[])]);
+        let cmp = compare(&base, &much_slower, 5.0);
+        assert!(!cmp.regressed());
+        assert!(cmp.summary().contains("provisional"), "{}", cmp.summary());
+    }
+
+    #[test]
+    fn disjoint_cases_are_reported_not_failed() {
+        let base = report("conv", &[("old_case", 10.0, &[])]);
+        let cur = report("conv", &[("new_case", 10.0, &[])]);
+        let cmp = compare(&base, &cur, 5.0);
+        assert!(!cmp.regressed());
+        assert_eq!(cmp.missing_in_current, vec!["old_case"]);
+        assert_eq!(cmp.missing_in_baseline, vec!["new_case"]);
+        assert!(cmp.summary().contains("no baseline yet"), "{}", cmp.summary());
+    }
+
+    #[test]
+    fn save_and_load_roundtrip_through_a_file() {
+        let dir = std::env::temp_dir().join(format!("nvmcu_bench_report_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let r = report("trace", &[("overhead", 42.0, &[("cycles_per_inference", 9000.0)])]);
+        let path = dir.join(r.file_name());
+        assert_eq!(r.file_name(), "BENCH_trace.json");
+        r.save(&path).unwrap();
+        assert_eq!(BenchReport::load(&path).expect("load"), r);
+        // a missing baseline is an informative message, not a panic
+        let e = BenchReport::load(&dir.join("BENCH_absent.json")).unwrap_err();
+        assert!(e.contains("BENCH_absent.json"), "{e}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

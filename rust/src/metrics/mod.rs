@@ -1,7 +1,9 @@
 //! Energy / latency / standby-power models, the Table 2 comparison
 //! framework, and the serving-side observability types
 //! ([`ServerStats`], [`ServingMeter`] — see [`serving`];
-//! [`ReliabilityStats`] for the self-healing loop — see [`reliability`]).
+//! [`ReliabilityStats`] for the self-healing loop — see [`reliability`];
+//! [`BenchReport`] for machine-readable perf baselines — see
+//! [`bench_report`]).
 //!
 //! Absolute joules are 28 nm-LP *estimates* (constants in
 //! `config::PowerConfig`, sources documented there and in ARCHITECTURE.md);
@@ -11,9 +13,11 @@
 //! no extra process steps, and near-memory compute (no weight movement
 //! over the bus).
 
+pub mod bench_report;
 pub mod reliability;
 pub mod serving;
 
+pub use bench_report::{BenchReport, BenchResult, Comparison};
 pub use reliability::{ReliabilityMeter, ReliabilityStats};
 pub use serving::{ServerStats, ServingMeter};
 

@@ -119,8 +119,11 @@ impl ServingMeter {
     /// owned by the admission side, so the caller passes them in.
     /// The latency window is sorted once for all three percentiles.
     pub fn snapshot(&self, submitted: u64, rejected: u64, queue_depth: usize) -> ServerStats {
+        // total_cmp: a NaN latency (e.g. from a poisoned clock source)
+        // must not panic the stats path of a serving process — NaN sorts
+        // to the top and distorts at most the tail percentiles
         let mut sorted = self.latencies_ms.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+        sorted.sort_by(f64::total_cmp);
         ServerStats {
             submitted,
             rejected,
@@ -297,6 +300,20 @@ mod tests {
         assert_eq!(s.max_batch_seen(), 0);
         // the summary must render even with no data
         assert!(s.summary().contains("queue 3"));
+    }
+
+    #[test]
+    fn nan_latency_does_not_panic_snapshot() {
+        // regression: the old partial_cmp sort panicked the stats path
+        // of a live server on a single NaN sample
+        let mut m = ServingMeter::new(2);
+        m.record_latency_ms(1.0);
+        m.record_latency_ms(f64::NAN);
+        m.record_latency_ms(2.0);
+        let s = m.snapshot(3, 0, 0);
+        assert_eq!(s.completed, 3);
+        // NaN total_cmp-sorts above every number, so the median is real
+        assert!((s.p50_ms - 2.0).abs() < 1e-9, "p50={}", s.p50_ms);
     }
 
     #[test]

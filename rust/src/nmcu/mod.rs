@@ -322,8 +322,10 @@ pub struct Nmcu {
     pub stats: NmcuStats,
     /// scratch row buffer (one EFLASH read)
     row_buf: Vec<i8>,
-    /// scratch input slice
-    x_buf: Vec<i8>,
+    /// scratch for the prefetched input tiles (`k_tiles` x `lanes`,
+    /// grown on demand): the flow control stages the whole input vector
+    /// once per launch instead of re-fetching each slice per column pair
+    x_tiles: Vec<i8>,
     /// trace sink (`None` = tracing disabled, the zero-cost path)
     sink: Option<TraceSink>,
     /// per-inference operator index (reset by [`Nmcu::begin_inference`])
@@ -340,7 +342,7 @@ impl Nmcu {
             fetcher: Fetcher::new(cfg.input_capacity),
             stats: NmcuStats::default(),
             row_buf: vec![0; cfg.pes_per_macro * cfg.lanes_per_pe],
-            x_buf: vec![0; cfg.lanes_per_pe],
+            x_tiles: Vec::new(),
             sink: None,
             op_seq: 0,
         }
@@ -522,12 +524,35 @@ impl Nmcu {
         let lanes = self.cfg.lanes_per_pe;
         let k_tiles = desc.k_tiles(lanes);
         let pairs = desc.col_pairs();
+        // Stage the whole input vector once per launch: neither input
+        // source mutates during the MVM (ping-pong writes land on the
+        // inactive side and the flip happens after), so the K tiles are
+        // identical for every column pair — the naive loop re-fetched
+        // each slice `pairs` times.
+        self.x_tiles.resize(k_tiles * lanes, 0);
+        for t in 0..k_tiles {
+            self.fetcher.fetch(
+                &self.pingpong,
+                desc.k,
+                t * lanes,
+                &mut self.x_tiles[t * lanes..(t + 1) * lanes],
+            );
+        }
+        // Batched stat bookkeeping: accumulate in locals, flush once per
+        // launch. The per-layer deltas are geometry-bounded far below
+        // u64::MAX, so one saturating add at the end yields the same
+        // totals as the old per-tile saturating adds.
+        let mut eflash_reads = 0u64;
+        let mut mac_ops = 0u64;
+        let mut writebacks = 0u64;
+        let mut cycles = 0u64;
         for p in 0..pairs {
             let mut acc0 = desc.bias[2 * p];
-            let mut acc1 = if 2 * p + 1 < desc.n { desc.bias[2 * p + 1] } else { 0 };
+            let has_odd = 2 * p + 1 < desc.n;
+            let mut acc1 = if has_odd { desc.bias[2 * p + 1] } else { 0 };
             for t in 0..k_tiles {
                 let row = desc.first_row + p * k_tiles + t;
-                self.fetcher.fetch(&self.pingpong, desc.k, t * lanes, &mut self.x_buf);
+                let x = &self.x_tiles[t * lanes..(t + 1) * lanes];
                 // zero-copy row access in Cached mode (the hot path);
                 // Resample mode goes through the noisy sense chain
                 let row_data: &[i8] = match eflash.read_mode {
@@ -537,17 +562,16 @@ impl Nmcu {
                         &self.row_buf
                     }
                 };
-                self.stats.eflash_reads = self.stats.eflash_reads.saturating_add(1);
-                self.stats.cycles =
-                    self.stats.cycles.saturating_add(self.cfg.read_latency_cycles);
+                eflash_reads += 1;
+                cycles += self.cfg.read_latency_cycles;
                 // PE0: even column, PE1: odd column — same input slice
-                acc0 = self.pes[0].accumulate(acc0, &self.x_buf, &row_data[..lanes]);
-                self.stats.mac_ops = self.stats.mac_ops.saturating_add(lanes as u64);
-                if 2 * p + 1 < desc.n {
-                    acc1 = self.pes[1].accumulate(acc1, &self.x_buf, &row_data[lanes..]);
-                    self.stats.mac_ops = self.stats.mac_ops.saturating_add(lanes as u64);
+                acc0 = self.pes[0].accumulate(acc0, x, &row_data[..lanes]);
+                mac_ops += lanes as u64;
+                if has_odd {
+                    acc1 = self.pes[1].accumulate(acc1, x, &row_data[lanes..]);
+                    mac_ops += lanes as u64;
                 }
-                self.stats.cycles = self.stats.cycles.saturating_add(self.cfg.mac_cycles);
+                cycles += self.cfg.mac_cycles;
             }
             // requantize + write back
             let mut q0 = requantize(acc0, desc.requant);
@@ -555,19 +579,22 @@ impl Nmcu {
                 q0 = quant::relu_q(q0, desc.requant.z_out);
             }
             out[2 * p] = q0;
-            self.stats.writebacks = self.stats.writebacks.saturating_add(1);
-            self.stats.cycles = self.stats.cycles.saturating_add(self.cfg.writeback_cycles);
-            if 2 * p + 1 < desc.n {
+            writebacks += 1;
+            cycles += self.cfg.writeback_cycles;
+            if has_odd {
                 let mut q1 = requantize(acc1, desc.requant);
                 if desc.relu {
                     q1 = quant::relu_q(q1, desc.requant.z_out);
                 }
                 out[2 * p + 1] = q1;
-                self.stats.writebacks = self.stats.writebacks.saturating_add(1);
-                self.stats.cycles =
-                    self.stats.cycles.saturating_add(self.cfg.writeback_cycles);
+                writebacks += 1;
+                cycles += self.cfg.writeback_cycles;
             }
         }
+        self.stats.eflash_reads = self.stats.eflash_reads.saturating_add(eflash_reads);
+        self.stats.mac_ops = self.stats.mac_ops.saturating_add(mac_ops);
+        self.stats.writebacks = self.stats.writebacks.saturating_add(writebacks);
+        self.stats.cycles = self.stats.cycles.saturating_add(cycles);
         if let Some(s) = &self.sink {
             // one burst per launch: the flow control streams
             // pairs x k_tiles row reads back-to-back off the 256-cell port

@@ -18,15 +18,53 @@ pub struct Requant {
     pub z_out: i8,
 }
 
+impl Requant {
+    /// Range check for artifact-loaded parameters: `m0` must be a
+    /// normalized fixed-point mantissa in `[2^30, 2^31)` and `shift` in
+    /// `[1, 62]` (the requantizer's i64 fast path). Out-of-range values
+    /// would not crash — [`rounding_rshift`] is total — but they mean
+    /// the compiler that produced the artifact is broken, so the loader
+    /// rejects them instead of serving silently wrong outputs.
+    pub fn validate(&self) -> Result<(), crate::error::EngineError> {
+        if self.m0 < (1 << 30) {
+            return Err(crate::error::EngineError::BadDescriptor {
+                reason: format!(
+                    "requant m0={} below the normalized mantissa range [2^30, 2^31)",
+                    self.m0
+                ),
+            });
+        }
+        if self.shift == 0 || self.shift > 62 {
+            return Err(crate::error::EngineError::BadDescriptor {
+                reason: format!("requant shift={} outside [1, 62]", self.shift),
+            });
+        }
+        Ok(())
+    }
+}
+
 /// Arithmetic right shift with round-half-away-from-zero (i64 domain).
+///
+/// Total over every `(x, shift)` — a malformed artifact must surface as
+/// a typed load error upstream, never as overflow here. `shift == 0` is
+/// the identity (no fraction bits to round; the old `1 << (shift - 1)`
+/// addend wrapped in release builds, where the guarding `debug_assert`
+/// compiles out). `1..=126` rounds through i128 so the addend and the
+/// sum cannot overflow even for extreme `x`; beyond that every
+/// representable `x` rounds to 0. Off the MAC hot path — one call per
+/// requantized output, so the widened arithmetic costs nothing
+/// measurable.
 #[inline]
 pub fn rounding_rshift(x: i64, shift: u32) -> i64 {
-    debug_assert!(shift >= 1 && shift < 63);
-    let add = 1i64 << (shift - 1);
-    if x >= 0 {
-        (x + add) >> shift
-    } else {
-        -((-x + add) >> shift)
+    match shift {
+        0 => x,
+        1..=126 => {
+            let w = x as i128;
+            let add = 1i128 << (shift - 1);
+            (if w >= 0 { (w + add) >> shift } else { -((-w + add) >> shift) }) as i64
+        }
+        // |x| / 2^shift < 0.5 for every i64, so rounding yields 0
+        _ => 0,
     }
 }
 
@@ -72,6 +110,48 @@ mod tests {
         assert_eq!(rounding_rshift(-6, 2), -2);
         assert_eq!(rounding_rshift(5, 2), 1); // 1.25 -> 1
         assert_eq!(rounding_rshift(0, 5), 0);
+    }
+
+    #[test]
+    fn rshift_zero_is_identity_in_release_too() {
+        // regression: `shift == 0` used to compute `1i64 << u32::MAX`
+        // inside a release build (debug_assert compiled out) — now it is
+        // defined as the identity for every input
+        for x in [i64::MIN, -7, -1, 0, 1, 7, i64::MAX] {
+            assert_eq!(rounding_rshift(x, 0), x, "x={x}");
+        }
+    }
+
+    #[test]
+    fn rshift_large_shifts_round_to_zero_without_overflow() {
+        // shift 63: the rounding addend 2^62 no longer fits the i64 fast
+        // path next to a near-2^62 product — check the i128 widening
+        assert_eq!(rounding_rshift(1 << 62, 63), 1); // exactly 0.5 -> away from zero
+        assert_eq!(rounding_rshift((1 << 62) - 1, 63), 0);
+        assert_eq!(rounding_rshift(-(1 << 62), 63), -1);
+        assert_eq!(rounding_rshift(i64::MAX, 64), 0);
+        assert_eq!(rounding_rshift(i64::MIN, 64), -1); // -2^63/2^64 = -0.5
+        for shift in [65, 100, 126, 127, 200, u32::MAX] {
+            assert_eq!(rounding_rshift(i64::MAX, shift), 0, "shift={shift}");
+            assert_eq!(rounding_rshift(i64::MIN + 1, shift), 0, "shift={shift}");
+        }
+    }
+
+    #[test]
+    fn requant_validate_accepts_normalized_rejects_malformed() {
+        assert!(Requant { m0: 1 << 30, shift: 1, z_out: 0 }.validate().is_ok());
+        assert!(Requant { m0: i32::MAX, shift: 62, z_out: -128 }.validate().is_ok());
+        assert!(Requant { m0: 1_518_500_250, shift: 40, z_out: -3 }.validate().is_ok());
+        for bad in [
+            Requant { m0: (1 << 30) - 1, shift: 40, z_out: 0 }, // denormal mantissa
+            Requant { m0: 0, shift: 40, z_out: 0 },
+            Requant { m0: -1, shift: 40, z_out: 0 },
+            Requant { m0: 1 << 30, shift: 0, z_out: 0 }, // the release-UB shift
+            Requant { m0: 1 << 30, shift: 63, z_out: 0 },
+        ] {
+            let e = bad.validate().expect_err(&format!("{bad:?} must be rejected"));
+            assert!(e.to_string().contains("requant"), "{e}");
+        }
     }
 
     #[test]

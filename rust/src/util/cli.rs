@@ -21,7 +21,7 @@ pub struct Args {
 /// after `--` is a `--key value` option. Keep in sync with main.rs usage.
 pub const BOOL_FLAGS: &[&str] = &[
     "verbose", "quiet", "help", "quick", "resample", "no-bake", "fast", "firmware",
-    "conventional-driver", "json",
+    "conventional-driver", "json", "enforce",
 ];
 
 impl Args {

@@ -20,9 +20,14 @@ pub fn std_dev(xs: &[f64]) -> f64 {
 }
 
 /// Linear-interpolated percentile, p in [0, 100].
+///
+/// NaN policy: non-finite samples are dropped before ranking (a single
+/// NaN latency sample used to panic the whole run through the
+/// `partial_cmp().unwrap()` sort). All-NaN input behaves like empty
+/// input and returns NaN.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut v: Vec<f64> = xs.iter().copied().filter(|x| x.is_finite()).collect();
+    v.sort_by(f64::total_cmp);
     percentile_of_sorted(&v, p)
 }
 
@@ -44,7 +49,10 @@ pub fn percentile_of_sorted(v: &[f64], p: f64) -> f64 {
 }
 
 /// Fixed-width histogram over [lo, hi) with `bins` buckets.
-/// Out-of-range samples clamp into the edge buckets.
+/// Out-of-range samples clamp into the edge buckets; non-finite samples
+/// are counted in [`Histogram::dropped`] instead of a bucket (NaN casts
+/// to 0 in Rust, so the old code silently binned every NaN at index 0 —
+/// indistinguishable from a real low-edge sample).
 #[derive(Clone, Debug)]
 pub struct Histogram {
     /// inclusive lower edge of the range
@@ -53,17 +61,24 @@ pub struct Histogram {
     pub hi: f64,
     /// per-bucket sample counts
     pub counts: Vec<u64>,
+    /// non-finite samples rejected by [`Histogram::add`]
+    pub dropped: u64,
 }
 
 impl Histogram {
     /// An empty histogram over [lo, hi) with `bins` buckets.
     pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
         assert!(hi > lo && bins > 0);
-        Histogram { lo, hi, counts: vec![0; bins] }
+        Histogram { lo, hi, counts: vec![0; bins], dropped: 0 }
     }
 
-    /// Count one sample (out-of-range clamps to the edge buckets).
+    /// Count one sample (out-of-range clamps to the edge buckets;
+    /// non-finite increments `dropped` and touches no bucket).
     pub fn add(&mut self, x: f64) {
+        if !x.is_finite() {
+            self.dropped += 1;
+            return;
+        }
         let bins = self.counts.len();
         let t = (x - self.lo) / (self.hi - self.lo);
         let idx = ((t * bins as f64) as isize).clamp(0, bins as isize - 1) as usize;
@@ -92,15 +107,26 @@ impl Histogram {
 
 /// ROC AUC by the Mann-Whitney rank statistic with midrank tie handling.
 /// Must agree with `datasets.auc_score` on the python side (same algorithm).
+///
+/// NaN policy: a NaN score carries no ranking information, so such
+/// samples are dropped (with their labels) before ranking instead of
+/// panicking the sort; the statistic is computed over the remaining
+/// pairs. All-NaN (or single-class) input returns NaN.
 pub fn auc(scores: &[f64], labels: &[bool]) -> f64 {
     assert_eq!(scores.len(), labels.len());
+    let (scores, labels): (Vec<f64>, Vec<bool>) = scores
+        .iter()
+        .zip(labels)
+        .filter(|(s, _)| !s.is_nan())
+        .map(|(&s, &l)| (s, l))
+        .unzip();
     let n_pos = labels.iter().filter(|&&l| l).count();
     let n_neg = labels.len() - n_pos;
     if n_pos == 0 || n_neg == 0 {
         return f64::NAN;
     }
     let mut idx: Vec<usize> = (0..scores.len()).collect();
-    idx.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+    idx.sort_by(|&a, &b| scores[a].total_cmp(&scores[b]));
     let mut ranks = vec![0.0f64; scores.len()];
     let mut i = 0;
     while i < idx.len() {
@@ -193,6 +219,40 @@ mod tests {
         assert_eq!(h.counts, vec![2, 1, 1, 2]);
         assert_eq!(h.total(), 6);
         assert!(h.ascii(10).lines().count() == 4);
+    }
+
+    #[test]
+    fn percentile_survives_nan_samples() {
+        // regression: one NaN used to panic the partial_cmp sort
+        let xs = [3.0, f64::NAN, 1.0, 2.0, f64::NAN];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 2.0);
+        assert_eq!(percentile(&xs, 100.0), 3.0);
+        assert!(percentile(&[f64::NAN, f64::NAN], 50.0).is_nan());
+    }
+
+    #[test]
+    fn histogram_routes_nan_to_dropped() {
+        // regression: `NaN as isize` is 0, so NaN silently landed in the
+        // lowest bucket, indistinguishable from a real low-edge sample
+        let mut h = Histogram::new(0.0, 1.0, 4);
+        h.add(f64::NAN);
+        h.add(f64::INFINITY);
+        h.add(f64::NEG_INFINITY);
+        h.add(0.1);
+        assert_eq!(h.counts, vec![1, 0, 0, 0]);
+        assert_eq!(h.dropped, 3);
+        assert_eq!(h.total(), 1);
+    }
+
+    #[test]
+    fn auc_drops_nan_scored_samples() {
+        // regression: one NaN score used to panic the rank sort; the
+        // statistic over the remaining samples must match the NaN-free run
+        let s = [0.1, 0.2, f64::NAN, 0.8, 0.9];
+        let l = [false, false, true, true, true];
+        assert_eq!(auc(&s, &l), auc(&[0.1, 0.2, 0.8, 0.9], &[false, false, true, true]));
+        assert!(auc(&[f64::NAN, f64::NAN], &[true, false]).is_nan());
     }
 
     #[test]

@@ -1,0 +1,37 @@
+#!/bin/sh
+# Perf-regression gate: generate fresh BENCH_*.json reports with the
+# `nvmcu bench-report` suite and diff them against the committed
+# baselines in rust/benches/baselines/ via `nvmcu bench-compare`.
+#
+# Warn-only by default (the PR CI leg); set ENFORCE=1 to fail on any
+# regression past the threshold (the nightly-soak leg).
+#
+# Usage: tools/bench_compare.sh [out-dir]
+#   out-dir        where the fresh reports go (default: bench-reports/)
+#   QUICK=1        CI-smoke timing targets (default on; QUICK=0 for full)
+#   ENFORCE=1      exit non-zero on regression (default: warn only)
+#   THRESHOLD=<n>  allowed slowdown in percent (default: 10)
+
+set -eu
+cd "$(dirname "$0")/.." || exit 1
+
+out="${1:-bench-reports}"
+threshold="${THRESHOLD:-10}"
+
+quick_flag="--quick"
+[ "${QUICK:-1}" = "0" ] && quick_flag=""
+
+enforce_flag=""
+[ "${ENFORCE:-0}" = "1" ] && enforce_flag="--enforce"
+
+NVMCU_GIT_REV="${NVMCU_GIT_REV:-$(git rev-parse --short HEAD 2>/dev/null || echo unknown)}"
+export NVMCU_GIT_REV
+
+# shellcheck disable=SC2086  # flags are intentionally word-split
+cargo run --release --bin nvmcu -- bench-report $quick_flag --out-dir "$out"
+# shellcheck disable=SC2086
+cargo run --release --bin nvmcu -- bench-compare \
+    --baseline rust/benches/baselines \
+    --current "$out" \
+    --threshold "$threshold" \
+    $enforce_flag

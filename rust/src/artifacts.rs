@@ -421,6 +421,97 @@ pub fn load_qmodel(dir: &Path, base: &str) -> Result<QModel> {
     Ok(QModel { name: j.str("model").to_string(), input_shape, layers })
 }
 
+/// Serialize a model to `<dir>/<base>.json` + `<base>.bin` in exactly
+/// the format [`load_qmodel`] reads — what the PTQ pipeline
+/// ([`crate::quantize`]) emits. The output is byte-deterministic:
+/// JSON object keys are sorted (BTreeMap), floats print in Rust's
+/// shortest round-trip form, and the blob is laid out in layer order
+/// (packed int4 codes, then little-endian i32 biases, per weighted
+/// layer) — so the same model produces identical bytes across runs and
+/// build profiles, pinned by the golden test in
+/// `rust/tests/test_quantize.rs`.
+pub fn save_qmodel(dir: &Path, base: &str, m: &QModel) -> Result<()> {
+    m.validate()?;
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating artifact directory {dir:?}"))?;
+    let mut bin: Vec<u8> = Vec::new();
+    let mut layers: Vec<Json> = Vec::new();
+    for l in &m.layers {
+        use std::collections::BTreeMap;
+        let mut o: BTreeMap<String, Json> = BTreeMap::new();
+        let ins_i = |o: &mut BTreeMap<String, Json>, k: &str, v: i64| {
+            o.insert(k.to_string(), Json::Int(v));
+        };
+        let (w_offset, w_bytes, b_offset, b_bytes) =
+            if matches!(l.op, QOp::MaxPool2d { .. }) {
+                (0, 0, 0, 0)
+            } else {
+                let packed = pack_int4(&l.codes);
+                let w_offset = bin.len();
+                bin.extend_from_slice(&packed);
+                let b_offset = bin.len();
+                for b in &l.bias {
+                    bin.extend_from_slice(&b.to_le_bytes());
+                }
+                (w_offset, packed.len(), b_offset, 4 * l.n)
+            };
+        o.insert("name".to_string(), Json::Str(l.name.clone()));
+        o.insert("relu".to_string(), Json::Bool(l.relu));
+        ins_i(&mut o, "k", l.k as i64);
+        ins_i(&mut o, "n", l.n as i64);
+        ins_i(&mut o, "m0", l.requant.m0 as i64);
+        ins_i(&mut o, "shift", l.requant.shift as i64);
+        ins_i(&mut o, "z_out", l.requant.z_out as i64);
+        ins_i(&mut o, "z_in", l.z_in as i64);
+        o.insert("s_in".to_string(), Json::Num(l.s_in));
+        o.insert("s_w".to_string(), Json::Num(l.s_w));
+        o.insert("s_out".to_string(), Json::Num(l.s_out));
+        ins_i(&mut o, "w_offset", w_offset as i64);
+        ins_i(&mut o, "w_bytes", w_bytes as i64);
+        ins_i(&mut o, "b_offset", b_offset as i64);
+        ins_i(&mut o, "b_bytes", b_bytes as i64);
+        match l.op {
+            QOp::Dense => {
+                o.insert("op".to_string(), Json::Str("dense".to_string()));
+            }
+            QOp::Conv2D { kh, kw, cin, cout, stride, pad } => {
+                o.insert("op".to_string(), Json::Str("conv2d".to_string()));
+                ins_i(&mut o, "kh", kh as i64);
+                ins_i(&mut o, "kw", kw as i64);
+                ins_i(&mut o, "cin", cin as i64);
+                ins_i(&mut o, "cout", cout as i64);
+                ins_i(&mut o, "stride", stride as i64);
+                ins_i(&mut o, "pad", pad as i64);
+            }
+            QOp::MaxPool2d { kh, kw, stride } => {
+                o.insert("op".to_string(), Json::Str("maxpool2d".to_string()));
+                ins_i(&mut o, "kh", kh as i64);
+                ins_i(&mut o, "kw", kw as i64);
+                ins_i(&mut o, "stride", stride as i64);
+            }
+        }
+        layers.push(Json::Obj(o));
+    }
+    let mut top: std::collections::BTreeMap<String, Json> = std::collections::BTreeMap::new();
+    top.insert("model".to_string(), Json::Str(m.name.clone()));
+    top.insert("bin".to_string(), Json::Str(format!("{base}.bin")));
+    top.insert(
+        "input_shape".to_string(),
+        Json::Arr(vec![
+            Json::Int(m.input_shape.c as i64),
+            Json::Int(m.input_shape.h as i64),
+            Json::Int(m.input_shape.w as i64),
+        ]),
+    );
+    top.insert("layers".to_string(), Json::Arr(layers));
+    let meta_path = dir.join(format!("{base}.json"));
+    std::fs::write(&meta_path, format!("{}\n", Json::Obj(top)))
+        .with_context(|| format!("writing {meta_path:?}"))?;
+    let bin_path = dir.join(format!("{base}.bin"));
+    std::fs::write(&bin_path, &bin).with_context(|| format!("writing {bin_path:?}"))?;
+    Ok(())
+}
+
 /// The float FC-AutoEncoder (off-chip layers) + quantization boundary.
 #[derive(Clone, Debug)]
 pub struct AeFloat {
@@ -582,6 +673,33 @@ mod tests {
         // a multiplier that would wrap the i32 cast is rejected
         write_tiny_artifact(&dir, 1 << 40, 35);
         assert!(load_qmodel(&dir, "tiny").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn save_load_round_trip_preserves_every_field() {
+        let dir = std::env::temp_dir().join(format!("nvmcu_save_rt_{}", std::process::id()));
+        let mut c1 = conv_layer("c1", 1, 2, 3, 3, 1);
+        c1.codes = (0..c1.k * c1.n).map(|i| ((i % 16) as i8) - 8).collect();
+        c1.bias = (0..c1.n as i32).map(|i| i * 1000 - 500).collect();
+        let model = QModel::cnn(
+            "rt",
+            Shape { c: 1, h: 4, w: 4 },
+            vec![c1, QLayer::maxpool("p1", 2, 2, 2), dense_layer("fc", 8, 3)],
+        );
+        save_qmodel(&dir, "rt", &model).expect("save");
+        let back = load_qmodel(&dir, "rt").expect("load what we saved");
+        assert_eq!(back.name, model.name);
+        assert_eq!(back.input_shape, model.input_shape);
+        assert_eq!(back.layers.len(), model.layers.len());
+        for (a, b) in back.layers.iter().zip(&model.layers) {
+            assert_eq!(a.name, b.name);
+            assert_eq!((a.k, a.n, a.relu, a.op), (b.k, b.n, b.relu, b.op));
+            assert_eq!(a.codes, b.codes, "layer {}", a.name);
+            assert_eq!(a.bias, b.bias, "layer {}", a.name);
+            assert_eq!(a.requant, b.requant);
+            assert_eq!((a.z_in, a.s_in, a.s_w, a.s_out), (b.z_in, b.s_in, b.s_w, b.s_out));
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -280,9 +280,12 @@ impl Chip {
 /// process can react instead of aborting. Capacity is checked for the
 /// WHOLE model up front, so a `CapacityExhausted` error leaves the
 /// bump allocator untouched and a smaller model can still be
-/// programmed afterwards. (A mid-model `ProgramVerifyFailed` does
-/// leave the already-programmed rows allocated — those cells are
-/// physically worn and should not be reused without an erase.)
+/// programmed afterwards. A mid-model failure (verify, or a typed
+/// [`crate::eflash::program::ProgramError`] from the macro) rolls the
+/// bump allocator back to its pre-call watermark, so a failed program
+/// leaves no partially-claimed region behind. Note the rolled-back
+/// rows still hold the partial charge of the aborted ISPP pass —
+/// physically they need an erase before they can hold a fresh image.
 ///
 /// This is a free function over any [`EflashMacro`] so both substrates
 /// share it: [`Chip::program_model`] and the firmware-in-the-loop
@@ -404,6 +407,10 @@ pub fn program_model_into(
         input_shape: model.input_shape,
         output_len: shapes.last().expect("shapes non-empty").len(),
     };
+    // transactional: a mid-model program failure rolls every layer
+    // programmed so far back to this watermark, so a failed model
+    // leaves no partially-claimed region behind
+    let mark = eflash.alloc_mark();
     for ((i, l), image) in model.layers.iter().enumerate().zip(images) {
         let Some(image) = image else {
             let QOp::MaxPool2d { kh, kw, stride } = l.op else {
@@ -412,17 +419,26 @@ pub fn program_model_into(
             pm.ops.push(PlannedOp::Pool(PoolDesc { kh, kw, stride, in_shape: shapes[i] }));
             continue;
         };
-        let Some((region, report)) = eflash.program_region(&image) else {
-            // capacity was pre-checked for the whole model above, so
-            // this is an internal invariant violation, not bad input
-            unreachable!("EFLASH capacity pre-check missed layer {}", l.name);
+        let (region, report) = match eflash.program_region(&image) {
+            Ok(ok) => ok,
+            Err(e) => {
+                eflash.release_rows_from(mark);
+                // name the failing layer in the verify error (the
+                // macro cannot know which layer it was programming)
+                return Err(match e {
+                    EngineError::ProgramVerifyFailed { failed_cells, .. } => {
+                        EngineError::ProgramVerifyFailed { layer: l.name.clone(), failed_cells }
+                    }
+                    // capacity was pre-checked for the whole model, so
+                    // running out mid-model is an internal invariant
+                    // violation, not bad input
+                    EngineError::CapacityExhausted { .. } => {
+                        unreachable!("EFLASH capacity pre-check missed layer {}", l.name)
+                    }
+                    other => other,
+                });
+            }
         };
-        if report.failed_cells > 0 {
-            return Err(EngineError::ProgramVerifyFailed {
-                layer: l.name.clone(),
-                failed_cells: report.failed_cells,
-            });
-        }
         let desc = LayerDesc {
             first_row: region.first_row,
             k: l.k,

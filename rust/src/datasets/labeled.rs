@@ -1,0 +1,197 @@
+//! Labeled synthetic datasets with a ground-truth float teacher — the
+//! eval harness's stand-in for MNIST / speech-commands (the crate
+//! vendors no real datasets; ARCHITECTURE.md).
+//!
+//! Each generator draws per-class prototype images and emits samples as
+//! `clamp(prototype + gaussian noise, 0, 1)` with the prototype's index
+//! as the label. The **teacher** is a hand-constructed (not trained)
+//! [`FloatModel`] that classifies by nearest prototype in a feature
+//! space: a fixed random embedding (dense or conv+pool), then a dense
+//! head whose column `c` is class `c`'s embedded prototype with bias
+//! `-||f_c||^2 / 2` — exactly the linear form of nearest-neighbour over
+//! `||h - f_c||^2`. Head columns are mean-centered per feature (a
+//! per-input constant shift of every logit, so argmax is unchanged),
+//! which keeps the int4 symmetric weight grid used on both sides of
+//! zero after PTQ.
+//!
+//! The teachers are near-perfect on their own distribution by
+//! construction, which is the point: the eval harness measures what the
+//! int4 pipeline and the baked EFLASH *lose*, so the f32 ceiling must
+//! not be the bottleneck.
+
+use crate::artifacts::Shape;
+use crate::quantize::FloatModel;
+use crate::util::rng::Rng;
+
+/// A labeled synthetic dataset plus its ground-truth float teacher.
+#[derive(Clone, Debug)]
+pub struct LabeledSet {
+    /// dataset name (`mnist-like`, `kws-like`)
+    pub name: String,
+    /// sample shape (channel-major)
+    pub input_shape: Shape,
+    /// number of classes
+    pub classes: usize,
+    /// flattened samples, values in `[0, 1]`
+    pub samples: Vec<Vec<f32>>,
+    /// ground-truth labels, `labels[i] < classes`
+    pub labels: Vec<u8>,
+    /// the float reference model (the eval f32 leg and PTQ input)
+    pub teacher: FloatModel,
+}
+
+impl LabeledSet {
+    /// Number of samples.
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// True when the set holds no samples.
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+}
+
+/// Dense head implementing nearest-prototype over embedded class
+/// features: returns `(weights, bias)` with `w[i*classes + c] =
+/// f_c[i] - mean_c f_c[i]` and `bias[c] = -||f_c||^2 / 2`.
+fn prototype_head(feats: &[Vec<f32>]) -> (Vec<f32>, Vec<f32>) {
+    let classes = feats.len();
+    let dim = feats[0].len();
+    let mut w = vec![0f32; dim * classes];
+    let mut b = vec![0f32; classes];
+    for i in 0..dim {
+        let mean: f32 = feats.iter().map(|f| f[i]).sum::<f32>() / classes as f32;
+        for (c, f) in feats.iter().enumerate() {
+            w[i * classes + c] = f[i] - mean;
+        }
+    }
+    for (c, f) in feats.iter().enumerate() {
+        b[c] = -0.5 * f.iter().map(|v| v * v).sum::<f32>();
+    }
+    (w, b)
+}
+
+fn noisy_samples(
+    r: &mut Rng,
+    protos: &[Vec<f32>],
+    n: usize,
+    sigma: f64,
+) -> (Vec<Vec<f32>>, Vec<u8>) {
+    let classes = protos.len();
+    let mut samples = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        // round-robin labels: every class-balanced prefix (calibration
+        // split, quick eval split) sees all classes
+        let c = i % classes;
+        let x: Vec<f32> = protos[c]
+            .iter()
+            .map(|&p| (p + r.normal(0.0, sigma) as f32).clamp(0.0, 1.0))
+            .collect();
+        samples.push(x);
+        labels.push(c as u8);
+    }
+    (samples, labels)
+}
+
+/// MNIST-like: 12x12 single-channel images, 10 classes, dense teacher
+/// (random embedding to 32 ReLU features + prototype head) — the shape
+/// the paper's MNIST MLP workload serves.
+pub fn labeled_mnist_like(r: &mut Rng, n: usize) -> LabeledSet {
+    let shape = Shape { c: 1, h: 12, w: 12 };
+    let (d, hidden, classes) = (shape.len(), 32, 10);
+    let protos: Vec<Vec<f32>> = (0..classes)
+        .map(|_| (0..d).map(|_| r.uniform(0.05, 0.95) as f32).collect())
+        .collect();
+    let w1: Vec<f32> = (0..d * hidden)
+        .map(|_| r.normal(0.0, 1.0 / (d as f64).sqrt()) as f32)
+        .collect();
+    let embed = FloatModel::new("mnist-like-teacher", shape)
+        .dense("embed", hidden, true, w1, vec![0.0; hidden])
+        .expect("embedding geometry is static");
+    let feats: Vec<Vec<f32>> = protos.iter().map(|p| embed.forward(p)).collect();
+    let (w2, b2) = prototype_head(&feats);
+    let teacher = embed
+        .dense("proto", classes, false, w2, b2)
+        .expect("head geometry is static");
+    let (samples, labels) = noisy_samples(r, &protos, n, 0.12);
+    LabeledSet { name: "mnist-like".into(), input_shape: shape, classes, samples, labels, teacher }
+}
+
+/// KWS-like: 32x10 single-channel "spectrograms", 12 classes (the
+/// paper's keyword-spotting workload shape), conv teacher — 4 random
+/// 3x3 ReLU filters, 2x2 max-pool, prototype head over the pooled
+/// feature map.
+pub fn labeled_kws_like(r: &mut Rng, n: usize) -> LabeledSet {
+    let shape = Shape { c: 1, h: 32, w: 10 };
+    let (d, filters, classes) = (shape.len(), 4, 12);
+    let protos: Vec<Vec<f32>> = (0..classes)
+        .map(|_| (0..d).map(|_| r.uniform(0.05, 0.95) as f32).collect())
+        .collect();
+    let wc: Vec<f32> = (0..9 * filters).map(|_| r.normal(0.0, 0.3) as f32).collect();
+    let embed = FloatModel::new("kws-like-teacher", shape)
+        .conv2d("feat", filters, 3, 3, 1, 1, true, wc, vec![0.0; filters])
+        .expect("conv geometry is static")
+        .maxpool("pool", 2, 2, 2)
+        .expect("pool geometry is static");
+    let feats: Vec<Vec<f32>> = protos.iter().map(|p| embed.forward(p)).collect();
+    let (w2, b2) = prototype_head(&feats);
+    let teacher = embed
+        .dense("proto", classes, false, w2, b2)
+        .expect("head geometry is static");
+    let (samples, labels) = noisy_samples(r, &protos, n, 0.10);
+    LabeledSet { name: "kws-like".into(), input_shape: shape, classes, samples, labels, teacher }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::argmax_f32;
+
+    fn teacher_accuracy(set: &LabeledSet) -> f64 {
+        let mut hits = 0;
+        for (x, &y) in set.samples.iter().zip(&set.labels) {
+            if argmax_f32(&set.teacher.forward(x)) == y as usize {
+                hits += 1;
+            }
+        }
+        hits as f64 / set.len() as f64
+    }
+
+    #[test]
+    fn mnist_like_teacher_is_near_perfect() {
+        let mut r = Rng::new(11);
+        let set = labeled_mnist_like(&mut r, 200);
+        assert_eq!(set.len(), 200);
+        assert!(set.labels.iter().all(|&l| (l as usize) < set.classes));
+        set.teacher.validate().unwrap();
+        let acc = teacher_accuracy(&set);
+        assert!(acc >= 0.95, "f32 teacher accuracy {acc} below its construction floor");
+    }
+
+    #[test]
+    fn kws_like_teacher_is_near_perfect() {
+        let mut r = Rng::new(12);
+        let set = labeled_kws_like(&mut r, 120);
+        set.teacher.validate().unwrap();
+        assert_eq!(set.teacher.output_len().unwrap(), set.classes);
+        let acc = teacher_accuracy(&set);
+        assert!(acc >= 0.95, "f32 teacher accuracy {acc} below its construction floor");
+    }
+
+    #[test]
+    fn samples_stay_in_unit_range_and_classes_are_balanced() {
+        let mut r = Rng::new(13);
+        let set = labeled_mnist_like(&mut r, 50);
+        assert!(set
+            .samples
+            .iter()
+            .all(|x| x.iter().all(|&v| (0.0..=1.0).contains(&v))));
+        // round-robin labels: first `classes` samples cover all classes
+        let prefix: Vec<u8> = set.labels[..set.classes].to_vec();
+        let mut sorted = prefix.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..set.classes as u8).collect::<Vec<_>>());
+    }
+}

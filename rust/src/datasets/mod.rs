@@ -2,6 +2,11 @@
 //! plus synthetic model generators — a dense MLP and int4 CNNs
 //! (keyword-spotting / MNIST-shaped) — for the serving CLI, benches,
 //! examples, and property tests that don't need the trained models.
+//! [`labeled`] adds *labeled* synthetic datasets (MNIST-like,
+//! KWS-like) carrying ground-truth float teachers for the PTQ eval
+//! harness ([`crate::quantize::eval`]).
+
+pub mod labeled;
 
 use crate::artifacts::{QLayer, QModel, QOp, Shape};
 use crate::nmcu::Requant;

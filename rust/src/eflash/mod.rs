@@ -11,6 +11,7 @@ pub mod read;
 pub mod retention;
 
 use crate::config::ChipConfig;
+use crate::error::EngineError;
 use crate::util::rng::Rng;
 use array::{EflashArray, RowAddr};
 use levels::Ladders;
@@ -108,15 +109,55 @@ impl EflashMacro {
         self.total_rows() - self.next_row
     }
 
+    /// Bump-allocator watermark: everything allocated from here on can
+    /// be rolled back with [`EflashMacro::release_rows_from`]. Record it
+    /// before a multi-region transaction (e.g. programming a whole
+    /// model) so a mid-way failure leaves no partially-claimed rows.
+    pub fn alloc_mark(&self) -> usize {
+        self.next_row
+    }
+
+    /// Roll the bump allocator back to `mark` (a value previously
+    /// returned by [`EflashMacro::alloc_mark`]): every row allocated
+    /// since is erased and returned to the free pool. No-op when
+    /// nothing was allocated past the mark.
+    pub fn release_rows_from(&mut self, mark: usize) {
+        debug_assert!(mark <= self.next_row, "mark {mark} is ahead of the allocator");
+        if mark >= self.next_row {
+            return;
+        }
+        for r in mark..self.next_row {
+            let addr = self.array.row_addr(r);
+            self.array.erase_row(addr, &mut self.rng);
+        }
+        self.next_row = mark;
+        self.cache_valid = false;
+    }
+
     /// Program a flat int4 code image into freshly allocated rows with
     /// full program-verify. Returns the region and the ISPP report.
-    pub fn program_region(&mut self, codes: &[i8]) -> Option<(Region, ProgramReport)> {
+    ///
+    /// Failure leaves no partially-claimed region behind: on
+    /// [`EngineError::CapacityExhausted`] nothing was allocated, and on
+    /// a program error ([`EngineError::ProgramVerifyFailed`] /
+    /// [`EngineError::BadDescriptor`]) the just-allocated rows are
+    /// erased and handed back to the allocator before returning.
+    pub fn program_region(
+        &mut self,
+        codes: &[i8],
+    ) -> Result<(Region, ProgramReport), EngineError> {
         let cpr = self.cells_per_read();
         let n_rows = codes.len().div_ceil(cpr);
-        let first_row = self.alloc_rows(n_rows)?;
+        let Some(first_row) = self.alloc_rows(n_rows) else {
+            return Err(EngineError::CapacityExhausted {
+                requested_rows: n_rows,
+                rows_free: self.rows_free(),
+                what: "region".into(),
+            });
+        };
         let rows: Vec<RowAddr> =
             (first_row..first_row + n_rows).map(|r| self.array.row_addr(r)).collect();
-        let report = program::program_rows(
+        let result = program::program_rows(
             &mut self.array,
             &rows,
             codes,
@@ -125,7 +166,13 @@ impl EflashMacro {
             &mut self.rng,
         );
         self.cache_valid = false;
-        Some((Region { first_row, n_rows, n_codes: codes.len() }, report))
+        match result {
+            Ok(report) => Ok((Region { first_row, n_rows, n_codes: codes.len() }, report)),
+            Err(e) => {
+                self.release_rows_from(first_row);
+                Err(e.into())
+            }
+        }
     }
 
     /// Read one row of the region, decoding to int4 weight values.
@@ -215,7 +262,7 @@ impl EflashMacro {
         for &addr in &rows {
             self.array.erase_row(addr, &mut self.rng);
         }
-        let report = program::program_rows(
+        let result = program::program_rows(
             &mut self.array,
             &rows,
             image,
@@ -224,7 +271,17 @@ impl EflashMacro {
             &mut self.rng,
         );
         self.cache_valid = false;
-        report
+        match result {
+            Ok(report) => report,
+            // repair inspects failed_cells as data (the region stays
+            // out of service); the completed sweep's report rides on
+            // the error. TooManyCodes cannot happen: the image length
+            // is pinned to the region's geometry by the assert above.
+            Err(program::ProgramError::PulseBudgetExhausted { report, .. }) => report,
+            Err(e @ program::ProgramError::TooManyCodes { .. }) => {
+                unreachable!("region geometry pinned by the image-length assert: {e}")
+            }
+        }
     }
 
     /// State-occupancy histogram of a region (Fig 6): counts per decoded
@@ -386,6 +443,54 @@ mod tests {
         assert_eq!(mac.rows_free(), rows_free, "repair must not allocate rows");
         let e = mac.decode_errors(&region, &codes);
         assert_eq!(e.exact, 2000, "repair left decode errors: {e:?}");
+    }
+
+    #[test]
+    fn failed_program_leaves_no_partially_claimed_region() {
+        // zero pulse budget: every non-erased target fails verify, so
+        // program_region must err AND roll its allocation back
+        let mut cfg = chip();
+        cfg.eflash.max_pulses = 0;
+        let mut mac = EflashMacro::new(&cfg);
+        let mark = mac.alloc_mark();
+        let free = mac.rows_free();
+        let err = mac.program_region(&vec![7i8; 600]).expect_err("zero budget must fail");
+        assert!(matches!(err, EngineError::ProgramVerifyFailed { .. }), "{err:?}");
+        assert_eq!(mac.rows_free(), free, "failed program must not claim rows");
+        assert_eq!(mac.alloc_mark(), mark, "allocator must be rolled back");
+        // the rolled-back rows are erased: a later allocation reuses
+        // them and an all-erased image programs cleanly
+        cfg.eflash.max_pulses = 512;
+        let mut ok = EflashMacro::new(&cfg);
+        ok.program_region(&vec![7i8; 600]).expect("default budget programs fine");
+    }
+
+    #[test]
+    fn capacity_error_is_typed_and_claims_nothing() {
+        let cfg = chip();
+        let mut mac = EflashMacro::new(&cfg);
+        let cells = mac.total_rows() * mac.cells_per_read();
+        let err = mac.program_region(&vec![0i8; cells + 1]).expect_err("over-capacity");
+        assert!(matches!(err, EngineError::CapacityExhausted { .. }), "{err:?}");
+        assert_eq!(mac.rows_free(), mac.total_rows());
+    }
+
+    #[test]
+    fn release_rows_from_rolls_back_and_erases() {
+        let cfg = chip();
+        let mut mac = EflashMacro::new(&cfg);
+        let mark = mac.alloc_mark();
+        let codes: Vec<i8> = (0..512).map(|i| ((i % 16) as i8) - 8).collect();
+        let (region, _) = mac.program_region(&codes).unwrap();
+        assert_eq!(mac.alloc_mark(), mark + region.n_rows);
+        mac.release_rows_from(mark);
+        assert_eq!(mac.alloc_mark(), mark);
+        // the released rows decode as erased again
+        let base = mac.array.row_base(mac.array.row_addr(mark));
+        for i in 0..512 {
+            let vt = mac.array.vt(base + i) as f64;
+            assert_eq!(mac.ladders.decode(vt), 0, "cell {i} not erased: vt={vt}");
+        }
     }
 
     #[test]

@@ -10,7 +10,69 @@
 use super::array::{EflashArray, RowAddr};
 use super::levels::Ladders;
 use super::mapping::StateMapping;
+use crate::error::EngineError;
 use crate::util::rng::Rng;
+
+/// Why an ISPP program pass could not deliver a clean region. Both
+/// conditions used to be silent (a capacity `assert!` panic; a
+/// `failed_cells` count callers could forget to check) — they are typed
+/// now so every programming path surfaces them as
+/// [`EngineError`]s instead of panicking or serving garbage weights.
+#[derive(Clone, Debug)]
+pub enum ProgramError {
+    /// More codes than the target rows can hold.
+    TooManyCodes {
+        /// codes requested
+        codes: usize,
+        /// rows provided
+        rows: usize,
+        /// cells the rows hold
+        capacity: usize,
+    },
+    /// One or more cells never passed verify within the pulse budget.
+    /// The full sweep still ran (every other cell is programmed); the
+    /// report is attached so repair flows can inspect the damage.
+    PulseBudgetExhausted {
+        /// cells that never reached their verify level
+        failed_cells: u64,
+        /// the per-cell pulse budget that was exhausted
+        max_pulses: u32,
+        /// the completed sweep's report
+        report: ProgramReport,
+    },
+}
+
+impl std::fmt::Display for ProgramError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProgramError::TooManyCodes { codes, rows, capacity } => write!(
+                f,
+                "codes {codes} exceed capacity of {rows} rows ({capacity} cells)"
+            ),
+            ProgramError::PulseBudgetExhausted { failed_cells, max_pulses, .. } => write!(
+                f,
+                "{failed_cells} cells failed to verify within {max_pulses} pulses"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ProgramError {}
+
+impl From<ProgramError> for EngineError {
+    fn from(e: ProgramError) -> EngineError {
+        match e {
+            ProgramError::TooManyCodes { .. } => {
+                EngineError::BadDescriptor { reason: e.to_string() }
+            }
+            ProgramError::PulseBudgetExhausted { failed_cells, .. } => {
+                // callers that know which layer was being programmed
+                // (the coordinator) overwrite the placeholder name
+                EngineError::ProgramVerifyFailed { layer: "<region>".into(), failed_cells }
+            }
+        }
+    }
+}
 
 /// Outcome of programming a set of rows.
 #[derive(Clone, Debug, Default)]
@@ -53,6 +115,12 @@ impl ProgramReport {
 /// against `ladders`. Cells targeted at state 0 stay erased (that is the
 /// paper's cheapest, most-common level once weights concentrate near the
 /// low-Vt codes).
+///
+/// Errors instead of panicking: [`ProgramError::TooManyCodes`] up front
+/// when the rows cannot hold the image (nothing is pulsed), and
+/// [`ProgramError::PulseBudgetExhausted`] when cells fail verify — the
+/// sweep still completes first, and the error carries the full
+/// [`ProgramReport`] so repair paths can count the damage.
 pub fn program_rows(
     array: &mut EflashArray,
     rows: &[RowAddr],
@@ -60,14 +128,15 @@ pub fn program_rows(
     mapping: StateMapping,
     ladders: &Ladders,
     rng: &mut Rng,
-) -> ProgramReport {
+) -> Result<ProgramReport, ProgramError> {
     let cpr = array.cfg.cells_per_read;
-    assert!(
-        codes.len() <= rows.len() * cpr,
-        "codes {} exceed capacity of {} rows",
-        codes.len(),
-        rows.len()
-    );
+    if codes.len() > rows.len() * cpr {
+        return Err(ProgramError::TooManyCodes {
+            codes: codes.len(),
+            rows: rows.len(),
+            capacity: rows.len() * cpr,
+        });
+    }
     let n_prog_states = ladders.verify.len();
     let mut report = ProgramReport {
         pulses_per_state: vec![0; n_prog_states],
@@ -110,7 +179,14 @@ pub fn program_rows(
             report.programmed_cells += 1;
         }
     }
-    report
+    if report.failed_cells > 0 {
+        return Err(ProgramError::PulseBudgetExhausted {
+            failed_cells: report.failed_cells,
+            max_pulses,
+            report,
+        });
+    }
+    Ok(report)
 }
 
 #[cfg(test)]
@@ -134,7 +210,8 @@ mod tests {
         let rows = [RowAddr { bank: 0, row: 0 }];
         let rep = program_rows(
             &mut arr, &rows, &codes, StateMapping::AdjacentUnit, &ladders, &mut rng,
-        );
+        )
+        .expect("all 16 states program within budget");
         assert_eq!(rep.failed_cells, 0, "{rep:?}");
         assert_eq!(rep.total_cells, 256);
         // every cell decodes back to its target state
@@ -153,7 +230,8 @@ mod tests {
         let rows = [RowAddr { bank: 0, row: 1 }];
         let rep = program_rows(
             &mut arr, &rows, &codes, StateMapping::AdjacentUnit, &ladders, &mut rng,
-        );
+        )
+        .expect("erased targets need no pulses");
         assert_eq!(rep.total_pulses(), 0);
         assert_eq!(rep.programmed_cells, 0);
     }
@@ -166,7 +244,8 @@ mod tests {
         let rows = [RowAddr { bank: 0, row: 2 }];
         let rep = program_rows(
             &mut arr, &rows, &codes, StateMapping::AdjacentUnit, &ladders, &mut rng,
-        );
+        )
+        .expect("program");
         let low = rep.pulses_per_state[0]; // state 1
         let high = rep.pulses_per_state[14]; // state 15
         assert!(high > low * 2, "low={low} high={high}");
@@ -178,7 +257,8 @@ mod tests {
         let (mut arr, ladders, mut rng) = setup();
         let codes = vec![0i8; 256]; // state 8
         let rows = [RowAddr { bank: 1, row: 0 }];
-        program_rows(&mut arr, &rows, &codes, StateMapping::AdjacentUnit, &ladders, &mut rng);
+        program_rows(&mut arr, &rows, &codes, StateMapping::AdjacentUnit, &ladders, &mut rng)
+            .expect("program");
         let vrd = ladders.verify[7];
         let base = arr.row_base(rows[0]);
         for i in 0..256 {
@@ -195,16 +275,64 @@ mod tests {
         let rows = [RowAddr { bank: 2, row: 0 }];
         let rep = program_rows(
             &mut arr, &rows, &codes, StateMapping::AdjacentUnit, &ladders, &mut rng,
-        );
+        )
+        .expect("program");
         assert_eq!(rep.sequence_trace().lines().count(), 16);
     }
 
     #[test]
-    #[should_panic(expected = "exceed capacity")]
-    fn too_many_codes_panics() {
+    fn too_many_codes_is_a_typed_error_and_pulses_nothing() {
+        // the old behavior was an assert! panic; pinned as an error now
         let (mut arr, ladders, mut rng) = setup();
         let codes = vec![0i8; 257];
         let rows = [RowAddr { bank: 0, row: 0 }];
-        program_rows(&mut arr, &rows, &codes, StateMapping::AdjacentUnit, &ladders, &mut rng);
+        let before: Vec<f32> = (0..256).map(|i| arr.vt(i)).collect();
+        let err =
+            program_rows(&mut arr, &rows, &codes, StateMapping::AdjacentUnit, &ladders, &mut rng)
+                .expect_err("257 codes cannot fit one 256-cell row");
+        assert!(
+            matches!(err, ProgramError::TooManyCodes { codes: 257, rows: 1, capacity: 256 }),
+            "{err:?}"
+        );
+        assert!(err.to_string().contains("exceed capacity"), "{err}");
+        // the overfull request must not have pulsed a single cell
+        let after: Vec<f32> = (0..256).map(|i| arr.vt(i)).collect();
+        assert_eq!(before, after, "capacity error left the array perturbed");
+        // and it converts into the engine's typed descriptor error
+        let ee: EngineError = err.into();
+        assert!(matches!(ee, EngineError::BadDescriptor { .. }), "{ee:?}");
+    }
+
+    #[test]
+    fn exhausted_pulse_budget_is_a_typed_error_with_the_report() {
+        // a zero pulse budget makes every non-erased target fail verify
+        let cfg = EflashConfig {
+            capacity_bits: 64 * 1024,
+            max_pulses: 0,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(9);
+        let mut arr = EflashArray::new(&cfg, 0.3, 0.004, 4.0, &mut rng);
+        let ladders = Ladders::new(&cfg, 2.5);
+        let codes = vec![7i8; 64]; // state 15: unreachable without pulses
+        let rows = [RowAddr { bank: 0, row: 0 }];
+        let err =
+            program_rows(&mut arr, &rows, &codes, StateMapping::AdjacentUnit, &ladders, &mut rng)
+                .expect_err("zero budget cannot program state 15");
+        let ProgramError::PulseBudgetExhausted { failed_cells, max_pulses, report } = err
+        else {
+            panic!("wrong error variant");
+        };
+        assert_eq!(failed_cells, 64);
+        assert_eq!(max_pulses, 0);
+        // the sweep completed and the attached report tallies the damage
+        assert_eq!(report.failed_cells, 64);
+        assert_eq!(report.total_cells, 64);
+        let ee: EngineError =
+            ProgramError::PulseBudgetExhausted { failed_cells, max_pulses, report }.into();
+        assert!(
+            matches!(ee, EngineError::ProgramVerifyFailed { failed_cells: 64, .. }),
+            "{ee:?}"
+        );
     }
 }

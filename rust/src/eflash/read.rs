@@ -73,7 +73,8 @@ mod tests {
             StateMapping::AdjacentUnit,
             &ladders,
             &mut rng,
-        );
+        )
+        .expect("program");
         (arr, ladders, rng, codes)
     }
 

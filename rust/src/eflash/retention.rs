@@ -113,7 +113,8 @@ mod tests {
         program_rows(
             &mut arr, &[RowAddr { bank: 0, row: 0 }], &codes,
             StateMapping::AdjacentUnit, &ladders, &mut rng,
-        );
+        )
+        .expect("program");
         let before: Vec<f32> = (0..256).map(|i| arr.vt(i)).collect();
         bake(&mut arr, &cfg(), 160.0, 125.0);
         let mut dropped = 0;
@@ -139,7 +140,8 @@ mod tests {
         let ladders = Ladders::new(&ecfg, 2.5);
         let codes: Vec<i8> = (0..256 * 8).map(|i| ((i % 16) as i8) - 8).collect();
         let rows: Vec<RowAddr> = (0..8).map(|r| RowAddr { bank: 0, row: r }).collect();
-        program_rows(&mut arr, &rows, &codes, StateMapping::AdjacentUnit, &ladders, &mut rng);
+        program_rows(&mut arr, &rows, &codes, StateMapping::AdjacentUnit, &ladders, &mut rng)
+            .expect("program");
         bake(&mut arr, &cfg(), 160.0, 125.0);
         let mut exact = 0usize;
         let mut within1 = 0usize;

@@ -30,6 +30,13 @@
 //! scheduler bit-exact to the software reference
 //! (`rust/tests/test_properties.rs`).
 //!
+//! Float32 models enter through the [`quantize`] PTQ pipeline
+//! (calibration, int4 symmetric weights, derived requant pairs;
+//! `QUANTIZE.md`), and the [`quantize::eval`] harness scores the result
+//! end to end — f32 reference vs int4 vs the programmed chip, fresh and
+//! after an unpowered bake — reproducing the paper's 160 h @ 125 °C
+//! retention claim as a measured table (`eval` CLI mode).
+//!
 //! ## The `engine` API
 //!
 //! [`engine`] is the public serving surface: a [`engine::Backend`] trait
@@ -99,6 +106,7 @@ pub mod metrics;
 pub mod models;
 #[deny(clippy::unwrap_used)]
 pub mod nmcu;
+pub mod quantize;
 pub mod reliability;
 #[cfg(feature = "pjrt")]
 pub mod runtime;

@@ -5,6 +5,12 @@
 //!   table2      print the Table 2 comparison
 //!   fig5        charge-pump + WL-driver waveforms, mapping, ISPP trace
 //!   fig6        programmed-state histograms of the two models
+//!   eval        PTQ-quantize the float teachers of the labeled
+//!               synthetic workloads and score four legs — f32, int4
+//!               reference, programmed chip fresh, and the same chip
+//!               after an unpowered bake — enforcing the accuracy
+//!               gates (--quick, --workload <w>, --hours <h>,
+//!               --temp <c>, --calib <n>, --samples <n>)
 //!   infer       serve MNIST inferences through the engine API
 //!               (--backend nmcu|mcu|reference|hlo, --batch <n>,
 //!                --shards <n>, --index <i>)
@@ -31,9 +37,14 @@
 //!   bench-report
 //!               run the perf-report suite in-process and write one
 //!               machine-readable `BENCH_<name>.json` per bench family
-//!               (hotpath, conv, mcu, serving, reliability, trace) with
-//!               timings, derived metrics, seed and git revision
+//!               (hotpath, conv, mcu, serving, reliability, trace,
+//!               eval) with timings, derived metrics, seed and git
+//!               revision
 //!               (--out-dir <dir>, --quick, --seed <n>)
+//!   bench-eval  run the eval harness and write `BENCH_eval.json`
+//!               accuracy metrics (error rates, lower is better) for
+//!               the bench-compare gate (--out-dir <dir>, --quick,
+//!               --seed <n>)
 //!   bench-compare
 //!               diff `BENCH_*.json` reports against a committed
 //!               baseline directory and flag regressions past a
@@ -57,6 +68,7 @@ use nvmcu::artifacts;
 use nvmcu::artifacts::QModel;
 use nvmcu::config::ChipConfig;
 use nvmcu::coordinator::{experiments, Chip};
+use nvmcu::datasets::labeled::{labeled_kws_like, labeled_mnist_like, LabeledSet};
 use nvmcu::eflash::mapping::StateMapping;
 use nvmcu::engine::{
     Backend, BackendKind, BatchPolicy, Engine, Fault, FaultPlan, InferenceServer, McuBackend,
@@ -64,6 +76,8 @@ use nvmcu::engine::{
 };
 use nvmcu::metrics;
 use nvmcu::metrics::{BenchReport, ServerStats};
+use nvmcu::quantize::eval::{PAPER_BAKE_HOURS, PAPER_BAKE_TEMP_C};
+use nvmcu::quantize::{run_eval, EvalOptions, EvalReport};
 use nvmcu::trace::Tracer;
 use nvmcu::util::bench::{bench, Table};
 use nvmcu::util::cli::Args;
@@ -125,6 +139,7 @@ fn main() {
         "table2" => cmd_table2(&args),
         "fig5" => cmd_fig5(&args),
         "fig6" => cmd_fig6(&args),
+        "eval" => cmd_eval(&args),
         "infer" => cmd_infer(&args),
         "serve" => cmd_serve(&args),
         "bench-serve" => cmd_bench_serve(&args),
@@ -132,6 +147,7 @@ fn main() {
         "bench-mcu" => cmd_bench_mcu(&args),
         "bench-reliability" => cmd_bench_reliability(&args),
         "bench-report" => cmd_bench_report(&args),
+        "bench-eval" => cmd_bench_eval(&args),
         "bench-compare" => cmd_bench_compare(&args),
         "pump" => cmd_pump(&args),
         "retention" => cmd_retention(&args),
@@ -139,12 +155,14 @@ fn main() {
         _ => {
             println!(
                 "nvmcu — 28nm AI microcontroller with 4-bits/cell EFLASH (reproduction)\n\
-                 usage: nvmcu <table1|table2|fig5|fig6|infer|serve|bench-serve|bench-conv\
-                 |bench-mcu|bench-reliability|bench-report|bench-compare|pump|retention|info> \
-                 [options]\n\
+                 usage: nvmcu <table1|table2|fig5|fig6|eval|infer|serve|bench-serve|bench-conv\
+                 |bench-mcu|bench-reliability|bench-report|bench-eval|bench-compare|pump\
+                 |retention|info> [options]\n\
                  options: --config <json> --set k=v[,k=v] --artifacts <dir> --seed <n>\n\
                  \x20        --trace-out <file> (infer/serve/bench-*: write a Chrome trace\n\
                  \x20        + attribution rollup)\n\
+                 eval:    --quick --workload mnist-like|kws-like --hours <h> --temp <c>\n\
+                 \x20        --calib <n> --samples <n>\n\
                  infer:   --backend nmcu|mcu|reference|hlo --batch <n> --shards <n> --index <i>\n\
                  serve:   --backend --shards --requests <n> --rate <req/s> --max-batch <n>\n\
                  \x20        --max-wait-us <us> --queue-depth <n>\n\
@@ -154,6 +172,7 @@ fn main() {
                  bench-reliability: --shards <n> --requests <n> --rounds <n> --severity <x>\n\
                  \x20        --scrub-every <n> --quick\n\
                  bench-report:  --out-dir <dir> --quick --seed <n>\n\
+                 bench-eval:    --out-dir <dir> --quick --seed <n>\n\
                  bench-compare: --baseline <dir> --current <dir> --threshold <pct> --enforce"
             );
         }
@@ -283,6 +302,95 @@ fn cmd_fig6(args: &Args) {
             "layer-0 exact decode after bake: {:.2}%",
             100.0 * exact as f64 / want.len() as f64
         );
+    }
+}
+
+/// Generate the labeled eval workloads (deterministic in `seed` — each
+/// gets a fresh RNG, so `only` never shifts another workload's data)
+/// and run the four-leg eval on each, returning every report with its
+/// wall time. `only` filters by workload name; an unknown name simply
+/// matches nothing.
+fn eval_reports(
+    cfg: &ChipConfig,
+    only: Option<&str>,
+    seed: u64,
+    opts: &EvalOptions,
+) -> Vec<(EvalReport, Duration)> {
+    type MakeSet = fn(&mut Rng, usize) -> LabeledSet;
+    let workloads: [(&str, MakeSet); 2] =
+        [("mnist-like", labeled_mnist_like), ("kws-like", labeled_kws_like)];
+    let n = opts.n_calib + opts.n_eval;
+    let mut out = Vec::new();
+    for (name, make) in workloads {
+        if only.is_some() && only != Some(name) {
+            continue;
+        }
+        let set = make(&mut Rng::new(seed), n);
+        let t0 = Instant::now();
+        let rep = run_eval(cfg, &set, opts).unwrap_or_else(|e| {
+            eprintln!("eval {name}: {e}");
+            std::process::exit(1);
+        });
+        out.push((rep, t0.elapsed()));
+    }
+    out
+}
+
+/// Accuracy-under-retention eval (the paper's Table 1 claim on the
+/// synthetic labeled workloads): PTQ-quantize each float teacher, then
+/// score the f32 / int4-reference / fresh-chip / baked-chip legs on
+/// the same eval split and enforce the acceptance gates — exit 1 on
+/// any violation.
+///
+///   --quick          smaller calib/eval splits — the CI smoke
+///   --workload <w>   run only `mnist-like` or `kws-like`
+///   --hours <h>      bake duration in hours (default 160)
+///   --temp <c>       bake temperature in Celsius (default 125)
+///   --calib <n>      calibration samples (default 64; 16 with --quick)
+///   --samples <n>    eval samples per leg (default 256; 64 with --quick)
+///   --seed <n>       RNG seed (default NVMCU_SEED or config seed)
+fn cmd_eval(args: &Args) {
+    let cfg = chip_config(args);
+    let quick = args.flag("quick");
+    let seed = args.opt_u64("seed", seed_from_env(cfg.seed));
+    let opts = EvalOptions {
+        n_calib: args.opt_usize("calib", if quick { 16 } else { 64 }).max(1),
+        n_eval: args.opt_usize("samples", if quick { 64 } else { 256 }).max(1),
+        bake_hours: args.opt_f64("hours", PAPER_BAKE_HOURS),
+        bake_temp_c: args.opt_f64("temp", PAPER_BAKE_TEMP_C),
+    };
+    println!(
+        "eval: {} calib + {} eval samples, bake {} h @ {} C \
+         (seed {seed}; replay with --seed {seed})",
+        opts.n_calib, opts.n_eval, opts.bake_hours, opts.bake_temp_c
+    );
+    let reports = eval_reports(&cfg, args.opt("workload"), seed, &opts);
+    if reports.is_empty() {
+        eprintln!("eval: unknown --workload (want mnist-like or kws-like)");
+        std::process::exit(1);
+    }
+    let mut violations = 0usize;
+    for (rep, wall) in &reports {
+        println!(
+            "\n== {}: {} classes, {} weight cells, {} samples/leg ({:.1} ms) ==",
+            rep.workload,
+            rep.classes,
+            rep.cells,
+            rep.n_eval,
+            wall.as_secs_f64() * 1e3
+        );
+        rep.table().print();
+        match rep.check_gates() {
+            Ok(()) => println!("gates: ok"),
+            Err(v) => {
+                println!("gates: VIOLATED — {v}");
+                violations += 1;
+            }
+        }
+    }
+    if violations > 0 {
+        eprintln!("\neval: {violations} gate violation(s)");
+        std::process::exit(1);
     }
 }
 
@@ -1035,6 +1143,57 @@ fn report_trace(cfg: &ChipConfig, seed: u64, tgt: Duration) -> BenchReport {
     rep
 }
 
+/// One `BENCH_eval.json`: the eval harness's accuracy metrics as
+/// error-style series (lower is better, matching the comparator's
+/// default direction; the agreement and retention gates also live here
+/// as `disagree_pct` / `bake_top1_drop_pct`). `per_iter_ns` is the
+/// wall time per scored sample.
+fn report_eval(cfg: &ChipConfig, seed: u64, quick: bool) -> BenchReport {
+    let mut rep = BenchReport::new("eval", seed);
+    let opts = EvalOptions {
+        n_calib: if quick { 16 } else { 64 },
+        n_eval: if quick { 64 } else { 256 },
+        ..Default::default()
+    };
+    for (er, wall) in eval_reports(cfg, None, seed, &opts) {
+        let pct = |v: f64| 100.0 * v;
+        rep.push_case(
+            &format!("eval {}", er.workload),
+            wall.as_nanos() as f64 / er.n_eval as f64,
+            &[
+                ("top1_err_pct_f32", pct(1.0 - er.f32_leg.top1)),
+                ("top1_err_pct_int4_ref", pct(1.0 - er.ref_leg.top1)),
+                ("top1_err_pct_int4_fresh", pct(1.0 - er.fresh_leg.top1)),
+                ("top1_err_pct_int4_baked", pct(1.0 - er.baked_leg.top1)),
+                ("disagree_pct_fresh", pct(1.0 - er.fresh_leg.agree_f32)),
+                ("bake_top1_drop_pct", pct(er.fresh_leg.top1 - er.baked_leg.top1)),
+                ("decode_err_pct_baked", pct(1.0 - er.baked_decode.exact_rate())),
+            ],
+        );
+    }
+    rep
+}
+
+/// Run the eval harness and write `BENCH_eval.json` for the
+/// bench-compare accuracy trend gate.
+///
+///   --out-dir <dir>   where the report goes (default `.`)
+///   --quick           smaller calib/eval splits — the CI smoke
+///   --seed <n>        RNG seed (default NVMCU_SEED or config seed)
+fn cmd_bench_eval(args: &Args) {
+    let cfg = chip_config(args);
+    let quick = args.flag("quick");
+    let seed = args.opt_u64("seed", seed_from_env(cfg.seed));
+    let out_dir = std::path::PathBuf::from(args.opt_or("out-dir", "."));
+    std::fs::create_dir_all(&out_dir)
+        .unwrap_or_else(|e| panic!("--out-dir {}: {e}", out_dir.display()));
+    println!("bench-eval: seed {seed} -> {} (replay with --seed {seed})", out_dir.display());
+    let rep = report_eval(&cfg, seed, quick);
+    let path = out_dir.join(rep.file_name());
+    rep.save(&path).unwrap_or_else(|e| panic!("write {}: {e}", path.display()));
+    println!("wrote {} ({} cases)", path.display(), rep.results.len());
+}
+
 /// Run the perf-report suite in-process and write one machine-readable
 /// `BENCH_<name>.json` per bench family. The workloads are the CI-smoke
 /// shapes (the standalone `cargo bench` binaries remain the full-depth
@@ -1063,6 +1222,7 @@ fn cmd_bench_report(args: &Args) {
         report_serving(&cfg, seed),
         report_reliability(&cfg, seed, tgt),
         report_trace(&cfg, seed, tgt),
+        report_eval(&cfg, seed, quick),
     ];
     println!();
     for rep in &reports {

@@ -111,6 +111,19 @@ pub fn argmax_i8(v: &[i8]) -> usize {
     best
 }
 
+/// [`argmax_i8`]'s tie-breaking rule over float logits (first maximum
+/// wins, strict `>`), so the f32 eval leg scores with the same
+/// determinism as every quantized leg.
+pub fn argmax_f32(v: &[f32]) -> usize {
+    let mut best = 0usize;
+    for (i, &x) in v.iter().enumerate() {
+        if x > v[best] {
+            best = i;
+        }
+    }
+    best
+}
+
 // ---------------------------------------------------------------------------
 // Float AutoEncoder (off-chip layers of Fig 7)
 // ---------------------------------------------------------------------------

@@ -1,0 +1,565 @@
+//! Float32 model definitions — the PTQ pipeline's input format.
+//!
+//! A [`FloatModel`] is the same typed op chain as
+//! [`crate::artifacts::QModel`] (dense / conv2d / maxpool2d), but with
+//! f32 weights and biases: what a framework exporter or the labeled
+//! dataset teachers in [`crate::datasets::labeled`] produce. Its
+//! [`FloatModel::forward`] is the accuracy oracle the quantized model is
+//! judged against, so the conv path mirrors the quantized datapath's
+//! im2col semantics exactly — channel-major patch gather (the
+//! [`crate::nmcu`] `gather_patch` order), row-major `(K, N)` weights,
+//! zero padding (the real value the quantized pad `z_in` dequantizes
+//! to) — and differs only in arithmetic domain.
+
+use crate::artifacts::{QOp, Shape};
+use crate::error::EngineError;
+use crate::nmcu::conv_out_dim;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// One float layer: op geometry plus f32 parameters. Weights are
+/// row-major `(K, N)` — `weights[i*n + j]` multiplies input feature `i`
+/// into output feature `j`, the exact layout [`crate::models`] and the
+/// EFLASH im2col placement use for the quantized codes.
+#[derive(Clone, Debug)]
+pub struct FloatLayer {
+    /// layer name (carried into the quantized artifact)
+    pub name: String,
+    /// operator and geometry (shared with the quantized artifact)
+    pub op: QOp,
+    /// ReLU after the affine output
+    pub relu: bool,
+    /// input features (`cin*kh*kw` for conv, 0 for pool)
+    pub k: usize,
+    /// output features (`cout` for conv, 0 for pool)
+    pub n: usize,
+    /// row-major `(K, N)` weights; empty for pool
+    pub weights: Vec<f32>,
+    /// per-output-feature biases; empty for pool
+    pub bias: Vec<f32>,
+}
+
+impl FloatLayer {
+    /// Output shape for `input`, or `None` when the op does not fit.
+    pub fn out_shape(&self, input: Shape) -> Option<Shape> {
+        match self.op {
+            QOp::Dense => Some(Shape::vec(self.n)),
+            QOp::Conv2D { kh, kw, cout, stride, pad, .. } => Some(Shape {
+                c: cout,
+                h: conv_out_dim(input.h, kh, stride, pad)?,
+                w: conv_out_dim(input.w, kw, stride, pad)?,
+            }),
+            QOp::MaxPool2d { kh, kw, stride } => Some(Shape {
+                c: input.c,
+                h: conv_out_dim(input.h, kh, stride, 0)?,
+                w: conv_out_dim(input.w, kw, stride, 0)?,
+            }),
+        }
+    }
+
+    /// Run this layer on a channel-major activation of shape
+    /// `in_shape`. Panics on a shape mismatch — call sites run only
+    /// models that passed [`FloatModel::validate`].
+    pub fn forward(&self, x: &[f32], in_shape: Shape) -> Vec<f32> {
+        assert_eq!(x.len(), in_shape.len(), "layer {}: input length", self.name);
+        let os = self.out_shape(in_shape).expect("validated geometry");
+        match self.op {
+            QOp::Dense => self.linear(x),
+            QOp::Conv2D { kh, kw, stride, pad, .. } => {
+                let mut out = vec![0f32; os.len()];
+                let mut patch = vec![0f32; self.k];
+                let plane = os.h * os.w;
+                for r in 0..os.h {
+                    for q in 0..os.w {
+                        gather_patch_f32(x, in_shape, kh, kw, stride, pad, r, q, &mut patch);
+                        let y = self.linear(&patch);
+                        for (c, v) in y.iter().enumerate() {
+                            out[c * plane + r * os.w + q] = *v;
+                        }
+                    }
+                }
+                out
+            }
+            QOp::MaxPool2d { kh, kw, stride } => {
+                let mut out = vec![0f32; os.len()];
+                let plane_in = in_shape.h * in_shape.w;
+                let plane_out = os.h * os.w;
+                for c in 0..os.c {
+                    for r in 0..os.h {
+                        for q in 0..os.w {
+                            let mut m = f32::NEG_INFINITY;
+                            for dr in 0..kh {
+                                for dc in 0..kw {
+                                    let v = x[c * plane_in
+                                        + (r * stride + dr) * in_shape.w
+                                        + (q * stride + dc)];
+                                    m = m.max(v);
+                                }
+                            }
+                            out[c * plane_out + r * os.w + q] = m;
+                        }
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// `relu(bias + x @ W)` for one patch/vector (ReLU only when the
+    /// layer asks for it). Element-wise, so applying it per-patch
+    /// before the conv scatter is equivalent to applying it after.
+    fn linear(&self, x: &[f32]) -> Vec<f32> {
+        let n = self.n;
+        let mut acc = self.bias.clone();
+        for (i, &xi) in x.iter().enumerate() {
+            let row = &self.weights[i * n..(i + 1) * n];
+            for (a, &w) in acc.iter_mut().zip(row) {
+                *a += xi * w;
+            }
+        }
+        if self.relu {
+            for v in &mut acc {
+                *v = v.max(0.0);
+            }
+        }
+        acc
+    }
+}
+
+/// Gather one im2col patch in the quantized datapath's order —
+/// channel-major, then kernel row, then kernel column — padding
+/// out-of-bounds taps with 0.0 (what the quantized `z_in` pad
+/// dequantizes to).
+#[allow(clippy::too_many_arguments)]
+fn gather_patch_f32(
+    x: &[f32],
+    s: Shape,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    oh: usize,
+    ow: usize,
+    out: &mut [f32],
+) {
+    let plane = s.h * s.w;
+    let mut idx = 0;
+    for c in 0..s.c {
+        for dr in 0..kh {
+            for dc in 0..kw {
+                let ih = (oh * stride + dr) as isize - pad as isize;
+                let iw = (ow * stride + dc) as isize - pad as isize;
+                out[idx] = if ih >= 0 && iw >= 0 && (ih as usize) < s.h && (iw as usize) < s.w {
+                    x[c * plane + ih as usize * s.w + iw as usize]
+                } else {
+                    0.0
+                };
+                idx += 1;
+            }
+        }
+    }
+}
+
+/// A float32 model: named op chain over a channel-major input shape.
+/// Built with the chainable [`FloatModel::dense`] /
+/// [`FloatModel::conv2d`] / [`FloatModel::maxpool`] methods (each
+/// infers its contraction length from the running output shape), or
+/// loaded from JSON with [`load_float_model`].
+#[derive(Clone, Debug)]
+pub struct FloatModel {
+    /// model name (carried into the quantized artifact)
+    pub name: String,
+    /// input activation shape (dense MLPs: `Shape::vec(k)`)
+    pub input_shape: Shape,
+    /// the op chain
+    pub layers: Vec<FloatLayer>,
+}
+
+impl FloatModel {
+    /// An empty model over `input_shape`.
+    pub fn new(name: &str, input_shape: Shape) -> FloatModel {
+        FloatModel { name: name.into(), input_shape, layers: Vec::new() }
+    }
+
+    /// The activation shape after the last layer currently pushed.
+    pub fn tail_shape(&self) -> Result<Shape, EngineError> {
+        let mut s = self.input_shape;
+        for l in &self.layers {
+            s = l.out_shape(s).ok_or_else(|| EngineError::BadDescriptor {
+                reason: format!("layer {}: op does not fit shape {s}", l.name),
+            })?;
+        }
+        Ok(s)
+    }
+
+    /// Append a dense layer `tail.len() -> n`. `weights` is row-major
+    /// `(K, N)` with `K = tail.len()`.
+    pub fn dense(
+        mut self,
+        name: &str,
+        n: usize,
+        relu: bool,
+        weights: Vec<f32>,
+        bias: Vec<f32>,
+    ) -> Result<FloatModel, EngineError> {
+        let k = self.tail_shape()?.len();
+        check_params(name, k, n, &weights, &bias)?;
+        self.layers.push(FloatLayer {
+            name: name.into(),
+            op: QOp::Dense,
+            relu,
+            k,
+            n,
+            weights,
+            bias,
+        });
+        Ok(self)
+    }
+
+    /// Append a conv layer over the running tail shape. `weights` is
+    /// the im2col matrix, row-major `(cin*kh*kw, cout)` with rows in
+    /// channel-major/kh/kw patch order.
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv2d(
+        mut self,
+        name: &str,
+        cout: usize,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        pad: usize,
+        relu: bool,
+        weights: Vec<f32>,
+        bias: Vec<f32>,
+    ) -> Result<FloatModel, EngineError> {
+        let tail = self.tail_shape()?;
+        let k = tail.c * kh * kw;
+        check_params(name, k, cout, &weights, &bias)?;
+        let op = QOp::Conv2D { kh, kw, cin: tail.c, cout, stride, pad };
+        let layer =
+            FloatLayer { name: name.into(), op, relu, k, n: cout, weights, bias };
+        if layer.out_shape(tail).is_none() {
+            return Err(EngineError::BadDescriptor {
+                reason: format!("layer {name}: {kh}x{kw} stride {stride} does not fit {tail}"),
+            });
+        }
+        self.layers.push(layer);
+        Ok(self)
+    }
+
+    /// Append a max-pool layer over the running tail shape.
+    pub fn maxpool(
+        mut self,
+        name: &str,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+    ) -> Result<FloatModel, EngineError> {
+        let tail = self.tail_shape()?;
+        let op = QOp::MaxPool2d { kh, kw, stride };
+        let layer = FloatLayer {
+            name: name.into(),
+            op,
+            relu: false,
+            k: 0,
+            n: 0,
+            weights: Vec::new(),
+            bias: Vec::new(),
+        };
+        if layer.out_shape(tail).is_none() {
+            return Err(EngineError::BadDescriptor {
+                reason: format!("layer {name}: {kh}x{kw} pool stride {stride} does not fit {tail}"),
+            });
+        }
+        self.layers.push(layer);
+        Ok(self)
+    }
+
+    /// Flat input length.
+    pub fn input_len(&self) -> usize {
+        self.input_shape.len()
+    }
+
+    /// Flat output length of the full chain.
+    pub fn output_len(&self) -> Result<usize, EngineError> {
+        Ok(self.tail_shape()?.len())
+    }
+
+    /// Per-layer output shapes (the same chain walk
+    /// `QModel::shapes` does).
+    pub fn shapes(&self) -> Result<Vec<Shape>, EngineError> {
+        let mut out = Vec::with_capacity(self.layers.len());
+        let mut s = self.input_shape;
+        for l in &self.layers {
+            s = l.out_shape(s).ok_or_else(|| EngineError::BadDescriptor {
+                reason: format!("layer {}: op does not fit shape {s}", l.name),
+            })?;
+            out.push(s);
+        }
+        Ok(out)
+    }
+
+    /// Structural validation: every op fits its input shape and every
+    /// weighted layer's parameter lengths match its geometry.
+    pub fn validate(&self) -> Result<(), EngineError> {
+        if self.layers.is_empty() {
+            return Err(EngineError::BadDescriptor { reason: "model has no layers".into() });
+        }
+        let mut s = self.input_shape;
+        for l in &self.layers {
+            if !matches!(l.op, QOp::MaxPool2d { .. }) {
+                check_params(&l.name, l.k, l.n, &l.weights, &l.bias)?;
+                if let QOp::Conv2D { kh, kw, cin, cout, .. } = l.op {
+                    if cin != s.c || l.k != cin * kh * kw || l.n != cout {
+                        return Err(EngineError::BadDescriptor {
+                            reason: format!("layer {}: conv geometry inconsistent", l.name),
+                        });
+                    }
+                }
+                if matches!(l.op, QOp::Dense) && l.k != s.len() {
+                    return Err(EngineError::BadDescriptor {
+                        reason: format!(
+                            "layer {}: dense k={} does not match input {s}",
+                            l.name, l.k
+                        ),
+                    });
+                }
+            }
+            s = l.out_shape(s).ok_or_else(|| EngineError::BadDescriptor {
+                reason: format!("layer {}: op does not fit shape {s}", l.name),
+            })?;
+        }
+        Ok(())
+    }
+
+    /// Run the first `n_layers` layers (the full model when `n_layers
+    /// >= len`). Used by the dataset teachers to extract intermediate
+    /// features and by calibration to observe every tensor.
+    pub fn forward_upto(&self, x: &[f32], n_layers: usize) -> Vec<f32> {
+        let mut h = x.to_vec();
+        let mut s = self.input_shape;
+        for l in self.layers.iter().take(n_layers) {
+            h = l.forward(&h, s);
+            s = l.out_shape(s).expect("validated geometry");
+        }
+        h
+    }
+
+    /// Full-precision inference: the accuracy oracle for the eval legs.
+    pub fn forward(&self, x: &[f32]) -> Vec<f32> {
+        self.forward_upto(x, self.layers.len())
+    }
+}
+
+fn check_params(
+    name: &str,
+    k: usize,
+    n: usize,
+    weights: &[f32],
+    bias: &[f32],
+) -> Result<(), EngineError> {
+    if n == 0 || weights.len() != k * n || bias.len() != n {
+        return Err(EngineError::BadDescriptor {
+            reason: format!(
+                "layer {name}: expected {k}x{n} weights + {n} biases, got {} + {}",
+                weights.len(),
+                bias.len()
+            ),
+        });
+    }
+    if weights.iter().chain(bias).any(|v| !v.is_finite()) {
+        return Err(EngineError::BadDescriptor {
+            reason: format!("layer {name}: non-finite parameter"),
+        });
+    }
+    Ok(())
+}
+
+/// Load a float model from a single JSON file (weights inline — these
+/// are small edge models, not LLM checkpoints):
+///
+/// ```json
+/// {"model": "m", "input_shape": [1, 12, 12], "layers": [
+///   {"op": "conv2d", "name": "c1", "cout": 4, "kh": 3, "kw": 3,
+///    "stride": 1, "pad": 1, "relu": true,
+///    "weights": [...], "bias": [...]},
+///   {"op": "maxpool2d", "name": "p1", "kh": 2, "kw": 2, "stride": 2},
+///   {"op": "dense", "name": "fc", "n": 10, "relu": false,
+///    "weights": [...], "bias": [...]}
+/// ]}
+/// ```
+///
+/// `input_shape` may be omitted for dense MLPs (inferred as the flat
+/// first-layer `K`). Geometry errors surface as load errors here or as
+/// typed [`EngineError::BadDescriptor`]s from the builder.
+pub fn load_float_model(path: &Path) -> Result<FloatModel> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+    let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+    let layers = j.arr("layers");
+    let input_shape = match j.get("input_shape") {
+        Some(v) => {
+            let dims: Option<Vec<usize>> = v.as_arr().and_then(|a| {
+                a.iter()
+                    .map(|d| d.as_i64().filter(|&x| x >= 0).map(|x| x as usize))
+                    .collect()
+            });
+            match dims.as_deref() {
+                Some(&[c, h, w]) => Shape { c, h, w },
+                _ => bail!("input_shape must be a [c, h, w] array of non-negative integers"),
+            }
+        }
+        None => {
+            let k = layers
+                .first()
+                .and_then(|l| l.get("weights"))
+                .and_then(|w| w.as_arr())
+                .map(|w| w.len())
+                .unwrap_or(0);
+            let n = layers.first().and_then(|l| l.get("n")).and_then(|v| v.as_i64()).unwrap_or(0);
+            if n <= 0 || k == 0 || k % n as usize != 0 {
+                bail!("input_shape absent and first layer is not a well-formed dense layer");
+            }
+            Shape::vec(k / n as usize)
+        }
+    };
+    let mut m = FloatModel::new(j.str("model"), input_shape);
+    for l in layers {
+        let name = l.str("name");
+        let geom = |key: &str| -> Result<usize> {
+            let v = l.get(key).and_then(|v| v.as_i64()).unwrap_or(0);
+            if v < 0 {
+                bail!("layer {name}: `{key}` must be non-negative, got {v}");
+            }
+            Ok(v as usize)
+        };
+        let floats = |key: &str| -> Result<Vec<f32>> {
+            let Some(arr) = l.get(key).and_then(|v| v.as_arr()) else {
+                bail!("layer {name}: missing `{key}` array");
+            };
+            arr.iter()
+                .map(|v| {
+                    v.as_f64().map(|f| f as f32).ok_or_else(|| {
+                        anyhow::anyhow!("layer {name}: non-numeric value in `{key}`")
+                    })
+                })
+                .collect()
+        };
+        let stride = match l.get("stride") {
+            None => 1,
+            Some(_) => {
+                let s = geom("stride")?;
+                if s == 0 {
+                    bail!("layer {name}: `stride` must be >= 1");
+                }
+                s
+            }
+        };
+        let relu = l.get("relu").and_then(|v| v.as_bool()).unwrap_or(false);
+        m = match l.str("op") {
+            "dense" => m.dense(name, geom("n")?, relu, floats("weights")?, floats("bias")?)?,
+            "conv2d" => m.conv2d(
+                name,
+                geom("cout")?,
+                geom("kh")?,
+                geom("kw")?,
+                stride,
+                geom("pad")?,
+                relu,
+                floats("weights")?,
+                floats("bias")?,
+            )?,
+            "maxpool2d" => m.maxpool(name, geom("kh")?, geom("kw")?, stride)?,
+            other => bail!("layer {name}: unknown op `{other}`"),
+        };
+    }
+    m.validate()?;
+    Ok(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cnn() -> FloatModel {
+        FloatModel::new("t", Shape { c: 1, h: 4, w: 4 })
+            .conv2d("c1", 2, 3, 3, 1, 1, true, vec![0.1; 18], vec![0.0; 2])
+            .unwrap()
+            .maxpool("p1", 2, 2, 2)
+            .unwrap()
+            .dense("fc", 3, false, vec![0.05; 8 * 3], vec![0.0; 3])
+            .unwrap()
+    }
+
+    #[test]
+    fn builder_tracks_shapes() {
+        let m = tiny_cnn();
+        assert_eq!(m.shapes().unwrap(), vec![
+            Shape { c: 2, h: 4, w: 4 },
+            Shape { c: 2, h: 2, w: 2 },
+            Shape::vec(3),
+        ]);
+        m.validate().unwrap();
+        assert_eq!(m.forward(&vec![1.0; 16]).len(), 3);
+    }
+
+    #[test]
+    fn builder_rejects_bad_geometry() {
+        let r = FloatModel::new("t", Shape::vec(4)).dense("fc", 2, false, vec![0.0; 7], vec![
+            0.0; 2
+        ]);
+        assert!(r.is_err(), "7 weights for a 4x2 dense must be rejected");
+        let r = FloatModel::new("t", Shape { c: 1, h: 2, w: 2 }).conv2d(
+            "c",
+            1,
+            3,
+            3,
+            1,
+            0,
+            false,
+            vec![0.0; 9],
+            vec![0.0],
+        );
+        assert!(r.is_err(), "3x3 kernel cannot fit a 2x2 map unpadded");
+    }
+
+    #[test]
+    fn dense_matches_hand_computation() {
+        // y = x @ W + b, W row-major (K=2, N=2)
+        let m = FloatModel::new("t", Shape::vec(2))
+            .dense("fc", 2, false, vec![1.0, 2.0, 3.0, 4.0], vec![0.5, -0.5])
+            .unwrap();
+        let y = m.forward(&[1.0, 10.0]);
+        assert_eq!(y, vec![1.0 + 30.0 + 0.5, 2.0 + 40.0 - 0.5]);
+    }
+
+    #[test]
+    fn relu_clamps_at_zero() {
+        let m = FloatModel::new("t", Shape::vec(1))
+            .dense("fc", 1, true, vec![1.0], vec![-5.0])
+            .unwrap();
+        assert_eq!(m.forward(&[1.0]), vec![0.0]);
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let dir = std::env::temp_dir().join(format!("nvmcu_float_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.json");
+        std::fs::write(
+            &path,
+            r#"{"model":"m","input_shape":[1,4,4],"layers":[
+              {"op":"conv2d","name":"c1","cout":1,"kh":2,"kw":2,"stride":2,"pad":0,
+               "relu":true,"weights":[1,0,0,1],"bias":[0.25]},
+              {"op":"dense","name":"fc","n":2,"relu":false,
+               "weights":[1,0,0,1,1,1,0,0],"bias":[0,0]}]}"#,
+        )
+        .unwrap();
+        let m = load_float_model(&path).unwrap();
+        assert_eq!(m.layers.len(), 2);
+        assert_eq!(m.input_shape, Shape { c: 1, h: 4, w: 4 });
+        let y = m.forward(&vec![1.0; 16]);
+        assert_eq!(y.len(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

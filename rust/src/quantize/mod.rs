@@ -1,0 +1,22 @@
+//! Post-training quantization (PTQ) pipeline: float32 models in,
+//! loadable int4 [`crate::artifacts::QModel`]s out, plus the
+//! accuracy-under-retention eval harness (`QUANTIZE.md` at the
+//! repository root walks through the stages and the eval table).
+//!
+//! - [`float`]: [`FloatModel`] — the builder/loader for f32
+//!   dense/conv/pool models and the bit-faithful f32 forward pass (the
+//!   accuracy oracle).
+//! - [`ptq`]: [`calibrate`] activation ranges over a sample batch,
+//!   [`quantize_model`] into int4 codes + folded biases + normalized
+//!   [`crate::nmcu::Requant`] pairs.
+//! - [`eval`]: [`run_eval`] — the four-leg fresh-vs-baked comparison
+//!   (f32 / int4 reference / programmed chip / baked chip) behind the
+//!   `eval` and `bench-eval` CLI modes.
+
+pub mod eval;
+pub mod float;
+pub mod ptq;
+
+pub use eval::{run_eval, EvalOptions, EvalReport, LegScore};
+pub use float::{load_float_model, FloatLayer, FloatModel};
+pub use ptq::{calibrate, quantize, quantize_input, quantize_model, Calibration, TensorRange};

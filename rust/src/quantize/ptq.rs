@@ -1,0 +1,362 @@
+//! Post-training quantization: float model + calibration batch ->
+//! loadable int4 [`QModel`].
+//!
+//! The scheme is the crate's serving contract ([`crate::nmcu::quant`]):
+//! int8 per-tensor affine activations, int4 symmetric per-tensor
+//! weights, int32 accumulation, fixed-point requantization. Three
+//! stages:
+//!
+//! 1. **Calibrate** — run the calibration batch through the f32 model
+//!    and record each tensor's observed `[min, max]` (forced to include
+//!    0 so the affine grid always has an exact zero). `scale = span /
+//!    255`, `zero_point = round(-128 - min/scale)`. Max-pool outputs
+//!    reuse their input's scale/zero-point: quantized pooling is a
+//!    passthrough `max` over codes, so a shared grid keeps it exact.
+//! 2. **Quantize weights** — per layer, `s_w = max|w| / 7`, codes
+//!    `clamp(round(w / s_w), -8, 7)` (int4 symmetric; -8 only from
+//!    rounding at the clamp edge). Biases fold the input zero-point
+//!    correction in: `b_q[j] = round(b[j] / (s_in*s_w)) - z_in *
+//!    sum_i codes[i][j]`, so the NMCU can accumulate raw int8 codes
+//!    without subtracting `z_in` per MAC.
+//! 3. **Derive requant** — the real rescale `s_in*s_w/s_out` is
+//!    normalized to `m0 in [2^30, 2^31)` and a right `shift`, the
+//!    fixed-point form `Requant::validate` accepts. A scale so extreme
+//!    the shift leaves `[1, 62]` is a typed
+//!    [`EngineError::BadDescriptor`] — the model cannot serve on this
+//!    datapath.
+
+use crate::artifacts::{QLayer, QModel, QOp};
+use crate::error::EngineError;
+use crate::nmcu::quant::quantize_f32;
+use crate::nmcu::Requant;
+use crate::quantize::float::FloatModel;
+
+/// Observed value range of one activation tensor during calibration.
+#[derive(Clone, Copy, Debug)]
+pub struct TensorRange {
+    /// smallest observed value (<= 0 after the zero-inclusion clamp)
+    pub lo: f64,
+    /// largest observed value (>= 0 after the zero-inclusion clamp)
+    pub hi: f64,
+}
+
+impl Default for TensorRange {
+    fn default() -> Self {
+        TensorRange { lo: 0.0, hi: 0.0 }
+    }
+}
+
+impl TensorRange {
+    /// Widen the range to include every value in `xs`.
+    pub fn observe(&mut self, xs: &[f32]) {
+        for &v in xs {
+            let v = v as f64;
+            if v < self.lo {
+                self.lo = v;
+            }
+            if v > self.hi {
+                self.hi = v;
+            }
+        }
+    }
+
+    /// The int8 affine grid for this range: `(scale, zero_point)`. A
+    /// degenerate all-zero tensor gets a tiny positive span so the
+    /// scale stays finite.
+    pub fn scale_zp(&self) -> (f64, i8) {
+        let lo = self.lo.min(0.0);
+        let hi = self.hi.max(0.0);
+        let span = (hi - lo).max(1e-6);
+        let s = span / 255.0;
+        let z = (-128.0 - lo / s).round().clamp(-128.0, 127.0) as i8;
+        (s, z)
+    }
+}
+
+/// Per-tensor activation statistics from a calibration pass:
+/// `ranges[0]` is the model input, `ranges[i+1]` the output of layer
+/// `i`.
+#[derive(Clone, Debug)]
+pub struct Calibration {
+    /// observed ranges, one per activation tensor (layers + 1)
+    pub ranges: Vec<TensorRange>,
+    /// calibration samples observed
+    pub n_samples: usize,
+}
+
+/// Run `batch` through the f32 model and observe every activation
+/// tensor's range.
+pub fn calibrate(model: &FloatModel, batch: &[Vec<f32>]) -> Result<Calibration, EngineError> {
+    model.validate()?;
+    if batch.is_empty() {
+        return Err(EngineError::BadDescriptor {
+            reason: "calibration batch is empty".into(),
+        });
+    }
+    let mut ranges = vec![TensorRange::default(); model.layers.len() + 1];
+    let shapes = model.shapes()?;
+    for x in batch {
+        if x.len() != model.input_len() {
+            return Err(EngineError::InputSize {
+                expected: model.input_len(),
+                got: x.len(),
+            });
+        }
+        ranges[0].observe(x);
+        let mut h = x.clone();
+        let mut s = model.input_shape;
+        for (i, l) in model.layers.iter().enumerate() {
+            h = l.forward(&h, s);
+            s = shapes[i];
+            ranges[i + 1].observe(&h);
+        }
+    }
+    // pool outputs share their input's grid (passthrough max over
+    // codes); copying the range makes scale_zp() agree exactly
+    for (i, l) in model.layers.iter().enumerate() {
+        if matches!(l.op, QOp::MaxPool2d { .. }) {
+            ranges[i + 1] = ranges[i];
+        }
+    }
+    Ok(Calibration { ranges, n_samples: batch.len() })
+}
+
+/// Normalize the real rescale factor `s_eff = s_in*s_w/s_out` into the
+/// datapath's fixed-point form: `m0 in [2^30, 2^31)`, `shift in [1,
+/// 62]`.
+fn derive_requant(s_eff: f64, z_out: i8, layer: &str) -> Result<Requant, EngineError> {
+    if !s_eff.is_finite() || s_eff <= 0.0 {
+        return Err(EngineError::BadDescriptor {
+            reason: format!("layer {layer}: effective scale {s_eff} is not positive"),
+        });
+    }
+    let lo = (1u64 << 30) as f64;
+    let hi = (1u64 << 31) as f64;
+    let mut m = s_eff;
+    let mut shift = 0i64;
+    while m < lo {
+        m *= 2.0;
+        shift += 1;
+    }
+    while m >= hi {
+        m /= 2.0;
+        shift -= 1;
+    }
+    let mut m0 = m.round() as i64;
+    if m0 >= 1 << 31 {
+        // rounding landed exactly on 2^31: renormalize one step down
+        m0 >>= 1;
+        shift -= 1;
+    }
+    if !(1..=62).contains(&shift) {
+        return Err(EngineError::BadDescriptor {
+            reason: format!(
+                "layer {layer}: effective scale {s_eff:e} needs shift {shift}, outside [1, 62]"
+            ),
+        });
+    }
+    Ok(Requant { m0: m0 as i32, shift: shift as u32, z_out })
+}
+
+/// Quantize a calibrated float model into a loadable [`QModel`]. The
+/// result passes `QModel::validate` and every weighted layer's
+/// `Requant::validate` before it is returned.
+pub fn quantize_model(
+    model: &FloatModel,
+    calib: &Calibration,
+) -> Result<QModel, EngineError> {
+    model.validate()?;
+    if calib.ranges.len() != model.layers.len() + 1 {
+        return Err(EngineError::BadDescriptor {
+            reason: format!(
+                "calibration has {} tensor ranges for a {}-layer model",
+                calib.ranges.len(),
+                model.layers.len()
+            ),
+        });
+    }
+    let mut layers = Vec::with_capacity(model.layers.len());
+    let (mut s_in, mut z_in) = calib.ranges[0].scale_zp();
+    for (i, l) in model.layers.iter().enumerate() {
+        let (s_out, z_out) = calib.ranges[i + 1].scale_zp();
+        match l.op {
+            QOp::MaxPool2d { kh, kw, stride } => {
+                let mut ql = QLayer::maxpool(&l.name, kh, kw, stride);
+                // record the (shared) grid for observability; the pool
+                // datapath itself never reads these fields
+                ql.s_in = s_in;
+                ql.z_in = z_in;
+                ql.s_out = s_out;
+                layers.push(ql);
+            }
+            _ => {
+                let max_abs =
+                    l.weights.iter().fold(0f32, |m, &w| m.max(w.abs())) as f64;
+                let s_w = if max_abs > 0.0 { max_abs / 7.0 } else { 1.0 };
+                let codes: Vec<i8> = l
+                    .weights
+                    .iter()
+                    .map(|&w| ((w as f64 / s_w).round() as i64).clamp(-8, 7) as i8)
+                    .collect();
+                let n = l.n;
+                let mut bias = Vec::with_capacity(n);
+                for j in 0..n {
+                    let col_sum: i64 =
+                        (0..l.k).map(|i| codes[i * n + j] as i64).sum();
+                    let b = (l.bias[j] as f64 / (s_in * s_w)).round() as i64
+                        - z_in as i64 * col_sum;
+                    bias.push(b.clamp(i32::MIN as i64, i32::MAX as i64) as i32);
+                }
+                let requant = derive_requant(s_in * s_w / s_out, z_out, &l.name)?;
+                requant.validate()?;
+                layers.push(QLayer {
+                    name: l.name.clone(),
+                    k: l.k,
+                    n,
+                    relu: l.relu,
+                    codes,
+                    bias,
+                    requant,
+                    z_in,
+                    s_in,
+                    s_w,
+                    s_out,
+                    op: l.op,
+                });
+            }
+        }
+        s_in = s_out;
+        z_in = if matches!(l.op, QOp::MaxPool2d { .. }) { z_in } else { z_out };
+    }
+    let qm = QModel { name: model.name.clone(), input_shape: model.input_shape, layers };
+    qm.validate()?;
+    Ok(qm)
+}
+
+/// Convenience one-shot: calibrate on `batch`, then quantize.
+pub fn quantize(model: &FloatModel, batch: &[Vec<f32>]) -> Result<QModel, EngineError> {
+    let calib = calibrate(model, batch)?;
+    quantize_model(model, &calib)
+}
+
+/// Quantize one float input vector with the model's first-layer input
+/// grid — the boundary conversion every eval leg uses before handing
+/// the sample to a quantized backend.
+pub fn quantize_input(qm: &QModel, x: &[f32]) -> Vec<i8> {
+    let (s, z) = qm
+        .layers
+        .first()
+        .map(|l| (l.s_in as f32, l.z_in))
+        .unwrap_or((1.0, 0));
+    x.iter().map(|&v| quantize_f32(v, s, z)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::artifacts::Shape;
+    use crate::models::qmodel_forward;
+    use crate::nmcu::quant::dequantize_i8;
+    use crate::util::rng::Rng;
+
+    fn rand_mlp(r: &mut Rng) -> FloatModel {
+        let (k, h, c) = (12, 8, 4);
+        let w1: Vec<f32> = (0..k * h).map(|_| r.normal(0.0, 0.4) as f32).collect();
+        let w2: Vec<f32> = (0..h * c).map(|_| r.normal(0.0, 0.4) as f32).collect();
+        FloatModel::new("m", Shape::vec(k))
+            .dense("fc1", h, true, w1, vec![0.05; h])
+            .unwrap()
+            .dense("fc2", c, false, w2, vec![0.0; c])
+            .unwrap()
+    }
+
+    fn rand_batch(r: &mut Rng, n: usize, k: usize) -> Vec<Vec<f32>> {
+        (0..n).map(|_| (0..k).map(|_| r.uniform(-1.0, 1.0) as f32).collect()).collect()
+    }
+
+    #[test]
+    fn scale_zp_pins_zero_and_extremes() {
+        let mut t = TensorRange::default();
+        t.observe(&[-1.0, 3.0]);
+        let (s, z) = t.scale_zp();
+        // real zero must land exactly on the grid
+        assert!((0.0f32 / s as f32).round() == 0.0);
+        // extremes map inside int8
+        let q_lo = (-1.0 / s + z as f64).round();
+        let q_hi = (3.0 / s + z as f64).round();
+        assert!((-128.0..=127.0).contains(&q_lo), "lo -> {q_lo}");
+        assert!((-128.0..=127.0).contains(&q_hi), "hi -> {q_hi}");
+    }
+
+    #[test]
+    fn relu_only_range_uses_unsigned_half() {
+        let mut t = TensorRange::default();
+        t.observe(&[0.0, 6.0]);
+        let (s, z) = t.scale_zp();
+        assert_eq!(z, -128, "all-positive tensor pins z at -128");
+        assert!((s - 6.0 / 255.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn derive_requant_is_normalized() {
+        for &s in &[1.0, 0.5, 0.01, 3.7e-4, 123.0] {
+            let rq = derive_requant(s, 3, "t").unwrap();
+            rq.validate().unwrap();
+            // reconstruct: m0 / 2^shift ~ s
+            let back = rq.m0 as f64 / (1u64 << rq.shift) as f64;
+            assert!((back - s).abs() / s < 1e-6, "s={s} back={back}");
+        }
+        assert!(derive_requant(1e-30, 0, "t").is_err(), "absurdly small scale");
+        assert!(derive_requant(0.0, 0, "t").is_err());
+        assert!(derive_requant(f64::NAN, 0, "t").is_err());
+    }
+
+    #[test]
+    fn quantized_mlp_tracks_float_outputs() {
+        let mut r = Rng::new(42);
+        let m = rand_mlp(&mut r);
+        let calib = rand_batch(&mut r, 16, m.input_len());
+        let qm = quantize(&m, &calib).unwrap();
+        qm.validate().unwrap();
+        for l in &qm.layers {
+            l.requant.validate().unwrap();
+            assert!(l.codes.iter().all(|&c| (-8..=7).contains(&c)));
+        }
+        // dequantized int4 outputs track the f32 reference within a few
+        // output-grid steps on fresh in-distribution inputs
+        let s_out = qm.layers.last().unwrap().s_out as f32;
+        let z_out = qm.layers.last().unwrap().requant.z_out;
+        for x in rand_batch(&mut r, 8, m.input_len()) {
+            let want = m.forward(&x);
+            let got_q = qmodel_forward(&qm, &quantize_input(&qm, &x));
+            for (w, g) in want.iter().zip(&got_q) {
+                let gf = dequantize_i8(*g, s_out, z_out);
+                assert!(
+                    (w - gf).abs() < 6.0 * s_out + 0.05,
+                    "f32 {w} vs int4 {gf} (grid {s_out})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pool_layers_share_the_input_grid() {
+        let mut r = Rng::new(7);
+        let w: Vec<f32> = (0..9 * 2).map(|_| r.normal(0.0, 0.5) as f32).collect();
+        let wf: Vec<f32> = (0..8 * 3).map(|_| r.normal(0.0, 0.5) as f32).collect();
+        let m = FloatModel::new("p", Shape { c: 1, h: 4, w: 4 })
+            .conv2d("c1", 2, 3, 3, 1, 1, true, w, vec![0.0; 2])
+            .unwrap()
+            .maxpool("p1", 2, 2, 2)
+            .unwrap()
+            .dense("fc", 3, false, wf, vec![0.0; 3])
+            .unwrap();
+        let batch: Vec<Vec<f32>> =
+            (0..8).map(|_| (0..16).map(|_| r.uniform(0.0, 1.0) as f32).collect()).collect();
+        let qm = quantize(&m, &batch).unwrap();
+        // the dense head's input grid == the conv output grid (the pool
+        // in between is a passthrough)
+        assert_eq!(qm.layers[2].s_in, qm.layers[0].s_out);
+        assert_eq!(qm.layers[2].z_in, qm.layers[0].requant.z_out);
+    }
+}

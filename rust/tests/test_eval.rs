@@ -1,0 +1,98 @@
+//! Retention regression (ISSUE 9, satellite 4): the paper's 160 h @
+//! 125 °C unpowered bake must not cost more than the pinned top-1
+//! delta on the labeled eval workloads, and the fresh int4 chip must
+//! stay within the pinned fraction of the f32 teacher.
+//!
+//! The seeded tests run per-PR. The 1000 h soak is `#[ignore]`d and
+//! picked up by the nightly `cargo test -- --ignored` leg.
+
+use nvmcu::config::ChipConfig;
+use nvmcu::datasets::labeled::{labeled_kws_like, labeled_mnist_like, LabeledSet};
+use nvmcu::quantize::eval::{
+    MAX_BAKE_TOP1_DROP, MIN_INT4_FRESH_FRACTION, PAPER_BAKE_HOURS, PAPER_BAKE_TEMP_C,
+};
+use nvmcu::quantize::{run_eval, EvalOptions, EvalReport};
+use nvmcu::util::rng::Rng;
+
+type MakeSet = fn(&mut Rng, usize) -> LabeledSet;
+
+fn small_cfg() -> ChipConfig {
+    let mut c = ChipConfig::new();
+    c.eflash.capacity_bits = 256 * 1024;
+    c
+}
+
+fn paper_bake_eval(seed: u64, make: MakeSet, n_calib: usize, n_eval: usize) -> EvalReport {
+    let mut r = Rng::new(seed);
+    let set = make(&mut r, n_calib + n_eval);
+    let opts = EvalOptions {
+        n_calib,
+        n_eval,
+        bake_hours: PAPER_BAKE_HOURS,
+        bake_temp_c: PAPER_BAKE_TEMP_C,
+    };
+    run_eval(&small_cfg(), &set, &opts).expect("eval run")
+}
+
+fn assert_retention_gates(rep: &EvalReport) {
+    rep.check_gates().unwrap_or_else(|v| panic!("{v}"));
+    // Spell the pins out so a regression names the number that moved.
+    let drop = rep.fresh_leg.top1 - rep.baked_leg.top1;
+    assert!(
+        drop <= MAX_BAKE_TOP1_DROP,
+        "{}: bake cost {drop:.3} top-1, gate is {MAX_BAKE_TOP1_DROP}",
+        rep.workload
+    );
+    assert!(
+        rep.fresh_leg.top1 >= MIN_INT4_FRESH_FRACTION * rep.f32_leg.top1,
+        "{}: fresh int4 {:.3} under {MIN_INT4_FRESH_FRACTION} x f32 {:.3}",
+        rep.workload,
+        rep.fresh_leg.top1,
+        rep.f32_leg.top1
+    );
+    // A bake can only leak charge, never restore it.
+    assert!(
+        rep.baked_decode.exact_rate() <= rep.fresh_decode.exact_rate() + 1e-9,
+        "{}: decode exact rate rose across the bake",
+        rep.workload
+    );
+    assert!(rep.fresh_decode.total > 0 && rep.baked_decode.total > 0);
+}
+
+#[test]
+fn mnist_like_retention_within_gate_after_paper_bake() {
+    let rep = paper_bake_eval(11, labeled_mnist_like, 32, 96);
+    assert_eq!(rep.bake_hours, PAPER_BAKE_HOURS);
+    assert_eq!(rep.bake_temp_c, PAPER_BAKE_TEMP_C);
+    assert_retention_gates(&rep);
+}
+
+#[test]
+fn kws_like_retention_within_gate_after_paper_bake() {
+    let rep = paper_bake_eval(12, labeled_kws_like, 24, 64);
+    assert_retention_gates(&rep);
+}
+
+#[test]
+#[ignore = "long soak: run on the nightly --ignored leg"]
+fn retention_soak_1000h_both_workloads() {
+    // 6x the paper's stress, looser pin: the stretched exponential
+    // saturates near loss_amplitude, so accuracy should flatten out
+    // rather than collapse.
+    let workloads: [(u64, MakeSet); 2] = [(21, labeled_mnist_like), (22, labeled_kws_like)];
+    for (seed, make) in workloads {
+        let mut r = Rng::new(seed);
+        let set = make(&mut r, 64 + 256);
+        let opts =
+            EvalOptions { n_calib: 64, n_eval: 256, bake_hours: 1000.0, bake_temp_c: 125.0 };
+        let rep = run_eval(&ChipConfig::new(), &set, &opts).expect("soak eval");
+        let drop = rep.fresh_leg.top1 - rep.baked_leg.top1;
+        assert!(drop <= 0.15, "{}: 1000 h soak cost {drop:.3} top-1", rep.workload);
+        assert!(
+            rep.baked_leg.agree_f32 >= 0.5,
+            "{}: baked chip agrees with f32 on only {:.3}",
+            rep.workload,
+            rep.baked_leg.agree_f32
+        );
+    }
+}

@@ -1,6 +1,7 @@
 #!/bin/sh
 # Doc link checker (CI): fails when README.md / ARCHITECTURE.md /
-# FIRMWARE.md / TRACING.md reference files that do not exist in the repo.
+# FIRMWARE.md / TRACING.md / QUANTIZE.md reference files that do not
+# exist in the repo.
 #
 # Two classes of reference are checked:
 #   1. markdown links  [text](target)   — local targets must exist
@@ -8,12 +9,12 @@
 #      `rust/tests/test_server.rs` — must exist (directories may be
 #      written with a trailing /)
 #
-# Usage: tools/check_links.sh [file...]   (defaults to the four docs)
+# Usage: tools/check_links.sh [file...]   (defaults to the five docs)
 
 set -u
 cd "$(dirname "$0")/.." || exit 1
 
-files="${*:-README.md ARCHITECTURE.md FIRMWARE.md TRACING.md}"
+files="${*:-README.md ARCHITECTURE.md FIRMWARE.md TRACING.md QUANTIZE.md}"
 fail=0
 
 for f in $files; do

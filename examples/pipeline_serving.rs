@@ -1,0 +1,100 @@
+//! Pipeline-parallel serving demo: a model that outgrows one chip's
+//! EFLASH fails with a *typed* capacity error, then serves bit-exact
+//! across a pipeline of same-size chips — weights stay resident and
+//! zero-standby on every stage, only activations cross the bus.
+//! Self-contained (no artifacts needed).
+//!
+//!     cargo run --release --example pipeline_serving
+
+use nvmcu::config::ChipConfig;
+use nvmcu::engine::{
+    Backend, BatchPolicy, EngineError, InferenceServer, NmcuBackend, Partitioner,
+    PipelinedEngine,
+};
+use nvmcu::util::rng::Rng;
+use nvmcu::util::workload;
+
+fn main() {
+    let mut r = Rng::new(42);
+    let cnn = nvmcu::datasets::synthetic_kws_cnn(&mut r);
+
+    // 1. size the model against the macro geometry: the Partitioner's
+    //    row arithmetic is the same layout math `program` uses
+    let full = ChipConfig::new();
+    let p = Partitioner::new(&full);
+    let need_rows = p.model_rows(&cnn);
+    let max_layer = cnn.layers.iter().map(|l| p.layer_rows(l)).max().unwrap_or(1);
+    println!(
+        "{}: {} layers, {need_rows} EFLASH rows total (largest layer {max_layer})",
+        cnn.name,
+        cnn.layers.len()
+    );
+
+    // 2. fabricate chips too small for the whole model but big enough
+    //    for its largest layer (bank-aligned so the array geometry holds)
+    let mut small = full.clone();
+    let rows_goal = max_layer.div_ceil(small.eflash.banks) * small.eflash.banks;
+    assert!(rows_goal < need_rows, "demo premise: the model must not fit one chip");
+    small.eflash.capacity_bits =
+        rows_goal * small.eflash.cells_per_read * small.eflash.bits_per_cell as usize;
+    println!("shrunken chip: {rows_goal} rows ({} bits)", small.eflash.capacity_bits);
+
+    // 3. one shrunken chip refuses the model with a typed error — and
+    //    claims nothing: the allocator watermark is untouched
+    let mut one = NmcuBackend::new(&small);
+    let mark_before = one.chip().eflash.alloc_mark();
+    match one.program(&cnn) {
+        Err(EngineError::CapacityExhausted { requested_rows, rows_free, .. }) => {
+            println!(
+                "single chip: CapacityExhausted (requested {requested_rows} rows, \
+                 {rows_free} free) — typed, nothing partially programmed"
+            );
+        }
+        other => panic!("expected CapacityExhausted, got {other:?}"),
+    }
+    assert_eq!(one.chip().eflash.alloc_mark(), mark_before, "failed program must claim no rows");
+
+    // 4. the capacity-driven entry point: pack the chain onto the fewest
+    //    shrunken chips that hold it, program each slice onto its stage
+    let (mut pipe, h) = PipelinedEngine::for_model(&small, &cnn).expect("pipeline fits");
+    println!(
+        "pipeline: {} stages, model spans stages {:?}",
+        pipe.n_stages(),
+        pipe.stages_of(h).expect("resident")
+    );
+
+    // 5. stream a batch and check it bit-exact against a single
+    //    FULL-SIZE chip; the non-bus counters merge exactly and the bus
+    //    carries exactly one extra write + read per stage boundary
+    let xs = workload::random_inputs(&mut r, 32, cnn.input_len());
+    let mut reference = NmcuBackend::new(&full);
+    let hr = reference.program(&cnn).expect("reference program");
+    reference.reset_stats();
+    let want = reference.infer_batch(hr, &xs).expect("reference batch");
+    let base = reference.stats();
+
+    pipe.reset_stats();
+    let outs = pipe.infer_batch(h, &xs).expect("pipelined batch");
+    assert_eq!(outs, want, "partitioning must never change results");
+    let st = pipe.stats();
+    let ps = pipe.pipeline_stats();
+    assert_eq!(
+        (st.eflash_reads, st.mac_ops, st.writebacks, st.cycles, st.layers_run),
+        (base.eflash_reads, base.mac_ops, base.writebacks, base.cycles, base.layers_run),
+        "non-bus counters merge exactly"
+    );
+    assert_eq!(st.bus_bytes, base.bus_bytes + 2 * ps.handoff_bytes, "bus identity");
+    println!("streamed {} requests bit-exact vs a full-size chip", outs.len());
+    println!("pipeline traffic: {}", ps.summary());
+
+    // 6. the pipeline is a Backend like any other: the dynamic-batching
+    //    server schedules over it unchanged
+    let server = InferenceServer::start(Box::new(pipe), BatchPolicy::default()).expect("server");
+    let pendings: Vec<_> =
+        xs.iter().map(|x| server.submit(h, x.clone()).expect("submit")).collect();
+    for (p, w) in pendings.into_iter().zip(&want) {
+        assert_eq!(&p.wait().expect("scheduled result"), w, "server-over-pipeline path");
+    }
+    server.shutdown().expect("shutdown");
+    println!("served the same batch through InferenceServer over the pipeline, still bit-exact");
+}

@@ -1,0 +1,164 @@
+//! Pipeline-parallel serving benchmark: what stage streaming buys (and
+//! costs) against a single chip on the same workload.
+//!
+//! One batch of requests for the KWS-shaped synthetic CNN, streamed
+//! through:
+//!   1. a single chip (`NmcuBackend::infer_batch`, the baseline),
+//!   2. a 2-stage [`PipelinedEngine`] (the capacity split a model takes
+//!      when it outgrows one EFLASH macro),
+//!   3. the deepest feasible pipeline (one layer per stage).
+//!
+//! Every pipeline row is checked bit-exact against the single chip
+//! before its timing counts, the non-bus [`NmcuStats`] counters must
+//! merge exactly, and the bus identity
+//! `pipeline bus == single-chip bus + 2 * handoff bytes` is asserted
+//! per row (the cross-partition property suite pins the same identities
+//! over 25 random models).
+//!
+//!     cargo bench --bench pipeline
+//!
+//! [`NmcuStats`]: nvmcu::nmcu::NmcuStats
+
+use nvmcu::engine::{Backend, NmcuBackend, PipelinedEngine};
+use nvmcu::util::bench::Table;
+use nvmcu::util::cli::Args;
+use nvmcu::util::rng::{seed_from_env, Rng};
+use nvmcu::util::workload;
+use std::time::{Duration, Instant};
+
+const N_REQ: usize = 64;
+const ROUNDS: usize = 3;
+const DEFAULT_SEED: u64 = 17;
+
+fn main() {
+    let args = Args::parse(false);
+    let seed = args.opt_u64("seed", seed_from_env(DEFAULT_SEED));
+    let cfg = nvmcu::config::ChipConfig::new();
+    let mut r = Rng::new(seed);
+    let cnn = nvmcu::datasets::synthetic_kws_cnn(&mut r);
+    let n_layers = cnn.layers.len();
+    let pool = workload::random_inputs(&mut r, N_REQ, cnn.input_len());
+    println!(
+        "pipeline bench: {N_REQ}-request stream, {} ({n_layers} layers), best of {ROUNDS} \
+         rounds (seed {seed}; replay with --seed {seed})",
+        cnn.name
+    );
+    println!("trace: add --trace-out <file> for a Chrome trace of a 2-stage stream\n");
+    // --report-out <file>: machine-readable report for `nvmcu bench-compare`
+    let mut report =
+        args.opt("report-out").map(|_| nvmcu::metrics::BenchReport::new("pipeline", seed));
+
+    // the single-chip reference: outputs AND stats every pipeline row
+    // must reproduce
+    let mut single = NmcuBackend::new(&cfg);
+    let hs = single.program(&cnn).expect("program (single chip)");
+    single.reset_stats();
+    let want = single.infer_batch(hs, &pool).expect("single-chip batch");
+    let base = single.stats();
+    let mut best_single = Duration::MAX;
+    for _ in 0..ROUNDS {
+        let t0 = Instant::now();
+        let outs = single.infer_batch(hs, &pool).expect("single-chip batch");
+        best_single = best_single.min(t0.elapsed());
+        assert_eq!(outs, want);
+    }
+    let base_rps = N_REQ as f64 / best_single.as_secs_f64().max(1e-12);
+
+    let mut t = Table::new(&[
+        "stages", "inf/s", "speedup", "handoffs/inf", "handoff B/inf", "bus overhead",
+    ]);
+    t.row(&[
+        "1 (single chip)".into(),
+        format!("{base_rps:.0}"),
+        "1.00x".into(),
+        "0".into(),
+        "0".into(),
+        "-".into(),
+    ]);
+    if let Some(rep) = report.as_mut() {
+        rep.push_case(
+            "single chip",
+            best_single.as_nanos() as f64 / N_REQ as f64,
+            &[
+                ("inf_per_s", base_rps),
+                ("bus_bytes_per_inference", base.bus_bytes as f64 / N_REQ as f64),
+            ],
+        );
+    }
+
+    for stages in [2, n_layers] {
+        let mut pipe = PipelinedEngine::new(&cfg, stages).expect("pipeline");
+        let h = pipe.program(&cnn).expect("program (pipeline)");
+        let mut best = Duration::MAX;
+        for _ in 0..ROUNDS {
+            pipe.reset_stats();
+            let t0 = Instant::now();
+            let outs = pipe.infer_batch(h, &pool).expect("pipeline batch");
+            best = best.min(t0.elapsed());
+            assert_eq!(outs, want, "{stages}-stage pipeline diverged from the single chip");
+        }
+        // one measured round is resident in the stats: check the merge
+        // identities on exactly that round
+        let st = pipe.stats();
+        let ps = pipe.pipeline_stats();
+        assert_eq!(
+            (st.eflash_reads, st.mac_ops, st.writebacks, st.cycles, st.layers_run),
+            (base.eflash_reads, base.mac_ops, base.writebacks, base.cycles, base.layers_run),
+            "non-bus counters must merge exactly at {stages} stages"
+        );
+        assert_eq!(
+            st.bus_bytes,
+            base.bus_bytes + 2 * ps.handoff_bytes,
+            "bus identity violated at {stages} stages"
+        );
+        let rps = N_REQ as f64 / best.as_secs_f64().max(1e-12);
+        let label = format!("{stages} stages");
+        t.row(&[
+            label.clone(),
+            format!("{rps:.0}"),
+            format!("{:.2}x", rps / base_rps),
+            format!("{:.1}", ps.handoffs as f64 / N_REQ as f64),
+            format!("{:.0}", ps.handoff_bytes as f64 / N_REQ as f64),
+            format!("+{:.1}%", 100.0 * (st.bus_bytes as f64 / base.bus_bytes as f64 - 1.0)),
+        ]);
+        if let Some(rep) = report.as_mut() {
+            rep.push_case(
+                &label,
+                best.as_nanos() as f64 / N_REQ as f64,
+                &[
+                    ("inf_per_s", rps),
+                    ("handoff_bytes_per_inference", ps.handoff_bytes as f64 / N_REQ as f64),
+                    ("bus_bytes_per_inference", st.bus_bytes as f64 / N_REQ as f64),
+                ],
+            );
+        }
+    }
+    t.print();
+    println!(
+        "\nevery stage count bit-exact vs the single chip; weights stay resident and \
+         zero-standby on every stage, only activations cross the bus"
+    );
+
+    if let (Some(rep), Some(path)) = (&report, args.opt("report-out")) {
+        rep.save(std::path::Path::new(path)).expect("write report");
+        println!("report: {} cases -> {path}", rep.results.len());
+    }
+
+    // traced replay of the 2-stage stream (outside the timed rounds, so
+    // the export never skews the numbers above)
+    if let Some(path) = args.opt("trace-out") {
+        let tracer = nvmcu::trace::Tracer::new(&cfg.power);
+        let mut pipe = PipelinedEngine::new(&cfg, 2).expect("pipeline");
+        pipe.set_tracer(Some(tracer.clone()));
+        let h = pipe.program(&cnn).expect("program (traced)");
+        let outs = pipe.infer_batch(h, &pool).expect("traced batch");
+        assert_eq!(outs, want, "the traced replay diverged");
+        std::fs::write(path, tracer.export_chrome_json()).expect("write trace");
+        println!(
+            "trace: {} events ({} dropped) -> {path} (chrome://tracing / ui.perfetto.dev)",
+            tracer.len(),
+            tracer.dropped()
+        );
+        println!("{}", tracer.attribution().summary());
+    }
+}

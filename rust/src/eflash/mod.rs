@@ -504,6 +504,68 @@ mod tests {
     }
 
     #[test]
+    fn zero_row_alloc_is_free_and_does_not_move_the_watermark() {
+        let cfg = chip();
+        let mut mac = EflashMacro::new(&cfg);
+        // empty allocation at the start, between real ones, and at the
+        // exact end of the macro: always Some(next_row), never a bump
+        assert_eq!(mac.alloc_rows(0), Some(0));
+        assert_eq!(mac.alloc_mark(), 0);
+        let first = mac.alloc_rows(3).expect("3 rows");
+        assert_eq!(mac.alloc_rows(0), Some(first + 3));
+        assert_eq!(mac.alloc_mark(), first + 3);
+        let free = mac.rows_free();
+        assert!(mac.alloc_rows(free).is_some(), "exact fit");
+        assert_eq!(mac.rows_free(), 0);
+        // even fully exhausted, a zero-row request still succeeds
+        assert_eq!(mac.alloc_rows(0), Some(mac.total_rows()));
+        assert_eq!(mac.rows_free(), 0);
+    }
+
+    #[test]
+    fn exact_fit_alloc_reaches_zero_free_then_rolls_back() {
+        let cfg = chip();
+        let mut mac = EflashMacro::new(&cfg);
+        let total = mac.total_rows();
+        let mark = mac.alloc_mark();
+        // split the whole macro across two exact allocations
+        assert_eq!(mac.alloc_rows(total - 5), Some(0));
+        assert_eq!(mac.rows_free(), 5);
+        assert_eq!(mac.alloc_rows(5), Some(total - 5));
+        assert_eq!(mac.rows_free(), 0);
+        assert!(mac.alloc_rows(1).is_none(), "nothing past the end");
+        // roll everything back: the macro is whole again
+        mac.release_rows_from(mark);
+        assert_eq!(mac.rows_free(), total);
+        assert_eq!(mac.alloc_mark(), mark);
+    }
+
+    #[test]
+    fn release_at_the_watermark_is_a_no_op_and_idempotent() {
+        let cfg = chip();
+        let mut mac = EflashMacro::new(&cfg);
+        let codes: Vec<i8> = (0..512).map(|i| ((i % 16) as i8) - 8).collect();
+        let (region, _) = mac.program_region(&codes).unwrap();
+        let mark = mac.alloc_mark();
+        // a mark AT the watermark releases nothing and decodes intact
+        mac.release_rows_from(mark);
+        assert_eq!(mac.alloc_mark(), mark);
+        let e = mac.decode_errors(&region, &codes);
+        assert_eq!(e.exact, e.total, "no-op release disturbed programmed rows: {e:?}");
+        // double release of the same span: the second call finds the
+        // watermark already rolled back and must change nothing
+        mac.release_rows_from(region.first_row);
+        let free = mac.rows_free();
+        mac.release_rows_from(region.first_row);
+        assert_eq!(mac.rows_free(), free, "double release must be idempotent");
+        assert_eq!(mac.alloc_mark(), region.first_row);
+        // the span is reusable: the same image programs again cleanly
+        let (again, rep) = mac.program_region(&codes).unwrap();
+        assert_eq!(rep.failed_cells, 0);
+        assert_eq!(again.first_row, region.first_row, "bump allocator reuses released rows");
+    }
+
+    #[test]
     fn resample_mode_rereads_with_noise() {
         let mut cfg = chip();
         cfg.eflash.read_noise_sigma = 0.04; // exaggerate to see variation

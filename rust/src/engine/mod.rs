@@ -17,7 +17,11 @@
 //!   (`--features pjrt`),
 //! - [`ShardedEngine`] — N replicated chips (or firmware-driven MCUs)
 //!   on worker threads, the data-parallel throughput primitive (itself
-//!   a [`Backend`]).
+//!   a [`Backend`]),
+//! - [`PipelinedEngine`] — N chips each holding a contiguous slice of
+//!   one model's layer chain, streaming activations between stages:
+//!   the model-parallel capacity primitive for models whose weights
+//!   exceed one chip's EFLASH (itself a [`Backend`]).
 //!
 //! On top of the batch primitive sits the serving layer:
 //! [`InferenceServer`] (see [`server`]) accepts independent
@@ -50,6 +54,7 @@
 
 mod mcu_backend;
 mod nmcu_backend;
+mod pipeline;
 mod reference;
 pub mod server;
 mod sharded;
@@ -63,6 +68,7 @@ pub use crate::reliability::{Fault, FaultPlan, HealthReport, HealthStatus, Scrub
 pub use hlo::HloBackend;
 pub use mcu_backend::McuBackend;
 pub use nmcu_backend::NmcuBackend;
+pub use pipeline::{PartitionError, Partitioner, PipelinedEngine};
 pub use reference::ReferenceBackend;
 pub use server::{BatchPolicy, InferenceServer, Pending, ServerClient};
 pub use sharded::{QuarantinePolicy, ShardState, ShardedEngine};
@@ -229,6 +235,9 @@ pub enum BackendKind {
     Reference,
     /// The AOT HLO graphs via PJRT (`HloBackend`, `--features pjrt`).
     Hlo,
+    /// Pipeline-parallel partitioned serving over N stage chips
+    /// ([`PipelinedEngine`]; CLI `--backend pipeline --stages N`).
+    Pipeline,
 }
 
 impl std::str::FromStr for BackendKind {
@@ -240,8 +249,11 @@ impl std::str::FromStr for BackendKind {
             "mcu" | "soc" | "firmware" => Ok(BackendKind::Mcu),
             "reference" | "ref" | "sw" => Ok(BackendKind::Reference),
             "hlo" | "pjrt" => Ok(BackendKind::Hlo),
+            "pipeline" | "pipelined" => Ok(BackendKind::Pipeline),
             other => Err(EngineError::InvalidConfig {
-                reason: format!("unknown backend `{other}` (expected nmcu|mcu|reference|hlo)"),
+                reason: format!(
+                    "unknown backend `{other}` (expected nmcu|mcu|reference|hlo|pipeline)"
+                ),
             }),
         }
     }
@@ -311,6 +323,14 @@ impl Engine {
         Ok(Engine::new(Box::new(ShardedEngine::new_mcu(cfg, n_shards)?)))
     }
 
+    /// Engine over a pipeline of `n_stages` chips, each holding a
+    /// contiguous slice of every programmed model's layer chain
+    /// ([`PipelinedEngine`]) — the path for models whose weights
+    /// exceed one chip's EFLASH.
+    pub fn pipelined(cfg: &ChipConfig, n_stages: usize) -> Result<Engine> {
+        Ok(Engine::new(Box::new(PipelinedEngine::new(cfg, n_stages)?)))
+    }
+
     /// Engine over the AOT HLO graphs via PJRT.
     #[cfg(feature = "pjrt")]
     pub fn hlo(artifacts_dir: &Path) -> Result<Engine> {
@@ -325,6 +345,9 @@ impl Engine {
             BackendKind::Nmcu => Ok(Engine::nmcu(cfg)),
             BackendKind::Mcu => Ok(Engine::mcu(cfg)),
             BackendKind::Reference => Ok(Engine::reference()),
+            // default pipeline depth; `--stages N` callers construct
+            // via Engine::pipelined directly
+            BackendKind::Pipeline => Engine::pipelined(cfg, 2),
             #[cfg(feature = "pjrt")]
             BackendKind::Hlo => Engine::hlo(artifacts_dir),
             #[cfg(not(feature = "pjrt"))]

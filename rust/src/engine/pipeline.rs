@@ -1,0 +1,911 @@
+//! Pipeline-parallel serving over N chips: partition one model's op
+//! chain into contiguous stage slices and stream batches through them.
+//!
+//! The paper's chip tightly couples a single 4 Mb 4-bits/cell EFLASH
+//! macro to the NMCU, so a model whose int4 weights exceed one macro is
+//! unservable on any single [`NmcuBackend`] —
+//! [`EngineError::CapacityExhausted`] with no fallback. This module is
+//! the fallback: a capacity-driven [`Partitioner`] cuts the layer chain
+//! into contiguous slices sized to each chip's free EFLASH rows, and a
+//! [`PipelinedEngine`] programs each slice onto its own chip and streams
+//! batches through the stages with overlapped execution — stage *k*
+//! computes sample *i* while stage *k−1* computes sample *i+1*, the
+//! fleet-level analogue of the chip's ping-pong buffer (each inter-stage
+//! channel holds one activation in flight while both neighbours
+//! compute). Weights stay resident and zero-standby on every chip; only
+//! activations move.
+//!
+//! ## Accounting
+//!
+//! Every stage chip keeps its own exact [`NmcuStats`]; the engine's
+//! merged [`Backend::stats`] is their sum. Per-layer reads, MACs,
+//! cycles, and write-backs are pure functions of layer geometry, so the
+//! sum equals a single big chip serving the same model — except
+//! `bus_bytes`, where each inter-stage activation handoff is paid twice
+//! (producer `dma_out` + consumer `dma_in`). The
+//! [`PipelineMeter`](crate::metrics::PipelineMeter) counts exactly those
+//! handoff bytes, giving the identity the 25-seed cross-partition
+//! property in `rust/tests/test_properties.rs` pins:
+//!
+//! ```text
+//! pipeline.stats().bus_bytes == single_chip.bus_bytes + 2 * handoff_bytes
+//! ```
+//!
+//! ## Composition
+//!
+//! [`PipelinedEngine`] is a [`Backend`], so the existing stack composes
+//! untouched: an [`InferenceServer`](super::InferenceServer) schedules
+//! onto it, [`Tracer`] spans cover the per-stage handoffs (each stage
+//! chip opens its own "chip" ring; the pipeline adds "pipeline" rings
+//! for stage streams and handoffs), and `scrub`/`repair`/`health`
+//! aggregate per-stage in stage order.
+
+use super::{Backend, EngineError, ModelHandle, ModelInfo, NmcuBackend, Result};
+use crate::artifacts::{QLayer, QModel, QOp};
+use crate::config::ChipConfig;
+use crate::metrics::{PipelineMeter, PipelineStats};
+use crate::nmcu::NmcuStats;
+use crate::reliability::{HealthReport, ScrubPolicy};
+use crate::trace::{TraceSink, Tracer};
+use std::ops::Range;
+use std::sync::mpsc::sync_channel;
+
+/// Why a model could not be partitioned into stage slices. Typed like
+/// every other program-path failure; converts into [`EngineError`] so
+/// [`Backend::program`] stays uniform.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PartitionError {
+    /// A single weighted layer needs more EFLASH rows than an entire
+    /// empty stage macro — no contiguous-slice partition can help
+    /// (intra-layer sharding is out of scope).
+    LayerTooLarge {
+        /// the offending layer's name
+        layer: String,
+        /// rows the layer's row image needs
+        rows_needed: usize,
+        /// rows the largest available stage macro offers
+        stage_rows: usize,
+    },
+    /// The model's total row demand exceeds the summed free rows of
+    /// every stage (at feasible cut points).
+    OutOfCapacity {
+        /// rows the whole model needs
+        requested_rows: usize,
+        /// free rows across all stages
+        rows_free: usize,
+        /// the model's name
+        model: String,
+    },
+    /// More stages requested than layers to slice.
+    TooManyStages {
+        /// stage count requested
+        n_stages: usize,
+        /// layers available to cut
+        n_layers: usize,
+    },
+    /// The requested stage count forces a cut before a chained dense
+    /// layer whose `k` exceeds the input-buffer capacity: as a stage
+    /// head the layer would be re-staged through the input buffer,
+    /// which cannot hold it.
+    InvalidCut {
+        /// the layer the cut would fall before
+        layer: String,
+        /// the layer's contraction length
+        k: usize,
+        /// the input buffer capacity it exceeds
+        input_capacity: usize,
+    },
+}
+
+impl std::fmt::Display for PartitionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PartitionError::LayerTooLarge { layer, rows_needed, stage_rows } => write!(
+                f,
+                "layer {layer} needs {rows_needed} EFLASH rows but one stage macro \
+                 holds {stage_rows}"
+            ),
+            PartitionError::OutOfCapacity { requested_rows, rows_free, model } => write!(
+                f,
+                "model {model} needs {requested_rows} EFLASH rows but the pipeline \
+                 has {rows_free} free"
+            ),
+            PartitionError::TooManyStages { n_stages, n_layers } => {
+                write!(f, "cannot cut {n_layers} layers into {n_stages} stages")
+            }
+            PartitionError::InvalidCut { layer, k, input_capacity } => write!(
+                f,
+                "cut before chained dense layer {layer} is infeasible: k={k} exceeds \
+                 input buffer capacity {input_capacity}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for PartitionError {}
+
+impl From<PartitionError> for EngineError {
+    fn from(e: PartitionError) -> EngineError {
+        match e {
+            PartitionError::LayerTooLarge { .. } | PartitionError::InvalidCut { .. } => {
+                EngineError::BadDescriptor { reason: e.to_string() }
+            }
+            PartitionError::OutOfCapacity { requested_rows, rows_free, model } => {
+                EngineError::CapacityExhausted { requested_rows, rows_free, what: model }
+            }
+            PartitionError::TooManyStages { .. } => {
+                EngineError::InvalidConfig { reason: e.to_string() }
+            }
+        }
+    }
+}
+
+/// Capacity-driven splitter of a [`QModel`]'s op chain into contiguous
+/// stage slices. Row costs come from the same layout the coordinator
+/// programs ([`crate::nmcu::layout_codes`]), so the partition never
+/// disagrees with the macro's own capacity pre-check.
+#[derive(Clone, Debug)]
+pub struct Partitioner {
+    /// MAC lanes per PE (row-image geometry)
+    lanes: usize,
+    /// cells one EFLASH row read returns
+    cells_per_read: usize,
+    /// ping-pong half capacity (dense/conv `n` ceiling)
+    pingpong_capacity: usize,
+    /// input buffer capacity (staged dense / im2col `k` ceiling)
+    input_capacity: usize,
+    /// activation SRAM capacity (conv/pool feature-map ceiling)
+    act_capacity: usize,
+}
+
+impl Partitioner {
+    /// A partitioner for chips fabricated from `cfg`.
+    pub fn new(cfg: &ChipConfig) -> Partitioner {
+        Partitioner {
+            lanes: cfg.nmcu.lanes_per_pe,
+            cells_per_read: cfg.eflash.cells_per_read,
+            pingpong_capacity: cfg.nmcu.pingpong_capacity,
+            input_capacity: cfg.nmcu.input_capacity,
+            act_capacity: cfg.nmcu.act_capacity,
+        }
+    }
+
+    /// EFLASH rows one layer's row image occupies (0 for weightless
+    /// pool layers). Matches `layout_codes(..).len().div_ceil(cpr)`
+    /// without materializing the image.
+    pub fn layer_rows(&self, l: &QLayer) -> usize {
+        match l.op {
+            QOp::MaxPool2d { .. } => 0,
+            _ => {
+                let cells = l.k.div_ceil(self.lanes) * l.n.div_ceil(2) * 2 * self.lanes;
+                cells.div_ceil(self.cells_per_read)
+            }
+        }
+    }
+
+    /// Total EFLASH rows the whole model occupies.
+    pub fn model_rows(&self, model: &QModel) -> usize {
+        model.layers.iter().map(|l| self.layer_rows(l)).sum()
+    }
+
+    /// Whether a cut may fall before layer `i`: the layer becomes a
+    /// stage head, re-staged through the input buffer. Only a dense
+    /// layer with `k` past the input capacity refuses (conv/pool heads
+    /// run the same geometry checks at any position).
+    fn cut_ok(&self, l: &QLayer) -> bool {
+        !matches!(l.op, QOp::Dense) || l.k <= self.input_capacity
+    }
+
+    /// The geometry checks `program_model_into` will run, applied to
+    /// the whole chain up front so a partitioned program either claims
+    /// rows on every stage or on none.
+    fn geometry_check(&self, model: &QModel) -> Result<()> {
+        let shapes = model.shapes()?;
+        for (i, l) in model.layers.iter().enumerate() {
+            let (in_len, out_len) = (shapes[i].len(), shapes[i + 1].len());
+            let bad = |reason: String| Err(EngineError::BadDescriptor { reason });
+            match l.op {
+                QOp::Dense => {
+                    if l.n > self.pingpong_capacity {
+                        return bad(format!(
+                            "layer {}: n={} exceeds ping-pong half capacity {}",
+                            l.name, l.n, self.pingpong_capacity
+                        ));
+                    }
+                    let staged = i == 0 || !matches!(model.layers[i - 1].op, QOp::Dense);
+                    if staged && l.k > self.input_capacity {
+                        return bad(format!(
+                            "layer {}: k={} exceeds input buffer capacity {}",
+                            l.name, l.k, self.input_capacity
+                        ));
+                    }
+                }
+                QOp::Conv2D { .. } => {
+                    if l.n > self.pingpong_capacity || l.k > self.input_capacity {
+                        return bad(format!(
+                            "layer {}: conv (k={}, cout={}) exceeds buffer capacities",
+                            l.name, l.k, l.n
+                        ));
+                    }
+                    if in_len > self.act_capacity || out_len > self.act_capacity {
+                        return bad(format!(
+                            "layer {}: feature map exceeds activation SRAM capacity {}",
+                            l.name, self.act_capacity
+                        ));
+                    }
+                }
+                QOp::MaxPool2d { .. } => {
+                    if in_len > self.act_capacity || out_len > self.act_capacity {
+                        return bad(format!(
+                            "layer {}: feature map exceeds activation SRAM capacity {}",
+                            l.name, self.act_capacity
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Greedy first-fit: walk the layer chain, filling stage after
+    /// stage against its row budget, cutting only at feasible cut
+    /// points. Uses as few stages as the budgets allow; errors typed
+    /// when a single layer exceeds one macro or the budgets run out.
+    pub fn pack(
+        &self,
+        model: &QModel,
+        budgets: &[usize],
+    ) -> std::result::Result<Vec<Range<usize>>, PartitionError> {
+        let rows: Vec<usize> = model.layers.iter().map(|l| self.layer_rows(l)).collect();
+        let total: usize = rows.iter().sum();
+        let free: usize = budgets.iter().sum();
+        let out_of_capacity = || PartitionError::OutOfCapacity {
+            requested_rows: total,
+            rows_free: free,
+            model: model.name.clone(),
+        };
+        if model.layers.is_empty() || budgets.is_empty() {
+            return Err(out_of_capacity());
+        }
+        let max_budget = budgets.iter().copied().max().unwrap_or(0);
+        if let Some((i, r)) = rows.iter().enumerate().find(|(_, r)| **r > max_budget) {
+            return Err(PartitionError::LayerTooLarge {
+                layer: model.layers[i].name.clone(),
+                rows_needed: *r,
+                stage_rows: max_budget,
+            });
+        }
+        let mut slices = Vec::new();
+        let (mut s, mut start, mut acc) = (0usize, 0usize, 0usize);
+        for (i, r) in rows.iter().enumerate() {
+            if i == start || acc + r <= budgets[s] {
+                acc += r;
+                continue;
+            }
+            if !self.cut_ok(&model.layers[i]) {
+                // the forced cut point is infeasible and the stage is
+                // already full — a finer packer could backtrack, but a
+                // typed error keeps the contract honest
+                return Err(out_of_capacity());
+            }
+            slices.push(start..i);
+            s += 1;
+            if s >= budgets.len() {
+                return Err(out_of_capacity());
+            }
+            start = i;
+            acc = *r;
+        }
+        slices.push(start..model.layers.len());
+        // the walk admits one oversize case: a stage's *first* layer is
+        // taken unconditionally, so re-check every slice against its
+        // budget (covers a first layer larger than a non-max stage)
+        for (si, sl) in slices.iter().enumerate() {
+            if rows[sl.clone()].iter().sum::<usize>() > budgets[si] {
+                return Err(out_of_capacity());
+            }
+        }
+        Ok(slices)
+    }
+
+    /// Cut the chain into exactly `n_stages` contiguous non-empty
+    /// slices, balanced by row cost against each stage's budget —
+    /// the partition behind `--backend pipeline --stages N` and the
+    /// cross-partition property sweep.
+    pub fn split(
+        &self,
+        model: &QModel,
+        n_stages: usize,
+        budgets: &[usize],
+    ) -> std::result::Result<Vec<Range<usize>>, PartitionError> {
+        let n = model.layers.len();
+        if n_stages == 0 || n_stages > n || n_stages > budgets.len() {
+            return Err(PartitionError::TooManyStages { n_stages, n_layers: n });
+        }
+        let rows: Vec<usize> = model.layers.iter().map(|l| self.layer_rows(l)).collect();
+        let total: usize = rows.iter().sum();
+        let target = total.div_ceil(n_stages);
+        let mut slices = Vec::with_capacity(n_stages);
+        let mut i = 0usize;
+        for s in 0..n_stages {
+            let stages_left = n_stages - s - 1;
+            let start = i;
+            let mut acc = 0usize;
+            loop {
+                acc += rows[i];
+                i += 1;
+                if n - i == stages_left {
+                    break; // exactly one layer left per remaining stage
+                }
+                if stages_left == 0 {
+                    continue; // the last stage drains the whole tail
+                }
+                let can_cut = self.cut_ok(&model.layers[i]);
+                if can_cut && (acc >= target || acc + rows[i] > budgets[s]) {
+                    break;
+                }
+            }
+            slices.push(start..i);
+        }
+        // feasibility post-check: every non-first head must be a valid
+        // cut point and every slice must fit its stage budget
+        for (s, sl) in slices.iter().enumerate() {
+            if s > 0 && !self.cut_ok(&model.layers[sl.start]) {
+                let l = &model.layers[sl.start];
+                return Err(PartitionError::InvalidCut {
+                    layer: l.name.clone(),
+                    k: l.k,
+                    input_capacity: self.input_capacity,
+                });
+            }
+            let need: usize = rows[sl.clone()].iter().sum();
+            if need > budgets[s] {
+                return Err(if sl.len() == 1 {
+                    PartitionError::LayerTooLarge {
+                        layer: model.layers[sl.start].name.clone(),
+                        rows_needed: need,
+                        stage_rows: budgets[s],
+                    }
+                } else {
+                    PartitionError::OutOfCapacity {
+                        requested_rows: total,
+                        rows_free: budgets.iter().sum(),
+                        model: model.name.clone(),
+                    }
+                });
+            }
+        }
+        Ok(slices)
+    }
+}
+
+/// Where one resident model lives: the stage chips it spans (in
+/// pipeline order) and the per-stage handles its slices got.
+#[derive(Clone, Debug)]
+struct Route {
+    /// model name from the artifact (without stage suffixes)
+    name: String,
+    /// flattened input length of the first slice
+    input_len: usize,
+    /// flattened output length of the last slice
+    output_len: usize,
+    /// layers across all slices
+    n_layers: usize,
+    /// `(stage index, handle on that stage)` per slice, ascending
+    hops: Vec<(usize, ModelHandle)>,
+}
+
+/// Pipeline-parallel [`Backend`] over `n` stage chips (see the
+/// [module docs](self)). Models are partitioned at program time; a
+/// model may span fewer stages than the fleet has, and every stage chip
+/// is a full [`NmcuBackend`] — scrub, repair, golden verification, and
+/// tracing all work per stage.
+pub struct PipelinedEngine {
+    stages: Vec<NmcuBackend>,
+    partitioner: Partitioner,
+    routes: Vec<Route>,
+    meter: PipelineMeter,
+    /// the tracer attached via [`Backend::set_tracer`], if any
+    tracer: Option<Tracer>,
+    /// the coordinator's own ring: batch/stream spans, written only
+    /// from the calling thread
+    sink: Option<TraceSink>,
+    /// one ring per stage for stage-stream and handoff spans, written
+    /// only by that stage's worker thread
+    stage_sinks: Vec<Option<TraceSink>>,
+}
+
+impl std::fmt::Debug for PipelinedEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PipelinedEngine")
+            .field("n_stages", &self.stages.len())
+            .field("n_models", &self.routes.len())
+            .finish()
+    }
+}
+
+/// What one stage's worker thread did during a streamed batch.
+struct StageRun {
+    /// activations forwarded downstream
+    forwarded: u64,
+    /// bytes those activations totalled
+    bytes: u64,
+    /// the batch outputs (last stage only)
+    outs: Option<Vec<Vec<i8>>>,
+}
+
+impl PipelinedEngine {
+    /// Fabricate `n_stages` identically-configured stage chips.
+    pub fn new(cfg: &ChipConfig, n_stages: usize) -> Result<PipelinedEngine> {
+        if n_stages == 0 {
+            return Err(EngineError::InvalidConfig { reason: "n_stages must be >= 1".into() });
+        }
+        Ok(PipelinedEngine {
+            stages: (0..n_stages).map(|_| NmcuBackend::new(cfg)).collect(),
+            partitioner: Partitioner::new(cfg),
+            routes: Vec::new(),
+            meter: PipelineMeter::new(),
+            tracer: None,
+            sink: None,
+            stage_sinks: vec![None; n_stages],
+        })
+    }
+
+    /// Capacity-driven construction: greedy first-fit packing picks the
+    /// fewest same-size chips that hold `model`, then the engine is
+    /// built at that stage count with the model programmed — the "my
+    /// model no longer fits one chip" entry point.
+    pub fn for_model(cfg: &ChipConfig, model: &QModel) -> Result<(PipelinedEngine, ModelHandle)> {
+        let p = Partitioner::new(cfg);
+        let budget = crate::eflash::EflashMacro::new(cfg).rows_free();
+        let budgets = vec![budget; model.layers.len().max(1)];
+        let slices = p.pack(model, &budgets)?;
+        let mut engine = PipelinedEngine::new(cfg, slices.len())?;
+        let handle = engine.program(model)?;
+        Ok((engine, handle))
+    }
+
+    /// Number of stage chips in the pipeline.
+    pub fn n_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Access one stage chip (per-stage stats, bake experiments).
+    pub fn stage(&self, i: usize) -> &NmcuBackend {
+        &self.stages[i]
+    }
+
+    /// Mutable access to one stage chip (fault injection, bake).
+    pub fn stage_mut(&mut self, i: usize) -> &mut NmcuBackend {
+        &mut self.stages[i]
+    }
+
+    /// The stage indices a resident model spans, in pipeline order.
+    pub fn stages_of(&self, handle: ModelHandle) -> Result<Vec<usize>> {
+        Ok(self.route(handle)?.hops.iter().map(|(s, _)| *s).collect())
+    }
+
+    /// Snapshot of the pipeline's inter-stage traffic counters.
+    pub fn pipeline_stats(&self) -> PipelineStats {
+        self.meter.snapshot()
+    }
+
+    fn route(&self, handle: ModelHandle) -> Result<&Route> {
+        self.routes.get(handle.index()).ok_or_else(|| EngineError::InvalidHandle {
+            handle: handle.index(),
+            n_models: self.routes.len(),
+        })
+    }
+}
+
+impl Backend for PipelinedEngine {
+    fn name(&self) -> &'static str {
+        "nmcu-pipeline"
+    }
+
+    /// Partition the chain across the stages' *current* free rows
+    /// (models already resident shrink the budgets), then program each
+    /// slice onto its stage chip. The partition and the shared geometry
+    /// checks both run before any rows are claimed, so a typed failure
+    /// here leaves every stage allocator untouched.
+    fn program(&mut self, model: &QModel) -> Result<ModelHandle> {
+        model.validate()?;
+        self.partitioner.geometry_check(model)?;
+        let shapes = model.shapes()?;
+        let budgets: Vec<usize> =
+            self.stages.iter().map(|s| s.chip().eflash.rows_free()).collect();
+        let n_stages = self.stages.len().min(model.layers.len());
+        let slices = self.partitioner.split(model, n_stages, &budgets)?;
+        let mut hops = Vec::with_capacity(slices.len());
+        for (s, slice) in slices.iter().enumerate() {
+            let sub = QModel {
+                name: format!("{}:stage{}", model.name, s),
+                input_shape: shapes[slice.start],
+                layers: model.layers[slice.clone()].to_vec(),
+            };
+            let h = self.stages[s].program(&sub)?;
+            hops.push((s, h));
+        }
+        self.routes.push(Route {
+            name: model.name.clone(),
+            input_len: model.input_len(),
+            output_len: shapes.last().expect("shapes() includes the input").len(),
+            n_layers: model.layers.len(),
+            hops,
+        });
+        Ok(ModelHandle::from_index(self.routes.len() - 1))
+    }
+
+    /// Single samples walk the stages sequentially (there is nothing to
+    /// overlap with), paying the same handoff accounting as a stream.
+    fn infer(&mut self, handle: ModelHandle, x: &[i8]) -> Result<Vec<i8>> {
+        let route = self.route(handle)?;
+        if x.len() != route.input_len {
+            return Err(EngineError::InputSize { expected: route.input_len, got: x.len() });
+        }
+        let hops = route.hops.clone();
+        let _span = self
+            .sink
+            .as_ref()
+            .map(|s| s.span("pipeline", "infer", vec![("stages", hops.len().into())]));
+        let mut act = x.to_vec();
+        let (mut handoffs, mut bytes) = (0u64, 0u64);
+        for (pos, (s, h)) in hops.iter().enumerate() {
+            if pos > 0 {
+                handoffs += 1;
+                bytes += act.len() as u64;
+                if let Some(sink) = &self.sink {
+                    sink.instant(
+                        "pipeline",
+                        "handoff",
+                        vec![("stage", (*s).into()), ("bytes", act.len().into())],
+                    );
+                }
+            }
+            act = self.stages[*s].infer(*h, &act)?;
+        }
+        self.meter.note_batch(1);
+        self.meter.note_handoffs(handoffs, bytes);
+        Ok(act)
+    }
+
+    /// Stream the batch through the stages with overlapped execution:
+    /// one worker thread per stage, connected by bounded rendezvous
+    /// channels (capacity 1 — the fleet-level ping-pong buffer: one
+    /// activation in flight per boundary while both neighbours
+    /// compute). Outputs come back in request order because every
+    /// boundary is a FIFO served by a single thread.
+    fn infer_batch(&mut self, handle: ModelHandle, xs: &[Vec<i8>]) -> Result<Vec<Vec<i8>>> {
+        let route = self.route(handle)?.clone();
+        if xs.is_empty() {
+            return Ok(Vec::new());
+        }
+        if let Some(bad) = xs.iter().find(|x| x.len() != route.input_len) {
+            return Err(EngineError::InputSize { expected: route.input_len, got: bad.len() });
+        }
+        if route.hops.len() == 1 {
+            let (s, h) = route.hops[0];
+            self.meter.note_batch(xs.len());
+            return self.stages[s].infer_batch(h, xs);
+        }
+        let _span = self.sink.as_ref().map(|s| {
+            s.span(
+                "pipeline",
+                "stream",
+                vec![("n", xs.len().into()), ("stages", route.hops.len().into())],
+            )
+        });
+        // disjoint &mut borrows of exactly the stage chips this model
+        // spans, in pipeline order (hops are ascending by construction)
+        let mut picked: Vec<(&mut NmcuBackend, Option<TraceSink>)> = Vec::new();
+        {
+            let mut want = route.hops.iter().map(|(s, _)| *s).peekable();
+            for (i, st) in self.stages.iter_mut().enumerate() {
+                if want.peek() == Some(&i) {
+                    picked.push((st, self.stage_sinks[i].clone()));
+                    want.next();
+                }
+            }
+        }
+        let k = picked.len();
+        let n = xs.len();
+        let mut results: Vec<Result<StageRun>> = Vec::with_capacity(k);
+        std::thread::scope(|scope| {
+            let mut upstream = None;
+            let mut workers = Vec::with_capacity(k);
+            for (pos, ((backend, sink), (s, h))) in
+                picked.into_iter().zip(route.hops.iter().copied()).enumerate()
+            {
+                let last = pos == k - 1;
+                let (tx, next_rx) = if last {
+                    (None, None)
+                } else {
+                    let (tx, rx) = sync_channel::<Vec<i8>>(1);
+                    (Some(tx), Some(rx))
+                };
+                let rx = upstream.take();
+                upstream = next_rx;
+                workers.push(scope.spawn(move || -> Result<StageRun> {
+                    let _sp = sink.as_ref().map(|sk| {
+                        sk.span("pipeline", "stage", vec![("stage", s.into()), ("n", n.into())])
+                    });
+                    let mut run = StageRun {
+                        forwarded: 0,
+                        bytes: 0,
+                        outs: last.then(|| Vec::with_capacity(n)),
+                    };
+                    let mut emit = |run: &mut StageRun, y: Vec<i8>| -> bool {
+                        match &tx {
+                            None => {
+                                run.outs.as_mut().expect("last stage collects").push(y);
+                                true
+                            }
+                            Some(tx) => {
+                                run.forwarded += 1;
+                                run.bytes += y.len() as u64;
+                                let _h = sink.as_ref().map(|sk| {
+                                    sk.span(
+                                        "pipeline",
+                                        "handoff",
+                                        vec![("stage", s.into()), ("bytes", y.len().into())],
+                                    )
+                                });
+                                // a send can only fail when the
+                                // downstream stage died on its own
+                                // typed error — stop quietly and let
+                                // that error surface in stage order
+                                tx.send(y).is_ok()
+                            }
+                        }
+                    };
+                    match rx {
+                        None => {
+                            for x in xs {
+                                let y = backend.infer(h, x)?;
+                                if !emit(&mut run, y) {
+                                    break;
+                                }
+                            }
+                        }
+                        Some(rx) => {
+                            while let Ok(x) = rx.recv() {
+                                let y = backend.infer(h, &x)?;
+                                if !emit(&mut run, y) {
+                                    break;
+                                }
+                            }
+                        }
+                    }
+                    Ok(run)
+                }));
+            }
+            for (pos, w) in workers.into_iter().enumerate() {
+                results.push(
+                    w.join().unwrap_or_else(|_| Err(EngineError::WorkerPanicked { shard: pos })),
+                );
+            }
+        });
+        let mut outs = None;
+        let (mut handoffs, mut bytes) = (0u64, 0u64);
+        for r in results {
+            let run = r?;
+            handoffs += run.forwarded;
+            bytes += run.bytes;
+            if run.outs.is_some() {
+                outs = run.outs;
+            }
+        }
+        self.meter.note_batch(n);
+        self.meter.note_handoffs(handoffs, bytes);
+        match outs {
+            Some(outs) if outs.len() == n => Ok(outs),
+            _ => Err(EngineError::Backend {
+                backend: "nmcu-pipeline",
+                reason: "stream ended before the batch drained".into(),
+            }),
+        }
+    }
+
+    fn n_models(&self) -> usize {
+        self.routes.len()
+    }
+
+    fn model_info(&self, handle: ModelHandle) -> Option<ModelInfo> {
+        self.routes.get(handle.index()).map(|r| ModelInfo {
+            name: r.name.clone(),
+            input_dim: r.input_len,
+            output_dim: r.output_len,
+            n_layers: r.n_layers,
+        })
+    }
+
+    /// Merged statistics across all stage chips (exact: see the
+    /// [module docs](self) for the bus identity).
+    fn stats(&self) -> NmcuStats {
+        let mut total = NmcuStats::default();
+        for st in &self.stages {
+            total.add(&st.stats());
+        }
+        total
+    }
+
+    fn reset_stats(&mut self) {
+        for st in &mut self.stages {
+            st.reset_stats();
+        }
+        self.meter.reset();
+    }
+
+    /// Scrub every stage chip, concatenating the per-stage reports in
+    /// stage order (one report per resident stage slice).
+    fn scrub(&mut self, policy: &ScrubPolicy) -> Result<Vec<HealthReport>> {
+        let mut out = Vec::new();
+        for st in &mut self.stages {
+            out.extend(st.scrub(policy)?);
+        }
+        Ok(out)
+    }
+
+    /// Repair every stage chip, concatenating the post-repair reports
+    /// in stage order.
+    fn repair(&mut self, policy: &ScrubPolicy) -> Result<Vec<HealthReport>> {
+        let mut out = Vec::new();
+        for st in &mut self.stages {
+            out.extend(st.repair(policy)?);
+        }
+        Ok(out)
+    }
+
+    /// True iff every stage chip passes its golden-slice probes.
+    fn verify_golden(&mut self, probes: usize, seed: u64) -> Result<bool> {
+        for st in &mut self.stages {
+            if !st.verify_golden(probes, seed)? {
+                return Ok(false);
+            }
+        }
+        Ok(true)
+    }
+
+    /// Aggregated per-stage health: [`EngineError::Degraded`] as soon
+    /// as any stage reports itself out of rotation (a pipeline has no
+    /// spare — every stage is load-bearing).
+    fn health(&self) -> Result<()> {
+        let total = self.stages.len();
+        let active = self.stages.iter().filter(|s| s.health().is_ok()).count();
+        if active < total {
+            return Err(EngineError::Degraded { active, total });
+        }
+        Ok(())
+    }
+
+    /// Attach the tracer to the whole pipeline: every stage chip opens
+    /// its own "chip" ring, each stage boundary gets a "pipeline" ring
+    /// for stream/handoff spans (written only by that stage's worker
+    /// thread), and the coordinator keeps one more for batch spans.
+    fn set_tracer(&mut self, tracer: Option<Tracer>) {
+        for st in &mut self.stages {
+            st.set_tracer(tracer.clone());
+        }
+        self.sink = tracer.as_ref().map(|t| t.sink("pipeline"));
+        self.stage_sinks = match &tracer {
+            Some(t) => (0..self.stages.len()).map(|_| Some(t.sink("pipeline"))).collect(),
+            None => vec![None; self.stages.len()],
+        };
+        self.tracer = tracer;
+    }
+
+    fn trace(&self) -> Option<Tracer> {
+        self.tracer.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::{synthetic_cnn, synthetic_qmodel};
+    use crate::nmcu::layout_codes;
+    use crate::util::rng::Rng;
+
+    fn cfg() -> ChipConfig {
+        ChipConfig::new()
+    }
+
+    #[test]
+    fn layer_rows_matches_layout_codes() {
+        let c = cfg();
+        let p = Partitioner::new(&c);
+        let mut r = Rng::new(7);
+        let cnn = synthetic_cnn(
+            &mut r,
+            "rows",
+            crate::artifacts::Shape { c: 1, h: 8, w: 8 },
+            &[4, 8],
+            4,
+        );
+        for l in &cnn.layers {
+            let want = match l.op {
+                QOp::MaxPool2d { .. } => 0,
+                _ => layout_codes(&l.codes, l.k, l.n, c.nmcu.lanes_per_pe)
+                    .len()
+                    .div_ceil(c.eflash.cells_per_read),
+            };
+            assert_eq!(p.layer_rows(l), want, "layer {}", l.name);
+        }
+    }
+
+    #[test]
+    fn pack_is_first_fit() {
+        let c = cfg();
+        let p = Partitioner::new(&c);
+        let mut r = Rng::new(3);
+        let m = synthetic_qmodel(&mut r, "ff", 256, 64, 10);
+        let rows: Vec<usize> = m.layers.iter().map(|l| p.layer_rows(l)).collect();
+        // everything fits the first stage
+        let one = p.pack(&m, &[rows.iter().sum::<usize>() + 1, 1000]).expect("fits");
+        assert_eq!(one, vec![0..2]);
+        // first stage holds exactly layer 0
+        let two = p.pack(&m, &[rows[0], rows[1]]).expect("snug fit");
+        assert_eq!(two, vec![0..1, 1..2]);
+    }
+
+    #[test]
+    fn pack_errors_are_typed() {
+        let c = cfg();
+        let p = Partitioner::new(&c);
+        let mut r = Rng::new(3);
+        let m = synthetic_qmodel(&mut r, "big", 256, 64, 10);
+        let rows: Vec<usize> = m.layers.iter().map(|l| p.layer_rows(l)).collect();
+        match p.pack(&m, &[rows[0] - 1; 2]) {
+            Err(PartitionError::LayerTooLarge { rows_needed, stage_rows, .. }) => {
+                assert_eq!(rows_needed, rows[0]);
+                assert_eq!(stage_rows, rows[0] - 1);
+            }
+            other => panic!("expected LayerTooLarge, got {other:?}"),
+        }
+        match p.pack(&m, &[rows[0]]) {
+            Err(PartitionError::OutOfCapacity { requested_rows, rows_free, .. }) => {
+                assert_eq!(requested_rows, rows.iter().sum::<usize>());
+                assert_eq!(rows_free, rows[0]);
+            }
+            other => panic!("expected OutOfCapacity, got {other:?}"),
+        }
+        // the EngineError conversions the Backend contract relies on
+        let e: EngineError = PartitionError::OutOfCapacity {
+            requested_rows: 9,
+            rows_free: 1,
+            model: "m".into(),
+        }
+        .into();
+        assert!(matches!(e, EngineError::CapacityExhausted { requested_rows: 9, .. }));
+    }
+
+    #[test]
+    fn split_covers_every_cut_count() {
+        let c = cfg();
+        let p = Partitioner::new(&c);
+        let mut r = Rng::new(11);
+        let cnn = synthetic_cnn(
+            &mut r,
+            "sweep",
+            crate::artifacts::Shape { c: 1, h: 8, w: 8 },
+            &[4, 8],
+            4,
+        );
+        let n = cnn.layers.len();
+        let budgets = vec![crate::eflash::EflashMacro::new(&c).rows_free(); n];
+        for stages in 1..=n {
+            let slices = p.split(&cnn, stages, &budgets).expect("feasible");
+            assert_eq!(slices.len(), stages);
+            assert!(slices.iter().all(|s| !s.is_empty()));
+            assert_eq!(slices.first().map(|s| s.start), Some(0));
+            assert_eq!(slices.last().map(|s| s.end), Some(n));
+            for w in slices.windows(2) {
+                assert_eq!(w[0].end, w[1].start, "slices must be contiguous");
+            }
+        }
+        assert!(matches!(
+            p.split(&cnn, n + 1, &budgets),
+            Err(PartitionError::TooManyStages { .. })
+        ));
+    }
+}

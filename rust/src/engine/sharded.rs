@@ -7,6 +7,9 @@
 //! is the repo's throughput-scaling primitive: the paper's chip is a
 //! single fixed-function device, and a rack of them serves traffic
 //! exactly like this — replicate the weights, fan out the requests.
+//! (The *capacity*-scaling counterpart — one model split across chips
+//! because its weights exceed one EFLASH macro — is
+//! [`super::PipelinedEngine`].)
 //!
 //! ## Self-healing
 //!

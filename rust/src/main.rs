@@ -12,12 +12,12 @@
 //!               gates (--quick, --workload <w>, --hours <h>,
 //!               --temp <c>, --calib <n>, --samples <n>)
 //!   infer       serve MNIST inferences through the engine API
-//!               (--backend nmcu|mcu|reference|hlo, --batch <n>,
-//!                --shards <n>, --index <i>)
+//!               (--backend nmcu|mcu|reference|hlo|pipeline,
+//!                --batch <n>, --shards <n>, --stages <n>, --index <i>)
 //!   serve       open-loop workload through the dynamic-batching
-//!               InferenceServer (--backend, --shards, --requests <n>,
-//!               --rate <req/s>, --max-batch, --max-wait-us,
-//!               --queue-depth)
+//!               InferenceServer (--backend, --shards, --stages,
+//!               --requests <n>, --rate <req/s>, --max-batch,
+//!               --max-wait-us, --queue-depth)
 //!   bench-serve compare batch=1 vs coalesced vs coalesced+sharded
 //!               scheduling on the same burst workload
 //!   bench-conv  int4 Conv2D workload vs a MAC-matched dense MLP,
@@ -34,12 +34,19 @@
 //!               asserts every served output stayed bit-exact
 //!               (--shards <n>, --requests <n>, --rounds <n>,
 //!               --severity <x>, --scrub-every <n>, --quick)
+//!   bench-pipeline
+//!               pipeline-parallel partitioned serving: one model's
+//!               layer chain split across stage chips, streamed with
+//!               overlapped execution — single chip vs every feasible
+//!               stage count, bit-exactness asserted, handoff traffic
+//!               and the merged-bus identity checked
+//!               (--requests <n>, --quick)
 //!   bench-report
 //!               run the perf-report suite in-process and write one
 //!               machine-readable `BENCH_<name>.json` per bench family
 //!               (hotpath, conv, mcu, serving, reliability, trace,
-//!               eval) with timings, derived metrics, seed and git
-//!               revision
+//!               pipeline, eval) with timings, derived metrics, seed
+//!               and git revision
 //!               (--out-dir <dir>, --quick, --seed <n>)
 //!   bench-eval  run the eval harness and write `BENCH_eval.json`
 //!               accuracy metrics (error rates, lower is better) for
@@ -72,7 +79,8 @@ use nvmcu::datasets::labeled::{labeled_kws_like, labeled_mnist_like, LabeledSet}
 use nvmcu::eflash::mapping::StateMapping;
 use nvmcu::engine::{
     Backend, BackendKind, BatchPolicy, Engine, Fault, FaultPlan, InferenceServer, McuBackend,
-    NmcuBackend, QuarantinePolicy, ReferenceBackend, ScrubPolicy, ShardedEngine,
+    NmcuBackend, PipelinedEngine, QuarantinePolicy, ReferenceBackend, ScrubPolicy,
+    ShardedEngine,
 };
 use nvmcu::metrics;
 use nvmcu::metrics::{BenchReport, ServerStats};
@@ -146,6 +154,7 @@ fn main() {
         "bench-conv" => cmd_bench_conv(&args),
         "bench-mcu" => cmd_bench_mcu(&args),
         "bench-reliability" => cmd_bench_reliability(&args),
+        "bench-pipeline" => cmd_bench_pipeline(&args),
         "bench-report" => cmd_bench_report(&args),
         "bench-eval" => cmd_bench_eval(&args),
         "bench-compare" => cmd_bench_compare(&args),
@@ -156,21 +165,23 @@ fn main() {
             println!(
                 "nvmcu — 28nm AI microcontroller with 4-bits/cell EFLASH (reproduction)\n\
                  usage: nvmcu <table1|table2|fig5|fig6|eval|infer|serve|bench-serve|bench-conv\
-                 |bench-mcu|bench-reliability|bench-report|bench-eval|bench-compare|pump\
-                 |retention|info> [options]\n\
+                 |bench-mcu|bench-reliability|bench-pipeline|bench-report|bench-eval\
+                 |bench-compare|pump|retention|info> [options]\n\
                  options: --config <json> --set k=v[,k=v] --artifacts <dir> --seed <n>\n\
                  \x20        --trace-out <file> (infer/serve/bench-*: write a Chrome trace\n\
                  \x20        + attribution rollup)\n\
                  eval:    --quick --workload mnist-like|kws-like --hours <h> --temp <c>\n\
                  \x20        --calib <n> --samples <n>\n\
-                 infer:   --backend nmcu|mcu|reference|hlo --batch <n> --shards <n> --index <i>\n\
-                 serve:   --backend --shards --requests <n> --rate <req/s> --max-batch <n>\n\
-                 \x20        --max-wait-us <us> --queue-depth <n>\n\
+                 infer:   --backend nmcu|mcu|reference|hlo|pipeline --batch <n> --shards <n>\n\
+                 \x20        --stages <n> --index <i>\n\
+                 serve:   --backend --shards --stages --requests <n> --rate <req/s>\n\
+                 \x20        --max-batch <n> --max-wait-us <us> --queue-depth <n>\n\
                  bench-serve: --requests <n> --shards <n> --max-batch <n>\n\
                  bench-conv:  --requests <n> --shards <n> --quick\n\
                  bench-mcu:   --requests <n> --quick\n\
                  bench-reliability: --shards <n> --requests <n> --rounds <n> --severity <x>\n\
                  \x20        --scrub-every <n> --quick\n\
+                 bench-pipeline: --requests <n> --quick\n\
                  bench-report:  --out-dir <dir> --quick --seed <n>\n\
                  bench-eval:    --out-dir <dir> --quick --seed <n>\n\
                  bench-compare: --baseline <dir> --current <dir> --threshold <pct> --enforce"
@@ -396,10 +407,11 @@ fn cmd_eval(args: &Args) {
 
 /// Serve MNIST inferences through the unified engine API.
 ///
-///   --backend nmcu|reference|hlo   inference substrate (default nmcu)
-///   --shards <n>                   fan batches across n chips (nmcu only)
-///   --batch <n>                    batch size (default 1)
-///   --index <i>                    first test-set index (default 0)
+///   --backend nmcu|mcu|reference|hlo|pipeline   substrate (default nmcu)
+///   --shards <n>    fan batches across n chips (nmcu/mcu only)
+///   --stages <n>    pipeline depth (`--backend pipeline`, default 2)
+///   --batch <n>     batch size (default 1)
+///   --index <i>     first test-set index (default 0)
 fn cmd_infer(args: &Args) {
     let cfg = chip_config(args);
     let dir = art_dir(args);
@@ -417,7 +429,14 @@ fn cmd_infer(args: &Args) {
 
     let kind: BackendKind =
         args.opt_or("backend", "nmcu").parse().unwrap_or_else(|e| fail(e));
-    let mut engine = if shards > 1 {
+    let mut engine = if kind == BackendKind::Pipeline {
+        if shards > 1 {
+            eprintln!("error: --backend pipeline takes --stages, not --shards");
+            std::process::exit(1);
+        }
+        let stages = args.opt_usize("stages", 2).max(1);
+        Engine::pipelined(&cfg, stages).unwrap_or_else(|e| fail(e))
+    } else if shards > 1 {
         match kind {
             BackendKind::Nmcu => Engine::sharded(&cfg, shards).unwrap_or_else(|e| fail(e)),
             BackendKind::Mcu => Engine::sharded_mcu(&cfg, shards).unwrap_or_else(|e| fail(e)),
@@ -509,8 +528,9 @@ fn serve_policy(args: &Args) -> BatchPolicy {
 /// Drive an open-loop Poisson-ish workload through the dynamic-batching
 /// [`InferenceServer`].
 ///
-///   --backend nmcu|reference|hlo   substrate (default nmcu)
-///   --shards <n>                   replicate the chip n ways (nmcu only)
+///   --backend nmcu|mcu|reference|hlo|pipeline   substrate (default nmcu)
+///   --shards <n>                   replicate the chip n ways (nmcu/mcu)
+///   --stages <n>                   pipeline depth (pipeline, default 2)
 ///   --requests <n>                 workload size (default 512)
 ///   --rate <req/s>                 mean Poisson arrival rate (default
 ///                                  2000; 0 = instantaneous burst)
@@ -550,7 +570,14 @@ fn cmd_serve(args: &Args) {
         }
     };
 
-    let mut engine = if shards > 1 {
+    let mut engine = if kind == BackendKind::Pipeline {
+        if shards > 1 {
+            eprintln!("error: --backend pipeline takes --stages, not --shards");
+            std::process::exit(1);
+        }
+        let stages = args.opt_usize("stages", 2).max(1);
+        Engine::pipelined(&cfg, stages).unwrap_or_else(|e| fail(e))
+    } else if shards > 1 {
         match kind {
             BackendKind::Nmcu => Engine::sharded(&cfg, shards).unwrap_or_else(|e| fail(e)),
             BackendKind::Mcu => Engine::sharded_mcu(&cfg, shards).unwrap_or_else(|e| fail(e)),
@@ -968,6 +995,122 @@ fn cmd_bench_reliability(args: &Args) {
     finish_trace(args, &tracer);
 }
 
+/// Pipeline-parallel partitioned serving: the KWS-shaped synthetic CNN
+/// streamed through every feasible stage count, each checked bit-exact
+/// against a single chip, with the merged-stats bus identity
+/// (`pipeline bus == single-chip bus + 2 * handoff bytes`) asserted per
+/// row. Also demos the capacity story: the same model on a chip too
+/// small to hold it fails typed, then serves through
+/// [`PipelinedEngine::for_model`] on stage chips of that same size.
+///
+///   --requests <n>   batch size streamed per trial (default 64)
+///   --quick          smaller batch — the CI smoke
+fn cmd_bench_pipeline(args: &Args) {
+    let cfg = chip_config(args);
+    let quick = args.flag("quick");
+    let n_req = args.opt_usize("requests", if quick { 16 } else { 64 });
+    let seed = seed_from_env(cfg.seed);
+    let mut r = Rng::new(seed);
+    let cnn = nvmcu::datasets::synthetic_kws_cnn(&mut r);
+    let pool = workload::random_inputs(&mut r, n_req, cnn.input_len());
+    let n_layers = cnn.layers.len();
+    println!(
+        "bench-pipeline: {n_req}-request stream, {} ({n_layers} layers), \
+         seed {seed} (replay with --seed {seed})\n",
+        cnn.name
+    );
+
+    let mut single = NmcuBackend::new(&cfg);
+    let hs = single.program(&cnn).expect("program (single chip)");
+    single.reset_stats();
+    let t0 = Instant::now();
+    let want = single.infer_batch(hs, &pool).expect("single-chip batch");
+    let wall_single = t0.elapsed();
+    let base = single.stats();
+
+    let tracer = trace_from_args(args, &cfg);
+    let mut t = Table::new(&[
+        "stages", "inf/s", "speedup", "handoffs", "handoff B", "bus overhead",
+    ]);
+    let base_rps = n_req as f64 / wall_single.as_secs_f64().max(1e-12);
+    t.row(&[
+        "1 (single chip)".into(),
+        format!("{base_rps:.0}"),
+        "1.00x".into(),
+        "0".into(),
+        "0".into(),
+        "-".into(),
+    ]);
+    for stages in 2..=n_layers {
+        let mut pipe = PipelinedEngine::new(&cfg, stages).expect("pipeline");
+        pipe.set_tracer(tracer.clone());
+        let h = pipe.program(&cnn).expect("program (pipeline)");
+        pipe.reset_stats();
+        let t1 = Instant::now();
+        let outs = pipe.infer_batch(h, &pool).expect("pipeline batch");
+        let wall = t1.elapsed();
+        assert_eq!(outs, want, "{stages}-stage pipeline diverged from the single chip");
+        let st = pipe.stats();
+        let ps = pipe.pipeline_stats();
+        assert_eq!(
+            (st.eflash_reads, st.mac_ops, st.writebacks, st.cycles, st.layers_run),
+            (base.eflash_reads, base.mac_ops, base.writebacks, base.cycles, base.layers_run),
+            "non-bus counters must merge exactly"
+        );
+        assert_eq!(
+            st.bus_bytes,
+            base.bus_bytes + 2 * ps.handoff_bytes,
+            "bus identity violated at {stages} stages"
+        );
+        let rps = n_req as f64 / wall.as_secs_f64().max(1e-12);
+        t.row(&[
+            format!("{stages}"),
+            format!("{rps:.0}"),
+            format!("{:.2}x", rps / base_rps),
+            format!("{}", ps.handoffs),
+            format!("{}", ps.handoff_bytes),
+            format!("+{:.1}%", 100.0 * (st.bus_bytes as f64 / base.bus_bytes as f64 - 1.0)),
+        ]);
+        if stages == 2 {
+            println!("2-stage pipeline: {}", ps.summary());
+        }
+    }
+    t.print();
+    println!("\nall stage counts bit-exact vs the single chip; bus identity held");
+
+    // capacity story: shrink the macro until the model no longer fits
+    // one chip, then serve it across two chips of that same size
+    let p = nvmcu::engine::Partitioner::new(&cfg);
+    let need_rows = p.model_rows(&cnn);
+    let max_layer = cnn.layers.iter().map(|l| p.layer_rows(l)).max().unwrap_or(1);
+    let mut small = cfg.clone();
+    // the smallest bank-aligned macro that still holds the largest
+    // single layer (contiguous-slice partitioning cannot split a layer)
+    let rows_goal = max_layer.div_ceil(small.eflash.banks) * small.eflash.banks;
+    assert!(rows_goal < need_rows, "demo premise: the whole model must not fit one chip");
+    small.eflash.capacity_bits =
+        rows_goal * small.eflash.cells_per_read * small.eflash.bits_per_cell as usize;
+    let mut one = NmcuBackend::new(&small);
+    match one.program(&cnn) {
+        Err(nvmcu::engine::EngineError::CapacityExhausted { requested_rows, rows_free, .. }) => {
+            println!(
+                "\noversized demo: one shrunken chip refuses ({requested_rows} rows \
+                 wanted, {rows_free} free)"
+            );
+        }
+        other => panic!("expected CapacityExhausted on the shrunken chip, got {other:?}"),
+    }
+    let (mut rescue, hr) =
+        PipelinedEngine::for_model(&small, &cnn).expect("pipeline over shrunken chips");
+    let outs = rescue.infer_batch(hr, &pool).expect("rescued batch");
+    assert_eq!(outs, want, "the rescued pipeline diverged");
+    println!(
+        "same model serves across {} shrunken chips, still bit-exact",
+        rescue.n_stages()
+    );
+    finish_trace(args, &tracer);
+}
+
 /// One `BENCH_hotpath.json`: the MAC kernel and the end-to-end
 /// MNIST-shaped inference, with the deterministic cycle-model metrics
 /// (`cycles_per_inference`, `eflash_reads_per_inference`) that the
@@ -1143,6 +1286,53 @@ fn report_trace(cfg: &ChipConfig, seed: u64, tgt: Duration) -> BenchReport {
     rep
 }
 
+/// One `BENCH_pipeline.json`: the quick synthetic CNN streamed through
+/// a 2-stage pipeline, with bit-exactness vs a single chip asserted
+/// before timing and the deterministic handoff-traffic metrics the
+/// baseline can pin exactly.
+fn report_pipeline(cfg: &ChipConfig, seed: u64, tgt: Duration) -> BenchReport {
+    let mut rep = BenchReport::new("pipeline", seed);
+    let mut r = Rng::new(seed);
+    let cnn = nvmcu::datasets::synthetic_cnn(
+        &mut r,
+        "pipe-quick",
+        nvmcu::artifacts::Shape { c: 1, h: 8, w: 8 },
+        &[4, 8],
+        4,
+    );
+    let pool = workload::random_inputs(&mut r, 8, cnn.input_len());
+    let n = pool.len() as f64;
+    let mut single = NmcuBackend::new(cfg);
+    let hs = single.program(&cnn).expect("program (single chip)");
+    single.reset_stats();
+    let want = single.infer_batch(hs, &pool).expect("single-chip batch");
+    let base = single.stats();
+    let mut pipe = PipelinedEngine::new(cfg, 2).expect("pipeline");
+    let hp = pipe.program(&cnn).expect("program (pipeline)");
+    pipe.reset_stats();
+    let outs = pipe.infer_batch(hp, &pool).expect("pipeline batch");
+    assert_eq!(outs, want, "pipeline must be bit-exact before timing");
+    let st = pipe.stats();
+    let ps = pipe.pipeline_stats();
+    assert_eq!(
+        st.bus_bytes,
+        base.bus_bytes + 2 * ps.handoff_bytes,
+        "bus identity must hold before timing"
+    );
+    let t = bench("pipeline infer_batch 8 (2 stages)", tgt, || {
+        std::hint::black_box(pipe.infer_batch(hp, &pool).expect("pipeline batch"));
+    });
+    rep.push_timing(
+        &t,
+        &[
+            ("inf_per_s", t.throughput(n)),
+            ("handoff_bytes_per_inference", ps.handoff_bytes as f64 / n),
+            ("bus_bytes_per_inference", st.bus_bytes as f64 / n),
+        ],
+    );
+    rep
+}
+
 /// One `BENCH_eval.json`: the eval harness's accuracy metrics as
 /// error-style series (lower is better, matching the comparator's
 /// default direction; the agreement and retention gates also live here
@@ -1222,6 +1412,7 @@ fn cmd_bench_report(args: &Args) {
         report_serving(&cfg, seed),
         report_reliability(&cfg, seed, tgt),
         report_trace(&cfg, seed, tgt),
+        report_pipeline(&cfg, seed, tgt),
         report_eval(&cfg, seed, quick),
     ];
     println!();

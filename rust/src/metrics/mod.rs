@@ -14,10 +14,12 @@
 //! over the bus).
 
 pub mod bench_report;
+pub mod pipeline;
 pub mod reliability;
 pub mod serving;
 
 pub use bench_report::{BenchReport, BenchResult, Comparison};
+pub use pipeline::{PipelineMeter, PipelineStats};
 pub use reliability::{ReliabilityMeter, ReliabilityStats};
 pub use serving::{ServerStats, ServingMeter};
 

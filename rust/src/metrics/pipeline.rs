@@ -1,0 +1,139 @@
+//! Pipeline-parallel serving observability: what crossed the stage
+//! boundaries.
+//!
+//! [`PipelineMeter`] is the accumulator a
+//! [`PipelinedEngine`](crate::engine::PipelinedEngine) writes into (one
+//! entry per inter-stage activation handoff); [`PipelineStats`] is the
+//! immutable snapshot handed to callers. The headline counter is
+//! `handoff_bytes`: the activation bytes that crossed a stage boundary.
+//! Each handoff is paid **twice** in the merged
+//! [`NmcuStats`](crate::nmcu::NmcuStats) bus accounting — once as the
+//! producing chip's `dma_out`, once as the consuming chip's `dma_in` —
+//! so the exactness identity a pipeline upholds against a single chip
+//! serving the same model is
+//!
+//! ```text
+//! pipeline.stats().bus_bytes == single_chip.bus_bytes + 2 * handoff_bytes
+//! ```
+//!
+//! with every other counter (reads, MACs, cycles, write-backs, layers)
+//! equal outright. The 25-seed cross-partition property in
+//! `rust/tests/test_properties.rs` pins this identity at every cut
+//! count.
+//!
+//! All counters saturate: a soak run must degrade its statistics before
+//! it degrades the process.
+
+/// Accumulator for pipeline handoff events (see the [module docs](self)).
+#[derive(Clone, Debug, Default)]
+pub struct PipelineMeter {
+    batches: u64,
+    samples: u64,
+    handoffs: u64,
+    handoff_bytes: u64,
+}
+
+impl PipelineMeter {
+    /// An empty meter.
+    pub fn new() -> PipelineMeter {
+        PipelineMeter::default()
+    }
+
+    /// Record one batch entering the pipeline (`n` samples).
+    pub fn note_batch(&mut self, n: usize) {
+        self.batches = self.batches.saturating_add(1);
+        self.samples = self.samples.saturating_add(n as u64);
+    }
+
+    /// Record inter-stage traffic: `handoffs` activation transfers
+    /// totalling `bytes` int8 elements crossed a stage boundary.
+    pub fn note_handoffs(&mut self, handoffs: u64, bytes: u64) {
+        self.handoffs = self.handoffs.saturating_add(handoffs);
+        self.handoff_bytes = self.handoff_bytes.saturating_add(bytes);
+    }
+
+    /// Zero every counter (paired with `Backend::reset_stats`).
+    pub fn reset(&mut self) {
+        *self = PipelineMeter::default();
+    }
+
+    /// Freeze a snapshot.
+    pub fn snapshot(&self) -> PipelineStats {
+        PipelineStats {
+            batches: self.batches,
+            samples: self.samples,
+            handoffs: self.handoffs,
+            handoff_bytes: self.handoff_bytes,
+        }
+    }
+}
+
+/// Point-in-time snapshot of a pipeline's inter-stage traffic.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PipelineStats {
+    /// batches streamed through the pipeline
+    pub batches: u64,
+    /// samples streamed through the pipeline
+    pub samples: u64,
+    /// inter-stage activation transfers (one per sample per boundary)
+    pub handoffs: u64,
+    /// int8 elements that crossed a stage boundary (each is counted
+    /// twice in the merged `NmcuStats` bus bytes: producer `dma_out` +
+    /// consumer `dma_in`)
+    pub handoff_bytes: u64,
+}
+
+impl PipelineStats {
+    /// Mean activation bytes per handoff (`NaN` before the first one).
+    pub fn mean_handoff_bytes(&self) -> f64 {
+        if self.handoffs == 0 {
+            f64::NAN
+        } else {
+            self.handoff_bytes as f64 / self.handoffs as f64
+        }
+    }
+
+    /// One-line human summary (the CLI bench mode prints this).
+    pub fn summary(&self) -> String {
+        format!(
+            "batches {} ({} samples) | handoffs {} ({} bytes, {:.1} B/handoff)",
+            self.batches,
+            self.samples,
+            self.handoffs,
+            self.handoff_bytes,
+            self.mean_handoff_bytes(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meter_counts_and_summary() {
+        let mut m = PipelineMeter::new();
+        m.note_batch(8);
+        m.note_handoffs(16, 640);
+        m.note_batch(4);
+        m.note_handoffs(8, 320);
+        let s = m.snapshot();
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.samples, 12);
+        assert_eq!(s.handoffs, 24);
+        assert_eq!(s.handoff_bytes, 960);
+        assert!((s.mean_handoff_bytes() - 40.0).abs() < 1e-12);
+        let line = s.summary();
+        assert!(line.contains("handoffs 24") && line.contains("960 bytes"), "{line}");
+        m.reset();
+        assert_eq!(m.snapshot(), PipelineStats::default());
+    }
+
+    #[test]
+    fn empty_meter_is_sane() {
+        let s = PipelineMeter::new().snapshot();
+        assert_eq!(s.handoffs, 0);
+        assert!(s.mean_handoff_bytes().is_nan());
+        assert!(s.summary().contains("batches 0"));
+    }
+}

@@ -8,8 +8,8 @@ use nvmcu::artifacts::{QLayer, QModel, QOp};
 use nvmcu::config::ChipConfig;
 use nvmcu::coordinator::Chip;
 use nvmcu::engine::{
-    Backend, BackendKind, Engine, EngineError, ModelHandle, NmcuBackend, ReferenceBackend,
-    ShardedEngine,
+    Backend, BackendKind, Engine, EngineError, ModelHandle, NmcuBackend, PipelinedEngine,
+    ReferenceBackend, ShardedEngine,
 };
 use nvmcu::nmcu::Requant;
 use nvmcu::util::prop_check;
@@ -262,6 +262,100 @@ fn sharded_engine_merges_stats_and_validates_config() {
     assert!(matches!(err, EngineError::InvalidConfig { .. }), "{err:?}");
 }
 
+/// THE oversized-model acceptance path: a model whose layers each fit
+/// one chip but whose total does not (1) fails on a single chip with a
+/// typed `CapacityExhausted` that claims NOTHING — the allocator
+/// watermark is untouched and the chip still takes a model that fits —
+/// and then (2) serves bit-exact through a 2-stage pipeline of chips of
+/// the SAME size, with the merged non-bus counters equal to a chip big
+/// enough to hold the whole model.
+#[test]
+fn oversized_model_fails_typed_then_serves_via_pipeline() {
+    let mut cfg = small_cfg();
+    cfg.eflash.capacity_bits = 8 * 1024; // 2K cells = 8 rows only
+    let mut r = Rng::new(77);
+    // 6 rows (fc1) + 3 rows (fc2) = 9 rows: neither layer alone
+    // overflows the 8-row macro, the chain does
+    let model = rand_model(&mut r, "spanning", 96, 16, 40);
+    let xs: Vec<Vec<i8>> = (0..7).map(|_| rand_input(&mut r, 96)).collect();
+
+    // (1) single chip: typed refusal, nothing partially claimed
+    let mut one = NmcuBackend::new(&cfg);
+    let mark_before = one.chip().eflash.alloc_mark();
+    let free_before = one.chip().eflash.rows_free();
+    match one.program(&model).unwrap_err() {
+        EngineError::CapacityExhausted { requested_rows, rows_free, what } => {
+            assert!(requested_rows > rows_free, "{requested_rows} vs {rows_free}");
+            assert!(what.contains("spanning"), "{what}");
+        }
+        other => panic!("expected CapacityExhausted, got {other:?}"),
+    }
+    assert_eq!(one.chip().eflash.alloc_mark(), mark_before, "failed program claimed rows");
+    assert_eq!(one.chip().eflash.rows_free(), free_before);
+    // the refusal is not sticky: a model that fits still programs
+    let small = rand_model(&mut r, "still_fits", 20, 4, 2);
+    assert!(one.program(&small).is_ok());
+
+    // (2) a 2-stage pipeline of SAME-size chips serves it bit-exact
+    let mut oracle = ReferenceBackend::new();
+    let ho = oracle.program(&model).unwrap();
+    let want: Vec<Vec<i8>> = xs.iter().map(|x| oracle.infer(ho, x).unwrap()).collect();
+
+    let mut pipe = PipelinedEngine::new(&cfg, 2).unwrap();
+    let hp = pipe.program(&model).unwrap();
+    assert_eq!(pipe.stages_of(hp).unwrap(), vec![0, 1], "the model must span both stages");
+    pipe.reset_stats();
+    assert_eq!(pipe.infer_batch(hp, &xs).unwrap(), want, "pipelined outputs diverged");
+
+    // the merged device work equals one chip big enough for the chain
+    // (the counters are geometry-driven; capacity never changes them)
+    let mut big = NmcuBackend::new(&small_cfg());
+    let hb = big.program(&model).unwrap();
+    big.reset_stats();
+    assert_eq!(big.infer_batch(hb, &xs).unwrap(), want);
+    let (st, base) = (pipe.stats(), big.stats());
+    assert_eq!(
+        (st.eflash_reads, st.mac_ops, st.writebacks, st.cycles, st.layers_run),
+        (base.eflash_reads, base.mac_ops, base.writebacks, base.cycles, base.layers_run),
+        "non-bus counters must merge exactly"
+    );
+    let ps = pipe.pipeline_stats();
+    assert_eq!(st.bus_bytes, base.bus_bytes + 2 * ps.handoff_bytes, "bus identity");
+    assert_eq!(ps.handoffs, xs.len() as u64, "one boundary crossing per sample");
+
+    // the capacity-driven constructor lands on the same stage count
+    let (auto, ha) = PipelinedEngine::for_model(&cfg, &model).unwrap();
+    assert_eq!(auto.n_stages(), 2, "first-fit packing needs exactly two 8-row chips");
+    assert_eq!(auto.stages_of(ha).unwrap(), vec![0, 1]);
+}
+
+/// A single layer wider than one whole macro can never be served by
+/// adding stages — the partitioner says so with a typed error instead
+/// of thrashing through ISPP.
+#[test]
+fn pipeline_rejects_single_layer_larger_than_one_chip() {
+    let mut cfg = small_cfg();
+    cfg.eflash.capacity_bits = 8 * 1024; // 8 rows
+    let mut r = Rng::new(78);
+    let model = rand_model(&mut r, "monolith", 200, 16, 8); // fc1 alone: 13 rows
+    for stages in [1usize, 2, 4] {
+        let mut pipe = PipelinedEngine::new(&cfg, stages).unwrap();
+        let err = pipe.program(&model).unwrap_err();
+        if stages == 1 {
+            // one stage = one chip: the whole chain simply does not fit
+            assert!(matches!(err, EngineError::CapacityExhausted { .. }), "{err:?}");
+        } else {
+            // with stages to spare the diagnosis is sharper: the single
+            // 13-row layer can never fit an 8-row stage (LayerTooLarge)
+            assert!(matches!(err, EngineError::BadDescriptor { .. }), "{err:?}");
+        }
+        // nothing claimed on any stage
+        for s in 0..pipe.n_stages() {
+            assert_eq!(pipe.stage(s).chip().eflash.alloc_mark(), 0, "stage {s} leaked rows");
+        }
+    }
+}
+
 #[cfg(not(feature = "pjrt"))]
 #[test]
 fn hlo_backend_unavailable_without_pjrt_feature() {
@@ -283,5 +377,7 @@ fn backend_kind_parses() {
     assert_eq!("firmware".parse::<BackendKind>().unwrap(), BackendKind::Mcu);
     assert_eq!("reference".parse::<BackendKind>().unwrap(), BackendKind::Reference);
     assert_eq!("hlo".parse::<BackendKind>().unwrap(), BackendKind::Hlo);
+    assert_eq!("pipeline".parse::<BackendKind>().unwrap(), BackendKind::Pipeline);
+    assert_eq!("pipelined".parse::<BackendKind>().unwrap(), BackendKind::Pipeline);
     assert!("gpu".parse::<BackendKind>().is_err());
 }

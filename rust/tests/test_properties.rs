@@ -12,11 +12,12 @@ use nvmcu::artifacts::{QLayer, QModel, Shape};
 use nvmcu::config::ChipConfig;
 use nvmcu::datasets::{conv_layer, dense_layer, synthetic_qmodel};
 use nvmcu::engine::{
-    Backend, BatchPolicy, InferenceServer, McuBackend, NmcuBackend, ReferenceBackend,
-    ShardedEngine,
+    Backend, BatchPolicy, InferenceServer, McuBackend, NmcuBackend, PipelinedEngine,
+    ReferenceBackend, ShardedEngine,
 };
 use nvmcu::metrics::nmcu_energy;
 use nvmcu::nmcu::NmcuStats;
+use nvmcu::quantize::{quantize, FloatModel};
 use nvmcu::trace::Tracer;
 use nvmcu::util::prop_check;
 use nvmcu::util::rng::{seed_from_env, Rng};
@@ -388,6 +389,148 @@ fn eflash_roundtrips_all_16_states_exactly_at_zero_drift() {
         assert_eq!(e.exact, e.total, "non-exact decode at zero drift: {e:?}");
         assert_eq!(e.total, n as u64);
         assert_eq!(e.sum_abs_lsb, 0);
+    });
+}
+
+fn gaussian(r: &mut Rng, n: usize, sigma: f64) -> Vec<f32> {
+    (0..n).map(|_| r.normal(0.0, sigma) as f32).collect()
+}
+
+/// A random PTQ artifact: a small float MLP or conv/pool/dense CNN
+/// pushed through the post-training quantizer on a unit-interval
+/// calibration batch — so the partition sweep also rides real
+/// quantizer-produced requant/zero-point metadata, not just the
+/// synthetic generators.
+fn rand_ptq_model(r: &mut Rng) -> QModel {
+    let fm = if r.chance(0.5) {
+        let k = 8 + r.below(24) as usize;
+        let hidden = 4 + r.below(12) as usize;
+        let classes = 2 + r.below(7) as usize;
+        let s1 = 1.0 / (k as f64).sqrt();
+        let s2 = 1.0 / (hidden as f64).sqrt();
+        FloatModel::new("pipe-ptq-mlp", Shape::vec(k))
+            .dense("fc1", hidden, true, gaussian(r, k * hidden, s1), gaussian(r, hidden, s1))
+            .expect("mlp geometry")
+            .dense("fc2", classes, false, gaussian(r, hidden * classes, s2), vec![0.0; classes])
+            .expect("mlp head geometry")
+    } else {
+        let shape = Shape { c: 1, h: 6 + r.below(4) as usize, w: 6 + r.below(4) as usize };
+        let filters = 2 + r.below(3) as usize;
+        let classes = 2 + r.below(6) as usize;
+        let wc = gaussian(r, 9 * filters, 0.3);
+        let embed = FloatModel::new("pipe-ptq-cnn", shape)
+            .conv2d("conv", filters, 3, 3, 1, 1, true, wc, vec![0.0; filters])
+            .expect("conv geometry")
+            .maxpool("pool", 2, 2, 2)
+            .expect("pool geometry");
+        let feat = embed.output_len().expect("pooled feature length");
+        let s2 = 1.0 / (feat as f64).sqrt();
+        embed
+            .dense("head", classes, false, gaussian(r, feat * classes, s2), vec![0.0; classes])
+            .expect("cnn head geometry")
+    };
+    let d = fm.input_len();
+    let calib: Vec<Vec<f32>> =
+        (0..8).map(|_| (0..d).map(|_| r.uniform(0.0, 1.0) as f32).collect()).collect();
+    quantize(&fm, &calib).expect("PTQ")
+}
+
+/// THE cross-partition acceptance property (25 seeds): random dense
+/// MLPs, conv/pool CNNs, and PTQ artifacts stream through a
+/// [`PipelinedEngine`] at EVERY feasible cut count (1..=n_layers) with
+/// outputs bit-identical to the single-chip reference, the merged
+/// non-bus [`NmcuStats`] counters EXACTLY equal (partitioning moves
+/// work between chips, it never changes the work), the bus identity
+/// `pipeline bus == single-chip bus + 2 * handoff bytes` holding to
+/// the byte — and a traced pipeline reproducing the plain pipeline's
+/// outputs and counters with an attribution rollup that matches them.
+#[test]
+fn pipeline_bit_exact_at_every_cut_count_25_seeds() {
+    prop_check(25, |r| {
+        let cfg = small_cfg();
+        // three workload families ride the partitioner
+        let model = match r.below(3) {
+            0 => {
+                let k = 1 + r.below(200) as usize;
+                let h = 1 + r.below(16) as usize;
+                let c = 1 + r.below(8) as usize;
+                synthetic_qmodel(r, "pipe-mlp", k, h, c)
+            }
+            1 => rand_cnn(r, true),
+            _ => rand_ptq_model(r),
+        };
+        model.validate().expect("generator emits valid models");
+        let k = model.input_len();
+        let n_layers = model.layers.len();
+        let batch = 1 + r.below(4) as usize;
+        let xs: Vec<Vec<i8>> = (0..batch).map(|_| rand_input(r, k)).collect();
+
+        // the single-chip reference: same call sequence (per-sample
+        // infers, then one batch), outputs AND stats to reproduce
+        let mut chip = NmcuBackend::new(&cfg);
+        let hc = chip.program(&model).expect("chip program");
+        chip.reset_stats();
+        let mut want: Vec<Vec<i8>> =
+            xs.iter().map(|x| chip.infer(hc, x).expect("chip infer")).collect();
+        want.extend(chip.infer_batch(hc, &xs).expect("chip batch"));
+        let base = chip.stats();
+
+        for stages in 1..=n_layers {
+            // plain pipeline at this cut count
+            let mut pipe = PipelinedEngine::new(&cfg, stages).expect("pipeline");
+            let h = pipe.program(&model).expect("pipeline program");
+            assert_eq!(
+                pipe.stages_of(h).expect("resident").len(),
+                stages,
+                "the model must span every stage it was cut for"
+            );
+            pipe.reset_stats();
+            let mut got: Vec<Vec<i8>> =
+                xs.iter().map(|x| pipe.infer(h, x).expect("pipeline infer")).collect();
+            got.extend(pipe.infer_batch(h, &xs).expect("pipeline batch"));
+            assert_eq!(got, want, "outputs diverged at {stages} stages");
+
+            let st = pipe.stats();
+            assert_eq!(
+                (st.eflash_reads, st.mac_ops, st.writebacks, st.cycles, st.layers_run),
+                (base.eflash_reads, base.mac_ops, base.writebacks, base.cycles, base.layers_run),
+                "non-bus counters diverged at {stages} stages"
+            );
+            let ps = pipe.pipeline_stats();
+            assert_eq!(
+                ps.handoffs,
+                ((stages - 1) * 2 * batch) as u64,
+                "one handoff per boundary per sample at {stages} stages"
+            );
+            assert_eq!(
+                st.bus_bytes,
+                base.bus_bytes + 2 * ps.handoff_bytes,
+                "bus identity violated at {stages} stages"
+            );
+
+            // traced pipeline: identical call sequence; tracing must
+            // change NOTHING and the rollup must equal the counters
+            let tracer = Tracer::new(&cfg.power);
+            let mut traced = PipelinedEngine::new(&cfg, stages).expect("traced pipeline");
+            traced.set_tracer(Some(tracer.clone()));
+            let ht = traced.program(&model).expect("traced program");
+            traced.reset_stats();
+            let mut tgot: Vec<Vec<i8>> =
+                xs.iter().map(|x| traced.infer(ht, x).expect("traced infer")).collect();
+            tgot.extend(traced.infer_batch(ht, &xs).expect("traced batch"));
+            assert_eq!(tgot, want, "tracing changed a pipelined output at {stages} stages");
+            assert_eq!(
+                traced.stats(),
+                st,
+                "tracing changed pipeline counters at {stages} stages"
+            );
+            assert_eq!(
+                traced.pipeline_stats(),
+                ps,
+                "tracing changed the handoff meter at {stages} stages"
+            );
+            assert_attribution_matches(&tracer, &traced.stats(), &cfg);
+        }
     });
 }
 

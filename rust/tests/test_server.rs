@@ -11,7 +11,7 @@ use nvmcu::config::ChipConfig;
 use nvmcu::datasets::synthetic_qmodel as rand_model;
 use nvmcu::engine::{
     Backend, BatchPolicy, EngineError, InferenceServer, ModelHandle, NmcuBackend,
-    ReferenceBackend, ShardedEngine,
+    PipelinedEngine, ReferenceBackend, ShardedEngine,
 };
 use nvmcu::models::qmodel_forward;
 use nvmcu::nmcu::NmcuStats;
@@ -372,6 +372,113 @@ fn submit_after_shutdown_is_typed_error() {
         Err(EngineError::ServerStopped) => {}
         other => panic!("expected ServerStopped, got {other:?}"),
     }
+}
+
+/// THE server-over-pipeline stress: 8 producer threads hammer an
+/// `InferenceServer` whose backend is a 2-stage [`PipelinedEngine`]
+/// holding TWO models — scheduled micro-batches stream through the
+/// pipeline's stage worker threads while more clients submit, so the
+/// scheduler thread, the stage threads, and 8 producers all run
+/// concurrently (the nightly TSan leg runs this test under the race
+/// detector). Every completed result is bit-exact, overload surfaces
+/// only as typed `QueueFull` shedding, and a shutdown issued mid-stream
+/// drains every admitted request.
+#[test]
+fn pipeline_server_stress_8_threads_mixed_models() {
+    const THREADS: usize = 8;
+    const PER_THREAD: usize = 30;
+
+    let cfg = small_cfg();
+    let mut r = Rng::new(31);
+    let model_a = rand_model(&mut r, "pipe_a", 96, 12, 6);
+    let model_b = rand_model(&mut r, "pipe_b", 48, 8, 3);
+
+    let mut pipe = PipelinedEngine::new(&cfg, 2).unwrap();
+    let ha = pipe.program(&model_a).unwrap();
+    let hb = pipe.program(&model_b).unwrap();
+    assert_eq!(pipe.stages_of(ha).unwrap().len(), 2, "model_a must actually span the stages");
+    assert_eq!(pipe.stages_of(hb).unwrap().len(), 2, "model_b must actually span the stages");
+
+    // a deliberately tight queue against 240 racing submissions: the
+    // burst sheds — overload surfaces only as typed QueueFull
+    let policy = BatchPolicy {
+        max_batch: 4,
+        max_wait: Duration::from_micros(200),
+        queue_depth: 16,
+    };
+    let server = InferenceServer::start(Box::new(pipe), policy).unwrap();
+
+    // phase A: 8 producers burst-submit mixed models as fast as they
+    // can, then wait for everything they got admitted
+    let (completed, shed) = std::thread::scope(|scope| {
+        let workers: Vec<_> = (0..THREADS)
+            .map(|t| {
+                let client = server.client();
+                let (model_a, model_b) = (&model_a, &model_b);
+                scope.spawn(move || {
+                    let mut rng = Rng::new(1000 + t as u64);
+                    let mut admitted = Vec::new();
+                    let mut shed = 0usize;
+                    for i in 0..PER_THREAD {
+                        let (h, model) =
+                            if (t + i) % 2 == 0 { (ha, model_a) } else { (hb, model_b) };
+                        let x: Vec<i8> = (0..model.input_len())
+                            .map(|_| (rng.below(256) as i32 - 128) as i8)
+                            .collect();
+                        match client.submit(h, x.clone()) {
+                            Ok(p) => admitted.push((model, x, p, i)),
+                            Err(EngineError::QueueFull { depth }) => {
+                                assert_eq!(depth, 16);
+                                shed += 1;
+                            }
+                            Err(e) => panic!("unexpected submit error: {e:?}"),
+                        }
+                    }
+                    let done = admitted.len();
+                    for (model, x, p, i) in admitted {
+                        let got = p.wait_timeout(WAIT).expect("admitted completes");
+                        assert_eq!(got, qmodel_forward(model, &x), "thread {t} req {i}");
+                    }
+                    (done, shed)
+                })
+            })
+            .collect();
+        workers.into_iter().map(|w| w.join().expect("producer thread")).fold(
+            (0usize, 0usize),
+            |(d, s), (dd, ss)| (d + dd, s + ss),
+        )
+    });
+    assert_eq!(completed + shed, THREADS * PER_THREAD, "every request accounted for");
+    assert!(completed > 0, "the stream must make progress");
+    let stats = server.stats();
+    assert_eq!(stats.completed, completed as u64);
+    assert_eq!(stats.rejected, shed as u64);
+    assert_eq!(stats.failed, 0);
+
+    // phase B: shutdown drain mid-stream — admit a burst and shut down
+    // while it is still streaming through the stage threads
+    let xs_a = workload::random_inputs(&mut r, 10, 96);
+    let xs_b = workload::random_inputs(&mut r, 10, 48);
+    let mut pendings = Vec::new();
+    for (xa, xb) in xs_a.iter().zip(&xs_b) {
+        if let Ok(p) = server.submit(ha, xa.clone()) {
+            pendings.push((&model_a, xa, p));
+        }
+        if let Ok(p) = server.submit(hb, xb.clone()) {
+            pendings.push((&model_b, xb, p));
+        }
+    }
+    assert!(!pendings.is_empty(), "the drain burst must admit something");
+    let backend = server.shutdown().expect("clean shutdown mid-stream");
+    for (model, x, p) in pendings {
+        assert_eq!(
+            p.wait_timeout(WAIT).expect("shutdown drains admitted requests"),
+            qmodel_forward(model, x),
+            "drained result diverged"
+        );
+    }
+    // the pipeline comes back intact: both models still resident
+    assert_eq!(backend.n_models(), 2, "pipeline registry must survive the server");
 }
 
 /// Degenerate policies are rejected up front with InvalidConfig.
